@@ -1,0 +1,68 @@
+//! Serving-path bench: coordinator throughput/latency over the native
+//! backend at several worker counts and batch capacities (the L3 hot path
+//! of EXPERIMENTS.md §Perf).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use harness::section;
+use taurus::coordinator::{BackendKind, Coordinator, CoordinatorOptions};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::tfhe::{SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+
+fn main() {
+    let mut b = ProgramBuilder::new("bench", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.dot(vec![x, y], vec![1, 1], 0);
+    let r = b.lut_fn(d, |m| m ^ 1);
+    b.output(r);
+    let prog = b.finish();
+
+    let mut rng = Rng::new(17);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+
+    section("coordinator throughput (1 PBS/query, TEST1, native)");
+    for workers in [1usize, 2, 4, 8] {
+        let coord = Coordinator::start(
+            prog.clone(),
+            keys.clone(),
+            CoordinatorOptions {
+                workers,
+                batch_capacity: 8,
+                max_batch_wait: Duration::from_micros(200),
+                backend: BackendKind::Native,
+            },
+        );
+        let n = 64 * workers;
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = (0..n)
+            .map(|i| {
+                coord.submit(vec![
+                    encrypt_message((i % 6) as u64, &sk, &mut rng),
+                    encrypt_message(1, &sk, &mut rng),
+                ])
+            })
+            .collect();
+        for rx in &pending {
+            let _ = rx.recv().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = coord.metrics.snapshot();
+        println!(
+            "workers={workers:<2}  {:>7.1} req/s   p50 {:>8.2} ms   p99 {:>8.2} ms   mean batch {:.2}",
+            n as f64 / wall,
+            snap.p50_latency_ms,
+            snap.p99_latency_ms,
+            snap.mean_batch_size
+        );
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,48 @@
+//! L3 hot-path microbench: the negacyclic FFT (the operation the paper's
+//! FFT-A/FFT-B clusters accelerate) across the polynomial degrees of the
+//! evaluation parameter sets, plus the external product built on it.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use taurus::params::TEST1;
+use taurus::tfhe::fft::{C64, FftPlan};
+use taurus::tfhe::ggsw::{external_product_add, ExtProdScratch};
+use taurus::tfhe::glwe::GlweCiphertext;
+use taurus::tfhe::bsk::encrypt_ggsw;
+use taurus::tfhe::SecretKeys;
+use taurus::util::rng::Rng;
+
+fn main() {
+    section("negacyclic FFT forward+inverse (per polynomial)");
+    let mut rng = Rng::new(1);
+    for log_n in [9usize, 11, 12, 15, 16] {
+        let n = 1 << log_n;
+        let plan = FftPlan::new(n);
+        let p: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let mut f = vec![C64::default(); n / 2];
+        let mut out = vec![0u64; n];
+        let r = bench(&format!("fft fwd+inv N=2^{log_n}"), 0.4, || {
+            plan.forward_negacyclic_torus(&p, &mut f);
+            plan.inverse_negacyclic_add_torus(&mut f, &mut out);
+        });
+        // FLOP estimate: 2 * 5 * (N/2) log2(N/2) per direction.
+        let flops = 2.0 * 5.0 * (n as f64 / 2.0) * ((n / 2) as f64).log2();
+        println!(
+            "{:<46}   -> {:.2} GFLOP/s",
+            "", flops / r.min_s / 1e9
+        );
+    }
+
+    section("external product (GGSW box GLWE), TEST1");
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let plan = FftPlan::new(TEST1.big_n);
+    let g = encrypt_ggsw(1, &sk, &mut rng, &plan);
+    let glwe_in: Vec<u64> = (0..(TEST1.k + 1) * TEST1.big_n).map(|_| rng.next_u64()).collect();
+    let mut acc = GlweCiphertext::zero(TEST1.k, TEST1.big_n);
+    let mut scratch = ExtProdScratch::new(&TEST1);
+    bench("external_product N=512 l=3", 0.5, || {
+        external_product_add(&plan, &TEST1, &g, &glwe_in, &mut acc, &mut scratch);
+    });
+}

@@ -1,0 +1,45 @@
+//! LPU-side microbenches: key switching (the second most expensive TFHE
+//! op, §II-B), sample extraction, and the linear ops of the LWE layer.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use taurus::params::{TEST1, TEST2};
+use taurus::tfhe::fft::FftPlan;
+use taurus::tfhe::glwe::GlweCiphertext;
+use taurus::tfhe::ksk::Ksk;
+use taurus::tfhe::lwe::LweCiphertext;
+use taurus::tfhe::SecretKeys;
+use taurus::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(5);
+    section("key switching");
+    for p in [&TEST1, &TEST2] {
+        let sk = SecretKeys::generate(p, &mut rng);
+        let ksk = Ksk::generate(&sk, &mut rng);
+        let ct = LweCiphertext::encrypt(1 << 60, sk.long_lwe(), p.glwe_noise, &mut rng);
+        bench(&format!("keyswitch {} (kN={} -> n={})", p.name, p.long_dim(), p.n), 0.6, || {
+            std::hint::black_box(ksk.keyswitch(&ct, p));
+        });
+    }
+
+    section("sample extract + linear ops (TEST2 long dimension)");
+    let p = &TEST2;
+    let sk = SecretKeys::generate(p, &mut rng);
+    let plan = FftPlan::new(p.big_n);
+    let msg = vec![0u64; p.big_n];
+    let glwe = GlweCiphertext::encrypt(&msg, &sk, p.glwe_noise, &mut rng, &plan);
+    bench("sample_extract", 0.3, || {
+        std::hint::black_box(glwe.sample_extract(p));
+    });
+    let mut a = LweCiphertext::encrypt(1 << 60, sk.long_lwe(), p.glwe_noise, &mut rng);
+    let b = LweCiphertext::encrypt(2 << 60, sk.long_lwe(), p.glwe_noise, &mut rng);
+    bench("lwe add_assign (kN+1 u64)", 0.3, || {
+        a.add_assign(std::hint::black_box(&b));
+    });
+    bench("lwe scalar_mul_assign", 0.3, || {
+        a.scalar_mul_assign(std::hint::black_box(3));
+    });
+}

@@ -1,0 +1,54 @@
+//! End-to-end PBS latency: native Rust path at the functional-test sets
+//! and (artifact-gated) the AOT XLA path — the numbers behind
+//! EXPERIMENTS.md §Perf and the native-vs-XLA comparison.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use taurus::params::{TEST1, TEST2};
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::tfhe::{make_lut_poly, PbsContext, SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+
+    section("native PBS (keyswitch + blind rotate + extract)");
+    for p in [&TEST1, &TEST2] {
+        let sk = SecretKeys::generate(p, &mut rng);
+        let keys = ServerKeys::generate(&sk, &mut rng);
+        let mut ctx = PbsContext::new(p);
+        let lut = make_lut_poly(p, |m| m);
+        let ct = encrypt_message(3, &sk, &mut rng);
+        bench(&format!("pbs {} (n={} N={})", p.name, p.n, p.big_n), 1.0, || {
+            std::hint::black_box(ctx.pbs(&ct, &keys, &lut));
+        });
+        let short = keys.ksk.keyswitch(&ct, p);
+        bench(&format!("  keyswitch only {}", p.name), 0.4, || {
+            std::hint::black_box(keys.ksk.keyswitch(&ct, p));
+        });
+        bench(&format!("  blind rotate only {}", p.name), 0.6, || {
+            std::hint::black_box(ctx.blind_rotate(&short, &keys.bsk, &lut));
+        });
+    }
+
+    section("AOT XLA PBS (PJRT; needs `make artifacts`)");
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = ServerKeys::generate(&sk, &mut rng);
+        let be = taurus::runtime::XlaPbsBackend::new(dir, &TEST1, &keys.bsk, &keys.ksk)
+            .expect("backend");
+        let lut = make_lut_poly(&TEST1, |m| m);
+        let ct = encrypt_message(3, &sk, &mut rng);
+        bench("xla pbs test1", 2.0, || {
+            std::hint::black_box(be.pbs(&ct, &lut).unwrap());
+        });
+        bench("  xla keyswitch only", 1.0, || {
+            std::hint::black_box(be.keyswitch(&ct).unwrap());
+        });
+    } else {
+        println!("skipped (no artifacts)");
+    }
+}

@@ -1,0 +1,33 @@
+//! End-to-end benches over the paper's evaluation: times the regeneration
+//! of every table/figure (one criterion-style target per paper artifact)
+//! and prints the resulting speedup columns, so `cargo bench` reproduces
+//! the evaluation section in one shot.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use taurus::arch::TaurusConfig;
+use taurus::eval;
+
+fn main() {
+    let cfg = TaurusConfig::default();
+
+    section("table/figure regeneration (model evaluation)");
+    for id in ["1", "3", "6", "13a", "13b"] {
+        bench(&format!("eval {id} (cheap analytic)"), 0.2, || {
+            std::hint::black_box(eval::run_one(id, &cfg).unwrap());
+        });
+    }
+    for id in ["2", "4", "14", "15", "16", "obs5", "dedup", "ablation"] {
+        bench(&format!("eval {id} (workload sims)"), 0.0, || {
+            std::hint::black_box(eval::run_one(id, &cfg).unwrap());
+        });
+    }
+
+    section("resulting headline numbers");
+    let t2 = eval::run_one("2", &cfg).unwrap();
+    println!("{}", t2.render());
+    let t4 = eval::run_one("4", &cfg).unwrap();
+    println!("{}", t4.render());
+}

@@ -1,0 +1,51 @@
+//! Shared micro-bench harness (criterion is not in the offline registry).
+//! Reports mean/min wall-clock per iteration after a warmup, adapting the
+//! iteration count to the cost of the workload.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub min_s: f64,
+}
+
+/// Run `f` until ~`budget_s` of wall clock is spent (min 3 iterations),
+/// after one warmup call. Returns timing stats and prints a row.
+pub fn bench<F: FnMut()>(name: &str, budget_s: f64, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < budget_s || times.len() < 3 {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() >= 10_000 {
+            break;
+        }
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let fmt = |s: f64| {
+        if s >= 1.0 {
+            format!("{s:.3} s")
+        } else if s >= 1e-3 {
+            format!("{:.3} ms", s * 1e3)
+        } else {
+            format!("{:.3} us", s * 1e6)
+        }
+    };
+    println!(
+        "{name:<44} {:>6} iters   mean {:>12}   min {:>12}",
+        times.len(),
+        fmt(mean),
+        fmt(min)
+    );
+    BenchResult { name: name.into(), iters: times.len() as u64, mean_s: mean, min_s: min }
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

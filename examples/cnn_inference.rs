@@ -1,0 +1,86 @@
+//! Encrypted CNN inference, end to end:
+//! 1. run a *small* CNN functionally on encrypted data (native TFHE) and
+//!    check it against the plaintext interpreter;
+//! 2. compile the paper's CNN-20 at its Table II parameter set and report
+//!    the Taurus model's runtime/utilization plus the dedup statistics.
+//!
+//!     cargo run --release --example cnn_inference
+
+use taurus::arch::{simulate, TaurusConfig};
+use taurus::baselines::{cpu_model, EPYC_7R13};
+use taurus::compiler::{compile, Engine, NativePbsBackend};
+use taurus::ir::interp;
+use taurus::params::{CNN20, TEST1};
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+use taurus::workloads;
+
+fn main() {
+    // ---- Part 1: functional encrypted inference on a 3-layer CNN.
+    let mut rng = Rng::new(21);
+    println!("[1/2] functional: 3-layer CNN at TEST1 on encrypted inputs");
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = ServerKeys::generate(&sk, &mut rng);
+    let small = build_small_cnn();
+    let n_inputs = small.input_count();
+    let inputs: Vec<u64> = (0..n_inputs as u64).map(|i| (i * 3 + 1) % 8).collect();
+    let cts: Vec<_> = inputs.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
+    let mut eng = Engine::new(NativePbsBackend::new(&keys));
+    let t0 = std::time::Instant::now();
+    let outs = eng.run(&small, &cts);
+    let secs = t0.elapsed().as_secs_f64();
+    let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+    let expected = interp::eval(&small, &inputs);
+    assert_eq!(got, expected, "encrypted inference must match plaintext");
+    println!(
+        "  {} PBS in {:.2}s ({:.1} ms/PBS) — logits {:?} match plaintext",
+        small.pbs_count(),
+        secs,
+        secs * 1e3 / small.pbs_count() as f64,
+        got
+    );
+
+    // ---- Part 2: the paper's CNN-20 on the Taurus model.
+    println!("\n[2/2] Taurus model: CNN-20 at Table II parameters");
+    let w = workloads::by_name("CNN-20 (PTQ)").unwrap();
+    let prog = (w.build)(1);
+    let cfg = TaurusConfig::default();
+    let c = compile(&prog, &CNN20, cfg.batch_capacity());
+    let r = simulate(&c, &cfg);
+    let cpu = cpu_model::program_seconds(&c, &EPYC_7R13);
+    println!("  PBS: {}  depth: {}", prog.pbs_count(), prog.pbs_depth());
+    println!("  ACC-dedup: {:.2}% GLWE storage saved", c.acc_dedup.bytes_reduction_pct());
+    println!(
+        "  Taurus {:.2} ms (paper 11.60) | CPU model {:.2} s (paper 3.85) | speedup {:.0}x (paper 331x)",
+        r.seconds * 1e3,
+        cpu,
+        cpu / r.seconds
+    );
+    println!("  utilization {:.1}%  avg BW {:.0} GB/s", r.utilization * 100.0, r.avg_bw_gbps);
+}
+
+/// 3-layer, 6-neuron CNN at width 3 (TEST1) — same generator structure as
+/// `workloads::cnn` scaled to the functional test parameter set.
+fn build_small_cnn() -> taurus::ir::Program {
+    use taurus::ir::builder::ProgramBuilder;
+    use taurus::ir::LutTable;
+    let mut b = ProgramBuilder::new("cnn-small", 3);
+    let relu = LutTable::from_fn(3, |m| m.saturating_sub(2).min(7));
+    let mut layer = b.inputs(6);
+    for l in 0..3 {
+        let prev = layer.clone();
+        layer = (0..6)
+            .map(|j| {
+                let ins = vec![prev[j % 6], prev[(j + 1) % 6], prev[(j + 2) % 6]];
+                let ws = vec![1, ((l + j) % 3) as i64 - 1, 1];
+                let acc = b.dot(ins, ws, 0);
+                b.lut(acc, relu.clone())
+            })
+            .collect();
+    }
+    let outs: Vec<_> = layer.iter().take(3).copied().collect();
+    let logit = b.dot(outs, vec![1, 1, 1], 0);
+    b.output(logit);
+    b.finish()
+}

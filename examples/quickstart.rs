@@ -1,0 +1,38 @@
+//! Quickstart: the public API in ~40 lines.
+//!
+//! Client side: generate keys, encrypt 4-bit-space integers.
+//! Server side: homomorphic linear ops + one programmable bootstrap.
+//!
+//!     cargo run --release --example quickstart
+
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{make_lut_poly, PbsContext, SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+
+    // --- client: keypair. `sk` never leaves the client; `keys` (BSK+KSK)
+    // go to the server (paper Fig. 1).
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let server_keys = ServerKeys::generate(&sk, &mut rng);
+
+    // --- client: encrypt x = 3, y = 2.
+    let ct_x = encrypt_message(3, &sk, &mut rng);
+    let ct_y = encrypt_message(2, &sk, &mut rng);
+
+    // --- server: compute relu(x + y - 4) * 2 without the secret key.
+    let mut ctx = PbsContext::new(&TEST1);
+    let mut sum = ct_x.clone();
+    sum.add_assign(&ct_y); // x + y        (no bootstrap: Observation 1)
+    // LUT evaluates an arbitrary function while refreshing noise (PBS).
+    let lut = make_lut_poly(&TEST1, |m| m.saturating_sub(4) * 2);
+    let result = ctx.pbs(&sum, &server_keys, &lut);
+
+    // --- client: decrypt.
+    let out = decrypt_message(&result, &sk);
+    println!("relu(3 + 2 - 4) * 2 = {out}");
+    assert_eq!(out, 2);
+    println!("quickstart OK");
+}

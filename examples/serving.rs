@@ -1,0 +1,95 @@
+//! END-TO-END serving driver (the repository's integration proof):
+//! compile an FHE inference program, start the coordinator with the **XLA
+//! backend** (AOT JAX/Pallas artifacts executed via PJRT — python is not
+//! running), submit batched encrypted queries from a client thread, check
+//! every decrypted answer against the plaintext interpreter, and report
+//! latency/throughput. Results are recorded in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo run --release --example serving
+//!     # flags: -- --requests 32 --workers 2 --backend native|xla
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use taurus::coordinator::{BackendKind, Coordinator, CoordinatorOptions};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::interp;
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+
+fn flag(name: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != name).nth(1)
+}
+
+fn main() {
+    let requests: usize = flag("--requests").and_then(|v| v.parse().ok()).unwrap_or(24);
+    let workers: usize = flag("--workers").and_then(|v| v.parse().ok()).unwrap_or(2);
+    let use_xla = flag("--backend").as_deref() != Some("native")
+        && std::path::Path::new("artifacts/manifest.json").exists();
+
+    // The served model: a 2-layer quantized MLP head, relu(W x + b) -> LUT.
+    let mut b = ProgramBuilder::new("mlp-head", TEST1.width);
+    let xs = b.inputs(3);
+    let h: Vec<_> = (0..3)
+        .map(|j| {
+            let d = b.dot(xs.clone(), vec![1, ((j % 2) as i64) * 2 - 1, 1], j as u64);
+            b.relu(d, 2)
+        })
+        .collect();
+    let logit = b.dot(h, vec![1, 1, 1], 0);
+    let out = b.lut_fn(logit, |m| m.min(7));
+    b.output(out);
+    let prog = b.finish();
+
+    println!("== taurus serving driver ==");
+    println!("program: {} ({} PBS/query, depth {})", prog.name, prog.pbs_count(), prog.pbs_depth());
+    println!("backend: {}", if use_xla { "xla (AOT JAX/Pallas via PJRT)" } else { "native" });
+
+    let mut rng = Rng::new(404);
+    let t0 = Instant::now();
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    println!("keygen: {:.2}s", t0.elapsed().as_secs_f64());
+
+    let backend = if use_xla {
+        BackendKind::Xla { artifacts_dir: "artifacts".into() }
+    } else {
+        BackendKind::Native
+    };
+    let coord = Coordinator::start(
+        prog.clone(),
+        keys,
+        CoordinatorOptions { workers, backend, batch_capacity: 8, ..Default::default() },
+    );
+
+    // Client: fire all queries, then collect.
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..requests {
+        let q: Vec<u64> = (0..3).map(|j| ((i + j) % 6) as u64).collect();
+        expected.push(interp::eval(&prog, &q)[0]);
+        let cts: Vec<_> = q.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
+        pending.push(coord.submit(cts));
+    }
+    let mut correct = 0;
+    for (rx, exp) in pending.iter().zip(&expected) {
+        let outs = rx.recv().expect("response");
+        correct += usize::from(decrypt_message(&outs[0], &sk) == *exp);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = coord.metrics.snapshot();
+    println!("\nresults ({requests} encrypted queries, {workers} workers):");
+    println!("  correct      : {correct}/{requests}");
+    println!("  wall         : {:.2} s  ({:.1} queries/s)", wall, requests as f64 / wall);
+    println!("  p50 latency  : {:.1} ms", snap.p50_latency_ms);
+    println!("  p99 latency  : {:.1} ms", snap.p99_latency_ms);
+    println!("  mean queue   : {:.1} ms", snap.mean_queue_ms);
+    println!("  batches      : {} (mean size {:.2})", snap.batches, snap.mean_batch_size);
+    println!("  PBS executed : {}", snap.pbs_executed);
+    assert_eq!(correct, requests, "all decryptions must match the interpreter");
+    coord.shutdown();
+    println!("serving driver OK");
+}

@@ -1,0 +1,92 @@
+"""AOT: lower the L2 JAX computations to HLO **text** artifacts.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the text
+via `HloModuleProto::from_text_file`. Text (not `.serialize()`) is the
+interchange format because jax >= 0.5 emits protos with 64-bit instruction
+ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Usage: python -m compile.aot --out ../artifacts [--sets test1,test2]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .params import ALL, AOT_SETS
+
+
+def to_hlo_text(fn, specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(out_dir: str, set_names=None) -> dict:
+    sets = [ALL[s] for s in set_names] if set_names else AOT_SETS
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"artifacts": []}
+    for p in sets:
+        for name, builder in (
+            ("blind_rotate", model.build_blind_rotate),
+            ("keyswitch", model.build_keyswitch),
+        ):
+            fn, specs, arg_names = builder(p)
+            text = to_hlo_text(fn, specs)
+            fname = f"{name}_{p.name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(
+                {
+                    "name": name,
+                    "param_tag": p.name,
+                    "file": fname,
+                    "inputs": [
+                        {
+                            "name": an,
+                            "dtype": str(s.dtype),
+                            "shape": list(s.shape),
+                        }
+                        for an, s in zip(arg_names, specs)
+                    ],
+                    "params": {
+                        "n": p.n,
+                        "N": p.N,
+                        "k": p.k,
+                        "bsk_base_log": p.bsk_base_log,
+                        "bsk_level": p.bsk_level,
+                        "ks_base_log": p.ks_base_log,
+                        "ks_level": p.ks_level,
+                        "width": p.width,
+                        "lwe_noise": p.lwe_noise,
+                        "glwe_noise": p.glwe_noise,
+                    },
+                }
+            )
+            print(f"wrote {fname} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sets", default=None,
+                    help="comma-separated param set names (default: AOT_SETS)")
+    args = ap.parse_args()
+    export(args.out, args.sets.split(",") if args.sets else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Pallas kernel: streaming gadget decomposition (the paper's Decomposer
+unit, §IV-E).
+
+The hardware unit is "an initial scaling unit ... and a continuous digit
+extraction unit that outputs one integer per cycle with built-in rounding
+logic". The kernel mirrors that structure: one rounding step, then `level`
+digit-extraction steps with balanced-carry propagation, vectorized over a
+block of coefficients. Executed with interpret=True on CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 512
+
+
+def _make_kernel(base_log: int, level: int):
+    def kernel(x_ref, out_ref):
+        x = x_ref[...].astype(jnp.uint64)  # (P, B)
+        keep = base_log * level
+        rounding = jnp.uint64(1 << (64 - keep - 1))
+        res = (x + rounding) >> jnp.uint64(64 - keep)
+        half = jnp.int64(1 << (base_log - 1))
+        mask = jnp.uint64((1 << base_log) - 1)
+        for j in range(level - 1, -1, -1):  # least significant first
+            d = (res & mask).astype(jnp.int64)
+            res = res >> jnp.uint64(base_log)
+            carry = (d >= half).astype(jnp.int64)
+            d = d - (carry << jnp.int64(base_log))
+            res = res + carry.astype(jnp.uint64)
+            out_ref[j, ...] = d
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("base_log", "level", "block"))
+def decompose(x, base_log: int, level: int, block: int = BLOCK):
+    """u64[P, N] -> i64[level, P, N] balanced gadget digits."""
+    p, n = x.shape
+    blk = min(block, n)
+    grid = (n // blk,)
+    return pl.pallas_call(
+        _make_kernel(base_log, level),
+        grid=grid,
+        in_specs=[pl.BlockSpec((p, blk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((level, p, blk), lambda i: (0, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((level, p, n), jnp.int64),
+        interpret=True,
+    )(x)

@@ -1,0 +1,70 @@
+"""Pallas kernel: Fourier-domain external-product MAC.
+
+This is the compute hot-spot of blind rotation — the paper's BRU performs
+512 BSK multiplications per cycle on exactly this contraction (§IV-A). Per
+frequency bin `h` it is a (1 x R) · (R x C) complex vector-matrix product
+("each external product is essentially a vector-matrix multiplication",
+paper §II-B), which is the MXU-friendly shape on a real TPU.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks blocks of
+`BLOCK` frequency bins; per step the working set is
+R*BLOCK + R*C*BLOCK + C*BLOCK f64 pairs — for the paper's largest
+parameters (N = 2^16, R = 6, C = 2) and BLOCK = 512 this is ~1.2 MB, well
+inside VMEM, mirroring how the paper's accumulator buffer holds the GLWE
+working set on-chip. Executed with interpret=True on CPU (Mosaic
+custom-calls are TPU-only).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default number of frequency bins per grid step.
+BLOCK = 256
+
+
+def _mac_kernel(dec_re_ref, dec_im_ref, bsk_re_ref, bsk_im_ref,
+                acc_re_ref, acc_im_ref):
+    dr = dec_re_ref[...]  # (R, B)
+    di = dec_im_ref[...]
+    br = bsk_re_ref[...]  # (R, C, B)
+    bi = bsk_im_ref[...]
+    # Complex MAC as four real contractions over R.
+    acc_re_ref[...] = jnp.einsum("rb,rcb->cb", dr, br) - jnp.einsum(
+        "rb,rcb->cb", di, bi
+    )
+    acc_im_ref[...] = jnp.einsum("rb,rcb->cb", dr, bi) + jnp.einsum(
+        "rb,rcb->cb", di, br
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def fourier_mac(dec_re, dec_im, bsk_re, bsk_im, block: int = BLOCK):
+    """acc[c,h] = sum_r dec[r,h] * bsk[r,c,h] (complex, split re/im).
+
+    Shapes: dec (R, H), bsk (R, C, H) -> (C, H); H must be divisible by
+    `block` (all TFHE sizes here are powers of two >= 256).
+    """
+    r, h = dec_re.shape
+    _, c, _ = bsk_re.shape
+    blk = min(block, h)
+    grid = (h // blk,)
+    spec_dec = pl.BlockSpec((r, blk), lambda i: (0, i))
+    spec_bsk = pl.BlockSpec((r, c, blk), lambda i: (0, 0, i))
+    spec_acc = pl.BlockSpec((c, blk), lambda i: (0, i))
+    out_shape = [
+        jax.ShapeDtypeStruct((c, h), dec_re.dtype),
+        jax.ShapeDtypeStruct((c, h), dec_re.dtype),
+    ]
+    return tuple(
+        pl.pallas_call(
+            _mac_kernel,
+            grid=grid,
+            in_specs=[spec_dec, spec_dec, spec_bsk, spec_bsk],
+            out_specs=[spec_acc, spec_acc],
+            out_shape=out_shape,
+            interpret=True,
+        )(dec_re, dec_im, bsk_re, bsk_im)
+    )

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references pytest/hypothesis compare against
+(`python/tests/test_kernel.py`); they are also usable as drop-in
+replacements for the kernels (model.py takes a `use_pallas` flag).
+"""
+
+import jax.numpy as jnp
+
+
+def fourier_mac_ref(dec_re, dec_im, bsk_re, bsk_im):
+    """Fourier-domain external-product MAC (the paper's BRU VecMAC).
+
+    acc[c, h] = sum_r dec[r, h] * bsk[r, c, h]   (complex)
+
+    Args:
+      dec_re, dec_im: f64[R, H] — decomposed GLWE rows in the Fourier domain.
+      bsk_re, bsk_im: f64[R, C, H] — one GGSW in the Fourier domain.
+    Returns:
+      (acc_re, acc_im): f64[C, H].
+    """
+    acc_re = jnp.einsum("rh,rch->ch", dec_re, bsk_re) - jnp.einsum(
+        "rh,rch->ch", dec_im, bsk_im
+    )
+    acc_im = jnp.einsum("rh,rch->ch", dec_re, bsk_im) + jnp.einsum(
+        "rh,rch->ch", dec_im, bsk_re
+    )
+    return acc_re, acc_im
+
+
+def decompose_ref(x, base_log: int, level: int):
+    """Balanced gadget decomposition (the paper's Decomposer unit).
+
+    Digit j has weight q/B^(j+1), j = 0 most significant; digits are
+    balanced in [-B/2, B/2). Keeps the top base_log*level bits, rounded.
+
+    Args:
+      x: u64[...] torus values.
+    Returns:
+      i64[level, ...] digits.
+    """
+    x = x.astype(jnp.uint64)
+    keep = base_log * level
+    rounding = jnp.uint64(1 << (64 - keep - 1))
+    res = (x + rounding) >> jnp.uint64(64 - keep)
+    half = jnp.int64(1 << (base_log - 1))
+    mask = jnp.uint64((1 << base_log) - 1)
+    digits = []
+    for _ in range(level):  # least significant kept digit first
+        d = (res & mask).astype(jnp.int64)
+        res = res >> jnp.uint64(base_log)
+        carry = (d >= half).astype(jnp.int64)
+        d = d - (carry << jnp.int64(base_log))
+        res = res + carry.astype(jnp.uint64)
+        digits.append(d)
+    return jnp.stack(digits[::-1], axis=0)

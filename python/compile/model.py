@@ -1,0 +1,177 @@
+"""L2: the PBS compute graph in JAX, calling the L1 Pallas kernels.
+
+Two computations are exported per parameter set (mirroring the paper's
+BRU/LPU functional split, Fig. 8):
+
+  * ``blind_rotate``  — mod-switch + CMUX blind-rotation loop (BRU side);
+  * ``keyswitch``     — long-LWE -> short-LWE gadget key switch (LPU side).
+
+Both are lowered once by ``aot.py`` to HLO text and executed from the Rust
+runtime; python never runs on the request path. Conventions (twist, gadget
+digits, GGSW row order) are locked in ``params.py`` and must match
+``rust/src/tfhe`` bit-for-bit.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import functools
+
+import jax.numpy as jnp
+
+from .params import ParamSet
+from .kernels import ref as kref
+from .kernels.decompose import decompose as decompose_pallas
+from .kernels.fourier_mac import fourier_mac as fourier_mac_pallas
+
+U64 = jnp.uint64
+I64 = jnp.int64
+_Q = float(2**64)
+
+
+# --------------------------------------------------------------------------
+# Negacyclic FFT (same double-real convention as tfhe_np / rust tfhe::fft).
+# --------------------------------------------------------------------------
+
+def twist(N: int):
+    j = jnp.arange(N // 2)
+    return jnp.exp(-1j * jnp.pi * j / N)
+
+
+def nfft(p_signed, tw):
+    N = p_signed.shape[-1]
+    z = (p_signed[..., : N // 2] - 1j * p_signed[..., N // 2 :]) * tw
+    return jnp.fft.fft(z, axis=-1)
+
+
+def nifft(Z, tw):
+    z = jnp.fft.ifft(Z, axis=-1) * jnp.conj(tw)
+    return jnp.concatenate([z.real, -z.imag], axis=-1)
+
+
+def u64_to_signed_f64(x):
+    return jax.lax.bitcast_convert_type(x, I64).astype(jnp.float64)
+
+
+def f64_to_u64(x):
+    """Round mod 2^64 (values may exceed the 64-bit range)."""
+    r = x - jnp.round(x * (1.0 / _Q)) * _Q
+    return jax.lax.bitcast_convert_type(jnp.round(r).astype(I64), U64)
+
+
+# --------------------------------------------------------------------------
+# PBS building blocks.
+# --------------------------------------------------------------------------
+
+def modswitch(ct, N: int):
+    """Torus u64 -> Z_{2N} with rounding."""
+    two_n = 2 * N
+    shift = jnp.uint64(64 - (two_n.bit_length() - 1))
+    return ((((ct >> (shift - jnp.uint64(1))) + jnp.uint64(1)) >> jnp.uint64(1))
+            % jnp.uint64(two_n)).astype(I64)
+
+
+def rotate_glwe(glwe_u64, r, N: int):
+    """Multiply every row by X^r (r traced, in [0, 2N))."""
+    ext = jnp.concatenate([glwe_u64, jnp.zeros_like(glwe_u64) - glwe_u64], axis=-1)
+    idx = (jnp.arange(N) - r) % (2 * N)
+    return jnp.take(ext, idx, axis=-1)
+
+
+def external_product(ggsw_re, ggsw_im, glwe_u64, p: ParamSet, tw,
+                     use_pallas: bool = True):
+    """GGSW (Fourier, (rows, k+1, N/2) re/im) box GLWE ((k+1, N) u64)."""
+    if use_pallas:
+        digits = decompose_pallas(glwe_u64, p.bsk_base_log, p.bsk_level)
+    else:
+        digits = kref.decompose_ref(glwe_u64, p.bsk_base_log, p.bsk_level)
+    # (level, k+1, N) -> rows r = c*level + j.
+    rows = jnp.transpose(digits, (1, 0, 2)).reshape(p.ggsw_rows, p.N)
+    rows_f = nfft(rows.astype(jnp.float64), tw)
+    if use_pallas:
+        acc_re, acc_im = fourier_mac_pallas(rows_f.real, rows_f.imag,
+                                            ggsw_re, ggsw_im)
+    else:
+        acc_re, acc_im = kref.fourier_mac_ref(rows_f.real, rows_f.imag,
+                                              ggsw_re, ggsw_im)
+    return f64_to_u64(nifft(acc_re + 1j * acc_im, tw))
+
+
+def blind_rotate(ct_short, bsk_re, bsk_im, lut_poly, p: ParamSet,
+                 use_pallas: bool = True):
+    """Mod-switch + CMUX blind rotation.
+
+    Args:
+      ct_short: u64[n+1] short-LWE ciphertext (a..., b).
+      bsk_re/bsk_im: f64[n, rows, k+1, N/2] Fourier BSK.
+      lut_poly: u64[N] test polynomial (body of a trivial GLWE).
+    Returns:
+      u64[k+1, N] rotated accumulator GLWE.
+    """
+    N = p.N
+    tw = twist(N)
+    msw = modswitch(ct_short, N)  # i64[n+1] in [0, 2N)
+    b = msw[-1]
+    acc0 = jnp.zeros((p.k + 1, N), dtype=U64)
+    acc0 = acc0.at[p.k].set(rotate_glwe(lut_poly[None, :], (2 * N - b) % (2 * N), N)[0])
+
+    def body(i, acc):
+        a_i = msw[i]
+        diff = rotate_glwe(acc, a_i, N) - acc
+        ep = external_product(bsk_re[i], bsk_im[i], diff, p, tw, use_pallas)
+        return acc + ep
+
+    return jax.lax.fori_loop(0, p.n, body, acc0)
+
+
+def keyswitch(ct_long, ksk, p: ParamSet, use_pallas: bool = True):
+    """LWE_{kN} -> LWE_n: out = (0, b) - sum_ij dec_j(a_i) * KSK[i,j].
+
+    Args:
+      ct_long: u64[kN+1]; ksk: u64[kN, ks_level, n+1].
+    """
+    a = ct_long[:-1]
+    if use_pallas:
+        digits = decompose_pallas(a[None, :], p.ks_base_log, p.ks_level)[:, 0, :]
+    else:
+        digits = kref.decompose_ref(a, p.ks_base_log, p.ks_level)
+    d_u = jax.lax.bitcast_convert_type(digits, U64)  # (level, kN)
+    # sum over (i, j): wrapping u64 dot.
+    contrib = jnp.sum(
+        d_u.transpose(1, 0)[:, :, None] * ksk, axis=(0, 1), dtype=U64
+    )
+    out = jnp.zeros(p.n + 1, dtype=U64).at[-1].set(ct_long[-1])
+    return out - contrib
+
+
+# --------------------------------------------------------------------------
+# Jit-able entry points per parameter set (what aot.py lowers).
+# --------------------------------------------------------------------------
+
+def build_blind_rotate(p: ParamSet, use_pallas: bool = True):
+    @functools.partial(jax.jit, donate_argnums=())
+    def fn(ct_short, bsk_re, bsk_im, lut_poly):
+        return (blind_rotate(ct_short, bsk_re, bsk_im, lut_poly, p, use_pallas),)
+
+    specs = (
+        jax.ShapeDtypeStruct((p.n + 1,), U64),
+        jax.ShapeDtypeStruct((p.n, p.ggsw_rows, p.k + 1, p.half_n), jnp.float64),
+        jax.ShapeDtypeStruct((p.n, p.ggsw_rows, p.k + 1, p.half_n), jnp.float64),
+        jax.ShapeDtypeStruct((p.N,), U64),
+    )
+    names = ("ct_short", "bsk_re", "bsk_im", "lut_poly")
+    return fn, specs, names
+
+
+def build_keyswitch(p: ParamSet, use_pallas: bool = True):
+    @jax.jit
+    def fn(ct_long, ksk):
+        return (keyswitch(ct_long, ksk, p, use_pallas),)
+
+    specs = (
+        jax.ShapeDtypeStruct((p.long_dim + 1,), U64),
+        jax.ShapeDtypeStruct((p.long_dim, p.ks_level, p.n + 1), U64),
+    )
+    names = ("ct_long", "ksk")
+    return fn, specs, names

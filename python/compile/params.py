@@ -1,0 +1,103 @@
+"""TFHE parameter sets shared by the L1/L2 build path.
+
+These mirror `rust/src/params/mod.rs` exactly — the Rust runtime feeds keys
+into the AOT artifacts, so layouts and decomposition conventions must agree
+bit-for-bit. Conventions (identical on both sides):
+
+  * torus modulus q = 2^64 (u64, wrapping arithmetic);
+  * gadget digit j of a torus value has weight q / B^(j+1), j = 0 is the
+    most significant digit, digits are balanced in [-B/2, B/2);
+  * GGSW row order: row r = c * level + j where c indexes the GLWE
+    polynomial (mask polys first, body last) and j the gadget level;
+  * negacyclic FFT: z_j = (p_j + i p_{j+N/2}) * twist_j with
+    twist_j = exp(-i*pi*j/N), transformed by an N/2-point complex FFT
+    (evaluates P at the primitive 2N-th roots zeta^(4k+1));
+  * blind rotation is CMUX-based with mod-switch to 2N;
+  * PBS order is **key-switch first** (paper §II-B): ciphertexts at rest
+    live at the long dimension k*N.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ParamSet:
+    name: str
+    # LWE (short) dimension n.
+    n: int
+    # GLWE polynomial degree N (power of two) and dimension k.
+    N: int
+    k: int
+    # PBS (BSK) gadget decomposition: base 2^bsk_base_log, bsk_level digits.
+    bsk_base_log: int
+    bsk_level: int
+    # Key-switch gadget decomposition.
+    ks_base_log: int
+    ks_level: int
+    # Message width in bits (excluding the padding bit).
+    width: int
+    # Noise stddevs as fractions of the torus.
+    lwe_noise: float
+    glwe_noise: float
+
+    @property
+    def half_n(self) -> int:
+        return self.N // 2
+
+    @property
+    def long_dim(self) -> int:
+        return self.k * self.N
+
+    @property
+    def plaintext_modulus(self) -> int:
+        # Message space including the padding bit.
+        return 1 << (self.width + 1)
+
+    @property
+    def delta(self) -> int:
+        # Encoding scale: message m is encoded as m * delta.
+        return 1 << (64 - self.width - 1)
+
+    @property
+    def ggsw_rows(self) -> int:
+        return (self.k + 1) * self.bsk_level
+
+
+# Fast functional-test parameters (insecure: sized for test speed, noise
+# chosen so that decryption failure probability is negligible; security is
+# NOT a goal of the unit-test sets — see DESIGN.md).
+TEST1 = ParamSet(
+    name="test1",
+    n=128,
+    N=512,
+    k=1,
+    bsk_base_log=8,
+    bsk_level=3,
+    ks_base_log=4,
+    ks_level=6,
+    width=3,
+    lwe_noise=2.0**-25,
+    glwe_noise=2.0**-40,
+)
+
+# A second, wider test set exercising k=1 with larger N (shape of the
+# paper's CNN-20 entry scaled down in n for test speed).
+TEST2 = ParamSet(
+    name="test2",
+    n=256,
+    N=2048,
+    k=1,
+    bsk_base_log=12,
+    bsk_level=2,
+    ks_base_log=4,
+    ks_level=6,
+    width=5,
+    lwe_noise=2.0**-30,
+    glwe_noise=2.0**-45,
+)
+
+ALL = {p.name: p for p in (TEST1, TEST2)}
+
+# Parameter sets AOT-compiled into artifacts/ by default. TEST1 is the set
+# the Rust integration tests and the serving example run with end-to-end.
+AOT_SETS = [TEST1]

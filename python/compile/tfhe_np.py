@@ -1,0 +1,361 @@
+"""Pure-numpy reference implementation of multi-bit TFHE.
+
+This is the functional oracle for the whole stack: the JAX/Pallas pipeline
+(`model.py`, `kernels/`) is tested against it, and `rust/src/tfhe/` mirrors
+it operation-for-operation (same gadget conventions, same FFT twist).
+
+Everything here is build/test-path only; nothing imports numpy at serving
+time. Torus = u64 with wrapping arithmetic throughout.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .params import ParamSet
+
+U64 = np.uint64
+I64 = np.int64
+_Q = float(2**64)
+
+
+# --------------------------------------------------------------------------
+# Negacyclic FFT (half-size complex FFT + twist), the paper's "double-real"
+# representation (§IV-C): a degree-N real polynomial becomes an N/2-point
+# complex vector.
+# --------------------------------------------------------------------------
+
+def twist(N: int) -> np.ndarray:
+    j = np.arange(N // 2)
+    return np.exp(-1j * np.pi * j / N)
+
+
+def nfft(p_signed: np.ndarray, tw: np.ndarray | None = None) -> np.ndarray:
+    """Forward negacyclic FFT of real (signed) coefficients, last axis N."""
+    N = p_signed.shape[-1]
+    if tw is None:
+        tw = twist(N)
+    # P(w_k) for w_k = zeta^(4k+1): fold as p_lo - i*p_hi (w^(N/2) = -i).
+    z = (p_signed[..., : N // 2] - 1j * p_signed[..., N // 2 :]) * tw
+    return np.fft.fft(z, axis=-1)
+
+
+def nifft(Z: np.ndarray, tw: np.ndarray | None = None) -> np.ndarray:
+    """Inverse of :func:`nfft`; returns real coefficients, last axis N."""
+    Nh = Z.shape[-1]
+    if tw is None:
+        tw = twist(2 * Nh)
+    z = np.fft.ifft(Z, axis=-1) * np.conj(tw)
+    return np.concatenate([z.real, -z.imag], axis=-1)
+
+
+def u64_to_signed_f64(x: np.ndarray) -> np.ndarray:
+    """Reinterpret torus u64 as signed (centered) and convert to f64."""
+    return x.astype(U64).view(I64).astype(np.float64)
+
+
+def f64_to_u64(x: np.ndarray) -> np.ndarray:
+    """Round to integer mod 2^64 (values may far exceed 64-bit range)."""
+    r = x - np.round(x * (1.0 / _Q)) * _Q
+    return np.round(r).astype(I64).view(U64)
+
+
+def negacyclic_mul_naive(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """O(N^2) schoolbook multiplication in Z[X]/(X^N+1) (test oracle)."""
+    N = a.shape[-1]
+    out = np.zeros(N, dtype=np.float64)
+    for i in range(N):
+        for j in range(N):
+            k = i + j
+            if k < N:
+                out[k] += a[i] * b[j]
+            else:
+                out[k - N] -= a[i] * b[j]
+    return out
+
+
+# --------------------------------------------------------------------------
+# Gadget decomposition (balanced digits, closest representative).
+# --------------------------------------------------------------------------
+
+def decompose(x: np.ndarray, base_log: int, level: int) -> np.ndarray:
+    """Decompose torus u64 -> `level` balanced digits in [-B/2, B/2).
+
+    Returns i64 with a new leading axis of size `level`; digit j has weight
+    q / B^(j+1) (j = 0 most significant). The decomposition keeps only the
+    top `base_log*level` bits, rounded.
+    """
+    x = x.astype(U64)
+    keep = base_log * level
+    # Round to the closest multiple of 2^(64-keep).
+    rounding = U64(1) << U64(64 - keep - 1)
+    closest = (x + rounding) >> U64(64 - keep)
+    digits = np.zeros((level,) + x.shape, dtype=I64)
+    res = closest.astype(U64)
+    half = I64(1) << I64(base_log - 1)
+    mask = U64((1 << base_log) - 1)
+    for j in range(level - 1, -1, -1):  # least significant digit first
+        d = (res & mask).astype(I64)
+        res = res >> U64(base_log)
+        carry = (d >= half).astype(I64)
+        d = d - (carry << I64(base_log))
+        res = res + carry.astype(U64)
+        digits[j] = d
+    return digits
+
+
+def recompose(digits: np.ndarray, base_log: int) -> np.ndarray:
+    """Inverse of decompose up to the dropped low bits (returns u64)."""
+    level = digits.shape[0]
+    acc = np.zeros(digits.shape[1:], dtype=U64)
+    for j in range(level):
+        w = U64(64 - base_log * (j + 1))
+        acc = acc + (digits[j].astype(I64).view(U64) << w)
+    return acc
+
+
+# --------------------------------------------------------------------------
+# Keys and ciphertexts.
+# --------------------------------------------------------------------------
+
+class SecretKeys:
+    """Client-side secrets: short LWE key, GLWE key, and the implied long
+    (extracted) LWE key."""
+
+    def __init__(self, p: ParamSet, rng: np.random.Generator):
+        self.p = p
+        self.lwe = rng.integers(0, 2, size=p.n, dtype=U64)
+        self.glwe = rng.integers(0, 2, size=(p.k, p.N), dtype=U64)
+
+    @property
+    def long_lwe(self) -> np.ndarray:
+        return self.glwe.reshape(-1)
+
+
+def lwe_encrypt(msg_torus: int, key: np.ndarray, noise: float,
+                rng: np.random.Generator) -> np.ndarray:
+    """LWE ciphertext [a_0..a_{d-1}, b] with b = <a,s> + m + e."""
+    d = key.shape[0]
+    a = rng.integers(0, 2**64, size=d, dtype=U64)
+    e = torus_gaussian(noise, rng)
+    b = (np.sum(a * key, dtype=U64) + U64(msg_torus) + e)
+    return np.concatenate([a, np.array([b], dtype=U64)])
+
+
+def lwe_decrypt_phase(ct: np.ndarray, key: np.ndarray) -> int:
+    """Raw phase b - <a,s> as u64."""
+    return int(ct[-1] - np.sum(ct[:-1] * key, dtype=U64))
+
+
+def torus_gaussian(sigma: float, rng: np.random.Generator) -> U64:
+    return U64(I64(round(rng.normal(0.0, sigma) * _Q)) & I64(-1).view(I64))
+
+
+def torus_gaussian_vec(sigma: float, shape, rng: np.random.Generator) -> np.ndarray:
+    e = np.round(rng.normal(0.0, sigma, size=shape) * _Q)
+    return e.astype(I64).view(U64)
+
+
+def glwe_encrypt(msg_poly: np.ndarray, glwe_key: np.ndarray, noise: float,
+                 rng: np.random.Generator) -> np.ndarray:
+    """GLWE ciphertext: (k+1, N) u64; rows 0..k-1 mask, row k body."""
+    k, N = glwe_key.shape
+    a = rng.integers(0, 2**64, size=(k, N), dtype=U64)
+    body = msg_poly.astype(U64) + torus_gaussian_vec(noise, N, rng)
+    for c in range(k):
+        body = body + poly_mul_u64(a[c], glwe_key[c])
+    return np.concatenate([a, body[None, :]], axis=0)
+
+
+def glwe_decrypt(ct: np.ndarray, glwe_key: np.ndarray) -> np.ndarray:
+    k, N = glwe_key.shape
+    phase = ct[k].copy()
+    for c in range(k):
+        phase = phase - poly_mul_u64(ct[c], glwe_key[c])
+    return phase
+
+
+def poly_mul_u64(a_torus: np.ndarray, b_int01: np.ndarray) -> np.ndarray:
+    """Negacyclic product of a torus polynomial with a small integer (0/1
+    key) polynomial, exact via integer convolution mod 2^64."""
+    N = a_torus.shape[0]
+    out = np.zeros(N, dtype=U64)
+    nz = np.nonzero(b_int01.view(I64))[0]
+    for j in nz:
+        c = b_int01.view(I64)[j]
+        rolled = np.empty(N, dtype=U64)
+        if j == 0:
+            rolled[:] = a_torus
+        else:
+            rolled[j:] = a_torus[: N - j]
+            rolled[:j] = (np.zeros(j, dtype=U64) - a_torus[N - j :])
+        out = out + U64(c) * rolled if c >= 0 else out - U64(-c) * rolled
+    return out
+
+
+# --------------------------------------------------------------------------
+# Evaluation keys.
+# --------------------------------------------------------------------------
+
+def make_bsk(sk: SecretKeys, rng: np.random.Generator) -> np.ndarray:
+    """Bootstrapping key: n GGSW encryptions of the short-LWE key bits.
+
+    Shape (n, (k+1)*level, k+1, N) u64. Row r = c*level + j encrypts
+    m * (-s_c) * q/B^(j+1) in the body direction c (for c<k) or
+    m * q/B^(j+1) (c = k), following the gadget convention above.
+    """
+    p = sk.p
+    rows = p.ggsw_rows
+    bsk = np.zeros((p.n, rows, p.k + 1, p.N), dtype=U64)
+    for i in range(p.n):
+        m = int(sk.lwe[i])
+        for c in range(p.k + 1):
+            for j in range(p.bsk_level):
+                w = U64(64 - p.bsk_base_log * (j + 1))
+                msg = np.zeros(p.N, dtype=U64)
+                if m:
+                    if c < p.k:
+                        # -s_c * q/B^(j+1): subtract key poly scaled.
+                        msg = (np.zeros(p.N, dtype=U64) - sk.glwe[c]) << w
+                    else:
+                        msg[0] = U64(1) << w
+                ct = glwe_encrypt(msg, sk.glwe, p.glwe_noise, rng)
+                bsk[i, c * p.bsk_level + j] = ct
+    return bsk
+
+
+def bsk_to_fourier(bsk: np.ndarray) -> np.ndarray:
+    """Complex BSK: (n, rows, k+1, N/2) complex128."""
+    return nfft(u64_to_signed_f64(bsk))
+
+
+def make_ksk(sk: SecretKeys, rng: np.random.Generator) -> np.ndarray:
+    """Key-switching key long->short: (kN, ks_level, n+1) u64; entry (i, j)
+    is an LWE_n encryption of s_long_i * q/B_ks^(j+1)."""
+    p = sk.p
+    long_key = sk.long_lwe
+    ksk = np.zeros((p.long_dim, p.ks_level, p.n + 1), dtype=U64)
+    for i in range(p.long_dim):
+        for j in range(p.ks_level):
+            w = U64(64 - p.ks_base_log * (j + 1))
+            msg = int(U64(long_key[i]) << w)
+            ksk[i, j] = lwe_encrypt(msg, sk.lwe, p.lwe_noise, rng)
+    return ksk
+
+
+# --------------------------------------------------------------------------
+# PBS pipeline (key-switch first, paper §II-B).
+# --------------------------------------------------------------------------
+
+def keyswitch(ct_long: np.ndarray, ksk: np.ndarray, p: ParamSet) -> np.ndarray:
+    """LWE_{kN} -> LWE_n using the KSK."""
+    a, b = ct_long[:-1], ct_long[-1]
+    out = np.zeros(p.n + 1, dtype=U64)
+    out[-1] = b
+    digits = decompose(a, p.ks_base_log, p.ks_level)  # (level, kN) i64
+    for j in range(p.ks_level):
+        d = digits[j].view(U64)  # signed digits as wrapping u64
+        out = out - np.sum(d[:, None] * ksk[:, j, :], axis=0, dtype=U64)
+    return out
+
+
+def modswitch(ct: np.ndarray, N: int) -> np.ndarray:
+    """Scale torus u64 -> Z_{2N} with rounding."""
+    two_n = 2 * N
+    shift = U64(64 - (two_n.bit_length() - 1))
+    return (((ct >> (shift - U64(1))) + U64(1)) >> U64(1)).astype(U64) % U64(two_n)
+
+
+def make_lut_poly(p: ParamSet, f) -> np.ndarray:
+    """Test polynomial: v[j] = f(floor(j*P/2N)) * delta, then negacyclically
+    pre-rotated by -box/2 so each message slot is *centered* on its phase
+    (handles negative noise around m = 0 without a sign flip)."""
+    P = p.plaintext_modulus
+    box = 2 * p.N // P
+    j = np.arange(p.N)
+    m = (j // box) % P
+    vals = np.array([f(int(mm)) % P for mm in m], dtype=U64)
+    v = vals * U64(p.delta)
+    return rotate_poly(v, 2 * p.N - box // 2)
+
+
+def rotate_poly(poly: np.ndarray, r: int) -> np.ndarray:
+    """Multiply by X^r in the negacyclic ring (r in [0, 2N))."""
+    N = poly.shape[-1]
+    r = r % (2 * N)
+    ext = np.concatenate([poly, (np.zeros_like(poly) - poly)], axis=-1)
+    idx = (np.arange(N) - r) % (2 * N)
+    return ext[..., idx]
+
+
+def external_product(ggsw_f: np.ndarray, glwe: np.ndarray, p: ParamSet) -> np.ndarray:
+    """GGSW (Fourier, (rows, k+1, N/2) cplx) x GLWE ((k+1, N) u64) -> GLWE."""
+    digits = decompose(glwe, p.bsk_base_log, p.bsk_level)  # (level, k+1, N)
+    # Row order r = c*level + j.
+    rows = np.transpose(digits, (1, 0, 2)).reshape(p.ggsw_rows, p.N)
+    rows_f = nfft(rows.astype(np.float64))
+    acc_f = np.einsum("rh,rch->ch", rows_f, ggsw_f)
+    return f64_to_u64(nifft(acc_f))
+
+
+def cmux_rotate(acc: np.ndarray, ggsw_f: np.ndarray, amount: int, p: ParamSet) -> np.ndarray:
+    """acc <- acc + GGSW(s) box (X^amount * acc - acc)."""
+    diff = rotate_poly(acc, amount) - acc
+    return acc + external_product(ggsw_f, diff, p)
+
+
+def blind_rotate(ct_short: np.ndarray, bsk_f: np.ndarray, lut_poly: np.ndarray,
+                 p: ParamSet) -> np.ndarray:
+    """Returns the rotated accumulator GLWE (k+1, N)."""
+    msw = modswitch(ct_short, p.N)
+    b = int(msw[-1])
+    acc = np.zeros((p.k + 1, p.N), dtype=U64)
+    acc[p.k] = rotate_poly(lut_poly, 2 * p.N - b)
+    for i in range(p.n):
+        a_i = int(msw[i])
+        if a_i != 0:
+            acc = cmux_rotate(acc, bsk_f[i], a_i, p)
+    return acc
+
+
+def sample_extract(glwe: np.ndarray, p: ParamSet) -> np.ndarray:
+    """Extract LWE_{kN} of the constant coefficient."""
+    k, N = p.k, p.N
+    out = np.zeros(p.long_dim + 1, dtype=U64)
+    for c in range(k):
+        mask = glwe[c]
+        a = np.empty(N, dtype=U64)
+        a[0] = mask[0]
+        a[1:] = np.zeros(N - 1, dtype=U64) - mask[:0:-1]
+        out[c * N : (c + 1) * N] = a
+    out[-1] = glwe[k][0]
+    return out
+
+
+def pbs(ct_long: np.ndarray, ksk: np.ndarray, bsk_f: np.ndarray,
+        lut_poly: np.ndarray, p: ParamSet) -> np.ndarray:
+    """Full programmable bootstrap, key-switch-first order."""
+    short = keyswitch(ct_long, ksk, p)
+    acc = blind_rotate(short, bsk_f, lut_poly, p)
+    return sample_extract(acc, p)
+
+
+# --------------------------------------------------------------------------
+# Multi-bit message encode/decode.
+# --------------------------------------------------------------------------
+
+def encode(m: int, p: ParamSet) -> int:
+    return (m % p.plaintext_modulus) * p.delta
+
+
+def decode(phase: int, p: ParamSet) -> int:
+    P = p.plaintext_modulus
+    return int((U64(phase) + U64(p.delta // 2)) >> U64(64 - p.width - 1)) % P
+
+
+def encrypt_long(m: int, sk: SecretKeys, rng: np.random.Generator) -> np.ndarray:
+    return lwe_encrypt(encode(m, sk.p), sk.long_lwe, sk.p.glwe_noise, rng)
+
+
+def decrypt_long(ct: np.ndarray, sk: SecretKeys) -> int:
+    return decode(lwe_decrypt_phase(ct, sk.long_lwe), sk.p)

@@ -1,0 +1,28 @@
+import numpy as np
+import pytest
+
+np.seterr(over="ignore")  # torus arithmetic wraps by design
+
+from compile import tfhe_np as T
+from compile.params import TEST1
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(12345)
+
+
+@pytest.fixture(scope="session")
+def keys():
+    """TEST1 secret keys + evaluation keys (session-cached: keygen is the
+    slow part of the suite)."""
+    rng = np.random.default_rng(2024)
+    sk = T.SecretKeys(TEST1, rng)
+    bsk = T.make_bsk(sk, rng)
+    return {
+        "sk": sk,
+        "bsk": bsk,
+        "bsk_f": T.bsk_to_fourier(bsk),
+        "ksk": T.make_ksk(sk, rng),
+        "rng": rng,
+    }

@@ -1,0 +1,42 @@
+"""AOT export: HLO text artifacts + manifest round-trip."""
+
+import json
+import os
+
+from compile import aot
+from compile.params import TEST1
+
+
+def test_export_writes_artifacts_and_manifest(tmp_path):
+    man = aot.export(str(tmp_path), ["test1"])
+    assert len(man["artifacts"]) == 2
+    names = {a["name"] for a in man["artifacts"]}
+    assert names == {"blind_rotate", "keyswitch"}
+    for a in man["artifacts"]:
+        path = tmp_path / a["file"]
+        assert path.exists()
+        text = path.read_text()
+        # HLO text, not proto: must start with the module header.
+        assert text.startswith("HloModule"), text[:40]
+        assert a["params"]["n"] == TEST1.n
+    # manifest json round-trips
+    loaded = json.loads((tmp_path / "manifest.json").read_text())
+    assert loaded == man
+
+
+def test_blind_rotate_hlo_contains_fft_and_loop(tmp_path):
+    aot.export(str(tmp_path), ["test1"])
+    text = (tmp_path / "blind_rotate_test1.hlo.txt").read_text()
+    assert "fft(" in text  # negacyclic FFT lowered to the HLO fft op
+    assert "while(" in text  # fori_loop over n stayed rolled (compact HLO)
+    assert "u64[" in text  # torus arithmetic is u64
+
+
+def test_input_specs_match_model_shapes(tmp_path):
+    man = aot.export(str(tmp_path), ["test1"])
+    br = next(a for a in man["artifacts"] if a["name"] == "blind_rotate")
+    by_name = {i["name"]: i for i in br["inputs"]}
+    assert by_name["ct_short"]["shape"] == [TEST1.n + 1]
+    assert by_name["bsk_re"]["shape"] == [
+        TEST1.n, TEST1.ggsw_rows, TEST1.k + 1, TEST1.N // 2]
+    assert by_name["lut_poly"]["dtype"] == "uint64"

@@ -1,0 +1,118 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref (the CORE
+correctness signal for the kernels the AOT artifacts embed)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as kref
+from compile.kernels.decompose import decompose as decompose_pallas
+from compile.kernels.fourier_mac import fourier_mac as fourier_mac_pallas
+
+jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------- fourier_mac
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.integers(1, 8),
+    c=st.integers(1, 3),
+    log_h=st.integers(5, 10),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fourier_mac_matches_ref(r, c, log_h, dtype, seed):
+    h = 1 << log_h
+    rng = np.random.default_rng(seed)
+    dec_re, dec_im = rng.normal(size=(2, r, h)).astype(dtype)
+    bsk_re, bsk_im = rng.normal(size=(2, r, c, h)).astype(dtype)
+    got_re, got_im = fourier_mac_pallas(dec_re, dec_im, bsk_re, bsk_im)
+    exp_re, exp_im = kref.fourier_mac_ref(dec_re, dec_im, bsk_re, bsk_im)
+    tol = 1e-5 if dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(got_re, exp_re, rtol=tol, atol=tol)
+    np.testing.assert_allclose(got_im, exp_im, rtol=tol, atol=tol)
+
+
+def test_fourier_mac_is_complex_vecmat():
+    """Cross-check against an explicit complex einsum."""
+    rng = np.random.default_rng(7)
+    r, c, h = 6, 2, 256
+    d = rng.normal(size=(r, h)) + 1j * rng.normal(size=(r, h))
+    b = rng.normal(size=(r, c, h)) + 1j * rng.normal(size=(r, c, h))
+    got_re, got_im = fourier_mac_pallas(
+        d.real.copy(), d.imag.copy(), b.real.copy(), b.imag.copy()
+    )
+    exp = np.einsum("rh,rch->ch", d, b)
+    np.testing.assert_allclose(np.asarray(got_re) + 1j * np.asarray(got_im),
+                               exp, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("block", [64, 128, 256])
+def test_fourier_mac_block_invariance(block):
+    rng = np.random.default_rng(3)
+    r, c, h = 4, 2, 512
+    args = [rng.normal(size=(r, h)), rng.normal(size=(r, h)),
+            rng.normal(size=(r, c, h)), rng.normal(size=(r, c, h))]
+    a_re, a_im = fourier_mac_pallas(*args, block=block)
+    b_re, b_im = fourier_mac_pallas(*args, block=h)
+    np.testing.assert_allclose(a_re, b_re, rtol=1e-13)
+    np.testing.assert_allclose(a_im, b_im, rtol=1e-13)
+
+
+# ------------------------------------------------------------------ decompose
+
+@settings(max_examples=20, deadline=None)
+@given(
+    base_log=st.integers(2, 16),
+    level=st.integers(1, 6),
+    p=st.integers(1, 3),
+    log_n=st.integers(5, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decompose_matches_ref(base_log, level, p, log_n, seed):
+    if base_log * level > 60:
+        return
+    n = 1 << log_n
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2**64, size=(p, n), dtype=np.uint64)
+    got = np.asarray(decompose_pallas(x, base_log, level))
+    exp = np.asarray(kref.decompose_ref(jnp.asarray(x), base_log, level))
+    np.testing.assert_array_equal(got, exp)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    base_log=st.integers(2, 15),
+    level=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decompose_digits_balanced_and_close(base_log, level, seed):
+    """Recomposition error < q/2^(base_log*level) and digits in [-B/2, B/2]."""
+    if base_log * level > 60:
+        return
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 2**64, size=(1, 256), dtype=np.uint64)
+    d = np.asarray(decompose_pallas(x, base_log, level))
+    half = 1 << (base_log - 1)
+    assert d.min() >= -half and d.max() <= half
+    acc = np.zeros_like(x)
+    for j in range(level):
+        w = np.uint64(64 - base_log * (j + 1))
+        acc = acc + (d[j].view(np.uint64) << w)
+    err = (acc - x).view(np.int64).astype(np.float64) / 2.0**64
+    assert np.abs(err).max() <= 2.0 ** -(base_log * level) * 0.5 + 1e-18
+
+
+def test_decompose_zero_and_extremes():
+    x = np.array([[0, 1, 2**63, 2**64 - 1]], dtype=np.uint64)
+    d = np.asarray(decompose_pallas(x, 8, 3))
+    # zero decomposes to zero digits; 2^64-1 rounds to 0 (wraps).
+    assert (d[:, 0, 0] == 0).all()
+    assert (d[:, 0, 3] == 0).all()
+    # 2^63 -> most significant digit -128 (balanced) with carry upward.
+    assert d[0, 0, 2] == -128

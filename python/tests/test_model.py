@@ -1,0 +1,137 @@
+"""L2 model correctness: the JAX pipeline (with Pallas kernels) vs the
+numpy oracle, stage by stage and end-to-end, plus a zero-noise exactness
+test."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import tfhe_np as T
+from compile.params import TEST1 as P
+
+jax.config.update("jax_enable_x64", True)
+
+
+def test_modswitch_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2**64, 257, dtype=np.uint64)
+    got = np.asarray(M.modswitch(jnp.asarray(x), P.N))
+    exp = T.modswitch(x, P.N).astype(np.int64)
+    np.testing.assert_array_equal(got, exp)
+
+
+def test_nfft_matches_numpy():
+    rng = np.random.default_rng(1)
+    p = rng.normal(0, 2**30, (3, P.N))
+    tw = M.twist(P.N)
+    got = np.asarray(M.nfft(jnp.asarray(p), tw))
+    np.testing.assert_allclose(got, T.nfft(p), rtol=1e-10)
+    back = np.asarray(M.nifft(jnp.asarray(got), tw))
+    np.testing.assert_allclose(back, p, rtol=1e-9)
+
+
+def test_rotate_glwe_matches_numpy():
+    rng = np.random.default_rng(2)
+    g = rng.integers(0, 2**64, (2, 64), dtype=np.uint64)
+    for r in [0, 1, 63, 64, 100, 127]:
+        got = np.asarray(M.rotate_glwe(jnp.asarray(g), r, 64))
+        exp = T.rotate_poly(g, r)
+        np.testing.assert_array_equal(got, exp)
+
+
+@pytest.mark.parametrize("use_pallas", [True, False], ids=["pallas", "jnp-ref"])
+def test_keyswitch_matches_numpy(keys, use_pallas):
+    sk, ksk, rng = keys["sk"], keys["ksk"], keys["rng"]
+    ct = T.encrypt_long(5, sk, rng)
+    got = np.asarray(M.keyswitch(jnp.asarray(ct), jnp.asarray(ksk), P, use_pallas))
+    exp = T.keyswitch(ct, ksk, P)
+    np.testing.assert_array_equal(got, exp)
+
+
+@pytest.mark.parametrize("use_pallas", [True, False], ids=["pallas", "jnp-ref"])
+def test_external_product_matches_numpy(keys, use_pallas):
+    sk, bsk_f, rng = keys["sk"], keys["bsk_f"], keys["rng"]
+    glwe = T.glwe_encrypt(T.make_lut_poly(P, lambda m: m), sk.glwe,
+                          P.glwe_noise, rng)
+    tw = M.twist(P.N)
+    got = np.asarray(
+        M.external_product(
+            jnp.asarray(bsk_f[0].real), jnp.asarray(bsk_f[0].imag),
+            jnp.asarray(glwe), P, tw, use_pallas,
+        )
+    )
+    exp = T.external_product(bsk_f[0], glwe, P)
+    # Same math, but jnp (ducc) and numpy (pocketfft) FFTs round differently;
+    # the divergence must stay far below the torus noise budget (~2^-37 of
+    # the torus for TEST1, vs a decision boundary of 2^-5).
+    diff = np.abs((got - exp).view(np.int64)).max() / 2.0**64
+    assert diff < 2.0**-34, f"fft-path divergence {diff} of the torus"
+
+
+def test_blind_rotate_matches_numpy_phase(keys):
+    sk, ksk, bsk_f, rng = keys["sk"], keys["ksk"], keys["bsk_f"], keys["rng"]
+    lut = T.make_lut_poly(P, lambda m: (3 * m) % 16)
+    ct = T.encrypt_long(2, sk, rng)
+    short = T.keyswitch(ct, ksk, P)
+    got = np.asarray(
+        M.blind_rotate(jnp.asarray(short), jnp.asarray(bsk_f.real),
+                       jnp.asarray(bsk_f.imag), jnp.asarray(lut), P)
+    )
+    exp = T.blind_rotate(short, bsk_f, lut, P)
+    # FFT-path rounding can flip single gadget digits, so the two
+    # trajectories diverge at the digit-cutoff scale (2^-24) accumulated
+    # over n iterations — still orders of magnitude below the decision
+    # boundary (2^-5).
+    d = (T.glwe_decrypt(got, sk.glwe) - T.glwe_decrypt(exp, sk.glwe))
+    err = np.abs(d.view(np.int64)).max() / 2.0**64
+    assert err < 2.0**-14, f"phase divergence {err}"
+
+
+def test_full_pbs_jax_pipeline(keys):
+    """KS (jax) -> BR (jax) -> extract -> decrypt must evaluate the LUT."""
+    sk, ksk, bsk_f, rng = keys["sk"], keys["ksk"], keys["bsk_f"], keys["rng"]
+    f = lambda m: (m * 3 + 1) % 16
+    lut = T.make_lut_poly(P, f)
+    ks_fn, _, _ = M.build_keyswitch(P)
+    br_fn, _, _ = M.build_blind_rotate(P)
+    for m in range(8):
+        ct = T.encrypt_long(m, sk, rng)
+        short = np.asarray(ks_fn(jnp.asarray(ct), jnp.asarray(ksk))[0])
+        acc = np.asarray(
+            br_fn(jnp.asarray(short), jnp.asarray(bsk_f.real),
+                  jnp.asarray(bsk_f.imag), jnp.asarray(lut))[0]
+        )
+        out = T.sample_extract(acc, P)
+        assert T.decrypt_long(out, sk) == f(m), f"m={m}"
+
+
+def test_zero_noise_pbs_is_exact():
+    """With zero encryption noise the only residual error is the gadget
+    digit cutoff (2^-24 per external product, accumulated over n
+    iterations) — the phase must sit on the encoded lattice point to well
+    within the decision boundary."""
+    P0 = dataclasses.replace(P, lwe_noise=0.0, glwe_noise=0.0)
+    rng = np.random.default_rng(77)
+    sk = T.SecretKeys(P0, rng)
+    bsk_f = T.bsk_to_fourier(T.make_bsk(sk, rng))
+    ksk = T.make_ksk(sk, rng)
+    lut = T.make_lut_poly(P0, lambda m: m ^ 5)
+    ks_fn, _, _ = M.build_keyswitch(P0)
+    br_fn, _, _ = M.build_blind_rotate(P0)
+    for m in [0, 1, 6, 7]:
+        ct = T.encrypt_long(m, sk, rng)
+        short = np.asarray(ks_fn(jnp.asarray(ct), jnp.asarray(ksk))[0])
+        acc = np.asarray(
+            br_fn(jnp.asarray(short), jnp.asarray(bsk_f.real),
+                  jnp.asarray(bsk_f.imag), jnp.asarray(lut))[0]
+        )
+        out = T.sample_extract(acc, P0)
+        ph = T.lwe_decrypt_phase(out, sk.long_lwe)
+        delta = (ph - T.encode(m ^ 5, P0)) % 2**64
+        err = abs(np.array(delta, dtype=np.uint64).view(np.int64)[()]) / 2.0**64
+        assert err < 2.0**-15, f"m={m} err={err}"
+        assert T.decrypt_long(out, sk) == (m ^ 5)

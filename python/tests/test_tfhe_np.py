@@ -1,0 +1,127 @@
+"""Self-tests of the numpy reference TFHE (the oracle everything else is
+checked against), including full-PBS functional correctness."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import tfhe_np as T
+from compile.params import TEST1 as P
+
+
+def test_encrypt_decrypt_roundtrip(keys):
+    sk, rng = keys["sk"], keys["rng"]
+    for m in range(P.plaintext_modulus // 2):
+        ct = T.encrypt_long(m, sk, rng)
+        assert T.decrypt_long(ct, sk) == m
+
+
+def test_lwe_homomorphic_add(keys):
+    sk, rng = keys["sk"], keys["rng"]
+    a = T.encrypt_long(2, sk, rng)
+    b = T.encrypt_long(3, sk, rng)
+    assert T.decrypt_long(a + b, sk) == 5
+
+
+def test_lwe_plaintext_mul(keys):
+    sk, rng = keys["sk"], keys["rng"]
+    a = T.encrypt_long(3, sk, rng)
+    assert T.decrypt_long(a * np.uint64(2), sk) == 6
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), log_n=st.integers(3, 7))
+def test_fft_convolution_vs_naive(seed, log_n):
+    rng = np.random.default_rng(seed)
+    n = 1 << log_n
+    a = rng.normal(0, 50, n).round()
+    b = rng.normal(0, 50, n).round()
+    fast = T.nifft(T.nfft(a) * T.nfft(b))
+    naive = T.negacyclic_mul_naive(a, b)
+    np.testing.assert_allclose(fast, naive, atol=1e-5)
+
+
+def test_nfft_roundtrip():
+    rng = np.random.default_rng(1)
+    p = rng.normal(0, 2**40, 512)
+    np.testing.assert_allclose(T.nifft(T.nfft(p)), p, rtol=1e-9)
+
+
+def test_rotate_poly_negacyclic_wrap():
+    v = np.arange(8, dtype=np.uint64)
+    r1 = T.rotate_poly(v, 1)  # X * v
+    assert r1[0] == np.uint64(0) - np.uint64(7)  # -v[7]
+    assert (r1[1:] == v[:-1]).all()
+    # X^(2N) = identity, X^N = -1.
+    assert (T.rotate_poly(v, 16) == v).all()
+    assert (T.rotate_poly(v, 8) == np.zeros(8, np.uint64) - v).all()
+
+
+def test_sample_extract_preserves_constant_phase(keys):
+    sk, rng = keys["sk"], keys["rng"]
+    msg = np.zeros(P.N, dtype=np.uint64)
+    msg[0] = T.encode(5, P)
+    glwe = T.glwe_encrypt(msg, sk.glwe, P.glwe_noise, rng)
+    lwe = T.sample_extract(glwe, P)
+    assert T.decrypt_long(lwe, sk) == 5
+
+
+def test_keyswitch_preserves_message(keys):
+    sk, ksk, rng = keys["sk"], keys["ksk"], keys["rng"]
+    for m in [0, 3, 7]:
+        ct = T.encrypt_long(m, sk, rng)
+        short = T.keyswitch(ct, ksk, P)
+        ph = T.lwe_decrypt_phase(short, sk.lwe)
+        assert T.decode(ph, P) == m
+
+
+def test_modswitch_rounding():
+    N = 512
+    x = np.array([0, 2**54, 2**54 - 1, 2**63, 2**64 - 1], dtype=np.uint64)
+    got = T.modswitch(x, N)
+    # 2^54 on the torus = 1/1024 of it = exactly 1 step of 2N=1024.
+    assert list(got) == [0, 1, 1, 512, 0]
+
+
+@pytest.mark.parametrize(
+    "f",
+    [lambda m: m, lambda m: (m * m + 1) % 16, lambda m: max(m - 3, 0),
+     lambda m: 15 - m],
+    ids=["id", "square", "relu", "neg"],
+)
+def test_full_pbs_evaluates_lut(keys, f):
+    sk, ksk, bsk_f, rng = keys["sk"], keys["ksk"], keys["bsk_f"], keys["rng"]
+    lut = T.make_lut_poly(P, f)
+    for m in range(8):
+        ct = T.encrypt_long(m, sk, rng)
+        out = T.pbs(ct, ksk, bsk_f, lut, P)
+        assert T.decrypt_long(out, sk) == f(m) % 16, f"m={m}"
+
+
+def test_pbs_refreshes_noise(keys):
+    """Output noise must be independent of (and smaller than) input noise."""
+    sk, ksk, bsk_f, rng = keys["sk"], keys["ksk"], keys["bsk_f"], keys["rng"]
+    lut = T.make_lut_poly(P, lambda m: m)
+    noisy_p = dataclasses.replace(P, glwe_noise=2.0**-14)
+    ct = T.lwe_encrypt(T.encode(4, P), sk.long_lwe, noisy_p.glwe_noise, rng)
+    out = T.pbs(ct, ksk, bsk_f, lut, P)
+    ph = T.lwe_decrypt_phase(out, sk.long_lwe)
+    delta = (ph - T.encode(4, P)) % 2**64
+    err = abs(np.array(delta, dtype=np.uint64).view(np.int64)[()]) / 2.0**64
+    assert err < 2.0**-9, f"post-PBS noise too big: {err}"
+
+
+def test_external_product_zero_ggsw_gives_noise_only(keys):
+    """GGSW(0) box GLWE ~ encryption of 0."""
+    sk, rng = keys["sk"], keys["rng"]
+    zero_bits = T.SecretKeys(P, rng)
+    zero_bits.lwe = np.zeros(P.n, dtype=np.uint64)
+    zero_bits.glwe = sk.glwe
+    g = T.bsk_to_fourier(T.make_bsk(zero_bits, rng)[:1])[0]
+    glwe = T.glwe_encrypt(np.full(P.N, T.encode(3, P), np.uint64),
+                          sk.glwe, P.glwe_noise, rng)
+    out = T.external_product(g, glwe, P)
+    dec = T.glwe_decrypt(out, sk.glwe).view(np.int64).astype(np.float64) / 2**64
+    assert np.abs(dec).max() < 2.0**-10

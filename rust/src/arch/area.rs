@@ -1,0 +1,178 @@
+//! Area/power model (paper Table I, TSMC N16 @ 1 GHz) and the
+//! cross-accelerator comparison of Table III.
+//!
+//! Component constants are the paper's synthesized values; the model
+//! scales them with the configuration (unit counts, buffer KB) so
+//! design-space sweeps report area honestly.
+
+use super::config::TaurusConfig;
+
+#[derive(Debug, Clone)]
+pub struct Component {
+    pub name: &'static str,
+    pub area_mm2: f64,
+    pub power_w: f64,
+    /// Instances per cluster (0 = global, counted once).
+    pub per_cluster: usize,
+}
+
+/// Paper Table I per-component values.
+///
+/// Layout decoded from the table's arithmetic: each of the 4 clusters has
+/// one BRU (= the seven compute units whose areas sum to the table's BRU
+/// row, 12.41 mm^2), one LPU and its private acc/GLWE/LWE buffers; each
+/// *pair* of clusters shares one I-FFT (Fig. 8b); the GGSW/KSK/twiddle
+/// buffers and NoC are global. 4x(12.41+1.32+9.83+1.88+0.02) + 2x5.65 +
+/// 3.27 = 116.5 mm^2 and the same structure gives 167.3 W — both match.
+pub fn components(cfg: &TaurusConfig) -> Vec<Component> {
+    let c = cfg.clusters;
+    let ifft_count = c.div_ceil(2);
+    // SRAM density from the table: acc buf 9.2MB = 9.83 mm^2.
+    let sram_mm2_per_kb = 9.83 / 9216.0;
+    let sram_w_per_kb = 3.11 / 9216.0;
+    let acc_kb = cfg.acc_buffer_kb as f64;
+    vec![
+        Component { name: "Decomposer", area_mm2: 0.24, power_w: 0.65, per_cluster: c },
+        Component { name: "2x FFT-A", area_mm2: 1.57, power_w: 2.95, per_cluster: c },
+        Component { name: "FFT-B", area_mm2: 1.88, power_w: 4.12, per_cluster: c },
+        Component { name: "VecMAC", area_mm2: 4.27, power_w: 8.41, per_cluster: c },
+        Component { name: "Rotator", area_mm2: 0.18, power_w: 0.63, per_cluster: c },
+        Component { name: "Transpose", area_mm2: 2.20, power_w: 7.16, per_cluster: c },
+        Component { name: "VecMult", area_mm2: 2.06, power_w: 4.06, per_cluster: c },
+        Component { name: "ModSwitch", area_mm2: 0.005, power_w: 0.005, per_cluster: c },
+        Component { name: "I-FFT", area_mm2: 5.65, power_w: 18.30, per_cluster: ifft_count },
+        Component {
+            name: "Acc buf.",
+            area_mm2: sram_mm2_per_kb * acc_kb,
+            power_w: sram_w_per_kb * acc_kb,
+            per_cluster: c,
+        },
+        Component { name: "GLWE buf. (1.5MB)", area_mm2: 1.88, power_w: 0.52, per_cluster: c },
+        Component { name: "LWE buf. (24KB)", area_mm2: 0.02, power_w: 0.005, per_cluster: c },
+        Component { name: "LPU", area_mm2: 1.32, power_w: 0.61, per_cluster: c },
+        // Globals.
+        Component { name: "GGSW buf. (0.8MB)", area_mm2: 1.22, power_w: 0.91, per_cluster: 0 },
+        Component { name: "KSK buf. (0.5MB)", area_mm2: 0.50, power_w: 0.07, per_cluster: 0 },
+        Component { name: "Twiddle buf. (0.8MB)", area_mm2: 1.39, power_w: 0.27, per_cluster: 0 },
+        Component { name: "NoC", area_mm2: 0.16, power_w: 0.43, per_cluster: 0 },
+    ]
+}
+
+/// BRU subtotal per cluster (paper: 12.41 mm^2, 28.01 W) — the compute
+/// units that implement blind rotation (excl. I-FFT which is shared).
+pub fn bru_subtotal(cfg: &TaurusConfig) -> (f64, f64) {
+    let wanted = ["Decomposer", "2x FFT-A", "FFT-B", "VecMAC", "Rotator", "Transpose", "VecMult"];
+    let mut a = 0.0;
+    let mut p = 0.0;
+    for comp in components(cfg) {
+        if wanted.contains(&comp.name) {
+            a += comp.area_mm2;
+            p += comp.power_w;
+        }
+    }
+    // Two BRUs per cluster share the listed pipeline; the table's BRU row
+    // counts the per-cluster pair.
+    (a, p)
+}
+
+/// Total chip area/power for a configuration.
+pub fn totals(cfg: &TaurusConfig) -> (f64, f64) {
+    let mut area = 0.0;
+    let mut power = 0.0;
+    for comp in components(cfg) {
+        let mult = if comp.per_cluster == 0 { 1.0 } else { comp.per_cluster as f64 };
+        area += comp.area_mm2 * mult;
+        power += comp.power_w * mult;
+    }
+    (area, power)
+}
+
+// ---------------------------------------------------------------------------
+// Table III: prior accelerators (reported + 16 nm-scaled areas from the
+// paper, Stillmaker-Baas scaling) and PolyMult throughput per unit area.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct AcceleratorRow {
+    pub name: &'static str,
+    pub reported_area_mm2: f64,
+    pub area_16nm_mm2: f64,
+    /// PolyMult throughput per unit area (the paper's Table III metric,
+    /// measured at k = 1).
+    pub polymult_per_area: f64,
+}
+
+/// Calibration: the paper's Table III metric for the default Taurus config
+/// (4 clusters x 256 samples/cyc, 116.52 mm^2) is 17.58. We scale other
+/// configurations by raw FFT sample throughput / modeled area so sweeps
+/// stay honest; prior accelerators carry their published values
+/// (DESIGN.md §Substitutions).
+const TAURUS_T3_CALIB: f64 = 17.58 / (1024.0 / 116.52);
+
+pub fn taurus_polymult_per_area(cfg: &TaurusConfig) -> f64 {
+    let (area, _) = totals(cfg);
+    let samples_per_cycle = (cfg.fft_samples_per_cycle * cfg.clusters as u64) as f64;
+    TAURUS_T3_CALIB * samples_per_cycle * cfg.clock_ghz / area
+}
+
+pub fn table3_rows(cfg: &TaurusConfig) -> Vec<AcceleratorRow> {
+    let (area, _) = totals(cfg);
+    vec![
+        AcceleratorRow { name: "Strix", reported_area_mm2: 141.37, area_16nm_mm2: 52.69, polymult_per_area: 1.21 },
+        AcceleratorRow { name: "MATCHA", reported_area_mm2: 36.96, area_16nm_mm2: 25.08, polymult_per_area: 1.27 },
+        AcceleratorRow { name: "Morphling", reported_area_mm2: 74.79, area_16nm_mm2: 24.95, polymult_per_area: 10.25 },
+        AcceleratorRow {
+            name: "Taurus",
+            reported_area_mm2: area,
+            area_16nm_mm2: area,
+            polymult_per_area: taurus_polymult_per_area(cfg),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_match_paper_table1() {
+        let cfg = TaurusConfig::default();
+        let (area, power) = totals(&cfg);
+        // Paper: 116.52 mm^2, 167.30 W.
+        assert!((area - 116.52).abs() / 116.52 < 0.10, "area {area}");
+        assert!((power - 167.30).abs() / 167.30 < 0.15, "power {power}");
+    }
+
+    #[test]
+    fn bru_subtotal_near_paper() {
+        let (a, p) = bru_subtotal(&TaurusConfig::default());
+        assert!((a - 12.41).abs() < 1.0, "bru area {a}");
+        assert!((p - 28.01).abs() < 3.0, "bru power {p}");
+    }
+
+    #[test]
+    fn area_scales_with_clusters_and_buffer() {
+        let mut cfg = TaurusConfig::default();
+        let (a4, _) = totals(&cfg);
+        cfg.clusters = 8;
+        let (a8, _) = totals(&cfg);
+        assert!(a8 > 1.8 * a4 * 0.9 && a8 < 2.0 * a4, "{a4} -> {a8}");
+        cfg.clusters = 4;
+        cfg.acc_buffer_kb = 4608;
+        let (a_small, _) = totals(&cfg);
+        assert!(a_small < a4);
+    }
+
+    #[test]
+    fn taurus_tops_polymult_per_area() {
+        // Table III headline: Taurus has the best PolyMult/area (17.58 at
+        // default config) while supporting 2^16-degree polynomials.
+        let cfg = TaurusConfig::default();
+        let rows = table3_rows(&cfg);
+        let taurus = rows.last().unwrap().polymult_per_area;
+        assert!((taurus - 17.58).abs() < 0.5, "taurus {taurus}");
+        for r in &rows[..rows.len() - 1] {
+            assert!(taurus > r.polymult_per_area, "vs {}", r.name);
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! BRU timing model: cycles for blind rotation (decompose -> FFT -> VecMAC
+//! -> IFFT, Fig. 8b) of one ciphertext on one cluster.
+
+use super::config::TaurusConfig;
+use crate::params::ParamSet;
+
+/// FFT samples streamed per blind-rotation iteration of one ciphertext:
+/// forward transforms of the d(k+1) decomposed rows plus (k+1) inverse
+/// transforms, each N/2 complex points.
+pub fn fft_samples_per_iter(p: &ParamSet) -> u64 {
+    ((p.ggsw_rows() + p.k + 1) * p.half_n()) as u64
+}
+
+/// VecMAC complex multiplications per iteration (the paper's "BSK
+/// multiplications"): d(k+1) rows x (k+1) columns x N/2 bins.
+pub fn mac_per_iter(p: &ParamSet) -> u64 {
+    (p.ggsw_rows() * (p.k + 1) * p.half_n()) as u64
+}
+
+/// Decomposer emission per iteration: one digit per coefficient per level,
+/// (k+1) polys (it streams ahead of the FFT; only a bound here).
+pub fn decomp_per_iter(p: &ParamSet) -> u64 {
+    (p.ggsw_rows() * p.big_n) as u64
+}
+
+/// Cycles for one full blind rotation of ONE ciphertext on one cluster
+/// (n iterations, pipeline bound by the slowest unit — normally the FFT
+/// cluster, Observation 3).
+pub fn blind_rotate_cycles(p: &ParamSet, cfg: &TaurusConfig) -> f64 {
+    let fft_c = fft_samples_per_iter(p) as f64 / cfg.fft_rate();
+    let mac_c = mac_per_iter(p) as f64 / cfg.mac_rate();
+    let dec_c = decomp_per_iter(p) as f64 / cfg.fft_rate(); // decomposer keeps FFT pace
+    p.n as f64 * fft_c.max(mac_c).max(dec_c / 2.0)
+}
+
+/// Single-ciphertext bootstrap *latency* under round-robin sharing: the
+/// ciphertext owns 1/rr of the BRU, so latency = rr x solo time (this is
+/// what the paper reports as "single-ciphertext bootstrapping latency").
+pub fn pbs_latency_s(p: &ParamSet, cfg: &TaurusConfig) -> f64 {
+    blind_rotate_cycles(p, cfg) * cfg.rr_ciphertexts as f64 * cfg.cycle_s()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{CNN20, CNN50, DECISION_TREE, GPT2, KNN, XGBOOST};
+
+    #[test]
+    fn latency_matches_paper_cnn20() {
+        // Paper: CNN-20 single-ciphertext bootstrapping latency 0.28 ms.
+        let cfg = TaurusConfig::default();
+        let lat = pbs_latency_s(&CNN20, &cfg) * 1e3;
+        assert!(lat > 0.1 && lat < 0.6, "CNN-20 latency {lat} ms vs paper 0.28");
+    }
+
+    #[test]
+    fn latency_matches_paper_cnn50() {
+        // Paper: CNN-50 0.85 ms.
+        let cfg = TaurusConfig::default();
+        let lat = pbs_latency_s(&CNN50, &cfg) * 1e3;
+        assert!(lat > 0.3 && lat < 1.7, "CNN-50 latency {lat} ms vs paper 0.85");
+    }
+
+    #[test]
+    fn high_width_latencies_in_paper_range() {
+        // Paper: high-bitwidth single-ct bootstrap latencies 6.16-34.67 ms.
+        let cfg = TaurusConfig::default();
+        for p in [&DECISION_TREE, &GPT2, &KNN, &XGBOOST] {
+            let lat = pbs_latency_s(p, &cfg) * 1e3;
+            assert!(lat > 2.0 && lat < 50.0, "{}: {lat} ms", p.name);
+        }
+    }
+
+    #[test]
+    fn fft_bound_not_mac_bound() {
+        // Observation 3/§IV design point: at k=1 the FFT cluster is the
+        // bottleneck, the VecMAC has headroom.
+        let cfg = TaurusConfig::default();
+        for p in [&CNN20, &GPT2, &DECISION_TREE] {
+            let fft_c = fft_samples_per_iter(p) as f64 / cfg.fft_rate();
+            let mac_c = mac_per_iter(p) as f64 / cfg.mac_rate();
+            assert!(fft_c > mac_c, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn cycles_scale_linearly_with_n_and_nh() {
+        let cfg = TaurusConfig::default();
+        let mut p2 = GPT2.clone();
+        p2.n *= 2;
+        assert!(
+            (blind_rotate_cycles(&p2, &cfg) / blind_rotate_cycles(&GPT2, &cfg) - 2.0).abs()
+                < 1e-9
+        );
+    }
+}

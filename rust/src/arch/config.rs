@@ -1,0 +1,131 @@
+//! Machine configuration (paper §IV-A / §VI-A defaults).
+
+/// Synchronization strategy across compute clusters (paper §IV-B,
+/// Observation 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncStrategy {
+    /// All clusters blind-rotate in lock-step and share one BSK stream
+    /// (the default: minimal bandwidth).
+    Full,
+    /// Clusters split into `groups` independent groups; each streams its
+    /// own keys (peak bandwidth multiplies, runtime barely improves).
+    Grouped(usize),
+}
+
+#[derive(Debug, Clone)]
+pub struct TaurusConfig {
+    /// Vector-core-like compute clusters (default 4).
+    pub clusters: usize,
+    /// Round-robin ciphertexts per cluster (default 12; Fig. 13b).
+    pub rr_ciphertexts: usize,
+    /// Clock (default 1 GHz, §VI-B).
+    pub clock_ghz: f64,
+    /// BRUs per cluster (two share one IFFT, Fig. 8b).
+    pub brus_per_cluster: usize,
+    /// Complex BSK multiplications per cycle per BRU (512, §IV-A).
+    pub bsk_mults_per_cycle: u64,
+    /// FFT cluster throughput in samples/cycle: "32x the throughput of the
+    /// 8-parallel R2MDC" = 256 (§IV-C).
+    pub fft_samples_per_cycle: u64,
+    /// Effective FFT pipeline efficiency (shutter-transpose waits, stage
+    /// bypass bubbles, pipeline fill). Calibrated against the paper's
+    /// 0.28 ms CNN-20 single-ciphertext bootstrap latency.
+    pub fft_efficiency: f64,
+    /// LPU MAC throughput per cluster (4 lanes x 64 elements).
+    pub lpu_macs_per_cycle: u64,
+    /// Off-chip bandwidth, GB/s (two HBM2E stacks, §VI-D).
+    pub hbm_bw_gbps: f64,
+    /// Per-cluster GLWE accumulator buffer, KB (default 9216, Fig. 14).
+    pub acc_buffer_kb: usize,
+    /// Bytes per complex BSK/accumulator point: 2 x 48-bit fixed
+    /// (Observation 4).
+    pub complex_bytes: usize,
+    pub sync: SyncStrategy,
+}
+
+impl Default for TaurusConfig {
+    fn default() -> Self {
+        Self {
+            clusters: 4,
+            rr_ciphertexts: 12,
+            clock_ghz: 1.0,
+            brus_per_cluster: 2,
+            bsk_mults_per_cycle: 512,
+            fft_samples_per_cycle: 256,
+            fft_efficiency: 0.62,
+            lpu_macs_per_cycle: 1024,
+            hbm_bw_gbps: 819.0,
+            acc_buffer_kb: 9216,
+            complex_bytes: 12,
+            sync: SyncStrategy::Full,
+        }
+    }
+}
+
+impl TaurusConfig {
+    /// Ciphertexts scheduled simultaneously across clusters (48 default).
+    pub fn batch_capacity(&self) -> usize {
+        self.clusters * self.rr_ciphertexts
+    }
+
+    /// Effective FFT samples per cycle per cluster.
+    pub fn fft_rate(&self) -> f64 {
+        self.fft_samples_per_cycle as f64 * self.fft_efficiency
+    }
+
+    /// MAC rate per cluster (both BRUs).
+    pub fn mac_rate(&self) -> f64 {
+        (self.bsk_mults_per_cycle * self.brus_per_cluster as u64) as f64
+    }
+
+    /// Seconds per cycle.
+    pub fn cycle_s(&self) -> f64 {
+        1e-9 / self.clock_ghz
+    }
+
+    /// Number of independent sync groups.
+    pub fn sync_groups(&self) -> usize {
+        match self.sync {
+            SyncStrategy::Full => 1,
+            SyncStrategy::Grouped(g) => g.max(1).min(self.clusters),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TaurusConfig::default();
+        assert_eq!(c.batch_capacity(), 48);
+        assert_eq!(c.clusters, 4);
+        assert_eq!(c.bsk_mults_per_cycle, 512);
+        assert_eq!(c.fft_samples_per_cycle, 256);
+        assert!((c.hbm_bw_gbps - 819.0).abs() < 1e-9);
+        assert_eq!(c.acc_buffer_kb, 9216);
+        assert_eq!(c.sync_groups(), 1);
+    }
+
+    #[test]
+    fn grouped_sync_clamped() {
+        let mut c = TaurusConfig::default();
+        c.sync = SyncStrategy::Grouped(8);
+        assert_eq!(c.sync_groups(), 4);
+        c.sync = SyncStrategy::Grouped(2);
+        assert_eq!(c.sync_groups(), 2);
+    }
+
+    /// The default accumulator buffer holds exactly two complex-domain
+    /// GLWE accumulators for each of the 12 round-robin ciphertexts at
+    /// N = 32768 (the paper's default sizing, §VI-A).
+    #[test]
+    fn acc_buffer_sized_for_default_workloads() {
+        let c = TaurusConfig::default();
+        let p = crate::params::GPT2; // N = 32768, k = 1
+        let per_ct = 2 * (p.k + 1) * p.half_n() * c.complex_bytes;
+        let need_kb = c.rr_ciphertexts * per_ct / 1024;
+        assert_eq!(need_kb, 9216);
+    }
+}

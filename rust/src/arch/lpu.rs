@@ -1,0 +1,56 @@
+//! LPU timing model: key switching, sample extraction, mod switch and
+//! linear ops on LWE ciphertexts (paper §IV-A).
+
+use super::config::TaurusConfig;
+use crate::params::ParamSet;
+
+/// MACs in one key switch: kN input coefficients x ks_level digits x
+/// (n+1)-element KSK rows.
+pub fn ks_macs(p: &ParamSet) -> u64 {
+    (p.long_dim() * p.ks_level * (p.n + 1)) as u64
+}
+
+/// Cycles for one key switch on one cluster's LPU.
+pub fn keyswitch_cycles(p: &ParamSet, cfg: &TaurusConfig) -> f64 {
+    ks_macs(p) as f64 / cfg.lpu_macs_per_cycle as f64
+}
+
+/// Sample extraction is a copy/negate pass over kN+1 elements.
+pub fn sample_extract_cycles(p: &ParamSet, cfg: &TaurusConfig) -> f64 {
+    (p.long_dim() + 1) as f64 / cfg.lpu_macs_per_cycle as f64
+}
+
+/// One linear op (add / plaintext-mul / one dot term) over a long LWE.
+pub fn linear_op_cycles(p: &ParamSet, cfg: &TaurusConfig) -> f64 {
+    (p.long_dim() + 1) as f64 / cfg.lpu_macs_per_cycle as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::bru;
+    use crate::params::{CNN20, DECISION_TREE, GPT2, PAPER_SETS};
+
+    #[test]
+    fn keyswitch_under_a_third_of_blind_rotate() {
+        // Footnote 9: "four lanes are enough to complete key-switching and
+        // the associated linear operations before blind rotation finishes
+        // across all tested parameter sets."
+        let cfg = TaurusConfig::default();
+        for p in PAPER_SETS {
+            let ks = keyswitch_cycles(p, &cfg);
+            let br = bru::blind_rotate_cycles(p, &cfg);
+            assert!(ks < br * 0.55, "{}: ks {ks} vs br {br}", p.name);
+        }
+    }
+
+    #[test]
+    fn ks_second_most_expensive() {
+        // §II-B: key switching usually < 10% of total runtime but far above
+        // sample extraction and linear ops.
+        let cfg = TaurusConfig::default();
+        for p in [&CNN20, &GPT2, &DECISION_TREE] {
+            assert!(keyswitch_cycles(p, &cfg) > 50.0 * sample_extract_cycles(p, &cfg));
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! The Taurus accelerator model (paper §IV): a calibrated cycle-level
+//! performance model of the 4-cluster BRU/LPU machine, its heterogeneous
+//! FFT units, round-robin BSK reuse, synchronization strategy, on-chip
+//! buffers and HBM bandwidth — plus the Morphling-style XPU baseline used
+//! by Table IV and the area/power model of Tables I/III.
+//!
+//! Everything is derived from the unit numbers the paper publishes
+//! (512 BSK mults/cycle/BRU, FFT cluster = 32x an 8-parallel R2MDC,
+//! 1 GHz, two HBM2E stacks at 819 GB/s, 12 round-robin ciphertexts per
+//! cluster); a single calibration factor per unit is documented in
+//! DESIGN.md §Calibration.
+
+pub mod area;
+pub mod bru;
+pub mod config;
+pub mod lpu;
+pub mod memory;
+pub mod sim;
+pub mod xpu;
+
+pub use config::{SyncStrategy, TaurusConfig};
+pub use sim::{simulate, SimResult};

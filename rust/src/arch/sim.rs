@@ -1,0 +1,269 @@
+//! Batch-granularity performance simulator (the paper's "two-stage
+//! approach": functional correctness is handled by `compiler::exec` /
+//! `runtime`, cycle-level timing within seconds by this model, §VI-C).
+//!
+//! Walks a compiled schedule keeping BRU and LPU timelines per the Fig. 9
+//! pipeline: KS/SE/linear ops on the LPU overlap blind rotation of the
+//! previous *independent* batch; dependent batches stall the BRU.
+
+use super::bru;
+use super::config::TaurusConfig;
+use super::lpu;
+use super::memory::{self, Traffic};
+use crate::compiler::{Compiled, Schedule};
+use crate::params::ParamSet;
+
+#[derive(Debug, Clone, Default)]
+pub struct SimResult {
+    pub seconds: f64,
+    pub cycles: f64,
+    /// BRU busy fraction (the utilization of Figs. 14/15).
+    pub utilization: f64,
+    /// Average and peak DRAM bandwidth over the run, GB/s.
+    pub avg_bw_gbps: f64,
+    pub peak_bw_gbps: f64,
+    pub traffic: Traffic,
+    pub batches: usize,
+    pub pbs_count: usize,
+    /// Fraction of batch windows that were memory-bound ("bandwidth
+    /// deficit", Fig. 13b).
+    pub bw_deficit: f64,
+}
+
+/// Simulate one compiled program on a Taurus configuration.
+pub fn simulate(c: &Compiled, cfg: &TaurusConfig) -> SimResult {
+    simulate_schedule(&c.schedule, &c.params, cfg)
+}
+
+pub fn simulate_schedule(s: &Schedule, p: &ParamSet, cfg: &TaurusConfig) -> SimResult {
+    let cyc = cfg.cycle_s();
+    let groups = cfg.sync_groups();
+    let clusters_per_group = (cfg.clusters / groups).max(1);
+    let br_ct_cycles = bru::blind_rotate_cycles(p, cfg);
+    let ks_cycles = lpu::keyswitch_cycles(p, cfg);
+    let se_cycles = lpu::sample_extract_cycles(p, cfg);
+    let lin_cycles = lpu::linear_op_cycles(p, cfg);
+
+    // One BRU/LPU timeline per synchronization group (paper §IV-B: full
+    // sync = one global timeline; grouped = independent groups each
+    // streaming their own keys).
+    let mut bru_free = vec![0.0f64; groups]; // cycles
+    let mut lpu_free = vec![0.0f64; groups];
+    let mut bru_busy = 0.0f64;
+    let mut total_traffic = Traffic::default();
+    let mut mem_bound_windows = 0usize;
+    let mut pbs = 0usize;
+    // (start, end, demand GB/s) of each batch's stream for the concurrent
+    // peak-demand sweep.
+    let mut windows: Vec<(f64, f64, f64)> = Vec::with_capacity(s.batches.len());
+
+    for batch in &s.batches {
+        let cts = batch.br_ops.len();
+        pbs += cts;
+        // Least-loaded group takes the batch.
+        let g = (0..groups).min_by(|&a, &b| bru_free[a].total_cmp(&bru_free[b])).unwrap();
+        // --- LPU phase: linear ops + key switches for this batch,
+        // distributed over the group's LPUs.
+        let lpu_work = (batch.lin_ops.len() as f64 * lin_cycles
+            + batch.ks_ops.len() as f64 * ks_cycles
+            + batch.se_ops.len() as f64 * se_cycles)
+            / clusters_per_group as f64;
+        // KS can only start once its inputs exist; if the batch depends on
+        // the previous level's BR outputs it must wait for ALL groups
+        // (results may come from any of them).
+        let dep_ready =
+            if batch.depends_on_prev { bru_free.iter().cloned().fold(0.0, f64::max) } else { 0.0 };
+        let ks_start = lpu_free[g].max(dep_ready);
+        let ks_end = ks_start + lpu_work;
+        lpu_free[g] = ks_end;
+
+        // --- BRU phase: per-cluster round-robin over this batch's cts
+        // (compute is total work per cluster; RR depth only affects BSK
+        // restreaming, accounted in batch_traffic).
+        let per_cluster = cts.div_ceil(clusters_per_group).max(1);
+        let compute = per_cluster as f64 * br_ct_cycles;
+        let traffic = memory::batch_traffic(p, cfg, cts);
+        let mem = traffic.total() as f64 / (cfg.hbm_bw_gbps * 1e9) / cyc; // cycles
+        let window = compute.max(mem);
+        if mem > compute {
+            mem_bound_windows += 1;
+        }
+        let br_start = bru_free[g].max(ks_end);
+        let br_end = br_start + window;
+        bru_free[g] = br_end;
+        bru_busy += compute;
+
+        total_traffic.bsk += traffic.bsk;
+        total_traffic.ksk += traffic.ksk;
+        total_traffic.glwe += traffic.glwe;
+        total_traffic.lwe += traffic.lwe;
+        total_traffic.swap += traffic.swap;
+        // Demand = what the stream would need to never stall the BRU,
+        // capped at what the HBM can actually deliver to one stream;
+        // concurrent groups sum (Observation 5's bandwidth cost).
+        let demand =
+            (traffic.total() as f64 / (compute.max(1.0) * cyc) / 1e9).min(cfg.hbm_bw_gbps);
+        windows.push((br_start, br_end, demand));
+    }
+    // Loose linear ops (pure-linear tail) on group 0.
+    if !s.loose_linear.is_empty() {
+        lpu_free[0] += s.loose_linear.len() as f64 * lin_cycles / clusters_per_group as f64;
+    }
+
+    // Peak concurrent bandwidth demand: sweep over window boundaries.
+    let mut events: Vec<(f64, f64)> = Vec::with_capacity(2 * windows.len());
+    for &(a, b, d) in &windows {
+        events.push((a, d));
+        events.push((b, -d));
+    }
+    events.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.total_cmp(&y.1)));
+    let mut cur = 0.0f64;
+    let mut peak_bw = 0.0f64;
+    for (_, d) in events {
+        cur += d;
+        peak_bw = peak_bw.max(cur);
+    }
+
+    let total_cycles = bru_free
+        .iter()
+        .chain(lpu_free.iter())
+        .cloned()
+        .fold(1.0f64, f64::max);
+    let seconds = total_cycles * cyc;
+    SimResult {
+        seconds,
+        cycles: total_cycles,
+        utilization: (bru_busy / (total_cycles * groups as f64)).min(1.0),
+        avg_bw_gbps: total_traffic.total() as f64 / seconds / 1e9,
+        peak_bw_gbps: peak_bw,
+        traffic: total_traffic,
+        batches: s.batches.len(),
+        pbs_count: pbs,
+        bw_deficit: if s.batches.is_empty() {
+            0.0
+        } else {
+            mem_bound_windows as f64 / s.batches.len() as f64
+        },
+    }
+}
+
+/// Throughput metric for design-space sweeps (Fig. 13b): bootstraps/sec at
+/// steady state on a saturated independent workload.
+pub fn steady_state_pbs_per_s(p: &ParamSet, cfg: &TaurusConfig) -> f64 {
+    let compute = cfg.rr_ciphertexts as f64 * bru::blind_rotate_cycles(p, cfg);
+    let traffic = memory::batch_traffic(p, cfg, cfg.batch_capacity());
+    let mem = traffic.total() as f64 / (cfg.hbm_bw_gbps * 1e9) / cfg.cycle_s();
+    let window_s = compute.max(mem) * cfg.cycle_s();
+    cfg.batch_capacity() as f64 / window_s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::compile;
+    use crate::ir::builder::ProgramBuilder;
+    use crate::params::{GPT2, TEST1};
+
+    fn wide(n: usize, width: usize) -> crate::ir::Program {
+        let mut b = ProgramBuilder::new("wide", width);
+        let xs = b.inputs(n);
+        for x in xs {
+            let y = b.lut_fn(x, |m| m);
+            b.output(y);
+        }
+        b.finish()
+    }
+
+    fn chain(len: usize, width: usize) -> crate::ir::Program {
+        let mut b = ProgramBuilder::new("chain", width);
+        let mut x = b.input();
+        for _ in 0..len {
+            x = b.lut_fn(x, |m| m);
+        }
+        b.output(x);
+        b.finish()
+    }
+
+    #[test]
+    fn full_batches_beat_serial_chains() {
+        let cfg = TaurusConfig::default();
+        let wide_r = simulate(&compile(&wide(96, 6), &GPT2, cfg.batch_capacity()), &cfg);
+        let chain_r = simulate(&compile(&chain(96, 6), &GPT2, cfg.batch_capacity()), &cfg);
+        assert_eq!(wide_r.pbs_count, chain_r.pbs_count);
+        assert!(
+            chain_r.seconds > 10.0 * wide_r.seconds,
+            "serial {} vs wide {}",
+            chain_r.seconds,
+            wide_r.seconds
+        );
+        assert!(wide_r.utilization > 0.5);
+        assert!(chain_r.utilization < 0.2);
+    }
+
+    #[test]
+    fn more_parallelism_does_not_slow_down() {
+        let cfg = TaurusConfig::default();
+        let a = simulate(&compile(&wide(48, 6), &GPT2, 48), &cfg);
+        let b = simulate(&compile(&wide(96, 6), &GPT2, 48), &cfg);
+        // Twice the work in about twice the time (steady-state linearity).
+        let ratio = b.seconds / a.seconds;
+        assert!(ratio > 1.7 && ratio < 2.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn rr_sweep_has_knee_then_plateau() {
+        // Fig. 13b: throughput rises with round-robin ciphertexts until the
+        // BSK stream is amortized, then plateaus.
+        let mut cfg = TaurusConfig::default();
+        let mut last = 0.0f64;
+        let mut gains = vec![];
+        for rr in [2usize, 4, 8, 12, 16, 24] {
+            cfg.rr_ciphertexts = rr;
+            let t = steady_state_pbs_per_s(&GPT2, &cfg);
+            gains.push(t / last.max(1e-9));
+            last = t;
+        }
+        // Early steps gain, late steps plateau.
+        assert!(gains[1] > 1.5, "2->4 should gain: {gains:?}");
+        let tail = gains[gains.len() - 1];
+        assert!(tail < 1.1, "16->24 should plateau: {gains:?}");
+    }
+
+    #[test]
+    fn grouped_sync_small_speedup_big_bandwidth() {
+        // Observation 5.
+        let base_cfg = TaurusConfig::default();
+        let prog = wide(96, 6);
+        let c = compile(&prog, &GPT2, base_cfg.batch_capacity());
+        let full = simulate(&c, &base_cfg);
+        let mut gcfg = base_cfg.clone();
+        gcfg.sync = super::super::config::SyncStrategy::Grouped(2);
+        let grouped = simulate(&c, &gcfg);
+        let speedup = full.seconds / grouped.seconds;
+        assert!(speedup < 1.1, "grouped speedup {speedup}");
+        assert!(
+            grouped.peak_bw_gbps > 1.5 * full.peak_bw_gbps,
+            "grouped {} vs full {}",
+            grouped.peak_bw_gbps,
+            full.peak_bw_gbps
+        );
+    }
+
+    #[test]
+    fn bandwidth_within_two_hbm_stacks() {
+        // Fig. 13a: defaults stay under 819 GB/s.
+        let cfg = TaurusConfig::default();
+        let c = compile(&wide(192, 6), &GPT2, cfg.batch_capacity());
+        let r = simulate(&c, &cfg);
+        assert!(r.avg_bw_gbps < 819.0, "avg {}", r.avg_bw_gbps);
+    }
+
+    #[test]
+    fn small_params_simulate_fast_and_nonzero() {
+        let cfg = TaurusConfig::default();
+        let c = compile(&wide(10, 3), &TEST1, cfg.batch_capacity());
+        let r = simulate(&c, &cfg);
+        assert!(r.seconds > 0.0 && r.seconds < 1.0);
+        assert_eq!(r.pbs_count, 10);
+    }
+}

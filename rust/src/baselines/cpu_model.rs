@@ -1,0 +1,144 @@
+//! CPU cost model for TFHE-rs/Concrete-style execution.
+//!
+//! Per-PBS time scales with the FFT work n * (d(k+1) + k + 1) * N/2 *
+//! log2(N/2); the effective per-core rate is calibrated against the
+//! paper's Table II CPU column (AMD EPYC 7R13, 48 Zen3 cores) — see
+//! DESIGN.md §Calibration. Program-level times account for the workload's
+//! exploitable parallelism via the compiled schedule.
+
+use crate::compiler::Compiled;
+use crate::params::ParamSet;
+
+#[derive(Debug, Clone)]
+pub struct CpuPlatform {
+    pub name: &'static str,
+    pub cores: usize,
+    /// Effective per-core FLOP rate on the TFHE FFT hot loop (calibrated;
+    /// includes memory-bandwidth pressure at full occupancy).
+    pub core_gflops: f64,
+    /// IPC / frequency scaling vs the 7R13 baseline.
+    pub ipc_factor: f64,
+    /// Total memory bandwidth (caps multi-core scaling when the working
+    /// set — BSK + KSK — spills the L3), GB/s.
+    pub mem_bw_gbps: f64,
+    pub tdp_w: f64,
+}
+
+/// Paper baseline: AMD EPYC 7R13, 48 cores @ 3.4 GHz, DDR4-3200.
+pub const EPYC_7R13: CpuPlatform = CpuPlatform {
+    name: "EPYC 7R13 (48c)",
+    cores: 48,
+    core_gflops: 2.1,
+    ipc_factor: 1.0,
+    mem_bw_gbps: 204.8,
+    tdp_w: 270.0,
+};
+
+/// Paper §VI-D: dual EPYC 9654 (192 cores, 921.6 GB/s, AVX-512, +13% IPC).
+pub const DUAL_EPYC_9654: CpuPlatform = CpuPlatform {
+    name: "2x EPYC 9654 (192c)",
+    cores: 192,
+    core_gflops: 2.1,
+    ipc_factor: 1.13 * 1.6, // IPC uplift x AVX-512 width benefit
+    mem_bw_gbps: 921.6,
+    tdp_w: 800.0,
+};
+
+/// FLOPs of one PBS (FFT-dominated blind rotation + key switch).
+pub fn pbs_flops(p: &ParamSet) -> f64 {
+    let nh = p.half_n() as f64;
+    let log = nh.log2();
+    let fft = p.n as f64 * (p.ggsw_rows() + p.k + 1) as f64 * nh * log * 6.0;
+    let mac = p.n as f64 * (p.ggsw_rows() * (p.k + 1)) as f64 * nh * 4.0;
+    let ks = (p.long_dim() * p.ks_level * (p.n + 1)) as f64 * 2.0;
+    fft + mac + ks
+}
+
+/// Single-core, single-PBS latency.
+pub fn pbs_seconds_single_core(p: &ParamSet, cpu: &CpuPlatform) -> f64 {
+    pbs_flops(p) / (cpu.core_gflops * 1e9 * cpu.ipc_factor)
+}
+
+/// Bytes each PBS must pull through the memory system (BSK once — the L3
+/// cannot hold the multi-bit keys, the paper's §I bottleneck).
+pub fn pbs_bytes(p: &ParamSet) -> f64 {
+    (p.bsk_bytes() + p.ksk_bytes()) as f64
+}
+
+/// PBS counts per dependency level (the CPU is not bound by the
+/// accelerator's 48-ciphertext batch granularity — it exploits the full
+/// level width up to its core count).
+pub fn level_widths(c: &Compiled) -> Vec<usize> {
+    let mut widths: Vec<usize> = Vec::new();
+    for batch in &c.schedule.batches {
+        if widths.len() <= batch.level {
+            widths.resize(batch.level + 1, 0);
+        }
+        widths[batch.level] += batch.br_ops.len();
+    }
+    widths
+}
+
+/// Wall-clock for a compiled program: per-level parallelism, with
+/// per-core compute vs shared-bandwidth ceilings.
+pub fn program_seconds(c: &Compiled, cpu: &CpuPlatform) -> f64 {
+    let p = &c.params;
+    let t_pbs = pbs_seconds_single_core(p, cpu);
+    let mut total = 0.0;
+    for cts in level_widths(c) {
+        let cts = cts.max(1);
+        let par = cts.min(cpu.cores) as f64;
+        let compute = cts as f64 * t_pbs / par;
+        // All `par` cores stream their own BSK working set concurrently.
+        let mem = par * pbs_bytes(p) * (cts as f64 / par) / (cpu.mem_bw_gbps * 1e9);
+        total += compute.max(mem);
+    }
+    total
+}
+
+/// Throughput-mode PBS/s for Fig. 16-style normalized comparisons.
+pub fn pbs_per_second(p: &ParamSet, cpu: &CpuPlatform) -> f64 {
+    let t = pbs_seconds_single_core(p, cpu);
+    let compute_rate = cpu.cores as f64 / t;
+    let mem_rate = cpu.mem_bw_gbps * 1e9 / pbs_bytes(p);
+    compute_rate.min(mem_rate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::{CNN20, DECISION_TREE, GPT2};
+
+    #[test]
+    fn pbs_costs_scale_with_width() {
+        // §I: 6-bit LUTs are >4x slower than 4-bit on CPU; our N=2048 ->
+        // N=65536 jump should be far larger than 4x.
+        let small = pbs_seconds_single_core(&CNN20, &EPYC_7R13);
+        let big = pbs_seconds_single_core(&DECISION_TREE, &EPYC_7R13);
+        assert!(big / small > 10.0, "{small} vs {big}");
+        // Order of magnitude: tens of ms for N=2048 at 6 bits.
+        assert!(small > 0.01 && small < 0.3, "CNN20 pbs {small}s");
+    }
+
+    #[test]
+    fn dual_9654_faster_but_sublinear() {
+        // Fig. 16: 192 cores + 4.5x bandwidth gives well under 4x per-PBS
+        // program speedup on bandwidth-bound workloads.
+        let base = pbs_per_second(&GPT2, &EPYC_7R13);
+        let big = pbs_per_second(&GPT2, &DUAL_EPYC_9654);
+        let speedup = big / base;
+        assert!(speedup > 2.0 && speedup < 10.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn wide_param_pbs_latency_in_calibrated_range() {
+        // The effective per-core rate already folds in the L3-spill
+        // bandwidth pressure the paper describes (§I); at N = 65536 a
+        // single-core PBS lands at several seconds, consistent with the
+        // 645 s Table II decision-tree runtime at ~10-20x parallelism.
+        let t = pbs_seconds_single_core(&DECISION_TREE, &EPYC_7R13);
+        assert!(t > 4.0 && t < 20.0, "DT pbs {t}s");
+        // Keys alone exceed any L3 (the §I memory argument).
+        assert!(pbs_bytes(&DECISION_TREE) > 1e9);
+    }
+}

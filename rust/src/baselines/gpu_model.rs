@@ -1,0 +1,137 @@
+//! GPU cost model (dual NVIDIA RTX A5000, the paper's Table II column).
+//!
+//! GPU TFHE (Concrete-CUDA style) is throughput-oriented: PBS batches are
+//! bandwidth-bound on BSK streaming, with a fixed per-launch overhead that
+//! hurts serial (small-batch) workloads — which is why the paper's GPU
+//! column sometimes loses to the CPU on shallow-parallel programs.
+
+use crate::compiler::Compiled;
+
+use super::cpu_model;
+
+#[derive(Debug, Clone)]
+pub struct GpuPlatform {
+    pub name: &'static str,
+    pub devices: usize,
+    /// Per-device memory bandwidth, GB/s.
+    pub bw_gbps: f64,
+    /// Per-device effective rate on the f64 torus-FFT hot loop at full
+    /// occupancy, GFLOP/s. Far below the A5000's FP32 peak: measured
+    /// Concrete-CUDA PBS latencies (~5-6 ms at N=2048) put the effective
+    /// rate at tens of GFLOP/s — calibrated against Table II.
+    pub gflops: f64,
+    /// Batch size per device below which SMs idle (occupancy knee).
+    pub occupancy_knee: f64,
+    /// Kernel-launch + host sync overhead per dependent PBS level.
+    pub launch_overhead_s: f64,
+    /// Device memory per GPU, GB (GPT-2 12-head OOMs at 24 GB each).
+    pub mem_gb: f64,
+}
+
+pub const DUAL_A5000: GpuPlatform = GpuPlatform {
+    name: "2x RTX A5000",
+    devices: 2,
+    bw_gbps: 768.0,
+    gflops: 65.0,
+    occupancy_knee: 16.0,
+    launch_overhead_s: 450e-6,
+    mem_gb: 24.0,
+};
+
+/// Program working-set estimate: keys + per-PBS accumulators without
+/// ACC-dedup (the GPU library the paper used does not share accumulators),
+/// double-buffered at runtime (input accumulator + rotated copy per PBS).
+pub fn working_set_bytes(c: &Compiled) -> f64 {
+    let p = &c.params;
+    (p.bsk_bytes() + p.ksk_bytes()) as f64 + 2.0 * c.acc_dedup.bytes_before as f64
+}
+
+/// Does this program fit in device memory? (Table II: GPT-2 12-head OOM.)
+pub fn fits(c: &Compiled, gpu: &GpuPlatform) -> bool {
+    working_set_bytes(c) <= gpu.devices as f64 * gpu.mem_gb * 1e9
+}
+
+/// Wall-clock of a compiled program.
+pub fn program_seconds(c: &Compiled, gpu: &GpuPlatform) -> f64 {
+    let p = &c.params;
+    let flops = cpu_model::pbs_flops(p);
+    let bytes = cpu_model::pbs_bytes(p);
+    let mut total = 0.0;
+    for cts in cpu_model::level_widths(c) {
+        let cts = cts.max(1) as f64;
+        // Batch splits across devices; each device streams the BSK once
+        // per batch and computes its ciphertexts. Small batches leave SMs
+        // idle (occupancy knee) — this is why the GPU column of Table II
+        // sometimes loses to the 48-core CPU on shallow-parallel programs.
+        let per_dev = (cts / gpu.devices as f64).ceil();
+        let occupancy = (per_dev / gpu.occupancy_knee).min(1.0);
+        let compute = per_dev * flops / (gpu.gflops * 1e9 * occupancy);
+        let mem = (bytes + per_dev * 2.0 * p.glwe_bytes() as f64) / (gpu.bw_gbps * 1e9);
+        total += compute.max(mem) + gpu.launch_overhead_s;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::cpu_model::{program_seconds as cpu_seconds, EPYC_7R13};
+    use crate::compiler::compile;
+    use crate::ir::builder::ProgramBuilder;
+    use crate::params::GPT2;
+
+    fn wide(n: usize) -> crate::ir::Program {
+        let mut b = ProgramBuilder::new("w", 6);
+        let xs = b.inputs(n);
+        for x in xs {
+            let y = b.lut_fn(x, |m| m);
+            b.output(y);
+        }
+        b.finish()
+    }
+
+    fn chain(len: usize) -> crate::ir::Program {
+        let mut b = ProgramBuilder::new("c", 6);
+        let mut x = b.input();
+        for _ in 0..len {
+            x = b.lut_fn(x, |m| m);
+        }
+        b.output(x);
+        b.finish()
+    }
+
+    #[test]
+    fn gpu_wins_on_parallel_loses_on_serial() {
+        // Table II pattern: GPU beats CPU on deep parallel workloads
+        // (GPT-2, XGBoost) but can lose on shallow/serial ones (CNNs with
+        // modest level parallelism per batch).
+        let par = compile(&wide(2000), &GPT2, 48);
+        let ser = compile(&chain(200), &GPT2, 48);
+        let gpu_par = program_seconds(&par, &DUAL_A5000);
+        let cpu_par = cpu_seconds(&par, &EPYC_7R13);
+        assert!(gpu_par < cpu_par, "gpu {gpu_par} vs cpu {cpu_par}");
+        let gpu_ser = program_seconds(&ser, &DUAL_A5000);
+        let cpu_ser = cpu_seconds(&ser, &EPYC_7R13);
+        // Serial: launch overhead + unused width make the GPU no better
+        // than ~the CPU.
+        assert!(gpu_ser > 0.5 * cpu_ser, "gpu {gpu_ser} vs cpu {cpu_ser}");
+    }
+
+    #[test]
+    fn oom_detection_scales_with_acc_storage() {
+        let small = compile(&wide(10), &GPT2, 48);
+        assert!(fits(&small, &DUAL_A5000));
+        // A program with ~200k distinct accumulators at N=32768 exceeds
+        // 48 GB.
+        let mut b = ProgramBuilder::new("huge", 6);
+        let xs = b.inputs(1000);
+        for (i, x) in xs.into_iter().enumerate() {
+            let y = b.lut_fn(x, move |m| (m + i as u64) % 128);
+            b.output(y);
+        }
+        let huge = compile(&b.finish(), &GPT2, 48);
+        // 1000 distinct tables x 512 KB accumulators = 0.5 GB — still fits;
+        // verify the arithmetic path rather than an absurd build time.
+        assert!(working_set_bytes(&huge) > working_set_bytes(&small));
+    }
+}

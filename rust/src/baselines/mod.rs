@@ -1,0 +1,13 @@
+//! Calibrated CPU/GPU cost models and prior-accelerator constants —
+//! the comparison columns of Table II and Fig. 16.
+//!
+//! All models are anchored on the paper's own published measurements
+//! (DESIGN.md §Substitutions): the comparison is about *ratios across
+//! platforms on identical op-count workloads*, which anchoring preserves.
+
+pub mod cpu_model;
+pub mod gpu_model;
+pub mod prior_accel;
+
+pub use cpu_model::{CpuPlatform, DUAL_EPYC_9654, EPYC_7R13};
+pub use gpu_model::{GpuPlatform, DUAL_A5000};

@@ -1,0 +1,72 @@
+//! Published constants for prior TFHE ASICs (paper Table III sources:
+//! Strix [MICRO'23], MATCHA [DAC'22], Morphling [HPCA'24]), used by the
+//! Table III regeneration and the Table IV context.
+
+#[derive(Debug, Clone)]
+pub struct PriorAccel {
+    pub name: &'static str,
+    pub process_nm: u32,
+    pub reported_area_mm2: f64,
+    /// Stillmaker-Baas scaled to 16 nm (paper's scaling).
+    pub area_16nm_mm2: f64,
+    /// Paper Table III metric.
+    pub polymult_per_area: f64,
+    /// Maximum supported polynomial degree.
+    pub max_poly_degree: usize,
+    /// Maximum practical message width (bits).
+    pub max_width: usize,
+}
+
+pub const STRIX: PriorAccel = PriorAccel {
+    name: "Strix",
+    process_nm: 28,
+    reported_area_mm2: 141.37,
+    area_16nm_mm2: 52.69,
+    polymult_per_area: 1.21,
+    max_poly_degree: 8192,
+    max_width: 4,
+};
+
+pub const MATCHA: PriorAccel = PriorAccel {
+    name: "MATCHA",
+    process_nm: 16,
+    reported_area_mm2: 36.96,
+    area_16nm_mm2: 25.08,
+    polymult_per_area: 1.27,
+    max_poly_degree: 1024,
+    max_width: 1,
+};
+
+pub const MORPHLING: PriorAccel = PriorAccel {
+    name: "Morphling",
+    process_nm: 28,
+    reported_area_mm2: 74.79,
+    area_16nm_mm2: 24.95,
+    polymult_per_area: 10.25,
+    max_poly_degree: 4096,
+    max_width: 5,
+};
+
+pub const ALL: [&PriorAccel; 3] = [&STRIX, &MATCHA, &MORPHLING];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn taurus_uniquely_supports_ten_bits() {
+        // Paper: 2^16-degree polynomials enable 10-bit programs vs the
+        // previous 5-bit limitation.
+        for a in ALL {
+            assert!(a.max_poly_degree < 65536, "{}", a.name);
+            assert!(a.max_width < 10, "{}", a.name);
+        }
+    }
+
+    #[test]
+    fn scaled_areas_match_paper() {
+        assert_eq!(STRIX.area_16nm_mm2, 52.69);
+        assert_eq!(MORPHLING.area_16nm_mm2, 24.95);
+        assert_eq!(MATCHA.area_16nm_mm2, 25.08);
+    }
+}

@@ -1,0 +1,191 @@
+//! Batch construction + scheduling (paper Fig. 9): ciphertexts are grouped
+//! into batches of up to `capacity` (48 = 4 clusters x 12 round-robin) and
+//! scheduled so KS/SE on the LPU overlaps BS on the BRU for *independent*
+//! batches, while dependent consecutive batches stall the BRU.
+
+use super::lowering::{PrimGraph, PrimId, PrimKind};
+
+#[derive(Debug, Clone, Default)]
+pub struct Batch {
+    /// PBS level this batch executes at.
+    pub level: usize,
+    pub ks_ops: Vec<PrimId>,
+    pub br_ops: Vec<PrimId>,
+    pub se_ops: Vec<PrimId>,
+    /// Linear ops that must run before this batch's key switches.
+    pub lin_ops: Vec<PrimId>,
+    /// True when this batch's KS inputs depend on the previous batch's BR
+    /// outputs (Fig. 9 batches 4 -> 5): the BRU must wait.
+    pub depends_on_prev: bool,
+}
+
+impl Batch {
+    pub fn ciphertexts(&self) -> usize {
+        self.br_ops.len()
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub batches: Vec<Batch>,
+    pub capacity: usize,
+    /// Linear ops not tied to any PBS (pure-linear program tail/head).
+    pub loose_linear: Vec<PrimId>,
+}
+
+impl Schedule {
+    pub fn total_pbs(&self) -> usize {
+        self.batches.iter().map(|b| b.br_ops.len()).sum()
+    }
+
+    /// Fraction of batch slots actually filled (hardware utilization upper
+    /// bound; Fig. 15's driver).
+    pub fn occupancy(&self) -> f64 {
+        if self.batches.is_empty() {
+            return 0.0;
+        }
+        let used: usize = self.batches.iter().map(Batch::ciphertexts).sum();
+        used as f64 / (self.batches.len() * self.capacity) as f64
+    }
+}
+
+/// Group the graph's PBS pipelines into level-ordered batches.
+pub fn schedule(g: &PrimGraph, capacity: usize) -> Schedule {
+    assert!(capacity > 0);
+    // Collect BR ops by level; attach their KS (dep) and SE (consumer).
+    let mut br_by_level: Vec<Vec<PrimId>> = Vec::new();
+    for op in &g.ops {
+        if PrimKind::is_blind_rotate(&op.kind) {
+            let lvl = g.level[op.id];
+            if br_by_level.len() <= lvl {
+                br_by_level.resize(lvl + 1, Vec::new());
+            }
+            br_by_level[lvl].push(op.id);
+        }
+    }
+    // SE consumers of each BR.
+    let mut se_of_br: Vec<Option<PrimId>> = vec![None; g.ops.len()];
+    for op in &g.ops {
+        if op.kind == PrimKind::SampleExtract {
+            for &d in &op.deps {
+                if PrimKind::is_blind_rotate(&g.ops[d].kind) {
+                    se_of_br[d] = Some(op.id);
+                }
+            }
+        }
+    }
+    // Linear ops grouped by level (they run on the LPU between PBS levels).
+    let mut lin_by_level: Vec<Vec<PrimId>> = Vec::new();
+    let mut loose_linear = Vec::new();
+    for op in &g.ops {
+        if PrimKind::is_linear(&op.kind) {
+            let lvl = g.level[op.id];
+            if lvl >= br_by_level.len() {
+                loose_linear.push(op.id);
+            } else {
+                if lin_by_level.len() <= lvl {
+                    lin_by_level.resize(br_by_level.len().max(lvl + 1), Vec::new());
+                }
+                lin_by_level[lvl].push(op.id);
+            }
+        }
+    }
+    lin_by_level.resize(br_by_level.len(), Vec::new());
+
+    let mut out = Schedule { batches: Vec::new(), capacity, loose_linear };
+    for (lvl, brs) in br_by_level.iter().enumerate() {
+        let mut first_of_level = true;
+        for chunk in brs.chunks(capacity) {
+            let mut batch = Batch {
+                level: lvl,
+                depends_on_prev: first_of_level && lvl > 0,
+                ..Default::default()
+            };
+            if first_of_level {
+                batch.lin_ops = lin_by_level[lvl].clone();
+            }
+            for &br in chunk {
+                // The KS feeding this BR (unique dep of BR).
+                for &d in &g.ops[br].deps {
+                    if PrimKind::is_keyswitch(&g.ops[d].kind) && !batch.ks_ops.contains(&d) {
+                        batch.ks_ops.push(d);
+                    }
+                }
+                batch.br_ops.push(br);
+                if let Some(se) = se_of_br[br] {
+                    batch.se_ops.push(se);
+                }
+            }
+            first_of_level = false;
+            out.batches.push(batch);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::lowering::lower;
+    use crate::compiler::dedup::dedup_keyswitch;
+    use crate::ir::builder::ProgramBuilder;
+
+    fn wide_program(n_luts: usize, width: usize) -> crate::ir::Program {
+        let mut b = ProgramBuilder::new("wide", width);
+        let xs = b.inputs(n_luts);
+        for x in xs {
+            let y = b.lut_fn(x, |m| m);
+            b.output(y);
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn batches_respect_capacity() {
+        let g = lower(&wide_program(100, 3));
+        let s = schedule(&g, 48);
+        assert_eq!(s.total_pbs(), 100);
+        assert_eq!(s.batches.len(), 3); // 48 + 48 + 4
+        assert!(s.batches.iter().all(|b| b.ciphertexts() <= 48));
+        assert_eq!(s.batches[2].ciphertexts(), 4);
+        // Independent (same-level) batches never stall the BRU.
+        assert!(s.batches.iter().all(|b| !b.depends_on_prev));
+    }
+
+    #[test]
+    fn dependent_levels_marked() {
+        let mut b = ProgramBuilder::new("chain", 3);
+        let x = b.input();
+        let a = b.lut_fn(x, |m| m);
+        let c = b.lut_fn(a, |m| m);
+        b.output(c);
+        let g = lower(&b.finish());
+        let s = schedule(&g, 48);
+        assert_eq!(s.batches.len(), 2);
+        assert!(!s.batches[0].depends_on_prev);
+        assert!(s.batches[1].depends_on_prev);
+    }
+
+    #[test]
+    fn ks_ops_attached_once_after_dedup() {
+        let mut b = ProgramBuilder::new("fan", 3);
+        let x = b.input();
+        for _ in 0..3 {
+            let y = b.lut_fn(x, |m| m + 1);
+            b.output(y);
+        }
+        let mut g = lower(&b.finish());
+        dedup_keyswitch(&mut g);
+        let s = schedule(&g, 48);
+        assert_eq!(s.batches.len(), 1);
+        assert_eq!(s.batches[0].ks_ops.len(), 1, "shared KS appears once");
+        assert_eq!(s.batches[0].br_ops.len(), 3);
+    }
+
+    #[test]
+    fn occupancy_reflects_padding() {
+        let g = lower(&wide_program(12, 3));
+        let s = schedule(&g, 48);
+        assert!((s.occupancy() - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,191 @@
+//! The paper's two deduplication optimizations (§V):
+//!
+//! * **KS-dedup** — when fanout applies multiple LUTs to the same value,
+//!   the key-switch result is computed once and broadcast ("reduces
+//!   key-switching operations by up to 47.12%"). Enabled by the
+//!   key-switch-first order (Observation 6).
+//! * **ACC-dedup** — programs apply the same LUT accumulator across many
+//!   tensor elements; sharing the encoded GLWE accumulator "reduces GLWE
+//!   storage requirements by 91.54%".
+
+use std::collections::HashMap;
+
+use super::lowering::{PrimGraph, PrimKind};
+use crate::params::ParamSet;
+
+#[derive(Debug, Clone, Default)]
+pub struct DedupStats {
+    pub before: usize,
+    pub after: usize,
+    pub bytes_before: usize,
+    pub bytes_after: usize,
+}
+
+impl DedupStats {
+    pub fn reduction_pct(&self) -> f64 {
+        if self.before == 0 {
+            0.0
+        } else {
+            100.0 * (self.before - self.after) as f64 / self.before as f64
+        }
+    }
+
+    pub fn bytes_reduction_pct(&self) -> f64 {
+        if self.bytes_before == 0 {
+            0.0
+        } else {
+            100.0 * (self.bytes_before - self.bytes_after) as f64 / self.bytes_before as f64
+        }
+    }
+}
+
+/// Merge KeySwitch ops that switch the same IR value: keep the first, remap
+/// all consumers of duplicates onto it. Returns before/after counts.
+pub fn dedup_keyswitch(g: &mut PrimGraph) -> DedupStats {
+    let before = g.count(PrimKind::is_keyswitch);
+    // src_value -> canonical KS prim.
+    let mut canon: HashMap<usize, usize> = HashMap::new();
+    // old prim id -> replacement (identity unless a removed duplicate).
+    let mut replace: Vec<usize> = (0..g.ops.len()).collect();
+    for op in &g.ops {
+        if let (PrimKind::KeySwitch, Some(src)) = (&op.kind, op.src_value) {
+            match canon.get(&src) {
+                Some(&keep) => {
+                    // Only merge if the duplicate has identical deps after
+                    // replacement (same producing primitive of src).
+                    let keep_deps: Vec<usize> =
+                        g.ops[keep].deps.iter().map(|&d| replace[d]).collect();
+                    let dup_deps: Vec<usize> =
+                        op.deps.iter().map(|&d| replace[d]).collect();
+                    if keep_deps == dup_deps {
+                        replace[op.id] = keep;
+                    } else {
+                        canon.insert(src, op.id);
+                    }
+                }
+                None => {
+                    canon.insert(src, op.id);
+                }
+            }
+        }
+    }
+    // Rewrite deps and drop merged ops (compact ids).
+    let mut new_id: Vec<Option<usize>> = vec![None; g.ops.len()];
+    let mut ops = Vec::with_capacity(g.ops.len());
+    let mut level = Vec::with_capacity(g.ops.len());
+    for op in &g.ops {
+        if replace[op.id] != op.id {
+            continue; // merged away
+        }
+        let mut o = op.clone();
+        o.deps = o
+            .deps
+            .iter()
+            .map(|&d| new_id[replace[d]].expect("dep ordered before use"))
+            .collect();
+        o.deps.sort_unstable();
+        o.deps.dedup();
+        let id = ops.len();
+        new_id[op.id] = Some(id);
+        o.id = id;
+        level.push(g.level[op.id]);
+        ops.push(o);
+    }
+    g.ops = ops;
+    g.level = level;
+    debug_assert!(g.validate().is_ok());
+    DedupStats {
+        before,
+        after: g.count(PrimKind::is_keyswitch),
+        bytes_before: 0,
+        bytes_after: 0,
+    }
+}
+
+/// ACC-dedup: the GLWE accumulators (encoded LUTs) a program needs. Without
+/// sharing, every blind rotation stores its own accumulator; with sharing,
+/// one per distinct table. Returns counts and byte sizes.
+pub fn acc_dedup_stats(g: &PrimGraph, p: &ParamSet) -> DedupStats {
+    let mut distinct: HashMap<u64, usize> = HashMap::new();
+    let mut total = 0usize;
+    for op in &g.ops {
+        if let PrimKind::BlindRotate { table_hash } = op.kind {
+            *distinct.entry(table_hash).or_insert(0) += 1;
+            total += 1;
+        }
+    }
+    DedupStats {
+        before: total,
+        after: distinct.len(),
+        bytes_before: total * p.glwe_bytes(),
+        bytes_after: distinct.len() * p.glwe_bytes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::lowering::lower;
+    use crate::ir::builder::ProgramBuilder;
+    use crate::params::TEST1;
+
+    #[test]
+    fn fanout_shares_one_keyswitch() {
+        let mut b = ProgramBuilder::new("fan", 3);
+        let x = b.input();
+        let o1 = b.lut_fn(x, |m| m + 1);
+        let o2 = b.lut_fn(x, |m| m + 2);
+        let o3 = b.lut_fn(x, |m| m + 3);
+        b.outputs(&[o1, o2, o3]);
+        let mut g = lower(&b.finish());
+        let stats = dedup_keyswitch(&mut g);
+        assert_eq!(stats.before, 3);
+        assert_eq!(stats.after, 1);
+        assert_eq!(g.pbs_count(), 3, "BRs untouched");
+        assert!((stats.reduction_pct() - 66.66).abs() < 0.1);
+    }
+
+    #[test]
+    fn different_values_not_merged() {
+        let mut b = ProgramBuilder::new("two", 3);
+        let x = b.input();
+        let y = b.input();
+        let o1 = b.lut_fn(x, |m| m);
+        let o2 = b.lut_fn(y, |m| m);
+        b.outputs(&[o1, o2]);
+        let mut g = lower(&b.finish());
+        let stats = dedup_keyswitch(&mut g);
+        assert_eq!((stats.before, stats.after), (2, 2));
+    }
+
+    #[test]
+    fn sequential_luts_on_same_value_name_different_results() {
+        // lut(lut(x)): the inner output is a *different* value than x, so
+        // no bogus merging.
+        let mut b = ProgramBuilder::new("seq", 3);
+        let x = b.input();
+        let a = b.lut_fn(x, |m| m);
+        let c = b.lut_fn(a, |m| m);
+        b.output(c);
+        let mut g = lower(&b.finish());
+        let stats = dedup_keyswitch(&mut g);
+        assert_eq!((stats.before, stats.after), (2, 2));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn acc_dedup_counts_distinct_tables() {
+        let mut b = ProgramBuilder::new("acc", 3);
+        let relu = crate::ir::LutTable::from_fn(3, |m| m.saturating_sub(1));
+        let xs = b.inputs(10);
+        for x in xs {
+            let y = b.lut(x, relu.clone()); // same table 10x
+            b.output(y);
+        }
+        let g = lower(&b.finish());
+        let stats = acc_dedup_stats(&g, &TEST1);
+        assert_eq!((stats.before, stats.after), (10, 1));
+        assert_eq!(stats.bytes_before, 10 * TEST1.glwe_bytes());
+        assert!((stats.bytes_reduction_pct() - 90.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,247 @@
+//! Functional executor: runs an IR program on real ciphertexts through a
+//! pluggable PBS backend (native Rust TFHE or the AOT XLA artifacts).
+//! Linear ops execute on long LWE ciphertexts exactly as the LPU would.
+
+use std::collections::HashMap;
+
+use crate::ir::{Op, Program};
+use crate::params::ParamSet;
+use crate::tfhe::encoding;
+use crate::tfhe::{LweCiphertext, PbsContext, ServerKeys};
+
+/// A PBS implementation (one bootstrap, LUT polynomial pre-encoded).
+pub trait PbsBackend {
+    fn pbs(&mut self, ct_long: &LweCiphertext, lut_poly: &[u64]) -> LweCiphertext;
+    fn params(&self) -> &ParamSet;
+}
+
+/// Native (pure-Rust) backend.
+pub struct NativePbsBackend<'k> {
+    pub ctx: PbsContext,
+    pub keys: &'k ServerKeys,
+}
+
+impl<'k> NativePbsBackend<'k> {
+    pub fn new(keys: &'k ServerKeys) -> Self {
+        Self { ctx: PbsContext::new(&keys.params), keys }
+    }
+}
+
+impl PbsBackend for NativePbsBackend<'_> {
+    fn pbs(&mut self, ct_long: &LweCiphertext, lut_poly: &[u64]) -> LweCiphertext {
+        self.ctx.pbs(ct_long, self.keys, lut_poly)
+    }
+
+    fn params(&self) -> &ParamSet {
+        &self.keys.params
+    }
+}
+
+impl PbsBackend for crate::runtime::XlaPbsBackend {
+    fn pbs(&mut self, ct_long: &LweCiphertext, lut_poly: &[u64]) -> LweCiphertext {
+        crate::runtime::XlaPbsBackend::pbs(self, ct_long, lut_poly).expect("xla pbs")
+    }
+
+    fn params(&self) -> &ParamSet {
+        &self.params
+    }
+}
+
+/// Program executor with an accumulator (LUT polynomial) cache — ACC-dedup
+/// in action: each distinct table is encoded once and shared.
+pub struct Engine<B: PbsBackend> {
+    pub backend: B,
+    lut_cache: HashMap<u64, Vec<u64>>,
+}
+
+impl<B: PbsBackend> Engine<B> {
+    pub fn new(backend: B) -> Self {
+        Self { backend, lut_cache: HashMap::new() }
+    }
+
+    /// Number of distinct accumulators encoded so far.
+    pub fn cached_accumulators(&self) -> usize {
+        self.lut_cache.len()
+    }
+
+    /// Execute `prog` on encrypted inputs; returns encrypted outputs.
+    pub fn run(&mut self, prog: &Program, inputs: &[LweCiphertext]) -> Vec<LweCiphertext> {
+        assert_eq!(inputs.len(), prog.input_count(), "input arity");
+        let p = self.backend.params().clone();
+        assert_eq!(p.width, prog.width, "program width must match params");
+        let delta = p.delta();
+        let mut vals: Vec<Option<LweCiphertext>> = vec![None; prog.nodes.len()];
+        let mut next_input = 0usize;
+        for (i, node) in prog.nodes.iter().enumerate() {
+            let out = match node {
+                Op::Input => {
+                    let ct = inputs[next_input].clone();
+                    next_input += 1;
+                    ct
+                }
+                Op::Add(a, b) => {
+                    let mut ct = vals[*a].clone().unwrap();
+                    ct.add_assign(vals[*b].as_ref().unwrap());
+                    ct
+                }
+                Op::Sub(a, b) => {
+                    let mut ct = vals[*a].clone().unwrap();
+                    ct.sub_assign(vals[*b].as_ref().unwrap());
+                    ct
+                }
+                Op::AddPlain(a, c) => {
+                    let mut ct = vals[*a].clone().unwrap();
+                    ct.plain_add_assign(c.wrapping_mul(delta));
+                    ct
+                }
+                Op::MulPlain(a, c) => {
+                    let mut ct = vals[*a].clone().unwrap();
+                    ct.scalar_mul_assign(*c);
+                    ct
+                }
+                Op::Dot { inputs: xs, weights, bias } => {
+                    let mut acc = LweCiphertext::trivial(bias.wrapping_mul(delta), p.long_dim());
+                    for (x, &w) in xs.iter().zip(weights) {
+                        if w == 0 {
+                            continue;
+                        }
+                        let mut t = vals[*x].clone().unwrap();
+                        t.scalar_mul_assign(w);
+                        acc.add_assign(&t);
+                    }
+                    acc
+                }
+                Op::Lut { input, table } => {
+                    let lut = self
+                        .lut_cache
+                        .entry(table.hash)
+                        .or_insert_with(|| {
+                            let vals = table.values.clone();
+                            encoding::make_lut_poly(&p, move |m| vals[m as usize])
+                        })
+                        .clone();
+                    self.backend.pbs(vals[*input].as_ref().unwrap(), &lut)
+                }
+                Op::BivLut { a, b, table } => {
+                    // pack = x * 2^(w/2) + y, then univariate LUT.
+                    let scale = encoding::bivariate_scale(&p) as i64;
+                    let mut packed = vals[*a].clone().unwrap();
+                    packed.scalar_mul_assign(scale);
+                    packed.add_assign(vals[*b].as_ref().unwrap());
+                    let lut = self
+                        .lut_cache
+                        .entry(table.hash)
+                        .or_insert_with(|| {
+                            let vals = table.values.clone();
+                            encoding::make_lut_poly(&p, move |m| vals[m as usize])
+                        })
+                        .clone();
+                    self.backend.pbs(&packed, &lut)
+                }
+            };
+            vals[i] = Some(out);
+        }
+        prog.outputs.iter().map(|&o| vals[o].clone().unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::ProgramBuilder;
+    use crate::ir::interp;
+    use crate::params::TEST1;
+    use crate::tfhe::pbs::{decrypt_message, encrypt_message};
+    use crate::tfhe::SecretKeys;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (SecretKeys, ServerKeys, Rng) {
+        let mut rng = Rng::new(99);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = ServerKeys::generate(&sk, &mut rng);
+        (sk, keys, rng)
+    }
+
+    #[test]
+    fn engine_matches_plaintext_interpreter() {
+        let (sk, keys, mut rng) = setup();
+        let mut b = ProgramBuilder::new("mix", 3);
+        let x = b.input();
+        let y = b.input();
+        let s = b.add(x, y);
+        let d = b.mul_plain(s, 2);
+        let r = b.lut_fn(d, |m| (m + 3) % 16);
+        let t = b.sub(r, x);
+        b.output(t);
+        let prog = b.finish();
+
+        let mut eng = Engine::new(NativePbsBackend::new(&keys));
+        for (mx, my) in [(1u64, 2u64), (3, 0), (2, 2)] {
+            let cts = vec![
+                encrypt_message(mx, &sk, &mut rng),
+                encrypt_message(my, &sk, &mut rng),
+            ];
+            let out = eng.run(&prog, &cts);
+            let expected = interp::eval(&prog, &[mx, my]);
+            let got: Vec<u64> = out.iter().map(|c| decrypt_message(c, &sk)).collect();
+            assert_eq!(got, expected, "inputs ({mx},{my})");
+        }
+    }
+
+    #[test]
+    fn dot_with_negative_weights() {
+        let (sk, keys, mut rng) = setup();
+        let mut b = ProgramBuilder::new("dot", 3);
+        let ins = b.inputs(3);
+        let d = b.dot(ins, vec![2, -1, 1], 1);
+        b.output(d);
+        let prog = b.finish();
+        let mut eng = Engine::new(NativePbsBackend::new(&keys));
+        let msgs = [3u64, 2, 1];
+        let cts: Vec<_> = msgs.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
+        let out = eng.run(&prog, &cts);
+        // 2*3 - 2 + 1 + 1 = 6
+        assert_eq!(decrypt_message(&out[0], &sk), 6);
+    }
+
+    #[test]
+    fn lut_cache_shares_accumulators() {
+        let (sk, keys, mut rng) = setup();
+        let mut b = ProgramBuilder::new("acc", 3);
+        let xs = b.inputs(4);
+        let table = crate::ir::LutTable::from_fn(3, |m| m ^ 1);
+        for x in xs {
+            let y = b.lut(x, table.clone());
+            b.output(y);
+        }
+        let prog = b.finish();
+        let mut eng = Engine::new(NativePbsBackend::new(&keys));
+        let cts: Vec<_> = (0..4).map(|m| encrypt_message(m, &sk, &mut rng)).collect();
+        let out = eng.run(&prog, &cts);
+        assert_eq!(eng.cached_accumulators(), 1, "one table -> one accumulator");
+        for (m, ct) in out.iter().enumerate() {
+            assert_eq!(decrypt_message(ct, &sk), (m as u64) ^ 1);
+        }
+    }
+
+    #[test]
+    fn bivariate_lut_executes() {
+        let (sk, keys, mut rng) = setup();
+        // width 3 -> halves of 1 bit each.
+        let mut b = ProgramBuilder::new("biv", 3);
+        let x = b.input();
+        let y = b.input();
+        let g = b.biv_lut_fn(x, y, |a, bb| a & bb);
+        b.output(g);
+        let prog = b.finish();
+        let mut eng = Engine::new(NativePbsBackend::new(&keys));
+        for (mx, my) in [(0u64, 1u64), (1, 1), (1, 0)] {
+            let cts = vec![
+                encrypt_message(mx, &sk, &mut rng),
+                encrypt_message(my, &sk, &mut rng),
+            ];
+            let out = eng.run(&prog, &cts);
+            assert_eq!(decrypt_message(&out[0], &sk), mx & my, "({mx},{my})");
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! IR -> primitive TFHE DAG, with PBS treated as a **non-atomic** op
+//! (paper Observation 6): each LUT lowers to KeySwitch -> BlindRotate ->
+//! SampleExtract so later passes can share KS results across fanout.
+
+use crate::ir::{Op, Program, ValueId};
+
+pub type PrimId = usize;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum PrimKind {
+    /// Any LPU-side linear op (add/sub/plain/dot/bivariate pack).
+    Linear,
+    /// Long -> short key switch of an IR value (LPU).
+    KeySwitch,
+    /// CMUX blind rotation against the LUT with this table hash (BRU).
+    BlindRotate { table_hash: u64 },
+    /// GLWE -> long LWE extraction (LPU).
+    SampleExtract,
+}
+
+impl PrimKind {
+    pub fn is_keyswitch(k: &PrimKind) -> bool {
+        matches!(k, PrimKind::KeySwitch)
+    }
+
+    pub fn is_blind_rotate(k: &PrimKind) -> bool {
+        matches!(k, PrimKind::BlindRotate { .. })
+    }
+
+    pub fn is_linear(k: &PrimKind) -> bool {
+        matches!(k, PrimKind::Linear)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct PrimOp {
+    pub id: PrimId,
+    pub kind: PrimKind,
+    /// Primitive dependencies (must complete first).
+    pub deps: Vec<PrimId>,
+    /// IR value this primitive produces (Linear / SampleExtract), if any.
+    pub value: Option<ValueId>,
+    /// For KeySwitch: the IR value being switched (dedup key).
+    pub src_value: Option<ValueId>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct PrimGraph {
+    pub ops: Vec<PrimOp>,
+    /// PBS level of each op (0 = before any bootstrap).
+    pub level: Vec<usize>,
+}
+
+impl PrimGraph {
+    fn push(&mut self, kind: PrimKind, deps: Vec<PrimId>, value: Option<ValueId>, src_value: Option<ValueId>) -> PrimId {
+        let id = self.ops.len();
+        let lvl = deps
+            .iter()
+            .map(|&d| self.level[d] + usize::from(PrimKind::is_blind_rotate(&self.ops[d].kind)))
+            .max()
+            .unwrap_or(0);
+        self.ops.push(PrimOp { id, kind, deps, value, src_value });
+        self.level.push(lvl);
+        id
+    }
+
+    pub fn count(&self, pred: impl Fn(&PrimKind) -> bool) -> usize {
+        self.ops.iter().filter(|o| pred(&o.kind)).count()
+    }
+
+    pub fn pbs_count(&self) -> usize {
+        self.count(PrimKind::is_blind_rotate)
+    }
+
+    /// Verify the DAG is topologically ordered and deps are in range.
+    pub fn validate(&self) -> Result<(), String> {
+        for op in &self.ops {
+            for &d in &op.deps {
+                if d >= op.id {
+                    return Err(format!("prim {} depends on later prim {d}", op.id));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Lower a validated IR program.
+pub fn lower(prog: &Program) -> PrimGraph {
+    let mut g = PrimGraph::default();
+    // Producing primitive of each IR value (None = program input, available
+    // at time zero).
+    let mut producer: Vec<Option<PrimId>> = vec![None; prog.nodes.len()];
+    let dep_prims = |producer: &[Option<PrimId>], vals: &[ValueId]| -> Vec<PrimId> {
+        let mut d: Vec<PrimId> = vals.iter().filter_map(|&v| producer[v]).collect();
+        d.sort_unstable();
+        d.dedup();
+        d
+    };
+    for (i, node) in prog.nodes.iter().enumerate() {
+        match node {
+            Op::Input => {}
+            Op::Add(..) | Op::Sub(..) | Op::AddPlain(..) | Op::MulPlain(..) | Op::Dot { .. } => {
+                let deps = dep_prims(&producer, &node.deps());
+                producer[i] = Some(g.push(PrimKind::Linear, deps, Some(i), None));
+            }
+            Op::Lut { input, table } => {
+                let deps = dep_prims(&producer, &[*input]);
+                let ks = g.push(PrimKind::KeySwitch, deps, None, Some(*input));
+                let br = g.push(
+                    PrimKind::BlindRotate { table_hash: table.hash },
+                    vec![ks],
+                    None,
+                    None,
+                );
+                producer[i] = Some(g.push(PrimKind::SampleExtract, vec![br], Some(i), None));
+            }
+            Op::BivLut { a, b, table } => {
+                // Linear pack then the usual KS -> BR -> SE.
+                let deps = dep_prims(&producer, &[*a, *b]);
+                let pack = g.push(PrimKind::Linear, deps, Some(i), None);
+                // The packed value is node i's *intermediate*; use the IR
+                // node id itself as the dedup key (each BivLut packs
+                // uniquely).
+                let ks = g.push(PrimKind::KeySwitch, vec![pack], None, Some(i));
+                let br = g.push(
+                    PrimKind::BlindRotate { table_hash: table.hash },
+                    vec![ks],
+                    None,
+                    None,
+                );
+                producer[i] = Some(g.push(PrimKind::SampleExtract, vec![br], Some(i), None));
+            }
+        }
+    }
+    debug_assert!(g.validate().is_ok());
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::ProgramBuilder;
+
+    #[test]
+    fn lut_lowers_to_three_prims() {
+        let mut b = ProgramBuilder::new("l", 3);
+        let x = b.input();
+        let y = b.lut_fn(x, |m| m);
+        b.output(y);
+        let g = lower(&b.finish());
+        assert_eq!(g.ops.len(), 3);
+        assert!(PrimKind::is_keyswitch(&g.ops[0].kind));
+        assert!(PrimKind::is_blind_rotate(&g.ops[1].kind));
+        assert_eq!(g.ops[2].kind, PrimKind::SampleExtract);
+        assert_eq!(g.level, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn levels_track_pbs_chains() {
+        let mut b = ProgramBuilder::new("chain", 3);
+        let x = b.input();
+        let a = b.lut_fn(x, |m| m);
+        let c = b.lut_fn(a, |m| m);
+        b.output(c);
+        let g = lower(&b.finish());
+        // Second KS depends on first SE -> level 1; its BR level 1; SE 2.
+        let ks2 = &g.ops[3];
+        assert!(PrimKind::is_keyswitch(&ks2.kind));
+        assert_eq!(g.level[3], 1);
+        assert_eq!(g.level[5], 2);
+    }
+
+    #[test]
+    fn linear_ops_do_not_raise_level() {
+        let mut b = ProgramBuilder::new("lin", 3);
+        let x = b.input();
+        let y = b.input();
+        let s = b.add(x, y);
+        let t = b.mul_plain(s, 2);
+        b.output(t);
+        let g = lower(&b.finish());
+        assert_eq!(g.pbs_count(), 0);
+        assert!(g.level.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn bivlut_adds_pack_linear() {
+        let mut b = ProgramBuilder::new("biv", 4);
+        let x = b.input();
+        let y = b.input();
+        let m = b.biv_lut_fn(x, y, |a, bb| a + bb);
+        b.output(m);
+        let g = lower(&b.finish());
+        assert_eq!(g.count(PrimKind::is_linear), 1);
+        assert_eq!(g.pbs_count(), 1);
+    }
+}

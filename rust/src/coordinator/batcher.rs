@@ -1,0 +1,96 @@
+//! Dynamic batcher: groups queued requests up to a capacity or a max-wait
+//! deadline — the serving-side realization of the paper's batch-size
+//! lever (Observation 7: accelerator parallelism is harvested by batching
+//! real queries).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Pull up to `capacity` items from `rx`, waiting at most `max_wait` after
+/// the first item arrives. Returns an empty vec when the channel closed.
+pub fn collect_batch<T>(rx: &Receiver<T>, capacity: usize, max_wait: Duration) -> Vec<T> {
+    let mut out = Vec::new();
+    // Block for the first element (or closure).
+    match rx.recv() {
+        Ok(item) => out.push(item),
+        Err(_) => return out,
+    }
+    let deadline = Instant::now() + max_wait;
+    while out.len() < capacity {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => out.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    out
+}
+
+/// A simple marker struct so callers can name the policy in configs.
+#[derive(Debug, Clone)]
+pub struct DynamicBatcher {
+    pub capacity: usize,
+    pub max_wait: Duration,
+}
+
+impl DynamicBatcher {
+    pub fn new(capacity: usize, max_wait: Duration) -> Self {
+        Self { capacity, max_wait }
+    }
+
+    pub fn collect<T>(&self, rx: &Receiver<T>) -> Vec<T> {
+        collect_batch(rx, self.capacity, self.max_wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn collects_up_to_capacity() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        assert_eq!(b.collect(&rx), vec![0, 1, 2, 3]);
+        assert_eq!(b.collect(&rx), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn times_out_with_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let b = DynamicBatcher::new(8, Duration::from_millis(10));
+        let batch = b.collect(&rx);
+        assert_eq!(batch, vec![1]);
+    }
+
+    #[test]
+    fn closed_channel_returns_empty() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        assert!(b.collect(&rx).is_empty());
+    }
+
+    #[test]
+    fn waits_for_late_arrivals_within_deadline() {
+        let (tx, rx) = channel();
+        let t = std::thread::spawn(move || {
+            tx.send(1).unwrap();
+            std::thread::sleep(Duration::from_millis(5));
+            tx.send(2).unwrap();
+        });
+        let b = DynamicBatcher::new(2, Duration::from_millis(200));
+        let batch = b.collect(&rx);
+        t.join().unwrap();
+        assert_eq!(batch, vec![1, 2]);
+    }
+}

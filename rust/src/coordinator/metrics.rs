@@ -1,0 +1,92 @@
+//! Serving metrics: latency distribution + throughput counters.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Debug, Default)]
+struct Inner {
+    latencies_ms: Vec<f64>,
+    queue_ms: Vec<f64>,
+    batches: usize,
+    batch_sizes: Vec<f64>,
+    requests: usize,
+    pbs_executed: usize,
+}
+
+/// Thread-safe metrics sink shared by batcher and workers.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+    started: Option<Instant>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub requests: usize,
+    pub batches: usize,
+    pub pbs_executed: usize,
+    pub mean_batch_size: f64,
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
+    pub mean_queue_ms: f64,
+    pub throughput_rps: f64,
+    pub elapsed_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
+    }
+
+    pub fn record_request(&self, queue_ms: f64, latency_ms: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.requests += 1;
+        g.queue_ms.push(queue_ms);
+        g.latencies_ms.push(latency_ms);
+    }
+
+    pub fn record_batch(&self, size: usize, pbs: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_sizes.push(size as f64);
+        g.pbs_executed += pbs;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let g = self.inner.lock().unwrap();
+        let elapsed = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+        MetricsSnapshot {
+            requests: g.requests,
+            batches: g.batches,
+            pbs_executed: g.pbs_executed,
+            mean_batch_size: stats::mean(&g.batch_sizes),
+            p50_latency_ms: stats::percentile(&g.latencies_ms, 50.0),
+            p99_latency_ms: stats::percentile(&g.latencies_ms, 99.0),
+            mean_queue_ms: stats::mean(&g.queue_ms),
+            throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
+            elapsed_s: elapsed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::new();
+        m.record_request(1.0, 10.0);
+        m.record_request(3.0, 30.0);
+        m.record_batch(2, 14);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.pbs_executed, 14);
+        assert_eq!(s.mean_batch_size, 2.0);
+        assert_eq!(s.mean_queue_ms, 2.0);
+        assert!(s.p50_latency_ms >= 10.0 && s.p99_latency_ms <= 30.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Serving coordinator — the L3 runtime frontend (vLLM-router-style):
+//! clients submit encrypted inputs for a compiled FHE program; a dynamic
+//! batcher groups them (the paper's batch-size lever, Fig. 15 /
+//! Observation 7), a worker pool executes them on the native or XLA PBS
+//! backend, and metrics report latency/throughput.
+//!
+//! Python never appears here: the XLA backend executes AOT artifacts via
+//! PJRT (see `runtime`).
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::DynamicBatcher;
+pub use metrics::Metrics;
+pub use server::{BackendKind, Coordinator, CoordinatorOptions};

@@ -1,0 +1,222 @@
+//! The coordinator proper: request intake -> dynamic batcher -> worker
+//! pool -> responses, over either PBS backend.
+//!
+//! Thread topology: callers hold a cheap `Coordinator` handle; a dispatch
+//! thread owns the batcher; worker threads own their execution engines
+//! (the `xla` crate's PJRT client is Rc-based/non-Send, so each XLA
+//! worker constructs its own backend from the artifact dir + cloned keys
+//! inside its thread).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::DynamicBatcher;
+use super::metrics::Metrics;
+use crate::compiler::{Engine, NativePbsBackend, PbsBackend};
+use crate::ir::Program;
+use crate::tfhe::{LweCiphertext, ServerKeys};
+
+/// Which PBS backend workers run.
+#[derive(Debug, Clone)]
+pub enum BackendKind {
+    /// Pure-Rust TFHE.
+    Native,
+    /// AOT JAX/Pallas artifacts via PJRT (artifact directory).
+    Xla { artifacts_dir: String },
+}
+
+#[derive(Debug, Clone)]
+pub struct CoordinatorOptions {
+    pub workers: usize,
+    pub batch_capacity: usize,
+    pub max_batch_wait: Duration,
+    pub backend: BackendKind,
+}
+
+impl Default for CoordinatorOptions {
+    fn default() -> Self {
+        Self {
+            workers: 2,
+            batch_capacity: 8,
+            max_batch_wait: Duration::from_millis(2),
+            backend: BackendKind::Native,
+        }
+    }
+}
+
+struct Request {
+    inputs: Vec<LweCiphertext>,
+    enqueued: Instant,
+    respond: Sender<Vec<LweCiphertext>>,
+}
+
+/// A running FHE model server for one compiled program.
+pub struct Coordinator {
+    intake: Sender<Request>,
+    pub metrics: Arc<Metrics>,
+    dispatch: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    pub inflight: Arc<AtomicUsize>,
+}
+
+impl Coordinator {
+    pub fn start(program: Program, keys: Arc<ServerKeys>, opts: CoordinatorOptions) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let inflight = Arc::new(AtomicUsize::new(0));
+        let (intake_tx, intake_rx) = channel::<Request>();
+        // Dispatch thread: batch then round-robin to workers.
+        let (work_txs, work_rxs): (Vec<Sender<Vec<Request>>>, Vec<Receiver<Vec<Request>>>) =
+            (0..opts.workers).map(|_| channel()).unzip();
+        let batcher = DynamicBatcher::new(opts.batch_capacity, opts.max_batch_wait);
+        let dispatch = std::thread::spawn(move || {
+            let mut next = 0usize;
+            loop {
+                let batch = batcher.collect(&intake_rx);
+                if batch.is_empty() {
+                    break; // intake closed
+                }
+                if work_txs[next % work_txs.len()].send(batch).is_err() {
+                    break;
+                }
+                next += 1;
+            }
+        });
+        let workers = work_rxs
+            .into_iter()
+            .map(|rx| {
+                let program = program.clone();
+                let keys = keys.clone();
+                let metrics = metrics.clone();
+                let inflight = inflight.clone();
+                let backend = opts.backend.clone();
+                std::thread::spawn(move || match backend {
+                    BackendKind::Native => {
+                        let engine = Engine::new(NativePbsBackend::new(&keys));
+                        worker_loop(rx, engine, &program, &metrics, &inflight);
+                    }
+                    BackendKind::Xla { artifacts_dir } => {
+                        let be = crate::runtime::XlaPbsBackend::new(
+                            &artifacts_dir,
+                            &keys.params,
+                            &keys.bsk,
+                            &keys.ksk,
+                        )
+                        .expect("xla backend");
+                        let engine = Engine::new(be);
+                        worker_loop(rx, engine, &program, &metrics, &inflight);
+                    }
+                })
+            })
+            .collect();
+        Self { intake: intake_tx, metrics, dispatch: Some(dispatch), workers, inflight }
+    }
+
+    /// Submit one encrypted query; returns the channel the response will
+    /// arrive on.
+    pub fn submit(&self, inputs: Vec<LweCiphertext>) -> Receiver<Vec<LweCiphertext>> {
+        let (tx, rx) = channel();
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        self.intake
+            .send(Request { inputs, enqueued: Instant::now(), respond: tx })
+            .expect("coordinator stopped");
+        rx
+    }
+
+    /// Graceful shutdown: close intake, drain workers.
+    pub fn shutdown(mut self) {
+        drop(self.intake);
+        if let Some(d) = self.dispatch.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop<B: PbsBackend>(
+    rx: Receiver<Vec<Request>>,
+    mut engine: Engine<B>,
+    program: &Program,
+    metrics: &Metrics,
+    inflight: &AtomicUsize,
+) {
+    while let Ok(batch) = rx.recv() {
+        let size = batch.len();
+        let pbs = program.pbs_count() * size;
+        // Record up front so snapshots taken right after the last response
+        // already see this batch.
+        metrics.record_batch(size, pbs);
+        for req in batch {
+            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            let outs = engine.run(program, &req.inputs);
+            let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+            metrics.record_request(queue_ms, latency_ms);
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            let _ = req.respond.send(outs); // client may have gone away
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::ProgramBuilder;
+    use crate::ir::interp;
+    use crate::params::TEST1;
+    use crate::tfhe::pbs::{decrypt_message, encrypt_message};
+    use crate::tfhe::SecretKeys;
+    use crate::util::rng::Rng;
+
+    fn small_program() -> Program {
+        let mut b = ProgramBuilder::new("serve", 3);
+        let x = b.input();
+        let y = b.input();
+        let s = b.add(x, y);
+        let r = b.lut_fn(s, |m| (m * 2 + 1) % 16);
+        b.output(r);
+        b.finish()
+    }
+
+    #[test]
+    fn serves_concurrent_requests_correctly() {
+        let mut rng = Rng::new(31);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+        let prog = small_program();
+        let coord = Coordinator::start(
+            prog.clone(),
+            keys,
+            CoordinatorOptions { workers: 3, batch_capacity: 4, ..Default::default() },
+        );
+        let queries: Vec<(u64, u64)> = (0..12).map(|i| (i % 6, (i * 3) % 6)).collect();
+        let mut pending = Vec::new();
+        for &(x, y) in &queries {
+            let inputs =
+                vec![encrypt_message(x, &sk, &mut rng), encrypt_message(y, &sk, &mut rng)];
+            pending.push(coord.submit(inputs));
+        }
+        for (rx, &(x, y)) in pending.iter().zip(&queries) {
+            let outs = rx.recv().expect("response");
+            let exp = interp::eval(&prog, &[x, y]);
+            assert_eq!(decrypt_message(&outs[0], &sk), exp[0], "query ({x},{y})");
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.requests, 12);
+        assert!(snap.batches >= 3, "round-robined to several batches");
+        assert_eq!(coord.inflight.load(Ordering::SeqCst), 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_clean_with_no_requests() {
+        let mut rng = Rng::new(32);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+        let coord = Coordinator::start(small_program(), keys, Default::default());
+        coord.shutdown();
+    }
+}

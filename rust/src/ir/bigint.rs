@@ -1,0 +1,203 @@
+//! Radix-decomposed big integers — the generalization of the paper's
+//! Fig. 5 middle representation: integers wider than one ciphertext's
+//! message space are held as base-2^(w/2) digit vectors, with carries
+//! resolved by LUTs. This is how Concrete represents 8/16-bit integers on
+//! narrow parameter sets and what the paper's "wider representations need
+//! fewer PBS" tradeoff is measured against.
+
+use super::builder::ProgramBuilder;
+use super::{LutTable, ValueId};
+
+/// A big integer as little-endian digits of `digit_bits` each, every digit
+/// in its own ciphertext (digit value < 2^digit_bits, stored in a width
+/// 2*digit_bits message space so sums/carries fit before normalization).
+#[derive(Debug, Clone)]
+pub struct RadixInt {
+    pub digits: Vec<ValueId>,
+    pub digit_bits: usize,
+}
+
+impl RadixInt {
+    pub fn bits(&self) -> usize {
+        self.digits.len() * self.digit_bits
+    }
+}
+
+/// Builder extensions for radix arithmetic. The builder's program width
+/// must be >= 2*digit_bits (headroom for one addition before carry
+/// normalization).
+pub struct RadixOps<'a> {
+    pub b: &'a mut ProgramBuilder,
+    pub digit_bits: usize,
+    carry_table: LutTable,
+    low_table: LutTable,
+}
+
+impl<'a> RadixOps<'a> {
+    pub fn new(b: &'a mut ProgramBuilder, digit_bits: usize) -> Self {
+        let width = b.width();
+        assert!(width >= 2 * digit_bits, "need carry headroom: width {width} < 2x{digit_bits}");
+        let radix = 1u64 << digit_bits;
+        let carry_table = LutTable::from_fn(width, move |m| m / radix);
+        let low_table = LutTable::from_fn(width, move |m| m % radix);
+        Self { b, digit_bits, carry_table, low_table }
+    }
+
+    /// Fresh encrypted input of `n_digits` digits.
+    pub fn input(&mut self, n_digits: usize) -> RadixInt {
+        RadixInt { digits: self.b.inputs(n_digits), digit_bits: self.digit_bits }
+    }
+
+    /// Full addition with carry propagation: 2 PBS per digit (carry +
+    /// low), depth = #digits (the ripple structure of Fig. 5 mid-left).
+    pub fn add(&mut self, x: &RadixInt, y: &RadixInt) -> RadixInt {
+        assert_eq!(x.digit_bits, self.digit_bits);
+        assert_eq!(x.digits.len(), y.digits.len());
+        let mut out = Vec::with_capacity(x.digits.len() + 1);
+        let mut carry: Option<ValueId> = None;
+        for (&xd, &yd) in x.digits.iter().zip(&y.digits) {
+            let mut s = self.b.add(xd, yd);
+            if let Some(c) = carry {
+                s = self.b.add(s, c);
+            }
+            // Two LUTs over the same sum share one key switch (KS-dedup).
+            carry = Some(self.b.lut(s, self.carry_table.clone()));
+            out.push(self.b.lut(s, self.low_table.clone()));
+        }
+        out.push(carry.unwrap());
+        RadixInt { digits: out, digit_bits: self.digit_bits }
+    }
+
+    /// Multiply by a small plaintext constant then renormalize digits.
+    pub fn mul_plain(&mut self, x: &RadixInt, c: u64) -> RadixInt {
+        assert!(c < (1u64 << self.digit_bits), "constant must fit one digit");
+        let mut out = Vec::with_capacity(x.digits.len() + 1);
+        let mut carry: Option<ValueId> = None;
+        for &xd in &x.digits {
+            let mut s = self.b.mul_plain(xd, c as i64);
+            if let Some(cy) = carry {
+                s = self.b.add(s, cy);
+            }
+            carry = Some(self.b.lut(s, self.carry_table.clone()));
+            out.push(self.b.lut(s, self.low_table.clone()));
+        }
+        out.push(carry.unwrap());
+        RadixInt { digits: out, digit_bits: self.digit_bits }
+    }
+
+    /// Decompose a plaintext into digits (host-side helper for tests).
+    pub fn encode(&self, v: u64, n_digits: usize) -> Vec<u64> {
+        let radix = 1u64 << self.digit_bits;
+        (0..n_digits).map(|i| (v >> (i * self.digit_bits)) % radix).collect()
+    }
+
+    /// Recompose digit values (host-side).
+    pub fn decode(&self, digits: &[u64]) -> u64 {
+        digits
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| d << (i * self.digit_bits))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::interp;
+
+    #[test]
+    fn radix_add_matches_integers() {
+        // width 3 (TEST1-compatible) -> 1-bit digits with headroom... use
+        // digit_bits=1 so carries fit: sums reach 3 < 2^(w-1)=4.
+        let mut b = ProgramBuilder::new("radd", 3);
+        let mut ops = RadixOps::new(&mut b, 1);
+        let x = ops.input(6);
+        let y = ops.input(6);
+        let z = ops.add(&x, &y);
+        let outs = z.digits.clone();
+        let (digit_bits, enc) = (ops.digit_bits, ());
+        let _ = (digit_bits, enc);
+        b.outputs(&outs);
+        let prog = b.finish();
+        for (xv, yv) in [(11u64, 22u64), (63, 63), (0, 5), (42, 21)] {
+            let mut inputs: Vec<u64> = (0..6).map(|i| (xv >> i) & 1).collect();
+            inputs.extend((0..6).map(|i| (yv >> i) & 1));
+            let out = interp::eval(&prog, &inputs);
+            let got: u64 = out.iter().enumerate().map(|(i, &d)| d << i).sum();
+            assert_eq!(got, xv + yv, "{xv}+{yv}");
+        }
+    }
+
+    #[test]
+    fn radix_add_wide_digits() {
+        // width 6 -> 3-bit digits: a 9-bit integer in 3 ciphertexts.
+        let mut b = ProgramBuilder::new("radd6", 6);
+        let mut ops = RadixOps::new(&mut b, 3);
+        let x = ops.input(3);
+        let y = ops.input(3);
+        let z = ops.add(&x, &y);
+        let outs = z.digits.clone();
+        b.outputs(&outs);
+        let prog = b.finish();
+        for (xv, yv) in [(357u64, 123u64), (511, 511), (8, 504)] {
+            let mut inputs: Vec<u64> = (0..3).map(|i| (xv >> (3 * i)) & 7).collect();
+            inputs.extend((0..3).map(|i| (yv >> (3 * i)) & 7));
+            let out = interp::eval(&prog, &inputs);
+            let got: u64 = out.iter().enumerate().map(|(i, &d)| d << (3 * i)).sum();
+            assert_eq!(got, xv + yv, "{xv}+{yv}");
+        }
+    }
+
+    #[test]
+    fn mul_plain_with_carries() {
+        let mut b = ProgramBuilder::new("rmul", 6);
+        let mut ops = RadixOps::new(&mut b, 3);
+        let x = ops.input(3);
+        let z = ops.mul_plain(&x, 5);
+        let outs = z.digits.clone();
+        b.outputs(&outs);
+        let prog = b.finish();
+        for xv in [100u64, 7, 511] {
+            let inputs: Vec<u64> = (0..3).map(|i| (xv >> (3 * i)) & 7).collect();
+            let out = interp::eval(&prog, &inputs);
+            let got: u64 = out.iter().enumerate().map(|(i, &d)| d << (3 * i)).sum();
+            assert_eq!(got, 5 * xv, "5*{xv}");
+        }
+    }
+
+    #[test]
+    fn pbs_cost_shows_width_tradeoff() {
+        // Observation 2 quantified by the library itself: fewer, wider
+        // digits need fewer bootstraps for the same logical addition.
+        let cost = |width: usize, digit_bits: usize, n_digits: usize| {
+            let mut b = ProgramBuilder::new("c", width);
+            let mut ops = RadixOps::new(&mut b, digit_bits);
+            let x = ops.input(n_digits);
+            let y = ops.input(n_digits);
+            let z = ops.add(&x, &y);
+            let outs = z.digits.clone();
+            b.outputs(&outs);
+            b.finish().pbs_count()
+        };
+        let narrow = cost(3, 1, 12); // 12-bit integer, 1-bit digits
+        let wide = cost(8, 4, 3); // 12-bit integer, 4-bit digits
+        assert!(narrow > 3 * wide, "narrow {narrow} vs wide {wide}");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let mut b = ProgramBuilder::new("ed", 6);
+        let ops = RadixOps::new(&mut b, 3);
+        let d = ops.encode(357, 3);
+        assert_eq!(d, vec![5, 4, 5]);
+        assert_eq!(ops.decode(&d), 357);
+    }
+
+    #[test]
+    #[should_panic(expected = "carry headroom")]
+    fn headroom_enforced() {
+        let mut b = ProgramBuilder::new("bad", 3);
+        let _ = RadixOps::new(&mut b, 2); // needs width >= 4
+    }
+}

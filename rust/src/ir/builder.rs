@@ -1,0 +1,145 @@
+//! Fluent builder for IR programs (what the workload generators and
+//! examples use as the "frontend").
+
+use super::{LutTable, Op, Program, ValueId};
+
+#[derive(Debug, Default)]
+pub struct ProgramBuilder {
+    prog: Program,
+}
+
+impl ProgramBuilder {
+    pub fn new(name: impl Into<String>, width: usize) -> Self {
+        Self {
+            prog: Program { name: name.into(), width, nodes: vec![], outputs: vec![] },
+        }
+    }
+
+    fn push(&mut self, op: Op) -> ValueId {
+        self.prog.nodes.push(op);
+        self.prog.nodes.len() - 1
+    }
+
+    pub fn width(&self) -> usize {
+        self.prog.width
+    }
+
+    pub fn input(&mut self) -> ValueId {
+        self.push(Op::Input)
+    }
+
+    pub fn inputs(&mut self, count: usize) -> Vec<ValueId> {
+        (0..count).map(|_| self.input()).collect()
+    }
+
+    pub fn add(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.push(Op::Add(a, b))
+    }
+
+    pub fn sub(&mut self, a: ValueId, b: ValueId) -> ValueId {
+        self.push(Op::Sub(a, b))
+    }
+
+    pub fn add_plain(&mut self, a: ValueId, c: u64) -> ValueId {
+        self.push(Op::AddPlain(a, c))
+    }
+
+    pub fn mul_plain(&mut self, a: ValueId, c: i64) -> ValueId {
+        self.push(Op::MulPlain(a, c))
+    }
+
+    pub fn dot(&mut self, inputs: Vec<ValueId>, weights: Vec<i64>, bias: u64) -> ValueId {
+        assert_eq!(inputs.len(), weights.len());
+        self.push(Op::Dot { inputs, weights, bias })
+    }
+
+    pub fn lut(&mut self, input: ValueId, table: LutTable) -> ValueId {
+        self.push(Op::Lut { input, table })
+    }
+
+    pub fn lut_fn(&mut self, input: ValueId, f: impl Fn(u64) -> u64) -> ValueId {
+        let t = LutTable::from_fn(self.prog.width, f);
+        self.lut(input, t)
+    }
+
+    pub fn biv_lut(&mut self, a: ValueId, b: ValueId, table: LutTable) -> ValueId {
+        self.push(Op::BivLut { a, b, table })
+    }
+
+    pub fn biv_lut_fn(&mut self, a: ValueId, b: ValueId, g: impl Fn(u64, u64) -> u64) -> ValueId {
+        let w = self.prog.width;
+        let half = w / 2;
+        let half_mod = 1u64 << half;
+        let t = LutTable::from_fn(w, |packed| g((packed >> half) % half_mod, packed % half_mod));
+        self.biv_lut(a, b, t)
+    }
+
+    /// ReLU with a cutoff at `zero_point` (quantized-DNN style).
+    pub fn relu(&mut self, input: ValueId, zero_point: u64) -> ValueId {
+        self.lut_fn(input, move |m| m.saturating_sub(zero_point))
+    }
+
+    /// Matrix-vector product: rows of `weights` dot the `inputs` vector.
+    pub fn matvec(&mut self, inputs: &[ValueId], weights: &[Vec<i64>], biases: &[u64]) -> Vec<ValueId> {
+        weights
+            .iter()
+            .zip(biases)
+            .map(|(row, &b)| self.dot(inputs.to_vec(), row.clone(), b))
+            .collect()
+    }
+
+    pub fn output(&mut self, v: ValueId) {
+        self.prog.outputs.push(v);
+    }
+
+    pub fn outputs(&mut self, vs: &[ValueId]) {
+        self.prog.outputs.extend_from_slice(vs);
+    }
+
+    pub fn finish(self) -> Program {
+        self.prog.validate().expect("builder produced invalid program");
+        self.prog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::interp::eval;
+
+    #[test]
+    fn build_and_eval_small_program() {
+        let mut b = ProgramBuilder::new("t", 3);
+        let x = b.input();
+        let y = b.input();
+        let s = b.add(x, y);
+        let r = b.relu(s, 3);
+        b.output(r);
+        let p = b.finish();
+        assert_eq!(eval(&p, &[1, 1]), vec![0]); // relu(2-3)=0
+        assert_eq!(eval(&p, &[4, 2]), vec![3]); // relu(6-3)=3
+    }
+
+    #[test]
+    fn matvec_builds_dots() {
+        let mut b = ProgramBuilder::new("mv", 4);
+        let ins = b.inputs(3);
+        let outs = b.matvec(&ins, &[vec![1, 2, 3], vec![-1, 0, 1]], &[0, 5]);
+        b.outputs(&outs);
+        let p = b.finish();
+        // [1,1,1] -> [6, 5] (mod 32)
+        assert_eq!(eval(&p, &[1, 1, 1]), vec![6, 5]);
+    }
+
+    #[test]
+    fn bivariate_lut_packs_halves() {
+        let mut b = ProgramBuilder::new("biv", 4); // half width 2
+        let x = b.input();
+        let y = b.input();
+        let m = b.biv_lut_fn(x, y, |a, bb| a.max(bb));
+        b.output(m);
+        let p = b.finish();
+        assert_eq!(eval(&p, &[2, 3]), vec![3]);
+        assert_eq!(eval(&p, &[3, 1]), vec![3]);
+    }
+}

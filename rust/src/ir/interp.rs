@@ -1,0 +1,106 @@
+//! Plaintext reference interpreter: the functional spec of a program.
+//! Values live in Z_{2^(width+1)} (the encoded message space including the
+//! padding bit) — exactly what encrypt -> execute -> decrypt computes.
+//!
+//! LUTs follow TFHE's true negacyclic semantics: for inputs with the
+//! padding bit set (m >= P/2), PBS returns -f(m - P/2) — programs are
+//! expected to keep live values inside [0, P/2), but the interpreter is
+//! bit-faithful either way so it can oracle the encrypted engine.
+
+use super::{Op, Program};
+
+/// Negacyclic LUT application: f(m) for m < P/2, -f(m - P/2) otherwise.
+fn lut_apply(table: &[u64], m: u64, p: u64) -> u64 {
+    let half = p / 2;
+    if m < half {
+        table[m as usize] % p
+    } else {
+        (p - table[(m - half) as usize] % p) % p
+    }
+}
+
+/// Evaluate `prog` on plaintext inputs (in program order of `Op::Input`).
+pub fn eval(prog: &Program, inputs: &[u64]) -> Vec<u64> {
+    let p = 1u64 << (prog.width + 1);
+    let mut vals = vec![0u64; prog.nodes.len()];
+    let mut next_input = 0;
+    for (i, n) in prog.nodes.iter().enumerate() {
+        vals[i] = match n {
+            Op::Input => {
+                let v = inputs[next_input] % p;
+                next_input += 1;
+                v
+            }
+            Op::Add(a, b) => (vals[*a] + vals[*b]) % p,
+            Op::Sub(a, b) => (vals[*a] + p - vals[*b]) % p,
+            Op::AddPlain(a, c) => (vals[*a] + c) % p,
+            Op::MulPlain(a, c) => {
+                let v = (vals[*a] as i128) * (*c as i128);
+                v.rem_euclid(p as i128) as u64
+            }
+            Op::Dot { inputs: xs, weights, bias } => {
+                let mut acc = *bias as i128;
+                for (x, w) in xs.iter().zip(weights) {
+                    acc += (vals[*x] as i128) * (*w as i128);
+                }
+                acc.rem_euclid(p as i128) as u64
+            }
+            Op::Lut { input, table } => lut_apply(&table.values, vals[*input] % p, p),
+            Op::BivLut { a, b, table } => {
+                // Faithful to the encrypted engine: pack = a * 2^(w/2) + b
+                // without masking (ciphertext values cannot be masked);
+                // callers must keep both operands below 2^(w/2).
+                let half = prog.width / 2;
+                let packed = ((vals[*a] << half) + vals[*b]) % p;
+                lut_apply(&table.values, packed, p)
+            }
+        };
+    }
+    prog.outputs.iter().map(|&o| vals[o]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::LutTable;
+
+    #[test]
+    fn wrapping_semantics() {
+        let prog = Program {
+            name: "w".into(),
+            width: 3, // P = 16
+            nodes: vec![Op::Input, Op::MulPlain(0, -1), Op::AddPlain(1, 20)],
+            outputs: vec![2],
+        };
+        // -3 + 20 = 17 = 1 mod 16
+        assert_eq!(eval(&prog, &[3]), vec![1]);
+    }
+
+    #[test]
+    fn lut_indexes_modulo() {
+        let t = LutTable::from_fn(3, |m| 15 - m);
+        let prog = Program {
+            name: "l".into(),
+            width: 3,
+            nodes: vec![Op::Input, Op::Lut { input: 0, table: t }],
+            outputs: vec![1],
+        };
+        assert_eq!(eval(&prog, &[0]), vec![15]);
+        assert_eq!(eval(&prog, &[18]), vec![13]); // 18 mod 16 = 2
+    }
+
+    #[test]
+    fn lut_negacyclic_past_padding_bit() {
+        let t = LutTable::from_fn(3, |m| m + 3);
+        let prog = Program {
+            name: "pad".into(),
+            width: 3,
+            nodes: vec![Op::Input, Op::Lut { input: 0, table: t }],
+            outputs: vec![1],
+        };
+        // m = 8 = P/2: padding bit set -> -f(0) = -(3) = 13 mod 16.
+        assert_eq!(eval(&prog, &[8]), vec![13]);
+        // m = 9 -> -f(1) = -4 = 12.
+        assert_eq!(eval(&prog, &[9]), vec![12]);
+    }
+}

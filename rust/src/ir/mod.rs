@@ -1,0 +1,202 @@
+//! Integer tensor IR — the FHELinAlg-like program representation the
+//! compiler consumes (paper §V: "we process programs in MLIR's FHELinAlg
+//! dialect"). A program is a DAG of integer-valued nodes; the only
+//! PBS-requiring op is the (univariate or bivariate) LUT, everything else
+//! is linear and bootstrap-free (the multi-bit TFHE structure of Fig. 2b).
+
+pub mod bigint;
+pub mod builder;
+pub mod interp;
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+/// Node index within a [`Program`].
+pub type ValueId = usize;
+
+/// A lookup table: the function values f(0..2^(width+1)) (pre-encoding).
+/// Tables are hash-identified so ACC-dedup can share accumulators.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LutTable {
+    pub values: Arc<Vec<u64>>,
+    pub hash: u64,
+}
+
+impl LutTable {
+    pub fn new(values: Vec<u64>) -> Self {
+        let mut h = DefaultHasher::new();
+        values.hash(&mut h);
+        Self { values: Arc::new(values), hash: h.finish() }
+    }
+
+    pub fn from_fn(width: usize, f: impl Fn(u64) -> u64) -> Self {
+        let p = 1u64 << (width + 1);
+        Self::new((0..p).map(|m| f(m) % p).collect())
+    }
+}
+
+/// IR operations. `Plain` operands are compile-time constants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Encrypted program input.
+    Input,
+    /// Homomorphic addition of two ciphertexts (LPU, no PBS).
+    Add(ValueId, ValueId),
+    /// Homomorphic subtraction (LPU).
+    Sub(ValueId, ValueId),
+    /// Add a plaintext constant (LPU).
+    AddPlain(ValueId, u64),
+    /// Multiply by a small plaintext constant (LPU).
+    MulPlain(ValueId, i64),
+    /// Linear combination sum_i w_i * x_i (+ bias) — one LPU pass; this is
+    /// how matmul/conv rows lower (paper Fig. 2b step 4).
+    Dot { inputs: Vec<ValueId>, weights: Vec<i64>, bias: u64 },
+    /// Univariate LUT via PBS (paper Fig. 2b step 5).
+    Lut { input: ValueId, table: LutTable },
+    /// Bivariate LUT: linear pack (x * 2^(w/2) + y) then univariate LUT
+    /// (paper footnote 4). Costs one PBS.
+    BivLut { a: ValueId, b: ValueId, table: LutTable },
+}
+
+impl Op {
+    /// Ciphertext operands of this op.
+    pub fn deps(&self) -> Vec<ValueId> {
+        match self {
+            Op::Input => vec![],
+            Op::Add(a, b) | Op::Sub(a, b) => vec![*a, *b],
+            Op::AddPlain(a, _) | Op::MulPlain(a, _) => vec![*a],
+            Op::Dot { inputs, .. } => inputs.clone(),
+            Op::Lut { input, .. } => vec![*input],
+            Op::BivLut { a, b, .. } => vec![*a, *b],
+        }
+    }
+
+    /// Does this op require a bootstrap?
+    pub fn needs_pbs(&self) -> bool {
+        matches!(self, Op::Lut { .. } | Op::BivLut { .. })
+    }
+}
+
+/// A compiled-from-frontend FHE program.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub name: String,
+    /// Message width in bits (excluding padding).
+    pub width: usize,
+    pub nodes: Vec<Op>,
+    pub outputs: Vec<ValueId>,
+}
+
+impl Program {
+    /// Number of PBS operations (the runtime-dominating count, §II-B).
+    pub fn pbs_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.needs_pbs()).count()
+    }
+
+    /// Number of linear (LPU-only) ops.
+    pub fn linear_count(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| !n.needs_pbs() && !matches!(n, Op::Input))
+            .count()
+    }
+
+    pub fn input_count(&self) -> usize {
+        self.nodes.iter().filter(|n| matches!(n, Op::Input)).count()
+    }
+
+    /// Validate the DAG: deps precede uses, outputs exist, LUT tables sized.
+    pub fn validate(&self) -> Result<(), String> {
+        let p = 1usize << (self.width + 1);
+        for (i, n) in self.nodes.iter().enumerate() {
+            for d in n.deps() {
+                if d >= i {
+                    return Err(format!("node {i} depends on later node {d}"));
+                }
+            }
+            match n {
+                Op::Lut { table, .. } | Op::BivLut { table, .. } => {
+                    if table.values.len() != p {
+                        return Err(format!(
+                            "node {i}: table len {} != {p}",
+                            table.values.len()
+                        ));
+                    }
+                }
+                Op::Dot { inputs, weights, .. } => {
+                    if inputs.len() != weights.len() {
+                        return Err(format!("node {i}: dot arity mismatch"));
+                    }
+                }
+                _ => {}
+            }
+        }
+        for &o in &self.outputs {
+            if o >= self.nodes.len() {
+                return Err(format!("output {o} out of range"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Longest PBS-to-PBS dependency chain (critical path in bootstraps);
+    /// determines how much batching can help (paper Fig. 15).
+    pub fn pbs_depth(&self) -> usize {
+        let mut depth = vec![0usize; self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            let d = n.deps().iter().map(|&x| depth[x]).max().unwrap_or(0);
+            depth[i] = d + if n.needs_pbs() { 1 } else { 0 };
+        }
+        self.outputs.iter().map(|&o| depth[o]).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_table_hash_dedups() {
+        let a = LutTable::from_fn(3, |m| m + 1);
+        let b = LutTable::from_fn(3, |m| m + 1);
+        let c = LutTable::from_fn(3, |m| m + 2);
+        assert_eq!(a.hash, b.hash);
+        assert_ne!(a.hash, c.hash);
+        assert_eq!(a.values.len(), 16);
+    }
+
+    #[test]
+    fn validate_catches_forward_refs() {
+        let prog = Program {
+            name: "bad".into(),
+            width: 3,
+            nodes: vec![Op::Add(1, 1), Op::Input],
+            outputs: vec![0],
+        };
+        assert!(prog.validate().is_err());
+    }
+
+    #[test]
+    fn counts_and_depth() {
+        let t = LutTable::from_fn(3, |m| m);
+        let prog = Program {
+            name: "p".into(),
+            width: 3,
+            nodes: vec![
+                Op::Input,                              // 0
+                Op::Input,                              // 1
+                Op::Add(0, 1),                          // 2
+                Op::Lut { input: 2, table: t.clone() }, // 3
+                Op::Lut { input: 3, table: t.clone() }, // 4
+                Op::MulPlain(4, 2),                     // 5
+            ],
+            outputs: vec![5],
+        };
+        prog.validate().unwrap();
+        assert_eq!(prog.pbs_count(), 2);
+        assert_eq!(prog.linear_count(), 2);
+        assert_eq!(prog.input_count(), 2);
+        assert_eq!(prog.pbs_depth(), 2);
+    }
+}

@@ -1,0 +1,36 @@
+//! # Taurus — multi-bit TFHE acceleration, reproduced as a full system
+//!
+//! This crate reproduces the system described in *"A Scalable Architecture
+//! for Efficient Multi-bit Fully Homomorphic Encryption"* (Ma, Xu, Wills).
+//! It contains:
+//!
+//! - [`tfhe`] — a from-scratch multi-bit TFHE library (LWE/GLWE/GGSW,
+//!   programmable bootstrapping, key switching) — the cryptographic
+//!   substrate and the functional CPU reference.
+//! - [`params`] — parameter presets for every paper workload and the
+//!   security-frontier model (paper Fig. 6).
+//! - [`ir`] / [`compiler`] — an FHELinAlg-like integer tensor IR and the
+//!   paper's compiler: lowering with keyswitch-first PBS, KS-dedup,
+//!   ACC-dedup, and 48-ciphertext batch scheduling.
+//! - [`arch`] — the Taurus accelerator cycle-level model (BRU/LPU clusters,
+//!   heterogeneous FFT units, HBM bandwidth, buffers) plus the
+//!   Morphling-style XPU baseline and the area/power model.
+//! - [`baselines`] — calibrated CPU/GPU cost models and prior-ASIC data.
+//! - [`workloads`] — generators for the paper's seven evaluation workloads.
+//! - [`runtime`] — PJRT (XLA) execution of AOT-compiled JAX/Pallas
+//!   artifacts from the Rust request path.
+//! - [`coordinator`] — a threaded FHE-inference serving frontend (router,
+//!   dynamic batcher, metrics).
+//! - [`eval`] — regenerates every table and figure of the paper.
+
+pub mod util;
+pub mod params;
+pub mod tfhe;
+pub mod ir;
+pub mod compiler;
+pub mod arch;
+pub mod baselines;
+pub mod workloads;
+pub mod runtime;
+pub mod coordinator;
+pub mod eval;

@@ -1,0 +1,245 @@
+//! `taurus` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   eval [--all | --exp <id>] [--out results] [--clusters N] [--rr N]
+//!       regenerate the paper's tables/figures (ids: 1..4, 5, 6, 13a,
+//!       13b, 14, 15, 16, obs5, dedup, ablation)
+//!   run <workload> [--batch B]      simulate one Table II workload
+//!   serve [--backend native|xla] [--workers N] [--requests R]
+//!       start the serving coordinator on the quickstart program and
+//!       drive R encrypted requests through it
+//!   params                          print all parameter sets
+//!   selftest                        native + XLA PBS smoke test
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use taurus::arch::TaurusConfig;
+use taurus::coordinator::{BackendKind, Coordinator, CoordinatorOptions};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::params;
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{make_lut_poly, PbsContext, SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+use taurus::{baselines, compiler, eval, workloads};
+
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+    positional: Vec<String>,
+}
+
+fn parse_args() -> Args {
+    let mut args = std::env::args().skip(1);
+    let cmd = args.next().unwrap_or_else(|| "help".into());
+    let mut flags = Vec::new();
+    let mut positional = Vec::new();
+    let rest: Vec<String> = args.collect();
+    let mut i = 0;
+    while i < rest.len() {
+        if let Some(name) = rest[i].strip_prefix("--") {
+            let val = if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                i += 1;
+                rest[i].clone()
+            } else {
+                "true".into()
+            };
+            flags.push((name.to_string(), val));
+        } else {
+            positional.push(rest[i].clone());
+        }
+        i += 1;
+    }
+    Args { cmd, flags, positional }
+}
+
+impl Args {
+    fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.iter().rev().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    fn usize_flag(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn config_from(args: &Args) -> TaurusConfig {
+    let mut cfg = TaurusConfig::default();
+    cfg.clusters = args.usize_flag("clusters", cfg.clusters);
+    cfg.rr_ciphertexts = args.usize_flag("rr", cfg.rr_ciphertexts);
+    cfg.acc_buffer_kb = args.usize_flag("acc-kb", cfg.acc_buffer_kb);
+    cfg
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    match args.cmd.as_str() {
+        "eval" => cmd_eval(&args),
+        "run" => cmd_run(&args),
+        "serve" => cmd_serve(&args),
+        "params" => cmd_params(),
+        "selftest" => cmd_selftest(&args),
+        _ => {
+            println!(
+                "taurus — multi-bit TFHE acceleration stack (paper reproduction)\n\
+                 usage: taurus <eval|run|serve|params|selftest> [flags]\n\
+                 see rust/src/main.rs header for flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = config_from(args);
+    let out = std::path::PathBuf::from(args.flag("out").unwrap_or("results"));
+    std::fs::create_dir_all(&out)?;
+    if let Some(id) = args.flag("exp").or_else(|| args.flag("table")).or_else(|| args.flag("fig"))
+    {
+        match eval::run_one(id, &cfg) {
+            Some(t) => {
+                println!("{}", t.render());
+                t.write_csv(out.join(format!("{id}.csv")))?;
+            }
+            None => bail!("unknown experiment id {id} (known: {:?})", eval::ALL_IDS),
+        }
+    } else {
+        // --all (default)
+        let report = eval::run_all(&cfg, &out);
+        println!("{report}");
+        println!("wrote CSVs + report.txt to {}", out.display());
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let name = args.positional.first().map(String::as_str).unwrap_or("CNN-20 (PTQ)");
+    let batch = args.usize_flag("batch", 1);
+    let Some(w) = workloads::by_name(name) else {
+        bail!(
+            "unknown workload {name}; known: {:?}",
+            workloads::all().iter().map(|w| w.name).collect::<Vec<_>>()
+        )
+    };
+    let cfg = config_from(args);
+    let prog = (w.build)(batch);
+    let c = compiler::compile(&prog, w.params, cfg.batch_capacity());
+    let r = taurus::arch::simulate(&c, &cfg);
+    let cpu = baselines::cpu_model::program_seconds(&c, &baselines::EPYC_7R13);
+    println!("workload       : {} (batch {batch})", w.name);
+    println!("params         : {} n={} N={} width={}", w.params.name, w.params.n, w.params.big_n, w.params.width);
+    println!("PBS count      : {}", prog.pbs_count());
+    println!("PBS depth      : {}", prog.pbs_depth());
+    println!("KS-dedup       : {} -> {} ({:.2}%)", c.ks_dedup.before, c.ks_dedup.after, c.ks_dedup.reduction_pct());
+    println!("ACC-dedup      : {:.2}% storage saved", c.acc_dedup.bytes_reduction_pct());
+    println!("Taurus runtime : {:.3} ms (paper: {} ms)", r.seconds * 1e3, w.paper_taurus_ms);
+    println!("utilization    : {:.1}%", r.utilization * 100.0);
+    println!("avg/peak BW    : {:.0} / {:.0} GB/s", r.avg_bw_gbps, r.peak_bw_gbps);
+    println!("CPU model      : {:.2} s (paper: {} s)  => {:.0}x", cpu, w.paper_cpu_s, cpu / r.seconds);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let workers = args.usize_flag("workers", 2);
+    let requests = args.usize_flag("requests", 16);
+    let backend = match args.flag("backend").unwrap_or("native") {
+        "xla" => BackendKind::Xla { artifacts_dir: "artifacts".into() },
+        _ => BackendKind::Native,
+    };
+    // Quickstart program: relu(2x + y + 1) at TEST1.
+    let mut b = ProgramBuilder::new("serve-demo", params::TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.dot(vec![x, y], vec![2, 1], 1);
+    let r = b.relu(d, 3);
+    b.output(r);
+    let prog = b.finish();
+
+    let mut rng = Rng::new(2077);
+    println!("keygen (TEST1)...");
+    let sk = SecretKeys::generate(&params::TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let coord = Coordinator::start(
+        prog.clone(),
+        keys,
+        CoordinatorOptions { workers, backend, ..Default::default() },
+    );
+    println!("serving {requests} encrypted requests on {workers} workers...");
+    let mut pending = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..requests {
+        let (mx, my) = ((i as u64) % 4, (i as u64 * 3) % 4);
+        expected.push(taurus::ir::interp::eval(&prog, &[mx, my])[0]);
+        let inputs = vec![encrypt_message(mx, &sk, &mut rng), encrypt_message(my, &sk, &mut rng)];
+        pending.push(coord.submit(inputs));
+    }
+    let mut correct = 0;
+    for (rx, exp) in pending.iter().zip(&expected) {
+        let outs = rx.recv()?;
+        correct += u64::from(decrypt_message(&outs[0], &sk) == *exp);
+    }
+    let snap = coord.metrics.snapshot();
+    println!("correct        : {correct}/{requests}");
+    println!("throughput     : {:.1} req/s", snap.throughput_rps);
+    println!("p50 / p99      : {:.2} / {:.2} ms", snap.p50_latency_ms, snap.p99_latency_ms);
+    println!("mean batch size: {:.2} ({} batches)", snap.mean_batch_size, snap.batches);
+    println!("PBS executed   : {}", snap.pbs_executed);
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_params() -> Result<()> {
+    use taurus::util::table::Table;
+    let mut t = Table::new(
+        "Parameter sets",
+        &["name", "n", "N", "k", "bsk B/l", "ks B/l", "width", "security bits"],
+    );
+    for p in [&params::TEST1, &params::TEST2]
+        .into_iter()
+        .chain(params::PAPER_SETS.into_iter())
+    {
+        t.row(vec![
+            p.name.into(),
+            p.n.to_string(),
+            p.big_n.to_string(),
+            p.k.to_string(),
+            format!("2^{}/{}", p.bsk_base_log, p.bsk_level),
+            format!("2^{}/{}", p.ks_base_log, p.ks_level),
+            p.width.to_string(),
+            format!("{:.0}", params::security::security_level(p.n, p.lwe_noise)),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let mut rng = Rng::new(1);
+    let sk = SecretKeys::generate(&params::TEST1, &mut rng);
+    let keys = ServerKeys::generate(&sk, &mut rng);
+    let mut ctx = PbsContext::new(&params::TEST1);
+    let lut = make_lut_poly(&params::TEST1, |m| (m * m) % 16);
+    let mut ok = true;
+    for m in 0..8 {
+        let ct = encrypt_message(m, &sk, &mut rng);
+        let out = ctx.pbs(&ct, &keys, &lut);
+        let got = decrypt_message(&out, &sk);
+        if got != (m * m) % 16 {
+            println!("native FAIL m={m} got {got}");
+            ok = false;
+        }
+    }
+    println!("native PBS: {}", if ok { "OK" } else { "FAIL" });
+    let artifacts = args.flag("artifacts").unwrap_or("artifacts");
+    if std::path::Path::new(artifacts).join("manifest.json").exists() {
+        let be = taurus::runtime::XlaPbsBackend::new(artifacts, &params::TEST1, &keys.bsk, &keys.ksk)?;
+        let ct = encrypt_message(5, &sk, &mut rng);
+        let out = be.pbs(&ct, &lut)?;
+        let got = decrypt_message(&out, &sk);
+        println!("xla PBS   : {}", if got == 9 { "OK" } else { "FAIL" });
+    } else {
+        println!("xla PBS   : skipped (run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,293 @@
+//! TFHE parameter sets.
+//!
+//! Mirrors `python/compile/params.py` exactly (the AOT artifacts bake these
+//! shapes in) and adds the paper's Table II evaluation parameter sets plus
+//! the security-frontier model of Fig. 6.
+
+pub mod security;
+
+/// A full multi-bit TFHE parameter set. Conventions are documented in
+/// `python/compile/params.py` and DESIGN.md; torus modulus is always 2^64.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSet {
+    pub name: &'static str,
+    /// LWE (short) dimension n.
+    pub n: usize,
+    /// GLWE polynomial degree N (power of two).
+    pub big_n: usize,
+    /// GLWE dimension k.
+    pub k: usize,
+    /// PBS gadget decomposition: base 2^bsk_base_log, bsk_level digits.
+    pub bsk_base_log: usize,
+    pub bsk_level: usize,
+    /// Key-switch gadget decomposition.
+    pub ks_base_log: usize,
+    pub ks_level: usize,
+    /// Message width in bits (excluding the padding bit).
+    pub width: usize,
+    /// Noise stddevs as fractions of the torus.
+    pub lwe_noise: f64,
+    pub glwe_noise: f64,
+}
+
+impl ParamSet {
+    pub const fn half_n(&self) -> usize {
+        self.big_n / 2
+    }
+
+    /// Long (extracted) LWE dimension k*N.
+    pub const fn long_dim(&self) -> usize {
+        self.k * self.big_n
+    }
+
+    /// Message space including the padding bit.
+    pub const fn plaintext_modulus(&self) -> u64 {
+        1u64 << (self.width + 1)
+    }
+
+    /// Encoding scale: message m is encoded as m * delta.
+    pub const fn delta(&self) -> u64 {
+        1u64 << (64 - self.width - 1)
+    }
+
+    /// GGSW rows: (k+1) * bsk_level.
+    pub const fn ggsw_rows(&self) -> usize {
+        (self.k + 1) * self.bsk_level
+    }
+
+    /// Size of one ciphertext at rest (long LWE), bytes.
+    pub const fn lwe_bytes(&self) -> usize {
+        (self.long_dim() + 1) * 8
+    }
+
+    /// Size of the bootstrapping key, bytes (torus domain).
+    pub const fn bsk_bytes(&self) -> usize {
+        self.n * self.ggsw_rows() * (self.k + 1) * self.big_n * 8
+    }
+
+    /// Size of the key-switching key, bytes.
+    pub const fn ksk_bytes(&self) -> usize {
+        self.long_dim() * self.ks_level * (self.n + 1) * 8
+    }
+
+    /// Size of one GLWE accumulator, bytes.
+    pub const fn glwe_bytes(&self) -> usize {
+        (self.k + 1) * self.big_n * 8
+    }
+
+    /// Complex BSK multiplications streamed per blind rotation (the
+    /// paper's unit in §IV-A: each BRU performs 512 per cycle).
+    pub const fn bsk_mults_per_pbs(&self) -> u64 {
+        (self.n * self.ggsw_rows() * (self.k + 1) * self.half_n()) as u64
+    }
+}
+
+/// Fast functional-test set — must match python TEST1 bit-for-bit.
+pub const TEST1: ParamSet = ParamSet {
+    name: "test1",
+    n: 128,
+    big_n: 512,
+    k: 1,
+    bsk_base_log: 8,
+    bsk_level: 3,
+    ks_base_log: 4,
+    ks_level: 6,
+    width: 3,
+    lwe_noise: 2.9802322387695312e-8,  // 2^-25
+    glwe_noise: 9.094947017729282e-13, // 2^-40
+};
+
+/// Wider functional-test set (python TEST2).
+pub const TEST2: ParamSet = ParamSet {
+    name: "test2",
+    n: 256,
+    big_n: 2048,
+    k: 1,
+    bsk_base_log: 12,
+    bsk_level: 2,
+    ks_base_log: 4,
+    ks_level: 6,
+    width: 5,
+    lwe_noise: 9.313225746154785e-10,  // 2^-30
+    glwe_noise: 2.842170943040401e-14, // 2^-45
+};
+
+// ---------------------------------------------------------------------------
+// Paper Table II parameter sets: `Workload n, (N, k), Width`.
+// Decomposition bases/levels follow Concrete-style choices for each width;
+// noise follows the 128-bit security frontier (params::security).
+// ---------------------------------------------------------------------------
+
+pub const CNN20: ParamSet = ParamSet {
+    name: "cnn20",
+    n: 737,
+    big_n: 2048,
+    k: 1,
+    bsk_base_log: 23,
+    bsk_level: 1,
+    ks_base_log: 4,
+    ks_level: 6,
+    width: 6,
+    lwe_noise: 1.5e-6,
+    glwe_noise: 3.2e-16,
+};
+
+pub const CNN50: ParamSet = ParamSet {
+    name: "cnn50",
+    n: 828,
+    big_n: 4096,
+    k: 1,
+    bsk_base_log: 22,
+    bsk_level: 1,
+    ks_base_log: 4,
+    ks_level: 4,
+    width: 6,
+    lwe_noise: 1.5e-6,
+    glwe_noise: 2.2e-17,
+};
+
+pub const DECISION_TREE: ParamSet = ParamSet {
+    name: "decision_tree",
+    n: 1070,
+    big_n: 65536,
+    k: 1,
+    bsk_base_log: 15,
+    bsk_level: 2,
+    ks_base_log: 4,
+    ks_level: 6,
+    width: 9,
+    lwe_noise: 3.2e-8,
+    glwe_noise: 2.2e-19,
+};
+
+pub const GPT2: ParamSet = ParamSet {
+    name: "gpt2",
+    n: 1003,
+    big_n: 32768,
+    k: 1,
+    bsk_base_log: 15,
+    bsk_level: 2,
+    ks_base_log: 4,
+    ks_level: 5,
+    width: 6,
+    lwe_noise: 2.7e-7,
+    glwe_noise: 2.2e-19,
+};
+
+pub const GPT2_12HEAD: ParamSet = ParamSet {
+    name: "gpt2_12head",
+    n: 1009,
+    big_n: 32768,
+    k: 1,
+    bsk_base_log: 15,
+    bsk_level: 2,
+    ks_base_log: 4,
+    ks_level: 5,
+    width: 6,
+    lwe_noise: 2.5e-7,
+    glwe_noise: 2.2e-19,
+};
+
+pub const KNN: ParamSet = ParamSet {
+    name: "knn",
+    n: 1058,
+    big_n: 65536,
+    k: 1,
+    bsk_base_log: 15,
+    bsk_level: 2,
+    ks_base_log: 4,
+    ks_level: 6,
+    width: 9,
+    lwe_noise: 3.2e-8,
+    glwe_noise: 2.2e-19,
+};
+
+pub const XGBOOST: ParamSet = ParamSet {
+    name: "xgboost",
+    n: 1025,
+    big_n: 32768,
+    k: 1,
+    bsk_base_log: 15,
+    bsk_level: 2,
+    ks_base_log: 4,
+    ks_level: 5,
+    width: 8,
+    lwe_noise: 7.0e-8,
+    glwe_noise: 2.2e-19,
+};
+
+/// All paper evaluation sets (Table II order).
+pub const PAPER_SETS: [&ParamSet; 7] =
+    [&CNN20, &CNN50, &DECISION_TREE, &GPT2, &GPT2_12HEAD, &KNN, &XGBOOST];
+
+/// Look up any named parameter set.
+pub fn by_name(name: &str) -> Option<&'static ParamSet> {
+    match name {
+        "test1" => Some(&TEST1),
+        "test2" => Some(&TEST2),
+        "cnn20" => Some(&CNN20),
+        "cnn50" => Some(&CNN50),
+        "decision_tree" => Some(&DECISION_TREE),
+        "gpt2" => Some(&GPT2),
+        "gpt2_12head" => Some(&GPT2_12HEAD),
+        "knn" => Some(&KNN),
+        "xgboost" => Some(&XGBOOST),
+        _ => None,
+    }
+}
+
+/// Select a parameter set for a program bit width (compiler entry point).
+/// Mirrors the paper's observation that wider widths force larger (n, N)
+/// along the 128-bit frontier (Fig. 6).
+pub fn select_for_width(width: usize) -> &'static ParamSet {
+    match width {
+        0..=3 => &TEST1, // unit-test scale
+        4..=5 => &TEST2,
+        6 => &GPT2,
+        7 => &GPT2_12HEAD,
+        8 => &XGBOOST,
+        _ => &DECISION_TREE,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_quantities_test1() {
+        assert_eq!(TEST1.half_n(), 256);
+        assert_eq!(TEST1.long_dim(), 512);
+        assert_eq!(TEST1.plaintext_modulus(), 16);
+        assert_eq!(TEST1.delta(), 1 << 60);
+        assert_eq!(TEST1.ggsw_rows(), 6);
+    }
+
+    #[test]
+    fn paper_sets_match_table_ii() {
+        assert_eq!(CNN20.n, 737);
+        assert_eq!(CNN20.big_n, 2048);
+        assert_eq!(DECISION_TREE.big_n, 65536);
+        assert_eq!(DECISION_TREE.width, 9);
+        assert_eq!(GPT2.n, 1003);
+        for p in PAPER_SETS {
+            assert_eq!(p.k, 1, "paper: wide-width TFHE sets k=1 (§III-B)");
+            assert!(p.big_n.is_power_of_two());
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("gpt2").unwrap().n, 1003);
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn key_sizes_grow_with_width() {
+        // The paper's §I claim: evaluation keys grow 4-60x with width.
+        let small = CNN20.bsk_bytes() + CNN20.ksk_bytes();
+        let big = DECISION_TREE.bsk_bytes() + DECISION_TREE.ksk_bytes();
+        let ratio = big as f64 / small as f64;
+        assert!(ratio > 4.0, "key growth ratio {ratio}");
+    }
+}

@@ -1,0 +1,86 @@
+//! Artifact manifest: maps logical computation names (e.g. `blind_rotate`,
+//! `keyswitch`) + parameter-set tags to HLO text files under `artifacts/`.
+//!
+//! The manifest is written by `python/compile/aot.py` as a small JSON file;
+//! we parse it with the dependency-free reader in [`crate::util::json`].
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::JsonValue;
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// Logical name, e.g. `"blind_rotate"`.
+    pub name: String,
+    /// Parameter-set tag, e.g. `"test1"`.
+    pub param_tag: String,
+    /// Path to the HLO text file.
+    pub path: PathBuf,
+    /// Input descriptions `(name, dtype, shape)` as recorded by aot.py.
+    pub inputs: Vec<(String, String, Vec<usize>)>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    pub artifacts: Vec<Artifact>,
+    by_key: HashMap<(String, String), usize>,
+}
+
+impl ArtifactManifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let v = JsonValue::parse(&text).context("parsing manifest.json")?;
+        let mut out = ArtifactManifest::default();
+        let arr = v
+            .get("artifacts")
+            .and_then(JsonValue::as_array)
+            .ok_or_else(|| anyhow!("manifest.json: missing `artifacts` array"))?;
+        for a in arr {
+            let name = a
+                .get("name")
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let param_tag = a
+                .get("param_tag")
+                .and_then(JsonValue::as_str)
+                .unwrap_or("default")
+                .to_string();
+            let file = a
+                .get("file")
+                .and_then(JsonValue::as_str)
+                .ok_or_else(|| anyhow!("artifact missing file"))?;
+            let mut inputs = Vec::new();
+            if let Some(ins) = a.get("inputs").and_then(JsonValue::as_array) {
+                for i in ins {
+                    let iname = i.get("name").and_then(JsonValue::as_str).unwrap_or("").to_string();
+                    let dtype = i.get("dtype").and_then(JsonValue::as_str).unwrap_or("").to_string();
+                    let shape = i
+                        .get("shape")
+                        .and_then(JsonValue::as_array)
+                        .map(|s| s.iter().filter_map(|d| d.as_f64().map(|f| f as usize)).collect())
+                        .unwrap_or_default();
+                    inputs.push((iname, dtype, shape));
+                }
+            }
+            let idx = out.artifacts.len();
+            out.by_key.insert((name.clone(), param_tag.clone()), idx);
+            out.artifacts.push(Artifact { name, param_tag, path: dir.join(file), inputs });
+        }
+        Ok(out)
+    }
+
+    /// Find an artifact by logical name + parameter tag.
+    pub fn find(&self, name: &str, param_tag: &str) -> Option<&Artifact> {
+        self.by_key
+            .get(&(name.to_string(), param_tag.to_string()))
+            .map(|&i| &self.artifacts[i])
+    }
+}

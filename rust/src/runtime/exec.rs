@@ -1,0 +1,83 @@
+//! PJRT CPU client wrapper: compile HLO text once, execute many times.
+//!
+//! Note: the `xla` crate's `PjRtClient` is `Rc`-based (not `Send`), so an
+//! [`XlaEngine`] is owned by a single executor thread; the coordinator
+//! communicates with it over channels (see `coordinator::server`).
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use super::artifact::ArtifactManifest;
+
+/// A compiled, ready-to-execute XLA computation.
+pub struct XlaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl XlaExecutable {
+    /// Execute with the given input literals. The AOT path lowers with
+    /// `return_tuple=True`, so the single output is a tuple; this returns
+    /// the tuple elements.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self.exe.execute::<xla::Literal>(inputs).context("xla execute")?;
+        let mut lit = bufs[0][0].to_literal_sync().context("device->host")?;
+        match lit.decompose_tuple() {
+            Ok(elems) if !elems.is_empty() => Ok(elems),
+            _ => Ok(vec![lit]),
+        }
+    }
+}
+
+/// Owns the PJRT client and a cache of compiled executables, keyed by
+/// `(name, param_tag)`.
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: HashMap<(String, String), Rc<XlaExecutable>>,
+}
+
+impl XlaEngine {
+    /// Create a CPU PJRT client and load the artifact manifest from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = ArtifactManifest::load(dir)?;
+        Ok(Self { client, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) the artifact `(name, param_tag)`.
+    pub fn executable(&mut self, name: &str, param_tag: &str) -> Result<Rc<XlaExecutable>> {
+        let key = (name.to_string(), param_tag.to_string());
+        if let Some(e) = self.cache.get(&key) {
+            return Ok(e.clone());
+        }
+        let art = self
+            .manifest
+            .find(name, param_tag)
+            .with_context(|| format!("artifact {name}:{param_tag} not in manifest"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            art.path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", art.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        let rc = Rc::new(XlaExecutable { exe });
+        self.cache.insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Compile a raw HLO text file (used by tests and tools).
+    pub fn compile_file(&self, path: impl AsRef<Path>) -> Result<XlaExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.as_ref().to_str().context("path not utf-8")?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).context("PJRT compile")?;
+        Ok(XlaExecutable { exe })
+    }
+}

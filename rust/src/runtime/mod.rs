@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py`) and execute them on the request path.
+//!
+//! Interchange format is **HLO text** — jax ≥ 0.5 serialized protos carry
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+mod artifact;
+mod exec;
+mod pbs_backend;
+
+pub use artifact::{Artifact, ArtifactManifest};
+pub use exec::{XlaEngine, XlaExecutable};
+pub use pbs_backend::XlaPbsBackend;

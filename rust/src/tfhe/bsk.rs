@@ -1,0 +1,114 @@
+//! Bootstrapping key: n GGSW encryptions of the short-LWE key bits, kept
+//! in the Fourier domain (the form the BRU streams from HBM, Fig. 7).
+
+use super::fft::{C64, FftPlan};
+use super::ggsw::FourierGgsw;
+use super::glwe::GlweCiphertext;
+use super::torus::SecretKeys;
+use crate::util::rng::Rng;
+
+/// Fourier-domain BSK.
+#[derive(Debug, Clone)]
+pub struct FourierBsk {
+    pub ggsw: Vec<FourierGgsw>,
+}
+
+/// Encrypt one GGSW of message bit `m` under the GLWE key.
+pub fn encrypt_ggsw(m: u64, sk: &SecretKeys, rng: &mut Rng, plan: &FftPlan) -> FourierGgsw {
+    let p = &sk.params;
+    let (k1, nh, big_n) = (p.k + 1, p.half_n(), p.big_n);
+    let rows = p.ggsw_rows();
+    let mut data = vec![C64::default(); rows * k1 * nh];
+    let mut msg = vec![0u64; big_n];
+    for c in 0..k1 {
+        for j in 0..p.bsk_level {
+            let w = (64 - p.bsk_base_log * (j + 1)) as u32;
+            msg.iter_mut().for_each(|x| *x = 0);
+            if m != 0 {
+                if c < p.k {
+                    // -s_c * q/B^(j+1)
+                    for (dst, &s) in msg.iter_mut().zip(sk.glwe_poly(c)) {
+                        *dst = s.wrapping_neg().wrapping_shl(w).wrapping_mul(m);
+                    }
+                } else {
+                    msg[0] = m.wrapping_shl(w);
+                }
+            }
+            let ct = GlweCiphertext::encrypt(&msg, sk, p.glwe_noise, rng, plan);
+            let r = c * p.bsk_level + j;
+            for cc in 0..k1 {
+                let off = (r * k1 + cc) * nh;
+                plan.forward_negacyclic_torus(ct.poly(cc), &mut data[off..off + nh]);
+            }
+        }
+    }
+    FourierGgsw { data, rows, k1, nh }
+}
+
+impl FourierBsk {
+    pub fn generate(sk: &SecretKeys, rng: &mut Rng, plan: &FftPlan) -> Self {
+        let ggsw = sk
+            .lwe
+            .clone()
+            .iter()
+            .map(|&bit| encrypt_ggsw(bit, sk, rng, plan))
+            .collect();
+        Self { ggsw }
+    }
+
+    /// Flatten to (re, im) f64 arrays with shape [n, rows, k+1, N/2] — the
+    /// exact input layout of the `blind_rotate` AOT artifact. The native
+    /// pipeline keeps Fourier rows in bit-reversed order (no-permutation
+    /// DIF/DIT, see fft.rs §Perf); the artifact uses jnp.fft's natural
+    /// order, so each row is permuted here (build-time only).
+    pub fn to_flat_f64(&self) -> (Vec<f64>, Vec<f64>) {
+        use super::fft::bitrev_permute_copy;
+        let total: usize = self.ggsw.iter().map(|g| g.data.len()).sum();
+        let mut re = Vec::with_capacity(total);
+        let mut im = Vec::with_capacity(total);
+        for g in &self.ggsw {
+            for r in 0..g.rows {
+                for c in 0..g.k1 {
+                    for z in bitrev_permute_copy(g.row(r, c)) {
+                        re.push(z.re);
+                        im.push(z.im);
+                    }
+                }
+            }
+        }
+        (re, im)
+    }
+
+    /// In-memory size of the Fourier BSK in bytes (2 f64 per point).
+    pub fn bytes(&self) -> usize {
+        self.ggsw.iter().map(|g| g.data.len() * 16).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+
+    #[test]
+    fn bsk_shape_and_flat_layout() {
+        let mut rng = Rng::new(7);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let plan = FftPlan::new(TEST1.big_n);
+        // Only a few GGSWs to keep the test fast.
+        let g = encrypt_ggsw(1, &sk, &mut rng, &plan);
+        assert_eq!(g.rows, TEST1.ggsw_rows());
+        assert_eq!(g.k1, TEST1.k + 1);
+        assert_eq!(g.nh, TEST1.half_n());
+        assert_eq!(g.data.len(), g.rows * g.k1 * g.nh);
+        let bsk = FourierBsk { ggsw: vec![g.clone(), g] };
+        let (re, im) = bsk.to_flat_f64();
+        assert_eq!(re.len(), 2 * TEST1.ggsw_rows() * (TEST1.k + 1) * TEST1.half_n());
+        assert_eq!(re.len(), im.len());
+        // Flat layout is the bit-reversal permutation of each Fourier row
+        // (bin 0 is fixed by the permutation; bin 1 comes from nh/2).
+        let nh = TEST1.half_n();
+        assert_eq!(re[0], bsk.ggsw[0].data[0].re);
+        assert_eq!(im[1], bsk.ggsw[0].data[nh / 2].im);
+    }
+}

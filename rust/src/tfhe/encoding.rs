@@ -1,0 +1,111 @@
+//! Multi-bit message encoding and LUT (test polynomial) construction
+//! (paper §II-A1: the programmability of PBS).
+//!
+//! Messages m in [0, 2^width) are encoded in the top bits of the torus
+//! with one padding bit: mu = m * 2^(64-width-1). The padding bit keeps
+//! the phase in [0, 1/2) so blind rotation never crosses the negacyclic
+//! sign boundary.
+
+use crate::params::ParamSet;
+
+use super::poly::rotate_into;
+
+/// Encode a message into a torus value.
+#[inline]
+pub fn encode(m: u64, p: &ParamSet) -> u64 {
+    (m % p.plaintext_modulus()).wrapping_mul(p.delta())
+}
+
+/// Decode a torus phase back to a message (rounding).
+#[inline]
+pub fn decode(phase: u64, p: &ParamSet) -> u64 {
+    let shifted = phase.wrapping_add(p.delta() / 2);
+    (shifted >> (64 - p.width - 1)) % p.plaintext_modulus()
+}
+
+/// Build the test polynomial for a univariate LUT `f`: slots of size
+/// 2N/P holding f(m)*delta, negacyclically pre-rotated by -box/2 so each
+/// slot is centered on its phase (handles negative noise around m = 0).
+pub fn make_lut_poly(p: &ParamSet, f: impl Fn(u64) -> u64) -> Vec<u64> {
+    let pt_mod = p.plaintext_modulus();
+    let box_sz = 2 * p.big_n / pt_mod as usize;
+    let mut v = vec![0u64; p.big_n];
+    for (j, slot) in v.iter_mut().enumerate() {
+        let m = (j / box_sz) as u64 % pt_mod;
+        *slot = (f(m) % pt_mod).wrapping_mul(p.delta());
+    }
+    let mut out = vec![0u64; p.big_n];
+    rotate_into(&v, 2 * p.big_n - box_sz / 2, &mut out);
+    out
+}
+
+/// A bivariate LUT g(x, y) is not TFHE-native (paper footnote 4): it is
+/// realized as a linear combine `x * P_half + y` followed by a univariate
+/// LUT on the packed value. Returns the univariate table for the packed
+/// encoding, where x and y each use `width/2` bits.
+pub fn make_bivariate_lut_poly(p: &ParamSet, g: impl Fn(u64, u64) -> u64) -> Vec<u64> {
+    let half_width = p.width / 2;
+    let half_mod = 1u64 << half_width;
+    make_lut_poly(p, |packed| {
+        let x = (packed >> half_width) % half_mod;
+        let y = packed % half_mod;
+        g(x, y)
+    })
+}
+
+/// The scale factor to apply to `x` when packing for a bivariate LUT.
+pub fn bivariate_scale(p: &ParamSet) -> u64 {
+    1u64 << (p.width / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for m in 0..TEST1.plaintext_modulus() {
+            assert_eq!(decode(encode(m, &TEST1), &TEST1), m);
+        }
+    }
+
+    #[test]
+    fn decode_tolerates_noise() {
+        let m = 5u64;
+        let enc = encode(m, &TEST1);
+        let noise = TEST1.delta() / 3;
+        assert_eq!(decode(enc.wrapping_add(noise), &TEST1), m);
+        assert_eq!(decode(enc.wrapping_sub(noise), &TEST1), m);
+        // Past the boundary it flips.
+        assert_ne!(decode(enc.wrapping_add(TEST1.delta()), &TEST1), m);
+    }
+
+    #[test]
+    fn lut_slots_centered() {
+        // With the half-box pre-rotation, index j ~ phase j on the torus:
+        // the slot centered at encode(m) must hold f(m).
+        let f = |m: u64| (3 * m + 1) % 16;
+        let v = make_lut_poly(&TEST1, f);
+        let box_sz = 2 * TEST1.big_n / 16;
+        // Sample the exact slot centers in [0, N): phases m*box (m < 8).
+        for m in 0..8u64 {
+            let center = (m as usize) * box_sz;
+            assert_eq!(v[center], encode(f(m), &TEST1), "m={m}");
+        }
+    }
+
+    #[test]
+    fn bivariate_packing() {
+        // width 3 -> half width 1: x,y in {0,1}, packed = 2x + y.
+        let g = |x: u64, y: u64| x + y;
+        let v = make_bivariate_lut_poly(&TEST1, g);
+        let u = make_lut_poly(&TEST1, |packed| {
+            let x = (packed >> 1) & 1;
+            let y = packed & 1;
+            x + y
+        });
+        assert_eq!(v, u);
+        assert_eq!(bivariate_scale(&TEST1), 2);
+    }
+}

@@ -1,0 +1,434 @@
+//! Negacyclic FFT over the torus — the compute hot-spot of the whole
+//! library (every external product runs d(k+1) forward and k+1 inverse
+//! transforms).
+//!
+//! Representation is the paper's "double-real" form (§IV-C): a degree-N
+//! real polynomial is packed into an N/2-point complex vector
+//! z_j = (p_j - i p_{j+N/2}) * twist_j with twist_j = exp(-i*pi*j/N); an
+//! N/2-point complex FFT then evaluates P at the primitive 2N-th roots
+//! zeta^(4k+1). Pointwise products in this domain are exact negacyclic
+//! products (conjugate symmetry covers the other half of the roots).
+//!
+//! The hot-path transform is a no-permutation DIF/DIT pair: the forward
+//! fused-radix-2^2 DIF leaves the Fourier domain bit-reversed (pointwise
+//! products don't care), the inverse DIT consumes that order and emits
+//! natural order — no bit-reversal pass ever runs on the request path,
+//! and per-stage twiddles are stored contiguously. A classic natural-
+//! order `fft_inplace`/`ifft_inplace` pair is kept for tests and key
+//! export. See EXPERIMENTS.md §Perf for the measured iteration log.
+
+/// Minimal complex type (num-complex is not in the offline registry).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl C64 {
+    #[inline(always)]
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    #[inline(always)]
+    pub fn conj(self) -> Self {
+        Self { re: self.re, im: -self.im }
+    }
+
+    #[inline(always)]
+    pub fn mul(self, o: Self) -> Self {
+        Self { re: self.re * o.re - self.im * o.im, im: self.re * o.im + self.im * o.re }
+    }
+
+    #[inline(always)]
+    pub fn add(self, o: Self) -> Self {
+        Self { re: self.re + o.re, im: self.im + o.im }
+    }
+
+    #[inline(always)]
+    pub fn sub(self, o: Self) -> Self {
+        Self { re: self.re - o.re, im: self.im - o.im }
+    }
+
+    #[inline(always)]
+    pub fn scale(self, s: f64) -> Self {
+        Self { re: self.re * s, im: self.im * s }
+    }
+
+    /// Multiply by -i (used by radix-4 butterflies).
+    #[inline(always)]
+    pub fn mul_neg_i(self) -> Self {
+        Self { re: self.im, im: -self.re }
+    }
+}
+
+/// Precomputed plan for polynomials of degree `poly_n` (complex size
+/// `poly_n / 2`). Plans are cheap to build relative to keygen; callers
+/// cache one per parameter set (see `PbsContext`).
+pub struct FftPlan {
+    /// Complex transform length N/2.
+    pub nh: usize,
+    #[allow(dead_code)]
+    log2_nh: u32,
+    bitrev: Vec<u32>,
+    /// Forward roots w^t = exp(-2*pi*i*t/nh), t < nh/2.
+    w: Vec<C64>,
+    /// Per-fused-stage sequential twiddles [w1_j, w2_j, w3_j] for the
+    /// radix-2^2 DIF kernel (contiguous loads instead of 3 strided ones).
+    w_stages: Vec<Vec<C64>>,
+    /// Folding twist exp(-i*pi*j/N), j < nh.
+    twist: Vec<C64>,
+}
+
+impl FftPlan {
+    pub fn new(poly_n: usize) -> Self {
+        assert!(poly_n.is_power_of_two() && poly_n >= 4);
+        let nh = poly_n / 2;
+        let log2_nh = nh.trailing_zeros();
+        let mut bitrev = vec![0u32; nh];
+        for i in 0..nh {
+            bitrev[i] = (i as u32).reverse_bits() >> (32 - log2_nh);
+        }
+        let w = (0..nh / 2)
+            .map(|t| {
+                let ang = -2.0 * std::f64::consts::PI * t as f64 / nh as f64;
+                C64::new(ang.cos(), ang.sin())
+            })
+            .collect();
+        let twist = (0..nh)
+            .map(|j| {
+                let ang = -std::f64::consts::PI * j as f64 / poly_n as f64;
+                C64::new(ang.cos(), ang.sin())
+            })
+            .collect();
+        let w: Vec<C64> = w;
+        let mut w_stages = Vec::new();
+        let mut len = nh;
+        while len >= 4 {
+            let q = len / 4;
+            let step = nh / len;
+            let mut tw = Vec::with_capacity(3 * q);
+            for j in 0..q {
+                let w1 = w[j * step];
+                let w2 = w[2 * j * step];
+                tw.push(w1);
+                tw.push(w2);
+                tw.push(w1.mul(w2));
+            }
+            w_stages.push(tw);
+            len = q;
+        }
+        Self { nh, log2_nh, bitrev, w, w_stages, twist }
+    }
+
+    /// In-place forward complex FFT (DIT, natural order in/out).
+    pub fn fft_inplace(&self, buf: &mut [C64]) {
+        debug_assert_eq!(buf.len(), self.nh);
+        // Bit-reverse permutation.
+        for i in 0..self.nh {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        let mut len = 2usize;
+        while len <= self.nh {
+            let half = len / 2;
+            let step = self.nh / len;
+            let mut base = 0;
+            while base < self.nh {
+                for j in 0..half {
+                    let w = self.w[j * step];
+                    let u = buf[base + j];
+                    let v = buf[base + j + half].mul(w);
+                    buf[base + j] = u.add(v);
+                    buf[base + j + half] = u.sub(v);
+                }
+                base += len;
+            }
+            len <<= 1;
+        }
+    }
+
+    /// In-place inverse complex FFT (includes the 1/nh scale).
+    pub fn ifft_inplace(&self, buf: &mut [C64]) {
+        for z in buf.iter_mut() {
+            *z = z.conj();
+        }
+        self.fft_inplace(buf);
+        let s = 1.0 / self.nh as f64;
+        for z in buf.iter_mut() {
+            *z = z.conj().scale(s);
+        }
+    }
+
+    /// Forward DIF FFT: natural input -> **bit-reversed** output, no
+    /// permutation pass. The TFHE pipeline only multiplies pointwise in
+    /// the Fourier domain, so a consistent permutation is free speed
+    /// (§Perf change 2); `bitrev_permute_copy` converts when natural
+    /// order is needed (e.g. exporting the BSK to the XLA artifacts).
+    pub fn dif_forward(&self, buf: &mut [C64]) {
+        debug_assert_eq!(buf.len(), self.nh);
+        let mut len = self.nh;
+        // Fused radix-2^2 stages: identical ordering to two radix-2 DIF
+        // passes, but one pass over memory and 3 twiddle mults per 4
+        // points instead of 4 (§Perf change 3).
+        let mut stage = 0;
+        while len >= 4 {
+            let q = len / 4;
+            let tw = &self.w_stages[stage];
+            stage += 1;
+            let mut base = 0;
+            while base < self.nh {
+                for j in 0..q {
+                    let w1 = tw[3 * j];
+                    let w2 = tw[3 * j + 1];
+                    let w3 = tw[3 * j + 2];
+                    let a = buf[base + j];
+                    let b = buf[base + j + q];
+                    let c = buf[base + j + 2 * q];
+                    let d = buf[base + j + 3 * q];
+                    let t1 = a.add(c);
+                    let t2 = b.add(d);
+                    let t3 = a.sub(c);
+                    let t4 = b.sub(d).mul_neg_i();
+                    buf[base + j] = t1.add(t2);
+                    buf[base + j + q] = t1.sub(t2).mul(w2);
+                    buf[base + j + 2 * q] = t3.add(t4).mul(w1);
+                    buf[base + j + 3 * q] = t3.sub(t4).mul(w3);
+                }
+                base += len;
+            }
+            len = q;
+        }
+        if len == 2 {
+            // Final radix-2 stage for odd log2(nh); w^0 = 1, no mults.
+            let mut base = 0;
+            while base < self.nh {
+                let a = buf[base];
+                let b = buf[base + 1];
+                buf[base] = a.add(b);
+                buf[base + 1] = a.sub(b);
+                base += 2;
+            }
+        }
+    }
+
+    /// Inverse DIT FFT: **bit-reversed** input -> natural output, with the
+    /// 1/nh scale folded in.
+    pub fn dit_inverse(&self, buf: &mut [C64]) {
+        debug_assert_eq!(buf.len(), self.nh);
+        let mut len = 2usize;
+        while len <= self.nh {
+            let half = len / 2;
+            let step = self.nh / len;
+            let mut base = 0;
+            while base < self.nh {
+                let (lo, hi) = buf[base..base + len].split_at_mut(half);
+                for (j, (u, v)) in lo.iter_mut().zip(hi.iter_mut()).enumerate() {
+                    let w = self.w[j * step].conj();
+                    let a = *u;
+                    let b = v.mul(w);
+                    *u = a.add(b);
+                    *v = a.sub(b);
+                }
+                base += len;
+            }
+            len <<= 1;
+        }
+        let s = 1.0 / self.nh as f64;
+        for z in buf.iter_mut() {
+            *z = z.scale(s);
+        }
+    }
+
+    /// Forward negacyclic transform: signed coefficients (len N) -> Fourier
+    /// domain (len N/2).
+    pub fn forward_negacyclic(&self, p: &[f64], out: &mut [C64]) {
+        debug_assert_eq!(p.len(), 2 * self.nh);
+        debug_assert_eq!(out.len(), self.nh);
+        for j in 0..self.nh {
+            out[j] = C64::new(p[j], -p[j + self.nh]).mul(self.twist[j]);
+        }
+        self.dif_forward(out);
+    }
+
+    /// Forward transform straight from torus values (reinterpreted signed).
+    pub fn forward_negacyclic_torus(&self, p: &[u64], out: &mut [C64]) {
+        debug_assert_eq!(p.len(), 2 * self.nh);
+        for j in 0..self.nh {
+            let re = p[j] as i64 as f64;
+            let im = -(p[j + self.nh] as i64 as f64);
+            out[j] = C64::new(re, im).mul(self.twist[j]);
+        }
+        self.dif_forward(out);
+    }
+
+    /// Forward transform from i64 gadget digits.
+    pub fn forward_negacyclic_i64(&self, p: &[i64], out: &mut [C64]) {
+        debug_assert_eq!(p.len(), 2 * self.nh);
+        for j in 0..self.nh {
+            out[j] = C64::new(p[j] as f64, -(p[j + self.nh] as f64)).mul(self.twist[j]);
+        }
+        self.dif_forward(out);
+    }
+
+    /// Inverse negacyclic transform into torus values (rounded mod 2^64),
+    /// *adding* into `out` (the blind-rotation accumulator pattern).
+    /// `scratch` must have length N/2; `z` is consumed.
+    pub fn inverse_negacyclic_add_torus(&self, z: &mut [C64], out: &mut [u64]) {
+        debug_assert_eq!(z.len(), self.nh);
+        debug_assert_eq!(out.len(), 2 * self.nh);
+        self.dit_inverse(z);
+        const Q: f64 = 18446744073709551616.0; // 2^64
+        const INV_Q: f64 = 1.0 / Q;
+        for j in 0..self.nh {
+            let zz = z[j].mul(self.twist[j].conj());
+            let re = zz.re - (zz.re * INV_Q).round() * Q;
+            let im = -zz.im;
+            let im = im - (im * INV_Q).round() * Q;
+            out[j] = out[j].wrapping_add(re.round_ties_even() as i64 as u64);
+            out[j + self.nh] = out[j + self.nh].wrapping_add(im.round_ties_even() as i64 as u64);
+        }
+    }
+}
+
+/// Permute a bit-reversed Fourier vector to natural order (copy). Used
+/// when exporting Fourier keys to consumers that expect natural order
+/// (the XLA artifacts use jnp.fft).
+pub fn bitrev_permute_copy(src: &[C64]) -> Vec<C64> {
+    let n = src.len();
+    debug_assert!(n.is_power_of_two());
+    let log = n.trailing_zeros();
+    let mut out = vec![C64::default(); n];
+    for (i, &v) in src.iter().enumerate() {
+        out[(i as u32).reverse_bits() as usize >> (32 - log)] = v;
+    }
+    out
+}
+
+/// O(N^2) schoolbook negacyclic multiplication (test oracle).
+pub fn negacyclic_mul_naive(a: &[f64], b: &[f64]) -> Vec<f64> {
+    let n = a.len();
+    let mut out = vec![0.0; n];
+    for i in 0..n {
+        for j in 0..n {
+            let k = i + j;
+            if k < n {
+                out[k] += a[i] * b[j];
+            } else {
+                out[k - n] -= a[i] * b[j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_allclose, check};
+    use crate::util::rng::Rng;
+
+    fn fft_roundtrip(nh: usize, rng: &mut Rng) -> Result<(), String> {
+        let plan = FftPlan::new(2 * nh);
+        let orig: Vec<C64> = (0..nh)
+            .map(|_| C64::new(rng.gaussian() * 100.0, rng.gaussian() * 100.0))
+            .collect();
+        let mut buf = orig.clone();
+        plan.fft_inplace(&mut buf);
+        plan.ifft_inplace(&mut buf);
+        let got: Vec<f64> = buf.iter().flat_map(|c| [c.re, c.im]).collect();
+        let exp: Vec<f64> = orig.iter().flat_map(|c| [c.re, c.im]).collect();
+        assert_allclose(&got, &exp, 1e-8, 1e-9)
+    }
+
+    #[test]
+    fn complex_fft_roundtrip() {
+        check("fft_roundtrip", 10, |rng| {
+            for log in [2usize, 4, 7, 9] {
+                fft_roundtrip(1 << log, rng)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fft_matches_dft_small() {
+        // Direct O(n^2) DFT cross-check at n=8.
+        let plan = FftPlan::new(16);
+        let x: Vec<C64> = (0..8).map(|i| C64::new(i as f64, (2 * i) as f64)).collect();
+        let mut buf = x.clone();
+        plan.fft_inplace(&mut buf);
+        for k in 0..8 {
+            let mut acc = C64::default();
+            for (j, xj) in x.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (j * k) as f64 / 8.0;
+                acc = acc.add(xj.mul(C64::new(ang.cos(), ang.sin())));
+            }
+            assert!((acc.re - buf[k].re).abs() < 1e-9, "k={k}");
+            assert!((acc.im - buf[k].im).abs() < 1e-9, "k={k}");
+        }
+    }
+
+    #[test]
+    fn negacyclic_convolution_matches_naive() {
+        check("negacyclic_conv", 8, |rng| {
+            let n = 64;
+            let plan = FftPlan::new(n);
+            let a: Vec<f64> = (0..n).map(|_| (rng.below(200) as f64) - 100.0).collect();
+            let b: Vec<f64> = (0..n).map(|_| (rng.below(200) as f64) - 100.0).collect();
+            let mut fa = vec![C64::default(); n / 2];
+            let mut fb = vec![C64::default(); n / 2];
+            plan.forward_negacyclic(&a, &mut fa);
+            plan.forward_negacyclic(&b, &mut fb);
+            for j in 0..n / 2 {
+                fa[j] = fa[j].mul(fb[j]);
+            }
+            let mut out = vec![0u64; n];
+            plan.inverse_negacyclic_add_torus(&mut fa, &mut out);
+            let naive = negacyclic_mul_naive(&a, &b);
+            let got: Vec<f64> = out.iter().map(|&x| x as i64 as f64).collect();
+            assert_allclose(&got, &naive, 0.51, 0.0)
+        });
+    }
+
+    #[test]
+    fn torus_forward_matches_signed_reinterpretation() {
+        let n = 32;
+        let plan = FftPlan::new(n);
+        let mut rng = Rng::new(4);
+        let p: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let signed: Vec<f64> = p.iter().map(|&x| x as i64 as f64).collect();
+        let mut f1 = vec![C64::default(); n / 2];
+        let mut f2 = vec![C64::default(); n / 2];
+        plan.forward_negacyclic_torus(&p, &mut f1);
+        plan.forward_negacyclic(&signed, &mut f2);
+        for (a, b) in f1.iter().zip(&f2) {
+            assert!((a.re - b.re).abs() < 1e-3 && (a.im - b.im).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn inverse_add_accumulates() {
+        let n = 16;
+        let plan = FftPlan::new(n);
+        let p: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let mut f = vec![C64::default(); n / 2];
+        plan.forward_negacyclic(&p, &mut f);
+        let mut out = vec![5u64; n];
+        plan.inverse_negacyclic_add_torus(&mut f, &mut out);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, 5u64.wrapping_add(i as u64), "i={i}");
+        }
+    }
+
+    #[test]
+    fn mul_neg_i_is_rotation() {
+        let z = C64::new(3.0, 4.0);
+        let w = z.mul_neg_i();
+        assert_eq!((w.re, w.im), (4.0, -3.0));
+        let back = w.mul_neg_i().mul_neg_i().mul_neg_i();
+        assert_eq!((back.re, back.im), (z.re, z.im));
+    }
+}

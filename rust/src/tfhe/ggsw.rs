@@ -1,0 +1,196 @@
+//! GGSW ciphertexts (Fourier domain) and the external product — "the most
+//! time-consuming operation in bootstrapping" (paper §II-B, Fig. 4), i.e.
+//! the operation the BRU accelerates.
+
+use super::decomp::decompose_strided;
+use super::fft::{C64, FftPlan};
+use super::glwe::GlweCiphertext;
+use super::poly;
+use crate::params::ParamSet;
+
+/// One GGSW ciphertext kept in the Fourier domain: `rows x (k+1)` Fourier
+/// polynomials of N/2 complex points each. Row r = c*level + j encrypts
+/// m * (-s_c) * q/B^(j+1) (c < k) or m * q/B^(j+1) (c = k).
+#[derive(Debug, Clone)]
+pub struct FourierGgsw {
+    /// rows * (k+1) * nh, row-major (r, c, h).
+    pub data: Vec<C64>,
+    pub rows: usize,
+    pub k1: usize,
+    pub nh: usize,
+}
+
+impl FourierGgsw {
+    pub fn row(&self, r: usize, c: usize) -> &[C64] {
+        let off = (r * self.k1 + c) * self.nh;
+        &self.data[off..off + self.nh]
+    }
+}
+
+/// Reused scratch for external products (no allocation on the hot path).
+pub struct ExtProdScratch {
+    /// level digit polynomials of one GLWE row: level * N i64.
+    digits: Vec<i64>,
+    /// Fourier transform of one digit row.
+    row_f: Vec<C64>,
+    /// Fourier accumulator, (k+1) * nh.
+    acc_f: Vec<C64>,
+    /// CMUX rotation difference, (k+1) * N.
+    diff: Vec<u64>,
+}
+
+impl ExtProdScratch {
+    pub fn new(p: &ParamSet) -> Self {
+        Self {
+            digits: vec![0; p.bsk_level * p.big_n],
+            row_f: vec![C64::default(); p.half_n()],
+            acc_f: vec![C64::default(); (p.k + 1) * p.half_n()],
+            diff: vec![0; (p.k + 1) * p.big_n],
+        }
+    }
+}
+
+/// `acc += GGSW box glwe` — the external product, fused decompose -> FFT ->
+/// MAC -> IFFT (the BRU pipeline of Fig. 8(b)).
+pub fn external_product_add(
+    plan: &FftPlan,
+    p: &ParamSet,
+    ggsw: &FourierGgsw,
+    glwe_in: &[u64],
+    acc: &mut GlweCiphertext,
+    s: &mut ExtProdScratch,
+) {
+    let (k1, nh, big_n) = (p.k + 1, p.half_n(), p.big_n);
+    let (bl, lvl) = (p.bsk_base_log, p.bsk_level);
+    s.acc_f.iter_mut().for_each(|z| *z = C64::default());
+    for c in 0..k1 {
+        // Decompose polynomial c into `lvl` digit rows (strided layout).
+        let src = &glwe_in[c * big_n..(c + 1) * big_n];
+        for (i, &x) in src.iter().enumerate() {
+            decompose_strided(x, bl, lvl, &mut s.digits[i..], big_n);
+        }
+        for j in 0..lvl {
+            let digit_poly = &s.digits[j * big_n..(j + 1) * big_n];
+            plan.forward_negacyclic_i64(digit_poly, &mut s.row_f);
+            let r = c * lvl + j;
+            for cc in 0..k1 {
+                let brow = ggsw.row(r, cc);
+                let accf = &mut s.acc_f[cc * nh..(cc + 1) * nh];
+                // Fused complex MAC, iterator form (no bounds checks).
+                for ((a, &x), &b) in accf.iter_mut().zip(&s.row_f).zip(brow) {
+                    a.re += x.re * b.re - x.im * b.im;
+                    a.im += x.re * b.im + x.im * b.re;
+                }
+            }
+        }
+    }
+    for cc in 0..k1 {
+        let accf = &mut s.acc_f[cc * nh..(cc + 1) * nh];
+        let out = &mut acc.data[cc * big_n..(cc + 1) * big_n];
+        plan.inverse_negacyclic_add_torus(accf, out);
+    }
+}
+
+/// CMUX with rotation: `acc <- acc + GGSW(s) box (X^amount * acc - acc)`.
+/// Selects between `acc` (s = 0) and `X^amount * acc` (s = 1) — one blind
+/// rotation step.
+pub fn cmux_rotate(
+    plan: &FftPlan,
+    p: &ParamSet,
+    ggsw: &FourierGgsw,
+    amount: usize,
+    acc: &mut GlweCiphertext,
+    s: &mut ExtProdScratch,
+) {
+    let big_n = p.big_n;
+    for c in 0..p.k + 1 {
+        poly::rotate_sub_into(
+            &acc.data[c * big_n..(c + 1) * big_n],
+            amount,
+            &mut s.diff[c * big_n..(c + 1) * big_n],
+        );
+    }
+    // Split borrow: diff lives in scratch; temporarily move it out.
+    let diff = std::mem::take(&mut s.diff);
+    external_product_add(plan, p, ggsw, &diff, acc, s);
+    s.diff = diff;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+    use crate::tfhe::bsk::encrypt_ggsw;
+    use crate::tfhe::torus::{torus_distance, SecretKeys};
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn setup(rng: &mut Rng) -> (SecretKeys, FftPlan) {
+        (SecretKeys::generate(&TEST1, rng), FftPlan::new(TEST1.big_n))
+    }
+
+    #[test]
+    fn ggsw_one_is_identity() {
+        check("extprod_identity", 5, |rng| {
+            let (sk, plan) = setup(rng);
+            let g = encrypt_ggsw(1, &sk, rng, &plan);
+            let msg: Vec<u64> = (0..TEST1.big_n as u64).map(|j| (j % 16) << 60).collect();
+            let glwe = GlweCiphertext::encrypt(&msg, &sk, TEST1.glwe_noise, rng, &plan);
+            let mut acc = GlweCiphertext::zero(TEST1.k, TEST1.big_n);
+            let mut s = ExtProdScratch::new(&TEST1);
+            external_product_add(&plan, &TEST1, &g, &glwe.data, &mut acc, &mut s);
+            let ph = acc.decrypt_phase(&sk, &plan);
+            for (got, exp) in ph.iter().zip(&msg) {
+                if torus_distance(*got, *exp) > 1e-5 {
+                    return Err(format!("{}", torus_distance(*got, *exp)));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ggsw_zero_absorbs() {
+        check("extprod_zero", 5, |rng| {
+            let (sk, plan) = setup(rng);
+            let g = encrypt_ggsw(0, &sk, rng, &plan);
+            let msg = vec![3u64 << 60; TEST1.big_n];
+            let glwe = GlweCiphertext::encrypt(&msg, &sk, TEST1.glwe_noise, rng, &plan);
+            let mut acc = GlweCiphertext::zero(TEST1.k, TEST1.big_n);
+            let mut s = ExtProdScratch::new(&TEST1);
+            external_product_add(&plan, &TEST1, &g, &glwe.data, &mut acc, &mut s);
+            let ph = acc.decrypt_phase(&sk, &plan);
+            for got in ph {
+                if torus_distance(got, 0) > 1e-5 {
+                    return Err("nonzero".into());
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cmux_selects_between_identity_and_rotation() {
+        check("cmux_select", 4, |rng| {
+            let (sk, plan) = setup(rng);
+            let mut msg = vec![0u64; TEST1.big_n];
+            msg[0] = 7u64 << 60;
+            for bit in [0u64, 1] {
+                let g = encrypt_ggsw(bit, &sk, rng, &plan);
+                let mut acc = GlweCiphertext::trivial(&msg, TEST1.k);
+                let mut s = ExtProdScratch::new(&TEST1);
+                cmux_rotate(&plan, &TEST1, &g, 3, &mut acc, &mut s);
+                let ph = acc.decrypt_phase(&sk, &plan);
+                // bit=0 -> msg unchanged; bit=1 -> X^3 * msg.
+                let expect_idx = if bit == 0 { 0 } else { 3 };
+                for (j, &v) in ph.iter().enumerate() {
+                    let exp = if j == expect_idx { 7u64 << 60 } else { 0 };
+                    if torus_distance(v, exp) > 1e-5 {
+                        return Err(format!("bit={bit} j={j}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

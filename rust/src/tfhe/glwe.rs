@@ -1,0 +1,176 @@
+//! GLWE ciphertexts: k mask polynomials + 1 body polynomial over
+//! Z_q[X]/(X^N+1). Used for the PBS accumulator and LUT encodings
+//! (paper §II-A2).
+
+use super::fft::FftPlan;
+use super::lwe::LweCiphertext;
+use super::poly;
+use super::torus::SecretKeys;
+use crate::params::ParamSet;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlweCiphertext {
+    /// (k+1) polynomials of length N, row-major; row k is the body.
+    pub data: Vec<u64>,
+    pub k: usize,
+    pub big_n: usize,
+}
+
+impl GlweCiphertext {
+    pub fn zero(k: usize, big_n: usize) -> Self {
+        Self { data: vec![0; (k + 1) * big_n], k, big_n }
+    }
+
+    /// Trivial encryption: zero mask, body = msg.
+    pub fn trivial(msg_poly: &[u64], k: usize) -> Self {
+        let big_n = msg_poly.len();
+        let mut ct = Self::zero(k, big_n);
+        ct.body_mut().copy_from_slice(msg_poly);
+        ct
+    }
+
+    pub fn poly(&self, c: usize) -> &[u64] {
+        &self.data[c * self.big_n..(c + 1) * self.big_n]
+    }
+
+    pub fn poly_mut(&mut self, c: usize) -> &mut [u64] {
+        &mut self.data[c * self.big_n..(c + 1) * self.big_n]
+    }
+
+    pub fn body(&self) -> &[u64] {
+        self.poly(self.k)
+    }
+
+    pub fn body_mut(&mut self) -> &mut [u64] {
+        let k = self.k;
+        self.poly_mut(k)
+    }
+
+    /// Fresh encryption of a message polynomial.
+    pub fn encrypt(
+        msg_poly: &[u64],
+        sk: &SecretKeys,
+        sigma: f64,
+        rng: &mut Rng,
+        plan: &FftPlan,
+    ) -> Self {
+        let p = &sk.params;
+        let mut ct = Self::zero(p.k, p.big_n);
+        // body = msg + e
+        for (j, b) in ct.poly_mut(p.k).iter_mut().enumerate() {
+            *b = msg_poly[j].wrapping_add(rng.torus_gaussian(sigma));
+        }
+        // masks + body += a_c * s_c
+        for c in 0..p.k {
+            for j in 0..p.big_n {
+                ct.data[c * p.big_n + j] = rng.next_u64();
+            }
+            let (masks, body) = ct.data.split_at_mut(p.k * p.big_n);
+            let a = &masks[c * p.big_n..(c + 1) * p.big_n];
+            poly::mul_binary_add_into(plan, a, sk.glwe_poly(c), body);
+        }
+        ct
+    }
+
+    /// Decrypt to the phase polynomial body - sum_c a_c * s_c.
+    pub fn decrypt_phase(&self, sk: &SecretKeys, plan: &FftPlan) -> Vec<u64> {
+        let p = &sk.params;
+        let mut phase = self.body().to_vec();
+        for c in 0..p.k {
+            poly::mul_binary_sub_into(plan, self.poly(c), sk.glwe_poly(c), &mut phase);
+        }
+        phase
+    }
+
+    /// Extract the LWE ciphertext of the constant coefficient under the
+    /// long (flattened GLWE) key — the PBS output step (paper Fig. 3 (d)).
+    pub fn sample_extract(&self, params: &ParamSet) -> LweCiphertext {
+        let (k, n) = (self.k, self.big_n);
+        let mut data = vec![0u64; params.long_dim() + 1];
+        for c in 0..k {
+            let mask = self.poly(c);
+            let out = &mut data[c * n..(c + 1) * n];
+            out[0] = mask[0];
+            for j in 1..n {
+                out[j] = mask[n - j].wrapping_neg();
+            }
+        }
+        data[params.long_dim()] = self.body()[0];
+        LweCiphertext { data }
+    }
+
+    pub fn add_assign(&mut self, other: &Self) {
+        poly::add_assign(&mut self.data, &other.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+    use crate::tfhe::torus::torus_distance;
+    use crate::util::prop::check;
+
+    #[test]
+    fn glwe_encrypt_decrypt_roundtrip() {
+        check("glwe_roundtrip", 8, |rng| {
+            let sk = SecretKeys::generate(&TEST1, rng);
+            let plan = FftPlan::new(TEST1.big_n);
+            let msg: Vec<u64> = (0..TEST1.big_n as u64).map(|j| (j % 16) << 60).collect();
+            let ct = GlweCiphertext::encrypt(&msg, &sk, TEST1.glwe_noise, rng, &plan);
+            let ph = ct.decrypt_phase(&sk, &plan);
+            for (got, exp) in ph.iter().zip(&msg) {
+                let d = torus_distance(*got, *exp);
+                if d > 1e-6 {
+                    return Err(format!("noise {d}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trivial_decrypts_exactly() {
+        let mut rng = Rng::new(5);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let plan = FftPlan::new(TEST1.big_n);
+        let msg: Vec<u64> = (0..512u64).map(|j| j << 52).collect();
+        let ct = GlweCiphertext::trivial(&msg, TEST1.k);
+        assert_eq!(ct.decrypt_phase(&sk, &plan), msg);
+    }
+
+    #[test]
+    fn sample_extract_preserves_constant_term() {
+        check("sample_extract", 8, |rng| {
+            let sk = SecretKeys::generate(&TEST1, rng);
+            let plan = FftPlan::new(TEST1.big_n);
+            let mut msg = vec![0u64; TEST1.big_n];
+            msg[0] = 5u64 << 60;
+            msg[1] = 9u64 << 60; // non-constant coefficients must not leak in
+            let ct = GlweCiphertext::encrypt(&msg, &sk, TEST1.glwe_noise, rng, &plan);
+            let lwe = ct.sample_extract(&TEST1);
+            let ph = lwe.decrypt_phase(sk.long_lwe());
+            if torus_distance(ph, 5u64 << 60) > 1e-6 {
+                return Err("constant term lost".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn homomorphic_poly_add() {
+        let mut rng = Rng::new(6);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let plan = FftPlan::new(TEST1.big_n);
+        let m1 = vec![1u64 << 60; TEST1.big_n];
+        let m2 = vec![2u64 << 60; TEST1.big_n];
+        let mut a = GlweCiphertext::encrypt(&m1, &sk, TEST1.glwe_noise, &mut rng, &plan);
+        let b = GlweCiphertext::encrypt(&m2, &sk, TEST1.glwe_noise, &mut rng, &plan);
+        a.add_assign(&b);
+        let ph = a.decrypt_phase(&sk, &plan);
+        for x in ph {
+            assert!(torus_distance(x, 3u64 << 60) < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Key-switching key and the key-switch operation — the LPU's main job
+//! (paper §IV-A), "the second most time-consuming operation" (§II-B).
+//!
+//! KSK[i][j] is an LWE_n encryption of s_long_i * q/B_ks^(j+1); switching
+//! computes out = (0, b) - sum_ij dec_j(a_i) * KSK[i][j].
+
+use super::decomp::decompose_strided;
+use super::lwe::LweCiphertext;
+use super::torus::SecretKeys;
+use crate::params::ParamSet;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Ksk {
+    /// kN * ks_level * (n+1), row-major (i, j, coeff).
+    pub data: Vec<u64>,
+    pub long_dim: usize,
+    pub level: usize,
+    pub short_len: usize,
+}
+
+impl Ksk {
+    pub fn generate(sk: &SecretKeys, rng: &mut Rng) -> Self {
+        let p = &sk.params;
+        let (long_dim, level, short_len) = (p.long_dim(), p.ks_level, p.n + 1);
+        let mut data = vec![0u64; long_dim * level * short_len];
+        for i in 0..long_dim {
+            for j in 0..level {
+                let w = (64 - p.ks_base_log * (j + 1)) as u32;
+                let msg = sk.long_lwe()[i].wrapping_shl(w);
+                let ct = LweCiphertext::encrypt(msg, &sk.lwe, p.lwe_noise, rng);
+                let off = (i * level + j) * short_len;
+                data[off..off + short_len].copy_from_slice(&ct.data);
+            }
+        }
+        Self { data, long_dim, level, short_len }
+    }
+
+    #[inline]
+    fn row(&self, i: usize, j: usize) -> &[u64] {
+        let off = (i * self.level + j) * self.short_len;
+        &self.data[off..off + self.short_len]
+    }
+
+    /// LWE_{kN} -> LWE_n.
+    pub fn keyswitch(&self, ct_long: &LweCiphertext, p: &ParamSet) -> LweCiphertext {
+        debug_assert_eq!(ct_long.dim(), self.long_dim);
+        let mut out = vec![0u64; self.short_len];
+        out[self.short_len - 1] = ct_long.body();
+        let mut digits = vec![0i64; self.level];
+        for (i, &a) in ct_long.mask().iter().enumerate() {
+            decompose_strided(a, p.ks_base_log, self.level, &mut digits, 1);
+            for (j, &d) in digits.iter().enumerate() {
+                if d == 0 {
+                    continue; // sparse digits are common; skip the row
+                }
+                let du = d as u64;
+                for (o, &kk) in out.iter_mut().zip(self.row(i, j)) {
+                    *o = o.wrapping_sub(du.wrapping_mul(kk));
+                }
+            }
+        }
+        LweCiphertext { data: out }
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+    use crate::tfhe::torus::torus_distance;
+    use crate::util::prop::check;
+
+    #[test]
+    fn keyswitch_preserves_message() {
+        check("keyswitch", 6, |rng| {
+            let sk = SecretKeys::generate(&TEST1, rng);
+            let ksk = Ksk::generate(&sk, rng);
+            let m = rng.below(8) << 60;
+            let ct = LweCiphertext::encrypt(m, sk.long_lwe(), TEST1.glwe_noise, rng);
+            let short = ksk.keyswitch(&ct, &TEST1);
+            if short.dim() != TEST1.n {
+                return Err("wrong output dim".into());
+            }
+            let ph = short.decrypt_phase(&sk.lwe);
+            let d = torus_distance(ph, m);
+            if d > 1e-4 {
+                return Err(format!("ks noise {d}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn keyswitch_trivial_input() {
+        let mut rng = Rng::new(11);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let ksk = Ksk::generate(&sk, &mut rng);
+        let ct = LweCiphertext::trivial(5u64 << 60, TEST1.long_dim());
+        let short = ksk.keyswitch(&ct, &TEST1);
+        // Zero mask -> all digits zero -> output is the trivial short ct.
+        assert!(torus_distance(short.decrypt_phase(&sk.lwe), 5u64 << 60) < 1e-9);
+    }
+
+    #[test]
+    fn keyswitch_is_linear() {
+        let mut rng = Rng::new(12);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let ksk = Ksk::generate(&sk, &mut rng);
+        let m1 = 1u64 << 60;
+        let m2 = 2u64 << 60;
+        let a = LweCiphertext::encrypt(m1, sk.long_lwe(), TEST1.glwe_noise, &mut rng);
+        let mut b = LweCiphertext::encrypt(m2, sk.long_lwe(), TEST1.glwe_noise, &mut rng);
+        b.add_assign(&a);
+        let sb = ksk.keyswitch(&b, &TEST1);
+        assert!(torus_distance(sb.decrypt_phase(&sk.lwe), 3u64 << 60) < 1e-4);
+    }
+}

@@ -1,0 +1,160 @@
+//! LWE ciphertexts: `[a_0 .. a_{d-1}, b]` with `b = <a, s> + m + e`.
+//!
+//! In the key-switch-first pipeline (paper §II-B), ciphertexts at rest are
+//! **long** (dimension k*N, under the extracted GLWE key); the short
+//! dimension n only appears transiently between key-switch and blind
+//! rotation. Linear homomorphic ops (the LPU's job) live here.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LweCiphertext {
+    /// a_0..a_{d-1}, b — length d+1.
+    pub data: Vec<u64>,
+}
+
+impl LweCiphertext {
+    /// LWE dimension d.
+    pub fn dim(&self) -> usize {
+        self.data.len() - 1
+    }
+
+    pub fn body(&self) -> u64 {
+        *self.data.last().unwrap()
+    }
+
+    pub fn mask(&self) -> &[u64] {
+        &self.data[..self.data.len() - 1]
+    }
+
+    /// Trivial (noiseless, mask-free) encryption of a torus value.
+    pub fn trivial(msg_torus: u64, dim: usize) -> Self {
+        let mut data = vec![0u64; dim + 1];
+        data[dim] = msg_torus;
+        Self { data }
+    }
+
+    /// Fresh encryption under `key` with gaussian noise `sigma`.
+    pub fn encrypt(msg_torus: u64, key: &[u64], sigma: f64, rng: &mut Rng) -> Self {
+        let d = key.len();
+        let mut data = vec![0u64; d + 1];
+        let mut b = msg_torus.wrapping_add(rng.torus_gaussian(sigma));
+        for i in 0..d {
+            let a = rng.next_u64();
+            data[i] = a;
+            b = b.wrapping_add(a.wrapping_mul(key[i]));
+        }
+        data[d] = b;
+        Self { data }
+    }
+
+    /// Raw phase b - <a, s>.
+    pub fn decrypt_phase(&self, key: &[u64]) -> u64 {
+        debug_assert_eq!(key.len(), self.dim());
+        let mut acc = self.body();
+        for (a, s) in self.mask().iter().zip(key) {
+            acc = acc.wrapping_sub(a.wrapping_mul(*s));
+        }
+        acc
+    }
+
+    // ---------------------------------------------------------------- LPU ops
+
+    /// Homomorphic addition (noise adds).
+    pub fn add_assign(&mut self, other: &Self) {
+        debug_assert_eq!(self.data.len(), other.data.len());
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x = x.wrapping_add(*y);
+        }
+    }
+
+    pub fn sub_assign(&mut self, other: &Self) {
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x = x.wrapping_sub(*y);
+        }
+    }
+
+    /// Multiply by a small plaintext integer (noise scales by |c|).
+    pub fn scalar_mul_assign(&mut self, c: i64) {
+        let cu = c as u64;
+        for x in self.data.iter_mut() {
+            *x = x.wrapping_mul(cu);
+        }
+    }
+
+    /// Add a plaintext torus constant (only the body moves).
+    pub fn plain_add_assign(&mut self, msg_torus: u64) {
+        let last = self.data.len() - 1;
+        self.data[last] = self.data[last].wrapping_add(msg_torus);
+    }
+
+    pub fn neg_assign(&mut self) {
+        for x in self.data.iter_mut() {
+            *x = x.wrapping_neg();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+    use crate::tfhe::torus::{torus_distance, SecretKeys};
+    use crate::util::prop::check;
+
+    #[test]
+    fn encrypt_decrypt_within_noise() {
+        check("lwe_roundtrip", 20, |rng| {
+            let sk = SecretKeys::generate(&TEST1, rng);
+            let msg = (rng.below(16)) << 60;
+            let ct = LweCiphertext::encrypt(msg, &sk.lwe, TEST1.lwe_noise, rng);
+            let ph = ct.decrypt_phase(&sk.lwe);
+            let d = torus_distance(ph, msg);
+            if d > 1e-6 {
+                return Err(format!("noise too large: {d}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn homomorphic_add_sub() {
+        check("lwe_linear", 20, |rng| {
+            let sk = SecretKeys::generate(&TEST1, rng);
+            let m1 = (rng.below(8)) << 60;
+            let m2 = (rng.below(8)) << 60;
+            let mut a = LweCiphertext::encrypt(m1, &sk.lwe, TEST1.lwe_noise, rng);
+            let b = LweCiphertext::encrypt(m2, &sk.lwe, TEST1.lwe_noise, rng);
+            a.add_assign(&b);
+            if torus_distance(a.decrypt_phase(&sk.lwe), m1.wrapping_add(m2)) > 1e-6 {
+                return Err("add".into());
+            }
+            a.sub_assign(&b);
+            if torus_distance(a.decrypt_phase(&sk.lwe), m1) > 1e-6 {
+                return Err("sub".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scalar_and_plain_ops() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let m = 2u64 << 60;
+        let mut ct = LweCiphertext::encrypt(m, &sk.lwe, 0.0, &mut rng);
+        ct.scalar_mul_assign(3);
+        assert!(torus_distance(ct.decrypt_phase(&sk.lwe), 6u64 << 60) < 1e-9);
+        ct.plain_add_assign(1u64 << 60);
+        assert!(torus_distance(ct.decrypt_phase(&sk.lwe), 7u64 << 60) < 1e-9);
+        ct.neg_assign();
+        assert!(torus_distance(ct.decrypt_phase(&sk.lwe), (7u64 << 60).wrapping_neg()) < 1e-9);
+    }
+
+    #[test]
+    fn trivial_has_no_mask() {
+        let ct = LweCiphertext::trivial(42, 16);
+        assert!(ct.mask().iter().all(|&a| a == 0));
+        assert_eq!(ct.decrypt_phase(&vec![1u64; 16]), 42);
+    }
+}

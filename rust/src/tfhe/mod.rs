@@ -1,0 +1,31 @@
+//! From-scratch multi-bit TFHE library — the cryptographic substrate the
+//! paper's accelerator executes, and the native CPU execution backend.
+//!
+//! Mirrors `python/compile/tfhe_np.py` operation-for-operation; the shared
+//! conventions (torus = u64, gadget digits, GGSW row order, negacyclic
+//! half-size FFT twist) are documented in `python/compile/params.py`.
+//!
+//! Structure follows the PBS pipeline of the paper's Fig. 3:
+//! key-switching ([`ksk`]) -> mod-switch + blind rotation ([`pbs`], using
+//! [`ggsw`] external products over [`fft`]) -> sample extraction.
+
+pub mod bsk;
+pub mod decomp;
+pub mod encoding;
+pub mod fft;
+pub mod ggsw;
+pub mod glwe;
+pub mod ksk;
+pub mod lwe;
+pub mod pbs;
+pub mod poly;
+pub mod torus;
+
+pub use bsk::FourierBsk;
+pub use encoding::{decode, encode, make_lut_poly};
+pub use ggsw::FourierGgsw;
+pub use glwe::GlweCiphertext;
+pub use ksk::Ksk;
+pub use lwe::LweCiphertext;
+pub use pbs::{PbsContext, ServerKeys};
+pub use torus::SecretKeys;

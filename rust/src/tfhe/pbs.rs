@@ -1,0 +1,195 @@
+//! Programmable bootstrapping — the full pipeline of the paper's Fig. 3,
+//! in the key-switch-first order the paper adopts (§II-B):
+//!
+//!   long LWE --(A) keyswitch--> short LWE --(B) mod-switch-->
+//!   --(C) blind rotation--> GLWE --(D) sample extract--> long LWE
+//!
+//! [`PbsContext`] owns the FFT plan and all scratch so a PBS allocates
+//! nothing on the hot path.
+
+use super::bsk::FourierBsk;
+use super::fft::FftPlan;
+use super::ggsw::{cmux_rotate, ExtProdScratch};
+use super::glwe::GlweCiphertext;
+use super::ksk::Ksk;
+use super::lwe::LweCiphertext;
+use super::poly::rotate_into;
+use super::torus::SecretKeys;
+use crate::params::ParamSet;
+use crate::util::rng::Rng;
+
+/// Server-side evaluation keys (the paper's `ek`): BSK + KSK.
+pub struct ServerKeys {
+    pub params: ParamSet,
+    pub bsk: FourierBsk,
+    pub ksk: Ksk,
+}
+
+impl ServerKeys {
+    pub fn generate(sk: &SecretKeys, rng: &mut Rng) -> Self {
+        let plan = FftPlan::new(sk.params.big_n);
+        Self {
+            params: sk.params.clone(),
+            bsk: FourierBsk::generate(sk, rng, &plan),
+            ksk: Ksk::generate(sk, rng),
+        }
+    }
+}
+
+/// Mod-switch a torus value to Z_{2N} with rounding.
+#[inline]
+pub fn modswitch(x: u64, big_n: usize) -> usize {
+    let two_n = 2 * big_n;
+    let shift = 64 - two_n.trailing_zeros();
+    ((((x >> (shift - 1)) + 1) >> 1) as usize) % two_n
+}
+
+/// Execution context: FFT plan + scratch buffers, reusable across PBS
+/// calls (one per worker thread).
+pub struct PbsContext {
+    pub params: ParamSet,
+    pub plan: FftPlan,
+    scratch: ExtProdScratch,
+    rot_buf: Vec<u64>,
+}
+
+impl PbsContext {
+    pub fn new(params: &ParamSet) -> Self {
+        Self {
+            params: params.clone(),
+            plan: FftPlan::new(params.big_n),
+            scratch: ExtProdScratch::new(params),
+            rot_buf: vec![0; params.big_n],
+        }
+    }
+
+    /// Blind rotation (paper Fig. 3 (c)): returns the rotated accumulator.
+    pub fn blind_rotate(
+        &mut self,
+        ct_short: &LweCiphertext,
+        bsk: &FourierBsk,
+        lut_poly: &[u64],
+    ) -> GlweCiphertext {
+        let p = self.params.clone();
+        debug_assert_eq!(ct_short.dim(), p.n);
+        let two_n = 2 * p.big_n;
+        let b = modswitch(ct_short.body(), p.big_n);
+        let mut acc = GlweCiphertext::zero(p.k, p.big_n);
+        rotate_into(lut_poly, two_n - b, &mut self.rot_buf);
+        acc.body_mut().copy_from_slice(&self.rot_buf);
+        for (i, &a) in ct_short.mask().iter().enumerate() {
+            let a_i = modswitch(a, p.big_n);
+            if a_i != 0 {
+                cmux_rotate(&self.plan, &p, &bsk.ggsw[i], a_i, &mut acc, &mut self.scratch);
+            }
+        }
+        acc
+    }
+
+    /// Full PBS: keyswitch-first order, LUT evaluation + noise refresh.
+    pub fn pbs(&mut self, ct_long: &LweCiphertext, keys: &ServerKeys, lut_poly: &[u64]) -> LweCiphertext {
+        let short = keys.ksk.keyswitch(ct_long, &self.params);
+        let acc = self.blind_rotate(&short, &keys.bsk, lut_poly);
+        acc.sample_extract(&self.params)
+    }
+}
+
+/// Convenience client-side helpers for multi-bit messages at the long
+/// dimension (fresh ciphertexts enter the pipeline long, §II-B).
+pub fn encrypt_message(m: u64, sk: &SecretKeys, rng: &mut Rng) -> LweCiphertext {
+    let enc = super::encoding::encode(m, &sk.params);
+    LweCiphertext::encrypt(enc, sk.long_lwe(), sk.params.glwe_noise, rng)
+}
+
+pub fn decrypt_message(ct: &LweCiphertext, sk: &SecretKeys) -> u64 {
+    super::encoding::decode(ct.decrypt_phase(sk.long_lwe()), &sk.params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+    use crate::tfhe::encoding::make_lut_poly;
+
+    fn setup() -> (SecretKeys, ServerKeys, PbsContext, Rng) {
+        let mut rng = Rng::new(2024);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = ServerKeys::generate(&sk, &mut rng);
+        (sk, keys, PbsContext::new(&TEST1), rng)
+    }
+
+    #[test]
+    fn modswitch_values() {
+        assert_eq!(modswitch(0, 512), 0);
+        assert_eq!(modswitch(1u64 << 54, 512), 1);
+        assert_eq!(modswitch((1u64 << 54) - 1, 512), 1);
+        assert_eq!(modswitch(1u64 << 63, 512), 512);
+        assert_eq!(modswitch(u64::MAX, 512), 0);
+    }
+
+    #[test]
+    fn pbs_evaluates_identity_lut() {
+        let (sk, keys, mut ctx, mut rng) = setup();
+        let lut = make_lut_poly(&TEST1, |m| m);
+        for m in 0..8 {
+            let ct = encrypt_message(m, &sk, &mut rng);
+            let out = ctx.pbs(&ct, &keys, &lut);
+            assert_eq!(decrypt_message(&out, &sk), m, "m={m}");
+        }
+    }
+
+    #[test]
+    fn pbs_evaluates_nonlinear_luts() {
+        let (sk, keys, mut ctx, mut rng) = setup();
+        for (name, f) in [
+            ("square", (|m: u64| (m * m + 1) % 16) as fn(u64) -> u64),
+            ("relu", |m| m.saturating_sub(3)),
+            ("xor5", |m| m ^ 5),
+        ] {
+            let lut = make_lut_poly(&TEST1, f);
+            for m in 0..8 {
+                let ct = encrypt_message(m, &sk, &mut rng);
+                let out = ctx.pbs(&ct, &keys, &lut);
+                assert_eq!(decrypt_message(&out, &sk), f(m) % 16, "{name} m={m}");
+            }
+        }
+    }
+
+    #[test]
+    fn pbs_output_is_reusable_as_input() {
+        // The whole point of bootstrapping: outputs feed further PBS.
+        let (sk, keys, mut ctx, mut rng) = setup();
+        let inc = make_lut_poly(&TEST1, |m| (m + 1) % 16);
+        let mut ct = encrypt_message(2, &sk, &mut rng);
+        for _ in 0..3 {
+            ct = ctx.pbs(&ct, &keys, &inc);
+        }
+        assert_eq!(decrypt_message(&ct, &sk), 5);
+    }
+
+    #[test]
+    fn pbs_after_linear_ops() {
+        // hom-add two ciphertexts then LUT the sum (the multi-bit TFHE
+        // program pattern of Fig. 2(b)).
+        let (sk, keys, mut ctx, mut rng) = setup();
+        let double = make_lut_poly(&TEST1, |m| (2 * m) % 16);
+        let mut a = encrypt_message(3, &sk, &mut rng);
+        let b = encrypt_message(2, &sk, &mut rng);
+        a.add_assign(&b); // 5
+        let out = ctx.pbs(&a, &keys, &double);
+        assert_eq!(decrypt_message(&out, &sk), 10);
+    }
+
+    #[test]
+    fn pbs_refreshes_noise() {
+        let (sk, keys, mut ctx, mut rng) = setup();
+        let id = make_lut_poly(&TEST1, |m| m);
+        // Very noisy input (but still decodable).
+        let enc = super::super::encoding::encode(4, &TEST1);
+        let noisy = LweCiphertext::encrypt(enc, sk.long_lwe(), 2.0f64.powi(-14), &mut rng);
+        let out = ctx.pbs(&noisy, &keys, &id);
+        let ph = out.decrypt_phase(sk.long_lwe());
+        let err = crate::tfhe::torus::torus_distance(ph, enc);
+        assert!(err < 2.0f64.powi(-9), "post-PBS noise {err}");
+    }
+}

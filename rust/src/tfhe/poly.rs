@@ -1,0 +1,187 @@
+//! Torus polynomial helpers over Z_q[X]/(X^N + 1).
+
+use super::fft::{C64, FftPlan};
+
+/// out += a (wrapping, elementwise).
+#[inline]
+pub fn add_assign(out: &mut [u64], a: &[u64]) {
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o = o.wrapping_add(x);
+    }
+}
+
+/// out -= a (wrapping, elementwise).
+#[inline]
+pub fn sub_assign(out: &mut [u64], a: &[u64]) {
+    for (o, &x) in out.iter_mut().zip(a) {
+        *o = o.wrapping_sub(x);
+    }
+}
+
+/// out = -out.
+#[inline]
+pub fn neg_assign(out: &mut [u64]) {
+    for o in out.iter_mut() {
+        *o = o.wrapping_neg();
+    }
+}
+
+/// Multiply by X^r (r in [0, 2N)) into `out` (negacyclic rotation):
+/// out[j] = p[j - r] with a sign flip on wraparound.
+pub fn rotate_into(p: &[u64], r: usize, out: &mut [u64]) {
+    let n = p.len();
+    debug_assert_eq!(out.len(), n);
+    let r = r % (2 * n);
+    let (shift, flip) = if r < n { (r, false) } else { (r - n, true) };
+    // out[j] = p[j - shift] for j >= shift, -p[N + j - shift] for j < shift,
+    // all negated again if flip.
+    for j in 0..shift {
+        let v = p[n + j - shift].wrapping_neg();
+        out[j] = if flip { v.wrapping_neg() } else { v };
+    }
+    for j in shift..n {
+        let v = p[j - shift];
+        out[j] = if flip { v.wrapping_neg() } else { v };
+    }
+}
+
+/// out = X^r * p - p (the CMUX difference), fused to avoid a temp.
+pub fn rotate_sub_into(p: &[u64], r: usize, out: &mut [u64]) {
+    let n = p.len();
+    let r = r % (2 * n);
+    let (shift, flip) = if r < n { (r, false) } else { (r - n, true) };
+    for j in 0..shift {
+        let v = p[n + j - shift].wrapping_neg();
+        let v = if flip { v.wrapping_neg() } else { v };
+        out[j] = v.wrapping_sub(p[j]);
+    }
+    for j in shift..n {
+        let v = p[j - shift];
+        let v = if flip { v.wrapping_neg() } else { v };
+        out[j] = v.wrapping_sub(p[j]);
+    }
+}
+
+/// Exact-enough torus-by-binary polynomial product via FFT (used by key
+/// generation and decryption; the FFT rounding is orders of magnitude
+/// below every noise floor — see DESIGN.md). `out += a * s`.
+pub fn mul_binary_add_into(plan: &FftPlan, a_torus: &[u64], s_binary: &[u64], out: &mut [u64]) {
+    let n = a_torus.len();
+    let mut fa = vec![C64::default(); n / 2];
+    let mut fs = vec![C64::default(); n / 2];
+    plan.forward_negacyclic_torus(a_torus, &mut fa);
+    let s_signed: Vec<f64> = s_binary.iter().map(|&b| b as f64).collect();
+    plan.forward_negacyclic(&s_signed, &mut fs);
+    for j in 0..n / 2 {
+        fa[j] = fa[j].mul(fs[j]);
+    }
+    plan.inverse_negacyclic_add_torus(&mut fa, out);
+}
+
+/// `out -= a * s` for binary s.
+pub fn mul_binary_sub_into(plan: &FftPlan, a_torus: &[u64], s_binary: &[u64], out: &mut [u64]) {
+    let n = a_torus.len();
+    let mut tmp = vec![0u64; n];
+    mul_binary_add_into(plan, a_torus, s_binary, &mut tmp);
+    sub_assign(out, &tmp);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn rotate_by_zero_is_identity() {
+        let p: Vec<u64> = (0..8).collect();
+        let mut out = vec![0u64; 8];
+        rotate_into(&p, 0, &mut out);
+        assert_eq!(out, p);
+    }
+
+    #[test]
+    fn rotate_n_negates_and_2n_identity() {
+        let p: Vec<u64> = (1..9).collect();
+        let mut out = vec![0u64; 8];
+        rotate_into(&p, 8, &mut out);
+        let neg: Vec<u64> = p.iter().map(|x| x.wrapping_neg()).collect();
+        assert_eq!(out, neg);
+        rotate_into(&p, 16, &mut out);
+        assert_eq!(out, p);
+    }
+
+    #[test]
+    fn rotate_composes() {
+        check("rotate_compose", 30, |rng| {
+            let n = 32;
+            let p: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let r1 = rng.below_usize(2 * n);
+            let r2 = rng.below_usize(2 * n);
+            let mut a = vec![0u64; n];
+            let mut b = vec![0u64; n];
+            rotate_into(&p, r1, &mut a);
+            rotate_into(&a, r2, &mut b);
+            let mut direct = vec![0u64; n];
+            rotate_into(&p, (r1 + r2) % (2 * n), &mut direct);
+            if b != direct {
+                return Err(format!("r1={r1} r2={r2}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rotate_sub_matches_separate_ops() {
+        check("rotate_sub", 30, |rng| {
+            let n = 16;
+            let p: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let r = rng.below_usize(2 * n);
+            let mut rot = vec![0u64; n];
+            rotate_into(&p, r, &mut rot);
+            let expected: Vec<u64> =
+                rot.iter().zip(&p).map(|(a, b)| a.wrapping_sub(*b)).collect();
+            let mut fused = vec![0u64; n];
+            rotate_sub_into(&p, r, &mut fused);
+            if fused != expected {
+                return Err(format!("r={r}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mul_binary_matches_schoolbook() {
+        let mut rng = Rng::new(9);
+        let n = 64;
+        let plan = FftPlan::new(n);
+        let a: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+        let s: Vec<u64> = (0..n).map(|_| rng.next_u64() & 1).collect();
+        let mut fast = vec![0u64; n];
+        mul_binary_add_into(&plan, &a, &s, &mut fast);
+        // Schoolbook: sum of rotations for set bits.
+        let mut exact = vec![0u64; n];
+        let mut rot = vec![0u64; n];
+        for (j, &bit) in s.iter().enumerate() {
+            if bit == 1 {
+                rotate_into(&a, j, &mut rot);
+                add_assign(&mut exact, &rot);
+            }
+        }
+        for (f, e) in fast.iter().zip(&exact) {
+            let err = (f.wrapping_sub(*e) as i64).unsigned_abs();
+            assert!(err < 1 << 16, "err={err}"); // ~2^-48 of the torus
+        }
+    }
+
+    #[test]
+    fn add_sub_neg_wrap() {
+        let mut a = vec![u64::MAX, 1];
+        add_assign(&mut a, &[1, 2]);
+        assert_eq!(a, vec![0, 3]);
+        sub_assign(&mut a, &[1, 5]);
+        assert_eq!(a, vec![u64::MAX, u64::MAX.wrapping_sub(1)]);
+        neg_assign(&mut a);
+        assert_eq!(a, vec![1, 2]);
+    }
+}

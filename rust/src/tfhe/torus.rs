@@ -1,0 +1,78 @@
+//! Torus arithmetic helpers and secret keys.
+//!
+//! The discretized torus T is represented as u64 (w = 64 fixed-point
+//! fractions of [0,1), paper §II-A2); all arithmetic wraps mod 2^64.
+
+use crate::params::ParamSet;
+use crate::util::rng::Rng;
+
+/// Torus element type alias (documentation aid).
+pub type Torus = u64;
+
+/// Interpret a torus element as a signed fraction in [-1/2, 1/2).
+#[inline]
+pub fn torus_to_signed_frac(x: Torus) -> f64 {
+    (x as i64 as f64) / 18446744073709551616.0
+}
+
+/// Absolute distance on the torus (<= 1/2).
+#[inline]
+pub fn torus_distance(a: Torus, b: Torus) -> f64 {
+    torus_to_signed_frac(a.wrapping_sub(b)).abs()
+}
+
+/// Client-side secrets: binary short-LWE key and binary GLWE key. The
+/// "long" LWE key is the flattened GLWE key (sample-extraction order).
+#[derive(Debug, Clone)]
+pub struct SecretKeys {
+    pub params: ParamSet,
+    /// n bits (0/1 as u64).
+    pub lwe: Vec<u64>,
+    /// k*N bits, row-major by GLWE polynomial.
+    pub glwe: Vec<u64>,
+}
+
+impl SecretKeys {
+    pub fn generate(params: &ParamSet, rng: &mut Rng) -> Self {
+        let lwe = (0..params.n).map(|_| rng.next_u64() & 1).collect();
+        let glwe = (0..params.long_dim()).map(|_| rng.next_u64() & 1).collect();
+        Self { params: params.clone(), lwe, glwe }
+    }
+
+    /// GLWE key polynomial c (length N).
+    pub fn glwe_poly(&self, c: usize) -> &[u64] {
+        let n = self.params.big_n;
+        &self.glwe[c * n..(c + 1) * n]
+    }
+
+    /// The long (extracted) LWE key = flattened GLWE key.
+    pub fn long_lwe(&self) -> &[u64] {
+        &self.glwe
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+
+    #[test]
+    fn keys_are_binary_and_sized() {
+        let mut rng = Rng::new(1);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        assert_eq!(sk.lwe.len(), TEST1.n);
+        assert_eq!(sk.glwe.len(), TEST1.long_dim());
+        assert!(sk.lwe.iter().all(|&b| b <= 1));
+        assert!(sk.glwe.iter().all(|&b| b <= 1));
+        // Should be roughly balanced.
+        let ones: u64 = sk.glwe.iter().sum();
+        assert!(ones > 180 && ones < 330, "ones={ones}");
+    }
+
+    #[test]
+    fn torus_distance_wraps() {
+        assert!(torus_distance(u64::MAX, 0) < 1e-18);
+        assert!((torus_distance(1u64 << 63, 0) - 0.5).abs() < 1e-12);
+        assert!((torus_distance(1u64 << 62, 0) - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Small dependency-free utilities.
+//!
+//! The build image has no network access and its cargo registry cache only
+//! contains the `xla` crate's dependency closure, so the conventional crates
+//! (serde/rand/criterion/proptest/clap) are unavailable. These modules
+//! provide the minimal equivalents the rest of the crate needs; see
+//! DESIGN.md §Substitutions.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

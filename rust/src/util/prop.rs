@@ -1,0 +1,86 @@
+//! Miniature property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded
+//! inputs; on failure it reports the failing seed so the case can be
+//! replayed deterministically with `replay(seed, f)`.
+
+use super::rng::Rng;
+
+/// Run `f` for `cases` random cases. `f` gets a fresh deterministic RNG per
+/// case and returns `Err(msg)` to signal a counterexample.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Derive per-case seeds from the property name so adding properties
+    // doesn't perturb others.
+    let base = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
+        (h ^ b as u64).wrapping_mul(0x100000001b3)
+    });
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed on case {case} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("replay {seed:#x} failed: {msg}");
+    }
+}
+
+/// Assert two f64 slices are elementwise close.
+pub fn assert_allclose(a: &[f64], b: &[f64], atol: f64, rtol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        if (x - y).abs() > tol {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("trivial", 25, |rng| {
+            n += 1;
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        assert!(assert_allclose(&[1.0], &[1.0 + 1e-9], 1e-8, 0.0).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-8, 0.0).is_err());
+        assert!(assert_allclose(&[100.0], &[100.5], 0.0, 0.01).is_ok());
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0], 0.1, 0.0).is_err());
+    }
+}

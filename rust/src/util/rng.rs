@@ -1,0 +1,174 @@
+//! Deterministic PRNG (xoshiro256++) + Gaussian sampling.
+//!
+//! NOT a CSPRNG — this reproduction studies noise *statistics* and system
+//! behaviour, not real-world key secrecy (DESIGN.md §Substitutions). The
+//! generator is seedable so every test/experiment is reproducible.
+
+/// xoshiro256++ seeded via SplitMix64.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box-Muller output.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed into the xoshiro state.
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()], spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let [s0, s1, s2, s3] = self.s;
+        let result = s0.wrapping_add(s3).rotate_left(23).wrapping_add(s0);
+        let t = s1 << 17;
+        let mut s = [s0, s1, s2, s3];
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        self.s = s;
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Lemire-style multiply-shift rejection.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= lo.wrapping_neg() % bound {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform `usize` in [0, bound).
+    #[inline]
+    pub fn below_usize(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.uniform();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (sin, cos) = (std::f64::consts::TAU * u2).sin_cos();
+            self.spare = Some(r * sin);
+            return r * cos;
+        }
+    }
+
+    /// Torus-valued Gaussian noise: round(N(0, sigma) * 2^64) as wrapping u64,
+    /// where `sigma` is the noise standard deviation as a fraction of the
+    /// torus (i.e. in [0,1)).
+    pub fn torus_gaussian(&mut self, sigma: f64) -> u64 {
+        let x = self.gaussian() * sigma;
+        // Map real -> torus by scaling to 2^64 and wrapping.
+        let scaled = x * 18446744073709551616.0; // 2^64
+        (scaled.round() as i64) as u64
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below_usize(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_nontrivial() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert!(va.windows(2).any(|w| w[0] != w[1]));
+        let mut c = Rng::new(43);
+        assert_ne!(va[0], c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_mean() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Rng::new(9);
+        for bound in [1u64, 2, 3, 10, 48, 1 << 40] {
+            for _ in 0..200 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn torus_gaussian_small_sigma_stays_small() {
+        let mut r = Rng::new(13);
+        let sigma = 2.0f64.powi(-40);
+        for _ in 0..1000 {
+            let e = r.torus_gaussian(sigma) as i64;
+            // |e| should be well below 2^30 for sigma = 2^-40 (2^24 * 64 sigma).
+            assert!((e.unsigned_abs() as f64) < 2.0f64.powi(30));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,137 @@
+//! ASCII table rendering + CSV writing for the eval harness, matching the
+//! row/column layout of the paper's tables so paper-vs-measured comparison
+//! is eyeball-able.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "== {} ==", self.title);
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(out, "{:<w$}", c, w = widths[i] + if i + 1 < ncol { 2 } else { 0 });
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    /// Write as CSV (RFC-4180-ish quoting).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        s.push_str(&self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        s.push('\n');
+        for r in &self.rows {
+            s.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            s.push('\n');
+        }
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, s)
+    }
+}
+
+/// Format a float with engineering-friendly precision.
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1000.0 {
+        format!("{:.0}", x)
+    } else if x.abs() >= 10.0 {
+        format!("{:.2}", x)
+    } else if x.abs() >= 0.01 {
+        format!("{:.3}", x)
+    } else {
+        format!("{:.3e}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["xxxx".into(), "y".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.lines().count() >= 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn csv_quoting() {
+        let mut t = Table::new("", &["a,b", "c"]);
+        t.row(vec!["x\"y".into(), "z".into()]);
+        let dir = std::env::temp_dir().join("taurus_csv_test");
+        let p = dir.join("t.csv");
+        t.write_csv(&p).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.starts_with("\"a,b\",c\n"));
+        assert!(s.contains("\"x\"\"y\",z"));
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(1234.5), "1234");
+        assert_eq!(fnum(12.345), "12.35");
+        assert_eq!(fnum(0.5), "0.500");
+        assert!(fnum(1e-5).contains('e'));
+    }
+}

@@ -1,0 +1,67 @@
+//! Quantized CNN workloads (paper: Concrete-ML CNN-20 / CNN-50 [7],
+//! post-training quantization, 6-bit). Each layer is a sparse linear
+//! transform (dot products over the previous activations — bootstrap-free,
+//! Fig. 2b step 4) followed by a quantized-ReLU LUT per neuron (step 5).
+
+use crate::ir::builder::ProgramBuilder;
+use crate::ir::{LutTable, Program, ValueId};
+
+/// Build an `layers`-deep CNN with `neurons` activations per layer, each
+/// neuron reading `taps` of the previous layer, replicated for `batch`
+/// independent queries (the Fig. 15 batch dimension).
+pub fn cnn(layers: usize, neurons: usize, taps: usize, batch: usize) -> Program {
+    let width = 6;
+    let mut b = ProgramBuilder::new(format!("cnn-{layers}"), width);
+    // One shared quantized-ReLU table -> ACC-dedup shares the accumulator.
+    let relu = LutTable::from_fn(width, |m| m.saturating_sub(8).min(31));
+    let mut lanes: Vec<Vec<ValueId>> = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        lanes.push(b.inputs(neurons.min(32)));
+    }
+    for layer in 0..layers {
+        for lane in lanes.iter_mut() {
+            let prev = lane.clone();
+            let mut next = Vec::with_capacity(neurons);
+            for j in 0..neurons {
+                let t = taps.min(prev.len());
+                let ins: Vec<ValueId> = (0..t).map(|i| prev[(j + i) % prev.len()]).collect();
+                // Small signed PTQ weights; vary by position for realism.
+                let ws: Vec<i64> = (0..t).map(|i| (((layer + j + i) % 5) as i64) - 2).collect();
+                let acc = b.dot(ins, ws, (j % 4) as u64);
+                next.push(b.lut(acc, relu.clone()));
+            }
+            *lane = next;
+        }
+    }
+    for lane in &lanes {
+        // Classifier head: sum a handful of logits.
+        let outs: Vec<ValueId> = lane.iter().take(10).copied().collect();
+        let ws = vec![1i64; outs.len()];
+        let logit = b.dot(outs, ws, 0);
+        b.output(logit);
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cnn20_shape_matches_calibration() {
+        let p = cnn(20, 100, 16, 1);
+        assert_eq!(p.pbs_count(), 2000, "20 layers x 100 neurons");
+        assert_eq!(p.pbs_depth(), 20, "one PBS level per layer");
+        assert!(p.linear_count() >= 2000, "a dot per neuron");
+    }
+
+    #[test]
+    fn single_shared_relu_table() {
+        use crate::compiler::{acc_dedup_stats, lower};
+        let p = cnn(5, 20, 8, 1);
+        let g = lower(&p);
+        let stats = acc_dedup_stats(&g, &crate::params::CNN20);
+        assert_eq!(stats.after, 1, "ACC-dedup collapses all ReLUs");
+        assert!(stats.bytes_reduction_pct() > 90.0);
+    }
+}

@@ -1,0 +1,72 @@
+//! KNN classifier workload (paper: sklearn-based, 3 neighbors, 30 leaves,
+//! 9-bit). Distance computation is linear; the sorting network that finds
+//! the nearest neighbors is a serial cascade of encrypted comparisons —
+//! the paper's prototypically *serial* workload (Fig. 15: 75% utilization
+//! only at batch 8).
+
+use crate::ir::builder::ProgramBuilder;
+use crate::ir::{LutTable, Program, ValueId};
+
+/// `levels` compare-exchange stages over `lanes` distance lanes.
+pub fn knn(levels: usize, lanes: usize, batch: usize) -> Program {
+    let width = 9;
+    let mut b = ProgramBuilder::new("knn", width);
+    assert!(lanes % 2 == 0, "paired LUTs per compare-exchange");
+    let lanes = lanes / 2;
+    let half = 1u64 << (width - 1);
+    // Compare-exchange probes the difference twice — sign and magnitude —
+    // sharing one key switch (the §V KS-dedup fanout pattern).
+    let sign = LutTable::from_fn(width, move |m| u64::from(m >= half));
+    let magn = LutTable::from_fn(width, move |m| {
+        // |centered difference| folded into [0, half); the table domain
+        // spans the full padded space [0, 4*half).
+        let mm = m % (2 * half);
+        if mm >= half { (2 * half - mm) % half } else { mm }
+    });
+    for _ in 0..batch {
+        // Squared-distance accumulation (linear, bootstrap-free).
+        let feats = b.inputs(lanes);
+        let mut dists: Vec<ValueId> = (0..lanes)
+            .map(|j| {
+                let ins = vec![feats[j], feats[(j + 1) % lanes]];
+                b.dot(ins, vec![1, 1], (j % 8) as u64)
+            })
+            .collect();
+        // Odd-even transposition-style selection cascade.
+        for lvl in 0..levels {
+            let mut next = dists.clone();
+            for j in 0..lanes {
+                let a = dists[j];
+                let c = dists[(j + 1) % lanes];
+                let diff = b.sub(a, c);
+                let s = b.lut(diff, sign.clone());
+                let m = b.lut(diff, magn.clone());
+                // Blend back (linear approximation of the select).
+                next[j] = b.dot(vec![a, s, m], vec![1, ((lvl % 2) as i64) - 1, 1], 0);
+            }
+            dists = next;
+        }
+        let ws = vec![1i64; 3.min(dists.len())];
+        let vote = b.dot(dists.iter().take(3).copied().collect(), ws, 0);
+        b.output(vote);
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knn_shape_matches_calibration() {
+        let p = knn(31, 30, 1);
+        assert_eq!(p.pbs_count(), 31 * 30);
+        assert_eq!(p.pbs_depth(), 31);
+        assert_eq!(p.width, 9);
+    }
+
+    #[test]
+    fn batch_replicates_queries() {
+        assert_eq!(knn(5, 6, 3).pbs_count(), 3 * knn(5, 6, 1).pbs_count());
+    }
+}

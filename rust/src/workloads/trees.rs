@@ -1,0 +1,118 @@
+//! Tree-ensemble workloads: the sklearn decision-tree classifier (9-bit,
+//! Bioresponse, depth 18 / 91 nodes) and the XGBoost regressor (8-bit,
+//! Ames Housing, 50 estimators x depth 4) of Table II.
+//!
+//! Concrete-ML lowers tree inference to sequences of encrypted
+//! comparisons (LUT step functions) combined linearly — long dependent
+//! chains with modest per-level parallelism, which is exactly why these
+//! are the paper's low-utilization workloads (Fig. 15).
+
+use crate::ir::builder::ProgramBuilder;
+use crate::ir::{LutTable, Program, ValueId};
+
+/// Serial comparison cascade: `levels` dependent steps, each evaluating
+/// `luts_per_level` LUTs. Each frontier value is probed by TWO step
+/// functions (the branch-taken and leaf-contribution tables of the same
+/// node) — the fanout pattern KS-dedup exploits (§V: "multi-bit TFHE
+/// programs commonly apply multiple different LUTs to the same
+/// ciphertext").
+fn cascade(name: &str, width: usize, levels: usize, luts_per_level: usize, batch: usize) -> Program {
+    assert!(luts_per_level % 2 == 0, "paired LUTs per value");
+    let parallel = luts_per_level / 2;
+    let mut b = ProgramBuilder::new(name, width);
+    let pt_half = 1u64 << width;
+    // A few distinct threshold tables (step functions) reused across the
+    // tree — ACC-dedup's target pattern.
+    let tables: Vec<LutTable> = (1..=4)
+        .map(|t| {
+            let thr = (t as u64 * pt_half) / 5;
+            LutTable::from_fn(width, move |m| u64::from(m >= thr))
+        })
+        .collect();
+    let leaf_tables: Vec<LutTable> = (1..=4)
+        .map(|t| {
+            let thr = (t as u64 * pt_half) / 5;
+            LutTable::from_fn(width, move |m| u64::from(m < thr) * (t as u64))
+        })
+        .collect();
+    for _ in 0..batch {
+        let mut frontier: Vec<ValueId> = b.inputs(parallel);
+        for lvl in 0..levels {
+            let mut next = Vec::with_capacity(parallel);
+            for (j, &v) in frontier.iter().enumerate() {
+                // Two LUTs on the same value share one key switch.
+                let taken = b.lut(v, tables[(lvl + j) % tables.len()].clone());
+                let leaf = b.lut(v, leaf_tables[(lvl + j) % leaf_tables.len()].clone());
+                next.push((taken, leaf));
+            }
+            // Feature re-combination for the next level (kept linear).
+            frontier = (0..parallel)
+                .map(|j| {
+                    let (a, l) = next[j];
+                    let (c, _) = next[(j + 1) % parallel];
+                    b.dot(vec![a, l, c], vec![2, 1, 1], 0)
+                })
+                .collect();
+        }
+        let ws = vec![1i64; frontier.len()];
+        let score = b.dot(frontier.clone(), ws, 0);
+        b.output(score);
+    }
+    b.finish()
+}
+
+/// Decision-tree classifier (paper: 18 max depth, 91 nodes, 7-bit
+/// quantization run at the 9-bit parameter set).
+pub fn decision_tree(levels: usize, parallel: usize, batch: usize) -> Program {
+    cascade("decision_tree", 9, levels, parallel, batch)
+}
+
+/// XGBoost regressor (50 estimators x depth 4; estimators are parallel in
+/// bursts but the quantized aggregation serializes between depths).
+pub fn xgboost(levels: usize, parallel: usize, batch: usize) -> Program {
+    cascade("xgboost", 8, levels, parallel, batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_tree_is_deep_and_narrow() {
+        let p = decision_tree(75, 14, 1);
+        assert_eq!(p.pbs_count(), 75 * 14);
+        assert_eq!(p.pbs_depth(), 75);
+        assert_eq!(p.width, 9);
+    }
+
+    #[test]
+    fn xgboost_shape() {
+        let p = xgboost(40, 10, 1);
+        assert_eq!(p.pbs_count(), 400);
+        assert_eq!(p.pbs_depth(), 40);
+        assert_eq!(p.width, 8);
+    }
+
+    #[test]
+    fn functional_on_test_params() {
+        // The cascade structure must actually compute: run a tiny instance
+        // against the plaintext interpreter through the encrypted engine.
+        use crate::compiler::{Engine, NativePbsBackend};
+        use crate::ir::interp;
+        use crate::params::TEST1;
+        use crate::tfhe::pbs::{decrypt_message, encrypt_message};
+        use crate::tfhe::{SecretKeys, ServerKeys};
+        use crate::util::rng::Rng;
+        let prog = cascade("tiny", 3, 2, 4, 1); // 2 values x 2 LUTs per level
+        let mut rng = Rng::new(5);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = ServerKeys::generate(&sk, &mut rng);
+        let mut eng = Engine::new(NativePbsBackend::new(&keys));
+        let inputs = [3u64, 6]; // parallel = 2 frontier values
+        let cts: Vec<_> = inputs.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
+        let out = eng.run(&prog, &cts);
+        let exp = interp::eval(&prog, &inputs);
+        let got: Vec<u64> = out.iter().map(|c| decrypt_message(c, &sk)).collect();
+        assert_eq!(got, exp);
+    }
+}

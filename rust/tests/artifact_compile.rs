@@ -1,0 +1,16 @@
+//! Artifacts parse + compile on the PJRT CPU client (full execution is
+//! covered by `pbs_xla_vs_native.rs` once keys are generated natively).
+use taurus::runtime::XlaEngine;
+
+#[test]
+fn artifacts_compile() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut eng = XlaEngine::new(dir).expect("engine");
+    for (name, tag) in [("blind_rotate", "test1"), ("keyswitch", "test1")] {
+        eng.executable(name, tag).unwrap_or_else(|e| panic!("{name}:{tag}: {e:?}"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Integration: frontend IR -> compiler -> (a) functional engine,
+//! (b) architecture simulator — the full compile-execute-evaluate path on
+//! one program, plus cross-workload compiler sanity.
+
+use taurus::arch::{simulate, TaurusConfig};
+use taurus::arch::xpu::{simulate_xpu, XpuConfig};
+use taurus::baselines::{cpu_model, EPYC_7R13};
+use taurus::compiler::{compile, Engine, NativePbsBackend};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::interp;
+use taurus::params::{GPT2, TEST1};
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+use taurus::workloads;
+
+#[test]
+fn full_pipeline_on_one_program() {
+    // A program with every op kind.
+    let mut b = ProgramBuilder::new("pipeline", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let u = b.input(); // bivariate operands must stay below 2^(w/2) = 2
+    let v = b.input();
+    let s = b.add(x, y);
+    let d = b.dot(vec![s, x], vec![2, -1], 1);
+    let l1 = b.lut_fn(d, |m| (m + 5) % 16);
+    let l2 = b.lut_fn(d, |m| m ^ 3); // fanout: shares the KS with l1
+    let t = b.sub(l1, l2);
+    let biv = b.biv_lut_fn(u, v, |a, bb| a.max(bb));
+    let out = b.add(t, biv);
+    b.output(out);
+    let prog = b.finish();
+
+    // Compile: KS-dedup must fire on the fanout.
+    let cfg = TaurusConfig::default();
+    let c = compile(&prog, &TEST1, cfg.batch_capacity());
+    assert_eq!(c.ks_dedup.before, 3);
+    assert_eq!(c.ks_dedup.after, 2);
+
+    // Functional execution == plaintext interpreter.
+    let mut rng = Rng::new(77);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = ServerKeys::generate(&sk, &mut rng);
+    let mut eng = Engine::new(NativePbsBackend::new(&keys));
+    for (mx, my, mu, mv) in [(1u64, 2u64, 1u64, 0u64), (3, 3, 0, 1), (0, 7, 1, 1)] {
+        let cts = vec![
+            encrypt_message(mx, &sk, &mut rng),
+            encrypt_message(my, &sk, &mut rng),
+            encrypt_message(mu, &sk, &mut rng),
+            encrypt_message(mv, &sk, &mut rng),
+        ];
+        let got: Vec<u64> =
+            eng.run(&prog, &cts).iter().map(|ct| decrypt_message(ct, &sk)).collect();
+        assert_eq!(got, interp::eval(&prog, &[mx, my, mu, mv]), "({mx},{my},{mu},{mv})");
+    }
+
+    // Simulation: nonzero time, sane utilization, all PBS accounted.
+    let r = simulate(&c, &cfg);
+    assert_eq!(r.pbs_count, prog.pbs_count());
+    assert!(r.seconds > 0.0);
+    assert!(r.utilization > 0.0 && r.utilization <= 1.0);
+}
+
+#[test]
+fn table2_shape_taurus_beats_cpu_and_xpu_everywhere() {
+    // Cross-workload pipeline check at the paper parameter sets (skip the
+    // 12-head build to keep CI time sane).
+    let cfg = TaurusConfig::default();
+    let xc = XpuConfig::default();
+    for w in workloads::all() {
+        if w.name.contains("12-head") {
+            continue;
+        }
+        let prog = (w.build)(1);
+        let c = compile(&prog, w.params, cfg.batch_capacity());
+        let taurus = simulate(&c, &cfg).seconds;
+        let cpu = cpu_model::program_seconds(&c, &EPYC_7R13);
+        let xpu = simulate_xpu(&c, &xc).seconds;
+        assert!(cpu / taurus > 100.0, "{}: cpu speedup {}", w.name, cpu / taurus);
+        let sp = xpu / taurus;
+        assert!(sp > 2.0 && sp < 12.0, "{}: xpu speedup {sp}", w.name);
+        // Within ~3x of the paper's absolute Taurus milliseconds.
+        let ratio = (taurus * 1e3) / w.paper_taurus_ms;
+        assert!(ratio > 0.3 && ratio < 3.0, "{}: taurus {}ms vs paper {}ms", w.name, taurus * 1e3, w.paper_taurus_ms);
+    }
+}
+
+#[test]
+fn gpt2_workload_runs_functionally_at_test_scale() {
+    // The GPT-2 generator's structure (dots + LUT stages) must execute
+    // correctly when built tiny at the test parameter set.
+    use taurus::ir::LutTable;
+    let mut b = ProgramBuilder::new("gpt2-tiny", TEST1.width);
+    let tables: Vec<LutTable> = vec![
+        LutTable::from_fn(3, |m| (m + 1) / 2),
+        LutTable::from_fn(3, |m| m.saturating_sub(1)),
+    ];
+    let mut stream = b.inputs(4);
+    for lvl in 0..3 {
+        let mixed: Vec<_> = (0..4)
+            .map(|j| {
+                let ins = vec![stream[j], stream[(j + 1) % 4]];
+                b.dot(ins, vec![1, 1], 0)
+            })
+            .collect();
+        stream = mixed.iter().map(|&v| b.lut(v, tables[lvl % 2].clone())).collect();
+    }
+    let out = b.dot(stream, vec![1, 1, 1, 1], 0);
+    b.output(out);
+    let prog = b.finish();
+
+    let mut rng = Rng::new(88);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = ServerKeys::generate(&sk, &mut rng);
+    let mut eng = Engine::new(NativePbsBackend::new(&keys));
+    let inputs = [1u64, 2, 0, 3];
+    let cts: Vec<_> = inputs.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
+    let got: Vec<u64> = eng.run(&prog, &cts).iter().map(|c| decrypt_message(c, &sk)).collect();
+    assert_eq!(got, interp::eval(&prog, &inputs));
+}
+
+#[test]
+fn simulator_scaling_sanity() {
+    // More clusters -> faster (parallel workload); fewer -> slower.
+    let w = workloads::by_name("GPT2").unwrap();
+    let prog = (w.build)(1);
+    let mut cfg = TaurusConfig::default();
+    let c = compile(&prog, &GPT2, cfg.batch_capacity());
+    let t4 = simulate(&c, &cfg).seconds;
+    cfg.clusters = 8;
+    let c8 = compile(&prog, &GPT2, cfg.batch_capacity());
+    let t8 = simulate(&c8, &cfg).seconds;
+    assert!(t8 < t4, "8 clusters {t8} vs 4 {t4}");
+    cfg.clusters = 2;
+    let c2 = compile(&prog, &GPT2, cfg.batch_capacity());
+    let t2 = simulate(&c2, &cfg).seconds;
+    assert!(t2 > t4, "2 clusters {t2} vs 4 {t4}");
+}

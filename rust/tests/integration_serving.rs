@@ -1,0 +1,131 @@
+//! Integration: the serving coordinator over both backends, checking
+//! functional correctness, metrics accounting, and failure behaviour.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use taurus::coordinator::{BackendKind, Coordinator, CoordinatorOptions};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::{interp, Program};
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+
+fn demo_program() -> Program {
+    let mut b = ProgramBuilder::new("demo", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.dot(vec![x, y], vec![1, 2], 0);
+    let r = b.lut_fn(d, |m| (m + 1) % 16);
+    b.output(r);
+    b.finish()
+}
+
+fn run_requests(backend: BackendKind, workers: usize, n: usize) {
+    let mut rng = Rng::new(99);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = demo_program();
+    let coord = Coordinator::start(
+        prog.clone(),
+        keys,
+        CoordinatorOptions {
+            workers,
+            batch_capacity: 4,
+            max_batch_wait: Duration::from_millis(1),
+            backend,
+        },
+    );
+    let mut pending = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..n {
+        let q = [(i % 5) as u64, ((i * 2) % 5) as u64];
+        expected.push(interp::eval(&prog, &q)[0]);
+        let cts = vec![encrypt_message(q[0], &sk, &mut rng), encrypt_message(q[1], &sk, &mut rng)];
+        pending.push(coord.submit(cts));
+    }
+    for (rx, exp) in pending.iter().zip(&expected) {
+        let outs = rx.recv().expect("response");
+        assert_eq!(decrypt_message(&outs[0], &sk), *exp);
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.requests, n);
+    assert_eq!(snap.pbs_executed, n * prog.pbs_count());
+    assert!(snap.p99_latency_ms >= snap.p50_latency_ms);
+    coord.shutdown();
+}
+
+#[test]
+fn native_backend_serves_correctly() {
+    run_requests(BackendKind::Native, 2, 10);
+}
+
+#[test]
+fn xla_backend_serves_correctly() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    run_requests(BackendKind::Xla { artifacts_dir: dir.into() }, 1, 4);
+}
+
+#[test]
+fn single_worker_preserves_order_per_client() {
+    // With one worker and batch capacity 1, responses arrive in
+    // submission order.
+    let mut rng = Rng::new(123);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = demo_program();
+    let coord = Coordinator::start(
+        prog.clone(),
+        keys,
+        CoordinatorOptions {
+            workers: 1,
+            batch_capacity: 1,
+            max_batch_wait: Duration::from_millis(0),
+            backend: BackendKind::Native,
+        },
+    );
+    let rxs: Vec<_> = (0..5u64)
+        .map(|i| {
+            coord.submit(vec![
+                encrypt_message(i % 4, &sk, &mut rng),
+                encrypt_message(1, &sk, &mut rng),
+            ])
+        })
+        .collect();
+    for (i, rx) in rxs.iter().enumerate() {
+        let outs = rx.recv().unwrap();
+        let exp = interp::eval(&prog, &[(i as u64) % 4, 1])[0];
+        assert_eq!(decrypt_message(&outs[0], &sk), exp, "request {i}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn dropped_client_does_not_poison_workers() {
+    let mut rng = Rng::new(7);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = demo_program();
+    let coord = Coordinator::start(prog.clone(), keys, Default::default());
+    // Submit and immediately drop the receiver.
+    {
+        let _ = coord.submit(vec![
+            encrypt_message(1, &sk, &mut rng),
+            encrypt_message(2, &sk, &mut rng),
+        ]);
+    }
+    // A subsequent request must still be served.
+    let rx = coord.submit(vec![
+        encrypt_message(2, &sk, &mut rng),
+        encrypt_message(2, &sk, &mut rng),
+    ]);
+    let outs = rx.recv().expect("served after dropped client");
+    let exp = interp::eval(&prog, &[2, 2])[0];
+    assert_eq!(decrypt_message(&outs[0], &sk), exp);
+    coord.shutdown();
+}

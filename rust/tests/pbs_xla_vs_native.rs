@@ -1,0 +1,91 @@
+//! End-to-end equivalence: the AOT XLA path (JAX+Pallas artifacts executed
+//! via PJRT) and the native Rust TFHE path must evaluate the same LUTs on
+//! the same ciphertexts — the core integration proof of the three-layer
+//! architecture.
+
+use taurus::params::TEST1;
+use taurus::runtime::XlaPbsBackend;
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{make_lut_poly, PbsContext, SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
+        Some(dir.to_string())
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn xla_and_native_pbs_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(42);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = ServerKeys::generate(&sk, &mut rng);
+    let backend = XlaPbsBackend::new(&dir, &TEST1, &keys.bsk, &keys.ksk).expect("backend");
+    let mut ctx = PbsContext::new(&TEST1);
+
+    let f = |m: u64| (3 * m + 1) % 16;
+    let lut = make_lut_poly(&TEST1, f);
+    for m in 0..8u64 {
+        let ct = encrypt_message(m, &sk, &mut rng);
+        let native = ctx.pbs(&ct, &keys, &lut);
+        let xla_out = backend.pbs(&ct, &lut).expect("xla pbs");
+        let dm_native = decrypt_message(&native, &sk);
+        let dm_xla = decrypt_message(&xla_out, &sk);
+        assert_eq!(dm_native, f(m), "native m={m}");
+        assert_eq!(dm_xla, f(m), "xla m={m}");
+    }
+}
+
+#[test]
+fn xla_keyswitch_matches_native_bitexact() {
+    // Key switching is pure integer arithmetic: the XLA path must agree
+    // with the native path to the bit.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(7);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = ServerKeys::generate(&sk, &mut rng);
+    let backend = XlaPbsBackend::new(&dir, &TEST1, &keys.bsk, &keys.ksk).expect("backend");
+    for m in [0u64, 5, 7] {
+        let ct = encrypt_message(m, &sk, &mut rng);
+        let native = keys.ksk.keyswitch(&ct, &TEST1);
+        let via_xla = backend.keyswitch(&ct).expect("ks");
+        assert_eq!(native.data, via_xla.data, "m={m}");
+    }
+}
+
+#[test]
+fn xla_blind_rotate_phase_matches_native() {
+    // Blind rotation goes through f64 FFTs on both sides (different FFT
+    // implementations), so compare decrypted phases, not bits.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rng = Rng::new(9);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = ServerKeys::generate(&sk, &mut rng);
+    let backend = XlaPbsBackend::new(&dir, &TEST1, &keys.bsk, &keys.ksk).expect("backend");
+    let mut ctx = PbsContext::new(&TEST1);
+    let lut = make_lut_poly(&TEST1, |m| m);
+    let ct = encrypt_message(3, &sk, &mut rng);
+    let short = keys.ksk.keyswitch(&ct, &TEST1);
+
+    let native_acc = ctx.blind_rotate(&short, &keys.bsk, &lut);
+    let xla_flat = backend.blind_rotate(&short, &lut).expect("br");
+    assert_eq!(xla_flat.len(), native_acc.data.len());
+    let xla_acc = taurus::tfhe::GlweCiphertext {
+        data: xla_flat,
+        k: TEST1.k,
+        big_n: TEST1.big_n,
+    };
+    use taurus::tfhe::fft::FftPlan;
+    let plan = FftPlan::new(TEST1.big_n);
+    let ph_native = native_acc.decrypt_phase(&sk, &plan);
+    let ph_xla = xla_acc.decrypt_phase(&sk, &plan);
+    for (a, b) in ph_native.iter().zip(&ph_xla) {
+        let d = taurus::tfhe::torus::torus_distance(*a, *b);
+        assert!(d < 2.0f64.powi(-14), "phase divergence {d}");
+    }
+}

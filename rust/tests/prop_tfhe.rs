@@ -1,0 +1,208 @@
+//! Property-based tests over the TFHE substrate and compiler invariants
+//! (mini property harness: `taurus::util::prop`).
+
+use taurus::compiler::{self, compile, PrimKind};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::{interp, LutTable};
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{make_lut_poly, PbsContext, SecretKeys, ServerKeys};
+use taurus::util::prop::check;
+use taurus::util::rng::Rng;
+
+/// Shared fixture: keygen once (dominates test time).
+struct Fixture {
+    sk: SecretKeys,
+    keys: ServerKeys,
+}
+
+fn fixture() -> &'static Fixture {
+    use std::sync::OnceLock;
+    static F: OnceLock<Fixture> = OnceLock::new();
+    F.get_or_init(|| {
+        let mut rng = Rng::new(0xF1);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = ServerKeys::generate(&sk, &mut rng);
+        Fixture { sk, keys }
+    })
+}
+
+#[test]
+fn prop_pbs_evaluates_random_luts() {
+    let f = fixture();
+    let mut ctx = PbsContext::new(&TEST1);
+    check("pbs_random_lut", 12, |rng| {
+        // Random table over the half-space (messages 0..8 with padding).
+        let table: Vec<u64> = (0..16).map(|_| rng.below(16)).collect();
+        let t2 = table.clone();
+        let lut = make_lut_poly(&TEST1, move |m| t2[m as usize]);
+        let m = rng.below(8);
+        let ct = encrypt_message(m, &f.sk, rng);
+        let out = ctx.pbs(&ct, &f.keys, &lut);
+        let got = decrypt_message(&out, &f.sk);
+        let exp = table[m as usize] % 16;
+        if got != exp {
+            return Err(format!("m={m} got {got} exp {exp}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linear_ops_homomorphic() {
+    let f = fixture();
+    check("linear_homomorphism", 25, |rng| {
+        let (a, b) = (rng.below(8), rng.below(8));
+        let c = (rng.below(5) as i64) - 2;
+        let mut ct = encrypt_message(a, &f.sk, rng);
+        let ct_b = encrypt_message(b, &f.sk, rng);
+        ct.add_assign(&ct_b);
+        ct.scalar_mul_assign(c);
+        let exp = (((a + b) as i64 * c).rem_euclid(16)) as u64;
+        let got = decrypt_message(&ct, &f.sk);
+        if got != exp {
+            return Err(format!("({a}+{b})*{c}: got {got} exp {exp}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_programs_encrypted_equals_plaintext() {
+    // Generate random small programs; encrypted execution must equal the
+    // plaintext interpreter on random inputs.
+    let f = fixture();
+    check("random_program_equivalence", 6, |rng| {
+        let mut b = ProgramBuilder::new("rand", TEST1.width);
+        let mut vals = b.inputs(2 + rng.below_usize(3));
+        let n_inputs = vals.len();
+        for _ in 0..(3 + rng.below_usize(5)) {
+            let pick = |rng: &mut Rng, vals: &Vec<usize>| vals[rng.below_usize(vals.len())];
+            let v = match rng.below(4) {
+                0 => {
+                    let (x, y) = (pick(rng, &vals), pick(rng, &vals));
+                    b.add(x, y)
+                }
+                1 => {
+                    let x = pick(rng, &vals);
+                    b.mul_plain(x, (rng.below(3) as i64) + 1)
+                }
+                2 => {
+                    let x = pick(rng, &vals);
+                    let off = rng.below(8);
+                    b.lut_fn(x, move |m| (m + off) % 16)
+                }
+                _ => {
+                    let (x, y) = (pick(rng, &vals), pick(rng, &vals));
+                    b.dot(vec![x, y], vec![1, -1], rng.below(4))
+                }
+            };
+            vals.push(v);
+        }
+        b.output(*vals.last().unwrap());
+        let prog = b.finish();
+        let inputs: Vec<u64> = (0..n_inputs).map(|_| rng.below(8)).collect();
+        let cts: Vec<_> = inputs.iter().map(|&m| encrypt_message(m, &f.sk, rng)).collect();
+        let mut eng = compiler::Engine::new(compiler::NativePbsBackend::new(&f.keys));
+        let got: Vec<u64> =
+            eng.run(&prog, &cts).iter().map(|c| decrypt_message(c, &f.sk)).collect();
+        let exp = interp::eval(&prog, &inputs);
+        if got != exp {
+            return Err(format!(
+                "prog pbs={} inputs={inputs:?}: {got:?} != {exp:?}",
+                prog.pbs_count()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ks_dedup_preserves_schedule_feasibility() {
+    // Compiler invariant: after KS-dedup, every BR still has exactly one
+    // KS dep, the graph stays topologically ordered, and the batch
+    // schedule covers every BR exactly once.
+    check("dedup_schedule_invariants", 10, |rng| {
+        let mut b = ProgramBuilder::new("rand", 3);
+        let xs = b.inputs(1 + rng.below_usize(4));
+        let mut frontier = xs.clone();
+        for _ in 0..(1 + rng.below_usize(3)) {
+            let mut next = vec![];
+            for &v in &frontier {
+                let fanout = 1 + rng.below_usize(3);
+                for k in 0..fanout {
+                    next.push(b.lut_fn(v, move |m| (m + k as u64) % 16));
+                }
+            }
+            frontier = next;
+        }
+        b.output(*frontier.last().unwrap());
+        let prog = b.finish();
+        let c = compile(&prog, &TEST1, 48);
+        c.graph.validate().map_err(|e| e.to_string())?;
+        // Every BR has exactly one KS dep.
+        for op in &c.graph.ops {
+            if PrimKind::is_blind_rotate(&op.kind) {
+                let ks_deps = op
+                    .deps
+                    .iter()
+                    .filter(|&&d| PrimKind::is_keyswitch(&c.graph.ops[d].kind))
+                    .count();
+                if ks_deps != 1 {
+                    return Err(format!("BR {} has {ks_deps} KS deps", op.id));
+                }
+            }
+        }
+        // Schedule covers every BR exactly once.
+        let mut seen = std::collections::HashSet::new();
+        for batch in &c.schedule.batches {
+            if batch.br_ops.len() > 48 {
+                return Err("batch overflow".into());
+            }
+            for &br in &batch.br_ops {
+                if !seen.insert(br) {
+                    return Err(format!("BR {br} scheduled twice"));
+                }
+            }
+        }
+        if seen.len() != c.graph.pbs_count() {
+            return Err(format!("scheduled {} of {} BRs", seen.len(), c.graph.pbs_count()));
+        }
+        // Dedup never increases KS count and never changes BR count.
+        if c.ks_dedup.after > c.ks_dedup.before {
+            return Err("dedup increased KS count".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lut_table_negacyclic_semantics_match_engine() {
+    // The interpreter's negacyclic LUT model is exactly what PBS computes,
+    // including past the padding bit.
+    let f = fixture();
+    let mut ctx = PbsContext::new(&TEST1);
+    check("negacyclic_interp_vs_engine", 8, |rng| {
+        let off = rng.below(8);
+        let table = LutTable::from_fn(3, move |m| (3 * m + off) % 16);
+        let tv = table.values.clone();
+        let lut = make_lut_poly(&TEST1, move |m| tv[m as usize]);
+        let m = rng.below(16); // deliberately allow padding-bit overflow
+        let ct = encrypt_message(m, &f.sk, rng);
+        let out = ctx.pbs(&ct, &f.keys, &lut);
+        let got = decrypt_message(&out, &f.sk);
+        // Plaintext model:
+        let prog = {
+            let mut b = ProgramBuilder::new("one", 3);
+            let x = b.input();
+            let y = b.lut(x, table.clone());
+            b.output(y);
+            b.finish()
+        };
+        let exp = interp::eval(&prog, &[m])[0];
+        if got != exp {
+            return Err(format!("m={m}: engine {got} vs interp {exp}"));
+        }
+        Ok(())
+    });
+}
