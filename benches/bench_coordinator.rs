@@ -29,6 +29,8 @@ fn main() {
     let sk = SecretKeys::generate(&TEST1, &mut rng);
     let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
 
+    let full_bsk = keys.bsk.bytes() as f64;
+
     section("coordinator throughput (1 PBS/query, TEST1, native)");
     for workers in [1usize, 2, 4, 8] {
         let coord = Coordinator::start(
@@ -62,6 +64,43 @@ fn main() {
             snap.p50_latency_ms,
             snap.p99_latency_ms,
             snap.mean_batch_size
+        );
+        coord.shutdown();
+    }
+
+    section("batch-capacity sweep (2 workers): fused sweeps amortize the BSK stream");
+    for capacity in [1usize, 4, 8, 16] {
+        let coord = Coordinator::start(
+            prog.clone(),
+            keys.clone(),
+            CoordinatorOptions {
+                workers: 2,
+                batch_capacity: capacity,
+                max_batch_wait: Duration::from_millis(2),
+                backend: BackendKind::Native,
+            },
+        );
+        let n = 96;
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = (0..n)
+            .map(|i| {
+                coord.submit(vec![
+                    encrypt_message((i % 6) as u64, &sk, &mut rng),
+                    encrypt_message(1, &sk, &mut rng),
+                ])
+            })
+            .collect();
+        for rx in &pending {
+            let _ = rx.recv().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = coord.metrics.snapshot();
+        println!(
+            "capacity={capacity:<3} {:>7.1} req/s   mean batch {:>5.2}   BSK {:>12.0} B/PBS ({:>5.2}x reuse vs full stream)",
+            n as f64 / wall,
+            snap.mean_batch_size,
+            snap.bsk_bytes_per_pbs,
+            full_bsk / snap.bsk_bytes_per_pbs.max(1.0),
         );
         coord.shutdown();
     }

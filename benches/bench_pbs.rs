@@ -1,47 +1,97 @@
-//! End-to-end PBS latency: native Rust path at the functional-test sets
-//! and (artifact-gated) the AOT XLA path — the numbers behind
-//! EXPERIMENTS.md §Perf and the native-vs-XLA comparison.
+//! End-to-end PBS latency and the batched key-reuse sweep: sequential
+//! `pbs` vs `pbs_batch` at batch sizes {1, 4, 8, 16}, with amortized
+//! Fourier-BSK bytes streamed per PBS — the numbers behind EXPERIMENTS.md
+//! §Perf change 4. Emits `BENCH_pbs.json` (ns/PBS + BSK bytes/PBS per
+//! batch size) so CI can track the perf trajectory across PRs.
 
 #[path = "harness.rs"]
 mod harness;
 
 use harness::{bench, section};
-use taurus::params::{TEST1, TEST2};
+use taurus::params::{ParamSet, TEST1, TEST2};
 use taurus::tfhe::pbs::encrypt_message;
 use taurus::tfhe::{make_lut_poly, PbsContext, SecretKeys, ServerKeys};
+use taurus::util::json::{arr, num, obj, s, JsonValue};
 use taurus::util::rng::Rng;
+
+fn sweep_param_set(p: &'static ParamSet, rng: &mut Rng, rows: &mut Vec<JsonValue>) {
+    let sk = SecretKeys::generate(p, rng);
+    let keys = ServerKeys::generate(&sk, rng);
+    let mut ctx = PbsContext::new(p);
+    let lut = make_lut_poly(p, |m| m);
+
+    // Sequential baseline (batch the same count through one-at-a-time pbs
+    // so per-PBS time is comparable at identical working sets).
+    let ct = encrypt_message(3, &sk, rng);
+    let seq = bench(&format!("pbs {} sequential (n={} N={})", p.name, p.n, p.big_n), 0.8, || {
+        std::hint::black_box(ctx.pbs(&ct, &keys, &lut));
+    });
+    let seq_ns = seq.mean_s * 1e9;
+    ctx.take_bsk_bytes_streamed();
+    ctx.pbs(&ct, &keys, &lut);
+    let seq_bsk = ctx.take_bsk_bytes_streamed() as f64;
+
+    for bsz in [1usize, 4, 8, 16] {
+        let cts: Vec<_> =
+            (0..bsz).map(|i| encrypt_message(i as u64 % 8, &sk, rng)).collect();
+        // Exact per-batch BSK traffic, measured outside the timing loop.
+        ctx.take_bsk_bytes_streamed();
+        std::hint::black_box(ctx.pbs_batch(&cts, &keys, &lut));
+        let bsk_per_pbs = ctx.take_bsk_bytes_streamed() as f64 / bsz as f64;
+        let r = bench(&format!("  pbs_batch {} B={bsz}", p.name), 0.6, || {
+            std::hint::black_box(ctx.pbs_batch(&cts, &keys, &lut));
+        });
+        let ns_per_pbs = r.mean_s * 1e9 / bsz as f64;
+        let speedup = seq_ns / ns_per_pbs;
+        let reuse = seq_bsk / bsk_per_pbs;
+        println!(
+            "      {:>12.0} ns/PBS   {:>9.2}x vs seq   BSK {:>12.0} B/PBS (reuse {:>5.1}x)",
+            ns_per_pbs, speedup, bsk_per_pbs, reuse
+        );
+        rows.push(obj(vec![
+            ("params", s(p.name)),
+            ("batch", num(bsz as f64)),
+            ("ns_per_pbs", num(ns_per_pbs)),
+            ("seq_ns_per_pbs", num(seq_ns)),
+            ("speedup_vs_seq", num(speedup)),
+            ("bsk_bytes_per_pbs", num(bsk_per_pbs)),
+            ("bsk_reuse_factor", num(reuse)),
+        ]));
+    }
+}
 
 fn main() {
     let mut rng = Rng::new(3);
+    let mut rows: Vec<JsonValue> = Vec::new();
 
-    section("native PBS (keyswitch + blind rotate + extract)");
+    section("native PBS: sequential vs batched blind rotation (key reuse)");
     for p in [&TEST1, &TEST2] {
-        let sk = SecretKeys::generate(p, &mut rng);
-        let keys = ServerKeys::generate(&sk, &mut rng);
-        let mut ctx = PbsContext::new(p);
-        let lut = make_lut_poly(p, |m| m);
-        let ct = encrypt_message(3, &sk, &mut rng);
-        bench(&format!("pbs {} (n={} N={})", p.name, p.n, p.big_n), 1.0, || {
-            std::hint::black_box(ctx.pbs(&ct, &keys, &lut));
-        });
-        let short = keys.ksk.keyswitch(&ct, p);
-        bench(&format!("  keyswitch only {}", p.name), 0.4, || {
-            std::hint::black_box(keys.ksk.keyswitch(&ct, p));
-        });
-        bench(&format!("  blind rotate only {}", p.name), 0.6, || {
-            std::hint::black_box(ctx.blind_rotate(&short, &keys.bsk, &lut));
-        });
+        sweep_param_set(p, &mut rng, &mut rows);
     }
 
+    let report = obj(vec![("bench", s("pbs")), ("results", arr(rows))]);
+    let path = "BENCH_pbs.json";
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+
+    #[cfg(feature = "xla")]
+    xla_section(&mut rng);
+}
+
+/// AOT XLA PBS (PJRT; needs `make artifacts` and the `xla` feature).
+#[cfg(feature = "xla")]
+fn xla_section(rng: &mut Rng) {
     section("AOT XLA PBS (PJRT; needs `make artifacts`)");
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if std::path::Path::new(&format!("{dir}/manifest.json")).exists() {
-        let sk = SecretKeys::generate(&TEST1, &mut rng);
-        let keys = ServerKeys::generate(&sk, &mut rng);
+        let sk = SecretKeys::generate(&TEST1, rng);
+        let keys = ServerKeys::generate(&sk, rng);
         let be = taurus::runtime::XlaPbsBackend::new(dir, &TEST1, &keys.bsk, &keys.ksk)
             .expect("backend");
         let lut = make_lut_poly(&TEST1, |m| m);
-        let ct = encrypt_message(3, &sk, &mut rng);
+        let ct = encrypt_message(3, &sk, rng);
         bench("xla pbs test1", 2.0, || {
             std::hint::black_box(be.pbs(&ct, &lut).unwrap());
         });

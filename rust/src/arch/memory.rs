@@ -72,6 +72,14 @@ pub fn batch_traffic(p: &ParamSet, cfg: &TaurusConfig, cts: usize) -> Traffic {
     t
 }
 
+/// Amortized Fourier-BSK bytes streamed per PBS for one batch of `cts`
+/// ciphertexts — the model-side counterpart of the native pipeline's
+/// measured `bsk_bytes_streamed / pbs` (key reuse divides the stream by
+/// the in-flight batch; restreaming rounds multiply it back).
+pub fn amortized_bsk_bytes_per_pbs(p: &ParamSet, cfg: &TaurusConfig, cts: usize) -> f64 {
+    batch_traffic(p, cfg, cts).bsk as f64 / cts.max(1) as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -112,6 +120,20 @@ mod tests {
         let t_small = batch_traffic(p, &cfg, 48);
         assert!(t_small.bsk > t_default.bsk, "BSK restreamed");
         assert!(t_small.swap > 0, "accumulators spill");
+    }
+
+    #[test]
+    fn amortized_bsk_traffic_scales_inversely_with_batch() {
+        // Key reuse: doubling the in-flight batch halves BSK bytes/PBS as
+        // long as everything stays resident (one stream shared by all).
+        let mut cfg = TaurusConfig::default();
+        cfg.clusters = 1;
+        cfg.rr_ciphertexts = 16;
+        let p = &GPT2;
+        let b1 = amortized_bsk_bytes_per_pbs(p, &cfg, 1);
+        let b8 = amortized_bsk_bytes_per_pbs(p, &cfg, 8);
+        assert_eq!(b1, bsk_stream_bytes(p, &cfg) as f64);
+        assert!((b1 / b8 - 8.0).abs() < 1e-9, "b1/b8 = {}", b1 / b8);
     }
 
     #[test]

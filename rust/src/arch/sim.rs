@@ -28,6 +28,10 @@ pub struct SimResult {
     /// Fraction of batch windows that were memory-bound ("bandwidth
     /// deficit", Fig. 13b).
     pub bw_deficit: f64,
+    /// Amortized Fourier-BSK bytes streamed per PBS over the whole run —
+    /// directly comparable with the native pipeline's measured
+    /// `MetricsSnapshot::bsk_bytes_per_pbs` (key-reuse cross-check).
+    pub bsk_bytes_per_pbs: f64,
 }
 
 /// Simulate one compiled program on a Taurus configuration.
@@ -144,6 +148,7 @@ pub fn simulate_schedule(s: &Schedule, p: &ParamSet, cfg: &TaurusConfig) -> SimR
         } else {
             mem_bound_windows as f64 / s.batches.len() as f64
         },
+        bsk_bytes_per_pbs: if pbs > 0 { total_traffic.bsk as f64 / pbs as f64 } else { 0.0 },
     }
 }
 
@@ -265,5 +270,21 @@ mod tests {
         let r = simulate(&c, &cfg);
         assert!(r.seconds > 0.0 && r.seconds < 1.0);
         assert_eq!(r.pbs_count, 10);
+    }
+
+    #[test]
+    fn amortized_bsk_bytes_reported_and_batch_sensitive() {
+        // Fully parallel program: one 48-ct batch amortizes the stream
+        // ~48x relative to a fully serial chain of the same PBS count.
+        let cfg = TaurusConfig::default();
+        let wide_r = simulate(&compile(&wide(48, 6), &GPT2, cfg.batch_capacity()), &cfg);
+        let chain_r = simulate(&compile(&chain(48, 6), &GPT2, cfg.batch_capacity()), &cfg);
+        assert!(wide_r.bsk_bytes_per_pbs > 0.0);
+        let ratio = chain_r.bsk_bytes_per_pbs / wide_r.bsk_bytes_per_pbs;
+        assert!(ratio > 10.0, "serial should pay far more BSK/PBS: ratio {ratio}");
+        let model =
+            super::super::memory::amortized_bsk_bytes_per_pbs(&GPT2, &cfg, cfg.batch_capacity());
+        let rel = (wide_r.bsk_bytes_per_pbs - model).abs() / model;
+        assert!(rel < 1e-9, "sim {} vs memory model {}", wide_r.bsk_bytes_per_pbs, model);
     }
 }

@@ -119,6 +119,7 @@ pub fn simulate_schedule_xpu(s: &Schedule, p: &ParamSet, x: &XpuConfig) -> super
         batches: s.batches.len(),
         pbs_count: pbs,
         bw_deficit: if s.batches.is_empty() { 0.0 } else { mem_bound as f64 / s.batches.len() as f64 },
+        bsk_bytes_per_pbs: if pbs > 0 { traffic.bsk as f64 / pbs as f64 } else { 0.0 },
     }
 }
 

@@ -12,7 +12,22 @@ use crate::tfhe::{LweCiphertext, PbsContext, ServerKeys};
 /// A PBS implementation (one bootstrap, LUT polynomial pre-encoded).
 pub trait PbsBackend {
     fn pbs(&mut self, ct_long: &LweCiphertext, lut_poly: &[u64]) -> LweCiphertext;
+
+    /// Batched PBS over one shared LUT. Backends that can fuse the blind
+    /// rotations (streaming each BSK row once per batch) override this;
+    /// the default is the sequential fallback.
+    fn pbs_batch(&mut self, cts: &[LweCiphertext], lut_poly: &[u64]) -> Vec<LweCiphertext> {
+        cts.iter().map(|ct| self.pbs(ct, lut_poly)).collect()
+    }
+
     fn params(&self) -> &ParamSet;
+
+    /// Drain the backend's Fourier-BSK traffic counter (bytes streamed by
+    /// blind rotations since the last call); 0 for backends that don't
+    /// track it.
+    fn take_bsk_bytes_streamed(&mut self) -> u64 {
+        0
+    }
 }
 
 /// Native (pure-Rust) backend.
@@ -32,11 +47,22 @@ impl PbsBackend for NativePbsBackend<'_> {
         self.ctx.pbs(ct_long, self.keys, lut_poly)
     }
 
+    fn pbs_batch(&mut self, cts: &[LweCiphertext], lut_poly: &[u64]) -> Vec<LweCiphertext> {
+        self.ctx.pbs_batch(cts, self.keys, lut_poly)
+    }
+
     fn params(&self) -> &ParamSet {
         &self.keys.params
     }
+
+    fn take_bsk_bytes_streamed(&mut self) -> u64 {
+        self.ctx.take_bsk_bytes_streamed()
+    }
 }
 
+/// The XLA artifacts execute one blind rotation per invocation, so this
+/// backend keeps the sequential `pbs_batch` fallback.
+#[cfg(feature = "xla")]
 impl PbsBackend for crate::runtime::XlaPbsBackend {
     fn pbs(&mut self, ct_long: &LweCiphertext, lut_poly: &[u64]) -> LweCiphertext {
         crate::runtime::XlaPbsBackend::pbs(self, ct_long, lut_poly).expect("xla pbs")
@@ -64,84 +90,139 @@ impl<B: PbsBackend> Engine<B> {
         self.lut_cache.len()
     }
 
+    /// Drain the backend's Fourier-BSK traffic counter (see
+    /// [`PbsBackend::take_bsk_bytes_streamed`]).
+    pub fn take_bsk_bytes_streamed(&mut self) -> u64 {
+        self.backend.take_bsk_bytes_streamed()
+    }
+
+    fn lut_for(&mut self, p: &ParamSet, table: &crate::ir::LutTable) -> Vec<u64> {
+        self.lut_cache
+            .entry(table.hash)
+            .or_insert_with(|| {
+                let vals = table.values.clone();
+                encoding::make_lut_poly(p, move |m| vals[m as usize])
+            })
+            .clone()
+    }
+
     /// Execute `prog` on encrypted inputs; returns encrypted outputs.
     pub fn run(&mut self, prog: &Program, inputs: &[LweCiphertext]) -> Vec<LweCiphertext> {
-        assert_eq!(inputs.len(), prog.input_count(), "input arity");
+        let mut outs = self.run_batch_slices(prog, &[inputs]);
+        outs.pop().unwrap()
+    }
+
+    /// Execute `prog` for a whole batch of requests in lockstep (see
+    /// [`Self::run_batch_slices`]). Convenience wrapper over owned
+    /// per-request input vectors.
+    pub fn run_batch(
+        &mut self,
+        prog: &Program,
+        batch: &[Vec<LweCiphertext>],
+    ) -> Vec<Vec<LweCiphertext>> {
+        let refs: Vec<&[LweCiphertext]> = batch.iter().map(Vec::as_slice).collect();
+        self.run_batch_slices(prog, &refs)
+    }
+
+    /// Execute `prog` for a whole batch of requests in lockstep: every
+    /// node is evaluated across the batch before moving to the next, so
+    /// each `Lut`/`BivLut` node becomes ONE [`PbsBackend::pbs_batch`]
+    /// call — a fused blind-rotation sweep that streams each BSK row once
+    /// per batch (the paper's key-reuse schedule) instead of once per
+    /// request. Returns one output vector per request, in request order.
+    pub fn run_batch_slices(
+        &mut self,
+        prog: &Program,
+        batch: &[&[LweCiphertext]],
+    ) -> Vec<Vec<LweCiphertext>> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        for inputs in batch {
+            assert_eq!(inputs.len(), prog.input_count(), "input arity");
+        }
         let p = self.backend.params().clone();
         assert_eq!(p.width, prog.width, "program width must match params");
         let delta = p.delta();
-        let mut vals: Vec<Option<LweCiphertext>> = vec![None; prog.nodes.len()];
+        let nb = batch.len();
+        // vals[node] = one ciphertext per request.
+        let mut vals: Vec<Option<Vec<LweCiphertext>>> = vec![None; prog.nodes.len()];
         let mut next_input = 0usize;
         for (i, node) in prog.nodes.iter().enumerate() {
-            let out = match node {
+            let out: Vec<LweCiphertext> = match node {
                 Op::Input => {
-                    let ct = inputs[next_input].clone();
+                    let idx = next_input;
                     next_input += 1;
-                    ct
+                    batch.iter().map(|inputs| inputs[idx].clone()).collect()
                 }
-                Op::Add(a, b) => {
-                    let mut ct = vals[*a].clone().unwrap();
-                    ct.add_assign(vals[*b].as_ref().unwrap());
-                    ct
-                }
-                Op::Sub(a, b) => {
-                    let mut ct = vals[*a].clone().unwrap();
-                    ct.sub_assign(vals[*b].as_ref().unwrap());
-                    ct
-                }
-                Op::AddPlain(a, c) => {
-                    let mut ct = vals[*a].clone().unwrap();
-                    ct.plain_add_assign(c.wrapping_mul(delta));
-                    ct
-                }
-                Op::MulPlain(a, c) => {
-                    let mut ct = vals[*a].clone().unwrap();
-                    ct.scalar_mul_assign(*c);
-                    ct
-                }
-                Op::Dot { inputs: xs, weights, bias } => {
-                    let mut acc = LweCiphertext::trivial(bias.wrapping_mul(delta), p.long_dim());
-                    for (x, &w) in xs.iter().zip(weights) {
-                        if w == 0 {
-                            continue;
+                Op::Add(a, b) => (0..nb)
+                    .map(|q| {
+                        let mut ct = vals[*a].as_ref().unwrap()[q].clone();
+                        ct.add_assign(&vals[*b].as_ref().unwrap()[q]);
+                        ct
+                    })
+                    .collect(),
+                Op::Sub(a, b) => (0..nb)
+                    .map(|q| {
+                        let mut ct = vals[*a].as_ref().unwrap()[q].clone();
+                        ct.sub_assign(&vals[*b].as_ref().unwrap()[q]);
+                        ct
+                    })
+                    .collect(),
+                Op::AddPlain(a, c) => (0..nb)
+                    .map(|q| {
+                        let mut ct = vals[*a].as_ref().unwrap()[q].clone();
+                        ct.plain_add_assign(c.wrapping_mul(delta));
+                        ct
+                    })
+                    .collect(),
+                Op::MulPlain(a, c) => (0..nb)
+                    .map(|q| {
+                        let mut ct = vals[*a].as_ref().unwrap()[q].clone();
+                        ct.scalar_mul_assign(*c);
+                        ct
+                    })
+                    .collect(),
+                Op::Dot { inputs: xs, weights, bias } => (0..nb)
+                    .map(|q| {
+                        let mut acc =
+                            LweCiphertext::trivial(bias.wrapping_mul(delta), p.long_dim());
+                        for (x, &w) in xs.iter().zip(weights) {
+                            if w == 0 {
+                                continue;
+                            }
+                            let mut t = vals[*x].as_ref().unwrap()[q].clone();
+                            t.scalar_mul_assign(w);
+                            acc.add_assign(&t);
                         }
-                        let mut t = vals[*x].clone().unwrap();
-                        t.scalar_mul_assign(w);
-                        acc.add_assign(&t);
-                    }
-                    acc
-                }
+                        acc
+                    })
+                    .collect(),
                 Op::Lut { input, table } => {
-                    let lut = self
-                        .lut_cache
-                        .entry(table.hash)
-                        .or_insert_with(|| {
-                            let vals = table.values.clone();
-                            encoding::make_lut_poly(&p, move |m| vals[m as usize])
-                        })
-                        .clone();
-                    self.backend.pbs(vals[*input].as_ref().unwrap(), &lut)
+                    let lut = self.lut_for(&p, table);
+                    self.backend.pbs_batch(vals[*input].as_ref().unwrap(), &lut)
                 }
                 Op::BivLut { a, b, table } => {
                     // pack = x * 2^(w/2) + y, then univariate LUT.
                     let scale = encoding::bivariate_scale(&p) as i64;
-                    let mut packed = vals[*a].clone().unwrap();
-                    packed.scalar_mul_assign(scale);
-                    packed.add_assign(vals[*b].as_ref().unwrap());
-                    let lut = self
-                        .lut_cache
-                        .entry(table.hash)
-                        .or_insert_with(|| {
-                            let vals = table.values.clone();
-                            encoding::make_lut_poly(&p, move |m| vals[m as usize])
+                    let packed: Vec<LweCiphertext> = (0..nb)
+                        .map(|q| {
+                            let mut ct = vals[*a].as_ref().unwrap()[q].clone();
+                            ct.scalar_mul_assign(scale);
+                            ct.add_assign(&vals[*b].as_ref().unwrap()[q]);
+                            ct
                         })
-                        .clone();
-                    self.backend.pbs(&packed, &lut)
+                        .collect();
+                    let lut = self.lut_for(&p, table);
+                    self.backend.pbs_batch(&packed, &lut)
                 }
             };
+            debug_assert_eq!(out.len(), nb);
             vals[i] = Some(out);
         }
-        prog.outputs.iter().map(|&o| vals[o].clone().unwrap()).collect()
+        (0..nb)
+            .map(|q| prog.outputs.iter().map(|&o| vals[o].as_ref().unwrap()[q].clone()).collect())
+            .collect()
     }
 }
 
@@ -221,6 +302,41 @@ mod tests {
         assert_eq!(eng.cached_accumulators(), 1, "one table -> one accumulator");
         for (m, ct) in out.iter().enumerate() {
             assert_eq!(decrypt_message(ct, &sk), (m as u64) ^ 1);
+        }
+    }
+
+    #[test]
+    fn run_batch_matches_per_request_run() {
+        let (sk, keys, mut rng) = setup();
+        let mut b = ProgramBuilder::new("batched", 3);
+        let x = b.input();
+        let y = b.input();
+        let s = b.add(x, y);
+        let l = b.lut_fn(s, |m| (m * 3 + 1) % 16);
+        let g = b.biv_lut_fn(x, y, |a, bb| a | bb);
+        let o = b.add(l, g);
+        b.output(o);
+        let prog = b.finish();
+
+        let queries: Vec<(u64, u64)> = vec![(1, 0), (0, 1), (1, 1), (2, 0), (3, 1)];
+        let batch: Vec<Vec<LweCiphertext>> = queries
+            .iter()
+            .map(|&(mx, my)| {
+                vec![encrypt_message(mx, &sk, &mut rng), encrypt_message(my, &sk, &mut rng)]
+            })
+            .collect();
+
+        let mut eng = Engine::new(NativePbsBackend::new(&keys));
+        let batched = eng.run_batch(&prog, &batch);
+        assert!(eng.take_bsk_bytes_streamed() > 0, "traffic counter wired through");
+        let mut eng2 = Engine::new(NativePbsBackend::new(&keys));
+        for (q, (inputs, &(mx, my))) in batch.iter().zip(&queries).enumerate() {
+            let single = eng2.run(&prog, inputs);
+            let exp = interp::eval(&prog, &[mx, my]);
+            let got: Vec<u64> = batched[q].iter().map(|c| decrypt_message(c, &sk)).collect();
+            let got_single: Vec<u64> = single.iter().map(|c| decrypt_message(c, &sk)).collect();
+            assert_eq!(got, exp, "batched q={q}");
+            assert_eq!(got_single, exp, "single q={q}");
         }
     }
 

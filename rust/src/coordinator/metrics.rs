@@ -13,6 +13,7 @@ struct Inner {
     batch_sizes: Vec<f64>,
     requests: usize,
     pbs_executed: usize,
+    bsk_bytes_streamed: u64,
 }
 
 /// Thread-safe metrics sink shared by batcher and workers.
@@ -33,6 +34,12 @@ pub struct MetricsSnapshot {
     pub mean_queue_ms: f64,
     pub throughput_rps: f64,
     pub elapsed_s: f64,
+    /// Total Fourier-BSK bytes the workers' blind rotations streamed.
+    pub bsk_bytes_streamed: u64,
+    /// Amortized BSK bytes per executed PBS — the key-reuse metric: equals
+    /// one full BSK stream per PBS when batches degenerate to size 1 and
+    /// shrinks ~Bx when dynamic batches of B fuse their sweeps.
+    pub bsk_bytes_per_pbs: f64,
 }
 
 impl Metrics {
@@ -54,6 +61,12 @@ impl Metrics {
         g.pbs_executed += pbs;
     }
 
+    /// Account Fourier-BSK bytes streamed by one fused batch execution.
+    pub fn record_bsk_traffic(&self, bytes: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.bsk_bytes_streamed += bytes;
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let g = self.inner.lock().unwrap();
         let elapsed = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
@@ -67,6 +80,12 @@ impl Metrics {
             mean_queue_ms: stats::mean(&g.queue_ms),
             throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
             elapsed_s: elapsed,
+            bsk_bytes_streamed: g.bsk_bytes_streamed,
+            bsk_bytes_per_pbs: if g.pbs_executed > 0 {
+                g.bsk_bytes_streamed as f64 / g.pbs_executed as f64
+            } else {
+                0.0
+            },
         }
     }
 }
@@ -81,6 +100,7 @@ mod tests {
         m.record_request(1.0, 10.0);
         m.record_request(3.0, 30.0);
         m.record_batch(2, 14);
+        m.record_bsk_traffic(7000);
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.batches, 1);
@@ -88,5 +108,7 @@ mod tests {
         assert_eq!(s.mean_batch_size, 2.0);
         assert_eq!(s.mean_queue_ms, 2.0);
         assert!(s.p50_latency_ms >= 10.0 && s.p99_latency_ms <= 30.0);
+        assert_eq!(s.bsk_bytes_streamed, 7000);
+        assert!((s.bsk_bytes_per_pbs - 500.0).abs() < 1e-9);
     }
 }

@@ -64,6 +64,12 @@ pub struct Coordinator {
 
 impl Coordinator {
     pub fn start(program: Program, keys: Arc<ServerKeys>, opts: CoordinatorOptions) -> Self {
+        // Fail on the caller's thread, not inside a worker, when the
+        // requested backend isn't compiled in.
+        #[cfg(not(feature = "xla"))]
+        if matches!(opts.backend, BackendKind::Xla { .. }) {
+            panic!("XLA backend requested but built without the `xla` feature");
+        }
         let metrics = Arc::new(Metrics::new());
         let inflight = Arc::new(AtomicUsize::new(0));
         let (intake_tx, intake_rx) = channel::<Request>();
@@ -97,6 +103,7 @@ impl Coordinator {
                         let engine = Engine::new(NativePbsBackend::new(&keys));
                         worker_loop(rx, engine, &program, &metrics, &inflight);
                     }
+                    #[cfg(feature = "xla")]
                     BackendKind::Xla { artifacts_dir } => {
                         let be = crate::runtime::XlaPbsBackend::new(
                             &artifacts_dir,
@@ -107,6 +114,10 @@ impl Coordinator {
                         .expect("xla backend");
                         let engine = Engine::new(be);
                         worker_loop(rx, engine, &program, &metrics, &inflight);
+                    }
+                    #[cfg(not(feature = "xla"))]
+                    BackendKind::Xla { .. } => {
+                        panic!("XLA backend requested but built without the `xla` feature")
                     }
                 })
             })
@@ -150,13 +161,21 @@ fn worker_loop<B: PbsBackend>(
         // Record up front so snapshots taken right after the last response
         // already see this batch.
         metrics.record_batch(size, pbs);
-        for req in batch {
-            let queue_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-            let outs = engine.run(program, &req.inputs);
-            let latency_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
-            metrics.record_request(queue_ms, latency_ms);
+        // One fused sweep: the whole dynamic batch walks the program in
+        // lockstep, so every LUT node streams the BSK once per batch
+        // (key reuse) instead of once per request. Inputs are moved out
+        // of the requests, not cloned.
+        let (metas, inputs): (Vec<(Instant, Sender<Vec<LweCiphertext>>)>, Vec<_>) =
+            batch.into_iter().map(|r| ((r.enqueued, r.respond), r.inputs)).unzip();
+        let queue_ms: Vec<f64> =
+            metas.iter().map(|(t, _)| t.elapsed().as_secs_f64() * 1e3).collect();
+        let outs = engine.run_batch(program, &inputs);
+        metrics.record_bsk_traffic(engine.take_bsk_bytes_streamed());
+        for (((enqueued, respond), out), q_ms) in metas.into_iter().zip(outs).zip(queue_ms) {
+            let latency_ms = enqueued.elapsed().as_secs_f64() * 1e3;
+            metrics.record_request(q_ms, latency_ms);
             inflight.fetch_sub(1, Ordering::SeqCst);
-            let _ = req.respond.send(outs); // client may have gone away
+            let _ = respond.send(out); // client may have gone away
         }
     }
 }
@@ -186,6 +205,7 @@ mod tests {
         let mut rng = Rng::new(31);
         let sk = SecretKeys::generate(&TEST1, &mut rng);
         let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+        let keys2 = keys.clone();
         let prog = small_program();
         let coord = Coordinator::start(
             prog.clone(),
@@ -208,6 +228,16 @@ mod tests {
         assert_eq!(snap.requests, 12);
         assert!(snap.batches >= 3, "round-robined to several batches");
         assert_eq!(coord.inflight.load(Ordering::SeqCst), 0);
+        // Key-reuse accounting: fused sweeps stream at most one full BSK
+        // per PBS (exactly one when a batch degenerates to size 1).
+        assert!(snap.bsk_bytes_streamed > 0);
+        let full = keys2.bsk.bytes() as f64;
+        assert!(
+            snap.bsk_bytes_per_pbs <= full + 1.0,
+            "amortized {} vs full stream {}",
+            snap.bsk_bytes_per_pbs,
+            full
+        );
         coord.shutdown();
     }
 

@@ -4,7 +4,8 @@
 //! The manifest is written by `python/compile/aot.py` as a small JSON file;
 //! we parse it with the dependency-free reader in [`crate::util::json`].
 
-use anyhow::{anyhow, Context, Result};
+use crate::anyhow;
+use crate::util::err::{Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

@@ -4,7 +4,7 @@
 //! [`XlaEngine`] is owned by a single executor thread; the coordinator
 //! communicates with it over channels (see `coordinator::server`).
 
-use anyhow::{Context, Result};
+use crate::util::err::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
 use std::rc::Rc;

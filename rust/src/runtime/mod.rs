@@ -5,10 +5,19 @@
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
 
+//! The PJRT execution path needs the `xla` crate, which the offline build
+//! image cannot resolve; it is gated behind the `xla` cargo feature so the
+//! default build stays dependency-free. The manifest loader is always
+//! available (it is pure Rust and also used by tooling).
+
 mod artifact;
+#[cfg(feature = "xla")]
 mod exec;
+#[cfg(feature = "xla")]
 mod pbs_backend;
 
 pub use artifact::{Artifact, ArtifactManifest};
+#[cfg(feature = "xla")]
 pub use exec::{XlaEngine, XlaExecutable};
+#[cfg(feature = "xla")]
 pub use pbs_backend::XlaPbsBackend;

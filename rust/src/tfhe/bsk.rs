@@ -1,5 +1,7 @@
 //! Bootstrapping key: n GGSW encryptions of the short-LWE key bits, kept
-//! in the Fourier domain (the form the BRU streams from HBM, Fig. 7).
+//! in the Fourier domain (the form the BRU streams from HBM, Fig. 7) as
+//! planar re[]/im[] arrays — the layout both the scalar MAC and the
+//! batched key-reuse MAC consume directly.
 
 use super::fft::{C64, FftPlan};
 use super::ggsw::FourierGgsw;
@@ -18,7 +20,9 @@ pub fn encrypt_ggsw(m: u64, sk: &SecretKeys, rng: &mut Rng, plan: &FftPlan) -> F
     let p = &sk.params;
     let (k1, nh, big_n) = (p.k + 1, p.half_n(), p.big_n);
     let rows = p.ggsw_rows();
-    let mut data = vec![C64::default(); rows * k1 * nh];
+    let mut re = vec![0.0f64; rows * k1 * nh];
+    let mut im = vec![0.0f64; rows * k1 * nh];
+    let mut row_f = vec![C64::default(); nh];
     let mut msg = vec![0u64; big_n];
     for c in 0..k1 {
         for j in 0..p.bsk_level {
@@ -37,22 +41,23 @@ pub fn encrypt_ggsw(m: u64, sk: &SecretKeys, rng: &mut Rng, plan: &FftPlan) -> F
             let ct = GlweCiphertext::encrypt(&msg, sk, p.glwe_noise, rng, plan);
             let r = c * p.bsk_level + j;
             for cc in 0..k1 {
+                plan.forward_negacyclic_torus(ct.poly(cc), &mut row_f);
                 let off = (r * k1 + cc) * nh;
-                plan.forward_negacyclic_torus(ct.poly(cc), &mut data[off..off + nh]);
+                for (h, z) in row_f.iter().enumerate() {
+                    re[off + h] = z.re;
+                    im[off + h] = z.im;
+                }
             }
         }
     }
-    FourierGgsw { data, rows, k1, nh }
+    FourierGgsw { re, im, rows, k1, nh }
 }
 
 impl FourierBsk {
     pub fn generate(sk: &SecretKeys, rng: &mut Rng, plan: &FftPlan) -> Self {
-        let ggsw = sk
-            .lwe
-            .clone()
-            .iter()
-            .map(|&bit| encrypt_ggsw(bit, sk, rng, plan))
-            .collect();
+        // Iterate the key bits by reference; cloning the whole short key
+        // per keygen was needless.
+        let ggsw = sk.lwe.iter().map(|&bit| encrypt_ggsw(bit, sk, rng, plan)).collect();
         Self { ggsw }
     }
 
@@ -60,19 +65,18 @@ impl FourierBsk {
     /// exact input layout of the `blind_rotate` AOT artifact. The native
     /// pipeline keeps Fourier rows in bit-reversed order (no-permutation
     /// DIF/DIT, see fft.rs §Perf); the artifact uses jnp.fft's natural
-    /// order, so each row is permuted here (build-time only).
+    /// order, so each row is permuted here (build-time only). The planar
+    /// storage makes this a pair of per-plane permutations.
     pub fn to_flat_f64(&self) -> (Vec<f64>, Vec<f64>) {
-        use super::fft::bitrev_permute_copy;
-        let total: usize = self.ggsw.iter().map(|g| g.data.len()).sum();
+        use super::fft::bitrev_permute_f64;
+        let total: usize = self.ggsw.iter().map(|g| g.points()).sum();
         let mut re = Vec::with_capacity(total);
         let mut im = Vec::with_capacity(total);
         for g in &self.ggsw {
             for r in 0..g.rows {
                 for c in 0..g.k1 {
-                    for z in bitrev_permute_copy(g.row(r, c)) {
-                        re.push(z.re);
-                        im.push(z.im);
-                    }
+                    re.extend(bitrev_permute_f64(g.row_re(r, c)));
+                    im.extend(bitrev_permute_f64(g.row_im(r, c)));
                 }
             }
         }
@@ -81,7 +85,7 @@ impl FourierBsk {
 
     /// In-memory size of the Fourier BSK in bytes (2 f64 per point).
     pub fn bytes(&self) -> usize {
-        self.ggsw.iter().map(|g| g.data.len() * 16).sum()
+        self.ggsw.iter().map(|g| g.bytes()).sum()
     }
 }
 
@@ -100,7 +104,8 @@ mod tests {
         assert_eq!(g.rows, TEST1.ggsw_rows());
         assert_eq!(g.k1, TEST1.k + 1);
         assert_eq!(g.nh, TEST1.half_n());
-        assert_eq!(g.data.len(), g.rows * g.k1 * g.nh);
+        assert_eq!(g.points(), g.rows * g.k1 * g.nh);
+        assert_eq!(g.re.len(), g.im.len());
         let bsk = FourierBsk { ggsw: vec![g.clone(), g] };
         let (re, im) = bsk.to_flat_f64();
         assert_eq!(re.len(), 2 * TEST1.ggsw_rows() * (TEST1.k + 1) * TEST1.half_n());
@@ -108,7 +113,8 @@ mod tests {
         // Flat layout is the bit-reversal permutation of each Fourier row
         // (bin 0 is fixed by the permutation; bin 1 comes from nh/2).
         let nh = TEST1.half_n();
-        assert_eq!(re[0], bsk.ggsw[0].data[0].re);
-        assert_eq!(im[1], bsk.ggsw[0].data[nh / 2].im);
+        assert_eq!(re[0], bsk.ggsw[0].re[0]);
+        assert_eq!(im[1], bsk.ggsw[0].im[nh / 2]);
+        assert_eq!(bsk.bytes(), 2 * bsk.ggsw[0].bytes());
     }
 }

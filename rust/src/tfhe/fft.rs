@@ -68,7 +68,6 @@ impl C64 {
 pub struct FftPlan {
     /// Complex transform length N/2.
     pub nh: usize,
-    #[allow(dead_code)]
     log2_nh: u32,
     bitrev: Vec<u32>,
     /// Forward roots w^t = exp(-2*pi*i*t/nh), t < nh/2.
@@ -118,6 +117,10 @@ impl FftPlan {
             w_stages.push(tw);
             len = q;
         }
+        // The fused radix-2^2 DIF consumes two radix-2 stages per pass:
+        // exactly floor(log2(nh) / 2) fused stages, with one trailing
+        // radix-2 stage iff log2(nh) is odd.
+        assert_eq!(w_stages.len() as u32, log2_nh / 2);
         Self { nh, log2_nh, bitrev, w, w_stages, twist }
     }
 
@@ -169,6 +172,7 @@ impl FftPlan {
     /// order is needed (e.g. exporting the BSK to the XLA artifacts).
     pub fn dif_forward(&self, buf: &mut [C64]) {
         debug_assert_eq!(buf.len(), self.nh);
+        debug_assert_eq!(self.w_stages.len() as u32, self.log2_nh / 2);
         let mut len = self.nh;
         // Fused radix-2^2 stages: identical ordering to two radix-2 DIF
         // passes, but one pass over memory and 3 twiddle mults per 4
@@ -291,6 +295,189 @@ impl FftPlan {
             out[j + self.nh] = out[j + self.nh].wrapping_add(im.round_ties_even() as i64 as u64);
         }
     }
+
+    // ------------------------------------------------------------------
+    // Planar (structure-of-arrays) multi-column kernels — §Perf change 4.
+    //
+    // A planar buffer holds `cols` ciphertexts' Fourier vectors in
+    // separate `re[]`/`im[]` arrays with layout [bin][col] (col fastest):
+    // every butterfly and MAC becomes a contiguous stride-1 loop over the
+    // batch with all twiddles/key points hoisted to scalars, which is the
+    // shape LLVM auto-vectorizes. Ordering conventions are identical to
+    // the scalar `dif_forward`/`dit_inverse` pair (bit-reversed Fourier
+    // domain, no permutation pass), so planar columns interoperate with
+    // the same bit-reversed `FourierGgsw` rows.
+    // ------------------------------------------------------------------
+
+    /// Multi-column forward DIF: `cols` interleaved columns, natural input
+    /// -> bit-reversed output. `re`/`im` have length `nh * cols`, layout
+    /// [bin][col]. Per-column arithmetic is op-for-op identical to
+    /// [`Self::dif_forward`].
+    pub fn dif_forward_planar(&self, re: &mut [f64], im: &mut [f64], cols: usize) {
+        debug_assert_eq!(re.len(), self.nh * cols);
+        debug_assert_eq!(im.len(), self.nh * cols);
+        debug_assert_eq!(self.w_stages.len() as u32, self.log2_nh / 2);
+        let mut len = self.nh;
+        let mut stage = 0;
+        while len >= 4 {
+            let q = len / 4;
+            let tw = &self.w_stages[stage];
+            stage += 1;
+            let mut base = 0;
+            while base < self.nh {
+                for j in 0..q {
+                    let w1 = tw[3 * j];
+                    let w2 = tw[3 * j + 1];
+                    let w3 = tw[3 * j + 2];
+                    let i0 = (base + j) * cols;
+                    let i1 = (base + j + q) * cols;
+                    let i2 = (base + j + 2 * q) * cols;
+                    let i3 = (base + j + 3 * q) * cols;
+                    for b in 0..cols {
+                        let (ar, ai) = (re[i0 + b], im[i0 + b]);
+                        let (br, bi) = (re[i1 + b], im[i1 + b]);
+                        let (cr, ci) = (re[i2 + b], im[i2 + b]);
+                        let (dr, di) = (re[i3 + b], im[i3 + b]);
+                        let (t1r, t1i) = (ar + cr, ai + ci);
+                        let (t2r, t2i) = (br + dr, bi + di);
+                        let (t3r, t3i) = (ar - cr, ai - ci);
+                        // (b - d) * -i
+                        let (t4r, t4i) = (bi - di, -(br - dr));
+                        re[i0 + b] = t1r + t2r;
+                        im[i0 + b] = t1i + t2i;
+                        let (xr, xi) = (t1r - t2r, t1i - t2i);
+                        re[i1 + b] = xr * w2.re - xi * w2.im;
+                        im[i1 + b] = xr * w2.im + xi * w2.re;
+                        let (yr, yi) = (t3r + t4r, t3i + t4i);
+                        re[i2 + b] = yr * w1.re - yi * w1.im;
+                        im[i2 + b] = yr * w1.im + yi * w1.re;
+                        let (zr, zi) = (t3r - t4r, t3i - t4i);
+                        re[i3 + b] = zr * w3.re - zi * w3.im;
+                        im[i3 + b] = zr * w3.im + zi * w3.re;
+                    }
+                }
+                base += len;
+            }
+            len = q;
+        }
+        if len == 2 {
+            let mut base = 0;
+            while base < self.nh {
+                let i0 = base * cols;
+                let i1 = (base + 1) * cols;
+                for b in 0..cols {
+                    let (ar, ai) = (re[i0 + b], im[i0 + b]);
+                    let (br, bi) = (re[i1 + b], im[i1 + b]);
+                    re[i0 + b] = ar + br;
+                    im[i0 + b] = ai + bi;
+                    re[i1 + b] = ar - br;
+                    im[i1 + b] = ai - bi;
+                }
+                base += 2;
+            }
+        }
+    }
+
+    /// Multi-column inverse DIT: bit-reversed input -> natural output,
+    /// 1/nh scale folded in. Per-column arithmetic matches
+    /// [`Self::dit_inverse`].
+    pub fn dit_inverse_planar(&self, re: &mut [f64], im: &mut [f64], cols: usize) {
+        debug_assert_eq!(re.len(), self.nh * cols);
+        debug_assert_eq!(im.len(), self.nh * cols);
+        let mut len = 2usize;
+        while len <= self.nh {
+            let half = len / 2;
+            let step = self.nh / len;
+            let mut base = 0;
+            while base < self.nh {
+                for j in 0..half {
+                    let w = self.w[j * step];
+                    let iu = (base + j) * cols;
+                    let iv = (base + j + half) * cols;
+                    for b in 0..cols {
+                        let (ar, ai) = (re[iu + b], im[iu + b]);
+                        let (vr, vi) = (re[iv + b], im[iv + b]);
+                        // v * conj(w)
+                        let br = vr * w.re + vi * w.im;
+                        let bi = vi * w.re - vr * w.im;
+                        re[iu + b] = ar + br;
+                        im[iu + b] = ai + bi;
+                        re[iv + b] = ar - br;
+                        im[iv + b] = ai - bi;
+                    }
+                }
+                base += len;
+            }
+            len <<= 1;
+        }
+        let s = 1.0 / self.nh as f64;
+        for x in re.iter_mut() {
+            *x *= s;
+        }
+        for x in im.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// Planar forward negacyclic transform from i64 gadget digits of
+    /// `cols` ciphertexts. `p` has layout [coef][col] (length N * cols);
+    /// `re`/`im` get the folded, twisted, transformed columns.
+    pub fn forward_negacyclic_i64_planar(
+        &self,
+        p: &[i64],
+        re: &mut [f64],
+        im: &mut [f64],
+        cols: usize,
+    ) {
+        debug_assert_eq!(p.len(), 2 * self.nh * cols);
+        for h in 0..self.nh {
+            let t = self.twist[h];
+            let lo = h * cols;
+            let hi = (h + self.nh) * cols;
+            for b in 0..cols {
+                let xr = p[lo + b] as f64;
+                let xi = -(p[hi + b] as f64);
+                re[lo + b] = xr * t.re - xi * t.im;
+                im[lo + b] = xr * t.im + xi * t.re;
+            }
+        }
+        self.dif_forward_planar(re, im, cols);
+    }
+
+    /// Planar inverse negacyclic transform to torus values: consumes the
+    /// Fourier columns and writes rounded torus coefficients to `out`
+    /// (layout [coef][col], length N * cols, **overwritten**, not added —
+    /// callers scatter-add into their per-ciphertext accumulators).
+    /// Per-column arithmetic matches [`Self::inverse_negacyclic_add_torus`].
+    pub fn inverse_negacyclic_torus_planar(
+        &self,
+        re: &mut [f64],
+        im: &mut [f64],
+        cols: usize,
+        out: &mut [u64],
+    ) {
+        debug_assert_eq!(re.len(), self.nh * cols);
+        debug_assert_eq!(out.len(), 2 * self.nh * cols);
+        self.dit_inverse_planar(re, im, cols);
+        const Q: f64 = 18446744073709551616.0; // 2^64
+        const INV_Q: f64 = 1.0 / Q;
+        for h in 0..self.nh {
+            let t = self.twist[h];
+            let lo = h * cols;
+            let hi = (h + self.nh) * cols;
+            for b in 0..cols {
+                let (zr, zi) = (re[lo + b], im[lo + b]);
+                // z * conj(twist)
+                let zzr = zr * t.re + zi * t.im;
+                let zzi = zi * t.re - zr * t.im;
+                let rr = zzr - (zzr * INV_Q).round() * Q;
+                let ii = -zzi;
+                let ii = ii - (ii * INV_Q).round() * Q;
+                out[lo + b] = rr.round_ties_even() as i64 as u64;
+                out[hi + b] = ii.round_ties_even() as i64 as u64;
+            }
+        }
+    }
 }
 
 /// Permute a bit-reversed Fourier vector to natural order (copy). Used
@@ -301,6 +488,20 @@ pub fn bitrev_permute_copy(src: &[C64]) -> Vec<C64> {
     debug_assert!(n.is_power_of_two());
     let log = n.trailing_zeros();
     let mut out = vec![C64::default(); n];
+    for (i, &v) in src.iter().enumerate() {
+        out[(i as u32).reverse_bits() as usize >> (32 - log)] = v;
+    }
+    out
+}
+
+/// Permute one planar (f64) bit-reversed component to natural order —
+/// the SoA counterpart of [`bitrev_permute_copy`], applied to `re` and
+/// `im` planes independently.
+pub fn bitrev_permute_f64(src: &[f64]) -> Vec<f64> {
+    let n = src.len();
+    debug_assert!(n.is_power_of_two());
+    let log = n.trailing_zeros();
+    let mut out = vec![0.0f64; n];
     for (i, &v) in src.iter().enumerate() {
         out[(i as u32).reverse_bits() as usize >> (32 - log)] = v;
     }
@@ -420,6 +621,130 @@ mod tests {
         plan.inverse_negacyclic_add_torus(&mut f, &mut out);
         for (i, &o) in out.iter().enumerate() {
             assert_eq!(o, 5u64.wrapping_add(i as u64), "i={i}");
+        }
+    }
+
+    /// Pack `cols` complex vectors into planar [bin][col] buffers.
+    fn to_planar(columns: &[Vec<C64>]) -> (Vec<f64>, Vec<f64>) {
+        let cols = columns.len();
+        let nh = columns[0].len();
+        let mut re = vec![0.0; nh * cols];
+        let mut im = vec![0.0; nh * cols];
+        for (b, col) in columns.iter().enumerate() {
+            for (h, z) in col.iter().enumerate() {
+                re[h * cols + b] = z.re;
+                im[h * cols + b] = z.im;
+            }
+        }
+        (re, im)
+    }
+
+    #[test]
+    fn planar_dif_matches_scalar_per_column() {
+        check("planar_dif", 6, |rng| {
+            for nh in [8usize, 64, 256] {
+                let plan = FftPlan::new(2 * nh);
+                let cols = 1 + rng.below_usize(5);
+                let columns: Vec<Vec<C64>> = (0..cols)
+                    .map(|_| {
+                        (0..nh)
+                            .map(|_| C64::new(rng.gaussian() * 50.0, rng.gaussian() * 50.0))
+                            .collect()
+                    })
+                    .collect();
+                let (mut re, mut im) = to_planar(&columns);
+                plan.dif_forward_planar(&mut re, &mut im, cols);
+                for (b, col) in columns.iter().enumerate() {
+                    let mut scalar = col.clone();
+                    plan.dif_forward(&mut scalar);
+                    for h in 0..nh {
+                        let got = (re[h * cols + b], im[h * cols + b]);
+                        let exp = (scalar[h].re, scalar[h].im);
+                        if (got.0 - exp.0).abs() > 1e-9 || (got.1 - exp.1).abs() > 1e-9 {
+                            return Err(format!("nh={nh} col={b} bin={h}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn planar_dit_matches_scalar_per_column() {
+        check("planar_dit", 6, |rng| {
+            let nh = 128;
+            let plan = FftPlan::new(2 * nh);
+            let cols = 1 + rng.below_usize(4);
+            let columns: Vec<Vec<C64>> = (0..cols)
+                .map(|_| (0..nh).map(|_| C64::new(rng.gaussian(), rng.gaussian())).collect())
+                .collect();
+            let (mut re, mut im) = to_planar(&columns);
+            plan.dit_inverse_planar(&mut re, &mut im, cols);
+            for (b, col) in columns.iter().enumerate() {
+                let mut scalar = col.clone();
+                plan.dit_inverse(&mut scalar);
+                for h in 0..nh {
+                    if (re[h * cols + b] - scalar[h].re).abs() > 1e-12
+                        || (im[h * cols + b] - scalar[h].im).abs() > 1e-12
+                    {
+                        return Err(format!("col={b} bin={h}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn planar_negacyclic_pipeline_matches_scalar() {
+        // Digits in -> forward -> (identity in Fourier) -> inverse-to-torus
+        // must match the scalar forward_negacyclic_i64 / inverse pipeline
+        // column by column.
+        check("planar_negacyclic", 6, |rng| {
+            let n = 64;
+            let nh = n / 2;
+            let plan = FftPlan::new(n);
+            let cols = 3usize;
+            let columns: Vec<Vec<i64>> = (0..cols)
+                .map(|_| (0..n).map(|_| (rng.below(512) as i64) - 256).collect())
+                .collect();
+            let mut p = vec![0i64; n * cols];
+            for (b, col) in columns.iter().enumerate() {
+                for (h, &x) in col.iter().enumerate() {
+                    p[h * cols + b] = x;
+                }
+            }
+            let mut re = vec![0.0; nh * cols];
+            let mut im = vec![0.0; nh * cols];
+            plan.forward_negacyclic_i64_planar(&p, &mut re, &mut im, cols);
+            let mut out = vec![0u64; n * cols];
+            plan.inverse_negacyclic_torus_planar(&mut re, &mut im, cols, &mut out);
+            for (b, col) in columns.iter().enumerate() {
+                let mut f = vec![C64::default(); nh];
+                plan.forward_negacyclic_i64(col, &mut f);
+                let mut exp = vec![0u64; n];
+                plan.inverse_negacyclic_add_torus(&mut f, &mut exp);
+                for h in 0..n {
+                    let got = out[h * cols + b] as i64;
+                    let want = exp[h] as i64;
+                    if (got - want).unsigned_abs() > 1 {
+                        return Err(format!("col={b} coef={h}: {got} vs {want}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bitrev_permute_f64_matches_c64() {
+        let src: Vec<C64> = (0..16).map(|i| C64::new(i as f64, -(i as f64))).collect();
+        let re: Vec<f64> = src.iter().map(|z| z.re).collect();
+        let perm_c = bitrev_permute_copy(&src);
+        let perm_f = bitrev_permute_f64(&re);
+        for (a, b) in perm_c.iter().zip(&perm_f) {
+            assert_eq!(a.re, *b);
         }
     }
 

@@ -1,6 +1,18 @@
 //! GGSW ciphertexts (Fourier domain) and the external product — "the most
 //! time-consuming operation in bootstrapping" (paper §II-B, Fig. 4), i.e.
 //! the operation the BRU accelerates.
+//!
+//! Two execution shapes share the same key material:
+//!
+//! - the scalar path ([`external_product_add`] / [`cmux_rotate`]) runs one
+//!   ciphertext at a time — the latency-oriented CPU baseline;
+//! - the batched path ([`external_product_add_batch`] /
+//!   [`cmux_rotate_batch`]) walks the GGSW **rows in the outer loop** and
+//!   the ciphertext batch in the inner loop, so every Fourier key point is
+//!   read once per batch step instead of once per ciphertext — the
+//!   paper's key-reuse schedule ("optimizing memory bandwidth through key
+//!   reuse strategies"), executed over the planar SoA kernels of
+//!   [`FftPlan`].
 
 use super::decomp::decompose_strided;
 use super::fft::{C64, FftPlan};
@@ -8,26 +20,48 @@ use super::glwe::GlweCiphertext;
 use super::poly;
 use crate::params::ParamSet;
 
-/// One GGSW ciphertext kept in the Fourier domain: `rows x (k+1)` Fourier
-/// polynomials of N/2 complex points each. Row r = c*level + j encrypts
+/// One GGSW ciphertext kept in the Fourier domain as planar (SoA)
+/// `re[]`/`im[]` arrays: `rows x (k+1)` Fourier polynomials of N/2 points
+/// each, row-major (r, c, h). Row r = c*level + j encrypts
 /// m * (-s_c) * q/B^(j+1) (c < k) or m * q/B^(j+1) (c = k).
+///
+/// The planar layout is what the batched MAC streams: each key point is a
+/// pair of scalar f64 loads broadcast against a contiguous batch row.
 #[derive(Debug, Clone)]
 pub struct FourierGgsw {
-    /// rows * (k+1) * nh, row-major (r, c, h).
-    pub data: Vec<C64>,
+    /// rows * (k+1) * nh real parts, row-major (r, c, h).
+    pub re: Vec<f64>,
+    /// rows * (k+1) * nh imaginary parts, same layout.
+    pub im: Vec<f64>,
     pub rows: usize,
     pub k1: usize,
     pub nh: usize,
 }
 
 impl FourierGgsw {
-    pub fn row(&self, r: usize, c: usize) -> &[C64] {
+    pub fn row_re(&self, r: usize, c: usize) -> &[f64] {
         let off = (r * self.k1 + c) * self.nh;
-        &self.data[off..off + self.nh]
+        &self.re[off..off + self.nh]
+    }
+
+    pub fn row_im(&self, r: usize, c: usize) -> &[f64] {
+        let off = (r * self.k1 + c) * self.nh;
+        &self.im[off..off + self.nh]
+    }
+
+    /// Total Fourier points stored (rows * (k+1) * nh).
+    pub fn points(&self) -> usize {
+        self.re.len()
+    }
+
+    /// In-memory size in bytes (one f64 per point per plane).
+    pub fn bytes(&self) -> usize {
+        self.points() * 16
     }
 }
 
-/// Reused scratch for external products (no allocation on the hot path).
+/// Reused scratch for scalar external products (no allocation on the hot
+/// path).
 pub struct ExtProdScratch {
     /// level digit polynomials of one GLWE row: level * N i64.
     digits: Vec<i64>,
@@ -74,12 +108,12 @@ pub fn external_product_add(
             plan.forward_negacyclic_i64(digit_poly, &mut s.row_f);
             let r = c * lvl + j;
             for cc in 0..k1 {
-                let brow = ggsw.row(r, cc);
+                let brow = ggsw.row_re(r, cc).iter().zip(ggsw.row_im(r, cc));
                 let accf = &mut s.acc_f[cc * nh..(cc + 1) * nh];
                 // Fused complex MAC, iterator form (no bounds checks).
-                for ((a, &x), &b) in accf.iter_mut().zip(&s.row_f).zip(brow) {
-                    a.re += x.re * b.re - x.im * b.im;
-                    a.im += x.re * b.im + x.im * b.re;
+                for ((a, &x), (&br, &bi)) in accf.iter_mut().zip(&s.row_f).zip(brow) {
+                    a.re += x.re * br - x.im * bi;
+                    a.im += x.re * bi + x.im * br;
                 }
             }
         }
@@ -113,6 +147,156 @@ pub fn cmux_rotate(
     // Split borrow: diff lives in scratch; temporarily move it out.
     let diff = std::mem::take(&mut s.diff);
     external_product_add(plan, p, ggsw, &diff, acc, s);
+    s.diff = diff;
+}
+
+// ---------------------------------------------------------------------------
+// Batched path: one GGSW applied to a whole batch of ciphertexts.
+// ---------------------------------------------------------------------------
+
+/// Reused scratch for batched external products over up to `cols`
+/// ciphertexts (narrower batches use a dense prefix of each buffer).
+/// Planar buffers use [element][col] layout (col fastest) so the batch is
+/// the contiguous inner dimension everywhere.
+pub struct BatchExtProdScratch {
+    cols: usize,
+    /// Gadget digits, [level][coef][col]: level * N * cols i64.
+    digits: Vec<i64>,
+    /// Planar Fourier buffer for one digit row across the batch, nh * cols.
+    row_re: Vec<f64>,
+    row_im: Vec<f64>,
+    /// Planar Fourier accumulator, (k+1) * nh * cols.
+    acc_re: Vec<f64>,
+    acc_im: Vec<f64>,
+    /// Torus staging for the planar inverse transform, N * cols.
+    inv_t: Vec<u64>,
+    /// CMUX rotation differences, AoS per ciphertext: cols * (k+1) * N.
+    diff: Vec<u64>,
+}
+
+impl BatchExtProdScratch {
+    pub fn new(p: &ParamSet, cols: usize) -> Self {
+        let (k1, nh, big_n) = (p.k + 1, p.half_n(), p.big_n);
+        Self {
+            cols,
+            digits: vec![0; p.bsk_level * big_n * cols],
+            row_re: vec![0.0; nh * cols],
+            row_im: vec![0.0; nh * cols],
+            acc_re: vec![0.0; k1 * nh * cols],
+            acc_im: vec![0.0; k1 * nh * cols],
+            inv_t: vec![0; big_n * cols],
+            diff: vec![0; cols * k1 * big_n],
+        }
+    }
+
+    /// Maximum batch width this scratch can serve.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+}
+
+/// Batched external product with key reuse:
+/// `accs[b] += GGSW box glwe_in[b]` for every ciphertext b in the batch.
+///
+/// `glwe_in` holds `cols` stacked (k+1)*N inputs (AoS per ciphertext, the
+/// layout of [`GlweCiphertext::data`]). The GGSW **rows form the outer
+/// loop**: each Fourier key point is loaded once and MAC'd against the
+/// contiguous batch row — BSK traffic is amortized `cols`-fold relative to
+/// running [`external_product_add`] per ciphertext, and the inner loops
+/// are the auto-vectorizable planar shape.
+pub fn external_product_add_batch(
+    plan: &FftPlan,
+    p: &ParamSet,
+    ggsw: &FourierGgsw,
+    glwe_in: &[u64],
+    accs: &mut [GlweCiphertext],
+    s: &mut BatchExtProdScratch,
+) {
+    let cols = accs.len();
+    assert!(s.cols >= cols, "scratch narrower than the batch");
+    let (k1, nh, big_n) = (p.k + 1, p.half_n(), p.big_n);
+    let (bl, lvl) = (p.bsk_base_log, p.bsk_level);
+    debug_assert_eq!(glwe_in.len(), cols * k1 * big_n);
+    s.acc_re[..k1 * nh * cols].iter_mut().for_each(|x| *x = 0.0);
+    s.acc_im[..k1 * nh * cols].iter_mut().for_each(|x| *x = 0.0);
+    for c in 0..k1 {
+        // Decompose polynomial c of every ciphertext into the planar
+        // [level][coef][col] digit layout.
+        for b in 0..cols {
+            let src = &glwe_in[(b * k1 + c) * big_n..(b * k1 + c + 1) * big_n];
+            for (i, &x) in src.iter().enumerate() {
+                decompose_strided(x, bl, lvl, &mut s.digits[i * cols + b..], big_n * cols);
+            }
+        }
+        for j in 0..lvl {
+            let dig = &s.digits[j * big_n * cols..(j + 1) * big_n * cols];
+            plan.forward_negacyclic_i64_planar(
+                dig,
+                &mut s.row_re[..nh * cols],
+                &mut s.row_im[..nh * cols],
+                cols,
+            );
+            let r = c * lvl + j;
+            for cc in 0..k1 {
+                let bre = ggsw.row_re(r, cc);
+                let bim = ggsw.row_im(r, cc);
+                let are = &mut s.acc_re[cc * nh * cols..(cc + 1) * nh * cols];
+                let aim = &mut s.acc_im[cc * nh * cols..(cc + 1) * nh * cols];
+                for h in 0..nh {
+                    // One key point, reused across the whole batch row.
+                    let (br, bi) = (bre[h], bim[h]);
+                    let off = h * cols;
+                    for b in 0..cols {
+                        let xr = s.row_re[off + b];
+                        let xi = s.row_im[off + b];
+                        are[off + b] += xr * br - xi * bi;
+                        aim[off + b] += xr * bi + xi * br;
+                    }
+                }
+            }
+        }
+    }
+    for cc in 0..k1 {
+        let are = &mut s.acc_re[cc * nh * cols..(cc + 1) * nh * cols];
+        let aim = &mut s.acc_im[cc * nh * cols..(cc + 1) * nh * cols];
+        plan.inverse_negacyclic_torus_planar(are, aim, cols, &mut s.inv_t[..big_n * cols]);
+        for (b, acc) in accs.iter_mut().enumerate() {
+            let out = acc.poly_mut(cc);
+            for (h, o) in out.iter_mut().enumerate() {
+                *o = o.wrapping_add(s.inv_t[h * cols + b]);
+            }
+        }
+    }
+}
+
+/// Batched CMUX with per-ciphertext rotation amounts: one blind-rotation
+/// step for the whole batch,
+/// `accs[b] <- accs[b] + GGSW(s) box (X^amounts[b] * accs[b] - accs[b])`.
+///
+/// A zero amount contributes an exactly-zero difference (all gadget digits
+/// vanish), so mixed batches stay correct with no per-column branching.
+pub fn cmux_rotate_batch(
+    plan: &FftPlan,
+    p: &ParamSet,
+    ggsw: &FourierGgsw,
+    amounts: &[usize],
+    accs: &mut [GlweCiphertext],
+    s: &mut BatchExtProdScratch,
+) {
+    let (k1, big_n) = (p.k + 1, p.big_n);
+    debug_assert_eq!(amounts.len(), accs.len());
+    for (b, acc) in accs.iter().enumerate() {
+        for c in 0..k1 {
+            poly::rotate_sub_into(
+                acc.poly(c),
+                amounts[b],
+                &mut s.diff[(b * k1 + c) * big_n..(b * k1 + c + 1) * big_n],
+            );
+        }
+    }
+    // Split borrow: diff lives in scratch; temporarily move it out.
+    let diff = std::mem::take(&mut s.diff);
+    external_product_add_batch(plan, p, ggsw, &diff[..accs.len() * k1 * big_n], accs, s);
     s.diff = diff;
 }
 
@@ -187,6 +371,64 @@ mod tests {
                     let exp = if j == expect_idx { 7u64 << 60 } else { 0 };
                     if torus_distance(v, exp) > 1e-5 {
                         return Err(format!("bit={bit} j={j}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_external_product_matches_scalar() {
+        check("extprod_batch_vs_scalar", 3, |rng| {
+            let (sk, plan) = setup(rng);
+            let g = encrypt_ggsw(1, &sk, rng, &plan);
+            let cols = 3usize;
+            let glwes: Vec<GlweCiphertext> = (0..cols)
+                .map(|b| {
+                    let msg: Vec<u64> =
+                        (0..TEST1.big_n as u64).map(|j| ((j + b as u64) % 16) << 60).collect();
+                    GlweCiphertext::encrypt(&msg, &sk, TEST1.glwe_noise, rng, &plan)
+                })
+                .collect();
+            let stacked: Vec<u64> = glwes.iter().flat_map(|gl| gl.data.iter().copied()).collect();
+            let mut batch_accs: Vec<GlweCiphertext> =
+                (0..cols).map(|_| GlweCiphertext::zero(TEST1.k, TEST1.big_n)).collect();
+            let mut bs = BatchExtProdScratch::new(&TEST1, cols);
+            external_product_add_batch(&plan, &TEST1, &g, &stacked, &mut batch_accs, &mut bs);
+            let mut s = ExtProdScratch::new(&TEST1);
+            for (b, glwe) in glwes.iter().enumerate() {
+                let mut acc = GlweCiphertext::zero(TEST1.k, TEST1.big_n);
+                external_product_add(&plan, &TEST1, &g, &glwe.data, &mut acc, &mut s);
+                for (x, y) in acc.data.iter().zip(&batch_accs[b].data) {
+                    // Same ops per column; allow the last rounding ulp.
+                    if x.wrapping_sub(*y).wrapping_add(1) > 2 {
+                        return Err(format!("col={b}: {x} vs {y}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_cmux_selects_per_column_amounts() {
+        check("cmux_batch", 3, |rng| {
+            let (sk, plan) = setup(rng);
+            let g = encrypt_ggsw(1, &sk, rng, &plan);
+            let mut msg = vec![0u64; TEST1.big_n];
+            msg[0] = 7u64 << 60;
+            let amounts = [0usize, 3, 11];
+            let mut accs: Vec<GlweCiphertext> =
+                amounts.iter().map(|_| GlweCiphertext::trivial(&msg, TEST1.k)).collect();
+            let mut bs = BatchExtProdScratch::new(&TEST1, amounts.len());
+            cmux_rotate_batch(&plan, &TEST1, &g, &amounts, &mut accs, &mut bs);
+            for (b, amount) in amounts.iter().enumerate() {
+                let ph = accs[b].decrypt_phase(&sk, &plan);
+                for (j, &v) in ph.iter().enumerate() {
+                    let exp = if j == *amount { 7u64 << 60 } else { 0 };
+                    if torus_distance(v, exp) > 1e-5 {
+                        return Err(format!("col={b} j={j}"));
                     }
                 }
             }

@@ -23,7 +23,9 @@ pub mod torus;
 
 pub use bsk::FourierBsk;
 pub use encoding::{decode, encode, make_lut_poly};
-pub use ggsw::FourierGgsw;
+pub use ggsw::{
+    cmux_rotate_batch, external_product_add_batch, BatchExtProdScratch, FourierGgsw,
+};
 pub use glwe::GlweCiphertext;
 pub use ksk::Ksk;
 pub use lwe::LweCiphertext;

@@ -9,7 +9,7 @@
 
 use super::bsk::FourierBsk;
 use super::fft::FftPlan;
-use super::ggsw::{cmux_rotate, ExtProdScratch};
+use super::ggsw::{cmux_rotate, cmux_rotate_batch, BatchExtProdScratch, ExtProdScratch};
 use super::glwe::GlweCiphertext;
 use super::ksk::Ksk;
 use super::lwe::LweCiphertext;
@@ -45,12 +45,18 @@ pub fn modswitch(x: u64, big_n: usize) -> usize {
 }
 
 /// Execution context: FFT plan + scratch buffers, reusable across PBS
-/// calls (one per worker thread).
+/// calls (one per worker thread). Tracks the Fourier-BSK bytes its blind
+/// rotations stream so callers can report amortized key traffic (the
+/// batched path streams each GGSW once per batch instead of once per
+/// ciphertext).
 pub struct PbsContext {
     pub params: ParamSet,
     pub plan: FftPlan,
     scratch: ExtProdScratch,
+    /// Batch scratch, lazily (re)sized to the last batch width.
+    batch_scratch: Option<BatchExtProdScratch>,
     rot_buf: Vec<u64>,
+    bsk_bytes_streamed: u64,
 }
 
 impl PbsContext {
@@ -59,8 +65,21 @@ impl PbsContext {
             params: params.clone(),
             plan: FftPlan::new(params.big_n),
             scratch: ExtProdScratch::new(params),
+            batch_scratch: None,
             rot_buf: vec![0; params.big_n],
+            bsk_bytes_streamed: 0,
         }
+    }
+
+    /// Fourier-BSK bytes read by blind rotations since construction or the
+    /// last [`Self::take_bsk_bytes_streamed`].
+    pub fn bsk_bytes_streamed(&self) -> u64 {
+        self.bsk_bytes_streamed
+    }
+
+    /// Drain the BSK traffic counter (returns the accumulated bytes).
+    pub fn take_bsk_bytes_streamed(&mut self) -> u64 {
+        std::mem::take(&mut self.bsk_bytes_streamed)
     }
 
     /// Blind rotation (paper Fig. 3 (c)): returns the rotated accumulator.
@@ -80,10 +99,67 @@ impl PbsContext {
         for (i, &a) in ct_short.mask().iter().enumerate() {
             let a_i = modswitch(a, p.big_n);
             if a_i != 0 {
+                self.bsk_bytes_streamed += bsk.ggsw[i].bytes() as u64;
                 cmux_rotate(&self.plan, &p, &bsk.ggsw[i], a_i, &mut acc, &mut self.scratch);
             }
         }
         acc
+    }
+
+    /// Batched blind rotation with the paper's key-reuse schedule: the n
+    /// GGSW keys form the **outer** loop and the ciphertext batch the
+    /// inner loop, so each Fourier key row is streamed once per batch step
+    /// instead of once per ciphertext. All accumulators advance in
+    /// lockstep over the planar SoA kernels.
+    pub fn blind_rotate_batch(
+        &mut self,
+        cts: &[LweCiphertext],
+        bsk: &FourierBsk,
+        lut_poly: &[u64],
+    ) -> Vec<GlweCiphertext> {
+        // Batch of one: the tuned scalar path does strictly less work
+        // (no planar scatter/gather, no batch scratch).
+        if cts.len() == 1 {
+            return vec![self.blind_rotate(&cts[0], bsk, lut_poly)];
+        }
+        let p = self.params.clone();
+        let cols = cts.len();
+        let two_n = 2 * p.big_n;
+        let mut accs = Vec::with_capacity(cols);
+        for ct in cts {
+            debug_assert_eq!(ct.dim(), p.n);
+            let b = modswitch(ct.body(), p.big_n);
+            let mut acc = GlweCiphertext::zero(p.k, p.big_n);
+            rotate_into(lut_poly, two_n - b, &mut self.rot_buf);
+            acc.body_mut().copy_from_slice(&self.rot_buf);
+            accs.push(acc);
+        }
+        if cols == 0 {
+            return accs;
+        }
+        // Grow-only: narrower batches reuse a wider scratch (the kernels
+        // operate on a cols-sized prefix), so the dynamic batcher's
+        // straggler batches don't put allocation back on the hot path.
+        match &self.batch_scratch {
+            Some(s) if s.cols() >= cols => {}
+            _ => self.batch_scratch = Some(BatchExtProdScratch::new(&p, cols)),
+        }
+        let scratch = self.batch_scratch.as_mut().unwrap();
+        let mut amounts = vec![0usize; cols];
+        for (i, g) in bsk.ggsw.iter().enumerate() {
+            let mut any_nonzero = false;
+            for (b, ct) in cts.iter().enumerate() {
+                amounts[b] = modswitch(ct.mask()[i], p.big_n);
+                any_nonzero |= amounts[b] != 0;
+            }
+            if !any_nonzero {
+                continue;
+            }
+            // Key i is read once here and applied to all `cols` columns.
+            self.bsk_bytes_streamed += g.bytes() as u64;
+            cmux_rotate_batch(&self.plan, &p, g, &amounts, &mut accs, scratch);
+        }
+        accs
     }
 
     /// Full PBS: keyswitch-first order, LUT evaluation + noise refresh.
@@ -91,6 +167,22 @@ impl PbsContext {
         let short = keys.ksk.keyswitch(ct_long, &self.params);
         let acc = self.blind_rotate(&short, &keys.bsk, lut_poly);
         acc.sample_extract(&self.params)
+    }
+
+    /// Batched PBS over one shared LUT: keyswitch each ciphertext, then run
+    /// a single fused blind-rotation sweep with the BSK streamed once per
+    /// batch, then sample-extract. Decrypts identically to calling
+    /// [`Self::pbs`] per ciphertext.
+    pub fn pbs_batch(
+        &mut self,
+        cts: &[LweCiphertext],
+        keys: &ServerKeys,
+        lut_poly: &[u64],
+    ) -> Vec<LweCiphertext> {
+        let shorts: Vec<LweCiphertext> =
+            cts.iter().map(|ct| keys.ksk.keyswitch(ct, &self.params)).collect();
+        let accs = self.blind_rotate_batch(&shorts, &keys.bsk, lut_poly);
+        accs.iter().map(|acc| acc.sample_extract(&self.params)).collect()
     }
 }
 
@@ -178,6 +270,54 @@ mod tests {
         a.add_assign(&b); // 5
         let out = ctx.pbs(&a, &keys, &double);
         assert_eq!(decrypt_message(&out, &sk), 10);
+    }
+
+    #[test]
+    fn pbs_batch_identity_lut_and_key_reuse_accounting() {
+        let (sk, keys, mut ctx, mut rng) = setup();
+        let lut = make_lut_poly(&TEST1, |m| (m + 2) % 16);
+        let msgs: Vec<u64> = (0..4).collect();
+        let cts: Vec<_> = msgs.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
+
+        ctx.take_bsk_bytes_streamed();
+        let outs = ctx.pbs_batch(&cts, &keys, &lut);
+        let batch_bytes = ctx.take_bsk_bytes_streamed();
+        for (m, out) in msgs.iter().zip(&outs) {
+            assert_eq!(decrypt_message(out, &sk), (m + 2) % 16, "m={m}");
+        }
+
+        // Key reuse: the batch streams the BSK once (minus the rare
+        // all-zero-rotation keys), while the sequential path streams it
+        // once per ciphertext.
+        let full = keys.bsk.bytes() as u64;
+        assert!(batch_bytes <= full, "batch {batch_bytes} > full {full}");
+        assert!(batch_bytes >= full / 2, "batch {batch_bytes} suspiciously small");
+        for ct in &cts {
+            ctx.pbs(ct, &keys, &lut);
+        }
+        let seq_bytes = ctx.take_bsk_bytes_streamed();
+        assert!(
+            seq_bytes >= 3 * batch_bytes,
+            "sequential {seq_bytes} should stream ~{}x the batch's {batch_bytes}",
+            cts.len()
+        );
+    }
+
+    #[test]
+    fn pbs_batch_empty_and_width_change() {
+        let (sk, keys, mut ctx, mut rng) = setup();
+        let lut = make_lut_poly(&TEST1, |m| m);
+        assert!(ctx.pbs_batch(&[], &keys, &lut).is_empty());
+        // Grow-only scratch: width 5 allocates, 2 and 3 reuse a prefix of
+        // the wider buffers, 1 takes the scalar fast path.
+        for width in [5usize, 2, 3, 1] {
+            let msgs: Vec<u64> = (0..width as u64).map(|i| i % 8).collect();
+            let cts: Vec<_> = msgs.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
+            let outs = ctx.pbs_batch(&cts, &keys, &lut);
+            for (m, out) in msgs.iter().zip(&outs) {
+                assert_eq!(decrypt_message(out, &sk), *m, "width={width} m={m}");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,115 @@
+//! Minimal `anyhow`-compatible error handling (the offline registry has no
+//! `anyhow`; see the module doc in [`crate::util`]). Provides the subset
+//! this crate uses: a string-message [`Error`], a defaulted [`Result`]
+//! alias, the [`anyhow!`]/[`bail!`](crate::bail) macros, and a [`Context`]
+//! extension trait for `Result`/`Option`.
+//!
+//! [`anyhow!`]: crate::anyhow
+
+use std::fmt;
+
+/// A boxed error message with optional context prefixes.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NB: `Error` deliberately does NOT implement `std::error::Error`, so this
+// blanket conversion (which makes `?` work on io/parse/channel errors)
+// cannot overlap the reflexive `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Self::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow::Context` equivalent: annotate errors with what was being done.
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<D: fmt::Display, F: FnOnce() -> D>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] from a message, `format!`-style (goes through
+/// `format_args!` so plain-literal calls don't trip clippy's
+/// `useless_format` at every expansion site).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::err::Error::msg(::std::fmt::format(::std::format_args!($($arg)*)))
+    };
+}
+
+/// Early-return an error, `format!`-style.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parses(s: &str) -> Result<u32> {
+        let n: u32 = s.parse()?; // From<ParseIntError> via the blanket impl
+        if n > 100 {
+            bail!("{n} too large");
+        }
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_and_bail() {
+        assert_eq!(parses("7").unwrap(), 7);
+        assert!(parses("x").is_err());
+        assert_eq!(parses("200").unwrap_err().to_string(), "200 too large");
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: Result<()> = Err(crate::anyhow!("inner")).context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: inner");
+        let o: Option<u8> = None;
+        assert_eq!(o.with_context(|| "missing").unwrap_err().to_string(), "missing");
+    }
+}

@@ -1,7 +1,8 @@
 //! Minimal JSON reader/writer (enough for artifact manifests and results
 //! files; no serde in the offline registry).
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::err::Result;
+use crate::{anyhow, bail};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 

@@ -1,11 +1,13 @@
 //! Small dependency-free utilities.
 //!
-//! The build image has no network access and its cargo registry cache only
-//! contains the `xla` crate's dependency closure, so the conventional crates
-//! (serde/rand/criterion/proptest/clap) are unavailable. These modules
-//! provide the minimal equivalents the rest of the crate needs; see
-//! DESIGN.md §Substitutions.
+//! The build image has no network access and no usable cargo registry, so
+//! the conventional crates (serde/rand/criterion/proptest/clap/anyhow) are
+//! unavailable and the default build carries **zero** external
+//! dependencies (the `xla` crate is opt-in via the `xla` feature). These
+//! modules provide the minimal equivalents the rest of the crate needs;
+//! see DESIGN.md §Substitutions.
 
+pub mod err;
 pub mod json;
 pub mod prop;
 pub mod rng;

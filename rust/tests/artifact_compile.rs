@@ -1,5 +1,8 @@
 //! Artifacts parse + compile on the PJRT CPU client (full execution is
 //! covered by `pbs_xla_vs_native.rs` once keys are generated natively).
+//! Requires the `xla` feature (PJRT is unavailable in the offline image).
+#![cfg(feature = "xla")]
+
 use taurus::runtime::XlaEngine;
 
 #[test]

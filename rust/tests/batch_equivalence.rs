@@ -1,0 +1,148 @@
+//! Batched blind rotation must be a pure performance transform: `pbs_batch`
+//! decrypts identically to sequential `pbs` at every batch size, the
+//! coordinator's fused sweeps keep serving correctly (round-robin intact,
+//! `inflight` drained), and the measured key-reuse traffic agrees with the
+//! `arch` bandwidth model.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use taurus::arch::memory;
+use taurus::arch::TaurusConfig;
+use taurus::coordinator::{BackendKind, Coordinator, CoordinatorOptions};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::interp;
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{make_lut_poly, PbsContext, SecretKeys, ServerKeys};
+use taurus::util::prop::check;
+use taurus::util::rng::Rng;
+
+/// Shared fixture: keygen once (dominates test time).
+struct Fixture {
+    sk: SecretKeys,
+    keys: ServerKeys,
+}
+
+fn fixture() -> &'static Fixture {
+    use std::sync::OnceLock;
+    static F: OnceLock<Fixture> = OnceLock::new();
+    F.get_or_init(|| {
+        let mut rng = Rng::new(0xBA7C);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = ServerKeys::generate(&sk, &mut rng);
+        Fixture { sk, keys }
+    })
+}
+
+#[test]
+fn prop_pbs_batch_decrypts_identically_to_sequential() {
+    let f = fixture();
+    let mut ctx = PbsContext::new(&TEST1);
+    check("pbs_batch_equivalence", 3, |rng| {
+        let table: Vec<u64> = (0..16).map(|_| rng.below(16)).collect();
+        let t2 = table.clone();
+        let lut = make_lut_poly(&TEST1, move |m| t2[m as usize]);
+        for bsz in [1usize, 3, 8] {
+            let msgs: Vec<u64> = (0..bsz).map(|_| rng.below(8)).collect();
+            let cts: Vec<_> = msgs.iter().map(|&m| encrypt_message(m, &f.sk, rng)).collect();
+            let batched = ctx.pbs_batch(&cts, &f.keys, &lut);
+            for (b, (m, out)) in msgs.iter().zip(&batched).enumerate() {
+                let seq = ctx.pbs(&cts[b], &f.keys, &lut);
+                let got_batch = decrypt_message(out, &f.sk);
+                let got_seq = decrypt_message(&seq, &f.sk);
+                let exp = table[*m as usize] % 16;
+                if got_batch != exp || got_seq != exp {
+                    return Err(format!(
+                        "bsz={bsz} b={b} m={m}: batch {got_batch} seq {got_seq} exp {exp}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_key_reuse_matches_arch_bandwidth_model() {
+    // The native pipeline counts the Fourier-BSK bytes its blind rotations
+    // actually stream; the arch memory model predicts the same quantity
+    // for a single-cluster machine whose round-robin depth covers the
+    // batch. They must agree (the measured side may come in slightly
+    // under: keys whose rotation amounts are all zero are skipped, which
+    // happens with probability ~1/2N per mask element).
+    let f = fixture();
+    let mut ctx = PbsContext::new(&TEST1);
+    let lut = make_lut_poly(&TEST1, |m| m);
+    let mut rng = Rng::new(5150);
+    let bsz = 8usize;
+    let cts: Vec<_> = (0..bsz).map(|i| encrypt_message(i as u64 % 8, &f.sk, &mut rng)).collect();
+
+    ctx.take_bsk_bytes_streamed();
+    let _ = ctx.pbs_batch(&cts, &f.keys, &lut);
+    let measured_per_pbs = ctx.take_bsk_bytes_streamed() as f64 / bsz as f64;
+
+    let mut cfg = TaurusConfig::default();
+    cfg.clusters = 1;
+    cfg.rr_ciphertexts = bsz;
+    cfg.complex_bytes = 16; // native pipeline stores f64 re + f64 im
+    let model_per_pbs = memory::amortized_bsk_bytes_per_pbs(&TEST1, &cfg, bsz);
+    assert!(
+        measured_per_pbs <= model_per_pbs * 1.0001,
+        "measured {measured_per_pbs} exceeds model {model_per_pbs}"
+    );
+    assert!(
+        measured_per_pbs >= model_per_pbs * 0.90,
+        "measured {measured_per_pbs} far below model {model_per_pbs}"
+    );
+    // And the in-memory key size agrees with the model's stream unit.
+    assert_eq!(f.keys.bsk.bytes() as u64, memory::bsk_stream_bytes(&TEST1, &cfg));
+}
+
+#[test]
+fn coordinator_batched_sweeps_round_robin_and_drain() {
+    let mut rng = Rng::new(4242);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let keys2 = keys.clone();
+    let mut b = ProgramBuilder::new("batch-serve", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let s = b.add(x, y);
+    let r = b.lut_fn(s, |m| (m * 5 + 2) % 16);
+    b.output(r);
+    let prog = b.finish();
+
+    let coord = Coordinator::start(
+        prog.clone(),
+        keys,
+        CoordinatorOptions {
+            workers: 3,
+            batch_capacity: 4,
+            max_batch_wait: Duration::from_millis(2),
+            backend: BackendKind::Native,
+        },
+    );
+    let queries: Vec<(u64, u64)> = (0..12).map(|i| (i % 5, (i * 7) % 5)).collect();
+    let mut pending = Vec::new();
+    for &(mx, my) in &queries {
+        let inputs =
+            vec![encrypt_message(mx, &sk, &mut rng), encrypt_message(my, &sk, &mut rng)];
+        pending.push(coord.submit(inputs));
+    }
+    for (rx, &(mx, my)) in pending.iter().zip(&queries) {
+        let outs = rx.recv().expect("response");
+        let exp = interp::eval(&prog, &[mx, my]);
+        assert_eq!(decrypt_message(&outs[0], &sk), exp[0], "query ({mx},{my})");
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.requests, 12);
+    assert_eq!(snap.pbs_executed, 12 * prog.pbs_count());
+    assert!(snap.batches >= 3, "work round-robined over several batches");
+    assert_eq!(coord.inflight.load(Ordering::SeqCst), 0, "inflight drained");
+    // Fused sweeps never stream more than one full BSK per PBS.
+    assert!(snap.bsk_bytes_streamed > 0);
+    assert!(snap.bsk_bytes_per_pbs <= keys2.bsk.bytes() as f64 + 1.0);
+    coord.shutdown();
+}

@@ -1,7 +1,8 @@
 //! End-to-end equivalence: the AOT XLA path (JAX+Pallas artifacts executed
 //! via PJRT) and the native Rust TFHE path must evaluate the same LUTs on
 //! the same ciphertexts — the core integration proof of the three-layer
-//! architecture.
+//! architecture. Requires the `xla` feature.
+#![cfg(feature = "xla")]
 
 use taurus::params::TEST1;
 use taurus::runtime::XlaPbsBackend;
