@@ -33,7 +33,7 @@ fn main() {
 
     section("coordinator throughput (1 PBS/query, TEST1, native)");
     for workers in [1usize, 2, 4, 8] {
-        let coord = Coordinator::start(
+        let mut coord = Coordinator::start(
             prog.clone(),
             keys.clone(),
             CoordinatorOptions {
@@ -47,10 +47,12 @@ fn main() {
         let t0 = std::time::Instant::now();
         let pending: Vec<_> = (0..n)
             .map(|i| {
-                coord.submit(vec![
-                    encrypt_message((i % 6) as u64, &sk, &mut rng),
-                    encrypt_message(1, &sk, &mut rng),
-                ])
+                coord
+                    .submit(vec![
+                        encrypt_message((i % 6) as u64, &sk, &mut rng),
+                        encrypt_message(1, &sk, &mut rng),
+                    ])
+                    .expect("submit")
             })
             .collect();
         for rx in &pending {
@@ -70,7 +72,7 @@ fn main() {
 
     section("batch-capacity sweep (2 workers): fused sweeps amortize the BSK stream");
     for capacity in [1usize, 4, 8, 16] {
-        let coord = Coordinator::start(
+        let mut coord = Coordinator::start(
             prog.clone(),
             keys.clone(),
             CoordinatorOptions {
@@ -84,10 +86,12 @@ fn main() {
         let t0 = std::time::Instant::now();
         let pending: Vec<_> = (0..n)
             .map(|i| {
-                coord.submit(vec![
-                    encrypt_message((i % 6) as u64, &sk, &mut rng),
-                    encrypt_message(1, &sk, &mut rng),
-                ])
+                coord
+                    .submit(vec![
+                        encrypt_message((i % 6) as u64, &sk, &mut rng),
+                        encrypt_message(1, &sk, &mut rng),
+                    ])
+                    .expect("submit")
             })
             .collect();
         for rx in &pending {

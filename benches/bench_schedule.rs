@@ -1,0 +1,122 @@
+//! Plan-vs-naive execution sweep: the same fanout-rich program run by the
+//! legacy node-walking engine and by the schedule-driven plan executor at
+//! request-batch sizes {1, 4, 8}. Emits `BENCH_schedule.json` (ks_count,
+//! pbs_count, bsk_bytes_per_pbs, wall time per request) so CI tracks the
+//! schedule-execution trajectory across PRs alongside `BENCH_pbs.json`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use taurus::compiler::{compile, CompileOpts, Engine, NativePbsBackend};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::Program;
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::tfhe::{LweCiphertext, SecretKeys, ServerKeys};
+use taurus::util::json::{arr, num, obj, s, JsonValue};
+use taurus::util::rng::Rng;
+
+/// Fanout-rich serving shape: d = x + y fans out to F LUTs drawn from two
+/// distinct tables (KS-dedup shares d's key switch; ACC-sharing fuses the
+/// rotations into two sweeps), then a dependent reduction LUT level.
+fn fanout_program(fanout: usize) -> Program {
+    let mut b = ProgramBuilder::new("sched-bench", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.add(x, y);
+    let luts: Vec<_> = (0..fanout)
+        .map(|k| {
+            if k % 2 == 0 {
+                b.lut_fn(d, |m| (m + 1) % 16)
+            } else {
+                b.lut_fn(d, |m| m ^ 1)
+            }
+        })
+        .collect();
+    let sum = b.dot(luts, vec![1; fanout], 0);
+    let r = b.lut_fn(sum, |m| m % 8);
+    b.output(r);
+    b.finish()
+}
+
+fn main() {
+    let fanout = 8usize;
+    let prog = fanout_program(fanout);
+    let plan = compile(&prog, &TEST1, CompileOpts::default());
+
+    let mut rng = Rng::new(7);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = ServerKeys::generate(&sk, &mut rng);
+
+    section(&format!(
+        "schedule-driven vs naive execution (fanout {fanout}, {} PBS, KS {} -> {})",
+        plan.graph.pbs_count(),
+        plan.ks_dedup.before,
+        plan.ks_dedup.after
+    ));
+
+    let mut rows: Vec<JsonValue> = Vec::new();
+    for bsz in [1usize, 4, 8] {
+        let batch: Vec<Vec<LweCiphertext>> = (0..bsz)
+            .map(|i| {
+                vec![
+                    encrypt_message(i as u64 % 4, &sk, &mut rng),
+                    encrypt_message((i as u64 * 3) % 4, &sk, &mut rng),
+                ]
+            })
+            .collect();
+
+        let mut naive = Engine::new(NativePbsBackend::new(&keys));
+        naive.take_exec_stats();
+        std::hint::black_box(naive.run_batch(&prog, &batch));
+        let nst = naive.take_exec_stats();
+        let nr = bench(&format!("naive  run_batch B={bsz}"), 0.6, || {
+            std::hint::black_box(naive.run_batch(&prog, &batch));
+        });
+
+        let mut planned = Engine::new(NativePbsBackend::new(&keys));
+        planned.take_exec_stats();
+        std::hint::black_box(planned.run_plan_batch(&plan, &batch));
+        let pst = planned.take_exec_stats();
+        let pr = bench(&format!("plan   run_plan_batch B={bsz}"), 0.6, || {
+            std::hint::black_box(planned.run_plan_batch(&plan, &batch));
+        });
+
+        let per_req = |mean_s: f64| mean_s * 1e9 / bsz as f64;
+        println!(
+            "      B={bsz}: plan {:>5.2}x vs naive | KS/req {} vs {} | BSK B/PBS {:>10.0} vs {:>10.0}",
+            nr.mean_s / pr.mean_s,
+            pst.ks_ops / bsz as u64,
+            nst.ks_ops / bsz as u64,
+            pst.bsk_bytes_streamed as f64 / pst.pbs_ops as f64,
+            nst.bsk_bytes_streamed as f64 / nst.pbs_ops as f64,
+        );
+        for (mode, st, r) in [("naive", &nst, &nr), ("plan", &pst, &pr)] {
+            rows.push(obj(vec![
+                ("mode", s(mode)),
+                ("batch", num(bsz as f64)),
+                ("ks_count", num(st.ks_ops as f64)),
+                ("pbs_count", num(st.pbs_ops as f64)),
+                ("br_calls", num(st.br_calls as f64)),
+                (
+                    "bsk_bytes_per_pbs",
+                    num(st.bsk_bytes_streamed as f64 / st.pbs_ops.max(1) as f64),
+                ),
+                ("ns_per_request", num(per_req(r.mean_s))),
+            ]));
+        }
+    }
+
+    let report = obj(vec![
+        ("bench", s("schedule")),
+        ("ks_dedup_before", num(plan.ks_dedup.before as f64)),
+        ("ks_dedup_after", num(plan.ks_dedup.after as f64)),
+        ("results", arr(rows)),
+    ]);
+    let path = "BENCH_schedule.json";
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -26,9 +26,12 @@ fn main() {
     let n_inputs = small.input_count();
     let inputs: Vec<u64> = (0..n_inputs as u64).map(|i| (i * 3 + 1) % 8).collect();
     let cts: Vec<_> = inputs.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
+    // Schedule-driven execution: the compiled plan shares key switches
+    // across fanout and fuses same-accumulator rotations per level.
+    let plan = compile(&small, &TEST1, 48usize);
     let mut eng = Engine::new(NativePbsBackend::new(&keys));
     let t0 = std::time::Instant::now();
-    let outs = eng.run(&small, &cts);
+    let outs = eng.run_plan(&plan, &cts);
     let secs = t0.elapsed().as_secs_f64();
     let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
     let expected = interp::eval(&small, &inputs);
@@ -39,6 +42,11 @@ fn main() {
         secs,
         secs * 1e3 / small.pbs_count() as f64,
         got
+    );
+    let st = eng.take_exec_stats();
+    println!(
+        "  plan: {} KS (node-walk would pay {}), {} fused BR sweeps",
+        st.ks_ops, plan.ks_dedup.before, st.br_calls
     );
 
     // ---- Part 2: the paper's CNN-20 on the Taurus model.

@@ -58,7 +58,7 @@ fn main() {
     } else {
         BackendKind::Native
     };
-    let coord = Coordinator::start(
+    let mut coord = Coordinator::start(
         prog.clone(),
         keys,
         CoordinatorOptions { workers, backend, batch_capacity: 8, ..Default::default() },
@@ -72,7 +72,7 @@ fn main() {
         let q: Vec<u64> = (0..3).map(|j| ((i + j) % 6) as u64).collect();
         expected.push(interp::eval(&prog, &q)[0]);
         let cts: Vec<_> = q.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
-        pending.push(coord.submit(cts));
+        pending.push(coord.submit(cts).expect("submit"));
     }
     let mut correct = 0;
     for (rx, exp) in pending.iter().zip(&expected) {

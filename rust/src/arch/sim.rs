@@ -25,6 +25,10 @@ pub struct SimResult {
     pub traffic: Traffic,
     pub batches: usize,
     pub pbs_count: usize,
+    /// Key switches the schedule executes (each deduplicated KS costed
+    /// once) — directly comparable with the executor's measured
+    /// `ExecStats::ks_ops` per request and with `DedupStats::after`.
+    pub ks_count: usize,
     /// Fraction of batch windows that were memory-bound ("bandwidth
     /// deficit", Fig. 13b).
     pub bw_deficit: f64,
@@ -57,6 +61,7 @@ pub fn simulate_schedule(s: &Schedule, p: &ParamSet, cfg: &TaurusConfig) -> SimR
     let mut total_traffic = Traffic::default();
     let mut mem_bound_windows = 0usize;
     let mut pbs = 0usize;
+    let mut ks = 0usize;
     // (start, end, demand GB/s) of each batch's stream for the concurrent
     // peak-demand sweep.
     let mut windows: Vec<(f64, f64, f64)> = Vec::with_capacity(s.batches.len());
@@ -64,6 +69,7 @@ pub fn simulate_schedule(s: &Schedule, p: &ParamSet, cfg: &TaurusConfig) -> SimR
     for batch in &s.batches {
         let cts = batch.br_ops.len();
         pbs += cts;
+        ks += batch.ks_ops.len();
         // Least-loaded group takes the batch.
         let g = (0..groups).min_by(|&a, &b| bru_free[a].total_cmp(&bru_free[b])).unwrap();
         // --- LPU phase: linear ops + key switches for this batch,
@@ -143,6 +149,7 @@ pub fn simulate_schedule(s: &Schedule, p: &ParamSet, cfg: &TaurusConfig) -> SimR
         traffic: total_traffic,
         batches: s.batches.len(),
         pbs_count: pbs,
+        ks_count: ks,
         bw_deficit: if s.batches.is_empty() {
             0.0
         } else {
@@ -208,8 +215,8 @@ mod tests {
     #[test]
     fn more_parallelism_does_not_slow_down() {
         let cfg = TaurusConfig::default();
-        let a = simulate(&compile(&wide(48, 6), &GPT2, 48), &cfg);
-        let b = simulate(&compile(&wide(96, 6), &GPT2, 48), &cfg);
+        let a = simulate(&compile(&wide(48, 6), &GPT2, 48usize), &cfg);
+        let b = simulate(&compile(&wide(96, 6), &GPT2, 48usize), &cfg);
         // Twice the work in about twice the time (steady-state linearity).
         let ratio = b.seconds / a.seconds;
         assert!(ratio > 1.7 && ratio < 2.3, "ratio {ratio}");
@@ -270,6 +277,24 @@ mod tests {
         let r = simulate(&c, &cfg);
         assert!(r.seconds > 0.0 && r.seconds < 1.0);
         assert_eq!(r.pbs_count, 10);
+    }
+
+    #[test]
+    fn costed_ks_count_matches_dedup() {
+        // The model costs exactly the deduplicated KS set the executor
+        // runs: a fanout program compiles to one shared KS per source.
+        let cfg = TaurusConfig::default();
+        let mut b = ProgramBuilder::new("fan", 6);
+        let x = b.input();
+        for k in 0..6u64 {
+            let y = b.lut_fn(x, move |m| m + k);
+            b.output(y);
+        }
+        let c = compile(&b.finish(), &GPT2, cfg.batch_capacity());
+        assert_eq!(c.ks_dedup.after, 1);
+        let r = simulate(&c, &cfg);
+        assert_eq!(r.ks_count, c.ks_dedup.after);
+        assert_eq!(r.pbs_count, 6);
     }
 
     #[test]

@@ -74,9 +74,11 @@ pub fn simulate_schedule_xpu(s: &Schedule, p: &ParamSet, x: &XpuConfig) -> super
     let mut peak_bw: f64 = 0.0;
     let mut mem_bound = 0usize;
     let mut pbs = 0usize;
+    let mut ks = 0usize;
     for batch in &s.batches {
         let cts = batch.br_ops.len();
         pbs += cts;
+        ks += batch.ks_ops.len();
         let lpu_work = (batch.lin_ops.len() as f64 * lin_cycles
             + batch.ks_ops.len() as f64 * ks_cycles
             + batch.se_ops.len() as f64 * se_cycles)
@@ -118,6 +120,7 @@ pub fn simulate_schedule_xpu(s: &Schedule, p: &ParamSet, x: &XpuConfig) -> super
         traffic,
         batches: s.batches.len(),
         pbs_count: pbs,
+        ks_count: ks,
         bw_deficit: if s.batches.is_empty() { 0.0 } else { mem_bound as f64 / s.batches.len() as f64 },
         bsk_bytes_per_pbs: if pbs > 0 { traffic.bsk as f64 / pbs as f64 } else { 0.0 },
     }

@@ -105,8 +105,8 @@ mod tests {
         // Table II pattern: GPU beats CPU on deep parallel workloads
         // (GPT-2, XGBoost) but can lose on shallow/serial ones (CNNs with
         // modest level parallelism per batch).
-        let par = compile(&wide(2000), &GPT2, 48);
-        let ser = compile(&chain(200), &GPT2, 48);
+        let par = compile(&wide(2000), &GPT2, 48usize);
+        let ser = compile(&chain(200), &GPT2, 48usize);
         let gpu_par = program_seconds(&par, &DUAL_A5000);
         let cpu_par = cpu_seconds(&par, &EPYC_7R13);
         assert!(gpu_par < cpu_par, "gpu {gpu_par} vs cpu {cpu_par}");
@@ -119,7 +119,7 @@ mod tests {
 
     #[test]
     fn oom_detection_scales_with_acc_storage() {
-        let small = compile(&wide(10), &GPT2, 48);
+        let small = compile(&wide(10), &GPT2, 48usize);
         assert!(fits(&small, &DUAL_A5000));
         // A program with ~200k distinct accumulators at N=32768 exceeds
         // 48 GB.
@@ -129,7 +129,7 @@ mod tests {
             let y = b.lut_fn(x, move |m| (m + i as u64) % 128);
             b.output(y);
         }
-        let huge = compile(&b.finish(), &GPT2, 48);
+        let huge = compile(&b.finish(), &GPT2, 48usize);
         // 1000 distinct tables x 512 KB accumulators = 0.5 GB — still fits;
         // verify the arithmetic path rather than an absurd build time.
         assert!(working_set_bytes(&huge) > working_set_bytes(&small));

@@ -38,6 +38,13 @@ impl Schedule {
         self.batches.iter().map(|b| b.br_ops.len()).sum()
     }
 
+    /// Distinct key switches the schedule executes (each KS appears in
+    /// exactly one batch, however many BRs consume it) — equals
+    /// `DedupStats::after` for the same graph.
+    pub fn total_ks(&self) -> usize {
+        self.batches.iter().map(|b| b.ks_ops.len()).sum()
+    }
+
     /// Fraction of batch slots actually filled (hardware utilization upper
     /// bound; Fig. 15's driver).
     pub fn occupancy(&self) -> f64 {
@@ -93,6 +100,10 @@ pub fn schedule(g: &PrimGraph, capacity: usize) -> Schedule {
     lin_by_level.resize(br_by_level.len(), Vec::new());
 
     let mut out = Schedule { batches: Vec::new(), capacity, loose_linear };
+    // A KS shared by BRs in several chunks of a level is attached to the
+    // first batch only: it is computed once and its result broadcast, so
+    // both the executor and the cost model see exactly one occurrence.
+    let mut ks_seen = vec![false; g.ops.len()];
     for (lvl, brs) in br_by_level.iter().enumerate() {
         let mut first_of_level = true;
         for chunk in brs.chunks(capacity) {
@@ -107,7 +118,8 @@ pub fn schedule(g: &PrimGraph, capacity: usize) -> Schedule {
             for &br in chunk {
                 // The KS feeding this BR (unique dep of BR).
                 for &d in &g.ops[br].deps {
-                    if PrimKind::is_keyswitch(&g.ops[d].kind) && !batch.ks_ops.contains(&d) {
+                    if PrimKind::is_keyswitch(&g.ops[d].kind) && !ks_seen[d] {
+                        ks_seen[d] = true;
                         batch.ks_ops.push(d);
                     }
                 }
@@ -180,6 +192,27 @@ mod tests {
         assert_eq!(s.batches.len(), 1);
         assert_eq!(s.batches[0].ks_ops.len(), 1, "shared KS appears once");
         assert_eq!(s.batches[0].br_ops.len(), 3);
+    }
+
+    #[test]
+    fn shared_ks_across_capacity_chunks_scheduled_once() {
+        // Fanout 5 at capacity 2: three chunks at level 0 all feed off the
+        // one deduplicated KS; it must be computed (and costed) once.
+        let mut b = ProgramBuilder::new("fanchunk", 3);
+        let x = b.input();
+        for k in 0..5u64 {
+            let y = b.lut_fn(x, move |m| (m + k) % 16);
+            b.output(y);
+        }
+        let mut g = lower(&b.finish());
+        dedup_keyswitch(&mut g);
+        let s = schedule(&g, 2);
+        assert_eq!(s.batches.len(), 3);
+        assert_eq!(s.batches[0].ks_ops.len(), 1);
+        assert_eq!(s.batches[1].ks_ops.len(), 0, "shared KS not re-listed");
+        assert_eq!(s.batches[2].ks_ops.len(), 0);
+        assert_eq!(s.total_ks(), 1);
+        assert_eq!(s.total_pbs(), 5);
     }
 
     #[test]

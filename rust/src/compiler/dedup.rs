@@ -3,14 +3,19 @@
 //! * **KS-dedup** — when fanout applies multiple LUTs to the same value,
 //!   the key-switch result is computed once and broadcast ("reduces
 //!   key-switching operations by up to 47.12%"). Enabled by the
-//!   key-switch-first order (Observation 6).
+//!   key-switch-first order (Observation 6). The schedule-driven executor
+//!   realizes the merge on real ciphertexts: each surviving KeySwitch
+//!   primitive runs once and its output feeds every consumer.
 //! * **ACC-dedup** — programs apply the same LUT accumulator across many
 //!   tensor elements; sharing the encoded GLWE accumulator "reduces GLWE
-//!   storage requirements by 91.54%".
+//!   storage requirements by 91.54%". Realized structurally: the graph
+//!   interns one table per distinct hash and the executor encodes each
+//!   interned table once.
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
-use super::lowering::{PrimGraph, PrimKind};
+use super::lowering::{Operand, PrimGraph, PrimId, PrimKind};
 use crate::params::ParamSet;
 
 #[derive(Debug, Clone, Default)]
@@ -39,37 +44,41 @@ impl DedupStats {
     }
 }
 
-/// Merge KeySwitch ops that switch the same IR value: keep the first, remap
-/// all consumers of duplicates onto it. Returns before/after counts.
+fn remap_operand(o: Operand, replace: &[usize], new_id: &[Option<usize>]) -> Operand {
+    match o {
+        Operand::Prim(p) => Operand::Prim(new_id[replace[p]].expect("operand ordered before use")),
+        o => o,
+    }
+}
+
+/// Merge KeySwitch ops that switch the same source ciphertext: keep the
+/// first, remap all consumers of duplicates onto it. Returns before/after
+/// counts.
 pub fn dedup_keyswitch(g: &mut PrimGraph) -> DedupStats {
     let before = g.count(PrimKind::is_keyswitch);
-    // src_value -> canonical KS prim.
-    let mut canon: HashMap<usize, usize> = HashMap::new();
+    // Canonical KS per (source operand, replaced deps). Keying on the
+    // full pair (instead of source alone with a deps guard) means a
+    // mismatching entry never evicts an earlier canonical one — an
+    // A,B,A pattern still merges the third occurrence into the first.
+    let mut canon: HashMap<(Operand, Vec<PrimId>), PrimId> = HashMap::new();
     // old prim id -> replacement (identity unless a removed duplicate).
     let mut replace: Vec<usize> = (0..g.ops.len()).collect();
     for op in &g.ops {
-        if let (PrimKind::KeySwitch, Some(src)) = (&op.kind, op.src_value) {
-            match canon.get(&src) {
-                Some(&keep) => {
-                    // Only merge if the duplicate has identical deps after
-                    // replacement (same producing primitive of src).
-                    let keep_deps: Vec<usize> =
-                        g.ops[keep].deps.iter().map(|&d| replace[d]).collect();
-                    let dup_deps: Vec<usize> =
-                        op.deps.iter().map(|&d| replace[d]).collect();
-                    if keep_deps == dup_deps {
-                        replace[op.id] = keep;
-                    } else {
-                        canon.insert(src, op.id);
-                    }
-                }
-                None => {
-                    canon.insert(src, op.id);
+        if let PrimKind::KeySwitch { src } = op.kind {
+            let src_r = match src {
+                Operand::Prim(p) => Operand::Prim(replace[p]),
+                o => o,
+            };
+            let deps_r: Vec<PrimId> = op.deps.iter().map(|&d| replace[d]).collect();
+            match canon.entry((src_r, deps_r)) {
+                Entry::Occupied(e) => replace[op.id] = *e.get(),
+                Entry::Vacant(e) => {
+                    e.insert(op.id);
                 }
             }
         }
     }
-    // Rewrite deps and drop merged ops (compact ids).
+    // Rewrite deps + payload operands and drop merged ops (compact ids).
     let mut new_id: Vec<Option<usize>> = vec![None; g.ops.len()];
     let mut ops = Vec::with_capacity(g.ops.len());
     let mut level = Vec::with_capacity(g.ops.len());
@@ -85,6 +94,11 @@ pub fn dedup_keyswitch(g: &mut PrimGraph) -> DedupStats {
             .collect();
         o.deps.sort_unstable();
         o.deps.dedup();
+        match &mut o.kind {
+            PrimKind::Linear(e) => e.map_operands(|x| remap_operand(x, &replace, &new_id)),
+            PrimKind::KeySwitch { src } => *src = remap_operand(*src, &replace, &new_id),
+            PrimKind::BlindRotate { .. } | PrimKind::SampleExtract => {}
+        }
         let id = ops.len();
         new_id[op.id] = Some(id);
         o.id = id;
@@ -93,6 +107,11 @@ pub fn dedup_keyswitch(g: &mut PrimGraph) -> DedupStats {
     }
     g.ops = ops;
     g.level = level;
+    g.outputs = g
+        .outputs
+        .iter()
+        .map(|&o| remap_operand(o, &replace, &new_id))
+        .collect();
     debug_assert!(g.validate().is_ok());
     DedupStats {
         before,
@@ -104,29 +123,25 @@ pub fn dedup_keyswitch(g: &mut PrimGraph) -> DedupStats {
 
 /// ACC-dedup: the GLWE accumulators (encoded LUTs) a program needs. Without
 /// sharing, every blind rotation stores its own accumulator; with sharing,
-/// one per distinct table. Returns counts and byte sizes.
+/// one per distinct table (exactly the graph's interned table list).
+/// Returns counts and byte sizes.
 pub fn acc_dedup_stats(g: &PrimGraph, p: &ParamSet) -> DedupStats {
-    let mut distinct: HashMap<u64, usize> = HashMap::new();
-    let mut total = 0usize;
-    for op in &g.ops {
-        if let PrimKind::BlindRotate { table_hash } = op.kind {
-            *distinct.entry(table_hash).or_insert(0) += 1;
-            total += 1;
-        }
-    }
+    let total = g.pbs_count();
+    let distinct = g.tables.len();
     DedupStats {
         before: total,
-        after: distinct.len(),
+        after: distinct,
         bytes_before: total * p.glwe_bytes(),
-        bytes_after: distinct.len() * p.glwe_bytes(),
+        bytes_after: distinct * p.glwe_bytes(),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::lowering::lower;
+    use crate::compiler::lowering::{lower, LinExpr, PrimOp};
     use crate::ir::builder::ProgramBuilder;
+    use crate::ir::LutTable;
     use crate::params::TEST1;
 
     #[test]
@@ -143,6 +158,12 @@ mod tests {
         assert_eq!(stats.after, 1);
         assert_eq!(g.pbs_count(), 3, "BRs untouched");
         assert!((stats.reduction_pct() - 66.66).abs() < 0.1);
+        // All three BRs now depend on the single surviving KS.
+        for op in &g.ops {
+            if PrimKind::is_blind_rotate(&op.kind) {
+                assert_eq!(op.deps, vec![0], "BR {} rewired to shared KS", op.id);
+            }
+        }
     }
 
     #[test]
@@ -160,7 +181,7 @@ mod tests {
 
     #[test]
     fn sequential_luts_on_same_value_name_different_results() {
-        // lut(lut(x)): the inner output is a *different* value than x, so
+        // lut(lut(x)): the inner output is a *different* source than x, so
         // no bogus merging.
         let mut b = ProgramBuilder::new("seq", 3);
         let x = b.input();
@@ -171,6 +192,90 @@ mod tests {
         let stats = dedup_keyswitch(&mut g);
         assert_eq!((stats.before, stats.after), (2, 2));
         g.validate().unwrap();
+    }
+
+    #[test]
+    fn outputs_remapped_after_compaction() {
+        let mut b = ProgramBuilder::new("fan2", 3);
+        let x = b.input();
+        let o1 = b.lut_fn(x, |m| m + 1);
+        let o2 = b.lut_fn(x, |m| m + 2);
+        b.outputs(&[o1, o2]);
+        let mut g = lower(&b.finish());
+        dedup_keyswitch(&mut g);
+        g.validate().unwrap();
+        // Outputs still point at the two SampleExtract prims.
+        for &o in &g.outputs {
+            let Operand::Prim(p) = o else { panic!("output should be a prim") };
+            assert_eq!(g.ops[p].kind, PrimKind::SampleExtract);
+        }
+    }
+
+    #[test]
+    fn deps_mismatch_does_not_evict_canonical_entry() {
+        // Hand-built graph with an A,B,A keyswitch pattern: same source
+        // operand, alternating deps (B carries an extra sequencing dep).
+        // The IR cannot produce this shape (one value has one producer),
+        // but graph transforms could; the old single-entry canonical map
+        // let the B mismatch evict A's entry, so the third KS missed its
+        // merge with the first.
+        let t = LutTable::from_fn(3, |m| m);
+        let lin = |id: usize, c: u64| PrimOp {
+            id,
+            kind: PrimKind::Linear(LinExpr::AddPlain(Operand::Input(0), c)),
+            deps: vec![],
+        };
+        let ks = |id: usize, deps: Vec<usize>| PrimOp {
+            id,
+            kind: PrimKind::KeySwitch { src: Operand::Prim(0) },
+            deps,
+        };
+        let br = |id: usize, dep: usize| PrimOp {
+            id,
+            kind: PrimKind::BlindRotate { table: 0 },
+            deps: vec![dep],
+        };
+        let se = |id: usize, dep: usize| PrimOp {
+            id,
+            kind: PrimKind::SampleExtract,
+            deps: vec![dep],
+        };
+        let ops = vec![
+            lin(0, 1),
+            lin(1, 2),
+            ks(2, vec![0]), // A
+            br(3, 2),
+            se(4, 3),
+            ks(5, vec![0, 1]), // B: same src, extra dep -> not mergeable
+            br(6, 5),
+            se(7, 6),
+            ks(8, vec![0]), // A again: must merge with prim 2
+            br(9, 8),
+            se(10, 9),
+        ];
+        let mut g = PrimGraph {
+            ops,
+            level: vec![0, 0, 0, 0, 1, 0, 0, 1, 0, 0, 1],
+            n_inputs: 1,
+            tables: vec![t],
+            outputs: vec![Operand::Prim(4), Operand::Prim(7), Operand::Prim(10)],
+        };
+        let stats = dedup_keyswitch(&mut g);
+        assert_eq!((stats.before, stats.after), (3, 2), "A,B,A merges the repeat");
+        g.validate().unwrap();
+        // The third BR now depends on the first (surviving) KS.
+        let last_br = g
+            .ops
+            .iter()
+            .rev()
+            .find(|o| PrimKind::is_blind_rotate(&o.kind))
+            .unwrap();
+        let first_ks = g
+            .ops
+            .iter()
+            .find(|o| PrimKind::is_keyswitch(&o.kind))
+            .unwrap();
+        assert_eq!(last_br.deps, vec![first_ks.id]);
     }
 
     #[test]

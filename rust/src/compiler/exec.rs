@@ -1,24 +1,49 @@
-//! Functional executor: runs an IR program on real ciphertexts through a
-//! pluggable PBS backend (native Rust TFHE or the AOT XLA artifacts).
+//! Functional executors over real ciphertexts through a pluggable PBS
+//! backend (native Rust TFHE or the AOT XLA artifacts).
+//!
+//! Two paths share one [`Engine`]:
+//! * [`Engine::run_plan`] / [`Engine::run_plan_batch`] — the
+//!   schedule-driven executor: walks a [`CompiledPlan`]'s batches
+//!   level-by-level, computing each deduplicated KeySwitch **once** and
+//!   broadcasting it to its fanout, and fusing all BlindRotates that
+//!   share an accumulator within a batch into one
+//!   [`PbsBackend::blind_rotate_batch`] sweep (cross-node x cross-request
+//!   key reuse). This is the default in the coordinator and CLI.
+//! * [`Engine::run`] / [`Engine::run_batch`] — the legacy node-walking
+//!   executor, kept as the naive baseline and equivalence oracle.
+//!
 //! Linear ops execute on long LWE ciphertexts exactly as the LPU would.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
+use super::lowering::{LinExpr, Operand, PrimGraph, PrimId, PrimKind};
+use super::CompiledPlan;
 use crate::ir::{Op, Program};
 use crate::params::ParamSet;
 use crate::tfhe::encoding;
-use crate::tfhe::{LweCiphertext, PbsContext, ServerKeys};
+use crate::tfhe::{GlweCiphertext, LweCiphertext, PbsContext, ServerKeys};
 
-/// A PBS implementation (one bootstrap, LUT polynomial pre-encoded).
+/// A PBS backend, split into the three primitive entry points of the
+/// key-switch-first pipeline (paper Fig. 3) so the schedule-driven
+/// executor can drive each stage separately. `pbs` / `pbs_batch` are
+/// provided compositions of the primitives.
 pub trait PbsBackend {
-    fn pbs(&mut self, ct_long: &LweCiphertext, lut_poly: &[u64]) -> LweCiphertext;
+    /// Long LWE -> short LWE key switch (LPU).
+    fn keyswitch(&mut self, ct_long: &LweCiphertext) -> LweCiphertext;
 
-    /// Batched PBS over one shared LUT. Backends that can fuse the blind
-    /// rotations (streaming each BSK row once per batch) override this;
-    /// the default is the sequential fallback.
-    fn pbs_batch(&mut self, cts: &[LweCiphertext], lut_poly: &[u64]) -> Vec<LweCiphertext> {
-        cts.iter().map(|ct| self.pbs(ct, lut_poly)).collect()
-    }
+    /// Blind rotation of a batch of **short** ciphertexts against ONE
+    /// shared accumulator (LUT polynomial); returns one rotated GLWE per
+    /// input. Backends that can fuse stream each BSK row once per call
+    /// instead of once per ciphertext.
+    fn blind_rotate_batch(
+        &mut self,
+        cts_short: &[LweCiphertext],
+        lut_poly: &[u64],
+    ) -> Vec<GlweCiphertext>;
+
+    /// GLWE -> long LWE constant-coefficient extraction (LPU).
+    fn sample_extract(&mut self, acc: &GlweCiphertext) -> LweCiphertext;
 
     fn params(&self) -> &ParamSet;
 
@@ -27,6 +52,21 @@ pub trait PbsBackend {
     /// track it.
     fn take_bsk_bytes_streamed(&mut self) -> u64 {
         0
+    }
+
+    /// One full PBS: KS -> BR -> SE.
+    fn pbs(&mut self, ct_long: &LweCiphertext, lut_poly: &[u64]) -> LweCiphertext {
+        let short = self.keyswitch(ct_long);
+        let accs = self.blind_rotate_batch(std::slice::from_ref(&short), lut_poly);
+        self.sample_extract(&accs[0])
+    }
+
+    /// Batched PBS over one shared LUT: keyswitch each ciphertext, one
+    /// fused blind-rotation sweep, then sample-extract each accumulator.
+    fn pbs_batch(&mut self, cts: &[LweCiphertext], lut_poly: &[u64]) -> Vec<LweCiphertext> {
+        let shorts: Vec<LweCiphertext> = cts.iter().map(|ct| self.keyswitch(ct)).collect();
+        let accs = self.blind_rotate_batch(&shorts, lut_poly);
+        accs.iter().map(|acc| self.sample_extract(acc)).collect()
     }
 }
 
@@ -43,12 +83,20 @@ impl<'k> NativePbsBackend<'k> {
 }
 
 impl PbsBackend for NativePbsBackend<'_> {
-    fn pbs(&mut self, ct_long: &LweCiphertext, lut_poly: &[u64]) -> LweCiphertext {
-        self.ctx.pbs(ct_long, self.keys, lut_poly)
+    fn keyswitch(&mut self, ct_long: &LweCiphertext) -> LweCiphertext {
+        self.keys.ksk.keyswitch(ct_long, &self.keys.params)
     }
 
-    fn pbs_batch(&mut self, cts: &[LweCiphertext], lut_poly: &[u64]) -> Vec<LweCiphertext> {
-        self.ctx.pbs_batch(cts, self.keys, lut_poly)
+    fn blind_rotate_batch(
+        &mut self,
+        cts_short: &[LweCiphertext],
+        lut_poly: &[u64],
+    ) -> Vec<GlweCiphertext> {
+        self.ctx.blind_rotate_batch(cts_short, &self.keys.bsk, lut_poly)
+    }
+
+    fn sample_extract(&mut self, acc: &GlweCiphertext) -> LweCiphertext {
+        acc.sample_extract(&self.keys.params)
     }
 
     fn params(&self) -> &ParamSet {
@@ -61,11 +109,31 @@ impl PbsBackend for NativePbsBackend<'_> {
 }
 
 /// The XLA artifacts execute one blind rotation per invocation, so this
-/// backend keeps the sequential `pbs_batch` fallback.
+/// backend's `blind_rotate_batch` is a sequential loop over the shared
+/// accumulator; sample extraction runs natively (it is a reshuffle).
 #[cfg(feature = "xla")]
 impl PbsBackend for crate::runtime::XlaPbsBackend {
-    fn pbs(&mut self, ct_long: &LweCiphertext, lut_poly: &[u64]) -> LweCiphertext {
-        crate::runtime::XlaPbsBackend::pbs(self, ct_long, lut_poly).expect("xla pbs")
+    fn keyswitch(&mut self, ct_long: &LweCiphertext) -> LweCiphertext {
+        crate::runtime::XlaPbsBackend::keyswitch(self, ct_long).expect("xla keyswitch")
+    }
+
+    fn blind_rotate_batch(
+        &mut self,
+        cts_short: &[LweCiphertext],
+        lut_poly: &[u64],
+    ) -> Vec<GlweCiphertext> {
+        cts_short
+            .iter()
+            .map(|ct| {
+                let flat = crate::runtime::XlaPbsBackend::blind_rotate(self, ct, lut_poly)
+                    .expect("xla blind rotate");
+                GlweCiphertext { data: flat, k: self.params.k, big_n: self.params.big_n }
+            })
+            .collect()
+    }
+
+    fn sample_extract(&mut self, acc: &GlweCiphertext) -> LweCiphertext {
+        acc.sample_extract(&self.params)
     }
 
     fn params(&self) -> &ParamSet {
@@ -73,16 +141,114 @@ impl PbsBackend for crate::runtime::XlaPbsBackend {
     }
 }
 
+/// Counters from executed work, drained by [`Engine::take_exec_stats`].
+/// Both executors fill these, so plan-vs-legacy comparisons (and the
+/// measured-vs-model cross-checks against `arch::sim`) read one source.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Key-switch invocations (one per ciphertext switched).
+    pub ks_ops: u64,
+    /// Blind rotations executed (one per ciphertext rotated) = PBS count.
+    pub pbs_ops: u64,
+    /// Fused `blind_rotate_batch` calls issued.
+    pub br_calls: u64,
+    /// Fourier-BSK bytes streamed by those rotations.
+    pub bsk_bytes_streamed: u64,
+}
+
 /// Program executor with an accumulator (LUT polynomial) cache — ACC-dedup
-/// in action: each distinct table is encoded once and shared.
+/// in action: each distinct table is encoded once and shared via a cheap
+/// refcounted handle.
 pub struct Engine<B: PbsBackend> {
     pub backend: B,
-    lut_cache: HashMap<u64, Vec<u64>>,
+    lut_cache: HashMap<u64, Arc<[u64]>>,
+    stats: ExecStats,
+}
+
+/// Resolve an operand to the ciphertext of request `q`.
+fn fetch<'a>(
+    batch: &'a [&[LweCiphertext]],
+    lwe: &'a [Option<Vec<LweCiphertext>>],
+    o: Operand,
+    q: usize,
+) -> &'a LweCiphertext {
+    match o {
+        Operand::Input(i) => &batch[q][i],
+        Operand::Prim(p) => &lwe[p].as_ref().expect("operand computed before use")[q],
+    }
+}
+
+/// The (unique) KeySwitch dependency of a BlindRotate.
+fn ks_dep(g: &PrimGraph, br: PrimId) -> PrimId {
+    g.ops[br]
+        .deps
+        .iter()
+        .copied()
+        .find(|&d| PrimKind::is_keyswitch(&g.ops[d].kind))
+        .expect("BlindRotate has a KeySwitch dep")
+}
+
+/// Execute one linear primitive across the whole request batch.
+fn exec_linear(
+    p: &ParamSet,
+    g: &PrimGraph,
+    id: PrimId,
+    batch: &[&[LweCiphertext]],
+    lwe: &mut [Option<Vec<LweCiphertext>>],
+) {
+    let PrimKind::Linear(expr) = &g.ops[id].kind else {
+        panic!("lin_ops lists non-linear prim {id}")
+    };
+    let nb = batch.len();
+    let delta = p.delta();
+    let out: Vec<LweCiphertext> = (0..nb)
+        .map(|q| match expr {
+            LinExpr::Add(a, b) => {
+                let mut ct = fetch(batch, lwe, *a, q).clone();
+                ct.add_assign(fetch(batch, lwe, *b, q));
+                ct
+            }
+            LinExpr::Sub(a, b) => {
+                let mut ct = fetch(batch, lwe, *a, q).clone();
+                ct.sub_assign(fetch(batch, lwe, *b, q));
+                ct
+            }
+            LinExpr::AddPlain(a, c) => {
+                let mut ct = fetch(batch, lwe, *a, q).clone();
+                ct.plain_add_assign(c.wrapping_mul(delta));
+                ct
+            }
+            LinExpr::MulPlain(a, c) => {
+                let mut ct = fetch(batch, lwe, *a, q).clone();
+                ct.scalar_mul_assign(*c);
+                ct
+            }
+            LinExpr::Dot { inputs, weights, bias } => {
+                let mut acc = LweCiphertext::trivial(bias.wrapping_mul(delta), p.long_dim());
+                for (x, &w) in inputs.iter().zip(weights) {
+                    if w == 0 {
+                        continue;
+                    }
+                    let mut t = fetch(batch, lwe, *x, q).clone();
+                    t.scalar_mul_assign(w);
+                    acc.add_assign(&t);
+                }
+                acc
+            }
+            LinExpr::Pack(a, b) => {
+                let mut ct = fetch(batch, lwe, *a, q).clone();
+                ct.scalar_mul_assign(encoding::bivariate_scale(p) as i64);
+                ct.add_assign(fetch(batch, lwe, *b, q));
+                ct
+            }
+        })
+        .collect();
+    lwe[id] = Some(out);
 }
 
 impl<B: PbsBackend> Engine<B> {
     pub fn new(backend: B) -> Self {
-        Self { backend, lut_cache: HashMap::new() }
+        Self { backend, lut_cache: HashMap::new(), stats: ExecStats::default() }
     }
 
     /// Number of distinct accumulators encoded so far.
@@ -90,21 +256,144 @@ impl<B: PbsBackend> Engine<B> {
         self.lut_cache.len()
     }
 
-    /// Drain the backend's Fourier-BSK traffic counter (see
-    /// [`PbsBackend::take_bsk_bytes_streamed`]).
-    pub fn take_bsk_bytes_streamed(&mut self) -> u64 {
-        self.backend.take_bsk_bytes_streamed()
+    /// Drain the execution counters accumulated since the last call
+    /// (includes the backend's BSK traffic counter — this is the ONLY
+    /// engine-level drain, so traffic is never split across readers).
+    pub fn take_exec_stats(&mut self) -> ExecStats {
+        let mut st = std::mem::take(&mut self.stats);
+        st.bsk_bytes_streamed += self.backend.take_bsk_bytes_streamed();
+        st
     }
 
-    fn lut_for(&mut self, p: &ParamSet, table: &crate::ir::LutTable) -> Vec<u64> {
+    fn lut_for(&mut self, p: &ParamSet, table: &crate::ir::LutTable) -> Arc<[u64]> {
         self.lut_cache
             .entry(table.hash)
             .or_insert_with(|| {
                 let vals = table.values.clone();
-                encoding::make_lut_poly(p, move |m| vals[m as usize])
+                Arc::from(encoding::make_lut_poly(p, move |m| vals[m as usize]))
             })
             .clone()
     }
+
+    // ------------------------------------------------------------------
+    // Schedule-driven execution (the default path).
+    // ------------------------------------------------------------------
+
+    /// Execute a compiled plan on one encrypted request.
+    pub fn run_plan(&mut self, plan: &CompiledPlan, inputs: &[LweCiphertext]) -> Vec<LweCiphertext> {
+        let mut outs = self.run_plan_batch_slices(plan, &[inputs]);
+        outs.pop().unwrap()
+    }
+
+    /// Execute a compiled plan for a whole batch of requests. Convenience
+    /// wrapper over owned per-request input vectors.
+    pub fn run_plan_batch(
+        &mut self,
+        plan: &CompiledPlan,
+        batch: &[Vec<LweCiphertext>],
+    ) -> Vec<Vec<LweCiphertext>> {
+        let refs: Vec<&[LweCiphertext]> = batch.iter().map(Vec::as_slice).collect();
+        self.run_plan_batch_slices(plan, &refs)
+    }
+
+    /// Walk the plan's schedule batch-by-batch: linear ops, then the
+    /// batch's key switches (each deduplicated KS computed ONCE and its
+    /// short ciphertexts broadcast to every consuming rotation), then all
+    /// blind rotations sharing an accumulator fused into one
+    /// [`PbsBackend::blind_rotate_batch`] sweep spanning nodes x requests,
+    /// then sample extraction. Returns one output vector per request.
+    pub fn run_plan_batch_slices(
+        &mut self,
+        plan: &CompiledPlan,
+        batch: &[&[LweCiphertext]],
+    ) -> Vec<Vec<LweCiphertext>> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        let g = &plan.graph;
+        for inputs in batch {
+            assert_eq!(inputs.len(), g.n_inputs, "input arity");
+        }
+        let p = self.backend.params().clone();
+        assert_eq!(p.width, plan.program.width, "program width must match params");
+        let nb = batch.len();
+        // Per-primitive outputs, one ciphertext per request.
+        let mut lwe: Vec<Option<Vec<LweCiphertext>>> = vec![None; g.ops.len()];
+        let mut glwe: Vec<Option<Vec<GlweCiphertext>>> = vec![None; g.ops.len()];
+        for sb in &plan.schedule.batches {
+            for &id in &sb.lin_ops {
+                exec_linear(&p, g, id, batch, &mut lwe);
+            }
+            for &id in &sb.ks_ops {
+                if lwe[id].is_some() {
+                    continue; // shared KS already computed
+                }
+                let PrimKind::KeySwitch { src } = &g.ops[id].kind else {
+                    panic!("ks_ops lists non-KS prim {id}")
+                };
+                let outs: Vec<LweCiphertext> = (0..nb)
+                    .map(|q| self.backend.keyswitch(fetch(batch, &lwe, *src, q)))
+                    .collect();
+                self.stats.ks_ops += nb as u64;
+                lwe[id] = Some(outs);
+            }
+            // Fuse rotations sharing an accumulator into one sweep each:
+            // the BSK streams once per (table, batch) instead of once per
+            // node — strictly better amortization than per-node batching.
+            let mut groups: Vec<(usize, Vec<PrimId>)> = Vec::new();
+            for &br in &sb.br_ops {
+                let PrimKind::BlindRotate { table } = &g.ops[br].kind else {
+                    panic!("br_ops lists non-BR prim {br}")
+                };
+                match groups.iter().position(|(t, _)| t == table) {
+                    Some(i) => groups[i].1.push(br),
+                    None => groups.push((*table, vec![br])),
+                }
+            }
+            for (table, brs) in &groups {
+                let lut = self.lut_for(&p, &g.tables[*table]);
+                let mut shorts: Vec<LweCiphertext> = Vec::with_capacity(brs.len() * nb);
+                for &br in brs {
+                    let ks = ks_dep(g, br);
+                    shorts.extend(lwe[ks].as_ref().expect("KS before BR").iter().cloned());
+                }
+                let mut accs = self.backend.blind_rotate_batch(&shorts, &lut);
+                debug_assert_eq!(accs.len(), brs.len() * nb);
+                self.stats.pbs_ops += (brs.len() * nb) as u64;
+                self.stats.br_calls += 1;
+                // Hand each BR its accumulators without copying: split the
+                // result vector from the tail (brs order = accs order).
+                for &br in brs.iter().rev() {
+                    glwe[br] = Some(accs.split_off(accs.len() - nb));
+                }
+            }
+            for &id in &sb.se_ops {
+                let br = g.ops[id]
+                    .deps
+                    .iter()
+                    .copied()
+                    .find(|&d| PrimKind::is_blind_rotate(&g.ops[d].kind))
+                    .expect("SampleExtract has a BlindRotate dep");
+                // take(): each BR has exactly one SE consumer, so the
+                // accumulators are freed as soon as they are extracted
+                // (peak GLWE memory = one level, not the whole program).
+                let accs = glwe[br].take().expect("BR before SE");
+                let outs: Vec<LweCiphertext> =
+                    accs.iter().map(|acc| self.backend.sample_extract(acc)).collect();
+                lwe[id] = Some(outs);
+            }
+        }
+        for &id in &plan.schedule.loose_linear {
+            exec_linear(&p, g, id, batch, &mut lwe);
+        }
+        (0..nb)
+            .map(|q| g.outputs.iter().map(|&o| fetch(batch, &lwe, o, q).clone()).collect())
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // Legacy node-walking execution (naive baseline / equivalence oracle).
+    // ------------------------------------------------------------------
 
     /// Execute `prog` on encrypted inputs; returns encrypted outputs.
     pub fn run(&mut self, prog: &Program, inputs: &[LweCiphertext]) -> Vec<LweCiphertext> {
@@ -127,9 +416,9 @@ impl<B: PbsBackend> Engine<B> {
     /// Execute `prog` for a whole batch of requests in lockstep: every
     /// node is evaluated across the batch before moving to the next, so
     /// each `Lut`/`BivLut` node becomes ONE [`PbsBackend::pbs_batch`]
-    /// call — a fused blind-rotation sweep that streams each BSK row once
-    /// per batch (the paper's key-reuse schedule) instead of once per
-    /// request. Returns one output vector per request, in request order.
+    /// call. Per-node batching only — unlike the plan path it neither
+    /// shares key switches across fanout nor fuses rotations across
+    /// nodes. Returns one output vector per request, in request order.
     pub fn run_batch_slices(
         &mut self,
         prog: &Program,
@@ -200,6 +489,9 @@ impl<B: PbsBackend> Engine<B> {
                     .collect(),
                 Op::Lut { input, table } => {
                     let lut = self.lut_for(&p, table);
+                    self.stats.ks_ops += nb as u64;
+                    self.stats.pbs_ops += nb as u64;
+                    self.stats.br_calls += 1;
                     self.backend.pbs_batch(vals[*input].as_ref().unwrap(), &lut)
                 }
                 Op::BivLut { a, b, table } => {
@@ -214,6 +506,9 @@ impl<B: PbsBackend> Engine<B> {
                         })
                         .collect();
                     let lut = self.lut_for(&p, table);
+                    self.stats.ks_ops += nb as u64;
+                    self.stats.pbs_ops += nb as u64;
+                    self.stats.br_calls += 1;
                     self.backend.pbs_batch(&packed, &lut)
                 }
             };
@@ -229,6 +524,7 @@ impl<B: PbsBackend> Engine<B> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compiler::{compile, CompileOpts};
     use crate::ir::builder::ProgramBuilder;
     use crate::ir::interp;
     use crate::params::TEST1;
@@ -328,7 +624,10 @@ mod tests {
 
         let mut eng = Engine::new(NativePbsBackend::new(&keys));
         let batched = eng.run_batch(&prog, &batch);
-        assert!(eng.take_bsk_bytes_streamed() > 0, "traffic counter wired through");
+        assert!(
+            eng.take_exec_stats().bsk_bytes_streamed > 0,
+            "traffic counter wired through"
+        );
         let mut eng2 = Engine::new(NativePbsBackend::new(&keys));
         for (q, (inputs, &(mx, my))) in batch.iter().zip(&queries).enumerate() {
             let single = eng2.run(&prog, inputs);
@@ -359,5 +658,143 @@ mod tests {
             let out = eng.run(&prog, &cts);
             assert_eq!(decrypt_message(&out[0], &sk), mx & my, "({mx},{my})");
         }
+    }
+
+    #[test]
+    fn run_plan_matches_legacy_and_interp() {
+        let (sk, keys, mut rng) = setup();
+        // Every op kind: linear mix, fanout LUTs, a bivariate LUT, a
+        // dependent second PBS level, and a linear tail.
+        let mut b = ProgramBuilder::new("plan", 3);
+        let x = b.input();
+        let y = b.input();
+        let s = b.add(x, y);
+        let l1 = b.lut_fn(s, |m| (m + 5) % 16);
+        let l2 = b.lut_fn(s, |m| m ^ 3); // fanout: shares s's KS
+        let t = b.sub(l1, l2);
+        let g = b.biv_lut_fn(x, y, |a, bb| a.max(bb));
+        let u = b.add(t, g);
+        let v = b.lut_fn(u, |m| (m * 3) % 16); // second level
+        let w = b.add_plain(v, 1); // linear tail
+        b.output(w);
+        let prog = b.finish();
+        let plan = compile(&prog, &TEST1, CompileOpts::default());
+
+        let mut eng = Engine::new(NativePbsBackend::new(&keys));
+        let mut eng2 = Engine::new(NativePbsBackend::new(&keys));
+        for (mx, my) in [(1u64, 0u64), (0, 1), (1, 1)] {
+            let cts = vec![
+                encrypt_message(mx, &sk, &mut rng),
+                encrypt_message(my, &sk, &mut rng),
+            ];
+            let exp = interp::eval(&prog, &[mx, my]);
+            let got: Vec<u64> =
+                eng.run_plan(&plan, &cts).iter().map(|c| decrypt_message(c, &sk)).collect();
+            let legacy: Vec<u64> =
+                eng2.run(&prog, &cts).iter().map(|c| decrypt_message(c, &sk)).collect();
+            assert_eq!(got, exp, "plan ({mx},{my})");
+            assert_eq!(legacy, exp, "legacy ({mx},{my})");
+        }
+        // Measured counts equal the compiled plan's.
+        let st = eng.take_exec_stats();
+        assert_eq!(st.ks_ops, 3 * plan.ks_dedup.after as u64);
+        assert_eq!(st.pbs_ops, 3 * plan.graph.pbs_count() as u64);
+        // Legacy pays one KS per LUT node.
+        let st2 = eng2.take_exec_stats();
+        assert_eq!(st2.ks_ops, 3 * plan.ks_dedup.before as u64);
+    }
+
+    #[test]
+    fn plan_fanout_one_keyswitch_one_fused_sweep() {
+        let (sk, keys, mut rng) = setup();
+        // N LUTs over one value, all sharing one table: the plan performs
+        // exactly 1 key switch (legacy: N) and ONE fused rotation sweep.
+        let n = 4usize;
+        let table = crate::ir::LutTable::from_fn(3, |m| (m + 1) % 16);
+        let mut b = ProgramBuilder::new("fan", 3);
+        let x = b.input();
+        for _ in 0..n {
+            let y = b.lut(x, table.clone());
+            b.output(y);
+        }
+        let prog = b.finish();
+        let plan = compile(&prog, &TEST1, CompileOpts::default());
+        assert_eq!(plan.ks_dedup.after, 1);
+
+        let mut eng = Engine::new(NativePbsBackend::new(&keys));
+        let m = 3u64;
+        let ct = vec![encrypt_message(m, &sk, &mut rng)];
+        let outs = eng.run_plan(&plan, &ct);
+        let exp = interp::eval(&prog, &[m]);
+        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+        assert_eq!(got, exp);
+        let st = eng.take_exec_stats();
+        assert_eq!(st.ks_ops, 1, "one KS broadcast to {n} rotations");
+        assert_eq!(st.pbs_ops, n as u64);
+        assert_eq!(st.br_calls, 1, "shared table -> one fused sweep");
+        // The fused sweep streams the BSK once for all n rotations.
+        assert!(st.bsk_bytes_streamed <= keys.bsk.bytes() as u64);
+
+        let mut legacy = Engine::new(NativePbsBackend::new(&keys));
+        let outs2 = legacy.run(&prog, &ct);
+        let got2: Vec<u64> = outs2.iter().map(|c| decrypt_message(c, &sk)).collect();
+        assert_eq!(got2, exp);
+        let st2 = legacy.take_exec_stats();
+        assert_eq!(st2.ks_ops, n as u64, "legacy pays a KS per node");
+        assert_eq!(st2.br_calls, n as u64, "legacy sweeps per node");
+    }
+
+    #[test]
+    fn run_plan_batch_matches_per_request() {
+        let (sk, keys, mut rng) = setup();
+        let mut b = ProgramBuilder::new("planbatch", 3);
+        let x = b.input();
+        let y = b.input();
+        let s = b.add(x, y);
+        let l = b.lut_fn(s, |m| (m * 5 + 2) % 16);
+        let r = b.lut_fn(s, |m| m.saturating_sub(1));
+        let o = b.add(l, r);
+        b.output(o);
+        let prog = b.finish();
+        let plan = compile(&prog, &TEST1, CompileOpts::default());
+
+        let queries: Vec<(u64, u64)> = vec![(1, 0), (2, 1), (0, 3)];
+        let batch: Vec<Vec<LweCiphertext>> = queries
+            .iter()
+            .map(|&(mx, my)| {
+                vec![encrypt_message(mx, &sk, &mut rng), encrypt_message(my, &sk, &mut rng)]
+            })
+            .collect();
+        let mut eng = Engine::new(NativePbsBackend::new(&keys));
+        let outs = eng.run_plan_batch(&plan, &batch);
+        for (q, &(mx, my)) in queries.iter().enumerate() {
+            let exp = interp::eval(&prog, &[mx, my]);
+            let got: Vec<u64> = outs[q].iter().map(|c| decrypt_message(c, &sk)).collect();
+            assert_eq!(got, exp, "q={q}");
+        }
+        let st = eng.take_exec_stats();
+        assert_eq!(st.ks_ops, queries.len() as u64 * plan.ks_dedup.after as u64);
+        assert_eq!(st.pbs_ops, queries.len() as u64 * plan.graph.pbs_count() as u64);
+    }
+
+    #[test]
+    fn run_plan_pure_linear_program() {
+        let (sk, keys, mut rng) = setup();
+        let mut b = ProgramBuilder::new("lin", 3);
+        let x = b.input();
+        let y = b.input();
+        let s = b.add(x, y);
+        let t = b.mul_plain(s, 2);
+        b.output(t);
+        b.output(x);
+        let prog = b.finish();
+        let plan = compile(&prog, &TEST1, CompileOpts::default());
+        assert!(plan.schedule.batches.is_empty());
+        let mut eng = Engine::new(NativePbsBackend::new(&keys));
+        let cts = vec![encrypt_message(2, &sk, &mut rng), encrypt_message(1, &sk, &mut rng)];
+        let outs = eng.run_plan(&plan, &cts);
+        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+        assert_eq!(got, interp::eval(&prog, &[2, 1]));
+        assert_eq!(eng.take_exec_stats().pbs_ops, 0);
     }
 }

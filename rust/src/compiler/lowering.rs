@@ -1,26 +1,82 @@
 //! IR -> primitive TFHE DAG, with PBS treated as a **non-atomic** op
 //! (paper Observation 6): each LUT lowers to KeySwitch -> BlindRotate ->
 //! SampleExtract so later passes can share KS results across fanout.
+//!
+//! The graph is self-contained for execution: linear primitives carry
+//! their expression payloads, blind rotations reference interned LUT
+//! tables (ACC-dedup realized structurally — one table per distinct
+//! hash), and `outputs` binds the program results to operands. The
+//! schedule-driven executor (`compiler::exec::Engine::run_plan`) walks
+//! this graph without ever consulting the source IR.
 
-use crate::ir::{Op, Program, ValueId};
+use crate::ir::{LutTable, Op, Program, ValueId};
 
 pub type PrimId = usize;
+
+/// Where a primitive reads a ciphertext from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Operand {
+    /// Program input slot (fresh ciphertext, available at time zero).
+    Input(usize),
+    /// The LWE output of another primitive.
+    Prim(PrimId),
+}
+
+/// An LPU-side linear expression over long LWE ciphertexts — the payload
+/// a `Linear` primitive executes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LinExpr {
+    Add(Operand, Operand),
+    Sub(Operand, Operand),
+    AddPlain(Operand, u64),
+    MulPlain(Operand, i64),
+    Dot { inputs: Vec<Operand>, weights: Vec<i64>, bias: u64 },
+    /// Bivariate pack `a * 2^(width/2) + b` (paper footnote 4).
+    Pack(Operand, Operand),
+}
+
+impl LinExpr {
+    /// Ciphertext operands of this expression.
+    pub fn operands(&self) -> Vec<Operand> {
+        match self {
+            LinExpr::Add(a, b) | LinExpr::Sub(a, b) | LinExpr::Pack(a, b) => vec![*a, *b],
+            LinExpr::AddPlain(a, _) | LinExpr::MulPlain(a, _) => vec![*a],
+            LinExpr::Dot { inputs, .. } => inputs.clone(),
+        }
+    }
+
+    /// Rewrite every operand in place (dedup id compaction).
+    pub fn map_operands(&mut self, mut f: impl FnMut(Operand) -> Operand) {
+        match self {
+            LinExpr::Add(a, b) | LinExpr::Sub(a, b) | LinExpr::Pack(a, b) => {
+                *a = f(*a);
+                *b = f(*b);
+            }
+            LinExpr::AddPlain(a, _) | LinExpr::MulPlain(a, _) => *a = f(*a),
+            LinExpr::Dot { inputs, .. } => {
+                for x in inputs.iter_mut() {
+                    *x = f(*x);
+                }
+            }
+        }
+    }
+}
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum PrimKind {
     /// Any LPU-side linear op (add/sub/plain/dot/bivariate pack).
-    Linear,
-    /// Long -> short key switch of an IR value (LPU).
-    KeySwitch,
-    /// CMUX blind rotation against the LUT with this table hash (BRU).
-    BlindRotate { table_hash: u64 },
+    Linear(LinExpr),
+    /// Long -> short key switch of `src` (LPU).
+    KeySwitch { src: Operand },
+    /// CMUX blind rotation against the interned table at this index (BRU).
+    BlindRotate { table: usize },
     /// GLWE -> long LWE extraction (LPU).
     SampleExtract,
 }
 
 impl PrimKind {
     pub fn is_keyswitch(k: &PrimKind) -> bool {
-        matches!(k, PrimKind::KeySwitch)
+        matches!(k, PrimKind::KeySwitch { .. })
     }
 
     pub fn is_blind_rotate(k: &PrimKind) -> bool {
@@ -28,7 +84,7 @@ impl PrimKind {
     }
 
     pub fn is_linear(k: &PrimKind) -> bool {
-        matches!(k, PrimKind::Linear)
+        matches!(k, PrimKind::Linear(_))
     }
 }
 
@@ -38,10 +94,6 @@ pub struct PrimOp {
     pub kind: PrimKind,
     /// Primitive dependencies (must complete first).
     pub deps: Vec<PrimId>,
-    /// IR value this primitive produces (Linear / SampleExtract), if any.
-    pub value: Option<ValueId>,
-    /// For KeySwitch: the IR value being switched (dedup key).
-    pub src_value: Option<ValueId>,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -49,19 +101,36 @@ pub struct PrimGraph {
     pub ops: Vec<PrimOp>,
     /// PBS level of each op (0 = before any bootstrap).
     pub level: Vec<usize>,
+    /// Number of program input slots (`Operand::Input` range).
+    pub n_inputs: usize,
+    /// Interned LUT tables, one per distinct hash (ACC-dedup).
+    pub tables: Vec<LutTable>,
+    /// Program outputs, bound to operands.
+    pub outputs: Vec<Operand>,
 }
 
 impl PrimGraph {
-    fn push(&mut self, kind: PrimKind, deps: Vec<PrimId>, value: Option<ValueId>, src_value: Option<ValueId>) -> PrimId {
+    fn push(&mut self, kind: PrimKind, deps: Vec<PrimId>) -> PrimId {
         let id = self.ops.len();
         let lvl = deps
             .iter()
             .map(|&d| self.level[d] + usize::from(PrimKind::is_blind_rotate(&self.ops[d].kind)))
             .max()
             .unwrap_or(0);
-        self.ops.push(PrimOp { id, kind, deps, value, src_value });
+        self.ops.push(PrimOp { id, kind, deps });
         self.level.push(lvl);
         id
+    }
+
+    /// Intern a LUT table, returning its index (shared per distinct hash).
+    pub fn intern_table(&mut self, t: &LutTable) -> usize {
+        match self.tables.iter().position(|x| x.hash == t.hash) {
+            Some(i) => i,
+            None => {
+                self.tables.push(t.clone());
+                self.tables.len() - 1
+            }
+        }
     }
 
     pub fn count(&self, pred: impl Fn(&PrimKind) -> bool) -> usize {
@@ -72,7 +141,11 @@ impl PrimGraph {
         self.count(PrimKind::is_blind_rotate)
     }
 
-    /// Verify the DAG is topologically ordered and deps are in range.
+    /// Verify the DAG is topologically ordered, deps/operands are in
+    /// range, table references resolve, and every `Prim` payload operand
+    /// also appears in `deps` (scheduling orders by deps while execution
+    /// fetches through operands — they must agree or the executor could
+    /// be handed an operand before it is computed).
     pub fn validate(&self) -> Result<(), String> {
         for op in &self.ops {
             for &d in &op.deps {
@@ -80,59 +153,128 @@ impl PrimGraph {
                     return Err(format!("prim {} depends on later prim {d}", op.id));
                 }
             }
+            let operand_ok = |o: Operand| -> Result<(), String> {
+                match o {
+                    Operand::Input(i) if i >= self.n_inputs => {
+                        Err(format!("prim {} reads input {i} of {}", op.id, self.n_inputs))
+                    }
+                    Operand::Prim(p) if p >= op.id => {
+                        Err(format!("prim {} reads later prim {p}", op.id))
+                    }
+                    Operand::Prim(p) if !op.deps.contains(&p) => {
+                        Err(format!("prim {} reads prim {p} not in its deps", op.id))
+                    }
+                    _ => Ok(()),
+                }
+            };
+            match &op.kind {
+                PrimKind::Linear(e) => {
+                    for o in e.operands() {
+                        operand_ok(o)?;
+                    }
+                }
+                PrimKind::KeySwitch { src } => operand_ok(*src)?,
+                PrimKind::BlindRotate { table } => {
+                    if *table >= self.tables.len() {
+                        return Err(format!("prim {} references table {table}", op.id));
+                    }
+                }
+                PrimKind::SampleExtract => {}
+            }
+        }
+        for &o in &self.outputs {
+            match o {
+                Operand::Input(i) if i >= self.n_inputs => {
+                    return Err(format!("output reads input {i} of {}", self.n_inputs));
+                }
+                Operand::Prim(p) if p >= self.ops.len() => {
+                    return Err(format!("output reads prim {p} of {}", self.ops.len()));
+                }
+                _ => {}
+            }
         }
         Ok(())
     }
 }
 
-/// Lower a validated IR program.
+/// Lower a validated IR program into a self-contained primitive graph.
 pub fn lower(prog: &Program) -> PrimGraph {
     let mut g = PrimGraph::default();
     // Producing primitive of each IR value (None = program input, available
-    // at time zero).
+    // at time zero through its input slot).
     let mut producer: Vec<Option<PrimId>> = vec![None; prog.nodes.len()];
-    let dep_prims = |producer: &[Option<PrimId>], vals: &[ValueId]| -> Vec<PrimId> {
-        let mut d: Vec<PrimId> = vals.iter().filter_map(|&v| producer[v]).collect();
+    let mut input_slot: Vec<usize> = vec![usize::MAX; prog.nodes.len()];
+    let operand = |producer: &[Option<PrimId>], input_slot: &[usize], v: ValueId| -> Operand {
+        match producer[v] {
+            Some(p) => Operand::Prim(p),
+            None => Operand::Input(input_slot[v]),
+        }
+    };
+    let dep_prims = |ops: &[Operand]| -> Vec<PrimId> {
+        let mut d: Vec<PrimId> = ops
+            .iter()
+            .filter_map(|o| match o {
+                Operand::Prim(p) => Some(*p),
+                Operand::Input(_) => None,
+            })
+            .collect();
         d.sort_unstable();
         d.dedup();
         d
     };
     for (i, node) in prog.nodes.iter().enumerate() {
         match node {
-            Op::Input => {}
+            Op::Input => {
+                input_slot[i] = g.n_inputs;
+                g.n_inputs += 1;
+            }
             Op::Add(..) | Op::Sub(..) | Op::AddPlain(..) | Op::MulPlain(..) | Op::Dot { .. } => {
-                let deps = dep_prims(&producer, &node.deps());
-                producer[i] = Some(g.push(PrimKind::Linear, deps, Some(i), None));
+                let ops: Vec<Operand> = node
+                    .deps()
+                    .iter()
+                    .map(|&v| operand(&producer, &input_slot, v))
+                    .collect();
+                let expr = match node {
+                    Op::Add(..) => LinExpr::Add(ops[0], ops[1]),
+                    Op::Sub(..) => LinExpr::Sub(ops[0], ops[1]),
+                    Op::AddPlain(_, c) => LinExpr::AddPlain(ops[0], *c),
+                    Op::MulPlain(_, c) => LinExpr::MulPlain(ops[0], *c),
+                    Op::Dot { weights, bias, .. } => {
+                        LinExpr::Dot { inputs: ops.clone(), weights: weights.clone(), bias: *bias }
+                    }
+                    _ => unreachable!(),
+                };
+                let deps = dep_prims(&ops);
+                producer[i] = Some(g.push(PrimKind::Linear(expr), deps));
             }
             Op::Lut { input, table } => {
-                let deps = dep_prims(&producer, &[*input]);
-                let ks = g.push(PrimKind::KeySwitch, deps, None, Some(*input));
-                let br = g.push(
-                    PrimKind::BlindRotate { table_hash: table.hash },
-                    vec![ks],
-                    None,
-                    None,
-                );
-                producer[i] = Some(g.push(PrimKind::SampleExtract, vec![br], Some(i), None));
+                let src = operand(&producer, &input_slot, *input);
+                let deps = dep_prims(&[src]);
+                let ks = g.push(PrimKind::KeySwitch { src }, deps);
+                let ti = g.intern_table(table);
+                let br = g.push(PrimKind::BlindRotate { table: ti }, vec![ks]);
+                producer[i] = Some(g.push(PrimKind::SampleExtract, vec![br]));
             }
             Op::BivLut { a, b, table } => {
-                // Linear pack then the usual KS -> BR -> SE.
-                let deps = dep_prims(&producer, &[*a, *b]);
-                let pack = g.push(PrimKind::Linear, deps, Some(i), None);
-                // The packed value is node i's *intermediate*; use the IR
-                // node id itself as the dedup key (each BivLut packs
-                // uniquely).
-                let ks = g.push(PrimKind::KeySwitch, vec![pack], None, Some(i));
-                let br = g.push(
-                    PrimKind::BlindRotate { table_hash: table.hash },
-                    vec![ks],
-                    None,
-                    None,
-                );
-                producer[i] = Some(g.push(PrimKind::SampleExtract, vec![br], Some(i), None));
+                // Linear pack then the usual KS -> BR -> SE. The packed
+                // intermediate is the KS source (each BivLut packs
+                // uniquely, so no cross-node sharing).
+                let oa = operand(&producer, &input_slot, *a);
+                let ob = operand(&producer, &input_slot, *b);
+                let deps = dep_prims(&[oa, ob]);
+                let pack = g.push(PrimKind::Linear(LinExpr::Pack(oa, ob)), deps);
+                let ks = g.push(PrimKind::KeySwitch { src: Operand::Prim(pack) }, vec![pack]);
+                let ti = g.intern_table(table);
+                let br = g.push(PrimKind::BlindRotate { table: ti }, vec![ks]);
+                producer[i] = Some(g.push(PrimKind::SampleExtract, vec![br]));
             }
         }
     }
+    g.outputs = prog
+        .outputs
+        .iter()
+        .map(|&v| operand(&producer, &input_slot, v))
+        .collect();
     debug_assert!(g.validate().is_ok());
     g
 }
@@ -150,10 +292,12 @@ mod tests {
         b.output(y);
         let g = lower(&b.finish());
         assert_eq!(g.ops.len(), 3);
-        assert!(PrimKind::is_keyswitch(&g.ops[0].kind));
+        assert_eq!(g.ops[0].kind, PrimKind::KeySwitch { src: Operand::Input(0) });
         assert!(PrimKind::is_blind_rotate(&g.ops[1].kind));
         assert_eq!(g.ops[2].kind, PrimKind::SampleExtract);
         assert_eq!(g.level, vec![0, 0, 1]);
+        assert_eq!(g.n_inputs, 1);
+        assert_eq!(g.outputs, vec![Operand::Prim(2)]);
     }
 
     #[test]
@@ -167,6 +311,7 @@ mod tests {
         // Second KS depends on first SE -> level 1; its BR level 1; SE 2.
         let ks2 = &g.ops[3];
         assert!(PrimKind::is_keyswitch(&ks2.kind));
+        assert_eq!(ks2.kind, PrimKind::KeySwitch { src: Operand::Prim(2) });
         assert_eq!(g.level[3], 1);
         assert_eq!(g.level[5], 2);
     }
@@ -182,6 +327,12 @@ mod tests {
         let g = lower(&b.finish());
         assert_eq!(g.pbs_count(), 0);
         assert!(g.level.iter().all(|&l| l == 0));
+        // Payloads reference the right operands.
+        assert_eq!(
+            g.ops[0].kind,
+            PrimKind::Linear(LinExpr::Add(Operand::Input(0), Operand::Input(1)))
+        );
+        assert_eq!(g.ops[1].kind, PrimKind::Linear(LinExpr::MulPlain(Operand::Prim(0), 2)));
     }
 
     #[test]
@@ -194,5 +345,38 @@ mod tests {
         let g = lower(&b.finish());
         assert_eq!(g.count(PrimKind::is_linear), 1);
         assert_eq!(g.pbs_count(), 1);
+        assert_eq!(
+            g.ops[0].kind,
+            PrimKind::Linear(LinExpr::Pack(Operand::Input(0), Operand::Input(1)))
+        );
+        assert_eq!(g.ops[1].kind, PrimKind::KeySwitch { src: Operand::Prim(0) });
+    }
+
+    #[test]
+    fn tables_interned_per_distinct_hash() {
+        let mut b = ProgramBuilder::new("acc", 3);
+        let t = crate::ir::LutTable::from_fn(3, |m| m ^ 1);
+        let xs = b.inputs(4);
+        for x in xs {
+            let y = b.lut(x, t.clone());
+            b.output(y);
+        }
+        let z = b.input();
+        let w = b.lut_fn(z, |m| m + 2);
+        b.output(w);
+        let g = lower(&b.finish());
+        assert_eq!(g.pbs_count(), 5);
+        assert_eq!(g.tables.len(), 2, "4x shared table + 1 distinct");
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn output_can_be_a_program_input() {
+        let mut b = ProgramBuilder::new("id", 3);
+        let x = b.input();
+        b.output(x);
+        let g = lower(&b.finish());
+        assert_eq!(g.outputs, vec![Operand::Input(0)]);
+        g.validate().unwrap();
     }
 }

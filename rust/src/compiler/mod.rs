@@ -3,8 +3,11 @@
 //! two deduplication passes (KS-dedup, ACC-dedup), and schedules the
 //! result into 48-ciphertext batches (Fig. 9).
 //!
-//! The same compiled artifact drives both the functional executor
-//! ([`exec`]) and the cycle-level architecture model (`crate::arch::sim`).
+//! The compiled plan is THE executable artifact: the schedule-driven
+//! executor ([`Engine::run_plan`]), the serving coordinator, and the
+//! cycle-level architecture model (`crate::arch::sim`) all walk the same
+//! [`CompiledPlan`], so measured KS/PBS counts and key traffic cross-check
+//! the model exactly.
 
 pub mod batching;
 pub mod noise;
@@ -14,15 +17,41 @@ pub mod lowering;
 
 pub use batching::{Batch, Schedule};
 pub use dedup::{acc_dedup_stats, dedup_keyswitch, DedupStats};
-pub use exec::{Engine, NativePbsBackend, PbsBackend};
-pub use lowering::{lower, PrimGraph, PrimId, PrimKind, PrimOp};
+pub use exec::{Engine, ExecStats, NativePbsBackend, PbsBackend};
+pub use lowering::{lower, LinExpr, Operand, PrimGraph, PrimId, PrimKind, PrimOp};
 
 use crate::ir::Program;
 use crate::params::ParamSet;
 
-/// A fully compiled program: primitive DAG + schedule + stats.
+/// Compile-pipeline options. `From<usize>` sets the batch capacity with
+/// everything else defaulted, so `compile(&p, &params, 48usize)` reads
+/// naturally at call sites that only care about capacity.
 #[derive(Debug, Clone)]
-pub struct Compiled {
+pub struct CompileOpts {
+    /// Schedule batch capacity (48 = 4 clusters x 12 round-robin, Fig. 9).
+    pub batch_capacity: usize,
+    /// Enable the KS-dedup pass (ablation hook).
+    pub ks_dedup: bool,
+}
+
+impl Default for CompileOpts {
+    fn default() -> Self {
+        Self { batch_capacity: 48, ks_dedup: true }
+    }
+}
+
+impl From<usize> for CompileOpts {
+    fn from(batch_capacity: usize) -> Self {
+        Self { batch_capacity, ..Self::default() }
+    }
+}
+
+/// A fully compiled program: primitive DAG + schedule + stats. The graph
+/// carries everything execution needs (linear payloads, interned LUT
+/// tables, output bindings); `program` is retained for the legacy
+/// node-walking executor and for reporting.
+#[derive(Debug, Clone)]
+pub struct CompiledPlan {
     pub program: Program,
     pub params: ParamSet,
     pub graph: PrimGraph,
@@ -31,28 +60,23 @@ pub struct Compiled {
     pub acc_dedup: DedupStats,
 }
 
-/// Compile with the default pipeline: lower -> KS-dedup -> batch.
-pub fn compile(program: &Program, params: &ParamSet, batch_capacity: usize) -> Compiled {
-    compile_opts(program, params, batch_capacity, true)
-}
+/// Backwards-compatible name used by the arch/baseline models.
+pub type Compiled = CompiledPlan;
 
-/// Compile with explicit control over KS-dedup (ablation hook).
-pub fn compile_opts(
-    program: &Program,
-    params: &ParamSet,
-    batch_capacity: usize,
-    enable_ks_dedup: bool,
-) -> Compiled {
+/// The single compile entry: lower -> KS-dedup -> ACC-dedup -> schedule.
+pub fn compile(program: &Program, params: &ParamSet, opts: impl Into<CompileOpts>) -> CompiledPlan {
+    let opts = opts.into();
     program.validate().expect("invalid program");
     let mut graph = lower(program);
-    let ks_dedup = if enable_ks_dedup {
+    let ks_dedup = if opts.ks_dedup {
         dedup_keyswitch(&mut graph)
     } else {
-        DedupStats { before: graph.count(PrimKind::is_keyswitch), after: graph.count(PrimKind::is_keyswitch), bytes_before: 0, bytes_after: 0 }
+        let n = graph.count(PrimKind::is_keyswitch);
+        DedupStats { before: n, after: n, bytes_before: 0, bytes_after: 0 }
     };
     let acc_dedup = acc_dedup_stats(&graph, params);
-    let schedule = batching::schedule(&graph, batch_capacity);
-    Compiled {
+    let schedule = batching::schedule(&graph, opts.batch_capacity);
+    CompiledPlan {
         program: program.clone(),
         params: params.clone(),
         graph,
@@ -68,8 +92,7 @@ mod tests {
     use crate::ir::builder::ProgramBuilder;
     use crate::params::TEST1;
 
-    #[test]
-    fn compile_pipeline_smoke() {
+    fn smoke_program() -> Program {
         let mut b = ProgramBuilder::new("smoke", 3);
         let x = b.input();
         // Fanout: two LUTs over the same value -> KS-dedup opportunity.
@@ -78,11 +101,35 @@ mod tests {
         let s = b.add(a, c);
         let r = b.lut_fn(s, |m| m);
         b.output(r);
-        let p = b.finish();
-        let compiled = compile(&p, &TEST1, 48);
+        b.finish()
+    }
+
+    #[test]
+    fn compile_pipeline_smoke() {
+        let compiled = compile(&smoke_program(), &TEST1, 48usize);
         assert_eq!(compiled.graph.pbs_count(), 3);
         assert_eq!(compiled.ks_dedup.before, 3);
         assert_eq!(compiled.ks_dedup.after, 2, "x's KS shared by two LUTs");
         assert!(compiled.schedule.batches.len() >= 2, "dependent levels split");
+        // The schedule executes exactly the deduplicated KS set.
+        assert_eq!(compiled.schedule.total_ks(), compiled.ks_dedup.after);
+        assert_eq!(compiled.schedule.total_pbs(), compiled.graph.pbs_count());
+    }
+
+    #[test]
+    fn compile_opts_ablate_ks_dedup() {
+        let opts = CompileOpts { batch_capacity: 48, ks_dedup: false };
+        let compiled = compile(&smoke_program(), &TEST1, opts);
+        assert_eq!(compiled.ks_dedup.before, compiled.ks_dedup.after);
+        assert_eq!(compiled.schedule.total_ks(), 3, "no merging when ablated");
+    }
+
+    #[test]
+    fn plan_graph_is_self_contained() {
+        let compiled = compile(&smoke_program(), &TEST1, CompileOpts::default());
+        assert_eq!(compiled.graph.n_inputs, 1);
+        assert_eq!(compiled.graph.outputs.len(), 1);
+        assert_eq!(compiled.graph.tables.len(), 3, "three distinct LUTs");
+        compiled.graph.validate().unwrap();
     }
 }

@@ -13,6 +13,7 @@ struct Inner {
     batch_sizes: Vec<f64>,
     requests: usize,
     pbs_executed: usize,
+    ks_executed: u64,
     bsk_bytes_streamed: u64,
 }
 
@@ -34,6 +35,11 @@ pub struct MetricsSnapshot {
     pub mean_queue_ms: f64,
     pub throughput_rps: f64,
     pub elapsed_s: f64,
+    /// Key switches the workers actually executed — with the plan-driven
+    /// path this equals `ks_dedup.after x requests`, the measured
+    /// realization of the compiler's KS-dedup (cross-check against
+    /// `arch::sim::SimResult::ks_count`).
+    pub ks_executed: u64,
     /// Total Fourier-BSK bytes the workers' blind rotations streamed.
     pub bsk_bytes_streamed: u64,
     /// Amortized BSK bytes per executed PBS — the key-reuse metric: equals
@@ -61,10 +67,12 @@ impl Metrics {
         g.pbs_executed += pbs;
     }
 
-    /// Account Fourier-BSK bytes streamed by one fused batch execution.
-    pub fn record_bsk_traffic(&self, bytes: u64) {
+    /// Account one batch execution's measured counters (key switches
+    /// performed and Fourier-BSK bytes streamed).
+    pub fn record_exec(&self, ks_ops: u64, bsk_bytes: u64) {
         let mut g = self.inner.lock().unwrap();
-        g.bsk_bytes_streamed += bytes;
+        g.ks_executed += ks_ops;
+        g.bsk_bytes_streamed += bsk_bytes;
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -80,6 +88,7 @@ impl Metrics {
             mean_queue_ms: stats::mean(&g.queue_ms),
             throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
             elapsed_s: elapsed,
+            ks_executed: g.ks_executed,
             bsk_bytes_streamed: g.bsk_bytes_streamed,
             bsk_bytes_per_pbs: if g.pbs_executed > 0 {
                 g.bsk_bytes_streamed as f64 / g.pbs_executed as f64
@@ -100,11 +109,12 @@ mod tests {
         m.record_request(1.0, 10.0);
         m.record_request(3.0, 30.0);
         m.record_batch(2, 14);
-        m.record_bsk_traffic(7000);
+        m.record_exec(4, 7000);
         let s = m.snapshot();
         assert_eq!(s.requests, 2);
         assert_eq!(s.batches, 1);
         assert_eq!(s.pbs_executed, 14);
+        assert_eq!(s.ks_executed, 4);
         assert_eq!(s.mean_batch_size, 2.0);
         assert_eq!(s.mean_queue_ms, 2.0);
         assert!(s.p50_latency_ms >= 10.0 && s.p99_latency_ms <= 30.0);

@@ -12,5 +12,5 @@ pub mod metrics;
 pub mod server;
 
 pub use batcher::DynamicBatcher;
-pub use metrics::Metrics;
-pub use server::{BackendKind, Coordinator, CoordinatorOptions};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use server::{BackendKind, Coordinator, CoordinatorOptions, CoordinatorStopped};

@@ -1,12 +1,21 @@
 //! The coordinator proper: request intake -> dynamic batcher -> worker
 //! pool -> responses, over either PBS backend.
 //!
+//! The program is compiled ONCE at startup; every worker executes the
+//! shared [`CompiledPlan`] through the schedule-driven engine
+//! (`Engine::run_plan_batch`), so KS-dedup and accumulator-fused blind
+//! rotations are realized on the serving path and the metrics' measured
+//! KS/PBS counts cross-check `arch::sim`'s costs for the same plan. The
+//! legacy node-walking executor remains behind
+//! [`CoordinatorOptions::legacy_exec`] as an ablation baseline.
+//!
 //! Thread topology: callers hold a cheap `Coordinator` handle; a dispatch
 //! thread owns the batcher; worker threads own their execution engines
 //! (the `xla` crate's PJRT client is Rc-based/non-Send, so each XLA
 //! worker constructs its own backend from the artifact dir + cloned keys
 //! inside its thread).
 
+use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -15,7 +24,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::DynamicBatcher;
 use super::metrics::Metrics;
-use crate::compiler::{Engine, NativePbsBackend, PbsBackend};
+use crate::compiler::{self, CompiledPlan, Engine, NativePbsBackend, PbsBackend};
 use crate::ir::Program;
 use crate::tfhe::{LweCiphertext, ServerKeys};
 
@@ -34,6 +43,11 @@ pub struct CoordinatorOptions {
     pub batch_capacity: usize,
     pub max_batch_wait: Duration,
     pub backend: BackendKind,
+    /// Schedule batch capacity for the compiled plan (Fig. 9).
+    pub plan_capacity: usize,
+    /// Run the legacy node-walking executor instead of the compiled plan
+    /// (ablation / debugging; the plan path is the default).
+    pub legacy_exec: bool,
 }
 
 impl Default for CoordinatorOptions {
@@ -43,9 +57,23 @@ impl Default for CoordinatorOptions {
             batch_capacity: 8,
             max_batch_wait: Duration::from_millis(2),
             backend: BackendKind::Native,
+            plan_capacity: 48,
+            legacy_exec: false,
         }
     }
 }
+
+/// Error returned by [`Coordinator::submit`] once intake has closed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoordinatorStopped;
+
+impl fmt::Display for CoordinatorStopped {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("coordinator stopped")
+    }
+}
+
+impl std::error::Error for CoordinatorStopped {}
 
 struct Request {
     inputs: Vec<LweCiphertext>,
@@ -55,11 +83,12 @@ struct Request {
 
 /// A running FHE model server for one compiled program.
 pub struct Coordinator {
-    intake: Sender<Request>,
+    intake: Option<Sender<Request>>,
     pub metrics: Arc<Metrics>,
     dispatch: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     pub inflight: Arc<AtomicUsize>,
+    plan: Arc<CompiledPlan>,
 }
 
 impl Coordinator {
@@ -70,6 +99,9 @@ impl Coordinator {
         if matches!(opts.backend, BackendKind::Xla { .. }) {
             panic!("XLA backend requested but built without the `xla` feature");
         }
+        // One compiled plan, shared by every worker (and available to
+        // callers for sim cross-checks via [`Self::plan`]).
+        let plan = Arc::new(compiler::compile(&program, &keys.params, opts.plan_capacity));
         let metrics = Arc::new(Metrics::new());
         let inflight = Arc::new(AtomicUsize::new(0));
         let (intake_tx, intake_rx) = channel::<Request>();
@@ -93,15 +125,16 @@ impl Coordinator {
         let workers = work_rxs
             .into_iter()
             .map(|rx| {
-                let program = program.clone();
+                let plan = plan.clone();
                 let keys = keys.clone();
                 let metrics = metrics.clone();
                 let inflight = inflight.clone();
                 let backend = opts.backend.clone();
+                let legacy = opts.legacy_exec;
                 std::thread::spawn(move || match backend {
                     BackendKind::Native => {
                         let engine = Engine::new(NativePbsBackend::new(&keys));
-                        worker_loop(rx, engine, &program, &metrics, &inflight);
+                        worker_loop(rx, engine, &plan, legacy, &metrics, &inflight);
                     }
                     #[cfg(feature = "xla")]
                     BackendKind::Xla { artifacts_dir } => {
@@ -113,7 +146,7 @@ impl Coordinator {
                         )
                         .expect("xla backend");
                         let engine = Engine::new(be);
-                        worker_loop(rx, engine, &program, &metrics, &inflight);
+                        worker_loop(rx, engine, &plan, legacy, &metrics, &inflight);
                     }
                     #[cfg(not(feature = "xla"))]
                     BackendKind::Xla { .. } => {
@@ -122,23 +155,46 @@ impl Coordinator {
                 })
             })
             .collect();
-        Self { intake: intake_tx, metrics, dispatch: Some(dispatch), workers, inflight }
+        Self {
+            intake: Some(intake_tx),
+            metrics,
+            dispatch: Some(dispatch),
+            workers,
+            inflight,
+            plan,
+        }
+    }
+
+    /// The compiled plan the workers execute (for reporting and for
+    /// costing the very same artifact in `arch::sim`).
+    pub fn plan(&self) -> &CompiledPlan {
+        &self.plan
     }
 
     /// Submit one encrypted query; returns the channel the response will
-    /// arrive on.
-    pub fn submit(&self, inputs: Vec<LweCiphertext>) -> Receiver<Vec<LweCiphertext>> {
+    /// arrive on, or [`CoordinatorStopped`] after shutdown.
+    pub fn submit(
+        &self,
+        inputs: Vec<LweCiphertext>,
+    ) -> Result<Receiver<Vec<LweCiphertext>>, CoordinatorStopped> {
+        let Some(intake) = self.intake.as_ref() else {
+            return Err(CoordinatorStopped);
+        };
         let (tx, rx) = channel();
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        self.intake
-            .send(Request { inputs, enqueued: Instant::now(), respond: tx })
-            .expect("coordinator stopped");
-        rx
+        match intake.send(Request { inputs, enqueued: Instant::now(), respond: tx }) {
+            Ok(()) => Ok(rx),
+            Err(_) => {
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                Err(CoordinatorStopped)
+            }
+        }
     }
 
-    /// Graceful shutdown: close intake, drain workers.
-    pub fn shutdown(mut self) {
-        drop(self.intake);
+    /// Graceful shutdown: close intake, drain workers. Subsequent
+    /// [`Self::submit`] calls return [`CoordinatorStopped`].
+    pub fn shutdown(&mut self) {
+        drop(self.intake.take());
         if let Some(d) = self.dispatch.take() {
             let _ = d.join();
         }
@@ -151,26 +207,32 @@ impl Coordinator {
 fn worker_loop<B: PbsBackend>(
     rx: Receiver<Vec<Request>>,
     mut engine: Engine<B>,
-    program: &Program,
+    plan: &CompiledPlan,
+    legacy: bool,
     metrics: &Metrics,
     inflight: &AtomicUsize,
 ) {
     while let Ok(batch) = rx.recv() {
         let size = batch.len();
-        let pbs = program.pbs_count() * size;
+        let pbs = plan.graph.pbs_count() * size;
         // Record up front so snapshots taken right after the last response
         // already see this batch.
         metrics.record_batch(size, pbs);
-        // One fused sweep: the whole dynamic batch walks the program in
-        // lockstep, so every LUT node streams the BSK once per batch
-        // (key reuse) instead of once per request. Inputs are moved out
-        // of the requests, not cloned.
+        // Inputs are moved out of the requests, not cloned.
         let (metas, inputs): (Vec<(Instant, Sender<Vec<LweCiphertext>>)>, Vec<_>) =
             batch.into_iter().map(|r| ((r.enqueued, r.respond), r.inputs)).unzip();
         let queue_ms: Vec<f64> =
             metas.iter().map(|(t, _)| t.elapsed().as_secs_f64() * 1e3).collect();
-        let outs = engine.run_batch(program, &inputs);
-        metrics.record_bsk_traffic(engine.take_bsk_bytes_streamed());
+        // Default: walk the compiled schedule — shared key switches
+        // computed once per batch, accumulator-sharing rotations fused
+        // across nodes x requests into single BSK sweeps.
+        let outs = if legacy {
+            engine.run_batch(&plan.program, &inputs)
+        } else {
+            engine.run_plan_batch(plan, &inputs)
+        };
+        let st = engine.take_exec_stats();
+        metrics.record_exec(st.ks_ops, st.bsk_bytes_streamed);
         for (((enqueued, respond), out), q_ms) in metas.into_iter().zip(outs).zip(queue_ms) {
             let latency_ms = enqueued.elapsed().as_secs_f64() * 1e3;
             metrics.record_request(q_ms, latency_ms);
@@ -207,7 +269,7 @@ mod tests {
         let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
         let keys2 = keys.clone();
         let prog = small_program();
-        let coord = Coordinator::start(
+        let mut coord = Coordinator::start(
             prog.clone(),
             keys,
             CoordinatorOptions { workers: 3, batch_capacity: 4, ..Default::default() },
@@ -217,7 +279,7 @@ mod tests {
         for &(x, y) in &queries {
             let inputs =
                 vec![encrypt_message(x, &sk, &mut rng), encrypt_message(y, &sk, &mut rng)];
-            pending.push(coord.submit(inputs));
+            pending.push(coord.submit(inputs).expect("submit"));
         }
         for (rx, &(x, y)) in pending.iter().zip(&queries) {
             let outs = rx.recv().expect("response");
@@ -228,6 +290,8 @@ mod tests {
         assert_eq!(snap.requests, 12);
         assert!(snap.batches >= 3, "round-robined to several batches");
         assert_eq!(coord.inflight.load(Ordering::SeqCst), 0);
+        // Plan-driven accounting: one KS per request on this program.
+        assert_eq!(snap.ks_executed, 12 * coord.plan().ks_dedup.after as u64);
         // Key-reuse accounting: fused sweeps stream at most one full BSK
         // per PBS (exactly one when a batch degenerates to size 1).
         assert!(snap.bsk_bytes_streamed > 0);
@@ -242,11 +306,79 @@ mod tests {
     }
 
     #[test]
+    fn plan_path_dedups_fanout_keyswitches_in_serving() {
+        // N LUTs over one value: the plan path performs exactly 1 KS per
+        // request where the legacy path performed N, and the measured
+        // counts equal what `arch::sim` costs for the same plan.
+        let mut rng = Rng::new(33);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+        let n_luts = 3usize;
+        let mut b = ProgramBuilder::new("fanout-serve", 3);
+        let x = b.input();
+        for k in 0..n_luts as u64 {
+            let y = b.lut_fn(x, move |m| (m + k) % 16);
+            b.output(y);
+        }
+        let prog = b.finish();
+
+        let run = |legacy: bool, rng: &mut Rng| -> (u64, u64) {
+            let mut coord = Coordinator::start(
+                prog.clone(),
+                keys.clone(),
+                CoordinatorOptions { workers: 1, legacy_exec: legacy, ..Default::default() },
+            );
+            let requests = 4usize;
+            let mut pending = Vec::new();
+            for i in 0..requests {
+                let m = (i % 6) as u64;
+                pending.push((m, coord.submit(vec![encrypt_message(m, &sk, rng)]).unwrap()));
+            }
+            for (m, rx) in &pending {
+                let outs = rx.recv().expect("response");
+                let exp = interp::eval(&prog, &[*m]);
+                let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+                assert_eq!(got, exp, "m={m} legacy={legacy}");
+            }
+            let snap = coord.metrics.snapshot();
+            coord.shutdown();
+            (snap.ks_executed, snap.pbs_executed as u64)
+        };
+        let (plan_ks, plan_pbs) = run(false, &mut rng);
+        let (legacy_ks, legacy_pbs) = run(true, &mut rng);
+        assert_eq!(plan_ks, 4, "1 KS per request on the plan path");
+        assert_eq!(legacy_ks, (4 * n_luts) as u64, "N KS per request legacy");
+        assert_eq!(plan_pbs, legacy_pbs, "identical PBS work");
+
+        // The very same plan costed by the arch model agrees per request.
+        let plan = crate::compiler::compile(&prog, &TEST1, 48usize);
+        let cfg = crate::arch::TaurusConfig::default();
+        let r = crate::arch::simulate(&plan, &cfg);
+        assert_eq!(r.ks_count as u64, plan_ks / 4);
+        assert_eq!(r.pbs_count as u64, plan_pbs / 4);
+    }
+
+    #[test]
     fn shutdown_is_clean_with_no_requests() {
         let mut rng = Rng::new(32);
         let sk = SecretKeys::generate(&TEST1, &mut rng);
         let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
-        let coord = Coordinator::start(small_program(), keys, Default::default());
+        let mut coord = Coordinator::start(small_program(), keys, Default::default());
         coord.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_returns_err_not_panic() {
+        let mut rng = Rng::new(34);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+        let mut coord = Coordinator::start(small_program(), keys, Default::default());
+        coord.shutdown();
+        let inputs = vec![
+            encrypt_message(1, &sk, &mut rng),
+            encrypt_message(2, &sk, &mut rng),
+        ];
+        assert_eq!(coord.submit(inputs).unwrap_err(), CoordinatorStopped);
+        assert_eq!(coord.inflight.load(Ordering::SeqCst), 0, "no leaked inflight");
     }
 }

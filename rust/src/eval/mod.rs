@@ -144,7 +144,7 @@ pub fn fig5() -> Table {
         ("Boolean (ripple-carry)", &boolean, bool_inputs, 27.0 * 11.0, 253.0),
         // 5-bit radix: one dependent PBS level at the 5-bit set (~47 ms).
         ("5-bit (radix split)", &radix, vec![3, 1, 6, 2], {
-            let c = compile(&radix, &params::TEST2, 48);
+            let c = compile(&radix, &params::TEST2, 48usize);
             cpu_model::program_seconds(&c, &EPYC_7R13) * 1e3
         }, 47.0),
         ("8-bit (single add)", &wide, vec![40, 23], 0.008, 0.008),
@@ -399,7 +399,8 @@ pub fn ablation(cfg: &TaurusConfig) -> Table {
     let w = workloads::by_name("XGBoost Reg").unwrap();
     let prog = (w.build)(1);
     for (name, dedup_on) in [("XGBoost with KS-dedup", true), ("XGBoost without KS-dedup", false)] {
-        let c = compiler::compile_opts(&prog, w.params, cfg.batch_capacity(), dedup_on);
+        let opts = compiler::CompileOpts { batch_capacity: cfg.batch_capacity(), ks_dedup: dedup_on };
+        let c = compiler::compile(&prog, w.params, opts);
         let r = sim::simulate(&c, cfg);
         t.row(vec![
             name.to_string(),

@@ -137,6 +137,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("PBS count      : {}", prog.pbs_count());
     println!("PBS depth      : {}", prog.pbs_depth());
     println!("KS-dedup       : {} -> {} ({:.2}%)", c.ks_dedup.before, c.ks_dedup.after, c.ks_dedup.reduction_pct());
+    println!("KS costed      : {} (= plan KS, model/measured cross-check)", r.ks_count);
     println!("ACC-dedup      : {:.2}% storage saved", c.acc_dedup.bytes_reduction_pct());
     println!("Taurus runtime : {:.3} ms (paper: {} ms)", r.seconds * 1e3, w.paper_taurus_ms);
     println!("utilization    : {:.1}%", r.utilization * 100.0);
@@ -148,41 +149,56 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize_flag("workers", 2);
     let requests = args.usize_flag("requests", 16);
+    let legacy_exec = args.flag("legacy-exec").is_some();
     let backend = match args.flag("backend").unwrap_or("native") {
         "xla" => BackendKind::Xla { artifacts_dir: "artifacts".into() },
         _ => BackendKind::Native,
     };
-    // Quickstart program: relu(2x + y + 1) at TEST1.
+    // Quickstart program with fanout: d = 2x + y + 1, then relu(d) and
+    // sign(d) — two LUTs over one value, so the compiled plan shares d's
+    // key switch (KS-dedup realized on the serving path).
     let mut b = ProgramBuilder::new("serve-demo", params::TEST1.width);
     let x = b.input();
     let y = b.input();
     let d = b.dot(vec![x, y], vec![2, 1], 1);
     let r = b.relu(d, 3);
-    b.output(r);
+    let s = b.lut_fn(d, |m| u64::from(m > 3));
+    b.outputs(&[r, s]);
     let prog = b.finish();
 
     let mut rng = Rng::new(2077);
     println!("keygen (TEST1)...");
     let sk = SecretKeys::generate(&params::TEST1, &mut rng);
     let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
-    let coord = Coordinator::start(
+    let mut coord = Coordinator::start(
         prog.clone(),
         keys,
-        CoordinatorOptions { workers, backend, ..Default::default() },
+        CoordinatorOptions { workers, backend, legacy_exec, ..Default::default() },
+    );
+    let plan = coord.plan();
+    println!(
+        "compiled plan  : {} PBS, KS-dedup {} -> {} ({:.1}%), {} batches ({})",
+        plan.graph.pbs_count(),
+        plan.ks_dedup.before,
+        plan.ks_dedup.after,
+        plan.ks_dedup.reduction_pct(),
+        plan.schedule.batches.len(),
+        if legacy_exec { "legacy node-walk executor" } else { "schedule-driven executor" },
     );
     println!("serving {requests} encrypted requests on {workers} workers...");
     let mut pending = Vec::new();
     let mut expected = Vec::new();
     for i in 0..requests {
         let (mx, my) = ((i as u64) % 4, (i as u64 * 3) % 4);
-        expected.push(taurus::ir::interp::eval(&prog, &[mx, my])[0]);
+        expected.push(taurus::ir::interp::eval(&prog, &[mx, my]));
         let inputs = vec![encrypt_message(mx, &sk, &mut rng), encrypt_message(my, &sk, &mut rng)];
-        pending.push(coord.submit(inputs));
+        pending.push(coord.submit(inputs)?);
     }
     let mut correct = 0;
     for (rx, exp) in pending.iter().zip(&expected) {
         let outs = rx.recv()?;
-        correct += u64::from(decrypt_message(&outs[0], &sk) == *exp);
+        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+        correct += u64::from(&got == exp);
     }
     let snap = coord.metrics.snapshot();
     println!("correct        : {correct}/{requests}");
@@ -190,6 +206,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("p50 / p99      : {:.2} / {:.2} ms", snap.p50_latency_ms, snap.p99_latency_ms);
     println!("mean batch size: {:.2} ({} batches)", snap.mean_batch_size, snap.batches);
     println!("PBS executed   : {}", snap.pbs_executed);
+    println!(
+        "KS executed    : {} (plan: {}/request; legacy would pay {}/request)",
+        snap.ks_executed,
+        coord.plan().ks_dedup.after,
+        coord.plan().ks_dedup.before,
+    );
+    println!("BSK B/PBS      : {:.0}", snap.bsk_bytes_per_pbs);
     coord.shutdown();
     Ok(())
 }

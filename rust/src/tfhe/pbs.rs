@@ -162,11 +162,22 @@ impl PbsContext {
         accs
     }
 
-    /// Full PBS: keyswitch-first order, LUT evaluation + noise refresh.
-    pub fn pbs(&mut self, ct_long: &LweCiphertext, keys: &ServerKeys, lut_poly: &[u64]) -> LweCiphertext {
-        let short = keys.ksk.keyswitch(ct_long, &self.params);
-        let acc = self.blind_rotate(&short, &keys.bsk, lut_poly);
+    /// Primitive entry point A: long LWE -> short LWE key switch (LPU).
+    pub fn keyswitch(&self, ct_long: &LweCiphertext, keys: &ServerKeys) -> LweCiphertext {
+        keys.ksk.keyswitch(ct_long, &self.params)
+    }
+
+    /// Primitive entry point D: GLWE -> long LWE extraction (LPU).
+    pub fn sample_extract(&self, acc: &GlweCiphertext) -> LweCiphertext {
         acc.sample_extract(&self.params)
+    }
+
+    /// Full PBS: the keyswitch-first composition of the primitive entry
+    /// points (A keyswitch, B+C blind rotation, D sample extract).
+    pub fn pbs(&mut self, ct_long: &LweCiphertext, keys: &ServerKeys, lut_poly: &[u64]) -> LweCiphertext {
+        let short = self.keyswitch(ct_long, keys);
+        let acc = self.blind_rotate(&short, &keys.bsk, lut_poly);
+        self.sample_extract(&acc)
     }
 
     /// Batched PBS over one shared LUT: keyswitch each ciphertext, then run
@@ -180,9 +191,9 @@ impl PbsContext {
         lut_poly: &[u64],
     ) -> Vec<LweCiphertext> {
         let shorts: Vec<LweCiphertext> =
-            cts.iter().map(|ct| keys.ksk.keyswitch(ct, &self.params)).collect();
+            cts.iter().map(|ct| self.keyswitch(ct, keys)).collect();
         let accs = self.blind_rotate_batch(&shorts, &keys.bsk, lut_poly);
-        accs.iter().map(|acc| acc.sample_extract(&self.params)).collect()
+        accs.iter().map(|acc| self.sample_extract(acc)).collect()
     }
 }
 

@@ -114,7 +114,7 @@ fn coordinator_batched_sweeps_round_robin_and_drain() {
     b.output(r);
     let prog = b.finish();
 
-    let coord = Coordinator::start(
+    let mut coord = Coordinator::start(
         prog.clone(),
         keys,
         CoordinatorOptions {
@@ -129,7 +129,7 @@ fn coordinator_batched_sweeps_round_robin_and_drain() {
     for &(mx, my) in &queries {
         let inputs =
             vec![encrypt_message(mx, &sk, &mut rng), encrypt_message(my, &sk, &mut rng)];
-        pending.push(coord.submit(inputs));
+        pending.push(coord.submit(inputs).expect("submit"));
     }
     for (rx, &(mx, my)) in pending.iter().zip(&queries) {
         let outs = rx.recv().expect("response");

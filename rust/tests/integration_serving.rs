@@ -27,7 +27,7 @@ fn run_requests(backend: BackendKind, workers: usize, n: usize) {
     let sk = SecretKeys::generate(&TEST1, &mut rng);
     let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
     let prog = demo_program();
-    let coord = Coordinator::start(
+    let mut coord = Coordinator::start(
         prog.clone(),
         keys,
         CoordinatorOptions {
@@ -43,7 +43,7 @@ fn run_requests(backend: BackendKind, workers: usize, n: usize) {
         let q = [(i % 5) as u64, ((i * 2) % 5) as u64];
         expected.push(interp::eval(&prog, &q)[0]);
         let cts = vec![encrypt_message(q[0], &sk, &mut rng), encrypt_message(q[1], &sk, &mut rng)];
-        pending.push(coord.submit(cts));
+        pending.push(coord.submit(cts).expect("submit"));
     }
     for (rx, exp) in pending.iter().zip(&expected) {
         let outs = rx.recv().expect("response");
@@ -52,6 +52,8 @@ fn run_requests(backend: BackendKind, workers: usize, n: usize) {
     let snap = coord.metrics.snapshot();
     assert_eq!(snap.requests, n);
     assert_eq!(snap.pbs_executed, n * prog.pbs_count());
+    // Schedule-driven serving: measured KS = deduplicated plan KS/request.
+    assert_eq!(snap.ks_executed, (n * coord.plan().ks_dedup.after) as u64);
     assert!(snap.p99_latency_ms >= snap.p50_latency_ms);
     coord.shutdown();
 }
@@ -79,7 +81,7 @@ fn single_worker_preserves_order_per_client() {
     let sk = SecretKeys::generate(&TEST1, &mut rng);
     let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
     let prog = demo_program();
-    let coord = Coordinator::start(
+    let mut coord = Coordinator::start(
         prog.clone(),
         keys,
         CoordinatorOptions {
@@ -91,10 +93,12 @@ fn single_worker_preserves_order_per_client() {
     );
     let rxs: Vec<_> = (0..5u64)
         .map(|i| {
-            coord.submit(vec![
-                encrypt_message(i % 4, &sk, &mut rng),
-                encrypt_message(1, &sk, &mut rng),
-            ])
+            coord
+                .submit(vec![
+                    encrypt_message(i % 4, &sk, &mut rng),
+                    encrypt_message(1, &sk, &mut rng),
+                ])
+                .expect("submit")
         })
         .collect();
     for (i, rx) in rxs.iter().enumerate() {
@@ -111,19 +115,23 @@ fn dropped_client_does_not_poison_workers() {
     let sk = SecretKeys::generate(&TEST1, &mut rng);
     let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
     let prog = demo_program();
-    let coord = Coordinator::start(prog.clone(), keys, Default::default());
+    let mut coord = Coordinator::start(prog.clone(), keys, Default::default());
     // Submit and immediately drop the receiver.
     {
-        let _ = coord.submit(vec![
-            encrypt_message(1, &sk, &mut rng),
-            encrypt_message(2, &sk, &mut rng),
-        ]);
+        let _ = coord
+            .submit(vec![
+                encrypt_message(1, &sk, &mut rng),
+                encrypt_message(2, &sk, &mut rng),
+            ])
+            .expect("submit");
     }
     // A subsequent request must still be served.
-    let rx = coord.submit(vec![
-        encrypt_message(2, &sk, &mut rng),
-        encrypt_message(2, &sk, &mut rng),
-    ]);
+    let rx = coord
+        .submit(vec![
+            encrypt_message(2, &sk, &mut rng),
+            encrypt_message(2, &sk, &mut rng),
+        ])
+        .expect("submit");
     let outs = rx.recv().expect("served after dropped client");
     let exp = interp::eval(&prog, &[2, 2])[0];
     assert_eq!(decrypt_message(&outs[0], &sk), exp);

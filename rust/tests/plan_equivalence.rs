@@ -1,0 +1,191 @@
+//! The compiled plan is THE executable artifact: schedule-driven
+//! execution must decrypt identically to both the plaintext interpreter
+//! and the legacy node-walking engine over randomized programs (fanout,
+//! chains, bivariate LUTs) at batch sizes {1, 3, 8}, and its measured
+//! KS/PBS counts must equal what the compiler reports and what
+//! `arch::sim` costs for the very same plan.
+
+use taurus::arch::{simulate, TaurusConfig};
+use taurus::compiler::{compile, CompileOpts, Engine, NativePbsBackend};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::interp;
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{LweCiphertext, SecretKeys, ServerKeys};
+use taurus::util::prop::check;
+use taurus::util::rng::Rng;
+
+/// Shared fixture: keygen once (dominates test time).
+struct Fixture {
+    sk: SecretKeys,
+    keys: ServerKeys,
+}
+
+fn fixture() -> &'static Fixture {
+    use std::sync::OnceLock;
+    static F: OnceLock<Fixture> = OnceLock::new();
+    F.get_or_init(|| {
+        let mut rng = Rng::new(0x9A7);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = ServerKeys::generate(&sk, &mut rng);
+        Fixture { sk, keys }
+    })
+}
+
+/// Random program over width 3: two bivariate operands (kept in {0,1}),
+/// free inputs, and a mix of linear ops / LUTs with natural fanout (every
+/// op picks operands from all earlier values) plus one bivariate LUT.
+fn random_program(rng: &mut Rng) -> (taurus::ir::Program, usize) {
+    let mut b = ProgramBuilder::new("rand-plan", TEST1.width);
+    let bx = b.input(); // bivariate operands (values < 2^(w/2) = 2)
+    let by = b.input();
+    let mut vals = vec![bx, by];
+    vals.extend(b.inputs(1 + rng.below_usize(2)));
+    let n_inputs = vals.len();
+    let g = b.biv_lut_fn(bx, by, |a, bb| a ^ bb);
+    vals.push(g);
+    for _ in 0..(3 + rng.below_usize(5)) {
+        let pick = |rng: &mut Rng, vals: &Vec<usize>| vals[rng.below_usize(vals.len())];
+        let v = match rng.below(5) {
+            0 => {
+                let (x, y) = (pick(rng, &vals), pick(rng, &vals));
+                b.add(x, y)
+            }
+            1 => {
+                let x = pick(rng, &vals);
+                b.mul_plain(x, (rng.below(3) as i64) + 1)
+            }
+            2 | 3 => {
+                // LUTs twice as likely: drives fanout + chains of PBS.
+                let x = pick(rng, &vals);
+                let off = rng.below(8);
+                b.lut_fn(x, move |m| (m + off) % 16)
+            }
+            _ => {
+                let (x, y) = (pick(rng, &vals), pick(rng, &vals));
+                b.dot(vec![x, y], vec![1, -1], rng.below(4))
+            }
+        };
+        vals.push(v);
+    }
+    b.output(*vals.last().unwrap());
+    (b.finish(), n_inputs)
+}
+
+#[test]
+fn prop_plan_equals_interp_equals_legacy_across_batch_sizes() {
+    let f = fixture();
+    check("plan_exec_equivalence", 4, |rng| {
+        let (prog, n_inputs) = random_program(rng);
+        let plan = compile(&prog, &TEST1, CompileOpts::default());
+        for &nb in &[1usize, 3, 8] {
+            // Per-request plaintext queries; bivariate operands in {0,1}.
+            let queries: Vec<Vec<u64>> = (0..nb)
+                .map(|_| {
+                    (0..n_inputs)
+                        .map(|i| if i < 2 { rng.below(2) } else { rng.below(8) })
+                        .collect()
+                })
+                .collect();
+            let batch: Vec<Vec<LweCiphertext>> = queries
+                .iter()
+                .map(|q| q.iter().map(|&m| encrypt_message(m, &f.sk, rng)).collect())
+                .collect();
+
+            let mut eng = Engine::new(NativePbsBackend::new(&f.keys));
+            let plan_outs = eng.run_plan_batch(&plan, &batch);
+            let st = eng.take_exec_stats();
+            let mut legacy = Engine::new(NativePbsBackend::new(&f.keys));
+            for (q, query) in queries.iter().enumerate() {
+                let exp = interp::eval(&prog, query);
+                let got: Vec<u64> =
+                    plan_outs[q].iter().map(|c| decrypt_message(c, &f.sk)).collect();
+                if got != exp {
+                    return Err(format!(
+                        "plan nb={nb} q={q} inputs={query:?}: {got:?} != {exp:?}"
+                    ));
+                }
+                let leg: Vec<u64> = legacy
+                    .run(&prog, &batch[q])
+                    .iter()
+                    .map(|c| decrypt_message(c, &f.sk))
+                    .collect();
+                if leg != exp {
+                    return Err(format!(
+                        "legacy nb={nb} q={q} inputs={query:?}: {leg:?} != {exp:?}"
+                    ));
+                }
+            }
+            // Measured-vs-model: plan execution performs exactly the
+            // deduplicated KS set per request and every scheduled BR.
+            let want_ks = (plan.ks_dedup.after * nb) as u64;
+            if st.ks_ops != want_ks {
+                return Err(format!(
+                    "nb={nb}: measured KS {} != dedup after x nb {want_ks}",
+                    st.ks_ops
+                ));
+            }
+            let want_pbs = (plan.graph.pbs_count() * nb) as u64;
+            if st.pbs_ops != want_pbs {
+                return Err(format!(
+                    "nb={nb}: measured PBS {} != plan x nb {want_pbs}",
+                    st.pbs_ops
+                ));
+            }
+            // Legacy pays the pre-dedup KS count.
+            let lst = legacy.take_exec_stats();
+            if lst.ks_ops != (plan.ks_dedup.before * nb) as u64 {
+                return Err(format!(
+                    "nb={nb}: legacy KS {} != before x nb {}",
+                    lst.ks_ops,
+                    plan.ks_dedup.before * nb
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fanout_workload_one_keyswitch_and_sim_crosscheck() {
+    // Acceptance shape: N LUTs on one value -> the plan path performs
+    // exactly 1 KS where the legacy path performs N, decrypts identically
+    // to interp, and measured PBS/KS equal arch::sim's costed counts for
+    // the same CompiledPlan.
+    let f = fixture();
+    let mut rng = Rng::new(0xFA0);
+    let n = 5usize;
+    let mut b = ProgramBuilder::new("fanout", TEST1.width);
+    let x = b.input();
+    for k in 0..n as u64 {
+        let y = b.lut_fn(x, move |m| (m + k) % 16);
+        b.output(y);
+    }
+    let prog = b.finish();
+    let plan = compile(&prog, &TEST1, CompileOpts::default());
+    assert_eq!((plan.ks_dedup.before, plan.ks_dedup.after), (n, 1));
+
+    let m = 4u64;
+    let cts = vec![encrypt_message(m, &f.sk, &mut rng)];
+    let mut eng = Engine::new(NativePbsBackend::new(&f.keys));
+    let outs = eng.run_plan(&plan, &cts);
+    let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &f.sk)).collect();
+    assert_eq!(got, interp::eval(&prog, &[m]));
+    let st = eng.take_exec_stats();
+    assert_eq!(st.ks_ops, 1, "exactly one key switch for the whole fanout");
+    assert_eq!(st.pbs_ops, n as u64);
+
+    let mut legacy = Engine::new(NativePbsBackend::new(&f.keys));
+    let outs2 = legacy.run(&prog, &cts);
+    assert_eq!(
+        outs2.iter().map(|c| decrypt_message(c, &f.sk)).collect::<Vec<_>>(),
+        interp::eval(&prog, &[m])
+    );
+    assert_eq!(legacy.take_exec_stats().ks_ops, n as u64, "legacy pays N");
+
+    // The same artifact, costed: model == measured.
+    let r = simulate(&plan, &TaurusConfig::default());
+    assert_eq!(r.ks_count as u64, st.ks_ops);
+    assert_eq!(r.pbs_count as u64, st.pbs_ops);
+    assert_eq!(plan.schedule.total_ks(), plan.ks_dedup.after);
+}

@@ -138,7 +138,7 @@ fn prop_ks_dedup_preserves_schedule_feasibility() {
         }
         b.output(*frontier.last().unwrap());
         let prog = b.finish();
-        let c = compile(&prog, &TEST1, 48);
+        let c = compile(&prog, &TEST1, 48usize);
         c.graph.validate().map_err(|e| e.to_string())?;
         // Every BR has exactly one KS dep.
         for op in &c.graph.ops {
