@@ -1,0 +1,144 @@
+//! Sharded-serving sweep: the same workload pushed through a cluster at
+//! shard counts {1, 2, 4} x every placement policy, emitting
+//! `BENCH_cluster.json` (aggregate req/s, merged p50/p99, mean batch size
+//! per shard, measured-vs-sim KS/PBS) so CI tracks shard scaling across
+//! PRs alongside `BENCH_pbs.json` / `BENCH_schedule.json`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use harness::section;
+use taurus::arch::{simulate, TaurusConfig};
+use taurus::cluster::{Cluster, ClusterOptions, PlacementPolicy};
+use taurus::coordinator::CoordinatorOptions;
+use taurus::ir::builder::ProgramBuilder;
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::tfhe::{SecretKeys, ServerKeys};
+use taurus::util::json::{arr, num, obj, s, JsonValue};
+use taurus::util::rng::Rng;
+
+fn main() {
+    // Serving shape with a KS-dedup opportunity: d = x + y fans out to two
+    // LUTs (one shared key switch, 2 PBS per request).
+    let mut b = ProgramBuilder::new("cluster-bench", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.add(x, y);
+    let r0 = b.lut_fn(d, |m| (m + 1) % 16);
+    let r1 = b.lut_fn(d, |m| m ^ 1);
+    b.outputs(&[r0, r1]);
+    let prog = b.finish();
+
+    let mut rng = Rng::new(23);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+
+    let requests = 96usize;
+    let clients = 16u64;
+    let cfg = TaurusConfig::default();
+    let policies = [
+        PlacementPolicy::RoundRobin,
+        PlacementPolicy::LeastOutstanding,
+        PlacementPolicy::ConsistentHash,
+    ];
+
+    section(&format!(
+        "cluster shard sweep ({requests} requests, {clients} clients, 1 worker/shard, TEST1)"
+    ));
+
+    let mut rows: Vec<JsonValue> = Vec::new();
+    let mut sim_ks_per_req = 0usize;
+    for shards in [1usize, 2, 4] {
+        for policy in policies {
+            let mut cluster = Cluster::start(
+                prog.clone(),
+                keys.clone(),
+                ClusterOptions {
+                    shards,
+                    policy,
+                    queue_depth: None,
+                    coordinator: CoordinatorOptions {
+                        workers: 1,
+                        batch_capacity: 8,
+                        max_batch_wait: Duration::from_micros(500),
+                        ..Default::default()
+                    },
+                },
+            );
+            let sim = simulate(cluster.plan(), &cfg);
+            sim_ks_per_req = sim.ks_count;
+            let t0 = std::time::Instant::now();
+            let pending: Vec<_> = (0..requests)
+                .map(|i| {
+                    let inputs = vec![
+                        encrypt_message((i % 6) as u64, &sk, &mut rng),
+                        encrypt_message((i % 4) as u64, &sk, &mut rng),
+                    ];
+                    cluster.submit(i as u64 % clients, inputs).expect("submit")
+                })
+                .collect();
+            for resp in &pending {
+                let _ = resp.recv().expect("response");
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            drop(pending);
+
+            let snap = cluster.snapshot();
+            let per_shard = cluster.shard_snapshots();
+            let req_per_s = requests as f64 / wall;
+            let ks_ok = snap.ks_executed == (requests * sim.ks_count) as u64
+                && snap.pbs_executed == requests * sim.pbs_count;
+            println!(
+                "shards={shards} policy={:<17} {:>8.1} req/s   p99 {:>7.2} ms   mean batch {:>5.2}   sim-check {}",
+                policy.name(),
+                req_per_s,
+                snap.p99_latency_ms,
+                snap.mean_batch_size,
+                if ks_ok { "OK" } else { "MISMATCH" },
+            );
+            let shard_rows: Vec<JsonValue> = per_shard
+                .iter()
+                .enumerate()
+                .map(|(i, sh)| {
+                    obj(vec![
+                        ("shard", num(i as f64)),
+                        ("requests", num(sh.requests as f64)),
+                        ("batches", num(sh.batches as f64)),
+                        ("mean_batch_size", num(sh.mean_batch_size)),
+                    ])
+                })
+                .collect();
+            rows.push(obj(vec![
+                ("shards", num(shards as f64)),
+                ("policy", s(policy.name())),
+                ("req_per_s", num(req_per_s)),
+                ("p50_latency_ms", num(snap.p50_latency_ms)),
+                ("p99_latency_ms", num(snap.p99_latency_ms)),
+                ("mean_batch_size", num(snap.mean_batch_size)),
+                ("ks_executed", num(snap.ks_executed as f64)),
+                ("pbs_executed", num(snap.pbs_executed as f64)),
+                ("bsk_bytes_per_pbs", num(snap.bsk_bytes_per_pbs)),
+                ("sim_check_ok", JsonValue::Bool(ks_ok)),
+                ("per_shard", arr(shard_rows)),
+            ]));
+            cluster.shutdown();
+        }
+    }
+
+    let report = obj(vec![
+        ("bench", s("cluster")),
+        ("requests", num(requests as f64)),
+        ("clients", num(clients as f64)),
+        ("sim_ks_per_request", num(sim_ks_per_req as f64)),
+        ("results", arr(rows)),
+    ]);
+    let path = "BENCH_cluster.json";
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

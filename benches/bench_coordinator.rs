@@ -41,6 +41,7 @@ fn main() {
                 batch_capacity: 8,
                 max_batch_wait: Duration::from_micros(200),
                 backend: BackendKind::Native,
+                ..Default::default()
             },
         );
         let n = 64 * workers;
@@ -80,6 +81,7 @@ fn main() {
                 batch_capacity: capacity,
                 max_batch_wait: Duration::from_millis(2),
                 backend: BackendKind::Native,
+                ..Default::default()
             },
         );
         let n = 96;

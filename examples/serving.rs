@@ -1,17 +1,23 @@
-//! END-TO-END serving driver (the repository's integration proof):
-//! compile an FHE inference program, start the coordinator with the **XLA
-//! backend** (AOT JAX/Pallas artifacts executed via PJRT — python is not
-//! running), submit batched encrypted queries from a client thread, check
-//! every decrypted answer against the plaintext interpreter, and report
-//! latency/throughput. Results are recorded in EXPERIMENTS.md.
+//! END-TO-END cluster serving driver (the repository's integration
+//! proof): compile an FHE inference program ONCE, start a sharded cluster
+//! (N coordinator shards behind a placement router with a bounded shared
+//! admission queue), submit encrypted queries from several simulated
+//! clients, check every decrypted answer against the plaintext
+//! interpreter, and report aggregate + per-shard latency/throughput.
+//! Results are recorded in EXPERIMENTS.md §Change 6.
 //!
-//!     make artifacts && cargo run --release --example serving
-//!     # flags: -- --requests 32 --workers 2 --backend native|xla
+//!     cargo run --release --example serving
+//!     # flags: -- --requests 32 --shards 2 --workers 1
+//!     #        --policy round-robin|least-outstanding|consistent-hash
+//!     #        --queue-depth 8 --backend native|xla
+//!     # (xla needs `make artifacts` and the `xla` feature)
 
+use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use taurus::coordinator::{BackendKind, Coordinator, CoordinatorOptions};
+use taurus::cluster::{Cluster, ClusterOptions, ClusterResponse, PlacementPolicy};
+use taurus::coordinator::{BackendKind, CoordinatorOptions};
 use taurus::ir::builder::ProgramBuilder;
 use taurus::ir::interp;
 use taurus::params::TEST1;
@@ -25,7 +31,13 @@ fn flag(name: &str) -> Option<String> {
 
 fn main() {
     let requests: usize = flag("--requests").and_then(|v| v.parse().ok()).unwrap_or(24);
-    let workers: usize = flag("--workers").and_then(|v| v.parse().ok()).unwrap_or(2);
+    let shards: usize = flag("--shards").and_then(|v| v.parse().ok()).unwrap_or(2).max(1);
+    let workers: usize = flag("--workers").and_then(|v| v.parse().ok()).unwrap_or(1);
+    // 0 means unbounded, matching the `taurus serve` CLI.
+    let queue_depth: usize = flag("--queue-depth").and_then(|v| v.parse().ok()).unwrap_or(8);
+    let policy = flag("--policy")
+        .and_then(|p| PlacementPolicy::parse(&p))
+        .unwrap_or(PlacementPolicy::ConsistentHash);
     let use_xla = flag("--backend").as_deref() != Some("native")
         && std::path::Path::new("artifacts/manifest.json").exists();
 
@@ -43,53 +55,98 @@ fn main() {
     b.output(out);
     let prog = b.finish();
 
-    println!("== taurus serving driver ==");
+    println!("== taurus cluster serving driver ==");
     println!("program: {} ({} PBS/query, depth {})", prog.name, prog.pbs_count(), prog.pbs_depth());
+    println!(
+        "cluster: {shards} shards x {workers} workers, {} routing, admission depth {}",
+        policy.name(),
+        if queue_depth > 0 { queue_depth.to_string() } else { "unbounded".into() },
+    );
     println!("backend: {}", if use_xla { "xla (AOT JAX/Pallas via PJRT)" } else { "native" });
 
     let mut rng = Rng::new(404);
     let t0 = Instant::now();
     let sk = SecretKeys::generate(&TEST1, &mut rng);
     let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
-    println!("keygen: {:.2}s", t0.elapsed().as_secs_f64());
+    println!("keygen: {:.2}s (replicated to every shard by Arc, zero copies)", t0.elapsed().as_secs_f64());
 
     let backend = if use_xla {
         BackendKind::Xla { artifacts_dir: "artifacts".into() }
     } else {
         BackendKind::Native
     };
-    let mut coord = Coordinator::start(
+    let mut cluster = Cluster::start(
         prog.clone(),
         keys,
-        CoordinatorOptions { workers, backend, batch_capacity: 8, ..Default::default() },
+        ClusterOptions {
+            shards,
+            policy,
+            queue_depth: if queue_depth > 0 { Some(queue_depth) } else { None },
+            coordinator: CoordinatorOptions {
+                workers,
+                backend,
+                batch_capacity: 8,
+                ..Default::default()
+            },
+        },
+    );
+    println!(
+        "plan   : compiled once, shared by all shards (KS-dedup {} -> {})",
+        cluster.plan().ks_dedup.before,
+        cluster.plan().ks_dedup.after
     );
 
-    // Client: fire all queries, then collect.
+    // Clients: fire all queries through the admission queue (draining the
+    // oldest response whenever backpressure fires), then collect.
+    let clients = 6u64;
     let t0 = Instant::now();
-    let mut pending = Vec::new();
-    let mut expected = Vec::new();
+    let mut pending: VecDeque<(ClusterResponse, u64)> = VecDeque::new();
+    let mut shed = 0usize;
+    let mut correct = 0usize;
     for i in 0..requests {
         let q: Vec<u64> = (0..3).map(|j| ((i + j) % 6) as u64).collect();
-        expected.push(interp::eval(&prog, &q)[0]);
+        let expected = interp::eval(&prog, &q)[0];
+        let client_id = (i as u64) % clients;
+        // Admission slots are held by the pending handles, so this
+        // single-submitter client drains the oldest response whenever the
+        // shared queue is at depth — backpressure without re-encrypting.
+        while queue_depth > 0 && cluster.outstanding() >= queue_depth {
+            shed += 1;
+            let (r, exp) = pending.pop_front().expect("full queue implies pending work");
+            let outs = r.recv().expect("response");
+            correct += usize::from(decrypt_message(&outs[0], &sk) == exp);
+        }
         let cts: Vec<_> = q.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
-        pending.push(coord.submit(cts).expect("submit"));
+        let resp = match cluster.submit(client_id, cts) {
+            Ok(r) => r,
+            Err(e) => panic!("submit failed: {e}"),
+        };
+        pending.push_back((resp, expected));
     }
-    let mut correct = 0;
-    for (rx, exp) in pending.iter().zip(&expected) {
-        let outs = rx.recv().expect("response");
-        correct += usize::from(decrypt_message(&outs[0], &sk) == *exp);
+    while let Some((r, exp)) = pending.pop_front() {
+        let outs = r.recv().expect("response");
+        correct += usize::from(decrypt_message(&outs[0], &sk) == exp);
     }
     let wall = t0.elapsed().as_secs_f64();
-    let snap = coord.metrics.snapshot();
-    println!("\nresults ({requests} encrypted queries, {workers} workers):");
+
+    let snap = cluster.snapshot();
+    let per_shard = cluster.shard_snapshots();
+    println!("\nresults ({requests} encrypted queries, {clients} clients):");
     println!("  correct      : {correct}/{requests}");
     println!("  wall         : {:.2} s  ({:.1} queries/s)", wall, requests as f64 / wall);
-    println!("  p50 latency  : {:.1} ms", snap.p50_latency_ms);
+    println!("  backpressure : {shed} submissions deferred by the admission queue");
+    println!("  p50 latency  : {:.1} ms (merged per-shard samples)", snap.p50_latency_ms);
     println!("  p99 latency  : {:.1} ms", snap.p99_latency_ms);
     println!("  mean queue   : {:.1} ms", snap.mean_queue_ms);
     println!("  batches      : {} (mean size {:.2})", snap.batches, snap.mean_batch_size);
     println!("  PBS executed : {}", snap.pbs_executed);
+    println!("  per shard    : id  requests  batches  mean-batch");
+    for (i, s) in per_shard.iter().enumerate() {
+        println!("                 {i:<3} {:>8} {:>8} {:>10.2}", s.requests, s.batches, s.mean_batch_size);
+    }
     assert_eq!(correct, requests, "all decryptions must match the interpreter");
-    coord.shutdown();
-    println!("serving driver OK");
+    let sum_requests: usize = per_shard.iter().map(|s| s.requests).sum();
+    assert_eq!(snap.requests, sum_requests, "merged snapshot sums the shards");
+    cluster.shutdown();
+    println!("cluster serving driver OK");
 }

@@ -1,0 +1,27 @@
+//! Sharded cluster serving — the scaling layer ABOVE one engine.
+//!
+//! The paper's serving story (Observation 7) harvests accelerator
+//! parallelism by batching real queries into one worker pool; this module
+//! is the next step the ROADMAP names: throughput beyond a single
+//! accelerator comes from replicating the whole engine behind a router —
+//! the organization MATCHA uses across TFHE clusters and HEAX across
+//! replicated pipeline lanes.
+//!
+//! A [`Cluster`] owns N [`Coordinator`](crate::coordinator::Coordinator)
+//! shards that all execute ONE shared
+//! [`CompiledPlan`](crate::compiler::CompiledPlan) (compiled once, so
+//! measured counters still cross-check `arch::sim` exactly — per shard and
+//! in aggregate). A [`Router`] places each request by a pluggable
+//! [`PlacementPolicy`] (round-robin, least-outstanding, or
+//! consistent-hash on the client id for key affinity); a bounded shared
+//! admission queue turns overload into fast [`ClusterError::ClusterFull`]
+//! errors instead of unbounded queueing; and
+//! [`Cluster::snapshot`] merges per-shard metrics into exact aggregate
+//! percentiles via
+//! [`MetricsSnapshot::merge`](crate::coordinator::MetricsSnapshot::merge).
+
+pub mod router;
+pub mod serve;
+
+pub use router::{PlacementPolicy, Router};
+pub use serve::{Cluster, ClusterError, ClusterOptions, ClusterResponse};

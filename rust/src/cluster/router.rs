@@ -1,0 +1,220 @@
+//! Request placement across coordinator shards.
+//!
+//! Three policies, mirroring the trade-offs of replicated-engine FHE
+//! serving (MATCHA's multi-cluster organization, HEAX's replicated
+//! pipeline lanes):
+//!
+//! - **round-robin** — uniform spray, best for homogeneous traffic;
+//! - **least-outstanding** — joins the shortest per-shard queue, best when
+//!   request costs vary or shards are heterogeneous;
+//! - **consistent-hash** on the client id — pins a client to one shard so
+//!   per-client state (key caches, session accumulators) stays warm; the
+//!   hash ring keeps most assignments stable when the shard count changes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// How the [`Router`](Router) picks a shard for a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// Cycle through shards in submission order.
+    RoundRobin,
+    /// Send to the shard with the fewest outstanding requests.
+    LeastOutstanding,
+    /// Hash the client id onto a virtual-node ring (key affinity).
+    ConsistentHash,
+}
+
+impl PlacementPolicy {
+    /// Parse a CLI spelling (`round-robin` | `least-outstanding` |
+    /// `consistent-hash`, with short aliases `rr` | `least` | `hash`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "round-robin" | "rr" => Some(Self::RoundRobin),
+            "least-outstanding" | "least" => Some(Self::LeastOutstanding),
+            "consistent-hash" | "hash" => Some(Self::ConsistentHash),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::RoundRobin => "round-robin",
+            Self::LeastOutstanding => "least-outstanding",
+            Self::ConsistentHash => "consistent-hash",
+        }
+    }
+}
+
+/// FNV-1a 64-bit — deterministic across runs (unlike `DefaultHasher`), so
+/// client -> shard pinning survives restarts and is testable.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Murmur3 finalizer on top of FNV: raw FNV-1a over the mostly-zero
+/// little-endian labels below disperses badly (measured: up to 88% of the
+/// key space on one of 4 shards at high vnode counts); the avalanche
+/// step restores an even split.
+fn mix64(mut h: u64) -> u64 {
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    h ^ (h >> 33)
+}
+
+/// Hash for ring points and client ids.
+fn point(bytes: &[u8]) -> u64 {
+    mix64(fnv1a(bytes))
+}
+
+/// Virtual nodes per shard on the consistent-hash ring. With the mixed
+/// hash, 128 points/shard keeps every shard within ~20% of the ideal
+/// share for 2-8 shards (simulated over 1000 uniform client ids).
+const VNODES: usize = 128;
+
+/// Stateless-per-request placement engine (the round-robin cursor is the
+/// only internal state, and it is atomic so `&self` placement is safe
+/// from any submitting thread).
+#[derive(Debug)]
+pub struct Router {
+    policy: PlacementPolicy,
+    shards: usize,
+    rr_next: AtomicUsize,
+    /// Sorted (point, shard) virtual nodes; empty unless consistent-hash.
+    ring: Vec<(u64, usize)>,
+}
+
+impl Router {
+    pub fn new(policy: PlacementPolicy, shards: usize) -> Self {
+        assert!(shards >= 1, "router needs at least one shard");
+        let mut ring = Vec::new();
+        if policy == PlacementPolicy::ConsistentHash {
+            ring.reserve(shards * VNODES);
+            for shard in 0..shards {
+                for v in 0..VNODES {
+                    let mut label = [0u8; 16];
+                    label[..8].copy_from_slice(&(shard as u64).to_le_bytes());
+                    label[8..].copy_from_slice(&(v as u64).to_le_bytes());
+                    ring.push((point(&label), shard));
+                }
+            }
+            ring.sort_unstable();
+        }
+        Self { policy, shards, rr_next: AtomicUsize::new(0), ring }
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.policy
+    }
+
+    /// Pick the shard for one request. `outstanding` supplies the current
+    /// per-shard inflight counts; it is a closure so the other policies
+    /// don't pay for gathering counts they never read.
+    pub fn place(&self, client_id: u64, outstanding: impl FnOnce() -> Vec<usize>) -> usize {
+        match self.policy {
+            PlacementPolicy::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.shards
+            }
+            // Keyed (n, i) so ties deterministically break to the lowest
+            // index (`min_by_key` alone keeps the *last* minimum).
+            PlacementPolicy::LeastOutstanding => {
+                let counts = outstanding();
+                debug_assert_eq!(counts.len(), self.shards);
+                counts
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(i, &n)| (n, i))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            }
+            PlacementPolicy::ConsistentHash => {
+                let h = point(&client_id.to_le_bytes());
+                let i = self.ring.partition_point(|&(p, _)| p < h);
+                self.ring[i % self.ring.len()].1
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_counts() -> Vec<usize> {
+        panic!("this policy must not gather outstanding counts")
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let r = Router::new(PlacementPolicy::RoundRobin, 3);
+        let picks: Vec<usize> = (0..6).map(|_| r.place(0, no_counts)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_outstanding_joins_shortest_queue() {
+        let r = Router::new(PlacementPolicy::LeastOutstanding, 3);
+        assert_eq!(r.place(0, || vec![4, 1, 2]), 1);
+        assert_eq!(r.place(0, || vec![0, 0, 0]), 0, "ties break to the lowest index");
+        assert_eq!(r.place(9, || vec![3, 3, 2]), 2);
+    }
+
+    #[test]
+    fn consistent_hash_is_deterministic_per_client() {
+        let r = Router::new(PlacementPolicy::ConsistentHash, 4);
+        for client in 0..50u64 {
+            let first = r.place(client, no_counts);
+            for _ in 0..5 {
+                assert_eq!(r.place(client, no_counts), first, "client {client} moved");
+            }
+        }
+    }
+
+    #[test]
+    fn consistent_hash_spreads_clients_over_all_shards() {
+        let shards = 4;
+        let r = Router::new(PlacementPolicy::ConsistentHash, shards);
+        let mut counts = vec![0usize; shards];
+        for client in 0..1000u64 {
+            counts[r.place(client, no_counts)] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            // Ideal is 250; the mixed ring keeps every shard well within
+            // 2x of it (measured [238, 232, 302, 228] at this seed-free
+            // construction).
+            assert!(c >= 125, "shard {s} badly underloaded: {counts:?}");
+            assert!(c <= 500, "shard {s} badly overloaded: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn consistent_hash_is_mostly_stable_under_resharding() {
+        // Growing 3 -> 4 shards should move well under half the clients
+        // (the whole point of the ring vs `hash % shards`).
+        let r3 = Router::new(PlacementPolicy::ConsistentHash, 3);
+        let r4 = Router::new(PlacementPolicy::ConsistentHash, 4);
+        let moved = (0..1000u64)
+            .filter(|&c| r3.place(c, no_counts) != r4.place(c, no_counts))
+            .count();
+        assert!(moved < 500, "{moved}/1000 clients moved on reshard");
+    }
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [
+            PlacementPolicy::RoundRobin,
+            PlacementPolicy::LeastOutstanding,
+            PlacementPolicy::ConsistentHash,
+        ] {
+            assert_eq!(PlacementPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(PlacementPolicy::parse("rr"), Some(PlacementPolicy::RoundRobin));
+        assert_eq!(PlacementPolicy::parse("nope"), None);
+    }
+}

@@ -1,0 +1,245 @@
+//! The cluster proper: N coordinator shards behind one router, one shared
+//! bounded admission queue, and merged observability.
+//!
+//! The program is compiled ONCE ([`compiler::compile`]) and the resulting
+//! [`CompiledPlan`] is shared by every shard's workers
+//! ([`Coordinator::start_with_plan`]), so all shards execute — and
+//! `arch::sim` costs — the identical artifact. Keys are either replicated
+//! (one `Arc<ServerKeys>` cloned per shard, [`Cluster::start`]) or
+//! per-shard ([`Cluster::start_with_shard_keys`], e.g. one key set per
+//! accelerator's HBM).
+//!
+//! Admission is permit-based: [`Cluster::submit`] atomically claims one of
+//! `queue_depth` slots and hands the permit to the returned
+//! [`ClusterResponse`]; the slot is released when the client drops the
+//! handle (normally right after `recv`). At depth, `submit` fails fast
+//! with [`ClusterError::ClusterFull`] instead of queueing unboundedly —
+//! callers shed load or retry after draining, exactly the backpressure a
+//! front door needs at millions-of-users scale.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvError};
+use std::sync::Arc;
+
+use super::router::{PlacementPolicy, Router};
+use crate::compiler::{self, CompiledPlan};
+use crate::coordinator::{Coordinator, CoordinatorOptions, MetricsSnapshot, SubmitError};
+use crate::ir::Program;
+use crate::tfhe::{LweCiphertext, ServerKeys};
+
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    /// Number of coordinator shards (each with its own worker pool).
+    pub shards: usize,
+    /// How the router places requests onto shards.
+    pub policy: PlacementPolicy,
+    /// Cluster-wide admission bound: maximum outstanding responses before
+    /// [`Cluster::submit`] returns [`ClusterError::ClusterFull`]. `None`
+    /// admits without limit.
+    pub queue_depth: Option<usize>,
+    /// Per-shard coordinator configuration (workers, batcher, backend,
+    /// optional per-shard `max_queue_depth`).
+    pub coordinator: CoordinatorOptions,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: None,
+            coordinator: CoordinatorOptions::default(),
+        }
+    }
+}
+
+/// Error returned by [`Cluster::submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterError {
+    /// The shared admission queue is at `queue_depth` — shed load.
+    ClusterFull,
+    /// The routed shard's own `max_queue_depth` bound fired.
+    ShardFull,
+    /// The cluster (or the routed shard) has shut down.
+    Stopped,
+}
+
+impl fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClusterError::ClusterFull => f.write_str("cluster admission queue full"),
+            ClusterError::ShardFull => f.write_str("routed shard queue full"),
+            ClusterError::Stopped => f.write_str("cluster stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// One slot in the shared admission queue; releases on drop.
+#[derive(Debug)]
+struct AdmissionPermit {
+    admitted: Arc<AtomicUsize>,
+}
+
+impl AdmissionPermit {
+    fn acquire(
+        admitted: &Arc<AtomicUsize>,
+        depth: Option<usize>,
+    ) -> Result<Self, ClusterError> {
+        if !crate::coordinator::server::try_claim_slot(admitted, depth) {
+            return Err(ClusterError::ClusterFull);
+        }
+        Ok(Self { admitted: admitted.clone() })
+    }
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        self.admitted.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A pending response plus its admission slot. The slot frees when this
+/// handle is dropped, so a client that holds N handles occupies N of the
+/// cluster's `queue_depth` — backpressure is deterministic, independent of
+/// worker timing.
+#[derive(Debug)]
+pub struct ClusterResponse {
+    rx: Receiver<Vec<LweCiphertext>>,
+    /// Which shard served this request (useful for affinity checks).
+    pub shard: usize,
+    _permit: AdmissionPermit,
+}
+
+impl ClusterResponse {
+    /// Wait for the decryptable output ciphertexts.
+    pub fn recv(&self) -> Result<Vec<LweCiphertext>, RecvError> {
+        self.rx.recv()
+    }
+}
+
+/// N replicated serving engines behind one admission-controlled router.
+pub struct Cluster {
+    shards: Vec<Coordinator>,
+    router: Router,
+    admitted: Arc<AtomicUsize>,
+    queue_depth: Option<usize>,
+    plan: Arc<CompiledPlan>,
+    accepting: bool,
+}
+
+impl Cluster {
+    /// Start with replicated keys: every shard serves under the same
+    /// `ServerKeys` (one `Arc` clone each — no key material is copied).
+    pub fn start(program: Program, keys: Arc<ServerKeys>, opts: ClusterOptions) -> Self {
+        assert!(opts.shards >= 1, "cluster needs at least one shard");
+        let shard_keys = vec![keys; opts.shards];
+        Self::start_with_shard_keys(program, shard_keys, opts)
+    }
+
+    /// Start with per-shard keys (all generated for the same parameter
+    /// set); `shard_keys.len()` overrides `opts.shards`.
+    pub fn start_with_shard_keys(
+        program: Program,
+        shard_keys: Vec<Arc<ServerKeys>>,
+        opts: ClusterOptions,
+    ) -> Self {
+        assert!(!shard_keys.is_empty(), "cluster needs at least one shard");
+        assert_ne!(
+            opts.queue_depth,
+            Some(0),
+            "queue_depth 0 would reject every request; use None for unbounded"
+        );
+        let params = &shard_keys[0].params;
+        assert!(
+            shard_keys.iter().all(|k| k.params.name == params.name),
+            "all shards must use one parameter set"
+        );
+        // Compile once; every shard executes (and `arch::sim` costs) the
+        // same artifact.
+        let plan = Arc::new(compiler::compile(&program, params, opts.coordinator.plan_capacity));
+        let shards: Vec<Coordinator> = shard_keys
+            .into_iter()
+            .map(|keys| Coordinator::start_with_plan(plan.clone(), keys, opts.coordinator.clone()))
+            .collect();
+        let router = Router::new(opts.policy, shards.len());
+        Self {
+            shards,
+            router,
+            admitted: Arc::new(AtomicUsize::new(0)),
+            queue_depth: opts.queue_depth,
+            plan,
+            accepting: true,
+        }
+    }
+
+    /// The compiled plan every shard executes.
+    pub fn plan(&self) -> &CompiledPlan {
+        &self.plan
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn policy(&self) -> PlacementPolicy {
+        self.router.policy()
+    }
+
+    /// Currently admitted (undropped) responses across the cluster.
+    pub fn outstanding(&self) -> usize {
+        self.admitted.load(Ordering::SeqCst)
+    }
+
+    /// Admit, route, and submit one encrypted query for `client_id`. The
+    /// inputs are consumed either way; a single-submitter client that
+    /// wants lossless backpressure should drain a pending response while
+    /// [`Self::outstanding`] sits at the queue depth (as the drivers do)
+    /// rather than bounce off [`ClusterError::ClusterFull`].
+    pub fn submit(
+        &self,
+        client_id: u64,
+        inputs: Vec<LweCiphertext>,
+    ) -> Result<ClusterResponse, ClusterError> {
+        if !self.accepting {
+            return Err(ClusterError::Stopped);
+        }
+        // The permit is dropped (slot released) on any error path below.
+        let permit = AdmissionPermit::acquire(&self.admitted, self.queue_depth)?;
+        // Outstanding counts are gathered lazily — only the
+        // least-outstanding policy reads them.
+        let shard = self.router.place(client_id, || {
+            self.shards.iter().map(|c| c.inflight.load(Ordering::SeqCst)).collect()
+        });
+        let rx = self.shards[shard].submit(inputs).map_err(|e| match e {
+            SubmitError::Stopped => ClusterError::Stopped,
+            SubmitError::QueueFull => ClusterError::ShardFull,
+        })?;
+        Ok(ClusterResponse { rx, shard, _permit: permit })
+    }
+
+    /// Per-shard metrics, indexed by shard id.
+    pub fn shard_snapshots(&self) -> Vec<MetricsSnapshot> {
+        self.shards.iter().map(|c| c.metrics.snapshot()).collect()
+    }
+
+    /// Aggregate cluster metrics: counters summed, percentiles recomputed
+    /// over the concatenated per-shard samples
+    /// ([`MetricsSnapshot::merge`]).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot::merge(&self.shard_snapshots())
+    }
+
+    /// Graceful drain: stop admitting, flush every shard's batcher (all
+    /// already-admitted requests are answered), and join dispatch + worker
+    /// threads. Subsequent [`Self::submit`] calls return
+    /// [`ClusterError::Stopped`].
+    pub fn shutdown(&mut self) {
+        self.accepting = false;
+        for shard in &mut self.shards {
+            shard.shutdown();
+        }
+    }
+}

@@ -8,8 +8,14 @@ use std::time::{Duration, Instant};
 
 /// Pull up to `capacity` items from `rx`, waiting at most `max_wait` after
 /// the first item arrives. Returns an empty vec when the channel closed.
+/// A `capacity` of 0 returns empty immediately without touching the
+/// channel (callers that treat an empty batch as "intake closed", like the
+/// coordinator's dispatch loop, must reject capacity 0 up front).
 pub fn collect_batch<T>(rx: &Receiver<T>, capacity: usize, max_wait: Duration) -> Vec<T> {
     let mut out = Vec::new();
+    if capacity == 0 {
+        return out;
+    }
     // Block for the first element (or closure).
     match rx.recv() {
         Ok(item) => out.push(item),
@@ -78,6 +84,20 @@ mod tests {
         drop(tx);
         let b = DynamicBatcher::new(4, Duration::from_millis(1));
         assert!(b.collect(&rx).is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_returns_empty_without_blocking_or_consuming() {
+        // Regression: capacity 0 used to block on the first recv and hand
+        // back a 1-element "batch" anyway.
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        let b = DynamicBatcher::new(0, Duration::from_secs(3600));
+        let t0 = std::time::Instant::now();
+        assert!(b.collect(&rx).is_empty());
+        assert!(t0.elapsed() < Duration::from_secs(1), "must not block");
+        // The queued item was not swallowed.
+        assert_eq!(rx.try_recv(), Ok(7));
     }
 
     #[test]

@@ -18,10 +18,19 @@ struct Inner {
 }
 
 /// Thread-safe metrics sink shared by batcher and workers.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<Inner>,
     started: Option<Instant>,
+}
+
+/// A default `Metrics` is a live sink (clock started), identical to
+/// [`Metrics::new`] — so `#[derive(Default)]` works on structs embedding
+/// one and the throughput denominator is never zero-epoch garbage.
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 #[derive(Debug, Clone, Default)]
@@ -46,6 +55,51 @@ pub struct MetricsSnapshot {
     /// one full BSK stream per PBS when batches degenerate to size 1 and
     /// shrinks ~Bx when dynamic batches of B fuse their sweeps.
     pub bsk_bytes_per_pbs: f64,
+    /// Raw per-request latency samples (ms). Retained so shard snapshots
+    /// can be merged into *exact* aggregate percentiles (percentiles do
+    /// not compose from per-shard percentiles).
+    pub latency_samples_ms: Vec<f64>,
+    /// Raw per-request queueing-delay samples (ms).
+    pub queue_samples_ms: Vec<f64>,
+    /// Raw per-batch size samples.
+    pub batch_size_samples: Vec<f64>,
+}
+
+impl MetricsSnapshot {
+    /// Aggregate shard snapshots into one cluster view: counters sum, the
+    /// latency/queue/batch distributions are recomputed over the
+    /// concatenated raw samples (so merged p50/p99 are the true cluster
+    /// percentiles, not an average of per-shard percentiles), and
+    /// `bsk_bytes_per_pbs` is the PBS-weighted mean (total bytes / total
+    /// PBS), not the mean of per-shard ratios.
+    pub fn merge(shards: &[MetricsSnapshot]) -> MetricsSnapshot {
+        let mut out = MetricsSnapshot::default();
+        for s in shards {
+            out.requests += s.requests;
+            out.batches += s.batches;
+            out.pbs_executed += s.pbs_executed;
+            out.ks_executed += s.ks_executed;
+            out.bsk_bytes_streamed += s.bsk_bytes_streamed;
+            out.latency_samples_ms.extend_from_slice(&s.latency_samples_ms);
+            out.queue_samples_ms.extend_from_slice(&s.queue_samples_ms);
+            out.batch_size_samples.extend_from_slice(&s.batch_size_samples);
+            // Shards run concurrently: the cluster has been up as long as
+            // its longest-lived shard.
+            out.elapsed_s = out.elapsed_s.max(s.elapsed_s);
+        }
+        out.mean_batch_size = stats::mean(&out.batch_size_samples);
+        out.p50_latency_ms = stats::percentile(&out.latency_samples_ms, 50.0);
+        out.p99_latency_ms = stats::percentile(&out.latency_samples_ms, 99.0);
+        out.mean_queue_ms = stats::mean(&out.queue_samples_ms);
+        out.throughput_rps =
+            if out.elapsed_s > 0.0 { out.requests as f64 / out.elapsed_s } else { 0.0 };
+        out.bsk_bytes_per_pbs = if out.pbs_executed > 0 {
+            out.bsk_bytes_streamed as f64 / out.pbs_executed as f64
+        } else {
+            0.0
+        };
+        out
+    }
 }
 
 impl Metrics {
@@ -95,6 +149,9 @@ impl Metrics {
             } else {
                 0.0
             },
+            latency_samples_ms: g.latencies_ms.clone(),
+            queue_samples_ms: g.queue_ms.clone(),
+            batch_size_samples: g.batch_sizes.clone(),
         }
     }
 }
@@ -120,5 +177,76 @@ mod tests {
         assert!(s.p50_latency_ms >= 10.0 && s.p99_latency_ms <= 30.0);
         assert_eq!(s.bsk_bytes_streamed, 7000);
         assert!((s.bsk_bytes_per_pbs - 500.0).abs() < 1e-9);
+        assert_eq!(s.latency_samples_ms, vec![10.0, 30.0]);
+        assert_eq!(s.batch_size_samples, vec![2.0]);
+    }
+
+    #[test]
+    fn merge_percentiles_equal_concatenated_samples() {
+        // Two shards with skewed latency distributions: the merged p50/p99
+        // must equal percentiles over the concatenation, which differs
+        // from any combination of the per-shard percentiles.
+        let a_lat = [1.0, 2.0, 3.0, 4.0];
+        let b_lat = [100.0, 200.0];
+        let mk = |lats: &[f64], queues: f64| {
+            let m = Metrics::new();
+            for &l in lats {
+                m.record_request(queues, l);
+            }
+            m.record_batch(lats.len(), 3 * lats.len());
+            m.snapshot()
+        };
+        let a = mk(&a_lat, 0.5);
+        let b = mk(&b_lat, 1.5);
+        let merged = MetricsSnapshot::merge(&[a.clone(), b.clone()]);
+        let mut all: Vec<f64> = a_lat.to_vec();
+        all.extend_from_slice(&b_lat);
+        assert_eq!(merged.requests, 6);
+        assert_eq!(merged.batches, 2);
+        assert_eq!(merged.pbs_executed, 18);
+        assert_eq!(merged.latency_samples_ms.len(), 6);
+        assert!((merged.p50_latency_ms - crate::util::stats::percentile(&all, 50.0)).abs() < 1e-12);
+        assert!((merged.p99_latency_ms - crate::util::stats::percentile(&all, 99.0)).abs() < 1e-12);
+        // A mean of the two per-shard p99s would be way off the truth.
+        let naive = (a.p99_latency_ms + b.p99_latency_ms) / 2.0;
+        assert!((merged.p99_latency_ms - naive).abs() > 1.0, "merge must not average percentiles");
+        // Mean batch size over concatenated batch samples: (4 + 2) / 2.
+        assert!((merged.mean_batch_size - 3.0).abs() < 1e-12);
+        // Mean queue: (4 * 0.5 + 2 * 1.5) / 6.
+        assert!((merged.mean_queue_ms - (4.0 * 0.5 + 2.0 * 1.5) / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_weights_bsk_per_pbs_by_pbs_count() {
+        // Shard A: 10 PBS at 100 B/PBS; shard B: 1 PBS at 1 B/PBS. The
+        // pbs-weighted mean is 1001/11 ~ 91, not the 50.5 mean-of-ratios.
+        let a = MetricsSnapshot {
+            pbs_executed: 10,
+            bsk_bytes_streamed: 1000,
+            bsk_bytes_per_pbs: 100.0,
+            ..Default::default()
+        };
+        let b = MetricsSnapshot {
+            pbs_executed: 1,
+            bsk_bytes_streamed: 1,
+            bsk_bytes_per_pbs: 1.0,
+            ..Default::default()
+        };
+        let merged = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(merged.pbs_executed, 11);
+        assert_eq!(merged.bsk_bytes_streamed, 1001);
+        assert!((merged.bsk_bytes_per_pbs - 1001.0 / 11.0).abs() < 1e-12);
+        let mean_of_ratios = (100.0 + 1.0) / 2.0;
+        assert!((merged.bsk_bytes_per_pbs - mean_of_ratios).abs() > 1.0);
+    }
+
+    #[test]
+    fn merge_of_empty_and_default_metrics_is_zeroed() {
+        assert_eq!(MetricsSnapshot::merge(&[]).requests, 0);
+        let m = Metrics::default(); // same as new(): live clock, no samples
+        let merged = MetricsSnapshot::merge(&[m.snapshot()]);
+        assert_eq!(merged.requests, 0);
+        assert_eq!(merged.bsk_bytes_per_pbs, 0.0);
+        assert_eq!(merged.p99_latency_ms, 0.0);
     }
 }

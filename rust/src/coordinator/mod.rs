@@ -6,6 +6,9 @@
 //!
 //! Python never appears here: the XLA backend executes AOT artifacts via
 //! PJRT (see `runtime`).
+//!
+//! One coordinator is one engine shard; `crate::cluster` replicates N of
+//! them behind a placement router with a shared admission queue.
 
 pub mod batcher;
 pub mod metrics;
@@ -13,4 +16,4 @@ pub mod server;
 
 pub use batcher::DynamicBatcher;
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{BackendKind, Coordinator, CoordinatorOptions, CoordinatorStopped};
+pub use server::{BackendKind, Coordinator, CoordinatorOptions, SubmitError};

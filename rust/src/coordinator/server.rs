@@ -48,6 +48,13 @@ pub struct CoordinatorOptions {
     /// Run the legacy node-walking executor instead of the compiled plan
     /// (ablation / debugging; the plan path is the default).
     pub legacy_exec: bool,
+    /// Bound on outstanding requests: once this many submissions have not
+    /// yet been answered, [`Coordinator::submit`] sheds load with
+    /// [`SubmitError::QueueFull`] instead of queueing without limit.
+    /// `None` keeps the historical unbounded intake. The cluster's shared
+    /// admission queue (`crate::cluster`) composes with this per-shard
+    /// bound.
+    pub max_queue_depth: Option<usize>,
 }
 
 impl Default for CoordinatorOptions {
@@ -59,21 +66,48 @@ impl Default for CoordinatorOptions {
             backend: BackendKind::Native,
             plan_capacity: 48,
             legacy_exec: false,
+            max_queue_depth: None,
         }
     }
 }
 
-/// Error returned by [`Coordinator::submit`] once intake has closed.
+/// Error returned by [`Coordinator::submit`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct CoordinatorStopped;
+pub enum SubmitError {
+    /// Intake has closed ([`Coordinator::shutdown`] ran).
+    Stopped,
+    /// `max_queue_depth` requests are already outstanding — shed load and
+    /// let the client retry (or route to another shard).
+    QueueFull,
+}
 
-impl fmt::Display for CoordinatorStopped {
+impl fmt::Display for SubmitError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str("coordinator stopped")
+        match self {
+            SubmitError::Stopped => f.write_str("coordinator stopped"),
+            SubmitError::QueueFull => f.write_str("coordinator queue full"),
+        }
     }
 }
 
-impl std::error::Error for CoordinatorStopped {}
+impl std::error::Error for SubmitError {}
+
+/// Atomically claim one slot of a bounded (or unbounded, `depth: None`)
+/// admission counter; `false` means the bound is reached and nothing was
+/// claimed. Shared by [`Coordinator::submit`] and the cluster's admission
+/// queue — the compare loop guarantees concurrent claimers never exceed
+/// `depth`.
+pub(crate) fn try_claim_slot(counter: &AtomicUsize, depth: Option<usize>) -> bool {
+    match depth {
+        Some(d) => counter
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| (n < d).then_some(n + 1))
+            .is_ok(),
+        None => {
+            counter.fetch_add(1, Ordering::SeqCst);
+            true
+        }
+    }
+}
 
 struct Request {
     inputs: Vec<LweCiphertext>,
@@ -89,19 +123,37 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     pub inflight: Arc<AtomicUsize>,
     plan: Arc<CompiledPlan>,
+    max_queue_depth: Option<usize>,
 }
 
 impl Coordinator {
     pub fn start(program: Program, keys: Arc<ServerKeys>, opts: CoordinatorOptions) -> Self {
+        // One compiled plan, shared by every worker (and available to
+        // callers for sim cross-checks via [`Self::plan`]).
+        let plan = Arc::new(compiler::compile(&program, &keys.params, opts.plan_capacity));
+        Self::start_with_plan(plan, keys, opts)
+    }
+
+    /// Start from an already-compiled plan. This is how the cluster layer
+    /// (`crate::cluster`) replicates one program across N shards without
+    /// compiling N times: every shard's workers walk the very same
+    /// [`CompiledPlan`] artifact.
+    pub fn start_with_plan(
+        plan: Arc<CompiledPlan>,
+        keys: Arc<ServerKeys>,
+        opts: CoordinatorOptions,
+    ) -> Self {
         // Fail on the caller's thread, not inside a worker, when the
         // requested backend isn't compiled in.
         #[cfg(not(feature = "xla"))]
         if matches!(opts.backend, BackendKind::Xla { .. }) {
             panic!("XLA backend requested but built without the `xla` feature");
         }
-        // One compiled plan, shared by every worker (and available to
-        // callers for sim cross-checks via [`Self::plan`]).
-        let plan = Arc::new(compiler::compile(&program, &keys.params, opts.plan_capacity));
+        assert!(opts.batch_capacity >= 1, "batch_capacity must be >= 1");
+        assert_eq!(
+            plan.params.name, keys.params.name,
+            "compiled plan and server keys use different parameter sets"
+        );
         let metrics = Arc::new(Metrics::new());
         let inflight = Arc::new(AtomicUsize::new(0));
         let (intake_tx, intake_rx) = channel::<Request>();
@@ -162,6 +214,7 @@ impl Coordinator {
             workers,
             inflight,
             plan,
+            max_queue_depth: opts.max_queue_depth,
         }
     }
 
@@ -172,27 +225,31 @@ impl Coordinator {
     }
 
     /// Submit one encrypted query; returns the channel the response will
-    /// arrive on, or [`CoordinatorStopped`] after shutdown.
+    /// arrive on, [`SubmitError::Stopped`] after shutdown, or
+    /// [`SubmitError::QueueFull`] when `max_queue_depth` requests are
+    /// already outstanding.
     pub fn submit(
         &self,
         inputs: Vec<LweCiphertext>,
-    ) -> Result<Receiver<Vec<LweCiphertext>>, CoordinatorStopped> {
+    ) -> Result<Receiver<Vec<LweCiphertext>>, SubmitError> {
         let Some(intake) = self.intake.as_ref() else {
-            return Err(CoordinatorStopped);
+            return Err(SubmitError::Stopped);
         };
+        if !try_claim_slot(&self.inflight, self.max_queue_depth) {
+            return Err(SubmitError::QueueFull);
+        }
         let (tx, rx) = channel();
-        self.inflight.fetch_add(1, Ordering::SeqCst);
         match intake.send(Request { inputs, enqueued: Instant::now(), respond: tx }) {
             Ok(()) => Ok(rx),
             Err(_) => {
                 self.inflight.fetch_sub(1, Ordering::SeqCst);
-                Err(CoordinatorStopped)
+                Err(SubmitError::Stopped)
             }
         }
     }
 
     /// Graceful shutdown: close intake, drain workers. Subsequent
-    /// [`Self::submit`] calls return [`CoordinatorStopped`].
+    /// [`Self::submit`] calls return [`SubmitError::Stopped`].
     pub fn shutdown(&mut self) {
         drop(self.intake.take());
         if let Some(d) = self.dispatch.take() {
@@ -378,7 +435,48 @@ mod tests {
             encrypt_message(1, &sk, &mut rng),
             encrypt_message(2, &sk, &mut rng),
         ];
-        assert_eq!(coord.submit(inputs).unwrap_err(), CoordinatorStopped);
+        assert_eq!(coord.submit(inputs).unwrap_err(), SubmitError::Stopped);
         assert_eq!(coord.inflight.load(Ordering::SeqCst), 0, "no leaked inflight");
+    }
+
+    #[test]
+    fn bounded_queue_sheds_load_then_recovers() {
+        let mut rng = Rng::new(35);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+        // One worker, a batcher that holds requests for a long window, and
+        // a depth-2 bound: the 3rd submission must be shed while the first
+        // two are still queued.
+        let mut coord = Coordinator::start(
+            small_program(),
+            keys,
+            CoordinatorOptions {
+                workers: 1,
+                batch_capacity: 64,
+                max_batch_wait: Duration::from_millis(300),
+                max_queue_depth: Some(2),
+                ..Default::default()
+            },
+        );
+        let enc = |rng: &mut Rng| {
+            vec![encrypt_message(1, &sk, rng), encrypt_message(2, &sk, rng)]
+        };
+        let a = coord.submit(enc(&mut rng)).expect("first admitted");
+        let b = coord.submit(enc(&mut rng)).expect("second admitted");
+        assert_eq!(
+            coord.submit(enc(&mut rng)).unwrap_err(),
+            SubmitError::QueueFull,
+            "third submission sheds load at depth 2"
+        );
+        // Once the held batch executes, the slots free up and intake
+        // accepts again.
+        let _ = a.recv().expect("first response");
+        let _ = b.recv().expect("second response");
+        let c = coord.submit(enc(&mut rng)).expect("admitted after drain");
+        let _ = c.recv().expect("third response");
+        assert_eq!(coord.inflight.load(Ordering::SeqCst), 0);
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.requests, 3, "shed request was never executed");
+        coord.shutdown();
     }
 }

@@ -21,6 +21,9 @@
 //!   artifacts from the Rust request path.
 //! - [`coordinator`] — a threaded FHE-inference serving frontend (router,
 //!   dynamic batcher, metrics).
+//! - [`cluster`] — sharded serving above the coordinator: N replicated
+//!   engine shards behind a placement router with a bounded shared
+//!   admission queue and merged metrics.
 //! - [`eval`] — regenerates every table and figure of the paper.
 
 // Stylistic clippy lints the codebase deliberately trades away: the
@@ -50,4 +53,5 @@ pub mod baselines;
 pub mod workloads;
 pub mod runtime;
 pub mod coordinator;
+pub mod cluster;
 pub mod eval;

@@ -5,9 +5,12 @@
 //!       regenerate the paper's tables/figures (ids: 1..4, 5, 6, 13a,
 //!       13b, 14, 15, 16, obs5, dedup, ablation)
 //!   run <workload> [--batch B]      simulate one Table II workload
-//!   serve [--backend native|xla] [--workers N] [--requests R]
-//!       start the serving coordinator on the quickstart program and
-//!       drive R encrypted requests through it
+//!   serve [--backend native|xla] [--shards S] [--policy P]
+//!         [--queue-depth D] [--workers N] [--requests R]
+//!       start a sharded serving cluster (S coordinator shards behind a
+//!       router; P in round-robin|least-outstanding|consistent-hash;
+//!       D bounds the shared admission queue, 0 = unbounded) on the
+//!       quickstart program and drive R encrypted requests through it
 //!   params                          print all parameter sets
 //!   selftest                        native + XLA PBS smoke test
 
@@ -21,7 +24,8 @@ use taurus::bail;
 use taurus::util::err::Result;
 
 use taurus::arch::TaurusConfig;
-use taurus::coordinator::{BackendKind, Coordinator, CoordinatorOptions};
+use taurus::cluster::{Cluster, ClusterOptions, ClusterResponse, PlacementPolicy};
+use taurus::coordinator::{BackendKind, CoordinatorOptions};
 use taurus::ir::builder::ProgramBuilder;
 use taurus::params;
 use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
@@ -147,9 +151,15 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let shards = args.usize_flag("shards", 2).max(1);
     let workers = args.usize_flag("workers", 2);
     let requests = args.usize_flag("requests", 16);
+    let queue_depth = args.usize_flag("queue-depth", 0);
     let legacy_exec = args.flag("legacy-exec").is_some();
+    let policy_name = args.flag("policy").unwrap_or("round-robin");
+    let Some(policy) = PlacementPolicy::parse(policy_name) else {
+        bail!("unknown policy {policy_name} (round-robin | least-outstanding | consistent-hash)")
+    };
     let backend = match args.flag("backend").unwrap_or("native") {
         "xla" => BackendKind::Xla { artifacts_dir: "artifacts".into() },
         _ => BackendKind::Native,
@@ -170,50 +180,102 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("keygen (TEST1)...");
     let sk = SecretKeys::generate(&params::TEST1, &mut rng);
     let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
-    let mut coord = Coordinator::start(
+    let mut cluster = Cluster::start(
         prog.clone(),
         keys,
-        CoordinatorOptions { workers, backend, legacy_exec, ..Default::default() },
+        ClusterOptions {
+            shards,
+            policy,
+            queue_depth: if queue_depth > 0 { Some(queue_depth) } else { None },
+            coordinator: CoordinatorOptions { workers, backend, legacy_exec, ..Default::default() },
+        },
     );
-    let plan = coord.plan();
+    let plan = cluster.plan();
     println!(
-        "compiled plan  : {} PBS, KS-dedup {} -> {} ({:.1}%), {} batches ({})",
+        "compiled plan  : {} PBS, KS-dedup {} -> {} ({:.1}%), {} batches ({}), shared by {} shards",
         plan.graph.pbs_count(),
         plan.ks_dedup.before,
         plan.ks_dedup.after,
         plan.ks_dedup.reduction_pct(),
         plan.schedule.batches.len(),
         if legacy_exec { "legacy node-walk executor" } else { "schedule-driven executor" },
+        shards,
     );
-    println!("serving {requests} encrypted requests on {workers} workers...");
-    let mut pending = Vec::new();
-    let mut expected = Vec::new();
+    println!(
+        "serving {requests} encrypted requests: {shards} shards x {workers} workers, {} routing, admission depth {}",
+        policy.name(),
+        if queue_depth > 0 { queue_depth.to_string() } else { "unbounded".into() },
+    );
+    let mut pending: std::collections::VecDeque<(ClusterResponse, Vec<u64>)> =
+        std::collections::VecDeque::new();
+    let mut correct = 0usize;
     for i in 0..requests {
         let (mx, my) = ((i as u64) % 4, (i as u64 * 3) % 4);
-        expected.push(taurus::ir::interp::eval(&prog, &[mx, my]));
+        let exp = taurus::ir::interp::eval(&prog, &[mx, my]);
+        let client_id = (i as u64) % 4; // four simulated clients
+        // Single-submitter driver: admission slots are held by the pending
+        // handles, so drain the oldest response whenever the queue is at
+        // depth instead of bouncing off ClusterFull and re-cloning inputs.
+        while queue_depth > 0 && cluster.outstanding() >= queue_depth {
+            let Some((r, e)) = pending.pop_front() else {
+                bail!("admission queue full with nothing pending")
+            };
+            let outs = r.recv()?;
+            let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+            correct += usize::from(got == e);
+        }
         let inputs = vec![encrypt_message(mx, &sk, &mut rng), encrypt_message(my, &sk, &mut rng)];
-        pending.push(coord.submit(inputs)?);
+        let resp = match cluster.submit(client_id, inputs) {
+            Ok(r) => r,
+            Err(e) => bail!("submit failed: {e}"),
+        };
+        pending.push_back((resp, exp));
     }
-    let mut correct = 0;
-    for (rx, exp) in pending.iter().zip(&expected) {
-        let outs = rx.recv()?;
+    while let Some((r, e)) = pending.pop_front() {
+        let outs = r.recv()?;
         let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
-        correct += u64::from(&got == exp);
+        correct += usize::from(got == e);
     }
-    let snap = coord.metrics.snapshot();
+    let snap = cluster.snapshot();
+    let per_shard = cluster.shard_snapshots();
     println!("correct        : {correct}/{requests}");
-    println!("throughput     : {:.1} req/s", snap.throughput_rps);
-    println!("p50 / p99      : {:.2} / {:.2} ms", snap.p50_latency_ms, snap.p99_latency_ms);
+    println!("throughput     : {:.1} req/s (aggregate)", snap.throughput_rps);
+    println!("p50 / p99      : {:.2} / {:.2} ms (merged samples)", snap.p50_latency_ms, snap.p99_latency_ms);
     println!("mean batch size: {:.2} ({} batches)", snap.mean_batch_size, snap.batches);
     println!("PBS executed   : {}", snap.pbs_executed);
     println!(
         "KS executed    : {} (plan: {}/request; legacy would pay {}/request)",
         snap.ks_executed,
-        coord.plan().ks_dedup.after,
-        coord.plan().ks_dedup.before,
+        cluster.plan().ks_dedup.after,
+        cluster.plan().ks_dedup.before,
     );
-    println!("BSK B/PBS      : {:.0}", snap.bsk_bytes_per_pbs);
-    coord.shutdown();
+    println!("BSK B/PBS      : {:.0} (pbs-weighted over shards)", snap.bsk_bytes_per_pbs);
+    println!("per shard      : id  requests  batches  mean-batch      KS     PBS");
+    for (i, s) in per_shard.iter().enumerate() {
+        println!(
+            "                 {i:<3} {:>8} {:>8} {:>10.2} {:>7} {:>7}",
+            s.requests, s.batches, s.mean_batch_size, s.ks_executed, s.pbs_executed
+        );
+    }
+    // The identical artifact costed by the arch model: aggregate measured
+    // counters must equal per-request sim costs x requests, independent
+    // of how many shards served them.
+    let cfg = config_from(args);
+    let sim = taurus::arch::simulate(cluster.plan(), &cfg);
+    if !legacy_exec {
+        let ks_ok = snap.ks_executed == (requests * sim.ks_count) as u64;
+        let pbs_ok = snap.pbs_executed == requests * sim.pbs_count;
+        println!(
+            "sim cross-check: KS {} vs {} ({requests} req x {}), PBS {} vs {} -> {}",
+            snap.ks_executed,
+            requests * sim.ks_count,
+            sim.ks_count,
+            snap.pbs_executed,
+            requests * sim.pbs_count,
+            if ks_ok && pbs_ok { "OK" } else { "MISMATCH" },
+        );
+    }
+    cluster.shutdown();
     Ok(())
 }
 

@@ -122,6 +122,7 @@ fn coordinator_batched_sweeps_round_robin_and_drain() {
             batch_capacity: 4,
             max_batch_wait: Duration::from_millis(2),
             backend: BackendKind::Native,
+            ..Default::default()
         },
     );
     let queries: Vec<(u64, u64)> = (0..12).map(|i| (i % 5, (i * 7) % 5)).collect();

@@ -1,0 +1,292 @@
+//! Integration: the sharded serving cluster — replication correctness
+//! (bitwise vs a single coordinator), placement policies, admission-queue
+//! backpressure, graceful drain, and merged-metrics accounting
+//! cross-checked against `arch::sim`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use taurus::arch::{simulate, TaurusConfig};
+use taurus::cluster::{Cluster, ClusterError, ClusterOptions, PlacementPolicy};
+use taurus::coordinator::{Coordinator, CoordinatorOptions};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::{interp, Program};
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{LweCiphertext, SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+
+/// A randomized 3-input program: one fanout layer of dot -> LUT with
+/// rng-drawn weights/biases/tables, then a reduction LUT. Deterministic
+/// given the rng seed.
+fn randomized_program(rng: &mut Rng) -> Program {
+    let width = TEST1.width;
+    let dom = 1u64 << width;
+    let mut b = ProgramBuilder::new("cluster-rand", width);
+    let xs = b.inputs(3);
+    let mut mids = Vec::new();
+    for _ in 0..3 {
+        let w: Vec<i64> = (0..3).map(|_| 1 + rng.below(2) as i64).collect();
+        let bias = rng.below(4);
+        let d = b.dot(xs.clone(), w, bias);
+        let table: Vec<u64> = (0..dom).map(|_| rng.below(dom)).collect();
+        mids.push(b.lut_fn(d, move |m| table[(m % dom) as usize]));
+    }
+    let s = b.dot(mids.clone(), vec![1, 1, 1], 0);
+    let table: Vec<u64> = (0..dom).map(|_| rng.below(dom)).collect();
+    let out = b.lut_fn(s, move |m| table[(m % dom) as usize]);
+    b.outputs(&[mids[0], out]);
+    b.finish()
+}
+
+/// Cheap 1-PBS program for routing/backpressure tests.
+fn tiny_program() -> Program {
+    let mut b = ProgramBuilder::new("tiny", TEST1.width);
+    let x = b.input();
+    let y = b.lut_fn(x, |m| (m + 1) % 8);
+    b.output(y);
+    b.finish()
+}
+
+fn test_coordinator_options() -> CoordinatorOptions {
+    CoordinatorOptions {
+        workers: 1,
+        batch_capacity: 4,
+        max_batch_wait: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn four_shard_cluster_matches_single_coordinator_bitwise() {
+    let mut rng = Rng::new(4242);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = randomized_program(&mut rng);
+    let n = 8usize;
+    let queries: Vec<Vec<u64>> =
+        (0..n).map(|_| (0..3).map(|_| rng.below(6)).collect()).collect();
+    let encrypted: Vec<Vec<LweCiphertext>> = queries
+        .iter()
+        .map(|q| q.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect())
+        .collect();
+
+    // Reference: one coordinator over the same ciphertexts.
+    let mut single = Coordinator::start(prog.clone(), keys.clone(), test_coordinator_options());
+    let pend: Vec<_> =
+        encrypted.iter().map(|cts| single.submit(cts.clone()).expect("submit")).collect();
+    let single_outs: Vec<Vec<LweCiphertext>> =
+        pend.iter().map(|rx| rx.recv().expect("response")).collect();
+    single.shutdown();
+
+    // 4 shards, replicated keys, one shared compiled artifact.
+    let mut cluster = Cluster::start(
+        prog.clone(),
+        keys,
+        ClusterOptions {
+            shards: 4,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: None,
+            coordinator: test_coordinator_options(),
+        },
+    );
+    let pend: Vec<_> = encrypted
+        .iter()
+        .enumerate()
+        .map(|(i, cts)| cluster.submit(i as u64, cts.clone()).expect("submit"))
+        .collect();
+    let cluster_outs: Vec<Vec<LweCiphertext>> =
+        pend.iter().map(|r| r.recv().expect("response")).collect();
+    drop(pend);
+
+    // Bitwise: the same plan over the same keys and inputs yields the
+    // identical output ciphertexts no matter which shard (or dynamic
+    // batch) served the request.
+    assert_eq!(single_outs, cluster_outs, "cluster must replicate the engine exactly");
+    // And both decrypt to the interpreter's answers.
+    for (q, outs) in queries.iter().zip(&cluster_outs) {
+        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+        assert_eq!(got, interp::eval(&prog, q), "query {q:?}");
+    }
+    // Round-robin actually spread the work: 8 requests over 4 shards.
+    let per: Vec<usize> = cluster.shard_snapshots().iter().map(|s| s.requests).collect();
+    assert_eq!(per, vec![2, 2, 2, 2], "round-robin spread");
+    cluster.shutdown();
+}
+
+#[test]
+fn consistent_hash_routes_a_client_to_one_shard() {
+    let mut rng = Rng::new(77);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let mut cluster = Cluster::start(
+        tiny_program(),
+        keys,
+        ClusterOptions {
+            shards: 4,
+            policy: PlacementPolicy::ConsistentHash,
+            queue_depth: None,
+            coordinator: test_coordinator_options(),
+        },
+    );
+    let n = 10usize;
+    let client_id = 777u64;
+    let pend: Vec<_> = (0..n)
+        .map(|i| {
+            let cts = vec![encrypt_message((i % 6) as u64, &sk, &mut rng)];
+            cluster.submit(client_id, cts).expect("submit")
+        })
+        .collect();
+    let home = pend[0].shard;
+    for resp in &pend {
+        assert_eq!(resp.shard, home, "client {client_id} must stay on shard {home}");
+        let _ = resp.recv().expect("response");
+    }
+    drop(pend);
+    let per: Vec<usize> = cluster.shard_snapshots().iter().map(|s| s.requests).collect();
+    assert_eq!(per[home], n, "all requests landed on the client's home shard");
+    assert_eq!(per.iter().sum::<usize>(), n, "and nowhere else: {per:?}");
+    cluster.shutdown();
+}
+
+#[test]
+fn cluster_full_backpressure_fires_at_depth() {
+    let mut rng = Rng::new(78);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let depth = 3usize;
+    let mut cluster = Cluster::start(
+        tiny_program(),
+        keys,
+        ClusterOptions {
+            shards: 2,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: Some(depth),
+            coordinator: test_coordinator_options(),
+        },
+    );
+    let enc = |rng: &mut Rng| vec![encrypt_message(1, &sk, rng)];
+    // Admission slots are held by the response handles, so backpressure
+    // is deterministic regardless of worker timing.
+    let mut held: Vec<_> =
+        (0..depth).map(|i| cluster.submit(i as u64, enc(&mut rng)).expect("admitted")).collect();
+    assert_eq!(cluster.outstanding(), depth);
+    assert_eq!(
+        cluster.submit(9, enc(&mut rng)).unwrap_err(),
+        ClusterError::ClusterFull,
+        "admission queue at depth must shed load"
+    );
+    // Draining one response frees its slot.
+    let r = held.pop().unwrap();
+    let _ = r.recv().expect("response");
+    drop(r);
+    let readmitted = cluster.submit(9, enc(&mut rng)).expect("slot freed after drop");
+    let _ = readmitted.recv().expect("response");
+    drop(readmitted);
+    for r in held.drain(..) {
+        let _ = r.recv().expect("response");
+        drop(r);
+    }
+    assert_eq!(cluster.outstanding(), 0);
+    // Graceful shutdown stops admissions.
+    cluster.shutdown();
+    assert_eq!(cluster.submit(1, enc(&mut rng)).unwrap_err(), ClusterError::Stopped);
+}
+
+#[test]
+fn shutdown_drains_already_admitted_requests() {
+    let mut rng = Rng::new(79);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = tiny_program();
+    let mut cluster = Cluster::start(
+        prog.clone(),
+        keys,
+        ClusterOptions {
+            shards: 2,
+            policy: PlacementPolicy::LeastOutstanding,
+            queue_depth: None,
+            coordinator: test_coordinator_options(),
+        },
+    );
+    let pend: Vec<_> = (0..4u64)
+        .map(|i| {
+            let cts = vec![encrypt_message(i % 6, &sk, &mut rng)];
+            (i % 6, cluster.submit(i, cts).expect("submit"))
+        })
+        .collect();
+    // Drain: stop admissions, flush every shard's batcher, join workers —
+    // every already-admitted request still gets its answer.
+    cluster.shutdown();
+    for (m, resp) in &pend {
+        let outs = resp.recv().expect("drained response");
+        assert_eq!(decrypt_message(&outs[0], &sk), interp::eval(&prog, &[*m])[0]);
+    }
+}
+
+#[test]
+fn snapshot_sums_shards_and_cross_checks_sim() {
+    let mut rng = Rng::new(80);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    // Fanout shape so KS-dedup is visible in the cross-check: d = x + y
+    // feeds two LUTs (1 shared KS, 2 PBS per request).
+    let mut b = ProgramBuilder::new("fan", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.add(x, y);
+    let r0 = b.lut_fn(d, |m| (m + 1) % 8);
+    let r1 = b.lut_fn(d, |m| m ^ 1);
+    b.outputs(&[r0, r1]);
+    let prog = b.finish();
+
+    let n = 9usize;
+    let mut cluster = Cluster::start(
+        prog.clone(),
+        keys,
+        ClusterOptions {
+            shards: 3,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: None,
+            coordinator: test_coordinator_options(),
+        },
+    );
+    let pend: Vec<_> = (0..n)
+        .map(|i| {
+            let cts = vec![
+                encrypt_message((i % 6) as u64, &sk, &mut rng),
+                encrypt_message((i % 4) as u64, &sk, &mut rng),
+            ];
+            cluster.submit(i as u64, cts).expect("submit")
+        })
+        .collect();
+    for resp in &pend {
+        let _ = resp.recv().expect("response");
+    }
+    drop(pend);
+
+    let per = cluster.shard_snapshots();
+    let merged = cluster.snapshot();
+    assert_eq!(merged.requests, per.iter().map(|s| s.requests).sum::<usize>());
+    assert_eq!(merged.requests, n);
+    assert_eq!(merged.batches, per.iter().map(|s| s.batches).sum::<usize>());
+    assert_eq!(merged.pbs_executed, per.iter().map(|s| s.pbs_executed).sum::<usize>());
+    assert_eq!(merged.ks_executed, per.iter().map(|s| s.ks_executed).sum::<u64>());
+    assert_eq!(
+        merged.bsk_bytes_streamed,
+        per.iter().map(|s| s.bsk_bytes_streamed).sum::<u64>()
+    );
+    assert_eq!(
+        merged.latency_samples_ms.len(),
+        n,
+        "merged snapshot carries every shard's raw samples"
+    );
+
+    // The very same artifact costed by the arch model: aggregate measured
+    // counters = per-request sim costs x requests, regardless of shards.
+    let sim = simulate(cluster.plan(), &TaurusConfig::default());
+    assert_eq!(cluster.plan().ks_dedup.after, sim.ks_count, "model costs the deduped KS set");
+    assert_eq!(merged.ks_executed, (n * sim.ks_count) as u64);
+    assert_eq!(merged.pbs_executed, n * sim.pbs_count);
+    cluster.shutdown();
+}

@@ -35,6 +35,7 @@ fn run_requests(backend: BackendKind, workers: usize, n: usize) {
             batch_capacity: 4,
             max_batch_wait: Duration::from_millis(1),
             backend,
+            ..Default::default()
         },
     );
     let mut pending = Vec::new();
@@ -89,6 +90,7 @@ fn single_worker_preserves_order_per_client() {
             batch_capacity: 1,
             max_batch_wait: Duration::from_millis(0),
             backend: BackendKind::Native,
+            ..Default::default()
         },
     );
     let rxs: Vec<_> = (0..5u64)
