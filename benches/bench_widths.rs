@@ -1,0 +1,91 @@
+//! Width sweep over the functional parameter sets {3, 5, 8, 10} bits:
+//! keygen wall clock (monolithic vs 4-worker chunked), key material
+//! bytes, PBS latency, and amortized Fourier-BSK bytes per PBS at batch
+//! 8. Emits `BENCH_widths.json` so CI tracks how the wide-width
+//! functional path costs evolve across PRs (EXPERIMENTS.md §Widths).
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::time::Instant;
+
+use harness::{bench, section};
+use taurus::params::FUNCTIONAL_SETS;
+use taurus::tfhe::keygen::KeygenOptions;
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::tfhe::{make_lut_poly, PbsContext, SecretKeys, ServerKeys};
+use taurus::util::json::{arr, num, obj, s, JsonValue};
+use taurus::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(41);
+    let mut rows: Vec<JsonValue> = Vec::new();
+
+    section("width sweep: keygen + PBS across the functional sets");
+    for p in FUNCTIONAL_SETS {
+        let sk = SecretKeys::generate(p, &mut rng);
+
+        // Keygen is seconds-scale at the wide widths, so time single shots
+        // rather than harness iterations.
+        let t0 = Instant::now();
+        let keys = ServerKeys::generate_seeded(&sk, 7, &KeygenOptions::monolithic());
+        let keygen_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let keys_par = ServerKeys::generate_seeded(&sk, 7, &KeygenOptions::with_workers(4));
+        let keygen_par_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let bsk_bytes = keys.bsk.bytes();
+        let ksk_bytes = keys.ksk.bytes();
+        println!(
+            "{:<8} width {:>2}  keygen {:>9.0} ms (1 worker) {:>9.0} ms (4 workers)   \
+             fourier BSK {:>6.1} MB   KSK {:>6.1} MB",
+            p.name,
+            p.width,
+            keygen_ms,
+            keygen_par_ms,
+            bsk_bytes as f64 / 1e6,
+            ksk_bytes as f64 / 1e6,
+        );
+        drop(keys_par);
+
+        let mut ctx = PbsContext::new(p);
+        let lut = make_lut_poly(p, |m| m);
+        let ct = encrypt_message(3, &sk, &mut rng);
+        let r = bench(&format!("  pbs {} (n={} N={})", p.name, p.n, p.big_n), 0.6, || {
+            std::hint::black_box(ctx.pbs(&ct, &keys, &lut));
+        });
+        let pbs_ms = r.mean_s * 1e3;
+
+        // Amortized BSK traffic at batch 8 (the key-reuse lever the wide
+        // sets lean on hardest — their per-PBS key material is largest).
+        let bsz = 8usize;
+        let cts: Vec<_> =
+            (0..bsz).map(|i| encrypt_message(i as u64 % 8, &sk, &mut rng)).collect();
+        ctx.take_bsk_bytes_streamed();
+        std::hint::black_box(ctx.pbs_batch(&cts, &keys, &lut));
+        let bsk_per_pbs = ctx.take_bsk_bytes_streamed() as f64 / bsz as f64;
+        println!(
+            "      {:>9.1} ms/PBS   BSK/PBS at batch {bsz}: {:>6.1} MB ({:.1}x reuse)",
+            pbs_ms,
+            bsk_per_pbs / 1e6,
+            bsk_bytes as f64 / bsk_per_pbs.max(1.0),
+        );
+
+        rows.push(obj(vec![
+            ("params", s(p.name)),
+            ("width", num(p.width as f64)),
+            ("keygen_ms", num(keygen_ms)),
+            ("keygen_ms_4workers", num(keygen_par_ms)),
+            ("fourier_bsk_bytes", num(bsk_bytes as f64)),
+            ("ksk_bytes", num(ksk_bytes as f64)),
+            ("pbs_ms", num(pbs_ms)),
+            ("bsk_bytes_per_pbs_batch8", num(bsk_per_pbs)),
+        ]));
+    }
+
+    let report = obj(vec![("bench", s("widths")), ("results", arr(rows))]);
+    let path = "BENCH_widths.json";
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -96,7 +96,40 @@ TEST2 = ParamSet(
     glwe_noise=2.0**-45,
 )
 
-ALL = {p.name: p for p in (TEST1, TEST2)}
+# Wide-width functional sets (mirror rust/src/params/mod.rs WIDE8/WIDE10):
+# the paper's headline 8/10-bit widths at TEST-scale security. The gadget
+# keeps two moderate digits — a single 2^23+ digit at N = 16k/32k would
+# push the f64-FFT convolution error (~ n*l*N^2*B^2 * 2^-106 variance) to
+# the decision boundary.
+WIDE8 = ParamSet(
+    name="wide8",
+    n=128,
+    N=16384,
+    k=1,
+    bsk_base_log=12,
+    bsk_level=2,
+    ks_base_log=8,
+    ks_level=3,
+    width=8,
+    lwe_noise=2.0**-30,
+    glwe_noise=2.0**-48,
+)
+
+WIDE10 = ParamSet(
+    name="wide10",
+    n=64,
+    N=32768,
+    k=1,
+    bsk_base_log=13,
+    bsk_level=2,
+    ks_base_log=8,
+    ks_level=3,
+    width=10,
+    lwe_noise=2.0**-32,
+    glwe_noise=2.0**-52,
+)
+
+ALL = {p.name: p for p in (TEST1, TEST2, WIDE8, WIDE10)}
 
 # Parameter sets AOT-compiled into artifacts/ by default. TEST1 is the set
 # the Rust integration tests and the serving example run with end-to-end.

@@ -1,0 +1,349 @@
+//! Width-parametric conformance harness: ONE randomized check driven over
+//! every functional width {3, 5, 8, 10}, proving the whole stack — IR
+//! interpreter, compiled-schedule engine, and sharded cluster — agrees at
+//! the paper's headline widths, not just the narrow TEST sets.
+//!
+//! Per random program the harness asserts:
+//!
+//! 1. **Bitwise agreement** — `Engine::run_plan_batch` decodes to the
+//!    plaintext interpreter's answers, and a 2-shard [`Cluster`] returns
+//!    the *identical ciphertext bits* (same plan + same keys must yield
+//!    the same bits no matter how requests are sharded or batched).
+//! 2. **Measured == modeled counts** — the executor's `ExecStats` and the
+//!    cluster's merged metrics both equal `requests x arch::sim`'s
+//!    KS/PBS costs for the very same compiled plan.
+//! 3. **Noise within model margins** — every output ciphertext's
+//!    decrypted phase error stays inside the `compiler::noise` prediction
+//!    (<= [`NOISE_SIGMA_GATE`] predicted-sigmas, and always inside the
+//!    decision boundary).
+//!
+//! Programs are drawn by [`random_program`] and gated on a predicted
+//! margin of [`MIN_MARGIN_SIGMAS`] so the suite never *knowingly* runs a
+//! program the parameter set cannot support (that rejection path is how
+//! e.g. a bivariate LUT over PBS outputs at width 10 — a genuine
+//! out-of-budget shape — is excluded, mirroring what Concrete's optimizer
+//! would refuse to compile).
+//!
+//! Keys come from [`crate::tfhe::keycache`], so a whole test binary pays
+//! keygen once per width; case counts honor `PROP_CASES`
+//! (`util::prop::cases`).
+
+use std::time::Duration;
+
+use crate::arch::{simulate, TaurusConfig};
+use crate::cluster::{Cluster, ClusterOptions, PlacementPolicy};
+use crate::compiler::{compile, noise, CompileOpts, Engine, NativePbsBackend};
+use crate::coordinator::CoordinatorOptions;
+use crate::ir::builder::ProgramBuilder;
+use crate::ir::{interp, LutTable, Program};
+use crate::params::{self, ParamSet};
+use crate::tfhe::encoding::encode;
+use crate::tfhe::keycache;
+use crate::tfhe::pbs::{decrypt_message, encrypt_message};
+use crate::tfhe::torus::torus_distance;
+use crate::tfhe::LweCiphertext;
+use crate::util::prop;
+use crate::util::rng::Rng;
+
+/// The widths the functional path executes for real (one per
+/// [`params::FUNCTIONAL_SETS`] entry).
+pub const WIDTHS: [usize; 4] = [3, 5, 8, 10];
+
+/// Seed of the shared per-width key-cache entries.
+pub const KEY_SEED: u64 = 0x7A95;
+
+/// Minimum predicted margin (in sigmas) a generated program must have
+/// before it is run. tail(5.5) ~ 2^-25 per PBS — far beyond what a few
+/// hundred CI bootstraps can trip over.
+pub const MIN_MARGIN_SIGMAS: f64 = 5.5;
+
+/// Measured per-output phase error must stay below this many *predicted*
+/// sigmas. tail(7) ~ 1e-12 per sample under a correct model, so a trip
+/// means the `compiler::noise` prediction is materially wrong, not bad
+/// luck.
+pub const NOISE_SIGMA_GATE: f64 = 7.0;
+
+/// Encrypted requests per case (each runs through the plan engine once
+/// and the 2-shard cluster once).
+const REQUESTS: usize = 2;
+
+/// A random LUT over the full padded message space.
+fn rand_table(rng: &mut Rng, width: usize) -> LutTable {
+    let pt = 1u64 << (width + 1);
+    LutTable::new((0..pt).map(|_| rng.below(pt)).collect())
+}
+
+/// Draw a random two-level LUT/linear program at `width`: a linear mix
+/// feeding a LUT layer (with KS-dedup fanout and a bivariate LUT on the
+/// fresh inputs, each half the time), a combining reduction, a dependent
+/// second-level LUT, and a loose linear tail — every primitive kind and
+/// both schedule shapes (fanout + dependent level) in a handful of nodes.
+///
+/// Returns the program and its **input domain**: `2^width` normally, but
+/// `2^(width/2)` when a bivariate LUT was drawn — the bivariate pack
+/// `x * 2^(w/2) + y` is only a semantically valid g(x, y) lookup when
+/// both operands stay below `2^(w/2)` (`ir::interp`'s documented
+/// precondition), so those cases restrict the query range instead of
+/// exercising the aliased-pack degenerate case.
+pub fn random_program(rng: &mut Rng, width: usize) -> (Program, u64) {
+    let mut b = ProgramBuilder::new(format!("conformance-w{width}"), width);
+    let xs = b.inputs(2);
+    let mix = match rng.below(3) {
+        0 => b.add(xs[0], xs[1]),
+        1 => {
+            let w = vec![1, 1 + rng.below(2) as i64];
+            let bias = rng.below(4);
+            b.dot(xs.clone(), w, bias)
+        }
+        _ => {
+            let t = b.mul_plain(xs[0], 1 + rng.below(2) as i64);
+            b.add(t, xs[1])
+        }
+    };
+    let mut mids = vec![b.lut(mix, rand_table(rng, width))];
+    if rng.below(2) == 0 {
+        // Fanout over the same source: the KS-dedup shape.
+        mids.push(b.lut(mix, rand_table(rng, width)));
+    }
+    let mut input_domain = 1u64 << width;
+    if rng.below(2) == 0 {
+        // Bivariate LUT on the *fresh* inputs (a bivariate over PBS
+        // outputs scales noise by 2^(w/2) and is rejected by the margin
+        // gate at the wide widths). Valid packing needs sub-width inputs.
+        mids.push(b.biv_lut(xs[0], xs[1], rand_table(rng, width)));
+        input_domain = 1u64 << (width / 2);
+    }
+    let combined = if mids.len() == 1 {
+        b.add_plain(mids[0], rng.below(4))
+    } else {
+        let w = vec![1i64; mids.len()];
+        b.dot(mids.clone(), w, rng.below(4))
+    };
+    let l2 = b.lut(combined, rand_table(rng, width));
+    let tail = b.add_plain(l2, rng.below(1u64 << width));
+    b.outputs(&[tail, mids[0]]);
+    (b.finish(), input_domain)
+}
+
+/// Draw until the noise model clears [`MIN_MARGIN_SIGMAS`]. Panics after
+/// a bounded number of rejections: on a sane parameter set the gate
+/// rejects only the known-out-of-budget shapes, so exhaustion means the
+/// set itself no longer supports its width. Returns the program, its
+/// noise report, and its valid input domain.
+pub fn random_program_for(rng: &mut Rng, p: &ParamSet) -> (Program, noise::NoiseReport, u64) {
+    for _ in 0..32 {
+        let (prog, input_domain) = random_program(rng, p.width);
+        let report = noise::analyze(&prog, p);
+        if report.margin_sigmas >= MIN_MARGIN_SIGMAS {
+            return (prog, report, input_domain);
+        }
+    }
+    panic!(
+        "parameter set {} cannot support width {} at {} sigma",
+        p.name, p.width, MIN_MARGIN_SIGMAS
+    );
+}
+
+/// What one width's conformance run measured (consumed by the test for
+/// reporting; the run itself panics on any violation).
+#[derive(Debug, Clone)]
+pub struct WidthReport {
+    pub width: usize,
+    pub param_name: &'static str,
+    pub cases: u64,
+    /// Smallest predicted margin among the programs actually run.
+    pub min_predicted_margin_sigmas: f64,
+    /// Largest measured output error in units of the predicted sigma.
+    pub max_measured_err_sigmas: f64,
+}
+
+/// Per-shard coordinator config for the 2-shard conformance cluster.
+fn shard_options() -> CoordinatorOptions {
+    CoordinatorOptions {
+        workers: 1,
+        batch_capacity: REQUESTS,
+        max_batch_wait: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+/// Run the conformance property for one width. `default_cases` is the
+/// case count when `PROP_CASES` is unset.
+pub fn run_width(width: usize, default_cases: u64) -> WidthReport {
+    let p = params::select_for_width(width);
+    assert_eq!(p.width, width, "conformance widths must map to exact-width sets");
+    let keys = keycache::get(p, KEY_SEED);
+    let cfg = TaurusConfig::default();
+    let mut min_margin = f64::INFINITY;
+    let mut max_err_sigmas = 0.0f64;
+    let cases = prop::cases(default_cases);
+    prop::check(&format!("conformance_w{width}"), default_cases, |rng| {
+        let (prog, report, input_domain) = random_program_for(rng, p);
+        min_margin = min_margin.min(report.margin_sigmas);
+        let plan = compile(&prog, p, CompileOpts::default());
+        let sim = simulate(&plan, &cfg);
+
+        // Encrypted requests + the plaintext oracle (inputs drawn from
+        // the program's valid domain — sub-width when it packs a
+        // bivariate LUT).
+        let queries: Vec<Vec<u64>> = (0..REQUESTS)
+            .map(|_| (0..2).map(|_| rng.below(input_domain)).collect())
+            .collect();
+        let expected: Vec<Vec<u64>> = queries.iter().map(|q| interp::eval(&prog, q)).collect();
+        let batch: Vec<Vec<LweCiphertext>> = queries
+            .iter()
+            .map(|q| q.iter().map(|&m| encrypt_message(m, &keys.sk, rng)).collect())
+            .collect();
+
+        // --- Path 1: the schedule-driven engine over the compiled plan.
+        let mut eng = Engine::new(NativePbsBackend::new(&keys.server));
+        let plan_outs = eng.run_plan_batch(&plan, &batch);
+        for (q, (outs, exp)) in plan_outs.iter().zip(&expected).enumerate() {
+            let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &keys.sk)).collect();
+            if got != *exp {
+                return Err(format!("plan engine disagrees with interp on request {q}: {got:?} vs {exp:?}"));
+            }
+        }
+        // Measured counts == the arch model's costs for the same plan.
+        let st = eng.take_exec_stats();
+        if st.ks_ops != (REQUESTS * sim.ks_count) as u64 {
+            return Err(format!(
+                "measured KS {} != {} requests x sim {}",
+                st.ks_ops, REQUESTS, sim.ks_count
+            ));
+        }
+        if st.pbs_ops != (REQUESTS * sim.pbs_count) as u64 {
+            return Err(format!(
+                "measured PBS {} != {} requests x sim {}",
+                st.pbs_ops, REQUESTS, sim.pbs_count
+            ));
+        }
+
+        // --- Noise: every output's decrypted phase error must sit inside
+        // the model's prediction.
+        let pred_std = report.worst_output_std.max(1e-12);
+        for (q, (outs, exp)) in plan_outs.iter().zip(&expected).enumerate() {
+            for (j, (ct, &m)) in outs.iter().zip(exp.iter()).enumerate() {
+                let phase = ct.decrypt_phase(keys.sk.long_lwe());
+                let err = torus_distance(phase, encode(m, p));
+                if err > report.boundary {
+                    return Err(format!(
+                        "request {q} output {j}: error {err:.3e} past boundary {:.3e}",
+                        report.boundary
+                    ));
+                }
+                let sigmas = err / pred_std;
+                max_err_sigmas = max_err_sigmas.max(sigmas);
+                if sigmas > NOISE_SIGMA_GATE {
+                    return Err(format!(
+                        "request {q} output {j}: error {err:.3e} = {sigmas:.1} predicted sigmas \
+                         (model std {pred_std:.3e}, gate {NOISE_SIGMA_GATE})"
+                    ));
+                }
+            }
+        }
+
+        // --- Path 2: a 2-shard cluster over the same keys must return the
+        // identical ciphertext bits, and its merged metrics must match the
+        // model too.
+        let mut cluster = Cluster::start(
+            prog.clone(),
+            keys.server.clone(),
+            ClusterOptions {
+                shards: 2,
+                policy: PlacementPolicy::RoundRobin,
+                queue_depth: None,
+                coordinator: shard_options(),
+            },
+        );
+        let pend: Vec<_> = batch
+            .iter()
+            .enumerate()
+            .map(|(i, cts)| cluster.submit(i as u64, cts.clone()))
+            .collect::<Result<_, _>>()
+            .map_err(|e| format!("cluster submit failed: {e}"))?;
+        let cluster_outs: Vec<Vec<LweCiphertext>> = pend
+            .iter()
+            .map(|r| r.recv())
+            .collect::<Result<_, _>>()
+            .map_err(|_| "cluster response dropped".to_string())?;
+        drop(pend);
+        if cluster_outs != plan_outs {
+            return Err("cluster output bits differ from the plan engine's".into());
+        }
+        let merged = cluster.snapshot();
+        cluster.shutdown();
+        if merged.requests != REQUESTS {
+            return Err(format!("cluster served {} of {REQUESTS} requests", merged.requests));
+        }
+        if merged.ks_executed != (REQUESTS * sim.ks_count) as u64
+            || merged.pbs_executed != REQUESTS * sim.pbs_count
+        {
+            return Err(format!(
+                "cluster counters (ks {}, pbs {}) != {} requests x sim (ks {}, pbs {})",
+                merged.ks_executed, merged.pbs_executed, REQUESTS, sim.ks_count, sim.pbs_count
+            ));
+        }
+        Ok(())
+    });
+    WidthReport {
+        width,
+        param_name: p.name,
+        cases,
+        min_predicted_margin_sigmas: min_margin,
+        max_measured_err_sigmas: max_err_sigmas,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn widths_match_functional_sets() {
+        assert_eq!(WIDTHS.map(|w| params::select_for_width(w).name), params::FUNCTIONAL_SETS.map(|p| p.name));
+    }
+
+    #[test]
+    fn random_programs_have_conformant_shape() {
+        let mut rng = Rng::new(5);
+        for width in WIDTHS {
+            let p = params::select_for_width(width);
+            for _ in 0..10 {
+                let (prog, report, input_domain) = random_program_for(&mut rng, p);
+                prog.validate().unwrap();
+                assert_eq!(prog.width, width);
+                assert_eq!(prog.input_count(), 2);
+                assert!(prog.pbs_count() >= 2, "at least one LUT per level");
+                assert!(prog.pbs_depth() >= 2, "two dependent schedule levels");
+                assert!(report.margin_sigmas >= MIN_MARGIN_SIGMAS);
+                let has_biv =
+                    prog.nodes.iter().any(|n| matches!(n, crate::ir::Op::BivLut { .. }));
+                let expect_domain = if has_biv { 1u64 << (width / 2) } else { 1u64 << width };
+                assert_eq!(input_domain, expect_domain, "bivariate cases restrict inputs");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_sets_clear_the_margin_gate_on_a_lut_chain() {
+        // The static guarantee behind the whole suite: every functional
+        // set supports its own width with room to spare on the canonical
+        // chain shape (so `random_program_for` cannot exhaust its draws).
+        for p in params::FUNCTIONAL_SETS {
+            let mut b = ProgramBuilder::new("chain", p.width);
+            let mut x = b.input();
+            for _ in 0..3 {
+                x = b.lut_fn(x, |m| m);
+            }
+            b.output(x);
+            let report = noise::analyze(&b.finish(), p);
+            assert!(
+                report.margin_sigmas >= MIN_MARGIN_SIGMAS + 0.5,
+                "{}: margin {} too tight for its own width",
+                p.name,
+                report.margin_sigmas
+            );
+        }
+    }
+}

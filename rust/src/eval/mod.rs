@@ -3,6 +3,8 @@
 //! mirror the paper's layout; `run_all` renders them to stdout and writes
 //! CSVs under `results/`. EXPERIMENTS.md records paper-vs-measured.
 
+pub mod conformance;
+
 use std::path::Path;
 
 use crate::arch::{area, bru, memory, sim, xpu, SyncStrategy, TaurusConfig};

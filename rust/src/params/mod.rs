@@ -216,15 +216,72 @@ pub const XGBOOST: ParamSet = ParamSet {
     glwe_noise: 2.2e-19,
 };
 
+// ---------------------------------------------------------------------------
+// Wide-width functional sets: the paper's headline widths (8 and 10 bits)
+// sized so the native backend can actually run them in TEST-scale CI.
+//
+// Like TEST1/TEST2 these are *functional* sets, not 128-bit-secure ones:
+// the noise follows the security-frontier shape (wider width -> smaller
+// relative noise, Fig. 6 / `security::width_frontier_point`) but n is kept
+// small so a PBS stays sub-second. Sizing is driven by the same variance
+// model `compiler::noise` checks at compile time: the binding term is the
+// mod-switch floor sqrt((n+1)/12)/2N, which must clear the decision
+// boundary 2^-(width+2) by >= ~6.5 sigma. The gadget keeps TEST2's
+// moderate-base/two-level shape (2^12..2^13, level 2) rather than a
+// single 2^23+ digit: the f64-FFT convolution noise of the external
+// product grows with N^2 * B^2 (~ n*l*N^2*B^2 * 2^-106 variance), and at
+// N = 16k/32k a single wide digit would put that error at the decision
+// boundary itself, while two 12/13-bit digits keep it below 2^-23.
+// ---------------------------------------------------------------------------
+
+/// 8-bit functional set: boundary 2^-10, mod-switch floor ~1.0e-4, ~9.4
+/// sigma on a LUT chain with KS + gadget noise included.
+pub const WIDE8: ParamSet = ParamSet {
+    name: "wide8",
+    n: 128,
+    big_n: 16384,
+    k: 1,
+    bsk_base_log: 12,
+    bsk_level: 2,
+    ks_base_log: 8,
+    ks_level: 3,
+    width: 8,
+    lwe_noise: 9.313225746154785e-10,  // 2^-30
+    glwe_noise: 3.552713678800501e-15, // 2^-48
+};
+
+/// 10-bit functional set: boundary 2^-12, mod-switch floor ~3.6e-5 (~6.7
+/// sigma on a LUT chain — the tightest of the functional sets, mirroring
+/// how the real frontier pinches at width 10).
+pub const WIDE10: ParamSet = ParamSet {
+    name: "wide10",
+    n: 64,
+    big_n: 32768,
+    k: 1,
+    bsk_base_log: 13,
+    bsk_level: 2,
+    ks_base_log: 8,
+    ks_level: 3,
+    width: 10,
+    lwe_noise: 2.3283064365386963e-10, // 2^-32
+    glwe_noise: 2.220446049250313e-16, // 2^-52
+};
+
 /// All paper evaluation sets (Table II order).
 pub const PAPER_SETS: [&ParamSet; 7] =
     [&CNN20, &CNN50, &DECISION_TREE, &GPT2, &GPT2_12HEAD, &KNN, &XGBOOST];
+
+/// Functional sets the native backend runs end-to-end in CI, one per
+/// supported test width (the axis `eval::conformance` sweeps).
+pub const FUNCTIONAL_SETS: [&ParamSet; 4] = [&TEST1, &TEST2, &WIDE8, &WIDE10];
 
 /// Look up any named parameter set.
 pub fn by_name(name: &str) -> Option<&'static ParamSet> {
     match name {
         "test1" => Some(&TEST1),
         "test2" => Some(&TEST2),
+        "wide8" => Some(&WIDE8),
+        "wide10" => Some(&WIDE10),
         "cnn20" => Some(&CNN20),
         "cnn50" => Some(&CNN50),
         "decision_tree" => Some(&DECISION_TREE),
@@ -238,15 +295,20 @@ pub fn by_name(name: &str) -> Option<&'static ParamSet> {
 
 /// Select a parameter set for a program bit width (compiler entry point).
 /// Mirrors the paper's observation that wider widths force larger (n, N)
-/// along the 128-bit frontier (Fig. 6).
+/// along the 128-bit frontier (Fig. 6). Widths 8-10 route to the WIDE
+/// functional sets so the selection is backed by the executable
+/// conformance suite (widths 6-7 still map to the Table II cost-model
+/// sets); the paper tops out at 10 bits, so wider requests are an error
+/// rather than a silent downgrade.
 pub fn select_for_width(width: usize) -> &'static ParamSet {
     match width {
         0..=3 => &TEST1, // unit-test scale
         4..=5 => &TEST2,
         6 => &GPT2,
         7 => &GPT2_12HEAD,
-        8 => &XGBOOST,
-        _ => &DECISION_TREE,
+        8 => &WIDE8,
+        9 | 10 => &WIDE10,
+        _ => panic!("no parameter set supports width {width} (Taurus supports up to 10 bits)"),
     }
 }
 
@@ -279,7 +341,64 @@ mod tests {
     #[test]
     fn lookup_by_name() {
         assert_eq!(by_name("gpt2").unwrap().n, 1003);
+        assert_eq!(by_name("wide8").unwrap().width, 8);
+        assert_eq!(by_name("wide10").unwrap().width, 10);
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn width_to_set_table_is_pinned() {
+        // The full routing table, width by width. 8/9/10 must land on the
+        // executable WIDE sets (they used to fall through to the
+        // simulation-only xgboost/decision_tree sets).
+        let expect: [(usize, &str); 11] = [
+            (0, "test1"),
+            (1, "test1"),
+            (2, "test1"),
+            (3, "test1"),
+            (4, "test2"),
+            (5, "test2"),
+            (6, "gpt2"),
+            (7, "gpt2_12head"),
+            (8, "wide8"),
+            (9, "wide10"),
+            (10, "wide10"),
+        ];
+        for (w, name) in expect {
+            assert_eq!(select_for_width(w).name, name, "width {w}");
+        }
+        // Every functionally-backed route hands out a set that can hold
+        // its width. (Width 7 is the pinned exception: it maps to the
+        // Table II cost-model set gpt2_12head, whose own width is 6 —
+        // nothing executable exists between the 5- and 8-bit sets.)
+        for w in [0usize, 1, 2, 3, 4, 5, 6, 8, 9, 10] {
+            assert!(select_for_width(w).width >= w, "width {w} set too narrow");
+        }
+        assert_eq!(select_for_width(7).width, 6, "pinned cost-model quirk");
+    }
+
+    #[test]
+    #[should_panic(expected = "up to 10 bits")]
+    fn width_11_is_rejected() {
+        select_for_width(11);
+    }
+
+    #[test]
+    fn functional_sets_cover_the_conformance_widths() {
+        assert_eq!(
+            FUNCTIONAL_SETS.map(|p| p.width),
+            [3, 5, 8, 10],
+            "one executable set per conformance width"
+        );
+        for p in FUNCTIONAL_SETS {
+            assert!(p.big_n.is_power_of_two());
+            // The LUT needs at least one polynomial slot per message value.
+            assert!(2 * p.big_n >= p.plaintext_modulus() as usize, "{}", p.name);
+            assert_eq!(by_name(p.name), Some(p));
+        }
+        // Wider width -> tighter relative noise, per the frontier shape.
+        assert!(WIDE8.glwe_noise < TEST2.glwe_noise);
+        assert!(WIDE10.glwe_noise < WIDE8.glwe_noise);
     }
 
     #[test]

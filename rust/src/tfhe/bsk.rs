@@ -6,6 +6,7 @@
 use super::fft::{C64, FftPlan};
 use super::ggsw::FourierGgsw;
 use super::glwe::GlweCiphertext;
+use super::keygen::{self, KeygenOptions};
 use super::torus::SecretKeys;
 use crate::util::rng::Rng;
 
@@ -61,6 +62,29 @@ impl FourierBsk {
         Self { ggsw }
     }
 
+    /// Seed-deterministic chunked generation (`tfhe::keygen`): GGSW i
+    /// draws from its own forked RNG, chunks of GGSWs are generated ->
+    /// Fourier-transformed -> dropped (torus-domain material never exceeds
+    /// one GLWE row), and the optional worker split cannot change the
+    /// output bits. This is what makes the WIDE8/WIDE10 keys affordable
+    /// and cacheable in CI.
+    pub fn generate_seeded(
+        sk: &SecretKeys,
+        seed: u64,
+        plan: &FftPlan,
+        opts: &KeygenOptions,
+    ) -> Self {
+        let ggsw = keygen::generate_chunks(sk.params.n, opts, |range| {
+            range
+                .map(|i| {
+                    let mut rng = keygen::unit_rng(seed, keygen::DOMAIN_BSK, i);
+                    encrypt_ggsw(sk.lwe[i], sk, &mut rng, plan)
+                })
+                .collect()
+        });
+        Self { ggsw }
+    }
+
     /// Flatten to (re, im) f64 arrays with shape [n, rows, k+1, N/2] — the
     /// exact input layout of the `blind_rotate` AOT artifact. The native
     /// pipeline keeps Fourier rows in bit-reversed order (no-permutation
@@ -93,6 +117,24 @@ impl FourierBsk {
 mod tests {
     use super::*;
     use crate::params::TEST1;
+
+    use super::super::keygen::fourier_bsk_bitwise_eq as bsk_bits_eq;
+
+    #[test]
+    fn seeded_bsk_is_schedule_invariant() {
+        let mut rng = Rng::new(21);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let plan = FftPlan::new(TEST1.big_n);
+        let mono = FourierBsk::generate_seeded(&sk, 77, &plan, &KeygenOptions::monolithic());
+        assert_eq!(mono.ggsw.len(), TEST1.n);
+        let chunked =
+            FourierBsk::generate_seeded(&sk, 77, &plan, &KeygenOptions { chunk: 5, workers: 1 });
+        let parallel = FourierBsk::generate_seeded(&sk, 77, &plan, &KeygenOptions::with_workers(3));
+        assert!(bsk_bits_eq(&mono, &chunked), "chunking must not change bits");
+        assert!(bsk_bits_eq(&mono, &parallel), "worker split must not change bits");
+        let reseeded = FourierBsk::generate_seeded(&sk, 78, &plan, &KeygenOptions::monolithic());
+        assert!(!bsk_bits_eq(&mono, &reseeded), "different seed -> different key");
+    }
 
     #[test]
     fn bsk_shape_and_flat_layout() {

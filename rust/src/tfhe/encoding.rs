@@ -61,12 +61,94 @@ pub fn bivariate_scale(p: &ParamSet) -> u64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::params::TEST1;
+    use crate::params::{ParamSet, TEST1, TEST2, WIDE10, WIDE8};
+
+    /// TEST1 with the width overridden — encode/decode depend only on
+    /// `width`, so this covers widths without a dedicated set (width 1).
+    fn at_width(width: usize) -> ParamSet {
+        ParamSet { width, ..TEST1 }
+    }
+
+    /// The boundary widths: the narrowest useful width, the old
+    /// functional ceiling, and both wide sets.
+    fn boundary_sets() -> [ParamSet; 4] {
+        [at_width(1), TEST2, WIDE8, WIDE10]
+    }
 
     #[test]
     fn encode_decode_roundtrip() {
         for m in 0..TEST1.plaintext_modulus() {
             assert_eq!(decode(encode(m, &TEST1), &TEST1), m);
+        }
+    }
+
+    #[test]
+    fn roundtrip_at_width_boundaries() {
+        // Exhaustive over the full padded message space at widths
+        // {1, 5, 8, 10} (2048 values at width 10).
+        for p in boundary_sets() {
+            for m in 0..p.plaintext_modulus() {
+                assert_eq!(decode(encode(m, &p), &p), m, "width {} m={m}", p.width);
+            }
+        }
+    }
+
+    #[test]
+    fn delta_and_plaintext_modulus_extremes() {
+        // Pinned values at both ends of the supported range...
+        let w1 = at_width(1);
+        assert_eq!(w1.plaintext_modulus(), 4);
+        assert_eq!(w1.delta(), 1u64 << 62);
+        assert_eq!(WIDE10.plaintext_modulus(), 2048);
+        assert_eq!(WIDE10.delta(), 1u64 << 53);
+        assert_eq!(WIDE8.plaintext_modulus(), 512);
+        assert_eq!(WIDE8.delta(), 1u64 << 55);
+        // ...and the invariant that makes wrapping arithmetic work: the
+        // padded message space exactly tiles the torus.
+        for p in boundary_sets() {
+            assert_eq!(
+                (p.delta() as u128) * (p.plaintext_modulus() as u128),
+                1u128 << 64,
+                "width {}",
+                p.width
+            );
+        }
+    }
+
+    #[test]
+    fn padding_bit_overflow_wraps_modulo_padded_space() {
+        for p in boundary_sets() {
+            let pt = p.plaintext_modulus();
+            let top = pt / 2; // first value with the padding bit set
+            // Values past the padded space wrap (encode reduces mod P)...
+            assert_eq!(encode(pt, &p), 0, "width {}", p.width);
+            assert_eq!(encode(pt + 3, &p), encode(3, &p));
+            // ...while padding-bit-set values round-trip losslessly (the
+            // negacyclic LUT semantics of `ir::interp` rely on this).
+            assert_eq!(encode(top, &p), 1u64 << 63, "width {}: m=P/2 is torus 1/2", p.width);
+            assert_eq!(decode(encode(top, &p), &p), top);
+            assert_eq!(decode(encode(pt - 1, &p), &p), pt - 1);
+        }
+    }
+
+    #[test]
+    fn decode_rounding_boundary_is_half_delta() {
+        // decode() rounds to the nearest slot: exactly half a slot above
+        // encode(m) tips to m+1, one torus tick less stays at m.
+        for p in boundary_sets() {
+            let half = p.delta() / 2;
+            for m in [0u64, 1, p.plaintext_modulus() / 2, p.plaintext_modulus() - 1] {
+                let enc = encode(m, &p);
+                let up = (m + 1) % p.plaintext_modulus();
+                assert_eq!(decode(enc.wrapping_add(half), &p), up, "width {} m={m}", p.width);
+                assert_eq!(decode(enc.wrapping_add(half - 1), &p), m, "width {} m={m}", p.width);
+                assert_eq!(
+                    decode(enc.wrapping_sub(half), &p),
+                    m,
+                    "width {} m={m}: -half rounds back up",
+                    p.width
+                );
+            }
         }
     }
 

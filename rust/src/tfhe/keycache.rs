@@ -1,0 +1,87 @@
+//! Process-wide cache of deterministic seeded key sets.
+//!
+//! Wide-width keygen is the dominant fixed cost of the conformance suite
+//! (a WIDE10 BSK+KSK is ~100 MB of material behind thousands of FFTs).
+//! Because `ServerKeys::generate_seeded` is a pure function of
+//! `(params, seed)` — chunking and worker count cannot change the bits
+//! (`tfhe::keygen`) — the suite can safely share ONE key set per
+//! `(parameter set, seed)` across every test in the process and pay
+//! keygen once per width.
+//!
+//! Entries are generated under a per-entry `OnceLock`, so two tests
+//! racing on the same width block on one generation while different
+//! widths generate concurrently.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::keygen::{fork_seed, KeygenOptions};
+use super::pbs::ServerKeys;
+use super::torus::SecretKeys;
+use crate::params::ParamSet;
+use crate::util::rng::Rng;
+
+/// One cached client+server key set.
+pub struct CachedKeys {
+    pub sk: SecretKeys,
+    pub server: Arc<ServerKeys>,
+}
+
+type Slot = Arc<OnceLock<Arc<CachedKeys>>>;
+
+fn cache() -> &'static Mutex<HashMap<(String, u64), Slot>> {
+    static CACHE: OnceLock<Mutex<HashMap<(String, u64), Slot>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Seed of the secret-key RNG stream for a cache seed (domain-separated
+/// from the keygen streams so `sk` and `ek` randomness never overlap).
+pub fn secret_seed(seed: u64) -> u64 {
+    fork_seed(seed, 0x5EC2_E7D0, 0)
+}
+
+/// Seed handed to [`ServerKeys::generate_seeded`] for a cache seed —
+/// exposed so determinism tests can regenerate a cached entry through a
+/// different keygen configuration and compare bitwise.
+pub fn server_seed(seed: u64) -> u64 {
+    fork_seed(seed, 0x5EC2_E7D1, 0)
+}
+
+/// Fetch (generating on first use) the key set for `(p, seed)`. Returns a
+/// shared handle; all callers see the identical keys, so ciphertexts
+/// produced by one test decrypt under another's copy.
+pub fn get(p: &ParamSet, seed: u64) -> Arc<CachedKeys> {
+    let slot: Slot = {
+        let mut map = cache().lock().expect("key cache poisoned");
+        map.entry((p.name.to_string(), seed)).or_default().clone()
+    };
+    slot.get_or_init(|| {
+        let mut rng = Rng::new(secret_seed(seed));
+        let sk = SecretKeys::generate(p, &mut rng);
+        // Spread keygen over a few workers; by construction the worker
+        // count does not change the generated bits.
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
+        let server = ServerKeys::generate_seeded(&sk, server_seed(seed), &KeygenOptions::with_workers(workers));
+        Arc::new(CachedKeys { sk, server: Arc::new(server) })
+    })
+    .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+
+    #[test]
+    fn cache_returns_one_shared_instance() {
+        let a = get(&TEST1, 11);
+        let b = get(&TEST1, 11);
+        assert!(Arc::ptr_eq(&a, &b), "same (params, seed) -> same entry");
+        let c = get(&TEST1, 12);
+        assert!(!Arc::ptr_eq(&a, &c), "different seed -> different keys");
+        // Cached keys are functional: encrypt/decrypt round-trips.
+        let mut rng = Rng::new(3);
+        let ct = super::super::pbs::encrypt_message(5, &a.sk, &mut rng);
+        assert_eq!(super::super::pbs::decrypt_message(&ct, &b.sk), 5);
+    }
+}

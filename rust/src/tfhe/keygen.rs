@@ -1,0 +1,193 @@
+//! Chunked, seed-deterministic server-key generation.
+//!
+//! At the wide widths (`params::WIDE8`/`WIDE10`) key material is the cost
+//! that used to keep the functional path stuck at width 5: a monolithic
+//! `FourierBsk::generate` walks n GGSW encryptions single-threaded, and a
+//! 10-bit KSK is tens of megabytes of LWE rows. This module makes keygen
+//! affordable without giving up reproducibility:
+//!
+//! * **Row streaming** — each GGSW row is encrypted in the torus domain,
+//!   Fourier-transformed, and dropped immediately (only the planar
+//!   `re[]`/`im[]` output is retained), so transient torus-domain material
+//!   never exceeds one GLWE row regardless of key size.
+//! * **Chunking** — the key is produced in chunks of
+//!   [`KeygenOptions::chunk`] units (GGSWs for the BSK, long-key rows for
+//!   the KSK). The chunk is the scheduling unit of the worker split and
+//!   the granularity at which finished material lands in the output.
+//! * **Per-unit RNG forking** — unit i draws from `Rng::new(mix(seed, i))`
+//!   rather than one shared stream. Chunk size and worker count therefore
+//!   *cannot* change a single bit of the key: monolithic, chunked, and
+//!   N-worker generation are bitwise identical (regression-tested per
+//!   width in `rust/tests/conformance_widths.rs`).
+//! * **Rayon-free workers** — the split reuses the coordinator's plumbing
+//!   style (`std::thread` + `mpsc`, see `coordinator::server`): workers
+//!   claim chunk indices from an atomic counter and send finished chunks
+//!   back over a channel; the parent reassembles them by index.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+
+use super::pbs::ServerKeys;
+use crate::util::rng::Rng;
+
+/// How key material is produced. The options change scheduling and peak
+/// transient memory only — never the generated bits.
+#[derive(Debug, Clone)]
+pub struct KeygenOptions {
+    /// Units (GGSWs / KSK long-rows) generated per chunk.
+    pub chunk: usize,
+    /// Worker threads; 1 = generate on the calling thread.
+    pub workers: usize,
+}
+
+impl Default for KeygenOptions {
+    fn default() -> Self {
+        Self { chunk: 16, workers: 1 }
+    }
+}
+
+impl KeygenOptions {
+    /// The monolithic path: one chunk, calling thread — the baseline the
+    /// determinism regression compares every other configuration against.
+    pub fn monolithic() -> Self {
+        Self { chunk: usize::MAX, workers: 1 }
+    }
+
+    /// Chunked with `workers` generation threads.
+    pub fn with_workers(workers: usize) -> Self {
+        Self { workers: workers.max(1), ..Self::default() }
+    }
+}
+
+/// Domain-separated seed mixing (SplitMix64 finalizer): the child seed for
+/// unit `index` of stream `domain` under a master `seed`. Every keygen
+/// unit and every key component gets an independent stream, which is what
+/// makes the output independent of scheduling.
+pub fn fork_seed(seed: u64, domain: u64, index: u64) -> u64 {
+    let mut z = seed ^ domain.rotate_left(32) ^ index.wrapping_mul(0x9e3779b97f4a7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+    z ^ (z >> 31)
+}
+
+/// Stream tags for [`fork_seed`] (arbitrary distinct constants).
+pub const DOMAIN_BSK: u64 = 0xB5C0_17C4;
+pub const DOMAIN_KSK: u64 = 0x75C8_3D21;
+
+/// Per-unit RNG for keygen unit `index` of stream `domain`.
+pub(crate) fn unit_rng(seed: u64, domain: u64, index: usize) -> Rng {
+    Rng::new(fork_seed(seed, domain, index as u64))
+}
+
+/// Produce `total` units through `gen` chunk by chunk, optionally split
+/// over worker threads. `gen` receives a unit index range and returns that
+/// chunk's units in order; results are reassembled by chunk index, so the
+/// output is identical for every (chunk, workers) configuration as long as
+/// `gen` itself only depends on the unit index (per-unit RNG forking).
+pub(crate) fn generate_chunks<T, F>(total: usize, opts: &KeygenOptions, gen: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> Vec<T> + Sync,
+{
+    let chunk = opts.chunk.clamp(1, total.max(1));
+    let n_chunks = total.div_ceil(chunk).max(1);
+    let chunk_range = |c: usize| c * chunk..((c + 1) * chunk).min(total);
+    if opts.workers <= 1 || n_chunks == 1 {
+        // Streaming but sequential: one chunk of material in flight.
+        let mut out = Vec::with_capacity(total);
+        for c in 0..n_chunks {
+            out.extend(gen(chunk_range(c)));
+        }
+        return out;
+    }
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = channel::<(usize, Vec<T>)>();
+    let mut slots: Vec<Option<Vec<T>>> = std::iter::repeat_with(|| None).take(n_chunks).collect();
+    std::thread::scope(|s| {
+        for _ in 0..opts.workers.min(n_chunks) {
+            let tx = tx.clone();
+            let next = &next;
+            let gen = &gen;
+            s.spawn(move || {
+                loop {
+                    let c = next.fetch_add(1, Ordering::Relaxed);
+                    if c >= n_chunks {
+                        break;
+                    }
+                    if tx.send((c, gen(chunk_range(c)))).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx);
+        for (c, data) in rx {
+            slots[c] = Some(data);
+        }
+    });
+    let mut out = Vec::with_capacity(total);
+    for s in slots {
+        out.extend(s.expect("worker produced every chunk"));
+    }
+    out
+}
+
+/// Bitwise equality of two Fourier BSKs (f64 planes compared by bit
+/// pattern, so the check is exact and NaN-safe).
+pub fn fourier_bsk_bitwise_eq(a: &super::bsk::FourierBsk, b: &super::bsk::FourierBsk) -> bool {
+    a.ggsw.len() == b.ggsw.len()
+        && a.ggsw.iter().zip(&b.ggsw).all(|(x, y)| {
+            (x.rows, x.k1, x.nh) == (y.rows, y.k1, y.nh)
+                && x.re.len() == y.re.len()
+                && x.im.len() == y.im.len()
+                && x.re.iter().zip(&y.re).all(|(p, q)| p.to_bits() == q.to_bits())
+                && x.im.iter().zip(&y.im).all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+/// Bitwise equality of two server-key sets. This is the determinism
+/// oracle: seeded chunked/monolithic/N-worker generation must agree.
+pub fn server_keys_bitwise_eq(a: &ServerKeys, b: &ServerKeys) -> bool {
+    a.params == b.params
+        && a.ksk.data == b.ksk.data
+        && (a.ksk.long_dim, a.ksk.level, a.ksk.short_len)
+            == (b.ksk.long_dim, b.ksk.level, b.ksk.short_len)
+        && fourier_bsk_bitwise_eq(&a.bsk, &b.bsk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fork_seed_separates_domains_and_indices() {
+        let s = 42u64;
+        assert_ne!(fork_seed(s, DOMAIN_BSK, 0), fork_seed(s, DOMAIN_KSK, 0));
+        assert_ne!(fork_seed(s, DOMAIN_BSK, 0), fork_seed(s, DOMAIN_BSK, 1));
+        assert_eq!(fork_seed(s, DOMAIN_BSK, 7), fork_seed(s, DOMAIN_BSK, 7));
+        assert_ne!(fork_seed(s, DOMAIN_BSK, 0), fork_seed(s + 1, DOMAIN_BSK, 0));
+    }
+
+    #[test]
+    fn generate_chunks_is_schedule_invariant() {
+        // The per-index generator makes output depend only on the index;
+        // every (chunk, workers) combination must produce the same vector.
+        let gen = |r: std::ops::Range<usize>| -> Vec<u64> {
+            r.map(|i| unit_rng(9, DOMAIN_BSK, i).next_u64()).collect()
+        };
+        let total = 37;
+        let baseline = generate_chunks(total, &KeygenOptions::monolithic(), gen);
+        assert_eq!(baseline.len(), total);
+        for (chunk, workers) in [(1, 1), (5, 1), (5, 3), (64, 4), (7, 8)] {
+            let got = generate_chunks(total, &KeygenOptions { chunk, workers }, gen);
+            assert_eq!(got, baseline, "chunk={chunk} workers={workers}");
+        }
+    }
+
+    #[test]
+    fn generate_chunks_handles_empty() {
+        let gen = |r: std::ops::Range<usize>| -> Vec<u64> { r.map(|i| i as u64).collect() };
+        assert!(generate_chunks(0, &KeygenOptions::default(), gen).is_empty());
+        assert!(generate_chunks(0, &KeygenOptions::with_workers(4), gen).is_empty());
+    }
+}

@@ -5,6 +5,7 @@
 //! computes out = (0, b) - sum_ij dec_j(a_i) * KSK[i][j].
 
 use super::decomp::decompose_strided;
+use super::keygen::{self, KeygenOptions};
 use super::lwe::LweCiphertext;
 use super::torus::SecretKeys;
 use crate::params::ParamSet;
@@ -33,6 +34,33 @@ impl Ksk {
                 data[off..off + short_len].copy_from_slice(&ct.data);
             }
         }
+        Self { data, long_dim, level, short_len }
+    }
+
+    /// Seed-deterministic chunked generation (`tfhe::keygen`): long-key
+    /// row i (its `ks_level` LWE encryptions) draws from its own forked
+    /// RNG and rows are streamed into the flat key in chunks, optionally
+    /// from worker threads — the KSK for a 10-bit set is tens of MB, and
+    /// this keeps its generation both parallel and bit-reproducible.
+    pub fn generate_seeded(sk: &SecretKeys, seed: u64, opts: &KeygenOptions) -> Self {
+        let p = &sk.params;
+        let (long_dim, level, short_len) = (p.long_dim(), p.ks_level, p.n + 1);
+        // The chunk generator emits the chunk's rows as flat torus words;
+        // index-ordered reassembly concatenates them into the key layout.
+        let data = keygen::generate_chunks(long_dim, opts, |range| {
+            let mut out = Vec::with_capacity(range.len() * level * short_len);
+            for i in range {
+                let mut rng = keygen::unit_rng(seed, keygen::DOMAIN_KSK, i);
+                for j in 0..level {
+                    let w = (64 - p.ks_base_log * (j + 1)) as u32;
+                    let msg = sk.long_lwe()[i].wrapping_shl(w);
+                    let ct = LweCiphertext::encrypt(msg, &sk.lwe, p.lwe_noise, &mut rng);
+                    out.extend_from_slice(&ct.data);
+                }
+            }
+            out
+        });
+        debug_assert_eq!(data.len(), long_dim * level * short_len);
         Self { data, long_dim, level, short_len }
     }
 
@@ -93,6 +121,24 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn seeded_ksk_is_schedule_invariant_and_functional() {
+        let mut rng = Rng::new(23);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let mono = Ksk::generate_seeded(&sk, 99, &KeygenOptions::monolithic());
+        assert_eq!(mono.data.len(), TEST1.long_dim() * TEST1.ks_level * (TEST1.n + 1));
+        let chunked = Ksk::generate_seeded(&sk, 99, &KeygenOptions { chunk: 37, workers: 1 });
+        let parallel = Ksk::generate_seeded(&sk, 99, &KeygenOptions::with_workers(4));
+        assert_eq!(mono.data, chunked.data, "chunking must not change bits");
+        assert_eq!(mono.data, parallel.data, "worker split must not change bits");
+        assert_ne!(mono.data, Ksk::generate_seeded(&sk, 100, &KeygenOptions::monolithic()).data);
+        // And the seeded key actually switches keys correctly.
+        let m = 6u64 << 60;
+        let ct = LweCiphertext::encrypt(m, sk.long_lwe(), TEST1.glwe_noise, &mut rng);
+        let short = mono.keyswitch(&ct, &TEST1);
+        assert!(torus_distance(short.decrypt_phase(&sk.lwe), m) < 1e-4);
     }
 
     #[test]

@@ -15,6 +15,8 @@ pub mod encoding;
 pub mod fft;
 pub mod ggsw;
 pub mod glwe;
+pub mod keycache;
+pub mod keygen;
 pub mod ksk;
 pub mod lwe;
 pub mod pbs;
@@ -27,6 +29,7 @@ pub use ggsw::{
     cmux_rotate_batch, external_product_add_batch, BatchExtProdScratch, FourierGgsw,
 };
 pub use glwe::GlweCiphertext;
+pub use keygen::{server_keys_bitwise_eq, KeygenOptions};
 pub use ksk::Ksk;
 pub use lwe::LweCiphertext;
 pub use pbs::{PbsContext, ServerKeys};

@@ -34,6 +34,20 @@ impl ServerKeys {
             ksk: Ksk::generate(sk, rng),
         }
     }
+
+    /// Seed-deterministic generation through the chunked keygen path
+    /// (`tfhe::keygen`): BSK and KSK draw from domain-separated streams of
+    /// `seed`, so the result depends only on `(sk, seed)` — never on
+    /// `opts`' chunking or worker count. The wide-width `KeyCache` builds
+    /// on this to memoize keys across tests.
+    pub fn generate_seeded(sk: &SecretKeys, seed: u64, opts: &super::keygen::KeygenOptions) -> Self {
+        let plan = FftPlan::new(sk.params.big_n);
+        Self {
+            params: sk.params.clone(),
+            bsk: FourierBsk::generate_seeded(sk, seed, &plan, opts),
+            ksk: Ksk::generate_seeded(sk, seed, opts),
+        }
+    }
 }
 
 /// Mod-switch a torus value to Z_{2N} with rounding.

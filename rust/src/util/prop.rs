@@ -1,14 +1,61 @@
 //! Miniature property-testing harness (proptest is unavailable offline).
 //!
 //! `check(name, cases, |rng| ...)` runs a closure over `cases` seeded
-//! inputs; on failure it reports the failing seed so the case can be
-//! replayed deterministically with `replay(seed, f)`.
+//! inputs. Every case gets its own **forked** RNG: the per-case seed is
+//! derived from the property name and the case index alone, so a case
+//! consuming more or fewer draws never perturbs any other case, and
+//! adding properties never reshuffles existing ones.
+//!
+//! ## Case-count override (`PROP_CASES`)
+//!
+//! The environment variable `PROP_CASES` overrides the requested case
+//! count for every `check` in the process. This is how the wide-width
+//! conformance suite stays cheap in CI but deep locally:
+//!
+//! ```text
+//! PROP_CASES=2  cargo test -q --test conformance_widths   # CI budget
+//! PROP_CASES=50 cargo test -q --test conformance_widths   # local soak
+//! ```
+//!
+//! ## Replaying a failure
+//!
+//! On failure the panic message names the case index and its seed:
+//!
+//! ```text
+//! property `conformance_w8` failed on case 37 (replay seed 0x9e3779...):
+//! ```
+//!
+//! Re-run just that input by passing the printed seed to
+//! [`replay`] from any test or scratch `#[test]` fn:
+//!
+//! ```ignore
+//! util::prop::replay(0x9e3779_u64, |rng| my_property(rng));
+//! ```
+//!
+//! The seed fully determines the case (same forked RNG stream), so the
+//! reproduction is exact regardless of `PROP_CASES` or which other
+//! properties ran.
 
 use super::rng::Rng;
 
-/// Run `f` for `cases` random cases. `f` gets a fresh deterministic RNG per
+/// Effective case count: `PROP_CASES` (when set to a positive integer)
+/// overrides the caller's default. See the module doc for the workflow.
+pub fn cases(default: u64) -> u64 {
+    cases_from(std::env::var("PROP_CASES").ok().as_deref(), default)
+}
+
+/// Pure core of [`cases`], split out for testability: parse an optional
+/// `PROP_CASES` value, falling back to `default` when unset or invalid.
+fn cases_from(env: Option<&str>, default: u64) -> u64 {
+    env.and_then(|v| v.trim().parse::<u64>().ok())
+        .filter(|&c| c > 0)
+        .unwrap_or(default)
+}
+
+/// Run `f` for up to `requested` random cases (`PROP_CASES` overrides the
+/// count, see module doc). `f` gets a fresh deterministic forked RNG per
 /// case and returns `Err(msg)` to signal a counterexample.
-pub fn check<F>(name: &str, cases: u64, mut f: F)
+pub fn check<F>(name: &str, requested: u64, mut f: F)
 where
     F: FnMut(&mut Rng) -> Result<(), String>,
 {
@@ -17,7 +64,7 @@ where
     let base = name.bytes().fold(0xcbf29ce484222325u64, |h, b| {
         (h ^ b as u64).wrapping_mul(0x100000001b3)
     });
-    for case in 0..cases {
+    for case in 0..cases(requested) {
         let seed = base.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
         let mut rng = Rng::new(seed);
         if let Err(msg) = f(&mut rng) {
@@ -57,6 +104,7 @@ mod tests {
 
     #[test]
     fn passing_property_runs_all_cases() {
+        let expected = cases(25); // honors a PROP_CASES override
         let mut n = 0;
         check("trivial", 25, |rng| {
             n += 1;
@@ -67,13 +115,24 @@ mod tests {
                 Err("impossible".into())
             }
         });
-        assert_eq!(n, 25);
+        assert_eq!(n, expected);
     }
 
     #[test]
     #[should_panic(expected = "property `fails`")]
     fn failing_property_panics_with_seed() {
         check("fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn cases_override_parses_and_falls_back() {
+        assert_eq!(cases_from(None, 25), 25);
+        assert_eq!(cases_from(Some("2"), 25), 2);
+        assert_eq!(cases_from(Some(" 50 "), 25), 50);
+        // Invalid or zero values fall back to the default.
+        assert_eq!(cases_from(Some("lots"), 25), 25);
+        assert_eq!(cases_from(Some("0"), 25), 25);
+        assert_eq!(cases_from(Some(""), 25), 25);
     }
 
     #[test]

@@ -1,0 +1,96 @@
+//! Wide-width conformance: the 8/10-bit parameter sets run for real.
+//!
+//! One width-parametric harness (`eval::conformance`) drives randomized
+//! LUT/linear programs through the plaintext interpreter, the
+//! schedule-driven engine, and a 2-shard cluster at every functional
+//! width {3, 5, 8, 10}, asserting bitwise agreement, measured-vs-modeled
+//! KS/PBS counts, and decrypted noise inside the `compiler::noise`
+//! prediction. Case counts honor `PROP_CASES` (CI runs 2; use
+//! `PROP_CASES=50` for a local soak — see `util::prop`).
+//!
+//! Keygen at these sizes is the suite's fixed cost, so keys are seeded,
+//! chunked, and cached (`tfhe::keycache`); the determinism regression
+//! below is what makes that cache sound.
+
+use std::sync::Arc;
+
+use taurus::eval::conformance::{self, KEY_SEED, WIDTHS};
+use taurus::params;
+use taurus::tfhe::keycache;
+use taurus::tfhe::keygen::{server_keys_bitwise_eq, KeygenOptions};
+use taurus::tfhe::ServerKeys;
+
+/// Default cases per width when PROP_CASES is unset: one case keeps the
+/// plain `cargo test -q` tier-1 run affordable at the wide widths; CI's
+/// dedicated `widths` job runs PROP_CASES=2 so the dedicated lane buys
+/// strictly more coverage than the tier-1 smoke.
+const DEFAULT_CASES: u64 = 1;
+
+fn run(width: usize) {
+    let r = conformance::run_width(width, DEFAULT_CASES);
+    println!(
+        "conformance width {width} ({}): {} cases, predicted margin >= {:.1} sigma, \
+         worst measured output error {:.2} predicted sigmas",
+        r.param_name, r.cases, r.min_predicted_margin_sigmas, r.max_measured_err_sigmas
+    );
+}
+
+#[test]
+fn conformance_width_3() {
+    run(3);
+}
+
+#[test]
+fn conformance_width_5() {
+    run(5);
+}
+
+#[test]
+fn conformance_width_8() {
+    run(8);
+}
+
+#[test]
+fn conformance_width_10() {
+    run(10);
+}
+
+#[test]
+fn keygen_determinism_chunked_equals_monolithic_at_every_width() {
+    // Same seed -> bitwise-identical ServerKeys across (a) the monolithic
+    // path, (b) small-chunk sequential generation, and (c) the cached
+    // entry, which is generated with chunking AND multiple workers
+    // (tfhe::keycache) — i.e. 1 vs N generation workers agree too.
+    for width in WIDTHS {
+        let p = params::select_for_width(width);
+        let cached = keycache::get(p, KEY_SEED);
+        let seed = keycache::server_seed(KEY_SEED);
+        let mono = ServerKeys::generate_seeded(&cached.sk, seed, &KeygenOptions::monolithic());
+        assert!(
+            server_keys_bitwise_eq(&mono, &cached.server),
+            "{}: cached (chunked, multi-worker) keys != monolithic keys",
+            p.name
+        );
+        let chunked = ServerKeys::generate_seeded(
+            &cached.sk,
+            seed,
+            &KeygenOptions { chunk: 7, workers: 2 },
+        );
+        assert!(
+            server_keys_bitwise_eq(&mono, &chunked),
+            "{}: chunk-7/2-worker keys != monolithic keys",
+            p.name
+        );
+    }
+}
+
+#[test]
+fn keycache_shares_one_generation_per_width() {
+    for width in WIDTHS {
+        let p = params::select_for_width(width);
+        let a = keycache::get(p, KEY_SEED);
+        let b = keycache::get(p, KEY_SEED);
+        assert!(Arc::ptr_eq(&a, &b), "{}: cache must hand out one shared entry", p.name);
+        assert!(Arc::ptr_eq(&a.server, &b.server));
+    }
+}
