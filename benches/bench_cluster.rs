@@ -39,6 +39,10 @@ fn main() {
 
     let requests = 96usize;
     let clients = 16u64;
+    // This sweep runs with an unbounded admission queue; the field is
+    // emitted per record (0 = unbounded) so trajectories stay
+    // self-describing if a bounded variant is added.
+    let queue_depth: Option<usize> = None;
     let cfg = TaurusConfig::default();
     let policies = [
         PlacementPolicy::RoundRobin,
@@ -60,7 +64,7 @@ fn main() {
                 ClusterOptions {
                     shards,
                     policy,
-                    queue_depth: None,
+                    queue_depth,
                     coordinator: CoordinatorOptions {
                         workers: 1,
                         batch_capacity: 8,
@@ -100,12 +104,18 @@ fn main() {
                 snap.mean_batch_size,
                 if ks_ok { "OK" } else { "MISMATCH" },
             );
+            // Per-shard records repeat the sweep coordinates (policy,
+            // shard count, queue depth): each row is self-describing
+            // rather than implied by its position in the parent array.
             let shard_rows: Vec<JsonValue> = per_shard
                 .iter()
                 .enumerate()
                 .map(|(i, sh)| {
                     obj(vec![
                         ("shard", num(i as f64)),
+                        ("policy", s(policy.name())),
+                        ("shards", num(shards as f64)),
+                        ("queue_depth", num(queue_depth.unwrap_or(0) as f64)),
                         ("requests", num(sh.requests as f64)),
                         ("batches", num(sh.batches as f64)),
                         ("mean_batch_size", num(sh.mean_batch_size)),
@@ -115,6 +125,7 @@ fn main() {
             rows.push(obj(vec![
                 ("shards", num(shards as f64)),
                 ("policy", s(policy.name())),
+                ("queue_depth", num(queue_depth.unwrap_or(0) as f64)),
                 ("req_per_s", num(req_per_s)),
                 ("p50_latency_ms", num(snap.p50_latency_ms)),
                 ("p99_latency_ms", num(snap.p99_latency_ms)),

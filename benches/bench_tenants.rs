@@ -1,0 +1,138 @@
+//! Multi-tenant serving sweep: tenant count x key-cache capacity through
+//! a 2-shard consistent-hash cluster with per-tenant seeded stores,
+//! emitting `BENCH_tenants.json` (cache hit rate, evictions and
+//! regenerations, keyed-batch splits, p50/p99 latency) so CI tracks the
+//! cost of key residency pressure across PRs alongside
+//! `BENCH_cluster.json`.
+//!
+//! The interesting regime is capacity < tenants: every request whose
+//! session was evicted pays a full keygen at admission (the
+//! "regeneration" counter), which is exactly the memory-bandwidth
+//! economics the paper's per-client serving story trades against.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use harness::section;
+use taurus::cluster::{Cluster, ClusterOptions, PlacementPolicy, StoreFactory};
+use taurus::coordinator::CoordinatorOptions;
+use taurus::ir::builder::ProgramBuilder;
+use taurus::params::TEST1;
+use taurus::tenant::{client_secret, KeyStore, SeededTenantStore, SessionId};
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::tfhe::SecretKeys;
+use taurus::util::json::{arr, num, obj, s, JsonValue};
+use taurus::util::rng::Rng;
+
+fn main() {
+    // Serving shape with a KS-dedup opportunity: d = x + y fans out to two
+    // LUTs (one shared key switch, 2 PBS per request).
+    let mut b = ProgramBuilder::new("tenant-bench", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.add(x, y);
+    let r0 = b.lut_fn(d, |m| (m + 1) % 16);
+    let r1 = b.lut_fn(d, |m| m ^ 1);
+    b.outputs(&[r0, r1]);
+    let prog = b.finish();
+
+    let master_seed = 0xBE7C_0001u64;
+    let requests = 48usize;
+    let shards = 2usize;
+
+    section(&format!(
+        "tenant sweep ({requests} requests, {shards} shards, consistent-hash, TEST1)"
+    ));
+
+    let mut rows: Vec<JsonValue> = Vec::new();
+    for tenants in [1usize, 4, 8] {
+        // Client-side secrets once per tenant count (cheap).
+        let sks: Vec<SecretKeys> = (0..tenants as u64)
+            .map(|t| client_secret(&TEST1, master_seed, SessionId(t)))
+            .collect();
+        for cache_cap in [2usize, 8] {
+            let factory: StoreFactory = Arc::new(move |_shard| {
+                Arc::new(SeededTenantStore::new(&TEST1, master_seed, cache_cap))
+                    as Arc<dyn KeyStore>
+            });
+            let mut cluster = Cluster::start_with_store_factory(
+                prog.clone(),
+                factory,
+                ClusterOptions {
+                    shards,
+                    policy: PlacementPolicy::ConsistentHash,
+                    queue_depth: None,
+                    coordinator: CoordinatorOptions {
+                        workers: 1,
+                        batch_capacity: 8,
+                        max_batch_wait: Duration::from_micros(500),
+                        ..Default::default()
+                    },
+                },
+            );
+            let mut rng = Rng::new(17);
+            let t0 = std::time::Instant::now();
+            let pending: Vec<_> = (0..requests)
+                .map(|i| {
+                    let t = i % tenants;
+                    let inputs = vec![
+                        encrypt_message((i % 6) as u64, &sks[t], &mut rng),
+                        encrypt_message((i % 4) as u64, &sks[t], &mut rng),
+                    ];
+                    cluster.submit(SessionId(t as u64), inputs).expect("submit")
+                })
+                .collect();
+            for resp in &pending {
+                let _ = resp.recv().expect("response");
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            drop(pending);
+
+            let snap = cluster.snapshot();
+            let resolves = snap.key_hits + snap.key_misses;
+            let hit_rate =
+                if resolves > 0 { snap.key_hits as f64 / resolves as f64 } else { 0.0 };
+            println!(
+                "tenants={tenants} cap={cache_cap}  {:>8.1} req/s   p50 {:>7.2} ms   p99 {:>7.2} ms   hit-rate {:>5.2}   regens {:>3}   splits {:>3}",
+                requests as f64 / wall,
+                snap.p50_latency_ms,
+                snap.p99_latency_ms,
+                hit_rate,
+                snap.key_regenerations,
+                snap.keyed_batch_splits,
+            );
+            rows.push(obj(vec![
+                ("tenants", num(tenants as f64)),
+                ("cache_capacity", num(cache_cap as f64)),
+                ("requests", num(requests as f64)),
+                ("req_per_s", num(requests as f64 / wall)),
+                ("p50_latency_ms", num(snap.p50_latency_ms)),
+                ("p99_latency_ms", num(snap.p99_latency_ms)),
+                ("key_hit_rate", num(hit_rate)),
+                ("key_hits", num(snap.key_hits as f64)),
+                ("key_misses", num(snap.key_misses as f64)),
+                ("key_evictions", num(snap.key_evictions as f64)),
+                ("key_regenerations", num(snap.key_regenerations as f64)),
+                ("keys_resident", num(snap.key_resident as f64)),
+                ("keyed_batch_splits", num(snap.keyed_batch_splits as f64)),
+                ("mean_batch_size", num(snap.mean_batch_size)),
+            ]));
+            cluster.shutdown();
+        }
+    }
+
+    let report = obj(vec![
+        ("bench", s("tenants")),
+        ("shards", num(shards as f64)),
+        ("policy", s("consistent-hash")),
+        ("results", arr(rows)),
+    ]);
+    let path = "BENCH_tenants.json";
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

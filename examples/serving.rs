@@ -1,28 +1,62 @@
-//! END-TO-END cluster serving driver (the repository's integration
-//! proof): compile an FHE inference program ONCE, start a sharded cluster
-//! (N coordinator shards behind a placement router with a bounded shared
-//! admission queue), submit encrypted queries from several simulated
-//! clients, check every decrypted answer against the plaintext
-//! interpreter, and report aggregate + per-shard latency/throughput.
-//! Results are recorded in EXPERIMENTS.md §Change 6.
+//! END-TO-END multi-tenant cluster serving driver (the repository's
+//! integration proof) — and the quickstart for the **session API**.
+//!
+//! # Session API quickstart
+//!
+//! Serving is organized around *sessions*: every client session owns its
+//! own TFHE keys, and the server resolves sessions to server-key material
+//! through a `tenant::KeyStore`:
+//!
+//! ```ignore
+//! use taurus::cluster::{Cluster, ClusterOptions, PlacementPolicy, StoreFactory};
+//! use taurus::tenant::{client_secret, KeyStore, SeededTenantStore, SessionId};
+//!
+//! // 1. One shard-local store per shard: each derives per-session server
+//! //    keys from the same master seed, cached in a bounded LRU.
+//! let factory: StoreFactory =
+//!     Arc::new(move |_shard| Arc::new(SeededTenantStore::new(&TEST1, MASTER_SEED, CAP)) as _);
+//!
+//! // 2. Start the cluster; consistent-hash placement pins each session
+//! //    to one shard, so its keys stay warm in that shard's cache.
+//! let mut cluster = Cluster::start_with_store_factory(prog, factory, opts);
+//!
+//! // 3. Clients keep their own secret keys and submit per session.
+//! let sk = client_secret(&TEST1, MASTER_SEED, SessionId(7));
+//! let resp = cluster.submit(SessionId(7), encrypted_inputs)?;
+//! let answer = decrypt_message(&resp.recv()?[0], &sk);
+//!
+//! // 4. Scale live: drain, rebuild the hash ring, migrate cached keys.
+//! let report = cluster.reshard(shards + 2);
+//! ```
+//!
+//! Single-tenant code keeps working: `Cluster::start(prog, keys, opts)`
+//! wraps one `Arc<ServerKeys>` in `tenant::StaticKeys` — same bits, same
+//! behavior as before the session API.
+//!
+//! This driver: compile an FHE inference program ONCE, start a sharded
+//! cluster with per-tenant seeded stores, submit encrypted queries from
+//! several tenant sessions (each encrypted under its own key), check
+//! every decrypted answer against the plaintext interpreter, reshard the
+//! cluster live mid-run, and report aggregate + per-shard + per-tenant
+//! metrics. Results are recorded in EXPERIMENTS.md §Tenants.
 //!
 //!     cargo run --release --example serving
-//!     # flags: -- --requests 32 --shards 2 --workers 1
+//!     # flags: -- --requests 32 --shards 2 --workers 1 --tenants 3
+//!     #        --key-cache-cap 4 --queue-depth 8 --grow 1
 //!     #        --policy round-robin|least-outstanding|consistent-hash
-//!     #        --queue-depth 8 --backend native|xla
-//!     # (xla needs `make artifacts` and the `xla` feature)
 
 use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use taurus::cluster::{Cluster, ClusterOptions, ClusterResponse, PlacementPolicy};
-use taurus::coordinator::{BackendKind, CoordinatorOptions};
+use taurus::cluster::{Cluster, ClusterOptions, ClusterResponse, PlacementPolicy, StoreFactory};
+use taurus::coordinator::CoordinatorOptions;
 use taurus::ir::builder::ProgramBuilder;
 use taurus::ir::interp;
 use taurus::params::TEST1;
+use taurus::tenant::{client_secret, KeyStore, SeededTenantStore, SessionId};
 use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
-use taurus::tfhe::{SecretKeys, ServerKeys};
+use taurus::tfhe::SecretKeys;
 use taurus::util::rng::Rng;
 
 fn flag(name: &str) -> Option<String> {
@@ -33,13 +67,26 @@ fn main() {
     let requests: usize = flag("--requests").and_then(|v| v.parse().ok()).unwrap_or(24);
     let shards: usize = flag("--shards").and_then(|v| v.parse().ok()).unwrap_or(2).max(1);
     let workers: usize = flag("--workers").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let tenants: usize = flag("--tenants").and_then(|v| v.parse().ok()).unwrap_or(3).max(1);
+    let cache_cap: usize = flag("--key-cache-cap").and_then(|v| v.parse().ok()).unwrap_or(4).max(1);
+    // Shards added by the live reshard halfway through the run.
+    let grow: usize = flag("--grow").and_then(|v| v.parse().ok()).unwrap_or(1);
     // 0 means unbounded, matching the `taurus serve` CLI.
     let queue_depth: usize = flag("--queue-depth").and_then(|v| v.parse().ok()).unwrap_or(8);
     let policy = flag("--policy")
         .and_then(|p| PlacementPolicy::parse(&p))
         .unwrap_or(PlacementPolicy::ConsistentHash);
-    let use_xla = flag("--backend").as_deref() != Some("native")
-        && std::path::Path::new("artifacts/manifest.json").exists();
+    // The session API serves natively: the XLA backend bakes keys into
+    // device buffers and cannot rebind per-tenant key sets. Say so rather
+    // than silently ignoring the historical flag; single-tenant XLA
+    // serving lives in `taurus serve --backend xla`.
+    if flag("--backend").as_deref() == Some("xla") {
+        eprintln!(
+            "note: --backend xla is unsupported by the multi-tenant session driver \
+             (per-tenant key rebinding); serving natively. Use `taurus serve --backend xla` \
+             for single-tenant XLA."
+        );
+    }
 
     // The served model: a 2-layer quantized MLP head, relu(W x + b) -> LUT.
     let mut b = ProgramBuilder::new("mlp-head", TEST1.width);
@@ -55,39 +102,37 @@ fn main() {
     b.output(out);
     let prog = b.finish();
 
-    println!("== taurus cluster serving driver ==");
+    println!("== taurus multi-tenant cluster serving driver ==");
     println!("program: {} ({} PBS/query, depth {})", prog.name, prog.pbs_count(), prog.pbs_depth());
     println!(
-        "cluster: {shards} shards x {workers} workers, {} routing, admission depth {}",
+        "cluster: {shards} shards x {workers} workers, {} routing, admission depth {}, {tenants} tenant sessions (cache cap {cache_cap}/shard)",
         policy.name(),
         if queue_depth > 0 { queue_depth.to_string() } else { "unbounded".into() },
     );
-    println!("backend: {}", if use_xla { "xla (AOT JAX/Pallas via PJRT)" } else { "native" });
 
-    let mut rng = Rng::new(404);
+    // Client side: each tenant session keeps its own secret keys.
+    let master_seed = 0x5E55_0404u64;
     let t0 = Instant::now();
-    let sk = SecretKeys::generate(&TEST1, &mut rng);
-    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
-    println!("keygen: {:.2}s (replicated to every shard by Arc, zero copies)", t0.elapsed().as_secs_f64());
+    let sks: Vec<SecretKeys> =
+        (0..tenants as u64).map(|t| client_secret(&TEST1, master_seed, SessionId(t))).collect();
+    println!(
+        "client keys: {tenants} tenant secrets derived in {:.2}s (server keys derive shard-side on first touch)",
+        t0.elapsed().as_secs_f64()
+    );
 
-    let backend = if use_xla {
-        BackendKind::Xla { artifacts_dir: "artifacts".into() }
-    } else {
-        BackendKind::Native
-    };
-    let mut cluster = Cluster::start(
+    // Server side: one seeded store per shard; the factory also mints
+    // stores for shards added by reshard.
+    let factory: StoreFactory = Arc::new(move |_shard| {
+        Arc::new(SeededTenantStore::new(&TEST1, master_seed, cache_cap)) as Arc<dyn KeyStore>
+    });
+    let mut cluster = Cluster::start_with_store_factory(
         prog.clone(),
-        keys,
+        factory,
         ClusterOptions {
             shards,
             policy,
             queue_depth: if queue_depth > 0 { Some(queue_depth) } else { None },
-            coordinator: CoordinatorOptions {
-                workers,
-                backend,
-                batch_capacity: 8,
-                ..Default::default()
-            },
+            coordinator: CoordinatorOptions { workers, batch_capacity: 8, ..Default::default() },
         },
     );
     println!(
@@ -96,57 +141,83 @@ fn main() {
         cluster.plan().ks_dedup.after
     );
 
-    // Clients: fire all queries through the admission queue (draining the
-    // oldest response whenever backpressure fires), then collect.
-    let clients = 6u64;
+    // Tenants fire queries through the admission queue (draining the
+    // oldest response whenever backpressure fires), then collect. Halfway
+    // through, the cluster reshards live.
+    let mut rng = Rng::new(404);
     let t0 = Instant::now();
-    let mut pending: VecDeque<(ClusterResponse, u64)> = VecDeque::new();
+    let mut pending: VecDeque<(ClusterResponse, u64, usize)> = VecDeque::new();
     let mut shed = 0usize;
     let mut correct = 0usize;
+    let reshard_at = if grow > 0 { requests / 2 } else { usize::MAX };
     for i in 0..requests {
+        if i == reshard_at {
+            // Live reshard: drain in-flight work first so no response is
+            // lost, then migrate the key-cache entries the new ring
+            // re-homes.
+            while let Some((r, exp, t)) = pending.pop_front() {
+                let outs = r.recv().expect("response");
+                correct += usize::from(decrypt_message(&outs[0], &sks[t]) == exp);
+            }
+            let report = cluster.reshard(shards + grow);
+            println!(
+                "reshard: {} -> {} shards, {}/{} cached tenant keys migrated with the ring",
+                report.old_shards, report.new_shards, report.migrated, report.resident_before
+            );
+        }
+        let t = i % tenants;
         let q: Vec<u64> = (0..3).map(|j| ((i + j) % 6) as u64).collect();
         let expected = interp::eval(&prog, &q)[0];
-        let client_id = (i as u64) % clients;
         // Admission slots are held by the pending handles, so this
         // single-submitter client drains the oldest response whenever the
         // shared queue is at depth — backpressure without re-encrypting.
         while queue_depth > 0 && cluster.outstanding() >= queue_depth {
             shed += 1;
-            let (r, exp) = pending.pop_front().expect("full queue implies pending work");
+            let (r, exp, pt) = pending.pop_front().expect("full queue implies pending work");
             let outs = r.recv().expect("response");
-            correct += usize::from(decrypt_message(&outs[0], &sk) == exp);
+            correct += usize::from(decrypt_message(&outs[0], &sks[pt]) == exp);
         }
-        let cts: Vec<_> = q.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
-        let resp = match cluster.submit(client_id, cts) {
+        let cts: Vec<_> = q.iter().map(|&m| encrypt_message(m, &sks[t], &mut rng)).collect();
+        let resp = match cluster.submit(SessionId(t as u64), cts) {
             Ok(r) => r,
             Err(e) => panic!("submit failed: {e}"),
         };
-        pending.push_back((resp, expected));
+        pending.push_back((resp, expected, t));
     }
-    while let Some((r, exp)) = pending.pop_front() {
+    while let Some((r, exp, t)) = pending.pop_front() {
         let outs = r.recv().expect("response");
-        correct += usize::from(decrypt_message(&outs[0], &sk) == exp);
+        correct += usize::from(decrypt_message(&outs[0], &sks[t]) == exp);
     }
     let wall = t0.elapsed().as_secs_f64();
 
     let snap = cluster.snapshot();
     let per_shard = cluster.shard_snapshots();
-    println!("\nresults ({requests} encrypted queries, {clients} clients):");
+    println!("\nresults ({requests} encrypted queries, {tenants} tenant sessions):");
     println!("  correct      : {correct}/{requests}");
     println!("  wall         : {:.2} s  ({:.1} queries/s)", wall, requests as f64 / wall);
     println!("  backpressure : {shed} submissions deferred by the admission queue");
     println!("  p50 latency  : {:.1} ms (merged per-shard samples)", snap.p50_latency_ms);
     println!("  p99 latency  : {:.1} ms", snap.p99_latency_ms);
     println!("  mean queue   : {:.1} ms", snap.mean_queue_ms);
-    println!("  batches      : {} (mean size {:.2})", snap.batches, snap.mean_batch_size);
+    println!("  batches      : {} (mean size {:.2}, {} keyed splits)", snap.batches, snap.mean_batch_size, snap.keyed_batch_splits);
     println!("  PBS executed : {}", snap.pbs_executed);
-    println!("  per shard    : id  requests  batches  mean-batch");
+    println!(
+        "  key caches   : {} hits / {} misses / {} evictions / {} regenerations, {} resident",
+        snap.key_hits, snap.key_misses, snap.key_evictions, snap.key_regenerations, snap.key_resident
+    );
+    let per_tenant: Vec<String> =
+        snap.session_requests.iter().map(|(s, n)| format!("s{s}:{n}")).collect();
+    println!("  per tenant   : {}", per_tenant.join("  "));
+    println!("  per shard    : id  requests  batches  mean-batch  keys-resident");
     for (i, s) in per_shard.iter().enumerate() {
-        println!("                 {i:<3} {:>8} {:>8} {:>10.2}", s.requests, s.batches, s.mean_batch_size);
+        println!(
+            "                 {i:<3} {:>8} {:>8} {:>10.2} {:>13}",
+            s.requests, s.batches, s.mean_batch_size, s.key_resident
+        );
     }
     assert_eq!(correct, requests, "all decryptions must match the interpreter");
-    let sum_requests: usize = per_shard.iter().map(|s| s.requests).sum();
-    assert_eq!(snap.requests, sum_requests, "merged snapshot sums the shards");
+    let tenant_total: u64 = snap.session_requests.values().sum();
+    assert_eq!(tenant_total as usize, requests, "per-tenant counts sum to the total");
     cluster.shutdown();
-    println!("cluster serving driver OK");
+    println!("multi-tenant cluster serving driver OK");
 }

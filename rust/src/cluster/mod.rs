@@ -11,17 +11,24 @@
 //! shards that all execute ONE shared
 //! [`CompiledPlan`](crate::compiler::CompiledPlan) (compiled once, so
 //! measured counters still cross-check `arch::sim` exactly — per shard and
-//! in aggregate). A [`Router`] places each request by a pluggable
-//! [`PlacementPolicy`] (round-robin, least-outstanding, or
-//! consistent-hash on the client id for key affinity); a bounded shared
-//! admission queue turns overload into fast [`ClusterError::ClusterFull`]
-//! errors instead of unbounded queueing; and
-//! [`Cluster::snapshot`] merges per-shard metrics into exact aggregate
-//! percentiles via
-//! [`MetricsSnapshot::merge`](crate::coordinator::MetricsSnapshot::merge).
+//! in aggregate), each resolving session keys through its own shard-local
+//! [`KeyStore`](crate::tenant::KeyStore). A [`Router`] places each
+//! request by a pluggable [`PlacementPolicy`] (round-robin,
+//! least-outstanding, or consistent-hash on the session id — the affinity
+//! policy that keeps a tenant's key material warm on one shard); a
+//! bounded shared admission queue turns overload into fast
+//! [`ClusterError::ClusterFull`] errors instead of unbounded queueing;
+//! [`Cluster::snapshot`] merges per-shard metrics (latency percentiles,
+//! per-tenant request counts, key-cache counters) via
+//! [`MetricsSnapshot::merge`](crate::coordinator::MetricsSnapshot::merge);
+//! and [`Cluster::reshard`] changes the shard count live — draining
+//! in-flight work, rebuilding the hash ring, and migrating the key-cache
+//! entries whose ring ownership moved.
 
 pub mod router;
 pub mod serve;
 
 pub use router::{PlacementPolicy, Router};
-pub use serve::{Cluster, ClusterError, ClusterOptions, ClusterResponse};
+pub use serve::{
+    Cluster, ClusterError, ClusterOptions, ClusterResponse, ReshardReport, StoreFactory,
+};

@@ -26,9 +26,11 @@ pub enum PlacementPolicy {
 
 impl PlacementPolicy {
     /// Parse a CLI spelling (`round-robin` | `least-outstanding` |
-    /// `consistent-hash`, with short aliases `rr` | `least` | `hash`).
+    /// `consistent-hash`, with short aliases `rr` | `least` | `hash`),
+    /// case-insensitively — `Round-Robin` in a config file must not
+    /// silently fall back to a default.
     pub fn parse(s: &str) -> Option<Self> {
-        match s {
+        match s.to_ascii_lowercase().as_str() {
             "round-robin" | "rr" => Some(Self::RoundRobin),
             "least-outstanding" | "least" => Some(Self::LeastOutstanding),
             "consistent-hash" | "hash" => Some(Self::ConsistentHash),
@@ -216,5 +218,35 @@ mod tests {
         }
         assert_eq!(PlacementPolicy::parse("rr"), Some(PlacementPolicy::RoundRobin));
         assert_eq!(PlacementPolicy::parse("nope"), None);
+    }
+
+    #[test]
+    fn policy_parse_is_case_insensitive() {
+        assert_eq!(PlacementPolicy::parse("Round-Robin"), Some(PlacementPolicy::RoundRobin));
+        assert_eq!(PlacementPolicy::parse("RR"), Some(PlacementPolicy::RoundRobin));
+        assert_eq!(
+            PlacementPolicy::parse("LEAST-OUTSTANDING"),
+            Some(PlacementPolicy::LeastOutstanding)
+        );
+        assert_eq!(PlacementPolicy::parse("Hash"), Some(PlacementPolicy::ConsistentHash));
+        assert_eq!(
+            PlacementPolicy::parse("Consistent-Hash"),
+            Some(PlacementPolicy::ConsistentHash)
+        );
+    }
+
+    #[test]
+    fn place_never_gathers_counts_for_policies_that_ignore_them() {
+        // Gathering outstanding counts walks every shard's atomic; only
+        // least-outstanding may pay that. The closure panics, so any
+        // spurious invocation fails loudly across many placements.
+        for policy in [PlacementPolicy::RoundRobin, PlacementPolicy::ConsistentHash] {
+            let r = Router::new(policy, 4);
+            for client in 0..64u64 {
+                r.place(client, || -> Vec<usize> {
+                    panic!("{} must not gather outstanding counts", policy.name())
+                });
+            }
+        }
     }
 }

@@ -1,13 +1,17 @@
 //! The cluster proper: N coordinator shards behind one router, one shared
-//! bounded admission queue, and merged observability.
+//! bounded admission queue, shard-local key stores, and merged
+//! observability.
 //!
 //! The program is compiled ONCE ([`compiler::compile`]) and the resulting
 //! [`CompiledPlan`] is shared by every shard's workers
-//! ([`Coordinator::start_with_plan`]), so all shards execute — and
-//! `arch::sim` costs — the identical artifact. Keys are either replicated
-//! (one `Arc<ServerKeys>` cloned per shard, [`Cluster::start`]) or
-//! per-shard ([`Cluster::start_with_shard_keys`], e.g. one key set per
-//! accelerator's HBM).
+//! ([`Coordinator::start_with_plan_store`]), so all shards execute — and
+//! `arch::sim` costs — the identical artifact. Keys are resolved per
+//! *session* through one [`KeyStore`] per shard: the compat constructors
+//! wrap a single `Arc<ServerKeys>` in [`StaticKeys`] (replicated or
+//! per-shard), while [`Cluster::start_with_store_factory`] installs
+//! multi-tenant stores (e.g. `tenant::SeededTenantStore`) whose cached
+//! key material lives shard-locally — which is exactly why consistent-hash
+//! placement pins a session to one shard: its keys stay warm there.
 //!
 //! Admission is permit-based: [`Cluster::submit`] atomically claims one of
 //! `queue_depth` slots and hands the permit to the returned
@@ -16,6 +20,13 @@
 //! with [`ClusterError::ClusterFull`] instead of queueing unboundedly —
 //! callers shed load or retry after draining, exactly the backpressure a
 //! front door needs at millions-of-users scale.
+//!
+//! [`Cluster::reshard`] changes the shard count live: admissions pause
+//! (the call holds `&mut self`), every in-flight request drains through
+//! its original shard, the consistent-hash ring is rebuilt, and
+//! shard-local key-cache entries whose ring ownership moved are migrated
+//! — evicted from the old owner's store and registered (same `Arc`, no
+//! regeneration) into the new owner's.
 
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -26,7 +37,16 @@ use super::router::{PlacementPolicy, Router};
 use crate::compiler::{self, CompiledPlan};
 use crate::coordinator::{Coordinator, CoordinatorOptions, MetricsSnapshot, SubmitError};
 use crate::ir::Program;
+use crate::tenant::{KeyStore, KeyStoreStats, SessionId, StaticKeys};
 use crate::tfhe::{LweCiphertext, ServerKeys};
+
+/// Builds the shard-local [`KeyStore`] for a shard index — how the
+/// cluster creates stores at startup and for shards added by
+/// [`Cluster::reshard`]. Factories for seeded tenant stores typically
+/// ignore the index (every shard derives the same per-session bits from
+/// the master seed); factories over fixed per-shard key vectors panic
+/// past their length.
+pub type StoreFactory = Arc<dyn Fn(usize) -> Arc<dyn KeyStore> + Send + Sync>;
 
 #[derive(Debug, Clone)]
 pub struct ClusterOptions {
@@ -120,58 +140,166 @@ impl ClusterResponse {
     }
 }
 
-/// N replicated serving engines behind one admission-controlled router.
+/// What one [`Cluster::reshard`] call did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReshardReport {
+    pub old_shards: usize,
+    pub new_shards: usize,
+    /// Key-cache entries resident across all shard stores before the
+    /// reshard.
+    pub resident_before: usize,
+    /// Entries whose ring ownership moved and that were re-registered
+    /// into their new owner's store (consistent-hash policy; other
+    /// policies migrate only entries orphaned by removed shards).
+    pub migrated: usize,
+    /// Entries resident across all shard stores after migration. Can be
+    /// below `resident_before` on a shrink: target stores' capacity
+    /// bounds bind during migration too, so a full target LRU-displaces
+    /// (counted in its eviction stats) and the displaced tenants
+    /// regenerate on next touch — *cache* residency never exceeds
+    /// `capacity x shards` no matter how the topology moves. (Evicted
+    /// material is freed once its last handle drops: each worker pins
+    /// the key set it last executed and in-flight requests pin theirs,
+    /// so peak key memory is `capacity x shards` plus up to one
+    /// transient set per worker/in-flight handle.)
+    pub resident_after: usize,
+}
+
+/// N replicated serving engines behind one admission-controlled router,
+/// each shard resolving session keys through its own shard-local store.
 pub struct Cluster {
     shards: Vec<Coordinator>,
+    stores: Vec<Arc<dyn KeyStore>>,
+    factory: StoreFactory,
     router: Router,
+    coordinator_opts: CoordinatorOptions,
     admitted: Arc<AtomicUsize>,
     queue_depth: Option<usize>,
     plan: Arc<CompiledPlan>,
     accepting: bool,
+    /// Metrics of shards drained by past reshards (request-path counters
+    /// only — surviving stores keep reporting their own cumulative
+    /// counters through the live shards).
+    retired: Vec<MetricsSnapshot>,
+    /// Final counters of stores dropped by past shrinks.
+    retired_key_stats: KeyStoreStats,
 }
 
 impl Cluster {
     /// Start with replicated keys: every shard serves under the same
-    /// `ServerKeys` (one `Arc` clone each — no key material is copied).
+    /// `ServerKeys` (one [`StaticKeys`] wrapper per shard — no key
+    /// material is copied, and per-shard store counters stay disjoint).
     pub fn start(program: Program, keys: Arc<ServerKeys>, opts: ClusterOptions) -> Self {
-        assert!(opts.shards >= 1, "cluster needs at least one shard");
-        let shard_keys = vec![keys; opts.shards];
-        Self::start_with_shard_keys(program, shard_keys, opts)
+        let factory: StoreFactory =
+            Arc::new(move |_shard| Arc::new(StaticKeys::new(keys.clone())) as Arc<dyn KeyStore>);
+        Self::start_with_store_factory(program, factory, opts)
     }
 
     /// Start with per-shard keys (all generated for the same parameter
-    /// set); `shard_keys.len()` overrides `opts.shards`.
+    /// set); `shard_keys.len()` overrides `opts.shards`. Growing past the
+    /// provided keys via [`Self::reshard`] panics — fixed per-shard key
+    /// vectors cannot invent material for new shards.
     pub fn start_with_shard_keys(
         program: Program,
         shard_keys: Vec<Arc<ServerKeys>>,
         opts: ClusterOptions,
     ) -> Self {
         assert!(!shard_keys.is_empty(), "cluster needs at least one shard");
+        let mut opts = opts;
+        opts.shards = shard_keys.len();
+        let factory: StoreFactory = Arc::new(move |shard| {
+            let keys = shard_keys
+                .get(shard)
+                .unwrap_or_else(|| {
+                    panic!(
+                        "no server keys for shard {shard}: start_with_shard_keys provided \
+                         {} fixed key sets; growing needs start_with_store_factory",
+                        shard_keys.len()
+                    )
+                })
+                .clone();
+            Arc::new(StaticKeys::new(keys)) as Arc<dyn KeyStore>
+        });
+        Self::start_with_store_factory(program, factory, opts)
+    }
+
+    /// Start with explicit shard-local stores (`stores.len()` overrides
+    /// `opts.shards`). Growing past the provided stores via
+    /// [`Self::reshard`] panics; use [`Self::start_with_store_factory`]
+    /// when the cluster must be able to mint stores for new shards.
+    pub fn start_with_stores(
+        program: Program,
+        stores: Vec<Arc<dyn KeyStore>>,
+        opts: ClusterOptions,
+    ) -> Self {
+        assert!(!stores.is_empty(), "cluster needs at least one shard");
+        let mut opts = opts;
+        opts.shards = stores.len();
+        let factory: StoreFactory = Arc::new(move |shard| {
+            stores
+                .get(shard)
+                .unwrap_or_else(|| {
+                    panic!(
+                        "no key store for shard {shard}: start_with_stores provided {}; \
+                         growing needs start_with_store_factory",
+                        stores.len()
+                    )
+                })
+                .clone()
+        });
+        Self::start_with_store_factory(program, factory, opts)
+    }
+
+    /// The primary session-keyed constructor: `factory(i)` builds shard
+    /// `i`'s local [`KeyStore`] — at startup for `0..opts.shards` and
+    /// again for any shard [`Self::reshard`] adds later.
+    pub fn start_with_store_factory(
+        program: Program,
+        factory: StoreFactory,
+        opts: ClusterOptions,
+    ) -> Self {
+        let shards = opts.shards;
+        assert!(shards >= 1, "cluster needs at least one shard");
         assert_ne!(
             opts.queue_depth,
             Some(0),
             "queue_depth 0 would reject every request; use None for unbounded"
         );
-        let params = &shard_keys[0].params;
+        let mut stores: Vec<Arc<dyn KeyStore>> = Vec::with_capacity(shards);
+        for i in 0..shards {
+            stores.push(factory(i));
+        }
+        let params = stores[0].params().clone();
         assert!(
-            shard_keys.iter().all(|k| k.params.name == params.name),
+            stores.iter().all(|s| s.params().name == params.name),
             "all shards must use one parameter set"
         );
         // Compile once; every shard executes (and `arch::sim` costs) the
         // same artifact.
-        let plan = Arc::new(compiler::compile(&program, params, opts.coordinator.plan_capacity));
-        let shards: Vec<Coordinator> = shard_keys
-            .into_iter()
-            .map(|keys| Coordinator::start_with_plan(plan.clone(), keys, opts.coordinator.clone()))
+        let plan = Arc::new(compiler::compile(&program, &params, opts.coordinator.plan_capacity));
+        let shard_coords: Vec<Coordinator> = stores
+            .iter()
+            .map(|store| {
+                Coordinator::start_with_plan_store(
+                    plan.clone(),
+                    store.clone(),
+                    opts.coordinator.clone(),
+                )
+            })
             .collect();
-        let router = Router::new(opts.policy, shards.len());
+        let router = Router::new(opts.policy, shards);
         Self {
-            shards,
+            shards: shard_coords,
+            stores,
+            factory,
             router,
+            coordinator_opts: opts.coordinator,
             admitted: Arc::new(AtomicUsize::new(0)),
             queue_depth: opts.queue_depth,
             plan,
             accepting: true,
+            retired: Vec::new(),
+            retired_key_stats: KeyStoreStats::default(),
         }
     }
 
@@ -188,48 +316,171 @@ impl Cluster {
         self.router.policy()
     }
 
+    /// The shard-local key stores, indexed by shard id.
+    pub fn stores(&self) -> &[Arc<dyn KeyStore>] {
+        &self.stores
+    }
+
     /// Currently admitted (undropped) responses across the cluster.
     pub fn outstanding(&self) -> usize {
         self.admitted.load(Ordering::SeqCst)
     }
 
-    /// Admit, route, and submit one encrypted query for `client_id`. The
-    /// inputs are consumed either way; a single-submitter client that
-    /// wants lossless backpressure should drain a pending response while
-    /// [`Self::outstanding`] sits at the queue depth (as the drivers do)
-    /// rather than bounce off [`ClusterError::ClusterFull`].
+    /// Admit, route, and submit one encrypted query for `session` (plain
+    /// `u64` client ids convert). The inputs are consumed either way; a
+    /// single-submitter client that wants lossless backpressure should
+    /// drain a pending response while [`Self::outstanding`] sits at the
+    /// queue depth (as the drivers do) rather than bounce off
+    /// [`ClusterError::ClusterFull`].
     pub fn submit(
         &self,
-        client_id: u64,
+        session: impl Into<SessionId>,
         inputs: Vec<LweCiphertext>,
     ) -> Result<ClusterResponse, ClusterError> {
         if !self.accepting {
             return Err(ClusterError::Stopped);
         }
+        let session = session.into();
         // The permit is dropped (slot released) on any error path below.
         let permit = AdmissionPermit::acquire(&self.admitted, self.queue_depth)?;
         // Outstanding counts are gathered lazily — only the
         // least-outstanding policy reads them.
-        let shard = self.router.place(client_id, || {
+        let shard = self.router.place(session.0, || {
             self.shards.iter().map(|c| c.inflight.load(Ordering::SeqCst)).collect()
         });
-        let rx = self.shards[shard].submit(inputs).map_err(|e| match e {
+        let rx = self.shards[shard].submit_for(session, inputs).map_err(|e| match e {
             SubmitError::Stopped => ClusterError::Stopped,
             SubmitError::QueueFull => ClusterError::ShardFull,
         })?;
         Ok(ClusterResponse { rx, shard, _permit: permit })
     }
 
-    /// Per-shard metrics, indexed by shard id.
+    /// Per-shard metrics (request-path counters + the shard store's key
+    /// counters), indexed by shard id.
     pub fn shard_snapshots(&self) -> Vec<MetricsSnapshot> {
-        self.shards.iter().map(|c| c.metrics.snapshot()).collect()
+        self.shards.iter().map(|c| c.snapshot()).collect()
     }
 
-    /// Aggregate cluster metrics: counters summed, percentiles recomputed
-    /// over the concatenated per-shard samples
-    /// ([`MetricsSnapshot::merge`]).
+    /// Aggregate cluster metrics: counters summed (including per-tenant
+    /// request counts and key-cache counters), percentiles recomputed
+    /// over the concatenated samples ([`MetricsSnapshot::merge`]).
+    /// Includes shards drained by past [`Self::reshard`] calls, so totals
+    /// are lifetime totals: every admitted request appears exactly once.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        MetricsSnapshot::merge(&self.shard_snapshots())
+        let mut all = self.retired.clone();
+        all.extend(self.shard_snapshots());
+        let mut merged = MetricsSnapshot::merge(&all);
+        merged.key_hits += self.retired_key_stats.hits;
+        merged.key_misses += self.retired_key_stats.misses;
+        merged.key_evictions += self.retired_key_stats.evictions;
+        merged.key_regenerations += self.retired_key_stats.regenerations;
+        merged
+    }
+
+    /// Live reshard to `new_shards` coordinator shards.
+    ///
+    /// Holding `&mut self` guarantees no concurrent [`Self::submit`]:
+    /// admissions are paused for the duration. Every already-admitted
+    /// request drains through its original shard (the per-shard shutdown
+    /// flushes batchers and joins workers), so nothing is lost and
+    /// nothing re-executes; undropped [`ClusterResponse`] handles keep
+    /// their admission slots and deliver normally.
+    ///
+    /// Shard-local stores survive: shard `i < min(old, new)` keeps its
+    /// store, new shards get `factory(i)` stores, and removed shards'
+    /// stores are dropped after migration. Under the consistent-hash
+    /// policy, every resident cache entry whose ring ownership changed is
+    /// migrated (evict + register, preserving the `Arc` — no
+    /// regeneration); the ring keeps most assignments stable, so only the
+    /// ring-predicted fraction moves. Under other policies sessions have
+    /// no shard affinity, so only entries orphaned by removed shards are
+    /// rehomed (`session % new_shards`). Target capacity still binds: a
+    /// shrink that funnels more entries into a store than it can hold
+    /// LRU-displaces the excess (see [`ReshardReport::resident_after`]) —
+    /// the displaced tenants regenerate on next touch rather than the
+    /// cluster exceeding its residency bound.
+    pub fn reshard(&mut self, new_shards: usize) -> ReshardReport {
+        assert!(new_shards >= 1, "cluster needs at least one shard");
+        let old_shards = self.shards.len();
+        self.accepting = false;
+
+        // Drain: every admitted request is answered by its original
+        // shard before any topology change.
+        for shard in &mut self.shards {
+            shard.shutdown();
+        }
+        self.retired.extend(self.shards.iter().map(|c| c.metrics.snapshot()));
+        self.shards.clear();
+
+        // New ring first — migration targets are its ownership.
+        let router = Router::new(self.router.policy(), new_shards);
+
+        // Stores: survivors keep their index, new shards mint via the
+        // factory.
+        let mut stores: Vec<Arc<dyn KeyStore>> = Vec::with_capacity(new_shards);
+        for i in 0..new_shards {
+            match self.stores.get(i) {
+                Some(s) => stores.push(s.clone()),
+                None => stores.push((self.factory)(i)),
+            }
+        }
+
+        // Migrate cache entries whose ownership moved. Residency is
+        // snapshotted per store BEFORE any movement, so an entry migrated
+        // into a store processed later is never re-considered (or
+        // double-counted).
+        let hash_affinity = self.router.policy() == PlacementPolicy::ConsistentHash;
+        let resident: Vec<Vec<SessionId>> =
+            self.stores.iter().map(|s| s.resident()).collect();
+        let resident_before: usize = resident.iter().map(Vec::len).sum();
+        let mut migrated = 0usize;
+        for (i, (store, sessions)) in self.stores.iter().zip(resident).enumerate() {
+            for session in sessions {
+                let target = if hash_affinity {
+                    router.place(session.0, || {
+                        unreachable!("consistent hash never gathers outstanding counts")
+                    })
+                } else if i >= new_shards {
+                    (session.0 % new_shards as u64) as usize
+                } else {
+                    i // no affinity, shard survives: leave the entry alone
+                };
+                if target == i {
+                    continue;
+                }
+                let Some(keys) = store.evict(session) else {
+                    continue; // raced out from under us; nothing to move
+                };
+                stores[target].register(session, keys);
+                migrated += 1;
+            }
+        }
+        // Account stats of stores that are going away (shrink).
+        for dropped in self.stores.iter().skip(new_shards) {
+            let st = dropped.stats();
+            self.retired_key_stats.hits += st.hits;
+            self.retired_key_stats.misses += st.misses;
+            self.retired_key_stats.evictions += st.evictions;
+            self.retired_key_stats.regenerations += st.regenerations;
+        }
+
+        let resident_after: usize = stores.iter().map(|s| s.resident().len()).sum();
+
+        // Relaunch: same compiled plan, new shard set.
+        self.shards = stores
+            .iter()
+            .map(|store| {
+                Coordinator::start_with_plan_store(
+                    self.plan.clone(),
+                    store.clone(),
+                    self.coordinator_opts.clone(),
+                )
+            })
+            .collect();
+        self.stores = stores;
+        self.router = router;
+        self.accepting = true;
+        ReshardReport { old_shards, new_shards, resident_before, migrated, resident_after }
     }
 
     /// Graceful drain: stop admitting, flush every shard's batcher (all

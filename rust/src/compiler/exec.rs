@@ -70,15 +70,60 @@ pub trait PbsBackend {
     }
 }
 
+/// How the native backend holds its server keys: borrowed (the historical
+/// single-key embedding used by tests and the CLI) or shared via `Arc`
+/// (the multi-tenant serving path, where workers rebind the key set per
+/// keyed sub-batch without rebuilding the FFT plan or scratch).
+pub enum KeysRef<'k> {
+    Borrowed(&'k ServerKeys),
+    Shared(Arc<ServerKeys>),
+}
+
+impl std::ops::Deref for KeysRef<'_> {
+    type Target = ServerKeys;
+
+    fn deref(&self) -> &ServerKeys {
+        match self {
+            KeysRef::Borrowed(k) => k,
+            KeysRef::Shared(k) => k,
+        }
+    }
+}
+
 /// Native (pure-Rust) backend.
 pub struct NativePbsBackend<'k> {
     pub ctx: PbsContext,
-    pub keys: &'k ServerKeys,
+    keys: KeysRef<'k>,
 }
 
 impl<'k> NativePbsBackend<'k> {
     pub fn new(keys: &'k ServerKeys) -> Self {
-        Self { ctx: PbsContext::new(&keys.params), keys }
+        Self { ctx: PbsContext::new(&keys.params), keys: KeysRef::Borrowed(keys) }
+    }
+
+    /// The currently bound key set.
+    pub fn keys(&self) -> &ServerKeys {
+        &self.keys
+    }
+}
+
+impl NativePbsBackend<'static> {
+    /// An owning backend over shared keys — the serving workers' form,
+    /// rebindable via [`Self::set_keys`].
+    pub fn shared(keys: Arc<ServerKeys>) -> Self {
+        Self { ctx: PbsContext::new(&keys.params), keys: KeysRef::Shared(keys) }
+    }
+
+    /// Rebind to another tenant's key set. The FFT plan, scratch buffers,
+    /// and the engine's accumulator cache are all parameter-bound and key
+    /// independent, so only the key pointer changes — the per-sub-batch
+    /// cost of multi-tenant serving is the rebind itself, nothing else.
+    pub fn set_keys(&mut self, keys: Arc<ServerKeys>) {
+        assert_eq!(
+            keys.params.name, self.ctx.params.name,
+            "rebinding across parameter sets would invalidate the FFT plan and scratch"
+        );
+        self.keys = KeysRef::Shared(keys);
     }
 }
 
@@ -775,6 +820,40 @@ mod tests {
         let st = eng.take_exec_stats();
         assert_eq!(st.ks_ops, queries.len() as u64 * plan.ks_dedup.after as u64);
         assert_eq!(st.pbs_ops, queries.len() as u64 * plan.graph.pbs_count() as u64);
+    }
+
+    #[test]
+    fn shared_backend_rebinds_keys_between_tenants() {
+        // The multi-tenant worker pattern: ONE engine (one FFT plan, one
+        // scratch set, one accumulator cache) executing consecutive
+        // sub-batches under different tenants' keys via set_keys.
+        let mut rng = Rng::new(101);
+        let sk_a = SecretKeys::generate(&TEST1, &mut rng);
+        let keys_a = std::sync::Arc::new(ServerKeys::generate(&sk_a, &mut rng));
+        let sk_b = SecretKeys::generate(&TEST1, &mut rng);
+        let keys_b = std::sync::Arc::new(ServerKeys::generate(&sk_b, &mut rng));
+
+        let mut b = ProgramBuilder::new("rebind", 3);
+        let x = b.input();
+        let y = b.lut_fn(x, |m| (m * 3 + 1) % 16);
+        b.output(y);
+        let prog = b.finish();
+        let plan = compile(&prog, &TEST1, CompileOpts::default());
+
+        let mut eng = Engine::new(NativePbsBackend::shared(keys_a.clone()));
+        for (m, sk, keys) in [(2u64, &sk_a, &keys_a), (5, &sk_b, &keys_b), (3, &sk_a, &keys_a)] {
+            eng.backend.set_keys(keys.clone());
+            let ct = vec![encrypt_message(m, sk, &mut rng)];
+            let outs = eng.run_plan(&plan, &ct);
+            assert_eq!(
+                decrypt_message(&outs[0], sk),
+                interp::eval(&prog, &[m])[0],
+                "m={m} under its own tenant key"
+            );
+        }
+        // One accumulator encoded despite three sub-batches and two key
+        // sets: LUT polys are plaintext, shared across tenants.
+        assert_eq!(eng.cached_accumulators(), 1);
     }
 
     #[test]

@@ -36,6 +36,25 @@ pub fn collect_batch<T>(rx: &Receiver<T>, capacity: usize, max_wait: Duration) -
     out
 }
 
+/// Partition one collected batch into execution sub-batches of items that
+/// share a key (per `same`), preserving arrival order within each group
+/// and first-appearance order across groups. This is the multi-tenant
+/// grouping step: `Engine::run_plan_batch` executes one batch under ONE
+/// key set, so a collected batch spanning several tenants must split —
+/// each extra group is one `keyed_batch_splits` tick in the metrics. With
+/// a single key (the `StaticKeys` compat path) the batch passes through
+/// as exactly one group, bit-identical to the pre-session dispatch.
+pub fn group_batch<T>(items: Vec<T>, same: impl Fn(&T, &T) -> bool) -> Vec<Vec<T>> {
+    let mut groups: Vec<Vec<T>> = Vec::new();
+    for item in items {
+        match groups.iter_mut().find(|g| same(&g[0], &item)) {
+            Some(g) => g.push(item),
+            None => groups.push(vec![item]),
+        }
+    }
+    groups
+}
+
 /// A simple marker struct so callers can name the policy in configs.
 #[derive(Debug, Clone)]
 pub struct DynamicBatcher {
@@ -98,6 +117,81 @@ mod tests {
         assert!(t0.elapsed() < Duration::from_secs(1), "must not block");
         // The queued item was not swallowed.
         assert_eq!(rx.try_recv(), Ok(7));
+    }
+
+    #[test]
+    fn capacity_one_fast_path_returns_without_waiting_the_deadline() {
+        // The keyed-grouping change sits on collect's timing semantics:
+        // a full batch must never sit out the max_wait window.
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let b = DynamicBatcher::new(1, Duration::from_secs(3600));
+        let t0 = std::time::Instant::now();
+        assert_eq!(b.collect(&rx), vec![42]);
+        assert!(t0.elapsed() < Duration::from_secs(1), "capacity-1 must not wait");
+    }
+
+    #[test]
+    fn burst_at_capacity_returns_immediately() {
+        let (tx, rx) = channel();
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let b = DynamicBatcher::new(4, Duration::from_secs(3600));
+        let t0 = std::time::Instant::now();
+        assert_eq!(b.collect(&rx), vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(1), "full burst must not wait");
+    }
+
+    #[test]
+    fn partial_batch_waits_out_the_full_deadline() {
+        // One item then silence: collect must hold the batch open for the
+        // whole max_wait window (the latency the batcher trades for
+        // batching opportunity) before returning the partial batch.
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let wait = Duration::from_millis(60);
+        let b = DynamicBatcher::new(8, wait);
+        let t0 = std::time::Instant::now();
+        assert_eq!(b.collect(&rx), vec![1]);
+        let elapsed = t0.elapsed();
+        assert!(elapsed >= wait - Duration::from_millis(5), "returned after {elapsed:?}");
+        assert!(elapsed < Duration::from_secs(5), "but not unboundedly late");
+    }
+
+    #[test]
+    fn empty_at_close_while_blocked_on_first_item() {
+        // No item ever arrives; the channel closes after a delay. collect
+        // blocks on the first recv (there is no deadline before the first
+        // item) and returns empty at closure — the dispatch loop's
+        // shutdown signal.
+        let (tx, rx) = channel::<u32>();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            drop(tx);
+        });
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
+        assert!(b.collect(&rx).is_empty());
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn group_batch_splits_by_key_preserving_order() {
+        let items = vec![(1, 'a'), (2, 'b'), (1, 'c'), (3, 'd'), (2, 'e'), (1, 'f')];
+        let groups = group_batch(items, |x, y| x.0 == y.0);
+        assert_eq!(
+            groups,
+            vec![
+                vec![(1, 'a'), (1, 'c'), (1, 'f')],
+                vec![(2, 'b'), (2, 'e')],
+                vec![(3, 'd')],
+            ],
+            "arrival order within groups, first-appearance order across"
+        );
+        // Single key: one pass-through group (the StaticKeys path).
+        let one = group_batch(vec![7, 7, 7], |a, b| a == b);
+        assert_eq!(one, vec![vec![7, 7, 7]]);
+        assert!(group_batch(Vec::<u8>::new(), |a: &u8, b: &u8| a == b).is_empty());
     }
 
     #[test]

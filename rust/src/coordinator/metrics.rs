@@ -1,8 +1,11 @@
-//! Serving metrics: latency distribution + throughput counters.
+//! Serving metrics: latency distribution + throughput counters, with
+//! per-tenant attribution and key-cache observability.
 
+use std::collections::BTreeMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::tenant::SessionId;
 use crate::util::stats;
 
 #[derive(Debug, Default)]
@@ -15,6 +18,8 @@ struct Inner {
     pbs_executed: usize,
     ks_executed: u64,
     bsk_bytes_streamed: u64,
+    keyed_batch_splits: u64,
+    session_requests: BTreeMap<u64, u64>,
 }
 
 /// Thread-safe metrics sink shared by batcher and workers.
@@ -55,6 +60,23 @@ pub struct MetricsSnapshot {
     /// one full BSK stream per PBS when batches degenerate to size 1 and
     /// shrinks ~Bx when dynamic batches of B fuse their sweeps.
     pub bsk_bytes_per_pbs: f64,
+    /// Extra execution sub-batches the keyed batcher produced beyond one
+    /// per collected batch: a collected batch spanning k distinct tenant
+    /// key sets contributes k-1 (the multi-tenant batching-efficiency
+    /// tax; always 0 on the `StaticKeys` compat path).
+    pub keyed_batch_splits: u64,
+    /// Requests served per session id — the per-tenant view. Values sum
+    /// to `requests`.
+    pub session_requests: BTreeMap<u64, u64>,
+    /// Tenant key-store counters (filled from `KeyStore::stats` by
+    /// `Coordinator::snapshot`; zero on a bare `Metrics::snapshot`).
+    pub key_hits: u64,
+    pub key_misses: u64,
+    pub key_evictions: u64,
+    pub key_regenerations: u64,
+    /// Key sets resident in the store at snapshot time (a gauge: merge
+    /// sums it across shard-local stores into cluster-wide residency).
+    pub key_resident: usize,
     /// Raw per-request latency samples (ms). Retained so shard snapshots
     /// can be merged into *exact* aggregate percentiles (percentiles do
     /// not compose from per-shard percentiles).
@@ -66,7 +88,8 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
-    /// Aggregate shard snapshots into one cluster view: counters sum, the
+    /// Aggregate shard snapshots into one cluster view: counters sum
+    /// (including the per-tenant request map and key-store counters), the
     /// latency/queue/batch distributions are recomputed over the
     /// concatenated raw samples (so merged p50/p99 are the true cluster
     /// percentiles, not an average of per-shard percentiles), and
@@ -80,6 +103,15 @@ impl MetricsSnapshot {
             out.pbs_executed += s.pbs_executed;
             out.ks_executed += s.ks_executed;
             out.bsk_bytes_streamed += s.bsk_bytes_streamed;
+            out.keyed_batch_splits += s.keyed_batch_splits;
+            for (&session, &n) in &s.session_requests {
+                *out.session_requests.entry(session).or_insert(0) += n;
+            }
+            out.key_hits += s.key_hits;
+            out.key_misses += s.key_misses;
+            out.key_evictions += s.key_evictions;
+            out.key_regenerations += s.key_regenerations;
+            out.key_resident += s.key_resident;
             out.latency_samples_ms.extend_from_slice(&s.latency_samples_ms);
             out.queue_samples_ms.extend_from_slice(&s.queue_samples_ms);
             out.batch_size_samples.extend_from_slice(&s.batch_size_samples);
@@ -107,9 +139,10 @@ impl Metrics {
         Self { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
     }
 
-    pub fn record_request(&self, queue_ms: f64, latency_ms: f64) {
+    pub fn record_request(&self, session: SessionId, queue_ms: f64, latency_ms: f64) {
         let mut g = self.inner.lock().unwrap();
         g.requests += 1;
+        *g.session_requests.entry(session.0).or_insert(0) += 1;
         g.queue_ms.push(queue_ms);
         g.latencies_ms.push(latency_ms);
     }
@@ -119,6 +152,13 @@ impl Metrics {
         g.batches += 1;
         g.batch_sizes.push(size as f64);
         g.pbs_executed += pbs;
+    }
+
+    /// Account one collected batch splitting into `extra + 1` keyed
+    /// execution sub-batches.
+    pub fn record_keyed_splits(&self, extra: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.keyed_batch_splits += extra;
     }
 
     /// Account one batch execution's measured counters (key switches
@@ -149,6 +189,13 @@ impl Metrics {
             } else {
                 0.0
             },
+            keyed_batch_splits: g.keyed_batch_splits,
+            session_requests: g.session_requests.clone(),
+            key_hits: 0,
+            key_misses: 0,
+            key_evictions: 0,
+            key_regenerations: 0,
+            key_resident: 0,
             latency_samples_ms: g.latencies_ms.clone(),
             queue_samples_ms: g.queue_ms.clone(),
             batch_size_samples: g.batch_sizes.clone(),
@@ -163,8 +210,8 @@ mod tests {
     #[test]
     fn snapshot_aggregates() {
         let m = Metrics::new();
-        m.record_request(1.0, 10.0);
-        m.record_request(3.0, 30.0);
+        m.record_request(SessionId(3), 1.0, 10.0);
+        m.record_request(SessionId(3), 3.0, 30.0);
         m.record_batch(2, 14);
         m.record_exec(4, 7000);
         let s = m.snapshot();
@@ -179,6 +226,8 @@ mod tests {
         assert!((s.bsk_bytes_per_pbs - 500.0).abs() < 1e-9);
         assert_eq!(s.latency_samples_ms, vec![10.0, 30.0]);
         assert_eq!(s.batch_size_samples, vec![2.0]);
+        assert_eq!(s.session_requests.get(&3), Some(&2));
+        assert_eq!(s.keyed_batch_splits, 0);
     }
 
     #[test]
@@ -191,7 +240,7 @@ mod tests {
         let mk = |lats: &[f64], queues: f64| {
             let m = Metrics::new();
             for &l in lats {
-                m.record_request(queues, l);
+                m.record_request(SessionId(0), queues, l);
             }
             m.record_batch(lats.len(), 3 * lats.len());
             m.snapshot()
@@ -214,6 +263,8 @@ mod tests {
         assert!((merged.mean_batch_size - 3.0).abs() < 1e-12);
         // Mean queue: (4 * 0.5 + 2 * 1.5) / 6.
         assert!((merged.mean_queue_ms - (4.0 * 0.5 + 2.0 * 1.5) / 6.0).abs() < 1e-12);
+        // Per-tenant counts sum across shards.
+        assert_eq!(merged.session_requests.get(&0), Some(&6));
     }
 
     #[test]
@@ -241,6 +292,35 @@ mod tests {
     }
 
     #[test]
+    fn merge_sums_tenant_and_key_store_counters() {
+        let mut a = MetricsSnapshot::default();
+        a.keyed_batch_splits = 2;
+        a.session_requests = [(1u64, 3u64), (2, 1)].into_iter().collect();
+        a.key_hits = 5;
+        a.key_misses = 2;
+        a.key_evictions = 1;
+        a.key_regenerations = 1;
+        a.key_resident = 2;
+        let mut b = MetricsSnapshot::default();
+        b.keyed_batch_splits = 1;
+        b.session_requests = [(2u64, 4u64), (7, 2)].into_iter().collect();
+        b.key_hits = 1;
+        b.key_misses = 3;
+        b.key_resident = 3;
+        let merged = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(merged.keyed_batch_splits, 3);
+        assert_eq!(
+            merged.session_requests,
+            [(1u64, 3u64), (2, 5), (7, 2)].into_iter().collect()
+        );
+        assert_eq!(
+            (merged.key_hits, merged.key_misses, merged.key_evictions, merged.key_regenerations),
+            (6, 5, 1, 1)
+        );
+        assert_eq!(merged.key_resident, 5);
+    }
+
+    #[test]
     fn merge_of_empty_and_default_metrics_is_zeroed() {
         assert_eq!(MetricsSnapshot::merge(&[]).requests, 0);
         let m = Metrics::default(); // same as new(): live clock, no samples
@@ -248,5 +328,6 @@ mod tests {
         assert_eq!(merged.requests, 0);
         assert_eq!(merged.bsk_bytes_per_pbs, 0.0);
         assert_eq!(merged.p99_latency_ms, 0.0);
+        assert!(merged.session_requests.is_empty());
     }
 }

@@ -1,14 +1,19 @@
 //! Serving coordinator — the L3 runtime frontend (vLLM-router-style):
-//! clients submit encrypted inputs for a compiled FHE program; a dynamic
-//! batcher groups them (the paper's batch-size lever, Fig. 15 /
-//! Observation 7), a worker pool executes them on the native or XLA PBS
-//! backend, and metrics report latency/throughput.
+//! clients submit encrypted inputs *for a session* of a compiled FHE
+//! program; a `tenant::KeyStore` resolves each session's server keys at
+//! admission, a dynamic batcher groups requests (the paper's batch-size
+//! lever, Fig. 15 / Observation 7) and splits each collected batch by key
+//! handle so every execution batch runs under one key set, a worker pool
+//! executes them on the native or XLA PBS backend (the native backend
+//! rebinds tenant keys between sub-batches), and metrics report
+//! latency/throughput plus per-tenant counts and key-cache counters.
 //!
 //! Python never appears here: the XLA backend executes AOT artifacts via
 //! PJRT (see `runtime`).
 //!
 //! One coordinator is one engine shard; `crate::cluster` replicates N of
-//! them behind a placement router with a shared admission queue.
+//! them behind a placement router with a shared admission queue and
+//! shard-local key stores.
 
 pub mod batcher;
 pub mod metrics;

@@ -1,5 +1,5 @@
-//! The coordinator proper: request intake -> dynamic batcher -> worker
-//! pool -> responses, over either PBS backend.
+//! The coordinator proper: request intake -> dynamic batcher -> keyed
+//! grouping -> worker pool -> responses, over either PBS backend.
 //!
 //! The program is compiled ONCE at startup; every worker executes the
 //! shared [`CompiledPlan`] through the schedule-driven engine
@@ -9,11 +9,23 @@
 //! legacy node-walking executor remains behind
 //! [`CoordinatorOptions::legacy_exec`] as an ablation baseline.
 //!
+//! **Sessions and keys.** Requests are submitted *for a session*
+//! ([`Coordinator::submit_for`]); a [`KeyStore`] resolves each session to
+//! a [`KeyHandle`] at admission time, the dispatch thread groups every
+//! collected batch by key handle ([`super::batcher::group_batch`]), and a
+//! worker executes each keyed sub-batch under exactly one key set —
+//! rebinding its native backend (`NativePbsBackend::set_keys`) when
+//! consecutive sub-batches belong to different tenants. The single-tenant
+//! path ([`Coordinator::start`], wrapping [`StaticKeys`]) resolves every
+//! session to one handle, so batches never split and behavior is
+//! bit-identical to the pre-session API.
+//!
 //! Thread topology: callers hold a cheap `Coordinator` handle; a dispatch
 //! thread owns the batcher; worker threads own their execution engines
 //! (the `xla` crate's PJRT client is Rc-based/non-Send, so each XLA
-//! worker constructs its own backend from the artifact dir + cloned keys
-//! inside its thread).
+//! worker constructs its own backend from the artifact dir + resolved
+//! keys inside its thread; the XLA backend cannot rebind keys, so it
+//! requires a single-key store).
 
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -22,10 +34,11 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use super::batcher::DynamicBatcher;
-use super::metrics::Metrics;
+use super::batcher::{group_batch, DynamicBatcher};
+use super::metrics::{Metrics, MetricsSnapshot};
 use crate::compiler::{self, CompiledPlan, Engine, NativePbsBackend, PbsBackend};
 use crate::ir::Program;
+use crate::tenant::{KeyHandle, KeyStore, SessionId, StaticKeys};
 use crate::tfhe::{LweCiphertext, ServerKeys};
 
 /// Which PBS backend workers run.
@@ -110,15 +123,27 @@ pub(crate) fn try_claim_slot(counter: &AtomicUsize, depth: Option<usize>) -> boo
 }
 
 struct Request {
+    session: SessionId,
+    /// Key set resolved at admission time. The handle's `Arc` keeps the
+    /// keys alive through execution even if the store evicts the entry
+    /// meanwhile.
+    handle: KeyHandle,
     inputs: Vec<LweCiphertext>,
     enqueued: Instant,
     respond: Sender<Vec<LweCiphertext>>,
+}
+
+/// One keyed execution sub-batch: every request shares `handle`'s keys.
+struct WorkItem {
+    handle: KeyHandle,
+    requests: Vec<Request>,
 }
 
 /// A running FHE model server for one compiled program.
 pub struct Coordinator {
     intake: Option<Sender<Request>>,
     pub metrics: Arc<Metrics>,
+    store: Arc<dyn KeyStore>,
     dispatch: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     pub inflight: Arc<AtomicUsize>,
@@ -127,20 +152,43 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Single-tenant compat constructor: every request executes under one
+    /// global key set (a [`StaticKeys`] wrapper around `keys`).
     pub fn start(program: Program, keys: Arc<ServerKeys>, opts: CoordinatorOptions) -> Self {
-        // One compiled plan, shared by every worker (and available to
-        // callers for sim cross-checks via [`Self::plan`]).
-        let plan = Arc::new(compiler::compile(&program, &keys.params, opts.plan_capacity));
-        Self::start_with_plan(plan, keys, opts)
+        Self::start_with_store(program, Arc::new(StaticKeys::new(keys)), opts)
     }
 
-    /// Start from an already-compiled plan. This is how the cluster layer
-    /// (`crate::cluster`) replicates one program across N shards without
-    /// compiling N times: every shard's workers walk the very same
-    /// [`CompiledPlan`] artifact.
+    /// Start from an already-compiled plan under one global key set
+    /// (compat: wraps `keys` in [`StaticKeys`]).
     pub fn start_with_plan(
         plan: Arc<CompiledPlan>,
         keys: Arc<ServerKeys>,
+        opts: CoordinatorOptions,
+    ) -> Self {
+        Self::start_with_plan_store(plan, Arc::new(StaticKeys::new(keys)), opts)
+    }
+
+    /// Start a session-keyed coordinator: requests are resolved through
+    /// `store` per session.
+    pub fn start_with_store(
+        program: Program,
+        store: Arc<dyn KeyStore>,
+        opts: CoordinatorOptions,
+    ) -> Self {
+        // One compiled plan, shared by every worker (and available to
+        // callers for sim cross-checks via [`Self::plan`]).
+        let plan = Arc::new(compiler::compile(&program, store.params(), opts.plan_capacity));
+        Self::start_with_plan_store(plan, store, opts)
+    }
+
+    /// Start from an already-compiled plan and a session key store. This
+    /// is how the cluster layer (`crate::cluster`) replicates one program
+    /// across N shards without compiling N times: every shard's workers
+    /// walk the very same [`CompiledPlan`] artifact against their
+    /// shard-local store.
+    pub fn start_with_plan_store(
+        plan: Arc<CompiledPlan>,
+        store: Arc<dyn KeyStore>,
         opts: CoordinatorOptions,
     ) -> Self {
         // Fail on the caller's thread, not inside a worker, when the
@@ -149,18 +197,33 @@ impl Coordinator {
         if matches!(opts.backend, BackendKind::Xla { .. }) {
             panic!("XLA backend requested but built without the `xla` feature");
         }
+        // Same principle for key stores the backend cannot serve: the XLA
+        // backend bakes keys into device buffers and cannot rebind per
+        // keyed sub-batch, so a multi-key store must be rejected here —
+        // not by a worker panicking mid-serving (which would strand that
+        // sub-batch's inflight slots).
+        if matches!(opts.backend, BackendKind::Xla { .. }) {
+            assert!(
+                store.is_single_key(),
+                "the XLA backend cannot rebind server keys per sub-batch; \
+                 it requires a single-key store (StaticKeys)"
+            );
+        }
         assert!(opts.batch_capacity >= 1, "batch_capacity must be >= 1");
         assert_eq!(
-            plan.params.name, keys.params.name,
-            "compiled plan and server keys use different parameter sets"
+            plan.params.name,
+            store.params().name,
+            "compiled plan and key store use different parameter sets"
         );
         let metrics = Arc::new(Metrics::new());
         let inflight = Arc::new(AtomicUsize::new(0));
         let (intake_tx, intake_rx) = channel::<Request>();
-        // Dispatch thread: batch then round-robin to workers.
-        let (work_txs, work_rxs): (Vec<Sender<Vec<Request>>>, Vec<Receiver<Vec<Request>>>) =
+        // Dispatch thread: batch, group by key handle, round-robin the
+        // keyed sub-batches to workers.
+        let (work_txs, work_rxs): (Vec<Sender<WorkItem>>, Vec<Receiver<WorkItem>>) =
             (0..opts.workers).map(|_| channel()).unzip();
         let batcher = DynamicBatcher::new(opts.batch_capacity, opts.max_batch_wait);
+        let dispatch_metrics = metrics.clone();
         let dispatch = std::thread::spawn(move || {
             let mut next = 0usize;
             loop {
@@ -168,38 +231,64 @@ impl Coordinator {
                 if batch.is_empty() {
                     break; // intake closed
                 }
-                if work_txs[next % work_txs.len()].send(batch).is_err() {
-                    break;
+                let groups =
+                    group_batch(batch, |a: &Request, b: &Request| a.handle.same_keys(&b.handle));
+                if groups.len() > 1 {
+                    dispatch_metrics.record_keyed_splits((groups.len() - 1) as u64);
                 }
-                next += 1;
+                for g in groups {
+                    let item = WorkItem { handle: g[0].handle.clone(), requests: g };
+                    if work_txs[next % work_txs.len()].send(item).is_err() {
+                        return;
+                    }
+                    next += 1;
+                }
             }
         });
         let workers = work_rxs
             .into_iter()
             .map(|rx| {
                 let plan = plan.clone();
-                let keys = keys.clone();
                 let metrics = metrics.clone();
                 let inflight = inflight.clone();
                 let backend = opts.backend.clone();
                 let legacy = opts.legacy_exec;
                 std::thread::spawn(move || match backend {
-                    BackendKind::Native => {
-                        let engine = Engine::new(NativePbsBackend::new(&keys));
-                        worker_loop(rx, engine, &plan, legacy, &metrics, &inflight);
-                    }
+                    BackendKind::Native => worker_loop(
+                        rx,
+                        |h: &KeyHandle| Engine::new(NativePbsBackend::shared(h.keys.clone())),
+                        |e: &mut Engine<NativePbsBackend<'static>>, h: &KeyHandle| {
+                            e.backend.set_keys(h.keys.clone())
+                        },
+                        &plan,
+                        legacy,
+                        &metrics,
+                        &inflight,
+                    ),
                     #[cfg(feature = "xla")]
-                    BackendKind::Xla { artifacts_dir } => {
-                        let be = crate::runtime::XlaPbsBackend::new(
-                            &artifacts_dir,
-                            &keys.params,
-                            &keys.bsk,
-                            &keys.ksk,
-                        )
-                        .expect("xla backend");
-                        let engine = Engine::new(be);
-                        worker_loop(rx, engine, &plan, legacy, &metrics, &inflight);
-                    }
+                    BackendKind::Xla { artifacts_dir } => worker_loop(
+                        rx,
+                        move |h: &KeyHandle| {
+                            let be = crate::runtime::XlaPbsBackend::new(
+                                &artifacts_dir,
+                                &h.keys.params,
+                                &h.keys.bsk,
+                                &h.keys.ksk,
+                            )
+                            .expect("xla backend");
+                            Engine::new(be)
+                        },
+                        |_e: &mut Engine<crate::runtime::XlaPbsBackend>, _h: &KeyHandle| {
+                            panic!(
+                                "the XLA backend bakes keys into device buffers and cannot \
+                                 rebind per sub-batch; serve multi-tenant stores natively"
+                            )
+                        },
+                        &plan,
+                        legacy,
+                        &metrics,
+                        &inflight,
+                    ),
                     #[cfg(not(feature = "xla"))]
                     BackendKind::Xla { .. } => {
                         panic!("XLA backend requested but built without the `xla` feature")
@@ -210,6 +299,7 @@ impl Coordinator {
         Self {
             intake: Some(intake_tx),
             metrics,
+            store,
             dispatch: Some(dispatch),
             workers,
             inflight,
@@ -224,12 +314,44 @@ impl Coordinator {
         &self.plan
     }
 
-    /// Submit one encrypted query; returns the channel the response will
-    /// arrive on, [`SubmitError::Stopped`] after shutdown, or
-    /// [`SubmitError::QueueFull`] when `max_queue_depth` requests are
-    /// already outstanding.
+    /// The session key store requests resolve through.
+    pub fn store(&self) -> &Arc<dyn KeyStore> {
+        &self.store
+    }
+
+    /// Metrics plus the key store's cache counters — the full per-shard
+    /// observability view (`self.metrics.snapshot()` alone reports the
+    /// request-path counters with the key fields zeroed).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut s = self.metrics.snapshot();
+        let ks = self.store.stats();
+        s.key_hits = ks.hits;
+        s.key_misses = ks.misses;
+        s.key_evictions = ks.evictions;
+        s.key_regenerations = ks.regenerations;
+        s.key_resident = ks.resident;
+        s
+    }
+
+    /// Submit one encrypted query for the default session (the
+    /// single-tenant compat path — under [`StaticKeys`] every session
+    /// resolves to the same keys).
     pub fn submit(
         &self,
+        inputs: Vec<LweCiphertext>,
+    ) -> Result<Receiver<Vec<LweCiphertext>>, SubmitError> {
+        self.submit_for(SessionId::default(), inputs)
+    }
+
+    /// Submit one encrypted query for `session`; returns the channel the
+    /// response will arrive on, [`SubmitError::Stopped`] after shutdown,
+    /// or [`SubmitError::QueueFull`] when `max_queue_depth` requests are
+    /// already outstanding. Key resolution happens here — a first-touch
+    /// session on a seeded store pays its keygen at admission time, on
+    /// the submitting thread.
+    pub fn submit_for(
+        &self,
+        session: SessionId,
         inputs: Vec<LweCiphertext>,
     ) -> Result<Receiver<Vec<LweCiphertext>>, SubmitError> {
         let Some(intake) = self.intake.as_ref() else {
@@ -238,8 +360,11 @@ impl Coordinator {
         if !try_claim_slot(&self.inflight, self.max_queue_depth) {
             return Err(SubmitError::QueueFull);
         }
+        let handle = self.store.resolve(session);
         let (tx, rx) = channel();
-        match intake.send(Request { inputs, enqueued: Instant::now(), respond: tx }) {
+        let req =
+            Request { session, handle, inputs, enqueued: Instant::now(), respond: tx };
+        match intake.send(req) {
             Ok(()) => Ok(rx),
             Err(_) => {
                 self.inflight.fetch_sub(1, Ordering::SeqCst);
@@ -261,25 +386,53 @@ impl Coordinator {
     }
 }
 
-fn worker_loop<B: PbsBackend>(
-    rx: Receiver<Vec<Request>>,
-    mut engine: Engine<B>,
+/// Execute keyed sub-batches as they arrive. The engine is built lazily
+/// from the first sub-batch's key handle (`mk_engine`) and rebound
+/// (`rebind`) whenever a sub-batch carries different key material — the
+/// FFT plan, scratch, and accumulator cache persist across rebinds; only
+/// the key pointer changes.
+fn worker_loop<B, MkE, Rb>(
+    rx: Receiver<WorkItem>,
+    mk_engine: MkE,
+    mut rebind: Rb,
     plan: &CompiledPlan,
     legacy: bool,
     metrics: &Metrics,
     inflight: &AtomicUsize,
-) {
-    while let Ok(batch) = rx.recv() {
-        let size = batch.len();
+) where
+    B: PbsBackend,
+    MkE: FnOnce(&KeyHandle) -> Engine<B>,
+    Rb: FnMut(&mut Engine<B>, &KeyHandle),
+{
+    let mut mk_engine = Some(mk_engine);
+    let mut engine: Option<Engine<B>> = None;
+    let mut bound: Option<KeyHandle> = None;
+    while let Ok(WorkItem { handle, requests }) = rx.recv() {
+        match (engine.as_mut(), bound.as_ref()) {
+            (Some(_), Some(b)) if b.same_keys(&handle) => {}
+            (Some(e), _) => rebind(e, &handle),
+            (None, _) => {
+                engine = Some(mk_engine.take().expect("engine built once")(&handle));
+            }
+        }
+        bound = Some(handle);
+        let engine = engine.as_mut().expect("engine bound");
+
+        let size = requests.len();
         let pbs = plan.graph.pbs_count() * size;
         // Record up front so snapshots taken right after the last response
         // already see this batch.
         metrics.record_batch(size, pbs);
         // Inputs are moved out of the requests, not cloned.
-        let (metas, inputs): (Vec<(Instant, Sender<Vec<LweCiphertext>>)>, Vec<_>) =
-            batch.into_iter().map(|r| ((r.enqueued, r.respond), r.inputs)).unzip();
+        let (metas, inputs): (
+            Vec<(SessionId, Instant, Sender<Vec<LweCiphertext>>)>,
+            Vec<_>,
+        ) = requests
+            .into_iter()
+            .map(|r| ((r.session, r.enqueued, r.respond), r.inputs))
+            .unzip();
         let queue_ms: Vec<f64> =
-            metas.iter().map(|(t, _)| t.elapsed().as_secs_f64() * 1e3).collect();
+            metas.iter().map(|(_, t, _)| t.elapsed().as_secs_f64() * 1e3).collect();
         // Default: walk the compiled schedule — shared key switches
         // computed once per batch, accumulator-sharing rotations fused
         // across nodes x requests into single BSK sweeps.
@@ -288,11 +441,15 @@ fn worker_loop<B: PbsBackend>(
         } else {
             engine.run_plan_batch(plan, &inputs)
         };
+        // ExecStats drain per keyed sub-batch: KS/PBS/traffic counters are
+        // attributed at the same granularity execution actually ran.
         let st = engine.take_exec_stats();
         metrics.record_exec(st.ks_ops, st.bsk_bytes_streamed);
-        for (((enqueued, respond), out), q_ms) in metas.into_iter().zip(outs).zip(queue_ms) {
+        for (((session, enqueued, respond), out), q_ms) in
+            metas.into_iter().zip(outs).zip(queue_ms)
+        {
             let latency_ms = enqueued.elapsed().as_secs_f64() * 1e3;
-            metrics.record_request(q_ms, latency_ms);
+            metrics.record_request(session, q_ms, latency_ms);
             inflight.fetch_sub(1, Ordering::SeqCst);
             let _ = respond.send(out); // client may have gone away
         }
@@ -305,6 +462,7 @@ mod tests {
     use crate::ir::builder::ProgramBuilder;
     use crate::ir::interp;
     use crate::params::TEST1;
+    use crate::tenant::{client_secret, SeededTenantStore};
     use crate::tfhe::pbs::{decrypt_message, encrypt_message};
     use crate::tfhe::SecretKeys;
     use crate::util::rng::Rng;
@@ -347,6 +505,9 @@ mod tests {
         assert_eq!(snap.requests, 12);
         assert!(snap.batches >= 3, "round-robined to several batches");
         assert_eq!(coord.inflight.load(Ordering::SeqCst), 0);
+        // One static key set: the keyed batcher never split a batch.
+        assert_eq!(snap.keyed_batch_splits, 0);
+        assert_eq!(snap.session_requests.get(&0), Some(&12), "compat path = one session");
         // Plan-driven accounting: one KS per request on this program.
         assert_eq!(snap.ks_executed, 12 * coord.plan().ks_dedup.after as u64);
         // Key-reuse accounting: fused sweeps stream at most one full BSK
@@ -477,6 +638,63 @@ mod tests {
         assert_eq!(coord.inflight.load(Ordering::SeqCst), 0);
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.requests, 3, "shed request was never executed");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn keyed_grouping_splits_mixed_tenant_batches_deterministically() {
+        // Two tenants interleaved into ONE collected batch (capacity 4,
+        // generous wait): the dispatch must split it into exactly two
+        // keyed sub-batches, each executed under its own tenant's keys.
+        let master = 0x5E55;
+        let store = Arc::new(SeededTenantStore::new(&TEST1, master, 4));
+        let prog = small_program();
+        let mut coord = Coordinator::start_with_store(
+            prog.clone(),
+            store.clone(),
+            CoordinatorOptions {
+                workers: 1,
+                batch_capacity: 4,
+                max_batch_wait: Duration::from_millis(400),
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(36);
+        let sks: Vec<_> =
+            (0..2).map(|t| client_secret(&TEST1, master, SessionId(t))).collect();
+        // Pre-warm both tenants so keygen latency cannot straddle the
+        // batcher window — the 4 submissions below all land inside it.
+        store.resolve(SessionId(0));
+        store.resolve(SessionId(1));
+        // t0, t1, t0, t1 — one batcher window.
+        let mut pending = Vec::new();
+        for i in 0..4u64 {
+            let t = (i % 2) as usize;
+            let (x, y) = (i % 6, (i * 3) % 6);
+            let inputs = vec![
+                encrypt_message(x, &sks[t], &mut rng),
+                encrypt_message(y, &sks[t], &mut rng),
+            ];
+            pending.push((t, x, y, coord.submit_for(SessionId(t as u64), inputs).unwrap()));
+        }
+        for (t, x, y, rx) in &pending {
+            let outs = rx.recv().expect("response");
+            let exp = interp::eval(&prog, &[*x, *y]);
+            assert_eq!(
+                decrypt_message(&outs[0], &sks[*t]),
+                exp[0],
+                "tenant {t} query ({x},{y}) under its own key"
+            );
+        }
+        let snap = coord.snapshot();
+        assert_eq!(snap.requests, 4);
+        assert_eq!(snap.batches, 2, "one collected batch split into two keyed sub-batches");
+        assert_eq!(snap.keyed_batch_splits, 1);
+        assert_eq!(snap.session_requests.get(&0), Some(&2));
+        assert_eq!(snap.session_requests.get(&1), Some(&2));
+        // 2 pre-warm misses + 4 submit-time hits, nothing evicted.
+        assert_eq!((snap.key_misses, snap.key_hits, snap.key_evictions), (2, 4, 0));
+        assert_eq!(snap.key_resident, 2);
         coord.shutdown();
     }
 }

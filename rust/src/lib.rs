@@ -19,11 +19,16 @@
 //! - [`workloads`] — generators for the paper's seven evaluation workloads.
 //! - [`runtime`] — PJRT (XLA) execution of AOT-compiled JAX/Pallas
 //!   artifacts from the Rust request path.
+//! - [`tenant`] — the multi-tenant session layer: `SessionId`s resolved
+//!   to per-client server keys through a `KeyStore` (single-key
+//!   `StaticKeys` compat, or seeded per-tenant stores over a bounded LRU
+//!   key cache).
 //! - [`coordinator`] — a threaded FHE-inference serving frontend (router,
-//!   dynamic batcher, metrics).
+//!   dynamic batcher with per-key-set batch grouping, metrics).
 //! - [`cluster`] — sharded serving above the coordinator: N replicated
 //!   engine shards behind a placement router with a bounded shared
-//!   admission queue and merged metrics.
+//!   admission queue, shard-local key stores with live reshard +
+//!   cache migration, and merged metrics.
 //! - [`eval`] — regenerates every table and figure of the paper.
 
 // Stylistic clippy lints the codebase deliberately trades away: the
@@ -52,6 +57,7 @@ pub mod arch;
 pub mod baselines;
 pub mod workloads;
 pub mod runtime;
+pub mod tenant;
 pub mod coordinator;
 pub mod cluster;
 pub mod eval;

@@ -7,10 +7,15 @@
 //!   run <workload> [--batch B]      simulate one Table II workload
 //!   serve [--backend native|xla] [--shards S] [--policy P]
 //!         [--queue-depth D] [--workers N] [--requests R]
+//!         [--tenants T] [--key-cache-cap C]
 //!       start a sharded serving cluster (S coordinator shards behind a
 //!       router; P in round-robin|least-outstanding|consistent-hash;
 //!       D bounds the shared admission queue, 0 = unbounded) on the
-//!       quickstart program and drive R encrypted requests through it
+//!       quickstart program and drive R encrypted requests through it.
+//!       T >= 2 serves T seeded tenant sessions (distinct per-client
+//!       server keys behind shard-local stores of capacity C, default
+//!       consistent-hash placement so each tenant's keys stay warm on
+//!       one shard); T <= 1 keeps the single-key StaticKeys path
 //!   params                          print all parameter sets
 //!   selftest                        native + XLA PBS smoke test
 
@@ -24,8 +29,9 @@ use taurus::bail;
 use taurus::util::err::Result;
 
 use taurus::arch::TaurusConfig;
-use taurus::cluster::{Cluster, ClusterOptions, ClusterResponse, PlacementPolicy};
+use taurus::cluster::{Cluster, ClusterOptions, ClusterResponse, PlacementPolicy, StoreFactory};
 use taurus::coordinator::{BackendKind, CoordinatorOptions};
+use taurus::tenant::{self, KeyStore, SeededTenantStore, SessionId};
 use taurus::ir::builder::ProgramBuilder;
 use taurus::params;
 use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
@@ -155,8 +161,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let workers = args.usize_flag("workers", 2);
     let requests = args.usize_flag("requests", 16);
     let queue_depth = args.usize_flag("queue-depth", 0);
+    let tenants = args.usize_flag("tenants", 1).max(1);
+    let key_cache_cap = args.usize_flag("key-cache-cap", 4).max(1);
     let legacy_exec = args.flag("legacy-exec").is_some();
-    let policy_name = args.flag("policy").unwrap_or("round-robin");
+    // Multi-tenant serving defaults to consistent-hash: sessions pin to
+    // the shard where their keys are resident.
+    let policy_name =
+        args.flag("policy").unwrap_or(if tenants > 1 { "consistent-hash" } else { "round-robin" });
     let Some(policy) = PlacementPolicy::parse(policy_name) else {
         bail!("unknown policy {policy_name} (round-robin | least-outstanding | consistent-hash)")
     };
@@ -164,6 +175,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "xla" => BackendKind::Xla { artifacts_dir: "artifacts".into() },
         _ => BackendKind::Native,
     };
+    if tenants > 1 && matches!(backend, BackendKind::Xla { .. }) {
+        bail!(
+            "--backend xla cannot serve --tenants {tenants}: the XLA backend bakes keys into \
+             device buffers and cannot rebind per-tenant key sets (use the native backend, \
+             or --tenants 1 for single-key XLA serving)"
+        )
+    }
     // Quickstart program with fanout: d = 2x + y + 1, then relu(d) and
     // sign(d) — two LUTs over one value, so the compiled plan shares d's
     // key switch (KS-dedup realized on the serving path).
@@ -176,20 +194,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
     b.outputs(&[r, s]);
     let prog = b.finish();
 
+    let opts = ClusterOptions {
+        shards,
+        policy,
+        queue_depth: if queue_depth > 0 { Some(queue_depth) } else { None },
+        coordinator: CoordinatorOptions { workers, backend, legacy_exec, ..Default::default() },
+    };
     let mut rng = Rng::new(2077);
-    println!("keygen (TEST1)...");
-    let sk = SecretKeys::generate(&params::TEST1, &mut rng);
-    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
-    let mut cluster = Cluster::start(
-        prog.clone(),
-        keys,
-        ClusterOptions {
-            shards,
-            policy,
-            queue_depth: if queue_depth > 0 { Some(queue_depth) } else { None },
-            coordinator: CoordinatorOptions { workers, backend, legacy_exec, ..Default::default() },
-        },
-    );
+    // Per-session client secrets: with seeded tenants each session keys
+    // its own material; single-tenant keeps one key pair for everything.
+    let master_seed = 0x7E4A_2077u64;
+    let session_sk: Vec<SecretKeys> = if tenants > 1 {
+        println!("tenant stores (TEST1): {tenants} sessions derive on first touch, cache cap {key_cache_cap}/shard");
+        (0..tenants as u64)
+            .map(|t| tenant::client_secret(&params::TEST1, master_seed, SessionId(t)))
+            .collect()
+    } else {
+        println!("keygen (TEST1)...");
+        vec![SecretKeys::generate(&params::TEST1, &mut rng)]
+    };
+    let mut cluster = if tenants > 1 {
+        let factory: StoreFactory = Arc::new(move |_shard| {
+            Arc::new(SeededTenantStore::new(&params::TEST1, master_seed, key_cache_cap))
+                as Arc<dyn KeyStore>
+        });
+        Cluster::start_with_store_factory(prog.clone(), factory, opts)
+    } else {
+        let keys = Arc::new(ServerKeys::generate(&session_sk[0], &mut rng));
+        Cluster::start(prog.clone(), keys, opts)
+    };
     let plan = cluster.plan();
     println!(
         "compiled plan  : {} PBS, KS-dedup {} -> {} ({:.1}%), {} batches ({}), shared by {} shards",
@@ -202,38 +235,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shards,
     );
     println!(
-        "serving {requests} encrypted requests: {shards} shards x {workers} workers, {} routing, admission depth {}",
+        "serving {requests} encrypted requests: {shards} shards x {workers} workers, {} routing, admission depth {}, {tenants} session(s)",
         policy.name(),
         if queue_depth > 0 { queue_depth.to_string() } else { "unbounded".into() },
     );
-    let mut pending: std::collections::VecDeque<(ClusterResponse, Vec<u64>)> =
+    // (response, expected, tenant index) — each response decrypts under
+    // its own session's secret key.
+    let mut pending: std::collections::VecDeque<(ClusterResponse, Vec<u64>, usize)> =
         std::collections::VecDeque::new();
     let mut correct = 0usize;
     for i in 0..requests {
         let (mx, my) = ((i as u64) % 4, (i as u64 * 3) % 4);
         let exp = taurus::ir::interp::eval(&prog, &[mx, my]);
-        let client_id = (i as u64) % 4; // four simulated clients
+        let t = if tenants > 1 { i % tenants } else { 0 };
+        let session = if tenants > 1 { t as u64 } else { (i as u64) % 4 };
         // Single-submitter driver: admission slots are held by the pending
         // handles, so drain the oldest response whenever the queue is at
         // depth instead of bouncing off ClusterFull and re-cloning inputs.
         while queue_depth > 0 && cluster.outstanding() >= queue_depth {
-            let Some((r, e)) = pending.pop_front() else {
+            let Some((r, e, pt)) = pending.pop_front() else {
                 bail!("admission queue full with nothing pending")
             };
             let outs = r.recv()?;
-            let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+            let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &session_sk[pt])).collect();
             correct += usize::from(got == e);
         }
-        let inputs = vec![encrypt_message(mx, &sk, &mut rng), encrypt_message(my, &sk, &mut rng)];
-        let resp = match cluster.submit(client_id, inputs) {
+        let sk = &session_sk[t];
+        let inputs = vec![encrypt_message(mx, sk, &mut rng), encrypt_message(my, sk, &mut rng)];
+        let resp = match cluster.submit(session, inputs) {
             Ok(r) => r,
             Err(e) => bail!("submit failed: {e}"),
         };
-        pending.push_back((resp, exp));
+        pending.push_back((resp, exp, t));
     }
-    while let Some((r, e)) = pending.pop_front() {
+    while let Some((r, e, pt)) = pending.pop_front() {
         let outs = r.recv()?;
-        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &session_sk[pt])).collect();
         correct += usize::from(got == e);
     }
     let snap = cluster.snapshot();
@@ -250,12 +287,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cluster.plan().ks_dedup.before,
     );
     println!("BSK B/PBS      : {:.0} (pbs-weighted over shards)", snap.bsk_bytes_per_pbs);
-    println!("per shard      : id  requests  batches  mean-batch      KS     PBS");
+    println!("per shard      : id  requests  batches  mean-batch      KS     PBS  keys-resident");
     for (i, s) in per_shard.iter().enumerate() {
         println!(
-            "                 {i:<3} {:>8} {:>8} {:>10.2} {:>7} {:>7}",
-            s.requests, s.batches, s.mean_batch_size, s.ks_executed, s.pbs_executed
+            "                 {i:<3} {:>8} {:>8} {:>10.2} {:>7} {:>7} {:>14}",
+            s.requests, s.batches, s.mean_batch_size, s.ks_executed, s.pbs_executed, s.key_resident
         );
+    }
+    if tenants > 1 {
+        println!(
+            "key caches     : {} hits / {} misses / {} evictions / {} regenerations, {} resident, {} keyed batch splits",
+            snap.key_hits,
+            snap.key_misses,
+            snap.key_evictions,
+            snap.key_regenerations,
+            snap.key_resident,
+            snap.keyed_batch_splits,
+        );
+        let per_tenant: Vec<String> =
+            snap.session_requests.iter().map(|(s, n)| format!("s{s}:{n}")).collect();
+        println!("per tenant     : {}", per_tenant.join("  "));
     }
     // The identical artifact costed by the arch model: aggregate measured
     // counters must equal per-request sim costs x requests, independent

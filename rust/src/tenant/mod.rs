@@ -1,0 +1,393 @@
+//! Multi-tenant session layer: per-client server keys behind a
+//! [`KeyStore`].
+//!
+//! The paper's serving story (§1, §6) assumes many clients offloading
+//! encrypted work to one accelerator farm. That makes server-side key
+//! material *per-tenant*: every client owns a distinct secret key, so the
+//! server must hold one `ServerKeys` (BSK + KSK, tens of MB at the wide
+//! widths — see EXPERIMENTS.md §Tenants) per active client, and key
+//! residency — which tenants' keys are warm in a shard's memory — becomes
+//! a first-class scheduling input, exactly why the cluster pins clients
+//! to shards with consistent hashing.
+//!
+//! This module is the API for that:
+//!
+//! - [`SessionId`] names a client session; callers submit work *for a
+//!   session*, never with a raw key arc.
+//! - [`KeyStore`] resolves a session to a [`KeyHandle`] (the key set a
+//!   request executes under) with a `register`/`evict` surface so caches
+//!   can be migrated when the cluster reshards.
+//! - [`StaticKeys`] wraps one `Arc<ServerKeys>` — the single-tenant
+//!   compat path; every session resolves to the same handle, so batches
+//!   never split and behavior is bit-identical to the pre-session API.
+//! - [`SeededTenantStore`] derives per-tenant keys deterministically from
+//!   a master seed (`tfhe::keygen` domain-separated forking) behind a
+//!   bounded LRU ([`tfhe::keycache::BoundedKeyCache`]) with hit / miss /
+//!   eviction / regeneration counters. The store retains only *server*
+//!   material — tenant secret keys are derived transiently during keygen
+//!   and dropped; clients (and tests) recover theirs via
+//!   [`client_secret`].
+//!
+//! Down the pipeline, the coordinator's batcher groups collected requests
+//! by key handle so `Engine::run_plan_batch` always executes one batch
+//! under one key set, and `MetricsSnapshot` reports per-tenant request
+//! counts plus the store's cache counters.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::params::ParamSet;
+use crate::tfhe::keycache::{self, BoundedKeyCache};
+use crate::tfhe::keygen::fork_seed;
+use crate::tfhe::{SecretKeys, ServerKeys};
+
+pub use crate::tfhe::keycache::CacheStats as KeyStoreStats;
+
+/// A client session. Placement (consistent-hash affinity) and key
+/// resolution both key off this id, so a session's requests land on the
+/// shard where its server keys are resident.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SessionId(pub u64);
+
+impl From<u64> for SessionId {
+    fn from(v: u64) -> Self {
+        Self(v)
+    }
+}
+
+impl fmt::Display for SessionId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "session-{}", self.0)
+    }
+}
+
+/// The key set one request executes under, resolved at submit time. The
+/// `Arc` keeps the keys alive for the request's whole lifetime even if
+/// the store evicts the entry meanwhile — in-flight work never loses its
+/// keys. Batches are grouped by *pointer identity* ([`Self::same_keys`]):
+/// two handles share an execution sub-batch only when they are literally
+/// the same key material.
+#[derive(Clone)]
+pub struct KeyHandle {
+    /// The session this handle was resolved for (metrics attribution).
+    pub session: SessionId,
+    /// The server keys the request executes under.
+    pub keys: Arc<ServerKeys>,
+}
+
+impl KeyHandle {
+    /// Whether two handles refer to the identical key material (pointer
+    /// identity — the grouping predicate of the keyed batcher).
+    pub fn same_keys(&self, other: &KeyHandle) -> bool {
+        Arc::ptr_eq(&self.keys, &other.keys)
+    }
+}
+
+impl fmt::Debug for KeyHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("KeyHandle")
+            .field("session", &self.session)
+            .field("params", &self.keys.params.name)
+            .finish()
+    }
+}
+
+/// Server-side key resolution: session -> key handle, plus the
+/// register/evict surface the cluster uses to migrate shard-local cache
+/// entries on reshard. Implementations are shared across submitting
+/// threads and workers (`Send + Sync`); `resolve` may generate keys on
+/// first touch, so its cost lands at admission time, attributed to the
+/// submitting tenant.
+pub trait KeyStore: Send + Sync {
+    /// Parameter set every resolved key set uses (one per store — the
+    /// compiled plan is per-parameter-set).
+    fn params(&self) -> &ParamSet;
+
+    /// Whether every session resolves to ONE fixed key set for the
+    /// store's whole lifetime. Backends that bake keys into device
+    /// buffers (XLA) can only serve single-key stores; the coordinator
+    /// rejects the combination at construction using this.
+    fn is_single_key(&self) -> bool {
+        false
+    }
+
+    /// Resolve a session's server keys, generating or fetching from cache
+    /// as the implementation dictates.
+    fn resolve(&self, session: SessionId) -> KeyHandle;
+
+    /// Install externally supplied keys for a session (client-uploaded
+    /// material, or an entry migrated from another shard's store).
+    fn register(&self, session: SessionId, keys: Arc<ServerKeys>) -> KeyHandle;
+
+    /// Remove a session's entry (returning it, e.g. to hand to another
+    /// shard's store during reshard migration). `None` when not resident.
+    fn evict(&self, session: SessionId) -> Option<Arc<ServerKeys>>;
+
+    /// Sessions whose keys are currently resident (empty for stores with
+    /// no per-session state, like [`StaticKeys`]).
+    fn resident(&self) -> Vec<SessionId>;
+
+    /// Cache counters (hits/misses/evictions/regenerations/resident).
+    fn stats(&self) -> KeyStoreStats;
+}
+
+/// Single-tenant compat store: wraps today's one `Arc<ServerKeys>`. Every
+/// session resolves to the same handle, so the keyed batcher never splits
+/// a batch and the serving path is bit-identical to the pre-session API.
+pub struct StaticKeys {
+    keys: Arc<ServerKeys>,
+    resolves: AtomicU64,
+}
+
+impl StaticKeys {
+    pub fn new(keys: Arc<ServerKeys>) -> Self {
+        Self { keys, resolves: AtomicU64::new(0) }
+    }
+
+    /// The wrapped key set.
+    pub fn keys(&self) -> &Arc<ServerKeys> {
+        &self.keys
+    }
+}
+
+impl KeyStore for StaticKeys {
+    fn params(&self) -> &ParamSet {
+        &self.keys.params
+    }
+
+    fn is_single_key(&self) -> bool {
+        true
+    }
+
+    fn resolve(&self, session: SessionId) -> KeyHandle {
+        self.resolves.fetch_add(1, Ordering::Relaxed);
+        KeyHandle { session, keys: self.keys.clone() }
+    }
+
+    fn register(&self, _session: SessionId, _keys: Arc<ServerKeys>) -> KeyHandle {
+        panic!("StaticKeys serves one global key set; per-session registration needs a SeededTenantStore")
+    }
+
+    fn evict(&self, _session: SessionId) -> Option<Arc<ServerKeys>> {
+        None
+    }
+
+    fn resident(&self) -> Vec<SessionId> {
+        Vec::new()
+    }
+
+    fn stats(&self) -> KeyStoreStats {
+        KeyStoreStats {
+            hits: self.resolves.load(Ordering::Relaxed),
+            ..KeyStoreStats::default()
+        }
+    }
+}
+
+/// Domain tag separating tenant key streams from every other consumer of
+/// [`fork_seed`] (keygen's BSK/KSK streams, the keycache's sk/ek split).
+pub const DOMAIN_TENANT: u64 = 0x7E4A_A017;
+
+/// The key-derivation seed of `session` under `master_seed`. Pure: a
+/// tenant's keys are a function of `(params, master_seed, session)` alone,
+/// so every shard's store — and a freshly built cluster — derives the
+/// identical bits.
+pub fn tenant_seed(master_seed: u64, session: SessionId) -> u64 {
+    fork_seed(master_seed, DOMAIN_TENANT, session.0)
+}
+
+/// The client-side secret keys of a tenant session — what the client keeps
+/// (and what tests use to encrypt/decrypt). The server-side store derives
+/// these transiently during keygen and retains only the server material.
+pub fn client_secret(p: &ParamSet, master_seed: u64, session: SessionId) -> SecretKeys {
+    keycache::secret_keys_for(p, tenant_seed(master_seed, session))
+}
+
+/// Per-tenant seeded key store: derives each session's `ServerKeys`
+/// deterministically from a master seed, cached in a bounded LRU
+/// ([`BoundedKeyCache`]). Eviction under capacity pressure is counted, and
+/// re-deriving a previously evicted tenant counts as a *regeneration* —
+/// the cost signal that says the cache is too small for the working set.
+pub struct SeededTenantStore {
+    params: ParamSet,
+    master_seed: u64,
+    cache: BoundedKeyCache,
+    /// seed -> session inverse map (sessions ever seen; `resident()`
+    /// intersects this with the cache's live entries). Like the cache's
+    /// regeneration ledger this grows 16 bytes per tenant ever resolved —
+    /// bookkeeping, not key material; the MB-scale keys themselves stay
+    /// capacity-bounded.
+    sessions: Mutex<HashMap<u64, SessionId>>,
+}
+
+impl SeededTenantStore {
+    /// `capacity` bounds resident key sets (>= 1); sizing guidance — keys
+    /// per tenant by width — is in EXPERIMENTS.md §Tenants.
+    pub fn new(p: &ParamSet, master_seed: u64, capacity: usize) -> Self {
+        Self {
+            params: p.clone(),
+            master_seed,
+            cache: BoundedKeyCache::new(capacity),
+            sessions: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn master_seed(&self) -> u64 {
+        self.master_seed
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cache.capacity()
+    }
+
+    fn seed_of(&self, session: SessionId) -> u64 {
+        let seed = tenant_seed(self.master_seed, session);
+        self.sessions.lock().expect("tenant store poisoned").insert(seed, session);
+        seed
+    }
+}
+
+impl KeyStore for SeededTenantStore {
+    fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    fn resolve(&self, session: SessionId) -> KeyHandle {
+        let seed = self.seed_of(session);
+        KeyHandle { session, keys: self.cache.get(&self.params, seed) }
+    }
+
+    fn register(&self, session: SessionId, keys: Arc<ServerKeys>) -> KeyHandle {
+        assert_eq!(
+            keys.params.name, self.params.name,
+            "registered keys must match the store's parameter set"
+        );
+        let seed = self.seed_of(session);
+        self.cache.insert(&self.params, seed, keys.clone());
+        KeyHandle { session, keys }
+    }
+
+    fn evict(&self, session: SessionId) -> Option<Arc<ServerKeys>> {
+        self.cache.remove(tenant_seed(self.master_seed, session))
+    }
+
+    fn resident(&self) -> Vec<SessionId> {
+        let map = self.sessions.lock().expect("tenant store poisoned");
+        let mut out: Vec<SessionId> = self
+            .cache
+            .resident()
+            .iter()
+            .filter_map(|seed| map.get(seed).copied())
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    fn stats(&self) -> KeyStoreStats {
+        self.cache.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+    use crate::tfhe::pbs::{decrypt_message, encrypt_message};
+    use crate::tfhe::server_keys_bitwise_eq;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn static_keys_resolve_is_the_same_arc_for_every_session() {
+        let mut rng = Rng::new(61);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+        let store = StaticKeys::new(keys.clone());
+        let a = store.resolve(SessionId(1));
+        let b = store.resolve(SessionId(999));
+        assert!(a.same_keys(&b), "static store: one key set for all sessions");
+        assert!(Arc::ptr_eq(&a.keys, &keys));
+        assert!(store.resident().is_empty());
+        assert!(store.evict(SessionId(1)).is_none());
+        assert_eq!(store.stats().hits, 2);
+        assert_eq!(store.stats().misses, 0);
+    }
+
+    #[test]
+    fn seeded_store_derives_distinct_working_keys_per_session() {
+        let store = SeededTenantStore::new(&TEST1, 0xA11CE, 4);
+        let h0 = store.resolve(SessionId(0));
+        let h1 = store.resolve(SessionId(1));
+        assert!(!h0.same_keys(&h1), "sessions must get distinct key sets");
+        assert!(
+            !server_keys_bitwise_eq(&h0.keys, &h1.keys),
+            "distinct sessions must derive distinct key bits"
+        );
+        // The derived server keys work with the matching client secret.
+        let sk0 = client_secret(&TEST1, 0xA11CE, SessionId(0));
+        let mut rng = Rng::new(7);
+        let ct = encrypt_message(5, &sk0, &mut rng);
+        let mut ctx = crate::tfhe::PbsContext::new(&TEST1);
+        let lut = crate::tfhe::make_lut_poly(&TEST1, |m| (m + 1) % 16);
+        let out = ctx.pbs(&ct, &h0.keys, &lut);
+        assert_eq!(decrypt_message(&out, &sk0), 6);
+        // Resolving again is a hit on the identical Arc.
+        let again = store.resolve(SessionId(0));
+        assert!(again.same_keys(&h0));
+        let st = store.stats();
+        assert_eq!((st.hits, st.misses, st.evictions), (1, 2, 0));
+        assert_eq!(store.resident(), vec![SessionId(0), SessionId(1)]);
+    }
+
+    #[test]
+    fn seeded_store_evicts_at_capacity_and_regenerates_identical_bits() {
+        let store = SeededTenantStore::new(&TEST1, 0xBEE, 2);
+        let h0 = store.resolve(SessionId(0));
+        let _h1 = store.resolve(SessionId(1));
+        // Third tenant evicts the LRU entry (session 0).
+        let _h2 = store.resolve(SessionId(2));
+        assert_eq!(store.resident(), vec![SessionId(1), SessionId(2)]);
+        let st = store.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.regenerations, 0);
+        // Re-deriving the evicted tenant is a counted regeneration — and
+        // bitwise identical to the original derivation (the whole point of
+        // seeded tenants: eviction costs time, never correctness).
+        let h0b = store.resolve(SessionId(0));
+        assert!(!h0b.same_keys(&h0), "regenerated entry is fresh material");
+        assert!(server_keys_bitwise_eq(&h0.keys, &h0b.keys));
+        let st = store.stats();
+        assert_eq!(st.evictions, 2, "regenerating at capacity evicts again");
+        assert_eq!(st.regenerations, 1);
+        assert_eq!(st.resident, 2);
+    }
+
+    #[test]
+    fn migration_register_preserves_arc_identity_across_stores() {
+        // Two shard-local stores under one master seed: evicting from one
+        // and registering into the other (what `Cluster::reshard` does)
+        // moves the very same key material — the target's next resolve is
+        // a hit on the migrated Arc, not a regeneration.
+        let a = SeededTenantStore::new(&TEST1, 0xCAFE, 4);
+        let b = SeededTenantStore::new(&TEST1, 0xCAFE, 4);
+        let h = a.resolve(SessionId(7));
+        let moved = a.evict(SessionId(7)).expect("resident entry");
+        assert!(Arc::ptr_eq(&moved, &h.keys));
+        assert!(a.resident().is_empty());
+        b.register(SessionId(7), moved);
+        let resolved = b.resolve(SessionId(7));
+        assert!(resolved.same_keys(&h), "migrated entry must be reused, not regenerated");
+        let st = b.stats();
+        assert_eq!((st.hits, st.misses, st.regenerations), (1, 0, 0));
+        assert_eq!(b.resident(), vec![SessionId(7)]);
+    }
+
+    #[test]
+    fn tenant_seed_is_session_injective_in_practice() {
+        let mut seen = std::collections::HashSet::new();
+        for s in 0..4096u64 {
+            assert!(seen.insert(tenant_seed(42, SessionId(s))), "seed collision at {s}");
+        }
+    }
+}

@@ -1,18 +1,30 @@
-//! Process-wide cache of deterministic seeded key sets.
+//! Caches of deterministic seeded key sets.
 //!
-//! Wide-width keygen is the dominant fixed cost of the conformance suite
-//! (a WIDE10 BSK+KSK is ~100 MB of material behind thousands of FFTs).
-//! Because `ServerKeys::generate_seeded` is a pure function of
-//! `(params, seed)` — chunking and worker count cannot change the bits
-//! (`tfhe::keygen`) — the suite can safely share ONE key set per
-//! `(parameter set, seed)` across every test in the process and pay
-//! keygen once per width.
+//! Two variants share one generation path ([`generate_entry`]):
 //!
-//! Entries are generated under a per-entry `OnceLock`, so two tests
-//! racing on the same width block on one generation while different
-//! widths generate concurrently.
+//! * [`get`] — the process-wide **unbounded** cache the test suite uses.
+//!   Wide-width keygen is the dominant fixed cost of the conformance
+//!   suite (a WIDE10 BSK+KSK is ~100 MB of material behind thousands of
+//!   FFTs); because `ServerKeys::generate_seeded` is a pure function of
+//!   `(params, seed)` — chunking and worker count cannot change the bits
+//!   (`tfhe::keygen`) — the suite safely shares ONE key set per
+//!   `(parameter set, seed)` across every test in the process. Entries
+//!   are generated under a per-entry `OnceLock`, so two tests racing on
+//!   the same width block on one generation while different widths
+//!   generate concurrently. This cache grows without bound by design:
+//!   its working set is the handful of test widths.
+//!
+//! * [`BoundedKeyCache`] — the **capacity-bounded LRU** the serving
+//!   path's `tenant::SeededTenantStore` builds on. Per-tenant server keys
+//!   are the same tens-of-MB entries, but a server meets an unbounded
+//!   stream of tenants, so residency must be bounded and observable:
+//!   the cache counts hits, misses, capacity evictions, and
+//!   *regenerations* (a miss for a seed generated before — the signal
+//!   that capacity is below the working set). It deliberately retains
+//!   only server-side material (`Arc<ServerKeys>`), never client secret
+//!   keys.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::keygen::{fork_seed, KeygenOptions};
@@ -21,7 +33,9 @@ use super::torus::SecretKeys;
 use crate::params::ParamSet;
 use crate::util::rng::Rng;
 
-/// One cached client+server key set.
+/// One cached client+server key set (the unbounded test cache keeps the
+/// secret keys so tests can encrypt/decrypt; the bounded serving cache
+/// does not).
 pub struct CachedKeys {
     pub sk: SecretKeys,
     pub server: Arc<ServerKeys>,
@@ -47,6 +61,28 @@ pub fn server_seed(seed: u64) -> u64 {
     fork_seed(seed, 0x5EC2_E7D1, 0)
 }
 
+/// The client-side secret keys for `(p, seed)` — the cheap half of
+/// [`generate_entry`], regenerated on demand (what a tenant's *client*
+/// keeps while the server store holds only the server material).
+pub fn secret_keys_for(p: &ParamSet, seed: u64) -> SecretKeys {
+    let mut rng = Rng::new(secret_seed(seed));
+    SecretKeys::generate(p, &mut rng)
+}
+
+/// Generate the full deterministic key set for `(p, seed)` — the single
+/// generation path shared by [`get`] and [`BoundedKeyCache`], so both
+/// caches (and a client deriving via [`secret_keys_for`]) always agree
+/// bitwise.
+pub fn generate_entry(p: &ParamSet, seed: u64) -> CachedKeys {
+    let sk = secret_keys_for(p, seed);
+    // Spread keygen over a few workers; by construction the worker
+    // count does not change the generated bits.
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
+    let server =
+        ServerKeys::generate_seeded(&sk, server_seed(seed), &KeygenOptions::with_workers(workers));
+    CachedKeys { sk, server: Arc::new(server) }
+}
+
 /// Fetch (generating on first use) the key set for `(p, seed)`. Returns a
 /// shared handle; all callers see the identical keys, so ciphertexts
 /// produced by one test decrypt under another's copy.
@@ -55,22 +91,187 @@ pub fn get(p: &ParamSet, seed: u64) -> Arc<CachedKeys> {
         let mut map = cache().lock().expect("key cache poisoned");
         map.entry((p.name.to_string(), seed)).or_default().clone()
     };
-    slot.get_or_init(|| {
-        let mut rng = Rng::new(secret_seed(seed));
-        let sk = SecretKeys::generate(p, &mut rng);
-        // Spread keygen over a few workers; by construction the worker
-        // count does not change the generated bits.
-        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4);
-        let server = ServerKeys::generate_seeded(&sk, server_seed(seed), &KeygenOptions::with_workers(workers));
-        Arc::new(CachedKeys { sk, server: Arc::new(server) })
-    })
-    .clone()
+    slot.get_or_init(|| Arc::new(generate_entry(p, seed))).clone()
+}
+
+/// Counters of a bounded key cache (also the `tenant::KeyStoreStats`
+/// shape): how resolution traffic split between cache states.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups served from a resident entry.
+    pub hits: u64,
+    /// Lookups that had to generate (first touch or post-eviction).
+    pub misses: u64,
+    /// Entries displaced by capacity pressure (explicit `remove`s — e.g.
+    /// reshard migration — are not evictions).
+    pub evictions: u64,
+    /// Misses for a seed generated before: the cache paid keygen twice
+    /// because capacity is below the working set.
+    pub regenerations: u64,
+    /// Entries currently resident.
+    pub resident: usize,
+}
+
+struct BoundedEntry {
+    keys: Arc<ServerKeys>,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct BoundedInner {
+    /// The one parameter set this instance serves, bound on first use so
+    /// a seed can never silently resolve to another set's keys.
+    param_name: Option<&'static str>,
+    entries: HashMap<u64, BoundedEntry>,
+    /// Monotone access clock for LRU ordering.
+    tick: u64,
+    /// Every seed whose generation/insert *completed* — distinguishes a
+    /// first-touch miss from a regeneration. Recorded at insert time (not
+    /// at miss time) so two threads racing on the same first touch don't
+    /// count a phantom regeneration. 8 bytes per tenant ever seen: the
+    /// bookkeeping that makes the capacity-pressure signal exact, ~6
+    /// orders of magnitude below the key material it meters.
+    seen: HashSet<u64>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    regenerations: u64,
+}
+
+impl BoundedInner {
+    fn touch(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    fn bind_param(&mut self, name: &'static str) {
+        match self.param_name {
+            None => self.param_name = Some(name),
+            Some(bound) => assert_eq!(
+                bound, name,
+                "a BoundedKeyCache serves one parameter set; use one instance per set"
+            ),
+        }
+    }
+
+    /// Drop least-recently-used entries until `capacity` holds.
+    fn enforce_capacity(&mut self, capacity: usize) {
+        while self.entries.len() > capacity {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(&k, _)| k)
+                .expect("non-empty over capacity");
+            self.entries.remove(&lru);
+            self.evictions += 1;
+        }
+    }
+}
+
+/// Capacity-bounded LRU over seeded server-key sets, one instance per
+/// parameter set (asserted). Unlike [`get`] this never grows past
+/// `capacity` entries — the serving-side residency bound for per-tenant
+/// key material — and it retains no secret keys.
+pub struct BoundedKeyCache {
+    capacity: usize,
+    inner: Mutex<BoundedInner>,
+}
+
+impl BoundedKeyCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "a key cache of capacity 0 could never serve");
+        Self { capacity, inner: Mutex::new(BoundedInner::default()) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Fetch the key set for `(p, seed)`, generating on a miss. Keygen
+    /// runs *outside* the lock so concurrent misses for different seeds
+    /// generate in parallel; racing misses for the same seed may generate
+    /// twice, but determinism makes both results bitwise-identical and
+    /// the first insert wins.
+    pub fn get(&self, p: &ParamSet, seed: u64) -> Arc<ServerKeys> {
+        {
+            let mut g = self.inner.lock().expect("bounded key cache poisoned");
+            g.bind_param(p.name);
+            let tick = g.touch();
+            if let Some(e) = g.entries.get_mut(&seed) {
+                e.last_used = tick;
+                let keys = e.keys.clone();
+                g.hits += 1;
+                return keys;
+            }
+            g.misses += 1;
+            if g.seen.contains(&seed) {
+                g.regenerations += 1;
+            }
+        }
+        let generated = generate_entry(p, seed).server;
+        let mut g = self.inner.lock().expect("bounded key cache poisoned");
+        let tick = g.touch();
+        g.seen.insert(seed);
+        let keys = match g.entries.get_mut(&seed) {
+            // A concurrent miss beat us to the insert; keep its Arc so
+            // hit identity stays stable.
+            Some(e) => {
+                e.last_used = tick;
+                e.keys.clone()
+            }
+            None => {
+                g.entries
+                    .insert(seed, BoundedEntry { keys: generated.clone(), last_used: tick });
+                generated
+            }
+        };
+        g.enforce_capacity(self.capacity);
+        keys
+    }
+
+    /// Install externally supplied keys (migration import / client
+    /// upload). Counts as neither hit nor miss; may displace the LRU
+    /// entry if the cache is full.
+    pub fn insert(&self, p: &ParamSet, seed: u64, keys: Arc<ServerKeys>) {
+        let mut g = self.inner.lock().expect("bounded key cache poisoned");
+        g.bind_param(p.name);
+        let tick = g.touch();
+        g.seen.insert(seed);
+        g.entries.insert(seed, BoundedEntry { keys, last_used: tick });
+        g.enforce_capacity(self.capacity);
+    }
+
+    /// Remove an entry deliberately (reshard migration hands it to
+    /// another shard's cache). Not counted as a capacity eviction.
+    pub fn remove(&self, seed: u64) -> Option<Arc<ServerKeys>> {
+        let mut g = self.inner.lock().expect("bounded key cache poisoned");
+        g.entries.remove(&seed).map(|e| e.keys)
+    }
+
+    /// Resident seeds.
+    pub fn resident(&self) -> Vec<u64> {
+        let g = self.inner.lock().expect("bounded key cache poisoned");
+        g.entries.keys().copied().collect()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().expect("bounded key cache poisoned");
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            regenerations: g.regenerations,
+            resident: g.entries.len(),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::params::TEST1;
+    use crate::tfhe::server_keys_bitwise_eq;
 
     #[test]
     fn cache_returns_one_shared_instance() {
@@ -83,5 +284,73 @@ mod tests {
         let mut rng = Rng::new(3);
         let ct = super::super::pbs::encrypt_message(5, &a.sk, &mut rng);
         assert_eq!(super::super::pbs::decrypt_message(&ct, &b.sk), 5);
+    }
+
+    #[test]
+    fn bounded_and_unbounded_caches_agree_bitwise() {
+        let unbounded = get(&TEST1, 21);
+        let bounded = BoundedKeyCache::new(2);
+        let keys = bounded.get(&TEST1, 21);
+        assert!(server_keys_bitwise_eq(&unbounded.server, &keys));
+        // And the client-side derivation matches the cached sk.
+        let sk = secret_keys_for(&TEST1, 21);
+        let mut rng = Rng::new(9);
+        let ct = super::super::pbs::encrypt_message(3, &sk, &mut rng);
+        assert_eq!(super::super::pbs::decrypt_message(&ct, &unbounded.sk), 3);
+    }
+
+    #[test]
+    fn bounded_cache_evicts_lru_and_counts_regenerations() {
+        // Regression for the unbounded-growth satellite: capacity 2 must
+        // hold exactly 2 entries through any access pattern.
+        let c = BoundedKeyCache::new(2);
+        let k1 = c.get(&TEST1, 1);
+        let _k2 = c.get(&TEST1, 2);
+        assert_eq!(c.stats(), CacheStats { hits: 0, misses: 2, evictions: 0, regenerations: 0, resident: 2 });
+
+        // Touch 1 so 2 becomes the LRU, then insert 3: 2 is displaced.
+        let k1_again = c.get(&TEST1, 1);
+        assert!(Arc::ptr_eq(&k1, &k1_again), "hit returns the resident Arc");
+        let _k3 = c.get(&TEST1, 3);
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.evictions, st.regenerations, st.resident), (1, 3, 1, 0, 2));
+        let mut res = c.resident();
+        res.sort_unstable();
+        assert_eq!(res, vec![1, 3], "seed 2 was the LRU");
+
+        // Re-fetching the displaced seed is a miss AND a regeneration,
+        // with bitwise-identical keys (seeded determinism).
+        let k2_again = c.get(&TEST1, 2);
+        let st = c.stats();
+        assert_eq!((st.misses, st.evictions, st.regenerations, st.resident), (4, 2, 1, 2));
+        assert!(server_keys_bitwise_eq(&k2_again, &get(&TEST1, 2).server));
+    }
+
+    #[test]
+    fn bounded_cache_insert_and_remove_do_not_count_as_traffic() {
+        let c = BoundedKeyCache::new(2);
+        let keys = c.get(&TEST1, 31);
+        let moved = c.remove(31).expect("resident");
+        assert!(Arc::ptr_eq(&moved, &keys));
+        assert!(c.remove(31).is_none(), "already removed");
+        c.insert(&TEST1, 31, moved.clone());
+        let back = c.get(&TEST1, 31);
+        assert!(Arc::ptr_eq(&back, &moved), "insert preserves Arc identity");
+        let st = c.stats();
+        // 1 generate miss + 1 hit; the remove/insert round-trip is silent
+        // and the remove was not a capacity eviction.
+        assert_eq!((st.hits, st.misses, st.evictions, st.regenerations), (1, 1, 0, 0));
+
+        // Inserting past capacity (a reshard shrink funneling entries
+        // into one store) LRU-displaces and counts the eviction: the
+        // residency bound binds during migration imports too.
+        c.insert(&TEST1, 32, moved.clone());
+        c.insert(&TEST1, 33, moved.clone());
+        let st = c.stats();
+        assert_eq!(st.resident, 2, "capacity bound holds through inserts");
+        assert_eq!(st.evictions, 1);
+        let mut res = c.resident();
+        res.sort_unstable();
+        assert_eq!(res, vec![32, 33], "seed 31 was the LRU at the third insert");
     }
 }

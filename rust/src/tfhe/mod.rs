@@ -29,6 +29,7 @@ pub use ggsw::{
     cmux_rotate_batch, external_product_add_batch, BatchExtProdScratch, FourierGgsw,
 };
 pub use glwe::GlweCiphertext;
+pub use keycache::{BoundedKeyCache, CacheStats};
 pub use keygen::{server_keys_bitwise_eq, KeygenOptions};
 pub use ksk::Ksk;
 pub use lwe::LweCiphertext;

@@ -1,0 +1,350 @@
+//! Integration: the multi-tenant session API — per-tenant correctness
+//! over a sharded cluster, single-tenant (`StaticKeys`) bitwise
+//! compatibility with the pre-session API, and live reshard with
+//! key-cache migration.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use taurus::arch::{simulate, TaurusConfig};
+use taurus::cluster::{Cluster, ClusterOptions, PlacementPolicy, Router, StoreFactory};
+use taurus::compiler::{compile, CompileOpts, Engine, NativePbsBackend};
+use taurus::coordinator::CoordinatorOptions;
+use taurus::eval::conformance::random_program_for;
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::{interp, Program};
+use taurus::params::TEST1;
+use taurus::tenant::{client_secret, KeyStore, SeededTenantStore, SessionId, StaticKeys};
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{keycache, server_keys_bitwise_eq, LweCiphertext, SecretKeys};
+use taurus::util::rng::Rng;
+
+/// Fanout shape so KS-dedup is visible in the sim cross-check: d = x + y
+/// feeds two LUTs (1 shared KS, 2 PBS per request).
+fn fanout_program() -> Program {
+    let mut b = ProgramBuilder::new("tenant-fan", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.add(x, y);
+    let r0 = b.lut_fn(d, |m| (m + 1) % 8);
+    let r1 = b.lut_fn(d, |m| m ^ 1);
+    b.outputs(&[r0, r1]);
+    b.finish()
+}
+
+fn shard_options() -> CoordinatorOptions {
+    CoordinatorOptions {
+        workers: 1,
+        batch_capacity: 4,
+        max_batch_wait: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+fn seeded_factory(master_seed: u64, capacity: usize) -> StoreFactory {
+    Arc::new(move |_shard| {
+        Arc::new(SeededTenantStore::new(&TEST1, master_seed, capacity)) as Arc<dyn KeyStore>
+    })
+}
+
+#[test]
+fn eight_sessions_on_four_shards_decrypt_under_their_own_keys() {
+    let master_seed = 0x8E55;
+    let sessions = 8u64;
+    let requests_per_session = 2usize;
+    let prog = fanout_program();
+    // Capacity: every session plus the two probe resolves below fit with
+    // room to spare, so no eviction muddies the counters.
+    let mut cluster = Cluster::start_with_store_factory(
+        prog.clone(),
+        seeded_factory(master_seed, sessions as usize + 2),
+        ClusterOptions {
+            shards: 4,
+            policy: PlacementPolicy::ConsistentHash,
+            queue_depth: None,
+            coordinator: shard_options(),
+        },
+    );
+    let sim = simulate(cluster.plan(), &TaurusConfig::default());
+
+    // Every session's keys are genuinely distinct material.
+    let s0 = cluster.stores()[0].resolve(SessionId(0));
+    let s1 = cluster.stores()[0].resolve(SessionId(1));
+    assert!(
+        !server_keys_bitwise_eq(&s0.keys, &s1.keys),
+        "tenants must not share key bits"
+    );
+
+    let mut rng = Rng::new(88);
+    let sks: Vec<SecretKeys> =
+        (0..sessions).map(|t| client_secret(&TEST1, master_seed, SessionId(t))).collect();
+    // Interleave sessions so shards see mixed-tenant traffic.
+    let mut pending = Vec::new();
+    for round in 0..requests_per_session {
+        for t in 0..sessions {
+            let (x, y) = ((t + round as u64) % 6, (t * 3 + round as u64) % 6);
+            let inputs = vec![
+                encrypt_message(x, &sks[t as usize], &mut rng),
+                encrypt_message(y, &sks[t as usize], &mut rng),
+            ];
+            let resp = cluster.submit(SessionId(t), inputs).expect("submit");
+            pending.push((t, x, y, resp));
+        }
+    }
+    for (t, x, y, resp) in &pending {
+        let outs = resp.recv().expect("response");
+        let exp = interp::eval(&prog, &[*x, *y]);
+        let got: Vec<u64> =
+            outs.iter().map(|c| decrypt_message(c, &sks[*t as usize])).collect();
+        assert_eq!(got, exp, "session {t} query ({x},{y}) under its own key");
+    }
+    drop(pending);
+
+    let n = sessions as usize * requests_per_session;
+    let merged = cluster.snapshot();
+    let per_shard = cluster.shard_snapshots();
+    // Per-tenant metrics sum to cluster totals.
+    assert_eq!(merged.requests, n);
+    assert_eq!(merged.session_requests.len(), sessions as usize);
+    for t in 0..sessions {
+        assert_eq!(
+            merged.session_requests.get(&t),
+            Some(&(requests_per_session as u64)),
+            "session {t} request count"
+        );
+    }
+    assert_eq!(merged.session_requests.values().sum::<u64>() as usize, merged.requests);
+    assert_eq!(merged.requests, per_shard.iter().map(|s| s.requests).sum::<usize>());
+    // Measured KS/PBS still equal requests x the arch model's costs —
+    // multi-tenancy changes key bindings, never the op counts.
+    assert_eq!(merged.ks_executed, (n * sim.ks_count) as u64);
+    assert_eq!(merged.pbs_executed, n * sim.pbs_count);
+    // Consistent hash pinned each session to one shard, so each tenant's
+    // keys were generated exactly once cluster-wide — plus one extra miss
+    // per probe resolve above whose session is NOT homed on shard 0 (the
+    // probe then warmed a store the router never routes it to).
+    let ring = Router::new(PlacementPolicy::ConsistentHash, 4);
+    let probes_off_home =
+        [0u64, 1].iter().filter(|&&s| ring.place(s, Vec::new) != 0).count() as u64;
+    assert_eq!(
+        merged.key_misses,
+        sessions + probes_off_home,
+        "one keygen per session (+probes off their home shard)"
+    );
+    assert_eq!(merged.key_evictions, 0);
+    assert_eq!(merged.key_regenerations, 0);
+    assert_eq!(merged.key_resident as u64, sessions + probes_off_home);
+    cluster.shutdown();
+}
+
+#[test]
+fn static_keys_compat_is_bitwise_identical_on_randomized_program() {
+    // The single-tenant compat path (StaticKeys wrapper) must produce the
+    // SAME ciphertext bits as (a) the engine run directly and (b) an
+    // explicit-store cluster, on the randomized conformance program.
+    let mut rng = Rng::new(0xC0417);
+    let (prog, _report, input_domain) = random_program_for(&mut rng, &TEST1);
+    let keys = keycache::get(&TEST1, 0x7A95);
+    let plan = compile(&prog, &TEST1, CompileOpts::default());
+
+    let n = 6usize;
+    let queries: Vec<Vec<u64>> =
+        (0..n).map(|_| (0..2).map(|_| rng.below(input_domain)).collect()).collect();
+    let batch: Vec<Vec<LweCiphertext>> = queries
+        .iter()
+        .map(|q| q.iter().map(|&m| encrypt_message(m, &keys.sk, &mut rng)).collect())
+        .collect();
+
+    // Reference: the schedule-driven engine over the same plan and keys.
+    let mut eng = Engine::new(NativePbsBackend::new(&keys.server));
+    let reference = eng.run_plan_batch(&plan, &batch);
+
+    let run_cluster = |mk: &dyn Fn() -> Cluster| -> Vec<Vec<LweCiphertext>> {
+        let mut cluster = mk();
+        let pend: Vec<_> = batch
+            .iter()
+            .enumerate()
+            .map(|(i, cts)| cluster.submit(i as u64, cts.clone()).expect("submit"))
+            .collect();
+        let outs = pend.iter().map(|r| r.recv().expect("response")).collect();
+        drop(pend);
+        cluster.shutdown();
+        outs
+    };
+
+    let opts = || ClusterOptions {
+        shards: 2,
+        policy: PlacementPolicy::RoundRobin,
+        queue_depth: None,
+        coordinator: CoordinatorOptions {
+            workers: 1,
+            batch_capacity: 3,
+            max_batch_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    };
+    // Compat constructor: Arc<ServerKeys> wrapped in StaticKeys inside.
+    let compat = run_cluster(&|| Cluster::start(prog.clone(), keys.server.clone(), opts()));
+    // Explicit store form of the same thing.
+    let explicit = run_cluster(&|| {
+        let stores: Vec<Arc<dyn KeyStore>> = (0..2)
+            .map(|_| Arc::new(StaticKeys::new(keys.server.clone())) as Arc<dyn KeyStore>)
+            .collect();
+        Cluster::start_with_stores(prog.clone(), stores, opts())
+    });
+    assert_eq!(compat, reference, "compat cluster must equal the engine bitwise");
+    assert_eq!(explicit, reference, "explicit StaticKeys cluster must equal the engine bitwise");
+    // And the answers are right.
+    for (q, outs) in queries.iter().zip(&reference) {
+        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &keys.sk)).collect();
+        assert_eq!(got, interp::eval(&prog, q), "query {q:?}");
+    }
+}
+
+#[test]
+fn reshard_migrates_ring_delta_drains_inflight_and_preserves_outputs() {
+    let master_seed = 0x4E58;
+    let sessions = 8u64;
+    let (old_shards, new_shards) = (3usize, 4usize);
+    let prog = fanout_program();
+    let opts = || ClusterOptions {
+        shards: old_shards,
+        policy: PlacementPolicy::ConsistentHash,
+        queue_depth: None,
+        coordinator: shard_options(),
+    };
+    let mut cluster = Cluster::start_with_store_factory(
+        prog.clone(),
+        seeded_factory(master_seed, sessions as usize),
+        opts(),
+    );
+
+    let mut rng = Rng::new(77);
+    let sks: Vec<SecretKeys> =
+        (0..sessions).map(|t| client_secret(&TEST1, master_seed, SessionId(t))).collect();
+    let enc = |t: u64, x: u64, y: u64, rng: &mut Rng| -> Vec<LweCiphertext> {
+        vec![
+            encrypt_message(x, &sks[t as usize], rng),
+            encrypt_message(y, &sks[t as usize], rng),
+        ]
+    };
+
+    // Warm every session's keys onto its home shard.
+    let warm: Vec<_> = (0..sessions)
+        .map(|t| (t, cluster.submit(SessionId(t), enc(t, t % 6, (t * 3) % 6, &mut rng)).unwrap()))
+        .collect();
+    for (t, resp) in &warm {
+        let outs = resp.recv().expect("warm response");
+        let exp = interp::eval(&prog, &[t % 6, (t * 3) % 6]);
+        let got: Vec<u64> =
+            outs.iter().map(|c| decrypt_message(c, &sks[*t as usize])).collect();
+        assert_eq!(got, exp);
+    }
+    drop(warm);
+
+    // Submit WITHOUT receiving: these must drain through the reshard.
+    let inflight: Vec<_> = (0..sessions)
+        .map(|t| {
+            (t, cluster.submit(SessionId(t), enc(t, (t + 1) % 6, t % 6, &mut rng)).unwrap())
+        })
+        .collect();
+
+    // The ring's own prediction of who moves (the ownership delta).
+    let r_old = Router::new(PlacementPolicy::ConsistentHash, old_shards);
+    let r_new = Router::new(PlacementPolicy::ConsistentHash, new_shards);
+    let expected_moves = (0..sessions)
+        .filter(|&t| r_old.place(t, Vec::new) != r_new.place(t, Vec::new))
+        .count();
+
+    let report = cluster.reshard(new_shards);
+    assert_eq!(report.old_shards, old_shards);
+    assert_eq!(report.new_shards, new_shards);
+    assert_eq!(report.resident_before as u64, sessions, "all sessions were warm");
+    assert_eq!(
+        report.resident_after as u64, sessions,
+        "ample capacity: no migrated entry was displaced"
+    );
+    assert_eq!(
+        report.migrated, expected_moves,
+        "migration must match the consistent-hash ownership delta exactly"
+    );
+    // Mostly-stable, measured on the ring itself over a large population
+    // (the warm 8 sessions are too few to bound a fraction): growing one
+    // shard must re-home well under half the key space.
+    let moved_of_1000 = (0..1000u64)
+        .filter(|&s| r_old.place(s, Vec::new) != r_new.place(s, Vec::new))
+        .count();
+    assert!(
+        moved_of_1000 < 500,
+        "ring not mostly-stable: {moved_of_1000}/1000 sessions re-homed {old_shards}->{new_shards}"
+    );
+
+    // Nothing admitted before the reshard was lost or duplicated: the
+    // drained responses arrive exactly once, correct.
+    for (t, resp) in &inflight {
+        let outs = resp.recv().expect("drained across reshard");
+        let exp = interp::eval(&prog, &[(t + 1) % 6, t % 6]);
+        let got: Vec<u64> =
+            outs.iter().map(|c| decrypt_message(c, &sks[*t as usize])).collect();
+        assert_eq!(got, exp, "in-flight request of session {t} survived the drain");
+    }
+    drop(inflight);
+
+    // Migration preserved the cached material: post-reshard resolves are
+    // hits, never regenerations.
+    let pre_regen = cluster.snapshot().key_regenerations;
+    assert_eq!(pre_regen, 0, "migration must not regenerate");
+
+    // Post-reshard outputs are bitwise-equal to a FRESH cluster started
+    // at the new shard count (same master seed, same program): reshard
+    // converges to exactly the state a cold start would reach.
+    let queries: Vec<(u64, u64, u64)> =
+        (0..sessions).map(|t| (t, (t * 5 + 1) % 6, (t * 7 + 2) % 6)).collect();
+    let encrypted: Vec<Vec<LweCiphertext>> =
+        queries.iter().map(|&(t, x, y)| enc(t, x, y, &mut rng)).collect();
+
+    let submit_all = |cluster: &Cluster| -> Vec<Vec<LweCiphertext>> {
+        let pend: Vec<_> = queries
+            .iter()
+            .zip(&encrypted)
+            .map(|(&(t, _, _), cts)| cluster.submit(SessionId(t), cts.clone()).expect("submit"))
+            .collect();
+        pend.iter().map(|r| r.recv().expect("response")).collect()
+    };
+    let resharded_outs = submit_all(&cluster);
+    let mut fresh = Cluster::start_with_store_factory(
+        prog.clone(),
+        seeded_factory(master_seed, sessions as usize),
+        ClusterOptions { shards: new_shards, ..opts() },
+    );
+    let fresh_outs = submit_all(&fresh);
+    assert_eq!(
+        resharded_outs, fresh_outs,
+        "resharded cluster must be bitwise-identical to a fresh cluster at {new_shards} shards"
+    );
+    for (&(t, x, y), outs) in queries.iter().zip(&resharded_outs) {
+        let got: Vec<u64> =
+            outs.iter().map(|c| decrypt_message(c, &sks[t as usize])).collect();
+        assert_eq!(got, interp::eval(&prog, &[x, y]), "session {t} ({x},{y})");
+    }
+    fresh.shutdown();
+
+    // Lifetime accounting across the reshard: every admitted request is
+    // counted exactly once (warm + inflight + post-reshard), and the ops
+    // cross-check still holds against the shared plan's sim costs.
+    let merged = cluster.snapshot();
+    let total = 3 * sessions as usize;
+    assert_eq!(merged.requests, total, "no request lost or double-executed");
+    assert_eq!(merged.session_requests.values().sum::<u64>(), 3 * sessions);
+    let sim = simulate(cluster.plan(), &TaurusConfig::default());
+    assert_eq!(merged.ks_executed, (total * sim.ks_count) as u64);
+    assert_eq!(merged.pbs_executed, total * sim.pbs_count);
+    // Migration carried the cached material with the ring: the cluster
+    // paid exactly one keygen per session over its whole life — a
+    // re-homed session resolving post-reshard is a hit on the migrated
+    // entry, not a fresh miss on its new shard.
+    assert_eq!(merged.key_misses, sessions, "reshard must not cost new keygens");
+    assert_eq!(merged.key_regenerations, 0, "no keygen was ever repeated");
+    assert_eq!(merged.key_resident as u64, sessions, "no entry lost in migration");
+    cluster.shutdown();
+}
