@@ -1,0 +1,190 @@
+//! Fault-injection sweep: the cluster-serving workload pushed through a
+//! 2-shard supervised cluster under seed-derived fault plans of increasing
+//! intensity, emitting `BENCH_faults.json` (success rate, throughput under
+//! faults, and the recovery counters — retries, redirects, respawns,
+//! restarts, timeouts) so CI tracks robustness across PRs alongside
+//! `BENCH_cluster.json`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use harness::section;
+use taurus::cluster::{
+    Cluster, ClusterOptions, PlacementPolicy, StoreFactory, SupervisorOptions,
+};
+use taurus::coordinator::{BackendKind, CoordinatorOptions};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::params::TEST1;
+use taurus::runtime::faults::{FaultPlan, FaultSpec, FaultyStore};
+use taurus::tenant::{KeyStore, StaticKeys};
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::tfhe::{SecretKeys, ServerKeys};
+use taurus::util::json::{arr, num, obj, s, JsonValue};
+use taurus::util::rng::Rng;
+
+/// Fault intensity levels swept per seed. Horizons are sized to the
+/// ~12 batches a 48-request run produces at batch capacity 4 so the
+/// scheduled faults actually fire.
+fn spec_for(level: &str) -> FaultSpec {
+    match level {
+        "light" => FaultSpec {
+            op_horizon: 12,
+            panics: 1,
+            delays: 1,
+            delay: Duration::from_millis(5),
+            resolve_horizon: 48,
+            resolve_failures: 1,
+        },
+        "heavy" => FaultSpec {
+            op_horizon: 12,
+            panics: 4,
+            delays: 2,
+            delay: Duration::from_millis(10),
+            resolve_horizon: 48,
+            resolve_failures: 4,
+        },
+        _ => FaultSpec::none(),
+    }
+}
+
+fn main() {
+    // Same serving shape as bench_cluster: d = x + y fans out to two LUTs
+    // (one shared key switch, 2 PBS per request).
+    let mut b = ProgramBuilder::new("faults-bench", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.add(x, y);
+    let r0 = b.lut_fn(d, |m| (m + 1) % 16);
+    let r1 = b.lut_fn(d, |m| m ^ 1);
+    b.outputs(&[r0, r1]);
+    let prog = b.finish();
+
+    let mut rng = Rng::new(29);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+
+    let requests = 48usize;
+    let shards = 2usize;
+    let deadline = Duration::from_secs(30);
+    let coord_opts = CoordinatorOptions {
+        workers: 1,
+        batch_capacity: 4,
+        max_batch_wait: Duration::from_micros(500),
+        ..Default::default()
+    };
+
+    section(&format!(
+        "fault-injection sweep ({requests} requests, {shards} shards, TEST1)"
+    ));
+
+    let mut rows: Vec<JsonValue> = Vec::new();
+    // (seed, intensity); seed 0/"none" is the fault-free baseline the
+    // chaos rows are compared against.
+    let mut scenarios: Vec<(u64, &str)> = vec![(0, "none")];
+    for seed in 0u64..4 {
+        scenarios.push((seed, "light"));
+        scenarios.push((seed, "heavy"));
+    }
+
+    for (seed, level) in scenarios {
+        let faults = Arc::new(FaultPlan::from_seed(seed, &spec_for(level)));
+        let factory: StoreFactory = {
+            let keys = keys.clone();
+            let faults = faults.clone();
+            Arc::new(move |_shard| {
+                let inner = Arc::new(StaticKeys::new(keys.clone())) as Arc<dyn KeyStore>;
+                Arc::new(FaultyStore::new(inner, faults.clone())) as Arc<dyn KeyStore>
+            })
+        };
+        let mut coordinator = coord_opts.clone();
+        if level != "none" {
+            coordinator.backend = BackendKind::NativeChaos { faults: faults.clone() };
+        }
+        let mut cluster = Cluster::start_with_store_factory_supervised(
+            prog.clone(),
+            factory,
+            ClusterOptions {
+                shards,
+                policy: PlacementPolicy::RoundRobin,
+                queue_depth: None,
+                coordinator,
+            },
+            SupervisorOptions { max_retries: 2, restart_after_failures: 2, ..Default::default() },
+        );
+
+        let t0 = std::time::Instant::now();
+        let mut ok = 0usize;
+        let mut failed = 0usize;
+        let mut pending = Vec::new();
+        for i in 0..requests {
+            let inputs = vec![
+                encrypt_message((i % 6) as u64, &sk, &mut rng),
+                encrypt_message((i % 4) as u64, &sk, &mut rng),
+            ];
+            match cluster.submit_with_deadline(i as u64 % 8, inputs, deadline) {
+                Ok(r) => pending.push(r),
+                Err(_) => failed += 1,
+            }
+        }
+        for resp in &pending {
+            match resp.wait() {
+                Ok(_) => ok += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        drop(pending);
+
+        let snap = cluster.snapshot();
+        let inj = faults.injected();
+        let terminated = ok + failed == requests;
+        let success_rate = ok as f64 / requests as f64;
+        println!(
+            "seed={seed} intensity={level:<5} {:>8.1} req/s   success {:>5.1}%   retries {} redirects {} respawns {} restarts {} timeouts {}   {}",
+            requests as f64 / wall,
+            success_rate * 100.0,
+            snap.request_retries,
+            snap.request_redirects,
+            snap.worker_respawns,
+            snap.shard_restarts,
+            snap.request_timeouts,
+            if terminated { "all terminated" } else { "HANG" },
+        );
+        rows.push(obj(vec![
+            ("seed", num(seed as f64)),
+            ("intensity", s(level)),
+            ("requests", num(requests as f64)),
+            ("served", num(ok as f64)),
+            ("failed_typed", num(failed as f64)),
+            ("success_rate", num(success_rate)),
+            ("all_terminated", JsonValue::Bool(terminated)),
+            ("req_per_s", num(requests as f64 / wall)),
+            ("p99_latency_ms", num(snap.p99_latency_ms)),
+            ("injected_panics", num(inj.panics as f64)),
+            ("injected_delays", num(inj.delays as f64)),
+            ("injected_resolve_failures", num(inj.resolve_failures as f64)),
+            ("exec_failures", num(snap.exec_failures as f64)),
+            ("worker_respawns", num(snap.worker_respawns as f64)),
+            ("request_retries", num(snap.request_retries as f64)),
+            ("request_redirects", num(snap.request_redirects as f64)),
+            ("shard_restarts", num(snap.shard_restarts as f64)),
+            ("request_timeouts", num(snap.request_timeouts as f64)),
+        ]));
+        cluster.shutdown();
+    }
+
+    let report = obj(vec![
+        ("bench", s("faults")),
+        ("requests", num(requests as f64)),
+        ("shards", num(shards as f64)),
+        ("results", arr(rows)),
+    ]);
+    let path = "BENCH_faults.json";
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -26,7 +26,7 @@
 //! let answer = decrypt_message(&resp.recv()?[0], &sk);
 //!
 //! // 4. Scale live: drain, rebuild the hash ring, migrate cached keys.
-//! let report = cluster.reshard(shards + 2);
+//! let report = cluster.reshard(shards + 2)?;
 //! ```
 //!
 //! Single-tenant code keeps working: `Cluster::start(prog, keys, opts)`
@@ -159,7 +159,8 @@ fn main() {
                 let outs = r.recv().expect("response");
                 correct += usize::from(decrypt_message(&outs[0], &sks[t]) == exp);
             }
-            let report = cluster.reshard(shards + grow);
+            let report =
+                cluster.reshard(shards + grow).expect("factory-backed cluster reshards freely");
             println!(
                 "reshard: {} -> {} shards, {}/{} cached tenant keys migrated with the ring",
                 report.old_shards, report.new_shards, report.migrated, report.resident_before

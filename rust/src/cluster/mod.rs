@@ -24,11 +24,20 @@
 //! and [`Cluster::reshard`] changes the shard count live — draining
 //! in-flight work, rebuilding the hash ring, and migrating the key-cache
 //! entries whose ring ownership moved.
+//!
+//! The cluster is also the fault-tolerance layer: a supervisor thread
+//! tracks per-shard health ([`HealthState`], from consecutive batch
+//! failures and queue age), placement skips `Down` shards, failed
+//! requests are retried on healthy shards within a bounded budget
+//! ([`SupervisorOptions`]), and a shard that keeps failing is quarantined
+//! and restarted over its existing key store. Growth past fixed per-shard
+//! key material is a typed [`ReshardError`], not a panic.
 
 pub mod router;
 pub mod serve;
 
-pub use router::{PlacementPolicy, Router};
+pub use router::{HealthState, PlacementPolicy, Router};
 pub use serve::{
-    Cluster, ClusterError, ClusterOptions, ClusterResponse, ReshardReport, StoreFactory,
+    Cluster, ClusterError, ClusterOptions, ClusterResponse, ReshardError, ReshardReport,
+    StoreFactory, SupervisorOptions,
 };

@@ -10,8 +10,49 @@
 //! - **consistent-hash** on the client id — pins a client to one shard so
 //!   per-client state (key caches, session accumulators) stays warm; the
 //!   hash ring keeps most assignments stable when the shard count changes.
+//!
+//! The router also tracks per-shard **health** ([`HealthState`]), fed by
+//! the cluster supervisor from two signals: consecutive batch failures
+//! ([`Router::record_failure`]) and queue age ([`Router::set_stall`]).
+//! Placement skips `Down` shards — each policy falls forward to its next
+//! deterministic choice — and degrades gracefully to the original pick
+//! when every shard is down (the submit then fails with a typed error
+//! instead of misrouting silently).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU8, AtomicUsize, Ordering};
+
+/// Supervisor's view of one shard. Order matters: `Down` is worse than
+/// `Degraded` is worse than `Healthy`, and a shard's effective health is
+/// the max of its failure-streak and stall signals.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthState {
+    /// Serving normally; placement considers it.
+    Healthy,
+    /// Recent failures or an aging queue; still placed (the shard is
+    /// recovering), but one more strike downs it.
+    Degraded,
+    /// Quarantined: placement skips it until the supervisor restarts it
+    /// and marks it healthy.
+    Down,
+}
+
+impl HealthState {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => Self::Healthy,
+            1 => Self::Degraded,
+            _ => Self::Down,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Healthy => "healthy",
+            Self::Degraded => "degraded",
+            Self::Down => "down",
+        }
+    }
+}
 
 /// How the [`Router`](Router) picks a shard for a request.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -90,11 +131,30 @@ pub struct Router {
     rr_next: AtomicUsize,
     /// Sorted (point, shard) virtual nodes; empty unless consistent-hash.
     ring: Vec<(u64, usize)>,
+    /// Consecutive batch-failure count per shard (reset by
+    /// [`Self::mark_healthy`]).
+    fail_streak: Vec<AtomicU32>,
+    /// Queue-age signal per shard, encoded as [`HealthState`] in a `u8`
+    /// (recomputed each supervisor tick, so it clears itself when the
+    /// shard makes progress again).
+    stall: Vec<AtomicU8>,
+    /// Consecutive failures at which a shard goes `Down`.
+    down_after: u32,
 }
+
+/// Consecutive failures before quarantine, absent an explicit setting.
+pub(crate) const DEFAULT_DOWN_AFTER: u32 = 3;
 
 impl Router {
     pub fn new(policy: PlacementPolicy, shards: usize) -> Self {
+        Self::new_with_health(policy, shards, DEFAULT_DOWN_AFTER)
+    }
+
+    /// A router whose shards go `Down` after `down_after` consecutive
+    /// recorded failures (`>= 1`).
+    pub fn new_with_health(policy: PlacementPolicy, shards: usize, down_after: u32) -> Self {
         assert!(shards >= 1, "router needs at least one shard");
+        assert!(down_after >= 1, "down_after 0 would quarantine healthy shards");
         let mut ring = Vec::new();
         if policy == PlacementPolicy::ConsistentHash {
             ring.reserve(shards * VNODES);
@@ -108,37 +168,110 @@ impl Router {
             }
             ring.sort_unstable();
         }
-        Self { policy, shards, rr_next: AtomicUsize::new(0), ring }
+        Self {
+            policy,
+            shards,
+            rr_next: AtomicUsize::new(0),
+            ring,
+            fail_streak: (0..shards).map(|_| AtomicU32::new(0)).collect(),
+            stall: (0..shards).map(|_| AtomicU8::new(0)).collect(),
+            down_after,
+        }
     }
 
     pub fn policy(&self) -> PlacementPolicy {
         self.policy
     }
 
-    /// Pick the shard for one request. `outstanding` supplies the current
-    /// per-shard inflight counts; it is a closure so the other policies
-    /// don't pay for gathering counts they never read.
+    /// Record one batch failure on `shard`; returns its new effective
+    /// health (consecutive-failure signal: 1 strike degrades,
+    /// `down_after` strikes quarantine).
+    pub fn record_failure(&self, shard: usize) -> HealthState {
+        self.fail_streak[shard].fetch_add(1, Ordering::SeqCst);
+        self.health(shard)
+    }
+
+    /// Clear `shard`'s failure streak and stall signal (after a restart,
+    /// or on observed success).
+    pub fn mark_healthy(&self, shard: usize) {
+        self.fail_streak[shard].store(0, Ordering::SeqCst);
+        self.stall[shard].store(0, Ordering::SeqCst);
+    }
+
+    /// Set `shard`'s queue-age signal (the supervisor recomputes this
+    /// every tick from the shard's time-since-progress, so it is a level,
+    /// not a latch).
+    pub fn set_stall(&self, shard: usize, state: HealthState) {
+        self.stall[shard].store(state as u8, Ordering::SeqCst);
+    }
+
+    /// Effective health: the worse of the failure-streak and queue-age
+    /// signals.
+    pub fn health(&self, shard: usize) -> HealthState {
+        let streak = self.fail_streak[shard].load(Ordering::SeqCst);
+        let from_streak = if streak >= self.down_after {
+            HealthState::Down
+        } else if streak >= 1 {
+            HealthState::Degraded
+        } else {
+            HealthState::Healthy
+        };
+        let from_stall = HealthState::from_u8(self.stall[shard].load(Ordering::SeqCst));
+        from_streak.max(from_stall)
+    }
+
+    /// Effective health of every shard, indexed by shard id.
+    pub fn healths(&self) -> Vec<HealthState> {
+        (0..self.shards).map(|s| self.health(s)).collect()
+    }
+
+    fn is_down(&self, shard: usize) -> bool {
+        self.health(shard) == HealthState::Down
+    }
+
+    /// Pick the shard for one request, skipping `Down` shards. `outstanding`
+    /// supplies the current per-shard inflight counts; it is a closure so
+    /// the other policies don't pay for gathering counts they never read.
+    /// With every shard healthy each policy picks exactly what it always
+    /// did; with every shard down the original pick is returned and the
+    /// submit fails downstream with a typed error.
     pub fn place(&self, client_id: u64, outstanding: impl FnOnce() -> Vec<usize>) -> usize {
         match self.policy {
             PlacementPolicy::RoundRobin => {
-                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.shards
+                let cursor = self.rr_next.fetch_add(1, Ordering::Relaxed) % self.shards;
+                // Walk forward from the cursor to the first live shard;
+                // offset 0 is the cursor itself, so the healthy path is
+                // bit-identical to plain round-robin.
+                (0..self.shards)
+                    .map(|k| (cursor + k) % self.shards)
+                    .find(|&s| !self.is_down(s))
+                    .unwrap_or(cursor)
             }
             // Keyed (n, i) so ties deterministically break to the lowest
             // index (`min_by_key` alone keeps the *last* minimum).
             PlacementPolicy::LeastOutstanding => {
                 let counts = outstanding();
                 debug_assert_eq!(counts.len(), self.shards);
-                counts
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|&(i, &n)| (n, i))
-                    .map(|(i, _)| i)
-                    .unwrap_or(0)
+                let pick = |include_down: bool| {
+                    counts
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| include_down || !self.is_down(i))
+                        .min_by_key(|&(i, &n)| (n, i))
+                        .map(|(i, _)| i)
+                };
+                pick(false).or_else(|| pick(true)).unwrap_or(0)
             }
             PlacementPolicy::ConsistentHash => {
                 let h = point(&client_id.to_le_bytes());
                 let i = self.ring.partition_point(|&(p, _)| p < h);
-                self.ring[i % self.ring.len()].1
+                // Walk the ring past down shards: the fallback owner is
+                // the next live shard clockwise, the standard ring
+                // fail-over (deterministic per client).
+                (0..self.ring.len())
+                    .map(|k| self.ring[(i + k) % self.ring.len()].1)
+                    .find(|&s| !self.is_down(s))
+                    .unwrap_or(self.ring[i % self.ring.len()].1)
             }
         }
     }
@@ -233,6 +366,67 @@ mod tests {
             PlacementPolicy::parse("Consistent-Hash"),
             Some(PlacementPolicy::ConsistentHash)
         );
+    }
+
+    #[test]
+    fn failure_streak_degrades_then_downs_and_mark_healthy_resets() {
+        let r = Router::new_with_health(PlacementPolicy::RoundRobin, 2, 3);
+        assert_eq!(r.health(0), HealthState::Healthy);
+        assert_eq!(r.record_failure(0), HealthState::Degraded);
+        assert_eq!(r.record_failure(0), HealthState::Degraded);
+        assert_eq!(r.record_failure(0), HealthState::Down);
+        assert_eq!(r.healths(), vec![HealthState::Down, HealthState::Healthy]);
+        r.mark_healthy(0);
+        assert_eq!(r.health(0), HealthState::Healthy);
+        // Stall is a level combined by max: a degraded stall on a shard
+        // with failures keeps the worse state.
+        r.set_stall(1, HealthState::Down);
+        assert_eq!(r.health(1), HealthState::Down);
+        r.set_stall(1, HealthState::Healthy);
+        assert_eq!(r.health(1), HealthState::Healthy);
+    }
+
+    #[test]
+    fn round_robin_skips_down_shards_and_recovers() {
+        let r = Router::new_with_health(PlacementPolicy::RoundRobin, 3, 1);
+        assert_eq!(r.record_failure(1), HealthState::Down);
+        let picks: Vec<usize> = (0..6).map(|_| r.place(0, no_counts)).collect();
+        assert_eq!(picks, vec![0, 2, 2, 0, 2, 2], "cursor 1 falls forward to shard 2");
+        r.mark_healthy(1);
+        let picks: Vec<usize> = (0..3).map(|_| r.place(0, no_counts)).collect();
+        assert_eq!(picks, vec![0, 1, 2], "restored shard rejoins the cycle");
+    }
+
+    #[test]
+    fn least_outstanding_ignores_down_shards_unless_all_down() {
+        let r = Router::new_with_health(PlacementPolicy::LeastOutstanding, 3, 1);
+        r.record_failure(0);
+        assert_eq!(r.place(0, || vec![0, 4, 2]), 2, "shortest live queue, not the down shard");
+        r.record_failure(1);
+        r.record_failure(2);
+        assert_eq!(r.place(0, || vec![0, 4, 2]), 0, "all down: degrade to the plain pick");
+    }
+
+    #[test]
+    fn consistent_hash_fails_over_deterministically_and_returns_home() {
+        let r = Router::new_with_health(PlacementPolicy::ConsistentHash, 4, 1);
+        let homes: Vec<usize> = (0..50u64).map(|c| r.place(c, no_counts)).collect();
+        let down = homes[0];
+        r.record_failure(down);
+        for (c, &home) in homes.iter().enumerate() {
+            let moved = r.place(c as u64, no_counts);
+            assert_ne!(moved, down, "client {c} placed on a down shard");
+            if home != down {
+                assert_eq!(moved, home, "client {c} moved although its home shard is live");
+            } else {
+                // Fail-over target is stable per client.
+                assert_eq!(r.place(c as u64, no_counts), moved);
+            }
+        }
+        r.mark_healthy(down);
+        for (c, &home) in homes.iter().enumerate() {
+            assert_eq!(r.place(c as u64, no_counts), home, "client {c} must return home");
+        }
     }
 
     #[test]

@@ -16,10 +16,22 @@
 //! Admission is permit-based: [`Cluster::submit`] atomically claims one of
 //! `queue_depth` slots and hands the permit to the returned
 //! [`ClusterResponse`]; the slot is released when the client drops the
-//! handle (normally right after `recv`). At depth, `submit` fails fast
-//! with [`ClusterError::ClusterFull`] instead of queueing unboundedly —
-//! callers shed load or retry after draining, exactly the backpressure a
-//! front door needs at millions-of-users scale.
+//! handle (normally right after `recv`) — or immediately when a deadline
+//! expires, so slow shards cannot leak queue capacity. At depth, `submit`
+//! fails fast with [`ClusterError::ClusterFull`] instead of queueing
+//! unboundedly — callers shed load or retry after draining, exactly the
+//! backpressure a front door needs at millions-of-users scale.
+//!
+//! **Supervision.** A supervisor thread watches the shards: every failed
+//! batch reports each of its requests on a failure channel, the router
+//! tracks per-shard health (consecutive failures + queue age), a shard
+//! that crosses the failure threshold is quarantined and restarted *with
+//! the same key store* (warm keys, no regeneration), and each failed
+//! request is re-dispatched to a healthy shard up to
+//! [`SupervisorOptions::max_retries`] times — safe because plan execution
+//! is deterministic and a request only ever fails *before* producing a
+//! response. Requests that exhaust their retries fail their ticket with a
+//! typed error; nothing ever hangs.
 //!
 //! [`Cluster::reshard`] changes the shard count live: admissions pause
 //! (the call holds `&mut self`), every in-flight request drains through
@@ -29,13 +41,18 @@
 //! regeneration) into the new owner's.
 
 use std::fmt;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{Receiver, RecvError};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, PoisonError, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
 
-use super::router::{PlacementPolicy, Router};
+use super::router::{HealthState, PlacementPolicy, Router, DEFAULT_DOWN_AFTER};
 use crate::compiler::{self, CompiledPlan};
-use crate::coordinator::{Coordinator, CoordinatorOptions, MetricsSnapshot, SubmitError};
+use crate::coordinator::server::{FailedRequest, FailureSink};
+use crate::coordinator::{
+    Coordinator, CoordinatorOptions, MetricsSnapshot, RequestError, SubmitError, Ticket,
+};
 use crate::ir::Program;
 use crate::tenant::{KeyStore, KeyStoreStats, SessionId, StaticKeys};
 use crate::tfhe::{LweCiphertext, ServerKeys};
@@ -44,8 +61,8 @@ use crate::tfhe::{LweCiphertext, ServerKeys};
 /// cluster creates stores at startup and for shards added by
 /// [`Cluster::reshard`]. Factories for seeded tenant stores typically
 /// ignore the index (every shard derives the same per-session bits from
-/// the master seed); factories over fixed per-shard key vectors panic
-/// past their length.
+/// the master seed); clusters built over fixed per-shard key vectors
+/// cannot grow past their length ([`ReshardError::FixedStores`]).
 pub type StoreFactory = Arc<dyn Fn(usize) -> Arc<dyn KeyStore> + Send + Sync>;
 
 #[derive(Debug, Clone)]
@@ -74,6 +91,38 @@ impl Default for ClusterOptions {
     }
 }
 
+/// Fault-tolerance knobs for the cluster supervisor (separate from
+/// [`ClusterOptions`] so existing construction sites keep compiling; the
+/// defaults apply unless a `*_supervised` constructor overrides them).
+#[derive(Debug, Clone)]
+pub struct SupervisorOptions {
+    /// Re-dispatches per failed request before its ticket fails with
+    /// [`RequestError::ExecFailed`].
+    pub max_retries: u32,
+    /// Consecutive batch failures at which a shard is quarantined
+    /// (`Down`, skipped by placement) and restarted.
+    pub restart_after_failures: u32,
+    /// Queue-age threshold: a shard with in-flight requests but no
+    /// worker progress for this long is marked `Degraded`, and `Down` at
+    /// twice this (recomputed every poll tick — the signal clears itself
+    /// when the shard moves again; stalled shards are routed around, not
+    /// restarted, since joining stuck workers could hang the supervisor).
+    pub stall_after: Duration,
+    /// Supervisor poll interval (failure-event wait + stall sweep).
+    pub poll: Duration,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> Self {
+        Self {
+            max_retries: 2,
+            restart_after_failures: DEFAULT_DOWN_AFTER,
+            stall_after: Duration::from_millis(500),
+            poll: Duration::from_millis(20),
+        }
+    }
+}
+
 /// Error returned by [`Cluster::submit`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ClusterError {
@@ -81,8 +130,10 @@ pub enum ClusterError {
     ClusterFull,
     /// The routed shard's own `max_queue_depth` bound fired.
     ShardFull,
-    /// The cluster (or the routed shard) has shut down.
+    /// The cluster (or every candidate shard) has shut down.
     Stopped,
+    /// No candidate shard could resolve the session's keys.
+    ResolveFailed,
 }
 
 impl fmt::Display for ClusterError {
@@ -91,11 +142,38 @@ impl fmt::Display for ClusterError {
             ClusterError::ClusterFull => f.write_str("cluster admission queue full"),
             ClusterError::ShardFull => f.write_str("routed shard queue full"),
             ClusterError::Stopped => f.write_str("cluster stopped"),
+            ClusterError::ResolveFailed => f.write_str("session key resolution failed"),
         }
     }
 }
 
 impl std::error::Error for ClusterError {}
+
+/// Error returned by [`Cluster::reshard`]. The cluster is untouched when
+/// this is returned: still accepting, topology unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReshardError {
+    /// Growing past the fixed per-shard keys/stores provided at
+    /// construction ([`Cluster::start_with_shard_keys`] /
+    /// [`Cluster::start_with_stores`]): those constructors cannot mint
+    /// material for new shards — build with
+    /// [`Cluster::start_with_store_factory`] to grow freely.
+    FixedStores { provided: usize, requested: usize },
+}
+
+impl fmt::Display for ReshardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReshardError::FixedStores { provided, requested } => write!(
+                f,
+                "cannot reshard to {requested} shards: only {provided} fixed key \
+                 stores were provided at construction (growing needs a store factory)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ReshardError {}
 
 /// One slot in the shared admission queue; releases on drop.
 #[derive(Debug)]
@@ -124,19 +202,33 @@ impl Drop for AdmissionPermit {
 /// A pending response plus its admission slot. The slot frees when this
 /// handle is dropped, so a client that holds N handles occupies N of the
 /// cluster's `queue_depth` — backpressure is deterministic, independent of
-/// worker timing.
+/// worker timing. A deadline expiry ([`RequestError::RequestTimeout`])
+/// releases the slot immediately, so a slow shard cannot leak queue
+/// capacity through abandoned waits.
 #[derive(Debug)]
 pub struct ClusterResponse {
-    rx: Receiver<Vec<LweCiphertext>>,
+    ticket: Ticket,
     /// Which shard served this request (useful for affinity checks).
     pub shard: usize,
-    _permit: AdmissionPermit,
+    permit: Mutex<Option<AdmissionPermit>>,
 }
 
 impl ClusterResponse {
-    /// Wait for the decryptable output ciphertexts.
-    pub fn recv(&self) -> Result<Vec<LweCiphertext>, RecvError> {
-        self.rx.recv()
+    /// Wait for this request to terminate: output ciphertexts or a typed
+    /// [`RequestError`] — never a hang.
+    pub fn wait(&self) -> Result<Vec<LweCiphertext>, RequestError> {
+        let r = self.ticket.wait();
+        if matches!(r, Err(RequestError::RequestTimeout)) {
+            // The request may still be executing server-side, but its
+            // admission slot frees NOW: deadlines bound queue occupancy.
+            self.permit.lock().unwrap_or_else(PoisonError::into_inner).take();
+        }
+        r
+    }
+
+    /// Alias for [`Self::wait`].
+    pub fn recv(&self) -> Result<Vec<LweCiphertext>, RequestError> {
+        self.wait()
     }
 }
 
@@ -165,24 +257,56 @@ pub struct ReshardReport {
     pub resident_after: usize,
 }
 
+/// State shared between client handles and the supervisor thread. Lock
+/// order (when several are held): `shards` -> `stores` -> `router`.
+struct Shared {
+    shards: RwLock<Vec<Coordinator>>,
+    stores: RwLock<Vec<Arc<dyn KeyStore>>>,
+    router: RwLock<Router>,
+    /// Metrics of coordinators drained by reshards and restarts
+    /// (request-path counters only — surviving stores keep reporting
+    /// their own cumulative counters through the live shards).
+    retired: Mutex<Vec<MetricsSnapshot>>,
+    /// Topology generation, bumped by [`Cluster::reshard`]. Failure
+    /// events from an older generation reference shard ids that may no
+    /// longer exist; they are failed terminally (typed), never retried
+    /// against the new topology and never dropped.
+    generation: AtomicU64,
+    retries: AtomicU64,
+    redirects: AtomicU64,
+    restarts: AtomicU64,
+}
+
+fn read<T>(l: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn write<T>(l: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// N replicated serving engines behind one admission-controlled router,
-/// each shard resolving session keys through its own shard-local store.
+/// each shard resolving session keys through its own shard-local store,
+/// watched by a supervisor thread that retries failed requests and
+/// restarts failed shards.
 pub struct Cluster {
-    shards: Vec<Coordinator>,
-    stores: Vec<Arc<dyn KeyStore>>,
+    shared: Arc<Shared>,
     factory: StoreFactory,
-    router: Router,
+    policy: PlacementPolicy,
     coordinator_opts: CoordinatorOptions,
+    supervision: SupervisorOptions,
     admitted: Arc<AtomicUsize>,
     queue_depth: Option<usize>,
     plan: Arc<CompiledPlan>,
     accepting: bool,
-    /// Metrics of shards drained by past reshards (request-path counters
-    /// only — surviving stores keep reporting their own cumulative
-    /// counters through the live shards).
-    retired: Vec<MetricsSnapshot>,
+    /// `Some(n)` when construction provided exactly `n` fixed stores:
+    /// [`Self::reshard`] cannot grow past it.
+    store_limit: Option<usize>,
     /// Final counters of stores dropped by past shrinks.
     retired_key_stats: KeyStoreStats,
+    failure_tx: Sender<FailedRequest>,
+    supervisor: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
 }
 
 impl Cluster {
@@ -197,8 +321,9 @@ impl Cluster {
 
     /// Start with per-shard keys (all generated for the same parameter
     /// set); `shard_keys.len()` overrides `opts.shards`. Growing past the
-    /// provided keys via [`Self::reshard`] panics — fixed per-shard key
-    /// vectors cannot invent material for new shards.
+    /// provided keys via [`Self::reshard`] returns
+    /// [`ReshardError::FixedStores`] — fixed per-shard key vectors cannot
+    /// invent material for new shards.
     pub fn start_with_shard_keys(
         program: Program,
         shard_keys: Vec<Arc<ServerKeys>>,
@@ -207,26 +332,24 @@ impl Cluster {
         assert!(!shard_keys.is_empty(), "cluster needs at least one shard");
         let mut opts = opts;
         opts.shards = shard_keys.len();
+        let limit = shard_keys.len();
         let factory: StoreFactory = Arc::new(move |shard| {
+            // In range by construction: reshard gates growth on the store
+            // limit before ever calling the factory.
             let keys = shard_keys
                 .get(shard)
-                .unwrap_or_else(|| {
-                    panic!(
-                        "no server keys for shard {shard}: start_with_shard_keys provided \
-                         {} fixed key sets; growing needs start_with_store_factory",
-                        shard_keys.len()
-                    )
-                })
+                .expect("shard index within the fixed key vector (gated by store_limit)")
                 .clone();
             Arc::new(StaticKeys::new(keys)) as Arc<dyn KeyStore>
         });
-        Self::start_with_store_factory(program, factory, opts)
+        Self::start_inner(program, factory, opts, SupervisorOptions::default(), Some(limit))
     }
 
     /// Start with explicit shard-local stores (`stores.len()` overrides
     /// `opts.shards`). Growing past the provided stores via
-    /// [`Self::reshard`] panics; use [`Self::start_with_store_factory`]
-    /// when the cluster must be able to mint stores for new shards.
+    /// [`Self::reshard`] returns [`ReshardError::FixedStores`]; use
+    /// [`Self::start_with_store_factory`] when the cluster must be able
+    /// to mint stores for new shards.
     pub fn start_with_stores(
         program: Program,
         stores: Vec<Arc<dyn KeyStore>>,
@@ -235,19 +358,14 @@ impl Cluster {
         assert!(!stores.is_empty(), "cluster needs at least one shard");
         let mut opts = opts;
         opts.shards = stores.len();
+        let limit = stores.len();
         let factory: StoreFactory = Arc::new(move |shard| {
             stores
                 .get(shard)
-                .unwrap_or_else(|| {
-                    panic!(
-                        "no key store for shard {shard}: start_with_stores provided {}; \
-                         growing needs start_with_store_factory",
-                        stores.len()
-                    )
-                })
+                .expect("shard index within the fixed store vector (gated by store_limit)")
                 .clone()
         });
-        Self::start_with_store_factory(program, factory, opts)
+        Self::start_inner(program, factory, opts, SupervisorOptions::default(), Some(limit))
     }
 
     /// The primary session-keyed constructor: `factory(i)` builds shard
@@ -257,6 +375,27 @@ impl Cluster {
         program: Program,
         factory: StoreFactory,
         opts: ClusterOptions,
+    ) -> Self {
+        Self::start_inner(program, factory, opts, SupervisorOptions::default(), None)
+    }
+
+    /// [`Self::start_with_store_factory`] with explicit fault-tolerance
+    /// knobs (retry budget, quarantine threshold, stall windows).
+    pub fn start_with_store_factory_supervised(
+        program: Program,
+        factory: StoreFactory,
+        opts: ClusterOptions,
+        supervision: SupervisorOptions,
+    ) -> Self {
+        Self::start_inner(program, factory, opts, supervision, None)
+    }
+
+    fn start_inner(
+        program: Program,
+        factory: StoreFactory,
+        opts: ClusterOptions,
+        supervision: SupervisorOptions,
+        store_limit: Option<usize>,
     ) -> Self {
         let shards = opts.shards;
         assert!(shards >= 1, "cluster needs at least one shard");
@@ -277,29 +416,58 @@ impl Cluster {
         // Compile once; every shard executes (and `arch::sim` costs) the
         // same artifact.
         let plan = Arc::new(compiler::compile(&program, &params, opts.coordinator.plan_capacity));
+        let (failure_tx, failure_rx) = channel::<FailedRequest>();
         let shard_coords: Vec<Coordinator> = stores
             .iter()
-            .map(|store| {
-                Coordinator::start_with_plan_store(
+            .enumerate()
+            .map(|(i, store)| {
+                Coordinator::start_supervised(
                     plan.clone(),
                     store.clone(),
                     opts.coordinator.clone(),
+                    Some(FailureSink { shard: i, generation: 0, tx: failure_tx.clone() }),
                 )
             })
             .collect();
-        let router = Router::new(opts.policy, shards);
+        let router =
+            Router::new_with_health(opts.policy, shards, supervision.restart_after_failures);
+        let shared = Arc::new(Shared {
+            shards: RwLock::new(shard_coords),
+            stores: RwLock::new(stores),
+            router: RwLock::new(router),
+            retired: Mutex::new(Vec::new()),
+            generation: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            redirects: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let supervisor = {
+            let shared = shared.clone();
+            let plan = plan.clone();
+            let coord_opts = opts.coordinator.clone();
+            let failure_tx = failure_tx.clone();
+            let sup = supervision.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                supervisor_loop(shared, failure_rx, plan, coord_opts, failure_tx, sup, stop)
+            })
+        };
         Self {
-            shards: shard_coords,
-            stores,
+            shared,
             factory,
-            router,
+            policy: opts.policy,
             coordinator_opts: opts.coordinator,
+            supervision,
             admitted: Arc::new(AtomicUsize::new(0)),
             queue_depth: opts.queue_depth,
             plan,
             accepting: true,
-            retired: Vec::new(),
+            store_limit,
             retired_key_stats: KeyStoreStats::default(),
+            failure_tx,
+            supervisor: Some(supervisor),
+            stop,
         }
     }
 
@@ -309,16 +477,22 @@ impl Cluster {
     }
 
     pub fn shard_count(&self) -> usize {
-        self.shards.len()
+        read(&self.shared.shards).len()
     }
 
     pub fn policy(&self) -> PlacementPolicy {
-        self.router.policy()
+        self.policy
     }
 
     /// The shard-local key stores, indexed by shard id.
-    pub fn stores(&self) -> &[Arc<dyn KeyStore>] {
-        &self.stores
+    pub fn stores(&self) -> Vec<Arc<dyn KeyStore>> {
+        read(&self.shared.stores).clone()
+    }
+
+    /// Current supervisor view of every shard's health, indexed by shard
+    /// id.
+    pub fn shard_healths(&self) -> Vec<HealthState> {
+        read(&self.shared.router).healths()
     }
 
     /// Currently admitted (undropped) responses across the cluster.
@@ -337,43 +511,101 @@ impl Cluster {
         session: impl Into<SessionId>,
         inputs: Vec<LweCiphertext>,
     ) -> Result<ClusterResponse, ClusterError> {
+        self.submit_inner(session.into(), inputs, None)
+    }
+
+    /// [`Self::submit`] with a per-request deadline: the response's
+    /// `wait()` yields [`RequestError::RequestTimeout`] once `deadline`
+    /// elapses, releasing the admission slot immediately.
+    pub fn submit_with_deadline(
+        &self,
+        session: impl Into<SessionId>,
+        inputs: Vec<LweCiphertext>,
+        deadline: Duration,
+    ) -> Result<ClusterResponse, ClusterError> {
+        self.submit_inner(session.into(), inputs, Some(deadline))
+    }
+
+    fn submit_inner(
+        &self,
+        session: SessionId,
+        mut inputs: Vec<LweCiphertext>,
+        deadline: Option<Duration>,
+    ) -> Result<ClusterResponse, ClusterError> {
         if !self.accepting {
             return Err(ClusterError::Stopped);
         }
-        let session = session.into();
         // The permit is dropped (slot released) on any error path below.
         let permit = AdmissionPermit::acquire(&self.admitted, self.queue_depth)?;
+        let shards = read(&self.shared.shards);
+        let router = read(&self.shared.router);
         // Outstanding counts are gathered lazily — only the
-        // least-outstanding policy reads them.
-        let shard = self.router.place(session.0, || {
-            self.shards.iter().map(|c| c.inflight.load(Ordering::SeqCst)).collect()
+        // least-outstanding policy reads them. Placement already skips
+        // `Down` shards.
+        let first = router.place(session.0, || {
+            shards.iter().map(|c| c.inflight.load(Ordering::SeqCst)).collect()
         });
-        let rx = self.shards[shard].submit_for(session, inputs).map_err(|e| match e {
-            SubmitError::Stopped => ClusterError::Stopped,
-            SubmitError::QueueFull => ClusterError::ShardFull,
-        })?;
-        Ok(ClusterResponse { rx, shard, _permit: permit })
+        let n = shards.len();
+        let mut last = ClusterError::Stopped;
+        for k in 0..n {
+            let shard = (first + k) % n;
+            if k > 0 && router.health(shard) == HealthState::Down {
+                continue;
+            }
+            match shards[shard].try_submit(session, inputs, deadline) {
+                Ok(ticket) => {
+                    if k > 0 {
+                        self.shared.redirects.fetch_add(1, Ordering::SeqCst);
+                    }
+                    return Ok(ClusterResponse {
+                        ticket,
+                        shard,
+                        permit: Mutex::new(Some(permit)),
+                    });
+                }
+                // Shard backpressure is NOT redirected: spilling onto the
+                // next shard would defeat the per-shard bound (and change
+                // fault-free placement). The caller sheds load.
+                Err((SubmitError::QueueFull, _)) => return Err(ClusterError::ShardFull),
+                Err((e, returned)) => {
+                    inputs = returned;
+                    last = match e {
+                        SubmitError::Stopped => ClusterError::Stopped,
+                        SubmitError::ResolveFailed => ClusterError::ResolveFailed,
+                        SubmitError::QueueFull => unreachable!("handled above"),
+                    };
+                }
+            }
+        }
+        Err(last)
     }
 
     /// Per-shard metrics (request-path counters + the shard store's key
     /// counters), indexed by shard id.
     pub fn shard_snapshots(&self) -> Vec<MetricsSnapshot> {
-        self.shards.iter().map(|c| c.snapshot()).collect()
+        read(&self.shared.shards).iter().map(|c| c.snapshot()).collect()
     }
 
     /// Aggregate cluster metrics: counters summed (including per-tenant
     /// request counts and key-cache counters), percentiles recomputed
     /// over the concatenated samples ([`MetricsSnapshot::merge`]).
-    /// Includes shards drained by past [`Self::reshard`] calls, so totals
-    /// are lifetime totals: every admitted request appears exactly once.
+    /// Includes shards drained by past [`Self::reshard`] calls and
+    /// supervisor restarts, so totals are lifetime totals: every admitted
+    /// request appears exactly once. The cluster-level recovery counters
+    /// (`request_retries`, `request_redirects`, `shard_restarts`) are
+    /// filled here — per-shard snapshots report them as zero.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut all = self.retired.clone();
+        let mut all =
+            self.shared.retired.lock().unwrap_or_else(PoisonError::into_inner).clone();
         all.extend(self.shard_snapshots());
         let mut merged = MetricsSnapshot::merge(&all);
         merged.key_hits += self.retired_key_stats.hits;
         merged.key_misses += self.retired_key_stats.misses;
         merged.key_evictions += self.retired_key_stats.evictions;
         merged.key_regenerations += self.retired_key_stats.regenerations;
+        merged.request_retries += self.shared.retries.load(Ordering::SeqCst);
+        merged.request_redirects += self.shared.redirects.load(Ordering::SeqCst);
+        merged.shard_restarts += self.shared.restarts.load(Ordering::SeqCst);
         merged
     }
 
@@ -399,27 +631,47 @@ impl Cluster {
     /// LRU-displaces the excess (see [`ReshardReport::resident_after`]) —
     /// the displaced tenants regenerate on next touch rather than the
     /// cluster exceeding its residency bound.
-    pub fn reshard(&mut self, new_shards: usize) -> ReshardReport {
+    ///
+    /// Fails with [`ReshardError::FixedStores`] — before touching any
+    /// shard — when growth would exceed the fixed stores provided at
+    /// construction.
+    pub fn reshard(&mut self, new_shards: usize) -> Result<ReshardReport, ReshardError> {
         assert!(new_shards >= 1, "cluster needs at least one shard");
-        let old_shards = self.shards.len();
+        if let Some(limit) = self.store_limit {
+            if new_shards > limit {
+                return Err(ReshardError::FixedStores {
+                    provided: limit,
+                    requested: new_shards,
+                });
+            }
+        }
         self.accepting = false;
+        let mut shards = write(&self.shared.shards);
+        let mut stores_guard = write(&self.shared.stores);
+        let old_shards = shards.len();
 
         // Drain: every admitted request is answered by its original
         // shard before any topology change.
-        for shard in &mut self.shards {
+        for shard in shards.iter_mut() {
             shard.shutdown();
         }
-        self.retired.extend(self.shards.iter().map(|c| c.metrics.snapshot()));
-        self.shards.clear();
+        self.shared
+            .retired
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .extend(shards.iter().map(|c| c.metrics.snapshot()));
+        shards.clear();
 
         // New ring first — migration targets are its ownership.
-        let router = Router::new(self.router.policy(), new_shards);
+        let router =
+            Router::new_with_health(self.policy, new_shards, self.supervision.restart_after_failures);
 
         // Stores: survivors keep their index, new shards mint via the
-        // factory.
+        // factory (growth past a fixed store vector was rejected above,
+        // so the factory is always called in range).
         let mut stores: Vec<Arc<dyn KeyStore>> = Vec::with_capacity(new_shards);
         for i in 0..new_shards {
-            match self.stores.get(i) {
+            match stores_guard.get(i) {
                 Some(s) => stores.push(s.clone()),
                 None => stores.push((self.factory)(i)),
             }
@@ -429,12 +681,12 @@ impl Cluster {
         // snapshotted per store BEFORE any movement, so an entry migrated
         // into a store processed later is never re-considered (or
         // double-counted).
-        let hash_affinity = self.router.policy() == PlacementPolicy::ConsistentHash;
+        let hash_affinity = self.policy == PlacementPolicy::ConsistentHash;
         let resident: Vec<Vec<SessionId>> =
-            self.stores.iter().map(|s| s.resident()).collect();
+            stores_guard.iter().map(|s| s.resident()).collect();
         let resident_before: usize = resident.iter().map(Vec::len).sum();
         let mut migrated = 0usize;
-        for (i, (store, sessions)) in self.stores.iter().zip(resident).enumerate() {
+        for (i, (store, sessions)) in stores_guard.iter().zip(resident).enumerate() {
             for session in sessions {
                 let target = if hash_affinity {
                     router.place(session.0, || {
@@ -456,7 +708,7 @@ impl Cluster {
             }
         }
         // Account stats of stores that are going away (shrink).
-        for dropped in self.stores.iter().skip(new_shards) {
+        for dropped in stores_guard.iter().skip(new_shards) {
             let st = dropped.stats();
             self.retired_key_stats.hits += st.hits;
             self.retired_key_stats.misses += st.misses;
@@ -466,31 +718,200 @@ impl Cluster {
 
         let resident_after: usize = stores.iter().map(|s| s.resident().len()).sum();
 
-        // Relaunch: same compiled plan, new shard set.
-        self.shards = stores
+        // New topology generation: failure events still in flight from
+        // the drained shards reference old shard ids — the supervisor
+        // fails them terminally instead of retrying them here.
+        let generation = self.shared.generation.fetch_add(1, Ordering::SeqCst) + 1;
+
+        // Relaunch: same compiled plan, new shard set, fresh sinks.
+        *shards = stores
             .iter()
-            .map(|store| {
-                Coordinator::start_with_plan_store(
+            .enumerate()
+            .map(|(i, store)| {
+                Coordinator::start_supervised(
                     self.plan.clone(),
                     store.clone(),
                     self.coordinator_opts.clone(),
+                    Some(FailureSink {
+                        shard: i,
+                        generation,
+                        tx: self.failure_tx.clone(),
+                    }),
                 )
             })
             .collect();
-        self.stores = stores;
-        self.router = router;
+        *stores_guard = stores;
+        *write(&self.shared.router) = router;
+        drop(stores_guard);
+        drop(shards);
         self.accepting = true;
-        ReshardReport { old_shards, new_shards, resident_before, migrated, resident_after }
+        Ok(ReshardReport { old_shards, new_shards, resident_before, migrated, resident_after })
     }
 
     /// Graceful drain: stop admitting, flush every shard's batcher (all
-    /// already-admitted requests are answered), and join dispatch + worker
-    /// threads. Subsequent [`Self::submit`] calls return
+    /// already-admitted requests are answered), join dispatch + worker
+    /// threads, then stop the supervisor (failure events raised during
+    /// the drain are still retried or failed typed — never dropped
+    /// silently). Subsequent [`Self::submit`] calls return
     /// [`ClusterError::Stopped`].
     pub fn shutdown(&mut self) {
         self.accepting = false;
-        for shard in &mut self.shards {
-            shard.shutdown();
+        {
+            let mut shards = write(&self.shared.shards);
+            for shard in shards.iter_mut() {
+                shard.shutdown();
+            }
         }
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The supervisor: waits on the failure channel, maintains router health,
+/// restarts downed shards (same store — warm keys), and re-dispatches
+/// failed requests to healthy shards within the retry budget. Every event
+/// it consumes terminates the request one way or another.
+fn supervisor_loop(
+    shared: Arc<Shared>,
+    rx: Receiver<FailedRequest>,
+    plan: Arc<CompiledPlan>,
+    coord_opts: CoordinatorOptions,
+    failure_tx: Sender<FailedRequest>,
+    sup: SupervisorOptions,
+    stop: Arc<AtomicBool>,
+) {
+    loop {
+        match rx.recv_timeout(sup.poll) {
+            Ok(ev) => {
+                handle_failure(&shared, ev, &plan, &coord_opts, &failure_tx, &sup, &stop)
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::SeqCst) {
+                    // Fail any stragglers typed; new events can no longer
+                    // arrive (all shards are drained before `stop` sets).
+                    while let Ok(ev) = rx.try_recv() {
+                        let _ = ev
+                            .respond
+                            .send(Err(RequestError::ExecFailed { reason: ev.reason }));
+                    }
+                    break;
+                }
+                check_stalls(&shared, &sup);
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
+fn handle_failure(
+    shared: &Shared,
+    ev: FailedRequest,
+    plan: &Arc<CompiledPlan>,
+    coord_opts: &CoordinatorOptions,
+    failure_tx: &Sender<FailedRequest>,
+    sup: &SupervisorOptions,
+    stop: &AtomicBool,
+) {
+    let generation = shared.generation.load(Ordering::SeqCst);
+    if ev.generation != generation {
+        // From a topology that no longer exists: its shard ids are
+        // meaningless now. Terminate typed rather than guess a mapping.
+        let _ = ev.respond.send(Err(RequestError::ExecFailed { reason: ev.reason }));
+        return;
+    }
+    let health = read(&shared.router).record_failure(ev.shard);
+    if health == HealthState::Down && !stop.load(Ordering::SeqCst) {
+        restart_shard(shared, ev.shard, plan, coord_opts, failure_tx, generation);
+    }
+    if ev.retries >= sup.max_retries || stop.load(Ordering::SeqCst) {
+        let _ = ev.respond.send(Err(RequestError::ExecFailed { reason: ev.reason }));
+        return;
+    }
+    // Redirect: walk forward from the failed shard to the next live one
+    // (prefer a different shard; a 1-shard cluster retries in place on
+    // the restarted coordinator).
+    let shards = read(&shared.shards);
+    let n = shards.len();
+    let target = {
+        let router = read(&shared.router);
+        (1..n)
+            .map(|k| (ev.shard + k) % n)
+            .find(|&s| router.health(s) != HealthState::Down)
+            // Single shard (or all others down): retry in place — the
+            // clamp guards a raced shrink that left `ev.shard` dangling.
+            .unwrap_or(ev.shard.min(n - 1))
+    };
+    shared.retries.fetch_add(1, Ordering::SeqCst);
+    if let Err(respond) =
+        shards[target].resubmit(ev.session, ev.inputs, ev.respond, ev.retries + 1)
+    {
+        // Target could not take it (stopped, or its store failed to
+        // resolve): terminal typed failure.
+        let _ = respond.send(Err(RequestError::ResolveFailed {
+            reason: format!("retry {} after: {}", ev.retries + 1, ev.reason),
+        }));
+    }
+}
+
+/// Quarantine-and-restart: swap in a fresh coordinator over the SAME
+/// shard-local store (cached keys stay warm — no regeneration), then
+/// drain the failed one. Its metrics are retired so lifetime totals stay
+/// exact.
+fn restart_shard(
+    shared: &Shared,
+    shard: usize,
+    plan: &Arc<CompiledPlan>,
+    coord_opts: &CoordinatorOptions,
+    failure_tx: &Sender<FailedRequest>,
+    generation: u64,
+) {
+    let mut shards = write(&shared.shards);
+    if shard >= shards.len() {
+        return; // topology changed under us; the generation gate handles its events
+    }
+    let store = read(&shared.stores)[shard].clone();
+    let replacement = Coordinator::start_supervised(
+        plan.clone(),
+        store,
+        coord_opts.clone(),
+        Some(FailureSink { shard, generation, tx: failure_tx.clone() }),
+    );
+    let mut old = std::mem::replace(&mut shards[shard], replacement);
+    // Drain the failed coordinator: requests still queued behind the
+    // panic either complete (their batches are independent) or re-enter
+    // the failure channel and get retried/terminated.
+    old.shutdown();
+    shared
+        .retired
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .push(old.metrics.snapshot());
+    shared.restarts.fetch_add(1, Ordering::SeqCst);
+    read(&shared.router).mark_healthy(shard);
+}
+
+/// Queue-age sweep: an idle shard is healthy; a shard with in-flight
+/// requests but no batch progress for `stall_after` degrades, and for
+/// twice that is routed around entirely. Recomputed every tick — the
+/// signal is a level, not a latch, so recovery clears it automatically.
+fn check_stalls(shared: &Shared, sup: &SupervisorOptions) {
+    let shards = read(&shared.shards);
+    let router = read(&shared.router);
+    for (i, c) in shards.iter().enumerate() {
+        let state = if c.inflight.load(Ordering::SeqCst) == 0 {
+            HealthState::Healthy
+        } else {
+            let idle = c.metrics.time_since_progress();
+            if idle >= sup.stall_after * 2 {
+                HealthState::Down
+            } else if idle >= sup.stall_after {
+                HealthState::Degraded
+            } else {
+                HealthState::Healthy
+            }
+        };
+        router.set_stall(i, state);
     }
 }

@@ -2,6 +2,15 @@
 //! deadline — the serving-side realization of the paper's batch-size
 //! lever (Observation 7: accelerator parallelism is harvested by batching
 //! real queries).
+//!
+//! Failure semantics: batching is fail-closed from the waiter's point of
+//! view. A closed intake drains cleanly ([`collect_batch`] returns
+//! partial batches, then empty), so on shutdown every already-queued
+//! request still reaches a worker — which answers it, or fails it with a
+//! typed error when the coordinator was hard-killed. The batch boundary
+//! is also the failure boundary upstream: a panicking backend fails
+//! exactly one keyed sub-batch produced here, never the batcher or
+//! dispatch thread.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};

@@ -2,8 +2,8 @@
 //! per-tenant attribution and key-cache observability.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::{Mutex, MutexGuard, PoisonError};
+use std::time::{Duration, Instant};
 
 use crate::tenant::SessionId;
 use crate::util::stats;
@@ -20,6 +20,13 @@ struct Inner {
     bsk_bytes_streamed: u64,
     keyed_batch_splits: u64,
     session_requests: BTreeMap<u64, u64>,
+    exec_failures: u64,
+    failed_requests: u64,
+    worker_respawns: u64,
+    request_timeouts: u64,
+    /// Last time a worker made observable progress (finished or failed a
+    /// batch). Drives the cluster supervisor's stall detector.
+    last_progress: Option<Instant>,
 }
 
 /// Thread-safe metrics sink shared by batcher and workers.
@@ -77,6 +84,26 @@ pub struct MetricsSnapshot {
     /// Key sets resident in the store at snapshot time (a gauge: merge
     /// sums it across shard-local stores into cluster-wide residency).
     pub key_resident: usize,
+    /// Batch executions that panicked inside the backend and were caught
+    /// at the worker's `catch_unwind` boundary.
+    pub exec_failures: u64,
+    /// Requests that received a typed failure from this shard (each
+    /// failed *attempt* counts; a request retried elsewhere and served
+    /// there still counts one failure here).
+    pub failed_requests: u64,
+    /// In-place worker engine rebuilds after a caught panic.
+    pub worker_respawns: u64,
+    /// Tickets whose `wait()` expired before a response arrived.
+    pub request_timeouts: u64,
+    /// Failed requests re-dispatched to another shard by the cluster
+    /// supervisor (cluster-level; zero in per-shard snapshots).
+    pub request_retries: u64,
+    /// Admission-time redirects around an unhealthy shard
+    /// (cluster-level; zero in per-shard snapshots).
+    pub request_redirects: u64,
+    /// Shard quarantine-and-restart cycles (cluster-level; zero in
+    /// per-shard snapshots).
+    pub shard_restarts: u64,
     /// Raw per-request latency samples (ms). Retained so shard snapshots
     /// can be merged into *exact* aggregate percentiles (percentiles do
     /// not compose from per-shard percentiles).
@@ -107,6 +134,13 @@ impl MetricsSnapshot {
             for (&session, &n) in &s.session_requests {
                 *out.session_requests.entry(session).or_insert(0) += n;
             }
+            out.exec_failures += s.exec_failures;
+            out.failed_requests += s.failed_requests;
+            out.worker_respawns += s.worker_respawns;
+            out.request_timeouts += s.request_timeouts;
+            out.request_retries += s.request_retries;
+            out.request_redirects += s.request_redirects;
+            out.shard_restarts += s.shard_restarts;
             out.key_hits += s.key_hits;
             out.key_misses += s.key_misses;
             out.key_evictions += s.key_evictions;
@@ -139,8 +173,17 @@ impl Metrics {
         Self { inner: Mutex::new(Inner::default()), started: Some(Instant::now()) }
     }
 
+    /// Lock the sink, recovering from poisoning: a worker that panics
+    /// mid-record (the fault-injection harness does this on purpose)
+    /// must not cascade into panics in every later metrics call. Counter
+    /// updates are single-field or append-only, so a poisoned guard's
+    /// state is still consistent enough to keep serving.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
     pub fn record_request(&self, session: SessionId, queue_ms: f64, latency_ms: f64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.requests += 1;
         *g.session_requests.entry(session.0).or_insert(0) += 1;
         g.queue_ms.push(queue_ms);
@@ -148,29 +191,63 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, size: usize, pbs: usize) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.batches += 1;
         g.batch_sizes.push(size as f64);
         g.pbs_executed += pbs;
+        g.last_progress = Some(Instant::now());
     }
 
     /// Account one collected batch splitting into `extra + 1` keyed
     /// execution sub-batches.
     pub fn record_keyed_splits(&self, extra: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.keyed_batch_splits += extra;
     }
 
     /// Account one batch execution's measured counters (key switches
     /// performed and Fourier-BSK bytes streamed).
     pub fn record_exec(&self, ks_ops: u64, bsk_bytes: u64) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         g.ks_executed += ks_ops;
         g.bsk_bytes_streamed += bsk_bytes;
     }
 
+    /// Account one caught batch panic failing `failed` requests. Counts
+    /// as progress for stall detection: a panicking shard is broken, not
+    /// stuck, and the supervisor handles it through the failure path.
+    pub fn record_exec_failure(&self, failed: u64) {
+        let mut g = self.lock();
+        g.exec_failures += 1;
+        g.failed_requests += failed;
+        g.last_progress = Some(Instant::now());
+    }
+
+    /// Account one in-place worker engine rebuild after a caught panic.
+    pub fn record_worker_respawn(&self) {
+        let mut g = self.lock();
+        g.worker_respawns += 1;
+    }
+
+    /// Account one ticket expiring before its response arrived.
+    pub fn record_timeout(&self) {
+        let mut g = self.lock();
+        g.request_timeouts += 1;
+    }
+
+    /// Time since a worker last completed or failed a batch (since
+    /// startup if none has yet) — the supervisor's queue-age signal.
+    pub fn time_since_progress(&self) -> Duration {
+        let last = self.lock().last_progress;
+        match (last, self.started) {
+            (Some(t), _) => t.elapsed(),
+            (None, Some(s)) => s.elapsed(),
+            (None, None) => Duration::ZERO,
+        }
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         let elapsed = self.started.map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
         MetricsSnapshot {
             requests: g.requests,
@@ -191,6 +268,13 @@ impl Metrics {
             },
             keyed_batch_splits: g.keyed_batch_splits,
             session_requests: g.session_requests.clone(),
+            exec_failures: g.exec_failures,
+            failed_requests: g.failed_requests,
+            worker_respawns: g.worker_respawns,
+            request_timeouts: g.request_timeouts,
+            request_retries: 0,
+            request_redirects: 0,
+            shard_restarts: 0,
             key_hits: 0,
             key_misses: 0,
             key_evictions: 0,
@@ -318,6 +402,66 @@ mod tests {
             (6, 5, 1, 1)
         );
         assert_eq!(merged.key_resident, 5);
+    }
+
+    #[test]
+    fn poisoned_sink_keeps_recording_instead_of_cascading_panics() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        m.record_request(SessionId(1), 0.0, 5.0);
+        // Poison the mutex: panic while holding the guard, exactly what a
+        // worker dying inside a record call would do.
+        let m2 = m.clone();
+        let t = std::thread::spawn(move || {
+            let _g = m2.inner.lock().unwrap();
+            panic!("injected panic while holding the metrics lock");
+        });
+        assert!(t.join().is_err(), "the poisoning thread must have panicked");
+        assert!(m.inner.lock().is_err(), "the mutex really is poisoned");
+        // Every entry point must recover the guard, not propagate poison.
+        m.record_request(SessionId(1), 0.0, 7.0);
+        m.record_batch(2, 4);
+        m.record_exec(1, 10);
+        m.record_exec_failure(3);
+        m.record_worker_respawn();
+        m.record_timeout();
+        m.record_keyed_splits(1);
+        let _ = m.time_since_progress();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2, "pre- and post-poison records both visible");
+        assert_eq!(s.exec_failures, 1);
+        assert_eq!(s.failed_requests, 3);
+        assert_eq!(s.worker_respawns, 1);
+        assert_eq!(s.request_timeouts, 1);
+    }
+
+    #[test]
+    fn merge_sums_failure_and_recovery_counters() {
+        let a = MetricsSnapshot {
+            exec_failures: 2,
+            failed_requests: 5,
+            worker_respawns: 2,
+            request_timeouts: 1,
+            request_retries: 3,
+            request_redirects: 1,
+            shard_restarts: 1,
+            ..Default::default()
+        };
+        let b = MetricsSnapshot {
+            exec_failures: 1,
+            failed_requests: 1,
+            worker_respawns: 1,
+            request_timeouts: 2,
+            ..Default::default()
+        };
+        let merged = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(merged.exec_failures, 3);
+        assert_eq!(merged.failed_requests, 6);
+        assert_eq!(merged.worker_respawns, 3);
+        assert_eq!(merged.request_timeouts, 3);
+        assert_eq!(merged.request_retries, 3);
+        assert_eq!(merged.request_redirects, 1);
+        assert_eq!(merged.shard_restarts, 1);
     }
 
     #[test]

@@ -14,6 +14,13 @@
 //! One coordinator is one engine shard; `crate::cluster` replicates N of
 //! them behind a placement router with a shared admission queue and
 //! shard-local key stores.
+//!
+//! Failure model: submissions return a [`Ticket`] that always
+//! terminates — with output ciphertexts, a typed [`RequestError`]
+//! (batch panic, hard shard loss, resolve failure), or
+//! [`RequestError::RequestTimeout`] when a deadline was attached — and
+//! workers survive backend panics by catching at the batch boundary and
+//! respawning their engine (see `server`).
 
 pub mod batcher;
 pub mod metrics;
@@ -21,4 +28,6 @@ pub mod server;
 
 pub use batcher::DynamicBatcher;
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use server::{BackendKind, Coordinator, CoordinatorOptions, SubmitError};
+pub use server::{
+    BackendKind, Coordinator, CoordinatorOptions, RequestError, SubmitError, Ticket,
+};

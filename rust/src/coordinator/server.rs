@@ -26,10 +26,23 @@
 //! worker constructs its own backend from the artifact dir + resolved
 //! keys inside its thread; the XLA backend cannot rebind keys, so it
 //! requires a single-key store).
+//!
+//! **Failure semantics.** Each keyed sub-batch executes under a
+//! `catch_unwind` boundary: a panicking backend fails only that batch's
+//! requests — every stranded [`Ticket`] resolves to a typed
+//! [`RequestError::ExecFailed`] instead of a hung channel — and the
+//! worker drops its (possibly inconsistent) engine and rebuilds it from
+//! the next sub-batch's key handle (an in-place respawn, counted in
+//! [`MetricsSnapshot::worker_respawns`]). Measured batch/KS/PBS counters
+//! are recorded only for batches that *succeed*, so the
+//! measured-vs-`arch::sim` cross-check invariants survive injected
+//! faults. Supervised coordinators (the cluster) additionally receive
+//! every failed request on a [`FailureSink`] for retry on another shard.
 
 use std::fmt;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -38,6 +51,7 @@ use super::batcher::{group_batch, DynamicBatcher};
 use super::metrics::{Metrics, MetricsSnapshot};
 use crate::compiler::{self, CompiledPlan, Engine, NativePbsBackend, PbsBackend};
 use crate::ir::Program;
+use crate::runtime::faults::{FaultPlan, FaultyBackend};
 use crate::tenant::{KeyHandle, KeyStore, SessionId, StaticKeys};
 use crate::tfhe::{LweCiphertext, ServerKeys};
 
@@ -48,6 +62,10 @@ pub enum BackendKind {
     Native,
     /// AOT JAX/Pallas artifacts via PJRT (artifact directory).
     Xla { artifacts_dir: String },
+    /// Pure-Rust TFHE behind a deterministic fault-injection plan
+    /// (`serve --chaos` and the chaos tests). The plain `Native` arm
+    /// never touches the plan, so fault-free serving pays nothing.
+    NativeChaos { faults: Arc<FaultPlan> },
 }
 
 #[derive(Debug, Clone)]
@@ -92,6 +110,10 @@ pub enum SubmitError {
     /// `max_queue_depth` requests are already outstanding — shed load and
     /// let the client retry (or route to another shard).
     QueueFull,
+    /// The key store could not resolve this session's keys (backing
+    /// fetch down, or an injected fault) — the request was never
+    /// enqueued; the cluster redirects it to another shard.
+    ResolveFailed,
 }
 
 impl fmt::Display for SubmitError {
@@ -99,11 +121,112 @@ impl fmt::Display for SubmitError {
         match self {
             SubmitError::Stopped => f.write_str("coordinator stopped"),
             SubmitError::QueueFull => f.write_str("coordinator queue full"),
+            SubmitError::ResolveFailed => f.write_str("session key resolution failed"),
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
+
+/// Typed per-request failure delivered through a [`Ticket`]. Every
+/// admitted request terminates with output ciphertexts or one of these —
+/// never a silently hung channel.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// The batch this request was grouped into panicked in the backend;
+    /// the worker caught it at the batch boundary and respawned.
+    ExecFailed { reason: String },
+    /// The ticket's deadline expired before a response arrived. The
+    /// request may still complete server-side; its result is discarded.
+    RequestTimeout,
+    /// The serving shard went away (hard kill or dropped response path)
+    /// before answering.
+    ShardLost,
+    /// A retry path could not re-resolve the session's keys.
+    ResolveFailed { reason: String },
+}
+
+impl fmt::Display for RequestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RequestError::ExecFailed { reason } => write!(f, "batch execution failed: {reason}"),
+            RequestError::RequestTimeout => f.write_str("request deadline expired"),
+            RequestError::ShardLost => f.write_str("serving shard lost"),
+            RequestError::ResolveFailed { reason } => {
+                write!(f, "session key resolution failed: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
+
+/// What travels back on a response channel.
+pub(crate) type Response = Result<Vec<LweCiphertext>, RequestError>;
+
+/// A pending response. [`Ticket::wait`] blocks until the request
+/// terminates: output ciphertexts, a typed [`RequestError`], or — when
+/// the ticket carries a deadline ([`Coordinator::submit_with_deadline`])
+/// — [`RequestError::RequestTimeout`] once the deadline passes.
+#[derive(Debug)]
+pub struct Ticket {
+    rx: Receiver<Response>,
+    deadline: Option<Instant>,
+    metrics: Arc<Metrics>,
+}
+
+impl Ticket {
+    pub(crate) fn new(rx: Receiver<Response>, deadline: Option<Instant>, metrics: Arc<Metrics>) -> Self {
+        Self { rx, deadline, metrics }
+    }
+
+    /// Wait for this request to terminate.
+    pub fn wait(&self) -> Result<Vec<LweCiphertext>, RequestError> {
+        match self.deadline {
+            None => match self.rx.recv() {
+                Ok(r) => r,
+                Err(_) => Err(RequestError::ShardLost),
+            },
+            Some(d) => match self.rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                Ok(r) => r,
+                Err(RecvTimeoutError::Timeout) => {
+                    self.metrics.record_timeout();
+                    Err(RequestError::RequestTimeout)
+                }
+                Err(RecvTimeoutError::Disconnected) => Err(RequestError::ShardLost),
+            },
+        }
+    }
+
+    /// Alias for [`Self::wait`], mirroring the channel API this evolved
+    /// from.
+    pub fn recv(&self) -> Result<Vec<LweCiphertext>, RequestError> {
+        self.wait()
+    }
+}
+
+/// One request the worker could not serve, forwarded to the cluster
+/// supervisor for bounded retry on another shard (safe: plan execution
+/// is deterministic, and a request fails *before* producing any
+/// response, so a retry can never double-answer).
+pub(crate) struct FailedRequest {
+    pub(crate) shard: usize,
+    pub(crate) generation: u64,
+    pub(crate) session: SessionId,
+    pub(crate) inputs: Vec<LweCiphertext>,
+    pub(crate) respond: Sender<Response>,
+    pub(crate) retries: u32,
+    pub(crate) reason: String,
+}
+
+/// Where a supervised coordinator's workers report failed requests,
+/// tagged with the shard id and topology generation they belong to.
+#[derive(Clone)]
+pub(crate) struct FailureSink {
+    pub(crate) shard: usize,
+    pub(crate) generation: u64,
+    pub(crate) tx: Sender<FailedRequest>,
+}
 
 /// Atomically claim one slot of a bounded (or unbounded, `depth: None`)
 /// admission counter; `false` means the bound is reached and nothing was
@@ -130,7 +253,10 @@ struct Request {
     handle: KeyHandle,
     inputs: Vec<LweCiphertext>,
     enqueued: Instant,
-    respond: Sender<Vec<LweCiphertext>>,
+    respond: Sender<Response>,
+    /// How many times the cluster supervisor has already re-dispatched
+    /// this request after a failure (0 on first submission).
+    retries: u32,
 }
 
 /// One keyed execution sub-batch: every request shares `handle`'s keys.
@@ -149,6 +275,9 @@ pub struct Coordinator {
     pub inflight: Arc<AtomicUsize>,
     plan: Arc<CompiledPlan>,
     max_queue_depth: Option<usize>,
+    /// Hard-stop flag ([`Self::kill`]): workers fail remaining work with
+    /// [`RequestError::ShardLost`] instead of executing it.
+    killed: Arc<AtomicBool>,
 }
 
 impl Coordinator {
@@ -191,6 +320,19 @@ impl Coordinator {
         store: Arc<dyn KeyStore>,
         opts: CoordinatorOptions,
     ) -> Self {
+        Self::start_supervised(plan, store, opts, None)
+    }
+
+    /// [`Self::start_with_plan_store`] plus a [`FailureSink`]: requests
+    /// whose batch panics are forwarded to the sink (for the cluster
+    /// supervisor to retry elsewhere) instead of failing terminally on
+    /// their tickets.
+    pub(crate) fn start_supervised(
+        plan: Arc<CompiledPlan>,
+        store: Arc<dyn KeyStore>,
+        opts: CoordinatorOptions,
+        sink: Option<FailureSink>,
+    ) -> Self {
         // Fail on the caller's thread, not inside a worker, when the
         // requested backend isn't compiled in.
         #[cfg(not(feature = "xla"))]
@@ -199,9 +341,9 @@ impl Coordinator {
         }
         // Same principle for key stores the backend cannot serve: the XLA
         // backend bakes keys into device buffers and cannot rebind per
-        // keyed sub-batch, so a multi-key store must be rejected here —
-        // not by a worker panicking mid-serving (which would strand that
-        // sub-batch's inflight slots).
+        // keyed sub-batch, so a multi-key store must be rejected here, at
+        // construction — a worker discovering it mid-serving would turn a
+        // configuration mistake into per-batch `ExecFailed` churn.
         if matches!(opts.backend, BackendKind::Xla { .. }) {
             assert!(
                 store.is_single_key(),
@@ -217,6 +359,7 @@ impl Coordinator {
         );
         let metrics = Arc::new(Metrics::new());
         let inflight = Arc::new(AtomicUsize::new(0));
+        let killed = Arc::new(AtomicBool::new(false));
         let (intake_tx, intake_rx) = channel::<Request>();
         // Dispatch thread: batch, group by key handle, round-robin the
         // keyed sub-batches to workers.
@@ -251,8 +394,10 @@ impl Coordinator {
                 let plan = plan.clone();
                 let metrics = metrics.clone();
                 let inflight = inflight.clone();
+                let killed = killed.clone();
                 let backend = opts.backend.clone();
                 let legacy = opts.legacy_exec;
+                let sink = sink.clone();
                 std::thread::spawn(move || match backend {
                     BackendKind::Native => worker_loop(
                         rx,
@@ -264,6 +409,27 @@ impl Coordinator {
                         legacy,
                         &metrics,
                         &inflight,
+                        &killed,
+                        sink.as_ref(),
+                    ),
+                    BackendKind::NativeChaos { faults } => worker_loop(
+                        rx,
+                        move |h: &KeyHandle| {
+                            Engine::new(FaultyBackend::new(
+                                NativePbsBackend::shared(h.keys.clone()),
+                                faults.clone(),
+                            ))
+                        },
+                        |e: &mut Engine<FaultyBackend<NativePbsBackend<'static>>>,
+                         h: &KeyHandle| {
+                            e.backend.inner_mut().set_keys(h.keys.clone())
+                        },
+                        &plan,
+                        legacy,
+                        &metrics,
+                        &inflight,
+                        &killed,
+                        sink.as_ref(),
                     ),
                     #[cfg(feature = "xla")]
                     BackendKind::Xla { artifacts_dir } => worker_loop(
@@ -288,6 +454,8 @@ impl Coordinator {
                         legacy,
                         &metrics,
                         &inflight,
+                        &killed,
+                        sink.as_ref(),
                     ),
                     #[cfg(not(feature = "xla"))]
                     BackendKind::Xla { .. } => {
@@ -305,6 +473,7 @@ impl Coordinator {
             inflight,
             plan,
             max_queue_depth: opts.max_queue_depth,
+            killed,
         }
     }
 
@@ -336,39 +505,110 @@ impl Coordinator {
     /// Submit one encrypted query for the default session (the
     /// single-tenant compat path — under [`StaticKeys`] every session
     /// resolves to the same keys).
-    pub fn submit(
-        &self,
-        inputs: Vec<LweCiphertext>,
-    ) -> Result<Receiver<Vec<LweCiphertext>>, SubmitError> {
+    pub fn submit(&self, inputs: Vec<LweCiphertext>) -> Result<Ticket, SubmitError> {
         self.submit_for(SessionId::default(), inputs)
     }
 
-    /// Submit one encrypted query for `session`; returns the channel the
-    /// response will arrive on, [`SubmitError::Stopped`] after shutdown,
-    /// or [`SubmitError::QueueFull`] when `max_queue_depth` requests are
-    /// already outstanding. Key resolution happens here — a first-touch
-    /// session on a seeded store pays its keygen at admission time, on
-    /// the submitting thread.
+    /// [`Self::submit`] with a per-request deadline: the returned
+    /// ticket's `wait()` yields [`RequestError::RequestTimeout`] once
+    /// `deadline` has elapsed without a response.
+    pub fn submit_with_deadline(
+        &self,
+        inputs: Vec<LweCiphertext>,
+        deadline: Duration,
+    ) -> Result<Ticket, SubmitError> {
+        self.submit_for_with_deadline(SessionId::default(), inputs, Some(deadline))
+    }
+
+    /// Submit one encrypted query for `session`; returns the [`Ticket`]
+    /// the response will arrive on, [`SubmitError::Stopped`] after
+    /// shutdown, or [`SubmitError::QueueFull`] when `max_queue_depth`
+    /// requests are already outstanding. Key resolution happens here — a
+    /// first-touch session on a seeded store pays its keygen at admission
+    /// time, on the submitting thread.
     pub fn submit_for(
         &self,
         session: SessionId,
         inputs: Vec<LweCiphertext>,
-    ) -> Result<Receiver<Vec<LweCiphertext>>, SubmitError> {
+    ) -> Result<Ticket, SubmitError> {
+        self.submit_for_with_deadline(session, inputs, None)
+    }
+
+    /// [`Self::submit_for`] with an optional per-request deadline.
+    pub fn submit_for_with_deadline(
+        &self,
+        session: SessionId,
+        inputs: Vec<LweCiphertext>,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, SubmitError> {
+        self.try_submit(session, inputs, deadline).map_err(|(e, _)| e)
+    }
+
+    /// Submission that hands the inputs back on failure, so the cluster
+    /// can redirect the request to another shard without cloning
+    /// ciphertexts up front.
+    pub(crate) fn try_submit(
+        &self,
+        session: SessionId,
+        inputs: Vec<LweCiphertext>,
+        deadline: Option<Duration>,
+    ) -> Result<Ticket, (SubmitError, Vec<LweCiphertext>)> {
         let Some(intake) = self.intake.as_ref() else {
-            return Err(SubmitError::Stopped);
+            return Err((SubmitError::Stopped, inputs));
         };
         if !try_claim_slot(&self.inflight, self.max_queue_depth) {
-            return Err(SubmitError::QueueFull);
+            return Err((SubmitError::QueueFull, inputs));
         }
-        let handle = self.store.resolve(session);
-        let (tx, rx) = channel();
-        let req =
-            Request { session, handle, inputs, enqueued: Instant::now(), respond: tx };
-        match intake.send(req) {
-            Ok(()) => Ok(rx),
+        let handle = match self.store.try_resolve(session) {
+            Ok(h) => h,
             Err(_) => {
                 self.inflight.fetch_sub(1, Ordering::SeqCst);
-                Err(SubmitError::Stopped)
+                return Err((SubmitError::ResolveFailed, inputs));
+            }
+        };
+        let (tx, rx) = channel();
+        let req =
+            Request { session, handle, inputs, enqueued: Instant::now(), respond: tx, retries: 0 };
+        match intake.send(req) {
+            Ok(()) => Ok(Ticket::new(
+                rx,
+                deadline.map(|d| Instant::now() + d),
+                self.metrics.clone(),
+            )),
+            Err(e) => {
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                Err((SubmitError::Stopped, e.0.inputs))
+            }
+        }
+    }
+
+    /// Re-enqueue a request that failed on another shard, keeping its
+    /// original response channel so the client's ticket resolves from
+    /// wherever the retry lands. Bypasses this shard's `max_queue_depth`
+    /// (the request already holds cluster admission); returns the
+    /// response sender on failure so the supervisor can fail the request
+    /// terminally.
+    pub(crate) fn resubmit(
+        &self,
+        session: SessionId,
+        inputs: Vec<LweCiphertext>,
+        respond: Sender<Response>,
+        retries: u32,
+    ) -> Result<(), Sender<Response>> {
+        let Some(intake) = self.intake.as_ref() else {
+            return Err(respond);
+        };
+        let handle = match self.store.try_resolve(session) {
+            Ok(h) => h,
+            Err(_) => return Err(respond),
+        };
+        self.inflight.fetch_add(1, Ordering::SeqCst);
+        let req = Request { session, handle, inputs, enqueued: Instant::now(), respond, retries };
+        match intake.send(req) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.inflight.fetch_sub(1, Ordering::SeqCst);
+                Err(e.0.respond)
             }
         }
     }
@@ -384,6 +624,26 @@ impl Coordinator {
             let _ = w.join();
         }
     }
+
+    /// Hard stop: like a shard dying mid-flight. Queued and in-flight
+    /// requests are NOT executed — each waiter's ticket resolves to
+    /// [`RequestError::ShardLost`] (a typed error, never a hang) as the
+    /// workers drain the remaining queue without running it.
+    pub fn kill(&mut self) {
+        self.killed.store(true, Ordering::SeqCst);
+        self.shutdown();
+    }
+}
+
+/// Best-effort human-readable reason from a caught panic payload.
+fn panic_reason(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
 }
 
 /// Execute keyed sub-batches as they arrive. The engine is built lazily
@@ -391,6 +651,16 @@ impl Coordinator {
 /// (`rebind`) whenever a sub-batch carries different key material — the
 /// FFT plan, scratch, and accumulator cache persist across rebinds; only
 /// the key pointer changes.
+///
+/// Execution runs under `catch_unwind`: a panicking backend fails only
+/// this sub-batch (typed [`RequestError::ExecFailed`] per request, or a
+/// forward to `sink` when supervised), the poisoned engine is dropped —
+/// discarding its partial `ExecStats`, so measured counters stay
+/// success-only — and the next sub-batch rebuilds it via `mk_engine`:
+/// an in-place worker respawn. Batch/exec counters are recorded only
+/// *after* a successful execution (but before the responses are sent, so
+/// a snapshot taken right after the last response already sees them).
+#[allow(clippy::too_many_arguments)]
 fn worker_loop<B, MkE, Rb>(
     rx: Receiver<WorkItem>,
     mk_engine: MkE,
@@ -399,59 +669,106 @@ fn worker_loop<B, MkE, Rb>(
     legacy: bool,
     metrics: &Metrics,
     inflight: &AtomicUsize,
+    killed: &AtomicBool,
+    sink: Option<&FailureSink>,
 ) where
     B: PbsBackend,
-    MkE: FnOnce(&KeyHandle) -> Engine<B>,
+    MkE: Fn(&KeyHandle) -> Engine<B>,
     Rb: FnMut(&mut Engine<B>, &KeyHandle),
 {
-    let mut mk_engine = Some(mk_engine);
     let mut engine: Option<Engine<B>> = None;
     let mut bound: Option<KeyHandle> = None;
     while let Ok(WorkItem { handle, requests }) = rx.recv() {
+        if killed.load(Ordering::SeqCst) {
+            // Hard-killed shard: drain without executing; every waiter
+            // gets a typed error instead of a hung channel.
+            for r in requests {
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                let _ = r.respond.send(Err(RequestError::ShardLost));
+            }
+            continue;
+        }
         match (engine.as_mut(), bound.as_ref()) {
             (Some(_), Some(b)) if b.same_keys(&handle) => {}
             (Some(e), _) => rebind(e, &handle),
-            (None, _) => {
-                engine = Some(mk_engine.take().expect("engine built once")(&handle));
-            }
+            (None, _) => engine = Some(mk_engine(&handle)),
         }
         bound = Some(handle);
-        let engine = engine.as_mut().expect("engine bound");
 
         let size = requests.len();
         let pbs = plan.graph.pbs_count() * size;
-        // Record up front so snapshots taken right after the last response
-        // already see this batch.
-        metrics.record_batch(size, pbs);
-        // Inputs are moved out of the requests, not cloned.
-        let (metas, inputs): (
-            Vec<(SessionId, Instant, Sender<Vec<LweCiphertext>>)>,
-            Vec<_>,
-        ) = requests
+        // Inputs are moved out of the requests, not cloned; they are
+        // still owned here after a failure, so retries re-use them.
+        let (metas, inputs): (Vec<(SessionId, Instant, Sender<Response>, u32)>, Vec<_>) = requests
             .into_iter()
-            .map(|r| ((r.session, r.enqueued, r.respond), r.inputs))
+            .map(|r| ((r.session, r.enqueued, r.respond, r.retries), r.inputs))
             .unzip();
         let queue_ms: Vec<f64> =
-            metas.iter().map(|(_, t, _)| t.elapsed().as_secs_f64() * 1e3).collect();
+            metas.iter().map(|(_, t, _, _)| t.elapsed().as_secs_f64() * 1e3).collect();
+        let eng = engine.as_mut().expect("engine bound");
         // Default: walk the compiled schedule — shared key switches
         // computed once per batch, accumulator-sharing rotations fused
         // across nodes x requests into single BSK sweeps.
-        let outs = if legacy {
-            engine.run_batch(&plan.program, &inputs)
-        } else {
-            engine.run_plan_batch(plan, &inputs)
-        };
-        // ExecStats drain per keyed sub-batch: KS/PBS/traffic counters are
-        // attributed at the same granularity execution actually ran.
-        let st = engine.take_exec_stats();
-        metrics.record_exec(st.ks_ops, st.bsk_bytes_streamed);
-        for (((session, enqueued, respond), out), q_ms) in
-            metas.into_iter().zip(outs).zip(queue_ms)
-        {
-            let latency_ms = enqueued.elapsed().as_secs_f64() * 1e3;
-            metrics.record_request(session, q_ms, latency_ms);
-            inflight.fetch_sub(1, Ordering::SeqCst);
-            let _ = respond.send(out); // client may have gone away
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            if legacy {
+                eng.run_batch(&plan.program, &inputs)
+            } else {
+                eng.run_plan_batch(plan, &inputs)
+            }
+        }));
+        match result {
+            Ok(outs) => {
+                metrics.record_batch(size, pbs);
+                // ExecStats drain per keyed sub-batch: KS/PBS/traffic
+                // counters are attributed at the same granularity
+                // execution actually ran.
+                let st = eng.take_exec_stats();
+                metrics.record_exec(st.ks_ops, st.bsk_bytes_streamed);
+                for (((session, enqueued, respond, _), out), q_ms) in
+                    metas.into_iter().zip(outs).zip(queue_ms)
+                {
+                    let latency_ms = enqueued.elapsed().as_secs_f64() * 1e3;
+                    metrics.record_request(session, q_ms, latency_ms);
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                    let _ = respond.send(Ok(out)); // client may have gone away
+                }
+            }
+            Err(payload) => {
+                let reason = panic_reason(payload.as_ref());
+                // The engine's internal state (scratch, partial stats) is
+                // suspect after an unwound execution: drop and rebuild
+                // from the next sub-batch's handle.
+                engine = None;
+                bound = None;
+                metrics.record_exec_failure(size as u64);
+                metrics.record_worker_respawn();
+                for ((session, _, respond, retries), input) in metas.into_iter().zip(inputs) {
+                    inflight.fetch_sub(1, Ordering::SeqCst);
+                    match sink {
+                        Some(s) => {
+                            let failed = FailedRequest {
+                                shard: s.shard,
+                                generation: s.generation,
+                                session,
+                                inputs: input,
+                                respond,
+                                retries,
+                                reason: reason.clone(),
+                            };
+                            if let Err(e) = s.tx.send(failed) {
+                                // Supervisor gone: fail terminally.
+                                let _ = e.0.respond.send(Err(RequestError::ExecFailed {
+                                    reason: reason.clone(),
+                                }));
+                            }
+                        }
+                        None => {
+                            let _ = respond
+                                .send(Err(RequestError::ExecFailed { reason: reason.clone() }));
+                        }
+                    }
+                }
+            }
         }
     }
 }

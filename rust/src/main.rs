@@ -7,7 +7,7 @@
 //!   run <workload> [--batch B]      simulate one Table II workload
 //!   serve [--backend native|xla] [--shards S] [--policy P]
 //!         [--queue-depth D] [--workers N] [--requests R]
-//!         [--tenants T] [--key-cache-cap C]
+//!         [--tenants T] [--key-cache-cap C] [--chaos [SEED]]
 //!       start a sharded serving cluster (S coordinator shards behind a
 //!       router; P in round-robin|least-outstanding|consistent-hash;
 //!       D bounds the shared admission queue, 0 = unbounded) on the
@@ -15,7 +15,11 @@
 //!       T >= 2 serves T seeded tenant sessions (distinct per-client
 //!       server keys behind shard-local stores of capacity C, default
 //!       consistent-hash placement so each tenant's keys stay warm on
-//!       one shard); T <= 1 keeps the single-key StaticKeys path
+//!       one shard); T <= 1 keeps the single-key StaticKeys path.
+//!       --chaos injects a deterministic seed-driven fault plan (worker
+//!       panics, latency spikes, resolve failures) into the native
+//!       backend and key stores, drives every request under a deadline,
+//!       and reports what the supervision layer did about it
 //!   params                          print all parameter sets
 //!   selftest                        native + XLA PBS smoke test
 
@@ -31,7 +35,8 @@ use taurus::util::err::Result;
 use taurus::arch::TaurusConfig;
 use taurus::cluster::{Cluster, ClusterOptions, ClusterResponse, PlacementPolicy, StoreFactory};
 use taurus::coordinator::{BackendKind, CoordinatorOptions};
-use taurus::tenant::{self, KeyStore, SeededTenantStore, SessionId};
+use taurus::runtime::faults::{FaultPlan, FaultSpec, FaultyStore};
+use taurus::tenant::{self, KeyStore, SeededTenantStore, SessionId, StaticKeys};
 use taurus::ir::builder::ProgramBuilder;
 use taurus::params;
 use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
@@ -171,9 +176,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let Some(policy) = PlacementPolicy::parse(policy_name) else {
         bail!("unknown policy {policy_name} (round-robin | least-outstanding | consistent-hash)")
     };
-    let backend = match args.flag("backend").unwrap_or("native") {
-        "xla" => BackendKind::Xla { artifacts_dir: "artifacts".into() },
-        _ => BackendKind::Native,
+    // `--chaos` (optionally `--chaos SEED`) arms deterministic fault
+    // injection: same seed, same faults, same op indices.
+    let chaos_seed: Option<u64> = args.flag("chaos").map(|v| v.parse().unwrap_or(1));
+    let faults = chaos_seed.map(|seed| {
+        Arc::new(FaultPlan::from_seed(
+            seed,
+            &FaultSpec {
+                op_horizon: (requests as u64).max(4) * 4,
+                panics: (requests / 6).max(1),
+                delays: 2,
+                delay: std::time::Duration::from_millis(20),
+                resolve_horizon: (requests as u64).max(4),
+                resolve_failures: (requests / 8).max(1),
+            },
+        ))
+    });
+    let backend = match (args.flag("backend").unwrap_or("native"), &faults) {
+        ("xla", None) => BackendKind::Xla { artifacts_dir: "artifacts".into() },
+        ("xla", Some(_)) => bail!("--chaos wraps the native backend; it cannot combine with --backend xla"),
+        (_, Some(f)) => BackendKind::NativeChaos { faults: f.clone() },
+        (_, None) => BackendKind::Native,
     };
     if tenants > 1 && matches!(backend, BackendKind::Xla { .. }) {
         bail!(
@@ -213,15 +236,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("keygen (TEST1)...");
         vec![SecretKeys::generate(&params::TEST1, &mut rng)]
     };
+    // With chaos armed, every shard-local store is wrapped in a
+    // `FaultyStore` so scheduled resolve failures exercise the cluster's
+    // redirect path too.
+    let store_faults = faults.clone();
     let mut cluster = if tenants > 1 {
         let factory: StoreFactory = Arc::new(move |_shard| {
-            Arc::new(SeededTenantStore::new(&params::TEST1, master_seed, key_cache_cap))
-                as Arc<dyn KeyStore>
+            let inner = Arc::new(SeededTenantStore::new(&params::TEST1, master_seed, key_cache_cap))
+                as Arc<dyn KeyStore>;
+            match &store_faults {
+                Some(f) => Arc::new(FaultyStore::new(inner, f.clone())) as Arc<dyn KeyStore>,
+                None => inner,
+            }
         });
         Cluster::start_with_store_factory(prog.clone(), factory, opts)
     } else {
         let keys = Arc::new(ServerKeys::generate(&session_sk[0], &mut rng));
-        Cluster::start(prog.clone(), keys, opts)
+        match &faults {
+            Some(f) => {
+                let f = f.clone();
+                let factory: StoreFactory = Arc::new(move |_shard| {
+                    let inner = Arc::new(StaticKeys::new(keys.clone())) as Arc<dyn KeyStore>;
+                    Arc::new(FaultyStore::new(inner, f.clone())) as Arc<dyn KeyStore>
+                });
+                Cluster::start_with_store_factory(prog.clone(), factory, opts)
+            }
+            None => Cluster::start(prog.clone(), keys, opts),
+        }
     };
     let plan = cluster.plan();
     println!(
@@ -243,7 +284,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // its own session's secret key.
     let mut pending: std::collections::VecDeque<(ClusterResponse, Vec<u64>, usize)> =
         std::collections::VecDeque::new();
+    let chaos = faults.is_some();
+    // Under chaos every request carries a deadline, so the driver
+    // terminates no matter what the fault plan does.
+    let chaos_deadline = std::time::Duration::from_secs(30);
     let mut correct = 0usize;
+    let mut failed = 0usize;
+    // Drain one pending response: a typed failure under chaos is counted,
+    // anywhere else it aborts the run.
+    let settle = |(r, e, pt): (ClusterResponse, Vec<u64>, usize),
+                      correct: &mut usize,
+                      failed: &mut usize|
+     -> Result<()> {
+        match r.recv() {
+            Ok(outs) => {
+                let got: Vec<u64> =
+                    outs.iter().map(|c| decrypt_message(c, &session_sk[pt])).collect();
+                *correct += usize::from(got == e);
+                Ok(())
+            }
+            Err(err) if chaos => {
+                *failed += 1;
+                println!("request failed ({err})");
+                Ok(())
+            }
+            Err(err) => Err(err.into()),
+        }
+    };
     for i in 0..requests {
         let (mx, my) = ((i as u64) % 4, (i as u64 * 3) % 4);
         let exp = taurus::ir::interp::eval(&prog, &[mx, my]);
@@ -253,29 +320,54 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // handles, so drain the oldest response whenever the queue is at
         // depth instead of bouncing off ClusterFull and re-cloning inputs.
         while queue_depth > 0 && cluster.outstanding() >= queue_depth {
-            let Some((r, e, pt)) = pending.pop_front() else {
+            let Some(p) = pending.pop_front() else {
                 bail!("admission queue full with nothing pending")
             };
-            let outs = r.recv()?;
-            let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &session_sk[pt])).collect();
-            correct += usize::from(got == e);
+            settle(p, &mut correct, &mut failed)?;
         }
         let sk = &session_sk[t];
         let inputs = vec![encrypt_message(mx, sk, &mut rng), encrypt_message(my, sk, &mut rng)];
-        let resp = match cluster.submit(session, inputs) {
+        let submitted = if chaos {
+            cluster.submit_with_deadline(session, inputs, chaos_deadline)
+        } else {
+            cluster.submit(session, inputs)
+        };
+        let resp = match submitted {
             Ok(r) => r,
+            Err(e) if chaos => {
+                println!("request {i}: rejected at admission ({e})");
+                failed += 1;
+                continue;
+            }
             Err(e) => bail!("submit failed: {e}"),
         };
         pending.push_back((resp, exp, t));
     }
-    while let Some((r, e, pt)) = pending.pop_front() {
-        let outs = r.recv()?;
-        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &session_sk[pt])).collect();
-        correct += usize::from(got == e);
+    while let Some(p) = pending.pop_front() {
+        settle(p, &mut correct, &mut failed)?;
     }
     let snap = cluster.snapshot();
     let per_shard = cluster.shard_snapshots();
     println!("correct        : {correct}/{requests}");
+    if let Some(f) = &faults {
+        let inj = f.injected();
+        println!(
+            "chaos (seed {}): injected {} panics / {} delays / {} resolve failures; {failed} request(s) failed",
+            f.seed(),
+            inj.panics,
+            inj.delays,
+            inj.resolve_failures,
+        );
+        println!(
+            "recovery       : {} batch failures, {} worker respawns, {} retries, {} redirects, {} shard restarts, {} timeouts",
+            snap.exec_failures,
+            snap.worker_respawns,
+            snap.request_retries,
+            snap.request_redirects,
+            snap.shard_restarts,
+            snap.request_timeouts,
+        );
+    }
     println!("throughput     : {:.1} req/s (aggregate)", snap.throughput_rps);
     println!("p50 / p99      : {:.2} / {:.2} ms (merged samples)", snap.p50_latency_ms, snap.p99_latency_ms);
     println!("mean batch size: {:.2} ({} batches)", snap.mean_batch_size, snap.batches);
@@ -314,15 +406,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = config_from(args);
     let sim = taurus::arch::simulate(cluster.plan(), &cfg);
     if !legacy_exec {
-        let ks_ok = snap.ks_executed == (requests * sim.ks_count) as u64;
-        let pbs_ok = snap.pbs_executed == requests * sim.pbs_count;
+        // Under chaos the invariant holds over SERVED requests (failed
+        // attempts record nothing); fault-free, served == submitted.
+        let served = snap.requests;
+        let ks_ok = snap.ks_executed == (served * sim.ks_count) as u64;
+        let pbs_ok = snap.pbs_executed == served * sim.pbs_count;
         println!(
-            "sim cross-check: KS {} vs {} ({requests} req x {}), PBS {} vs {} -> {}",
+            "sim cross-check: KS {} vs {} ({served} served x {}), PBS {} vs {} -> {}",
             snap.ks_executed,
-            requests * sim.ks_count,
+            served * sim.ks_count,
             sim.ks_count,
             snap.pbs_executed,
-            requests * sim.pbs_count,
+            served * sim.pbs_count,
             if ks_ok && pbs_ok { "OK" } else { "MISMATCH" },
         );
     }

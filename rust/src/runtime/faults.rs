@@ -1,0 +1,387 @@
+//! Deterministic, seed-driven fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is derived once from a seed and a [`FaultSpec`]: it
+//! schedules worker panics and latency spikes at specific blind-rotate
+//! operation indices, and key-resolve failures at specific resolve-call
+//! indices. [`FaultyBackend`] wraps any [`PbsBackend`] and consults the
+//! plan before every blind rotation; [`FaultyStore`] wraps any
+//! [`KeyStore`] and consults it on every fallible resolve. The indices to
+//! fault are a pure function of `(seed, spec)`, so a chaos run is
+//! reproducible: the same seed injects the same faults at the same points
+//! in the global operation order, and CI can sweep seeds.
+//!
+//! The plan's counters are shared (`Arc`) across every wrapper cloned
+//! from it, so the schedule is global across workers and shards — one
+//! fault stream per cluster, not one per thread. Injection is strictly
+//! opt-in: the plain `BackendKind::Native` serving path never constructs
+//! these wrappers and pays nothing.
+
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::compiler::PbsBackend;
+use crate::params::ParamSet;
+use crate::tenant::{KeyHandle, KeyStore, KeyStoreStats, SessionId};
+use crate::tfhe::{GlweCiphertext, LweCiphertext, ServerKeys};
+use crate::util::rng::Rng;
+
+/// How many faults to schedule, and inside which index windows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Blind-rotate calls with index `< op_horizon` are eligible for
+    /// injected panics and delays; later calls run clean (the recovery
+    /// phase chaos tests assert on).
+    pub op_horizon: u64,
+    /// Number of distinct blind-rotate indices that panic.
+    pub panics: usize,
+    /// Number of distinct blind-rotate indices that sleep `delay` first
+    /// (the slow-shard signal for deadline and stall handling).
+    pub delays: usize,
+    /// Injected latency per scheduled delay.
+    pub delay: Duration,
+    /// Resolve calls with index `< resolve_horizon` are eligible for
+    /// injected resolve failures.
+    pub resolve_horizon: u64,
+    /// Number of distinct resolve indices that fail.
+    pub resolve_failures: usize,
+}
+
+impl FaultSpec {
+    /// A quiet spec: nothing is ever injected (useful as a baseline).
+    pub fn none() -> Self {
+        Self {
+            op_horizon: 0,
+            panics: 0,
+            delays: 0,
+            delay: Duration::ZERO,
+            resolve_horizon: 0,
+            resolve_failures: 0,
+        }
+    }
+}
+
+/// Counters of faults actually injected so far (for reports and the
+/// `serve --chaos` summary).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub panics: u64,
+    pub delays: u64,
+    pub resolve_failures: u64,
+}
+
+/// Draw `count` distinct indices in `[0, horizon)` from `rng`. With
+/// `count >= horizon` every index faults — a legal (total-failure) plan.
+fn schedule(rng: &mut Rng, count: usize, horizon: u64) -> BTreeSet<u64> {
+    let mut out = BTreeSet::new();
+    if horizon == 0 {
+        return out;
+    }
+    let want = count.min(horizon as usize);
+    while out.len() < want {
+        out.insert(rng.below(horizon));
+    }
+    out
+}
+
+/// The derived fault schedule plus the live operation counters. Shared
+/// via `Arc` by every [`FaultyBackend`]/[`FaultyStore`] wrapper of one
+/// chaos run.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    panics: BTreeSet<u64>,
+    delays: BTreeSet<u64>,
+    delay: Duration,
+    resolve_failures: BTreeSet<u64>,
+    ops: AtomicU64,
+    resolves: AtomicU64,
+    armed: AtomicBool,
+    injected_panics: AtomicU64,
+    injected_delays: AtomicU64,
+    injected_resolve_failures: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Derive the schedule. Deterministic: the faulted indices are a pure
+    /// function of `(seed, spec)`.
+    pub fn from_seed(seed: u64, spec: &FaultSpec) -> Self {
+        // Domain-separated sub-streams so changing one knob (e.g. the
+        // panic count) never reshuffles the other schedules.
+        let mut panic_rng = Rng::new(seed ^ 0x70A6_1C5);
+        let mut delay_rng = Rng::new(seed ^ 0xDE1A_75);
+        let mut resolve_rng = Rng::new(seed ^ 0x9E50_1FE);
+        Self {
+            seed,
+            panics: schedule(&mut panic_rng, spec.panics, spec.op_horizon),
+            delays: schedule(&mut delay_rng, spec.delays, spec.op_horizon),
+            delay: spec.delay,
+            resolve_failures: schedule(
+                &mut resolve_rng,
+                spec.resolve_failures,
+                spec.resolve_horizon,
+            ),
+            ops: AtomicU64::new(0),
+            resolves: AtomicU64::new(0),
+            armed: AtomicBool::new(true),
+            injected_panics: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+            injected_resolve_failures: AtomicU64::new(0),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The scheduled blind-rotate indices that panic (inspection/tests).
+    pub fn panic_schedule(&self) -> Vec<u64> {
+        self.panics.iter().copied().collect()
+    }
+
+    /// Stop injecting from now on (counters keep advancing). Chaos tests
+    /// disarm before their recovery phase so post-recovery serving is
+    /// provably fault-free regardless of where the counters stand.
+    pub fn disarm(&self) {
+        self.armed.store(false, Ordering::SeqCst);
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> FaultCounts {
+        FaultCounts {
+            panics: self.injected_panics.load(Ordering::SeqCst),
+            delays: self.injected_delays.load(Ordering::SeqCst),
+            resolve_failures: self.injected_resolve_failures.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Called by [`FaultyBackend`] before each blind rotation: may sleep,
+    /// may panic (the panic is the injected fault — the coordinator's
+    /// `catch_unwind` boundary turns it into typed request failures).
+    fn on_blind_rotate(&self) {
+        let n = self.ops.fetch_add(1, Ordering::SeqCst);
+        if !self.armed.load(Ordering::SeqCst) {
+            return;
+        }
+        if self.delays.contains(&n) {
+            self.injected_delays.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(self.delay);
+        }
+        if self.panics.contains(&n) {
+            self.injected_panics.fetch_add(1, Ordering::SeqCst);
+            panic!("injected backend fault at blind-rotate op {n} (seed {})", self.seed);
+        }
+    }
+
+    /// Called by [`FaultyStore`] on each fallible resolve; `Some(reason)`
+    /// means this call must fail.
+    fn on_resolve(&self) -> Option<String> {
+        let n = self.resolves.fetch_add(1, Ordering::SeqCst);
+        if !self.armed.load(Ordering::SeqCst) {
+            return None;
+        }
+        if self.resolve_failures.contains(&n) {
+            self.injected_resolve_failures.fetch_add(1, Ordering::SeqCst);
+            return Some(format!("injected resolve failure at call {n} (seed {})", self.seed));
+        }
+        None
+    }
+}
+
+/// A [`PbsBackend`] that consults a [`FaultPlan`] before every blind
+/// rotation and otherwise delegates. Wraps the native backend on the
+/// `BackendKind::NativeChaos` serving path.
+pub struct FaultyBackend<B> {
+    inner: B,
+    plan: Arc<FaultPlan>,
+}
+
+impl<B: PbsBackend> FaultyBackend<B> {
+    pub fn new(inner: B, plan: Arc<FaultPlan>) -> Self {
+        Self { inner, plan }
+    }
+
+    /// The wrapped backend (the coordinator rebinds tenant keys through
+    /// this).
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+}
+
+impl<B: PbsBackend> PbsBackend for FaultyBackend<B> {
+    fn keyswitch(&mut self, ct_long: &LweCiphertext) -> LweCiphertext {
+        self.inner.keyswitch(ct_long)
+    }
+
+    fn blind_rotate_batch(
+        &mut self,
+        cts_short: &[LweCiphertext],
+        lut_poly: &[u64],
+    ) -> Vec<GlweCiphertext> {
+        self.plan.on_blind_rotate();
+        self.inner.blind_rotate_batch(cts_short, lut_poly)
+    }
+
+    fn sample_extract(&mut self, acc: &GlweCiphertext) -> LweCiphertext {
+        self.inner.sample_extract(acc)
+    }
+
+    fn params(&self) -> &ParamSet {
+        self.inner.params()
+    }
+
+    fn take_bsk_bytes_streamed(&mut self) -> u64 {
+        self.inner.take_bsk_bytes_streamed()
+    }
+}
+
+/// A [`KeyStore`] that injects resolve failures per the plan and
+/// delegates everything else. Only `try_resolve` faults — `resolve`
+/// stays infallible so control paths that cannot shed (reshard
+/// migration, pre-warming) are unaffected.
+pub struct FaultyStore {
+    inner: Arc<dyn KeyStore>,
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultyStore {
+    pub fn new(inner: Arc<dyn KeyStore>, plan: Arc<FaultPlan>) -> Self {
+        Self { inner, plan }
+    }
+}
+
+impl KeyStore for FaultyStore {
+    fn params(&self) -> &ParamSet {
+        self.inner.params()
+    }
+
+    fn is_single_key(&self) -> bool {
+        self.inner.is_single_key()
+    }
+
+    fn resolve(&self, session: SessionId) -> KeyHandle {
+        self.inner.resolve(session)
+    }
+
+    fn try_resolve(&self, session: SessionId) -> Result<KeyHandle, String> {
+        match self.plan.on_resolve() {
+            Some(reason) => Err(reason),
+            None => self.inner.try_resolve(session),
+        }
+    }
+
+    fn register(&self, session: SessionId, keys: Arc<ServerKeys>) -> KeyHandle {
+        self.inner.register(session, keys)
+    }
+
+    fn evict(&self, session: SessionId) -> Option<Arc<ServerKeys>> {
+        self.inner.evict(session)
+    }
+
+    fn resident(&self) -> Vec<SessionId> {
+        self.inner.resident()
+    }
+
+    fn stats(&self) -> KeyStoreStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+    use crate::tenant::StaticKeys;
+    use crate::tfhe::SecretKeys;
+
+    fn spec() -> FaultSpec {
+        FaultSpec {
+            op_horizon: 32,
+            panics: 4,
+            delays: 2,
+            delay: Duration::from_millis(1),
+            resolve_horizon: 16,
+            resolve_failures: 3,
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_seed_and_distinct_across_seeds() {
+        let a = FaultPlan::from_seed(7, &spec());
+        let b = FaultPlan::from_seed(7, &spec());
+        let c = FaultPlan::from_seed(8, &spec());
+        assert_eq!(a.panics, b.panics);
+        assert_eq!(a.delays, b.delays);
+        assert_eq!(a.resolve_failures, b.resolve_failures);
+        assert_ne!(a.panics, c.panics, "different seeds should draw different schedules");
+        assert_eq!(a.panics.len(), 4);
+        assert!(a.panics.iter().all(|&i| i < 32));
+        assert_eq!(a.resolve_failures.len(), 3);
+        assert!(a.resolve_failures.iter().all(|&i| i < 16));
+    }
+
+    #[test]
+    fn total_failure_plan_is_legal_and_bounded_by_horizon() {
+        let p = FaultPlan::from_seed(
+            1,
+            &FaultSpec { op_horizon: 3, panics: 100, ..FaultSpec::none() },
+        );
+        assert_eq!(p.panic_schedule(), vec![0, 1, 2]);
+        let quiet = FaultPlan::from_seed(1, &FaultSpec::none());
+        assert!(quiet.panics.is_empty() && quiet.resolve_failures.is_empty());
+    }
+
+    #[test]
+    fn resolve_failures_fire_at_scheduled_indices_then_disarm_silences() {
+        let mut s = spec();
+        s.resolve_failures = 2;
+        let plan = Arc::new(FaultPlan::from_seed(3, &s));
+        let mut rng = Rng::new(5);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+        let store =
+            FaultyStore::new(Arc::new(StaticKeys::new(keys)) as Arc<dyn KeyStore>, plan.clone());
+        let mut failed = Vec::new();
+        for i in 0..16u64 {
+            if store.try_resolve(SessionId(0)).is_err() {
+                failed.push(i);
+            }
+        }
+        let expected: Vec<u64> = plan.resolve_failures.iter().copied().collect();
+        assert_eq!(failed, expected, "failures at exactly the scheduled call indices");
+        assert_eq!(plan.injected().resolve_failures, 2);
+        // Past the horizon — and after disarm — everything succeeds.
+        plan.disarm();
+        for _ in 0..8 {
+            assert!(store.try_resolve(SessionId(1)).is_ok());
+        }
+        assert_eq!(plan.injected().resolve_failures, 2);
+    }
+
+    #[test]
+    fn faulty_backend_panics_at_scheduled_rotate_and_matches_inner_otherwise() {
+        let mut rng = Rng::new(9);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+        let plan = Arc::new(FaultPlan::from_seed(
+            2,
+            &FaultSpec { op_horizon: 1, panics: 1, ..FaultSpec::none() },
+        ));
+        let mut be = FaultyBackend::new(
+            crate::compiler::NativePbsBackend::shared(keys.clone()),
+            plan.clone(),
+        );
+        let lut = crate::tfhe::make_lut_poly(&TEST1, |m| (m + 1) % 16);
+        let ct = crate::tfhe::pbs::encrypt_message(3, &sk, &mut rng);
+        // Op 0 is scheduled to panic.
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| be.pbs(&ct, &lut)));
+        assert!(r.is_err(), "scheduled op must panic");
+        assert_eq!(plan.injected().panics, 1);
+        // Op 1 is clean and bitwise equals the unwrapped backend.
+        let out = be.pbs(&ct, &lut);
+        let mut plain = crate::compiler::NativePbsBackend::shared(keys);
+        let expect = plain.pbs(&ct, &lut);
+        assert_eq!(out, expect, "clean ops must be bitwise-identical to the inner backend");
+    }
+}

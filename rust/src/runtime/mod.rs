@@ -13,10 +13,12 @@
 mod artifact;
 #[cfg(feature = "xla")]
 mod exec;
+pub mod faults;
 #[cfg(feature = "xla")]
 mod pbs_backend;
 
 pub use artifact::{Artifact, ArtifactManifest};
+pub use faults::{FaultCounts, FaultPlan, FaultSpec, FaultyBackend, FaultyStore};
 #[cfg(feature = "xla")]
 pub use exec::{XlaEngine, XlaExecutable};
 #[cfg(feature = "xla")]

@@ -117,6 +117,14 @@ pub trait KeyStore: Send + Sync {
     /// as the implementation dictates.
     fn resolve(&self, session: SessionId) -> KeyHandle;
 
+    /// Fallible resolve, used on the request-admission path so a store
+    /// that cannot produce keys (backing fetch down, injected fault)
+    /// sheds the one request instead of panicking the shard. Defaults to
+    /// the infallible path; fallible stores override.
+    fn try_resolve(&self, session: SessionId) -> Result<KeyHandle, String> {
+        Ok(self.resolve(session))
+    }
+
     /// Install externally supplied keys for a session (client-uploaded
     /// material, or an entry migrated from another shard's store).
     fn register(&self, session: SessionId, keys: Arc<ServerKeys>) -> KeyHandle;

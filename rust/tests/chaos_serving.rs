@@ -1,0 +1,401 @@
+//! Chaos suite: deterministic fault injection against the serving stack.
+//!
+//! Every test drives a seed-derived `FaultPlan` (worker panics, latency
+//! spikes, resolve failures at scheduled operation indices) through the
+//! coordinator/cluster supervision machinery and asserts the recovery
+//! contract: every request TERMINATES (output or typed error, never a
+//! hang), successful outputs are bitwise-identical to fault-free serving,
+//! measured counters stay exact over served requests, and a disarmed
+//! plan serves clean again.
+//!
+//! The soak sweeps the seeds in `CHAOS_SEEDS` (whitespace-separated,
+//! default "0 1"); CI runs it over seeds 0..=3.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use taurus::cluster::{
+    Cluster, ClusterOptions, PlacementPolicy, StoreFactory, SupervisorOptions,
+};
+use taurus::coordinator::{
+    BackendKind, Coordinator, CoordinatorOptions, RequestError,
+};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::{interp, Program};
+use taurus::params::TEST1;
+use taurus::runtime::faults::{FaultPlan, FaultSpec, FaultyStore};
+use taurus::tenant::{KeyStore, StaticKeys};
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{LweCiphertext, SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+
+/// Fanout program (1 shared KS, 2 PBS per request) so the KS-dedup
+/// exactness invariant is non-trivial under faults.
+fn fan_program() -> Program {
+    let mut b = ProgramBuilder::new("chaos-fan", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.add(x, y);
+    let r0 = b.lut_fn(d, |m| (m + 1) % 8);
+    let r1 = b.lut_fn(d, |m| m ^ 1);
+    b.outputs(&[r0, r1]);
+    b.finish()
+}
+
+fn chaos_coordinator_options(faults: &Arc<FaultPlan>) -> CoordinatorOptions {
+    CoordinatorOptions {
+        workers: 1,
+        batch_capacity: 1,
+        max_batch_wait: Duration::from_millis(1),
+        backend: BackendKind::NativeChaos { faults: faults.clone() },
+        ..Default::default()
+    }
+}
+
+/// A factory producing `FaultyStore`-wrapped `StaticKeys` per shard: the
+/// injected resolve failures exercise the cluster's redirect path while
+/// key material stays shared (so outputs are comparable bitwise).
+fn faulty_static_factory(keys: Arc<ServerKeys>, faults: Arc<FaultPlan>) -> StoreFactory {
+    Arc::new(move |_shard| {
+        let inner = Arc::new(StaticKeys::new(keys.clone())) as Arc<dyn KeyStore>;
+        Arc::new(FaultyStore::new(inner, faults.clone())) as Arc<dyn KeyStore>
+    })
+}
+
+fn chaos_seeds() -> Vec<u64> {
+    std::env::var("CHAOS_SEEDS")
+        .unwrap_or_else(|_| "0 1".into())
+        .split_whitespace()
+        .map(|s| s.parse().expect("CHAOS_SEEDS must be whitespace-separated u64s"))
+        .collect()
+}
+
+#[test]
+fn worker_panic_fails_only_its_batch_and_respawns() {
+    let mut rng = Rng::new(31);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    // Blind-rotate op 0 panics; everything after runs clean.
+    let faults = Arc::new(FaultPlan::from_seed(
+        3,
+        &FaultSpec { op_horizon: 1, panics: 1, ..FaultSpec::none() },
+    ));
+    let mut coord = Coordinator::start(prog.clone(), keys, chaos_coordinator_options(&faults));
+
+    // First request: its batch hits the scheduled panic — typed failure,
+    // not a hang, not a dead worker.
+    let enc = |rng: &mut Rng| {
+        vec![encrypt_message(2, &sk, rng), encrypt_message(3, &sk, rng)]
+    };
+    let t = coord.submit(enc(&mut rng)).expect("submit");
+    match t.wait() {
+        Err(RequestError::ExecFailed { reason }) => {
+            assert!(reason.contains("injected backend fault"), "got: {reason}")
+        }
+        other => panic!("expected ExecFailed, got {other:?}"),
+    }
+
+    // Second request: the worker respawned its engine in place and serves
+    // correctly.
+    let t = coord.submit(enc(&mut rng)).expect("submit");
+    let outs = t.wait().expect("served after respawn");
+    let exp = interp::eval(&prog, &[2, 3]);
+    let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+    assert_eq!(got, exp);
+
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.exec_failures, 1, "exactly the scheduled batch failed");
+    assert_eq!(snap.failed_requests, 1);
+    assert_eq!(snap.worker_respawns, 1);
+    assert_eq!(snap.requests, 1, "only the successful request is recorded");
+    assert_eq!(snap.batches, 1, "failed batches never enter the measured counters");
+    assert_eq!(faults.injected().panics, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn deadline_releases_admission_capacity() {
+    let mut rng = Rng::new(32);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    // Op 0 sleeps well past the deadline; no panics.
+    let faults = Arc::new(FaultPlan::from_seed(
+        5,
+        &FaultSpec {
+            op_horizon: 1,
+            delays: 1,
+            delay: Duration::from_millis(400),
+            ..FaultSpec::none()
+        },
+    ));
+    let mut cluster = Cluster::start_with_store_factory_supervised(
+        prog,
+        faulty_static_factory(keys, faults.clone()),
+        ClusterOptions {
+            shards: 1,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: Some(1),
+            coordinator: chaos_coordinator_options(&faults),
+        },
+        SupervisorOptions::default(),
+    );
+    let enc = |rng: &mut Rng| {
+        vec![encrypt_message(1, &sk, rng), encrypt_message(2, &sk, rng)]
+    };
+    let slow = cluster
+        .submit_with_deadline(0u64, enc(&mut rng), Duration::from_millis(25))
+        .expect("admitted");
+    assert_eq!(cluster.outstanding(), 1);
+    assert_eq!(slow.wait(), Err(RequestError::RequestTimeout));
+    // The expired wait released the admission slot even though the
+    // response handle is still alive and the shard is still grinding.
+    assert_eq!(cluster.outstanding(), 0, "timeout must free the admission slot");
+    let next = cluster.submit(1u64, enc(&mut rng)).expect("slot is free again");
+    let _ = next.wait().expect("clean request serves normally");
+    drop(next);
+    drop(slow);
+    let snap = cluster.snapshot();
+    assert!(snap.request_timeouts >= 1, "the timeout was counted: {:?}", snap.request_timeouts);
+    assert_eq!(faults.injected().delays, 1);
+    cluster.shutdown();
+}
+
+#[test]
+fn failed_batch_retries_on_healthy_shard_and_original_restarts() {
+    let mut rng = Rng::new(33);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    // Exactly one scheduled panic; quarantine after a single failure so
+    // the restart path fires deterministically.
+    let faults = Arc::new(FaultPlan::from_seed(
+        7,
+        &FaultSpec { op_horizon: 1, panics: 1, ..FaultSpec::none() },
+    ));
+    let mut cluster = Cluster::start_with_store_factory_supervised(
+        prog.clone(),
+        faulty_static_factory(keys, faults.clone()),
+        ClusterOptions {
+            shards: 2,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: None,
+            coordinator: chaos_coordinator_options(&faults),
+        },
+        SupervisorOptions { max_retries: 2, restart_after_failures: 1, ..Default::default() },
+    );
+    let queries: Vec<[u64; 2]> = (0..6).map(|i| [i % 6, (i * 2) % 6]).collect();
+    let pend: Vec<_> = queries
+        .iter()
+        .enumerate()
+        .map(|(i, q)| {
+            let cts = vec![
+                encrypt_message(q[0], &sk, &mut rng),
+                encrypt_message(q[1], &sk, &mut rng),
+            ];
+            cluster
+                .submit_with_deadline(i as u64, cts, Duration::from_secs(30))
+                .expect("submit")
+        })
+        .collect();
+    // EVERY request succeeds: the one whose batch panicked was re-dispatched
+    // to the healthy shard by the supervisor, transparently to the client.
+    for (q, r) in queries.iter().zip(&pend) {
+        let outs = r.wait().expect("retried to completion");
+        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+        assert_eq!(got, interp::eval(&prog, q), "query {q:?}");
+    }
+    drop(pend);
+    let snap = cluster.snapshot();
+    assert_eq!(snap.exec_failures, 1);
+    assert!(snap.request_retries >= 1, "the failed request was re-dispatched");
+    assert!(snap.shard_restarts >= 1, "one failure crossed the quarantine threshold");
+    assert_eq!(snap.requests, queries.len(), "every request served exactly once");
+    cluster.shutdown();
+}
+
+#[test]
+fn resolve_failure_redirects_to_another_shard() {
+    let mut rng = Rng::new(34);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    // Resolve call 0 fails; no backend faults at all.
+    let faults = Arc::new(FaultPlan::from_seed(
+        11,
+        &FaultSpec { resolve_horizon: 1, resolve_failures: 1, ..FaultSpec::none() },
+    ));
+    let mut cluster = Cluster::start_with_store_factory_supervised(
+        prog.clone(),
+        faulty_static_factory(keys, faults.clone()),
+        ClusterOptions {
+            shards: 2,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: None,
+            coordinator: chaos_coordinator_options(&faults),
+        },
+        SupervisorOptions::default(),
+    );
+    // First submit: the routed shard's store fails the scheduled resolve;
+    // admission redirects to the other shard, whose resolve succeeds.
+    let cts = vec![encrypt_message(2, &sk, &mut rng), encrypt_message(1, &sk, &mut rng)];
+    let r = cluster.submit(0u64, cts).expect("redirected, not rejected");
+    assert_eq!(r.shard, 1, "round-robin placed shard 0; the redirect landed on 1");
+    let outs = r.recv().expect("served");
+    let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+    assert_eq!(got, interp::eval(&prog, &[2, 1]));
+    drop(r);
+    assert_eq!(faults.injected().resolve_failures, 1);
+    assert!(cluster.snapshot().request_redirects >= 1);
+    cluster.shutdown();
+}
+
+/// The soak: for each seed, serve a request stream through a cluster under
+/// an armed fault plan, then disarm and serve it again. Asserts the full
+/// robustness contract per seed.
+#[test]
+fn chaos_soak_every_request_terminates_and_recovers_bitwise() {
+    let mut rng = Rng::new(35);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    let n = 24usize;
+    let queries: Vec<[u64; 2]> = (0..n as u64).map(|i| [i % 6, (i * 3) % 6]).collect();
+    let encrypted: Vec<Vec<LweCiphertext>> = queries
+        .iter()
+        .map(|q| {
+            vec![encrypt_message(q[0], &sk, &mut rng), encrypt_message(q[1], &sk, &mut rng)]
+        })
+        .collect();
+
+    // Fault-free reference outputs (deterministic plan execution: any
+    // fault-free serving of these ciphertexts yields exactly these bits).
+    let reference: Vec<Vec<LweCiphertext>> = {
+        let mut coord = Coordinator::start(
+            prog.clone(),
+            keys.clone(),
+            CoordinatorOptions {
+                workers: 1,
+                batch_capacity: 1,
+                max_batch_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        let pend: Vec<_> =
+            encrypted.iter().map(|cts| coord.submit(cts.clone()).expect("submit")).collect();
+        let outs = pend.iter().map(|t| t.wait().expect("reference")).collect();
+        coord.shutdown();
+        outs
+    };
+
+    for seed in chaos_seeds() {
+        let faults = Arc::new(FaultPlan::from_seed(
+            seed,
+            &FaultSpec {
+                op_horizon: 8,
+                panics: 3,
+                delays: 1,
+                delay: Duration::from_millis(10),
+                resolve_horizon: 8,
+                resolve_failures: 2,
+            },
+        ));
+        let mut cluster = Cluster::start_with_store_factory_supervised(
+            prog.clone(),
+            faulty_static_factory(keys.clone(), faults.clone()),
+            ClusterOptions {
+                shards: 2,
+                policy: PlacementPolicy::RoundRobin,
+                queue_depth: None,
+                coordinator: chaos_coordinator_options(&faults),
+            },
+            SupervisorOptions { max_retries: 2, restart_after_failures: 2, ..Default::default() },
+        );
+
+        // Chaos phase: submit everything under a generous deadline. Every
+        // request must TERMINATE — served or a typed error — and every
+        // served output must be bitwise-identical to fault-free serving.
+        let mut ok = 0usize;
+        let mut failed = 0usize;
+        let mut pend = Vec::new();
+        for (i, cts) in encrypted.iter().enumerate() {
+            match cluster.submit_with_deadline(i as u64, cts.clone(), Duration::from_secs(30)) {
+                Ok(r) => pend.push((i, r)),
+                // An injected resolve failure can reject at admission when
+                // the redirect's resolve is also scheduled to fail: a
+                // typed, terminating outcome.
+                Err(e) => {
+                    println!("seed {seed}: request {i} rejected at admission: {e}");
+                    failed += 1;
+                }
+            }
+        }
+        for (i, r) in &pend {
+            match r.wait() {
+                Ok(outs) => {
+                    assert_eq!(
+                        outs, reference[*i],
+                        "seed {seed}: served output {i} must be bitwise fault-free"
+                    );
+                    ok += 1;
+                }
+                Err(err) => {
+                    println!("seed {seed}: request {i} failed typed: {err}");
+                    failed += 1;
+                }
+            }
+        }
+        drop(pend);
+        assert_eq!(ok + failed, n, "seed {seed}: every request terminated");
+
+        // Exactness: only served requests enter the measured counters, and
+        // the measured-vs-plan invariant holds over exactly those.
+        let snap = cluster.snapshot();
+        assert_eq!(snap.requests, ok, "seed {seed}: served == client-observed successes");
+        assert_eq!(
+            snap.ks_executed,
+            (ok * cluster.plan().ks_dedup.after) as u64,
+            "seed {seed}: KS exactness over served requests"
+        );
+        assert_eq!(
+            snap.pbs_executed,
+            ok * prog.pbs_count(),
+            "seed {seed}: PBS exactness over served requests"
+        );
+        let inj = faults.injected();
+        assert_eq!(
+            snap.exec_failures, inj.panics,
+            "seed {seed}: each injected panic failed exactly one batch"
+        );
+        if inj.panics > 0 {
+            assert!(snap.worker_respawns >= 1, "seed {seed}: panics imply respawns");
+        }
+
+        // Recovery phase: disarm and serve the identical stream again —
+        // all successes, bitwise-identical to the fault-free reference.
+        faults.disarm();
+        let pend: Vec<_> = encrypted
+            .iter()
+            .enumerate()
+            .map(|(i, cts)| {
+                (i, cluster.submit(i as u64, cts.clone()).expect("post-recovery submit"))
+            })
+            .collect();
+        for (i, r) in &pend {
+            let outs = r.wait().unwrap_or_else(|e| {
+                panic!("seed {seed}: post-recovery request {i} must serve cleanly: {e}")
+            });
+            assert_eq!(
+                outs, reference[*i],
+                "seed {seed}: post-recovery output {i} must be bitwise fault-free"
+            );
+        }
+        drop(pend);
+        cluster.shutdown();
+        println!(
+            "seed {seed}: {ok} served / {failed} typed-failed during chaos; injected {:?}; recovery clean",
+            inj
+        );
+    }
+}

@@ -7,7 +7,7 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use taurus::arch::{simulate, TaurusConfig};
-use taurus::cluster::{Cluster, ClusterError, ClusterOptions, PlacementPolicy};
+use taurus::cluster::{Cluster, ClusterError, ClusterOptions, PlacementPolicy, ReshardError};
 use taurus::coordinator::{Coordinator, CoordinatorOptions};
 use taurus::ir::builder::ProgramBuilder;
 use taurus::ir::{interp, Program};
@@ -222,6 +222,47 @@ fn shutdown_drains_already_admitted_requests() {
         let outs = resp.recv().expect("drained response");
         assert_eq!(decrypt_message(&outs[0], &sk), interp::eval(&prog, &[*m])[0]);
     }
+}
+
+#[test]
+fn reshard_growth_past_fixed_keys_is_a_typed_error_not_a_panic() {
+    let mut rng = Rng::new(81);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let prog = tiny_program();
+    // Two fixed per-shard key sets (same secret: outputs stay decryptable
+    // under one client key while the stores are genuinely distinct).
+    let shard_keys =
+        vec![Arc::new(ServerKeys::generate(&sk, &mut rng)), Arc::new(ServerKeys::generate(&sk, &mut rng))];
+    let mut cluster = Cluster::start_with_shard_keys(
+        prog.clone(),
+        shard_keys,
+        ClusterOptions {
+            shards: 2,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: None,
+            coordinator: test_coordinator_options(),
+        },
+    );
+    // Growing past the 2 provided key sets cannot mint material: typed
+    // error, and the cluster is left exactly as it was.
+    assert_eq!(
+        cluster.reshard(3).unwrap_err(),
+        ReshardError::FixedStores { provided: 2, requested: 3 },
+    );
+    assert_eq!(cluster.shard_count(), 2, "failed reshard must not touch the topology");
+    // Still serving: the error path never drained or stopped anything.
+    let m = 3u64;
+    let r = cluster.submit(1u64, vec![encrypt_message(m, &sk, &mut rng)]).expect("still accepting");
+    let outs = r.recv().expect("response");
+    assert_eq!(decrypt_message(&outs[0], &sk), interp::eval(&prog, &[m])[0]);
+    drop(r);
+    // Shrinking within the provided stores still works.
+    let report = cluster.reshard(1).expect("shrink within fixed stores");
+    assert_eq!((report.old_shards, report.new_shards), (2, 1));
+    let r = cluster.submit(2u64, vec![encrypt_message(m, &sk, &mut rng)]).expect("post-shrink");
+    let _ = r.recv().expect("response");
+    drop(r);
+    cluster.shutdown();
 }
 
 #[test]

@@ -4,7 +4,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use taurus::coordinator::{BackendKind, Coordinator, CoordinatorOptions};
+use taurus::coordinator::{BackendKind, Coordinator, CoordinatorOptions, RequestError};
 use taurus::ir::builder::ProgramBuilder;
 use taurus::ir::{interp, Program};
 use taurus::params::TEST1;
@@ -109,6 +109,58 @@ fn single_worker_preserves_order_per_client() {
         assert_eq!(decrypt_message(&outs[0], &sk), exp, "request {i}");
     }
     coord.shutdown();
+}
+
+#[test]
+fn killed_coordinator_fails_every_waiter_with_typed_error() {
+    // A shard dying mid-flight must surface a typed error to every
+    // waiter — never a hang. Deadlines guard the test itself: even a
+    // regression that drops response channels resolves within 10s.
+    let mut rng = Rng::new(55);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = demo_program();
+    let mut coord = Coordinator::start(
+        prog,
+        keys,
+        CoordinatorOptions {
+            workers: 1,
+            batch_capacity: 2,
+            // Long collect window: the queue is still full when the kill
+            // lands, so some requests are typed-failed by the draining
+            // worker rather than served.
+            max_batch_wait: Duration::from_millis(50),
+            backend: BackendKind::Native,
+            ..Default::default()
+        },
+    );
+    let waiters: Vec<_> = (0..6u64)
+        .map(|i| {
+            coord
+                .submit_with_deadline(
+                    vec![
+                        encrypt_message(i % 4, &sk, &mut rng),
+                        encrypt_message(1, &sk, &mut rng),
+                    ],
+                    Duration::from_secs(10),
+                )
+                .expect("submit")
+        })
+        .collect();
+    coord.kill();
+    for (i, t) in waiters.iter().enumerate() {
+        match t.wait() {
+            // Requests already executing when the kill landed may finish.
+            Ok(_) => {}
+            Err(RequestError::ShardLost) => {}
+            Err(other) => panic!("waiter {i}: expected ShardLost or success, got {other:?}"),
+        }
+    }
+    assert_eq!(
+        coord.inflight.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "every request was accounted for, served or failed"
+    );
 }
 
 #[test]

@@ -256,7 +256,7 @@ fn reshard_migrates_ring_delta_drains_inflight_and_preserves_outputs() {
         .filter(|&t| r_old.place(t, Vec::new) != r_new.place(t, Vec::new))
         .count();
 
-    let report = cluster.reshard(new_shards);
+    let report = cluster.reshard(new_shards).expect("factory-backed cluster reshards freely");
     assert_eq!(report.old_shards, old_shards);
     assert_eq!(report.new_shards, new_shards);
     assert_eq!(report.resident_before as u64, sessions, "all sessions were warm");
