@@ -1,14 +1,17 @@
 //! End-to-end PBS latency and the batched key-reuse sweep: sequential
-//! `pbs` vs `pbs_batch` at batch sizes {1, 4, 8, 16}, with amortized
-//! Fourier-BSK bytes streamed per PBS — the numbers behind EXPERIMENTS.md
-//! §Perf change 4. Emits `BENCH_pbs.json` (ns/PBS + BSK bytes/PBS per
-//! batch size) so CI can track the perf trajectory across PRs.
+//! `pbs` vs `pbs_batch` at batch sizes {1, 4, 8, 16} x blind-rotation
+//! pool threads {1, 2, 4}, with amortized Fourier-BSK bytes streamed per
+//! PBS — the numbers behind EXPERIMENTS.md §Perf change 4 and §FFT.
+//! Emits `BENCH_pbs.json` (ns/PBS + BSK bytes/PBS per batch size and
+//! thread count, with the blocked-FFT selection recorded) so CI can
+//! track the perf trajectory across PRs.
 
 #[path = "harness.rs"]
 mod harness;
 
 use harness::{bench, section};
 use taurus::params::{ParamSet, TEST1, TEST2};
+use taurus::tfhe::fft::blocked_for_poly;
 use taurus::tfhe::pbs::encrypt_message;
 use taurus::tfhe::{make_lut_poly, PbsContext, SecretKeys, ServerKeys};
 use taurus::util::json::{arr, num, obj, s, JsonValue};
@@ -19,6 +22,8 @@ fn sweep_param_set(p: &'static ParamSet, rng: &mut Rng, rows: &mut Vec<JsonValue
     let keys = ServerKeys::generate(&sk, rng);
     let mut ctx = PbsContext::new(p);
     let lut = make_lut_poly(p, |m| m);
+    // util::json has no bool; record the plan's schedule choice as 0/1.
+    let blocked = if blocked_for_poly(p.big_n) { 1.0 } else { 0.0 };
 
     // Sequential baseline (batch the same count through one-at-a-time pbs
     // so per-PBS time is comparable at identical working sets).
@@ -31,33 +36,39 @@ fn sweep_param_set(p: &'static ParamSet, rng: &mut Rng, rows: &mut Vec<JsonValue
     ctx.pbs(&ct, &keys, &lut);
     let seq_bsk = ctx.take_bsk_bytes_streamed() as f64;
 
-    for bsz in [1usize, 4, 8, 16] {
-        let cts: Vec<_> =
-            (0..bsz).map(|i| encrypt_message(i as u64 % 8, &sk, rng)).collect();
-        // Exact per-batch BSK traffic, measured outside the timing loop.
-        ctx.take_bsk_bytes_streamed();
-        std::hint::black_box(ctx.pbs_batch(&cts, &keys, &lut));
-        let bsk_per_pbs = ctx.take_bsk_bytes_streamed() as f64 / bsz as f64;
-        let r = bench(&format!("  pbs_batch {} B={bsz}", p.name), 0.6, || {
+    for threads in [1usize, 2, 4] {
+        ctx.set_fft_threads(threads);
+        for bsz in [1usize, 4, 8, 16] {
+            let cts: Vec<_> =
+                (0..bsz).map(|i| encrypt_message(i as u64 % 8, &sk, rng)).collect();
+            // Exact per-batch BSK traffic, measured outside the timing loop.
+            ctx.take_bsk_bytes_streamed();
             std::hint::black_box(ctx.pbs_batch(&cts, &keys, &lut));
-        });
-        let ns_per_pbs = r.mean_s * 1e9 / bsz as f64;
-        let speedup = seq_ns / ns_per_pbs;
-        let reuse = seq_bsk / bsk_per_pbs;
-        println!(
-            "      {:>12.0} ns/PBS   {:>9.2}x vs seq   BSK {:>12.0} B/PBS (reuse {:>5.1}x)",
-            ns_per_pbs, speedup, bsk_per_pbs, reuse
-        );
-        rows.push(obj(vec![
-            ("params", s(p.name)),
-            ("batch", num(bsz as f64)),
-            ("ns_per_pbs", num(ns_per_pbs)),
-            ("seq_ns_per_pbs", num(seq_ns)),
-            ("speedup_vs_seq", num(speedup)),
-            ("bsk_bytes_per_pbs", num(bsk_per_pbs)),
-            ("bsk_reuse_factor", num(reuse)),
-        ]));
+            let bsk_per_pbs = ctx.take_bsk_bytes_streamed() as f64 / bsz as f64;
+            let r = bench(&format!("  pbs_batch {} B={bsz} T={threads}", p.name), 0.6, || {
+                std::hint::black_box(ctx.pbs_batch(&cts, &keys, &lut));
+            });
+            let ns_per_pbs = r.mean_s * 1e9 / bsz as f64;
+            let speedup = seq_ns / ns_per_pbs;
+            let reuse = seq_bsk / bsk_per_pbs;
+            println!(
+                "      {:>12.0} ns/PBS   {:>9.2}x vs seq   BSK {:>12.0} B/PBS (reuse {:>5.1}x)",
+                ns_per_pbs, speedup, bsk_per_pbs, reuse
+            );
+            rows.push(obj(vec![
+                ("params", s(p.name)),
+                ("batch", num(bsz as f64)),
+                ("threads", num(threads as f64)),
+                ("blocked_fft", num(blocked)),
+                ("ns_per_pbs", num(ns_per_pbs)),
+                ("seq_ns_per_pbs", num(seq_ns)),
+                ("speedup_vs_seq", num(speedup)),
+                ("bsk_bytes_per_pbs", num(bsk_per_pbs)),
+                ("bsk_reuse_factor", num(reuse)),
+            ]));
+        }
     }
+    ctx.set_fft_threads(1);
 }
 
 fn main() {

@@ -1,8 +1,10 @@
 //! Width sweep over the functional parameter sets {3, 5, 8, 10} bits:
 //! keygen wall clock (monolithic vs 4-worker chunked), key material
-//! bytes, PBS latency, and amortized Fourier-BSK bytes per PBS at batch
-//! 8. Emits `BENCH_widths.json` so CI tracks how the wide-width
-//! functional path costs evolve across PRs (EXPERIMENTS.md §Widths).
+//! bytes, PBS latency, amortized Fourier-BSK bytes per PBS at batch 8,
+//! and the batch-8 blind-rotation thread sweep {1, 2, 4} (with the
+//! per-set blocked-FFT selection recorded). Emits `BENCH_widths.json` so
+//! CI tracks how the wide-width functional path costs evolve across PRs
+//! (EXPERIMENTS.md §Widths and §FFT).
 
 #[path = "harness.rs"]
 mod harness;
@@ -11,6 +13,7 @@ use std::time::Instant;
 
 use harness::{bench, section};
 use taurus::params::FUNCTIONAL_SETS;
+use taurus::tfhe::fft::blocked_for_poly;
 use taurus::tfhe::keygen::KeygenOptions;
 use taurus::tfhe::pbs::encrypt_message;
 use taurus::tfhe::{make_lut_poly, PbsContext, SecretKeys, ServerKeys};
@@ -80,6 +83,39 @@ fn main() {
             ("pbs_ms", num(pbs_ms)),
             ("bsk_bytes_per_pbs_batch8", num(bsk_per_pbs)),
         ]));
+
+        // Blind-rotation thread sweep at batch 8: wall clock only — the
+        // output bits are invariant by construction (the conformance
+        // suite pins that), so these rows record the scaling, they don't
+        // assert it. util::json has no bool; blocked_fft is 0/1.
+        let blocked = if blocked_for_poly(p.big_n) { 1.0 } else { 0.0 };
+        let mut t1_ns = 0.0f64;
+        for threads in [1usize, 2, 4] {
+            ctx.set_fft_threads(threads);
+            let r = bench(&format!("  pbs_batch {} B={bsz} T={threads}", p.name), 0.5, || {
+                std::hint::black_box(ctx.pbs_batch(&cts, &keys, &lut));
+            });
+            let ns_per_pbs = r.mean_s * 1e9 / bsz as f64;
+            if threads == 1 {
+                t1_ns = ns_per_pbs;
+            }
+            let speedup = t1_ns / ns_per_pbs.max(1e-9);
+            println!(
+                "      threads {threads}: {:>12.0} ns/PBS at batch {bsz}  ({:.2}x vs 1 thread, {} fft)",
+                ns_per_pbs,
+                speedup,
+                if blocked == 1.0 { "blocked" } else { "monolithic" },
+            );
+            rows.push(obj(vec![
+                ("params", s(p.name)),
+                ("width", num(p.width as f64)),
+                ("threads", num(threads as f64)),
+                ("blocked_fft", num(blocked)),
+                ("ns_per_pbs_batch8", num(ns_per_pbs)),
+                ("speedup_vs_t1", num(speedup)),
+            ]));
+        }
+        ctx.set_fft_threads(1);
     }
 
     let report = obj(vec![("bench", s("widths")), ("results", arr(rows))]);

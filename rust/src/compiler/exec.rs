@@ -70,6 +70,23 @@ pub trait PbsBackend {
     }
 }
 
+/// Engine-level execution knobs threaded from the serving layers
+/// (`CoordinatorOptions` / `ClusterOptions`) into backend construction.
+#[derive(Debug, Clone)]
+pub struct EngineOptions {
+    /// Worker threads for the native backend's column-parallel blind
+    /// rotation (see `PbsContext::with_threads`). 1 = sequential; any
+    /// value yields bitwise-identical ciphertexts. The XLA backend
+    /// ignores this (it keeps its sequential per-ciphertext fallback).
+    pub fft_threads: usize,
+}
+
+impl Default for EngineOptions {
+    fn default() -> Self {
+        Self { fft_threads: 1 }
+    }
+}
+
 /// How the native backend holds its server keys: borrowed (the historical
 /// single-key embedding used by tests and the CLI) or shared via `Arc`
 /// (the multi-tenant serving path, where workers rebind the key set per
@@ -98,7 +115,15 @@ pub struct NativePbsBackend<'k> {
 
 impl<'k> NativePbsBackend<'k> {
     pub fn new(keys: &'k ServerKeys) -> Self {
-        Self { ctx: PbsContext::new(&keys.params), keys: KeysRef::Borrowed(keys) }
+        Self::new_with(keys, &EngineOptions::default())
+    }
+
+    /// Borrowed-key backend with explicit engine options.
+    pub fn new_with(keys: &'k ServerKeys, opts: &EngineOptions) -> Self {
+        Self {
+            ctx: PbsContext::with_threads(&keys.params, opts.fft_threads),
+            keys: KeysRef::Borrowed(keys),
+        }
     }
 
     /// The currently bound key set.
@@ -111,7 +136,15 @@ impl NativePbsBackend<'static> {
     /// An owning backend over shared keys — the serving workers' form,
     /// rebindable via [`Self::set_keys`].
     pub fn shared(keys: Arc<ServerKeys>) -> Self {
-        Self { ctx: PbsContext::new(&keys.params), keys: KeysRef::Shared(keys) }
+        Self::shared_with(keys, &EngineOptions::default())
+    }
+
+    /// Shared-key backend with explicit engine options.
+    pub fn shared_with(keys: Arc<ServerKeys>, opts: &EngineOptions) -> Self {
+        Self {
+            ctx: PbsContext::with_threads(&keys.params, opts.fft_threads),
+            keys: KeysRef::Shared(keys),
+        }
     }
 
     /// Rebind to another tenant's key set. The FFT plan, scratch buffers,

@@ -17,7 +17,7 @@ pub mod lowering;
 
 pub use batching::{Batch, Schedule};
 pub use dedup::{acc_dedup_stats, dedup_keyswitch, DedupStats};
-pub use exec::{Engine, ExecStats, KeysRef, NativePbsBackend, PbsBackend};
+pub use exec::{Engine, EngineOptions, ExecStats, KeysRef, NativePbsBackend, PbsBackend};
 pub use lowering::{lower, LinExpr, Operand, PrimGraph, PrimId, PrimKind, PrimOp};
 
 use crate::ir::Program;

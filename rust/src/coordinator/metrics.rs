@@ -104,6 +104,12 @@ pub struct MetricsSnapshot {
     /// Shard quarantine-and-restart cycles (cluster-level; zero in
     /// per-shard snapshots).
     pub shard_restarts: u64,
+    /// Per-shard blind-rotation worker threads (filled by
+    /// `Coordinator::snapshot`; merge keeps the max across shards).
+    pub fft_threads: usize,
+    /// Whether this shard's parameter set selects the cache-blocked FFT
+    /// schedule (filled by `Coordinator::snapshot`; merge ORs shards).
+    pub blocked_fft: bool,
     /// Raw per-request latency samples (ms). Retained so shard snapshots
     /// can be merged into *exact* aggregate percentiles (percentiles do
     /// not compose from per-shard percentiles).
@@ -141,6 +147,8 @@ impl MetricsSnapshot {
             out.request_retries += s.request_retries;
             out.request_redirects += s.request_redirects;
             out.shard_restarts += s.shard_restarts;
+            out.fft_threads = out.fft_threads.max(s.fft_threads);
+            out.blocked_fft |= s.blocked_fft;
             out.key_hits += s.key_hits;
             out.key_misses += s.key_misses;
             out.key_evictions += s.key_evictions;
@@ -275,6 +283,8 @@ impl Metrics {
             request_retries: 0,
             request_redirects: 0,
             shard_restarts: 0,
+            fft_threads: 0,
+            blocked_fft: false,
             key_hits: 0,
             key_misses: 0,
             key_evictions: 0,
@@ -462,6 +472,15 @@ mod tests {
         assert_eq!(merged.request_retries, 3);
         assert_eq!(merged.request_redirects, 1);
         assert_eq!(merged.shard_restarts, 1);
+    }
+
+    #[test]
+    fn merge_takes_max_threads_and_ors_blocked_fft() {
+        let a = MetricsSnapshot { fft_threads: 4, blocked_fft: false, ..Default::default() };
+        let b = MetricsSnapshot { fft_threads: 1, blocked_fft: true, ..Default::default() };
+        let merged = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(merged.fft_threads, 4, "cluster view reports the widest shard pool");
+        assert!(merged.blocked_fft, "any blocked shard marks the cluster blocked");
     }
 
     #[test]

@@ -49,7 +49,7 @@ use std::time::{Duration, Instant};
 
 use super::batcher::{group_batch, DynamicBatcher};
 use super::metrics::{Metrics, MetricsSnapshot};
-use crate::compiler::{self, CompiledPlan, Engine, NativePbsBackend, PbsBackend};
+use crate::compiler::{self, CompiledPlan, Engine, EngineOptions, NativePbsBackend, PbsBackend};
 use crate::ir::Program;
 use crate::runtime::faults::{FaultPlan, FaultyBackend};
 use crate::tenant::{KeyHandle, KeyStore, SessionId, StaticKeys};
@@ -86,6 +86,11 @@ pub struct CoordinatorOptions {
     /// admission queue (`crate::cluster`) composes with this per-shard
     /// bound.
     pub max_queue_depth: Option<usize>,
+    /// Worker threads for each native backend's column-parallel blind
+    /// rotation (`serve --fft-threads`); 1 = sequential. Outputs are
+    /// bitwise-identical for every value, so this is purely a latency
+    /// knob. The XLA backend ignores it.
+    pub fft_threads: usize,
 }
 
 impl Default for CoordinatorOptions {
@@ -98,6 +103,7 @@ impl Default for CoordinatorOptions {
             plan_capacity: 48,
             legacy_exec: false,
             max_queue_depth: None,
+            fft_threads: 1,
         }
     }
 }
@@ -275,6 +281,7 @@ pub struct Coordinator {
     pub inflight: Arc<AtomicUsize>,
     plan: Arc<CompiledPlan>,
     max_queue_depth: Option<usize>,
+    fft_threads: usize,
     /// Hard-stop flag ([`Self::kill`]): workers fail remaining work with
     /// [`RequestError::ShardLost`] instead of executing it.
     killed: Arc<AtomicBool>,
@@ -397,11 +404,17 @@ impl Coordinator {
                 let killed = killed.clone();
                 let backend = opts.backend.clone();
                 let legacy = opts.legacy_exec;
+                let fft_threads = opts.fft_threads;
                 let sink = sink.clone();
                 std::thread::spawn(move || match backend {
                     BackendKind::Native => worker_loop(
                         rx,
-                        |h: &KeyHandle| Engine::new(NativePbsBackend::shared(h.keys.clone())),
+                        |h: &KeyHandle| {
+                            Engine::new(NativePbsBackend::shared_with(
+                                h.keys.clone(),
+                                &EngineOptions { fft_threads },
+                            ))
+                        },
                         |e: &mut Engine<NativePbsBackend<'static>>, h: &KeyHandle| {
                             e.backend.set_keys(h.keys.clone())
                         },
@@ -416,7 +429,10 @@ impl Coordinator {
                         rx,
                         move |h: &KeyHandle| {
                             Engine::new(FaultyBackend::new(
-                                NativePbsBackend::shared(h.keys.clone()),
+                                NativePbsBackend::shared_with(
+                                    h.keys.clone(),
+                                    &EngineOptions { fft_threads },
+                                ),
                                 faults.clone(),
                             ))
                         },
@@ -473,6 +489,7 @@ impl Coordinator {
             inflight,
             plan,
             max_queue_depth: opts.max_queue_depth,
+            fft_threads: opts.fft_threads,
             killed,
         }
     }
@@ -499,6 +516,8 @@ impl Coordinator {
         s.key_evictions = ks.evictions;
         s.key_regenerations = ks.regenerations;
         s.key_resident = ks.resident;
+        s.fft_threads = self.fft_threads;
+        s.blocked_fft = crate::tfhe::fft::blocked_for_poly(self.plan.params.big_n);
         s
     }
 

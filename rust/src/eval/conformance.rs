@@ -32,7 +32,7 @@ use std::time::Duration;
 
 use crate::arch::{simulate, TaurusConfig};
 use crate::cluster::{Cluster, ClusterOptions, PlacementPolicy};
-use crate::compiler::{compile, noise, CompileOpts, Engine, NativePbsBackend};
+use crate::compiler::{compile, noise, CompileOpts, Engine, EngineOptions, NativePbsBackend};
 use crate::coordinator::CoordinatorOptions;
 use crate::ir::builder::ProgramBuilder;
 use crate::ir::{interp, LutTable, Program};
@@ -157,12 +157,26 @@ pub struct WidthReport {
     pub max_measured_err_sigmas: f64,
 }
 
+/// Blind-rotation worker threads for both conformance paths, from the
+/// `FFT_THREADS` env var (default 1). CI runs the suite at 1 and 4:
+/// because the parallel sweep is bitwise-invariant, every assertion —
+/// including Path 2's ciphertext-identity check — must hold unchanged at
+/// any thread count.
+pub fn fft_threads_from_env() -> usize {
+    std::env::var("FFT_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
 /// Per-shard coordinator config for the 2-shard conformance cluster.
 fn shard_options() -> CoordinatorOptions {
     CoordinatorOptions {
         workers: 1,
         batch_capacity: REQUESTS,
         max_batch_wait: Duration::from_millis(1),
+        fft_threads: fft_threads_from_env(),
         ..Default::default()
     }
 }
@@ -196,7 +210,10 @@ pub fn run_width(width: usize, default_cases: u64) -> WidthReport {
             .collect();
 
         // --- Path 1: the schedule-driven engine over the compiled plan.
-        let mut eng = Engine::new(NativePbsBackend::new(&keys.server));
+        let mut eng = Engine::new(NativePbsBackend::new_with(
+            &keys.server,
+            &EngineOptions { fft_threads: fft_threads_from_env() },
+        ));
         let plan_outs = eng.run_plan_batch(&plan, &batch);
         for (q, (outs, exp)) in plan_outs.iter().zip(&expected).enumerate() {
             let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &keys.sk)).collect();

@@ -6,8 +6,9 @@
 //!       13b, 14, 15, 16, obs5, dedup, ablation)
 //!   run <workload> [--batch B]      simulate one Table II workload
 //!   serve [--backend native|xla] [--shards S] [--policy P]
-//!         [--queue-depth D] [--workers N] [--requests R]
-//!         [--tenants T] [--key-cache-cap C] [--chaos [SEED]]
+//!         [--queue-depth D] [--workers N] [--fft-threads F]
+//!         [--requests R] [--tenants T] [--key-cache-cap C]
+//!         [--chaos [SEED]]
 //!       start a sharded serving cluster (S coordinator shards behind a
 //!       router; P in round-robin|least-outstanding|consistent-hash;
 //!       D bounds the shared admission queue, 0 = unbounded) on the
@@ -16,6 +17,9 @@
 //!       server keys behind shard-local stores of capacity C, default
 //!       consistent-hash placement so each tenant's keys stay warm on
 //!       one shard); T <= 1 keeps the single-key StaticKeys path.
+//!       F >= 2 splits each native blind rotation's batch columns over F
+//!       pool threads per worker engine (bitwise-identical outputs, pure
+//!       latency knob; ignored by the XLA backend).
 //!       --chaos injects a deterministic seed-driven fault plan (worker
 //!       panics, latency spikes, resolve failures) into the native
 //!       backend and key stores, drives every request under a deadline,
@@ -164,6 +168,7 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let shards = args.usize_flag("shards", 2).max(1);
     let workers = args.usize_flag("workers", 2);
+    let fft_threads = args.usize_flag("fft-threads", 1).max(1);
     let requests = args.usize_flag("requests", 16);
     let queue_depth = args.usize_flag("queue-depth", 0);
     let tenants = args.usize_flag("tenants", 1).max(1);
@@ -221,7 +226,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shards,
         policy,
         queue_depth: if queue_depth > 0 { Some(queue_depth) } else { None },
-        coordinator: CoordinatorOptions { workers, backend, legacy_exec, ..Default::default() },
+        coordinator: CoordinatorOptions {
+            workers,
+            backend,
+            legacy_exec,
+            fft_threads,
+            ..Default::default()
+        },
     };
     let mut rng = Rng::new(2077);
     // Per-session client secrets: with seeded tenants each session keys
@@ -276,7 +287,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         shards,
     );
     println!(
-        "serving {requests} encrypted requests: {shards} shards x {workers} workers, {} routing, admission depth {}, {tenants} session(s)",
+        "serving {requests} encrypted requests: {shards} shards x {workers} workers x {fft_threads} fft thread(s), {} routing, admission depth {}, {tenants} session(s)",
         policy.name(),
         if queue_depth > 0 { queue_depth.to_string() } else { "unbounded".into() },
     );
@@ -379,6 +390,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cluster.plan().ks_dedup.before,
     );
     println!("BSK B/PBS      : {:.0} (pbs-weighted over shards)", snap.bsk_bytes_per_pbs);
+    println!(
+        "fft engine     : {} thread(s)/worker, {} transform schedule",
+        snap.fft_threads,
+        if snap.blocked_fft { "cache-blocked" } else { "monolithic" },
+    );
     println!("per shard      : id  requests  batches  mean-batch      KS     PBS  keys-resident");
     for (i, s) in per_shard.iter().enumerate() {
         println!(

@@ -89,18 +89,25 @@ impl FourierBsk {
     /// exact input layout of the `blind_rotate` AOT artifact. The native
     /// pipeline keeps Fourier rows in bit-reversed order (no-permutation
     /// DIF/DIT, see fft.rs §Perf); the artifact uses jnp.fft's natural
-    /// order, so each row is permuted here (build-time only). The planar
-    /// storage makes this a pair of per-plane permutations.
+    /// order, so each row is permuted here (build-time only) through the
+    /// registry plan's precomputed table and one reused row buffer —
+    /// no per-row index derivation or allocation.
     pub fn to_flat_f64(&self) -> (Vec<f64>, Vec<f64>) {
-        use super::fft::bitrev_permute_f64;
         let total: usize = self.ggsw.iter().map(|g| g.points()).sum();
         let mut re = Vec::with_capacity(total);
         let mut im = Vec::with_capacity(total);
+        let Some(first) = self.ggsw.first() else {
+            return (re, im);
+        };
+        let plan = super::fft::plan_for(first.nh * 2);
+        let mut buf = vec![0.0f64; first.nh];
         for g in &self.ggsw {
             for r in 0..g.rows {
                 for c in 0..g.k1 {
-                    re.extend(bitrev_permute_f64(g.row_re(r, c)));
-                    im.extend(bitrev_permute_f64(g.row_im(r, c)));
+                    plan.bitrev_permute_f64_into(g.row_re(r, c), &mut buf);
+                    re.extend_from_slice(&buf);
+                    plan.bitrev_permute_f64_into(g.row_im(r, c), &mut buf);
+                    im.extend_from_slice(&buf);
                 }
             }
         }

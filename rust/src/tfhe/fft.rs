@@ -16,6 +16,14 @@
 //! and per-stage twiddles are stored contiguously. A classic natural-
 //! order `fft_inplace`/`ifft_inplace` pair is kept for tests and key
 //! export. See EXPERIMENTS.md §Perf for the measured iteration log.
+//!
+//! Above a plan-time size threshold ([`BLOCKED_NH_MIN`]) the same
+//! butterfly network is *rescheduled* into a cache-blocked two-pass form
+//! (strided residue-class tiles, then contiguous L1-sized blocks) so the
+//! WIDE8/WIDE10 working sets stop thrashing L2. Blocking only reorders
+//! independent butterflies — outputs are bitwise identical to the
+//! monolithic sweep, which the property tests pin exactly. See
+//! EXPERIMENTS.md §FFT.
 
 /// Minimal complex type (num-complex is not in the offline registry).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -62,9 +70,31 @@ impl C64 {
     }
 }
 
+/// Complex lengths at or above this take the cache-blocked two-pass
+/// schedule on the hot-path transforms: WIDE8 (N=16384, nh=8192) and
+/// WIDE10 (N=32768, nh=16384) block; TEST1/TEST2 stay monolithic (their
+/// whole working set already fits in L2). See EXPERIMENTS.md §FFT for
+/// the working-set arithmetic behind the threshold.
+pub const BLOCKED_NH_MIN: usize = 8192;
+
+/// Pass-2 block length cap: blocks of `<= BLOCK_B_MAX` complex points
+/// (16 bytes each) occupy at most 32 KiB — half a typical L1d.
+const BLOCK_B_MAX: usize = 2048;
+
+/// Pass-1 tile working-set target in bytes (about a quarter of a
+/// 256 KiB L2, leaving room for twiddles and the streamed key row).
+const BLOCK_TILE_BYTES: usize = 64 * 1024;
+
+/// Whether plans of this polynomial degree select the blocked schedule
+/// (usable without building a plan, e.g. for metrics reporting).
+pub fn blocked_for_poly(poly_n: usize) -> bool {
+    poly_n / 2 >= BLOCKED_NH_MIN
+}
+
 /// Precomputed plan for polynomials of degree `poly_n` (complex size
 /// `poly_n / 2`). Plans are cheap to build relative to keygen; callers
-/// cache one per parameter set (see `PbsContext`).
+/// share one per polynomial size via [`plan_for`] (or cache their own,
+/// see `PbsContext`).
 pub struct FftPlan {
     /// Complex transform length N/2.
     pub nh: usize,
@@ -77,6 +107,14 @@ pub struct FftPlan {
     w_stages: Vec<Vec<C64>>,
     /// Folding twist exp(-i*pi*j/N), j < nh.
     twist: Vec<C64>,
+    /// Hot-path transforms dispatch to the blocked two-pass schedule.
+    blocked: bool,
+    /// Fused radix-2^2 stages run in the strided pass (pass 1) of the
+    /// blocked schedule; 0 when the size is too small to split.
+    block_s1: usize,
+    /// Independent contiguous block length after `block_s1` fused
+    /// stages: nh / 4^block_s1.
+    block_b: usize,
 }
 
 impl FftPlan {
@@ -88,6 +126,22 @@ impl FftPlan {
         for i in 0..nh {
             bitrev[i] = (i as u32).reverse_bits() >> (32 - log2_nh);
         }
+        // Blocked-schedule split: peel fused radix-2^2 stages until the
+        // residual contiguous blocks fit comfortably in L1. Small sizes
+        // that never auto-block still get a genuine two-pass split so the
+        // explicit `*_blocked` entry points are exercised at test sizes.
+        let fused = (log2_nh / 2) as usize;
+        let mut block_s1 = 0usize;
+        let mut block_b = nh;
+        while block_b > BLOCK_B_MAX && block_s1 < fused {
+            block_b /= 4;
+            block_s1 += 1;
+        }
+        if block_s1 == 0 && fused >= 2 {
+            block_s1 = 1;
+            block_b = nh / 4;
+        }
+        let blocked = nh >= BLOCKED_NH_MIN && block_s1 >= 1;
         let w = (0..nh / 2)
             .map(|t| {
                 let ang = -2.0 * std::f64::consts::PI * t as f64 / nh as f64;
@@ -121,7 +175,29 @@ impl FftPlan {
         // exactly floor(log2(nh) / 2) fused stages, with one trailing
         // radix-2 stage iff log2(nh) is odd.
         assert_eq!(w_stages.len() as u32, log2_nh / 2);
-        Self { nh, log2_nh, bitrev, w, w_stages, twist }
+        Self { nh, log2_nh, bitrev, w, w_stages, twist, blocked, block_s1, block_b }
+    }
+
+    /// Whether the hot-path transforms of this plan run the cache-blocked
+    /// two-pass schedule (plan-time threshold on `nh`).
+    pub fn blocked(&self) -> bool {
+        self.blocked
+    }
+
+    /// Contiguous block length of the blocked schedule's second pass.
+    pub fn block_len(&self) -> usize {
+        self.block_b
+    }
+
+    /// Pass-1 tile width (residue classes swept together): sized so the
+    /// tile's working set — `nh / block_b` groups of `tile` adjacent
+    /// points, times `cols` interleaved columns — stays near
+    /// [`BLOCK_TILE_BYTES`]. The tile width only reorders independent
+    /// butterflies, so any value is bitwise-safe.
+    fn pass1_tile(&self, cols: usize) -> usize {
+        let rows = self.nh / self.block_b;
+        let bytes_per_residue = rows * 16 * cols.max(1);
+        (BLOCK_TILE_BYTES / bytes_per_residue.max(1)).clamp(1, self.block_b)
     }
 
     /// In-place forward complex FFT (DIT, natural order in/out).
@@ -170,7 +246,23 @@ impl FftPlan {
     /// the Fourier domain, so a consistent permutation is free speed
     /// (§Perf change 2); `bitrev_permute_copy` converts when natural
     /// order is needed (e.g. exporting the BSK to the XLA artifacts).
+    ///
+    /// Dispatches to the cache-blocked schedule above the plan-time
+    /// threshold; both schedules run the identical butterfly network in
+    /// the identical per-point order, so the choice is bitwise-invisible.
     pub fn dif_forward(&self, buf: &mut [C64]) {
+        if self.blocked {
+            self.dif_forward_blocked(buf);
+        } else {
+            self.dif_forward_monolithic(buf);
+        }
+    }
+
+    /// The classic single-sweep DIF schedule: each fused stage walks the
+    /// whole array before the next begins. Optimal while `nh * 16` bytes
+    /// fit in L2; at WIDE8/WIDE10 every stage re-streams the array from
+    /// L3/DRAM, which is what [`Self::dif_forward_blocked`] fixes.
+    pub fn dif_forward_monolithic(&self, buf: &mut [C64]) {
         debug_assert_eq!(buf.len(), self.nh);
         debug_assert_eq!(self.w_stages.len() as u32, self.log2_nh / 2);
         let mut len = self.nh;
@@ -218,9 +310,123 @@ impl FftPlan {
         }
     }
 
+    /// Cache-blocked forward DIF — the same butterfly network as
+    /// [`Self::dif_forward_monolithic`], rescheduled in two passes:
+    ///
+    /// * **Pass 1** runs the first `block_s1` fused stages over tiles of
+    ///   index-residue classes mod `block_b`. In those stages every
+    ///   butterfly's four indices share one residue (partner distances
+    ///   and bases are multiples of `block_b`), so residue classes are
+    ///   dependency-closed and a tile's working set is
+    ///   `(nh / block_b) * tile * 16` bytes instead of `nh * 16`.
+    /// * **Pass 2** finishes each contiguous `block_b`-length block
+    ///   (remaining fused stages + the trailing radix-2) while it sits in
+    ///   L1/L2.
+    ///
+    /// Within any DIF stage butterflies are independent (each point is
+    /// read and written by exactly one butterfly), and the reschedule
+    /// preserves the stage order seen by every index, so the float ops —
+    /// and therefore the output bits — are identical to the monolithic
+    /// sweep. Tests pin this bitwise.
+    pub fn dif_forward_blocked(&self, buf: &mut [C64]) {
+        debug_assert_eq!(buf.len(), self.nh);
+        let blk = self.block_b;
+        let s1 = self.block_s1;
+        if s1 > 0 {
+            let tile = self.pass1_tile(1);
+            let mut r0 = 0;
+            while r0 < blk {
+                let r1 = (r0 + tile).min(blk);
+                let mut len = self.nh;
+                for tw in self.w_stages.iter().take(s1) {
+                    let q = len / 4;
+                    let mut base = 0;
+                    while base < self.nh {
+                        let mut m = 0;
+                        while m < q {
+                            for j in m + r0..m + r1 {
+                                let w1 = tw[3 * j];
+                                let w2 = tw[3 * j + 1];
+                                let w3 = tw[3 * j + 2];
+                                let a = buf[base + j];
+                                let b = buf[base + j + q];
+                                let c = buf[base + j + 2 * q];
+                                let d = buf[base + j + 3 * q];
+                                let t1 = a.add(c);
+                                let t2 = b.add(d);
+                                let t3 = a.sub(c);
+                                let t4 = b.sub(d).mul_neg_i();
+                                buf[base + j] = t1.add(t2);
+                                buf[base + j + q] = t1.sub(t2).mul(w2);
+                                buf[base + j + 2 * q] = t3.add(t4).mul(w1);
+                                buf[base + j + 3 * q] = t3.sub(t4).mul(w3);
+                            }
+                            m += blk;
+                        }
+                        base += len;
+                    }
+                    len = q;
+                }
+                r0 = r1;
+            }
+        }
+        for g in 0..self.nh / blk {
+            let lo = g * blk;
+            let mut len = blk;
+            let mut stage = s1;
+            while len >= 4 {
+                let q = len / 4;
+                let tw = &self.w_stages[stage];
+                stage += 1;
+                let mut base = lo;
+                while base < lo + blk {
+                    for j in 0..q {
+                        let w1 = tw[3 * j];
+                        let w2 = tw[3 * j + 1];
+                        let w3 = tw[3 * j + 2];
+                        let a = buf[base + j];
+                        let b = buf[base + j + q];
+                        let c = buf[base + j + 2 * q];
+                        let d = buf[base + j + 3 * q];
+                        let t1 = a.add(c);
+                        let t2 = b.add(d);
+                        let t3 = a.sub(c);
+                        let t4 = b.sub(d).mul_neg_i();
+                        buf[base + j] = t1.add(t2);
+                        buf[base + j + q] = t1.sub(t2).mul(w2);
+                        buf[base + j + 2 * q] = t3.add(t4).mul(w1);
+                        buf[base + j + 3 * q] = t3.sub(t4).mul(w3);
+                    }
+                    base += len;
+                }
+                len = q;
+            }
+            if len == 2 {
+                let mut base = lo;
+                while base < lo + blk {
+                    let a = buf[base];
+                    let b = buf[base + 1];
+                    buf[base] = a.add(b);
+                    buf[base + 1] = a.sub(b);
+                    base += 2;
+                }
+            }
+        }
+    }
+
     /// Inverse DIT FFT: **bit-reversed** input -> natural output, with the
-    /// 1/nh scale folded in.
+    /// 1/nh scale folded in. Dispatches like [`Self::dif_forward`].
     pub fn dit_inverse(&self, buf: &mut [C64]) {
+        if self.blocked {
+            self.dit_inverse_blocked(buf);
+        } else {
+            self.dit_inverse_monolithic(buf);
+        }
+    }
+
+    /// Single-sweep inverse DIT (see [`Self::dif_forward_monolithic`] for
+    /// the schedule trade-off).
+    pub fn dit_inverse_monolithic(&self, buf: &mut [C64]) {
         debug_assert_eq!(buf.len(), self.nh);
         let mut len = 2usize;
         while len <= self.nh {
@@ -239,6 +445,71 @@ impl FftPlan {
                 base += len;
             }
             len <<= 1;
+        }
+        let s = 1.0 / self.nh as f64;
+        for z in buf.iter_mut() {
+            *z = z.scale(s);
+        }
+    }
+
+    /// Cache-blocked inverse DIT — the mirror of
+    /// [`Self::dif_forward_blocked`]: pass A finishes every stage with
+    /// `len <= block_b` inside each contiguous block; pass B runs the
+    /// remaining strided stages (`len > block_b`, partner distances
+    /// multiples of `block_b`) over residue-class tiles. Bitwise equal to
+    /// [`Self::dit_inverse_monolithic`] by the same independence argument.
+    pub fn dit_inverse_blocked(&self, buf: &mut [C64]) {
+        debug_assert_eq!(buf.len(), self.nh);
+        let blk = self.block_b;
+        for g in 0..self.nh / blk {
+            let lo = g * blk;
+            let mut len = 2usize;
+            while len <= blk {
+                let half = len / 2;
+                let step = self.nh / len;
+                let mut base = lo;
+                while base < lo + blk {
+                    let (lo_h, hi_h) = buf[base..base + len].split_at_mut(half);
+                    for (j, (u, v)) in lo_h.iter_mut().zip(hi_h.iter_mut()).enumerate() {
+                        let w = self.w[j * step].conj();
+                        let a = *u;
+                        let b = v.mul(w);
+                        *u = a.add(b);
+                        *v = a.sub(b);
+                    }
+                    base += len;
+                }
+                len <<= 1;
+            }
+        }
+        if blk < self.nh {
+            let tile = self.pass1_tile(1);
+            let mut r0 = 0;
+            while r0 < blk {
+                let r1 = (r0 + tile).min(blk);
+                let mut len = 2 * blk;
+                while len <= self.nh {
+                    let half = len / 2;
+                    let step = self.nh / len;
+                    let mut base = 0;
+                    while base < self.nh {
+                        let mut m = 0;
+                        while m < half {
+                            for j in m + r0..m + r1 {
+                                let w = self.w[j * step].conj();
+                                let a = buf[base + j];
+                                let b = buf[base + j + half].mul(w);
+                                buf[base + j] = a.add(b);
+                                buf[base + j + half] = a.sub(b);
+                            }
+                            m += blk;
+                        }
+                        base += len;
+                    }
+                    len <<= 1;
+                }
+                r0 = r1;
+            }
         }
         let s = 1.0 / self.nh as f64;
         for z in buf.iter_mut() {
@@ -312,8 +583,17 @@ impl FftPlan {
     /// Multi-column forward DIF: `cols` interleaved columns, natural input
     /// -> bit-reversed output. `re`/`im` have length `nh * cols`, layout
     /// [bin][col]. Per-column arithmetic is op-for-op identical to
-    /// [`Self::dif_forward`].
+    /// [`Self::dif_forward`]. Dispatches like the scalar entry point.
     pub fn dif_forward_planar(&self, re: &mut [f64], im: &mut [f64], cols: usize) {
+        if self.blocked {
+            self.dif_forward_planar_blocked(re, im, cols);
+        } else {
+            self.dif_forward_planar_monolithic(re, im, cols);
+        }
+    }
+
+    /// Single-sweep planar DIF (see [`Self::dif_forward_monolithic`]).
+    pub fn dif_forward_planar_monolithic(&self, re: &mut [f64], im: &mut [f64], cols: usize) {
         debug_assert_eq!(re.len(), self.nh * cols);
         debug_assert_eq!(im.len(), self.nh * cols);
         debug_assert_eq!(self.w_stages.len() as u32, self.log2_nh / 2);
@@ -378,10 +658,145 @@ impl FftPlan {
         }
     }
 
+    /// Cache-blocked planar DIF: the schedule of
+    /// [`Self::dif_forward_blocked`] with the planar butterfly bodies of
+    /// [`Self::dif_forward_planar_monolithic`] — bitwise equal to it per
+    /// column. The pass-1 tile narrows with `cols` since a planar
+    /// residue's footprint is `cols` times wider.
+    pub fn dif_forward_planar_blocked(&self, re: &mut [f64], im: &mut [f64], cols: usize) {
+        debug_assert_eq!(re.len(), self.nh * cols);
+        debug_assert_eq!(im.len(), self.nh * cols);
+        let blk = self.block_b;
+        let s1 = self.block_s1;
+        if s1 > 0 {
+            let tile = self.pass1_tile(cols);
+            let mut r0 = 0;
+            while r0 < blk {
+                let r1 = (r0 + tile).min(blk);
+                let mut len = self.nh;
+                for tw in self.w_stages.iter().take(s1) {
+                    let q = len / 4;
+                    let mut base = 0;
+                    while base < self.nh {
+                        let mut m = 0;
+                        while m < q {
+                            for j in m + r0..m + r1 {
+                                let w1 = tw[3 * j];
+                                let w2 = tw[3 * j + 1];
+                                let w3 = tw[3 * j + 2];
+                                let i0 = (base + j) * cols;
+                                let i1 = (base + j + q) * cols;
+                                let i2 = (base + j + 2 * q) * cols;
+                                let i3 = (base + j + 3 * q) * cols;
+                                for b in 0..cols {
+                                    let (ar, ai) = (re[i0 + b], im[i0 + b]);
+                                    let (br, bi) = (re[i1 + b], im[i1 + b]);
+                                    let (cr, ci) = (re[i2 + b], im[i2 + b]);
+                                    let (dr, di) = (re[i3 + b], im[i3 + b]);
+                                    let (t1r, t1i) = (ar + cr, ai + ci);
+                                    let (t2r, t2i) = (br + dr, bi + di);
+                                    let (t3r, t3i) = (ar - cr, ai - ci);
+                                    // (b - d) * -i
+                                    let (t4r, t4i) = (bi - di, -(br - dr));
+                                    re[i0 + b] = t1r + t2r;
+                                    im[i0 + b] = t1i + t2i;
+                                    let (xr, xi) = (t1r - t2r, t1i - t2i);
+                                    re[i1 + b] = xr * w2.re - xi * w2.im;
+                                    im[i1 + b] = xr * w2.im + xi * w2.re;
+                                    let (yr, yi) = (t3r + t4r, t3i + t4i);
+                                    re[i2 + b] = yr * w1.re - yi * w1.im;
+                                    im[i2 + b] = yr * w1.im + yi * w1.re;
+                                    let (zr, zi) = (t3r - t4r, t3i - t4i);
+                                    re[i3 + b] = zr * w3.re - zi * w3.im;
+                                    im[i3 + b] = zr * w3.im + zi * w3.re;
+                                }
+                            }
+                            m += blk;
+                        }
+                        base += len;
+                    }
+                    len = q;
+                }
+                r0 = r1;
+            }
+        }
+        for g in 0..self.nh / blk {
+            let lo = g * blk;
+            let mut len = blk;
+            let mut stage = s1;
+            while len >= 4 {
+                let q = len / 4;
+                let tw = &self.w_stages[stage];
+                stage += 1;
+                let mut base = lo;
+                while base < lo + blk {
+                    for j in 0..q {
+                        let w1 = tw[3 * j];
+                        let w2 = tw[3 * j + 1];
+                        let w3 = tw[3 * j + 2];
+                        let i0 = (base + j) * cols;
+                        let i1 = (base + j + q) * cols;
+                        let i2 = (base + j + 2 * q) * cols;
+                        let i3 = (base + j + 3 * q) * cols;
+                        for b in 0..cols {
+                            let (ar, ai) = (re[i0 + b], im[i0 + b]);
+                            let (br, bi) = (re[i1 + b], im[i1 + b]);
+                            let (cr, ci) = (re[i2 + b], im[i2 + b]);
+                            let (dr, di) = (re[i3 + b], im[i3 + b]);
+                            let (t1r, t1i) = (ar + cr, ai + ci);
+                            let (t2r, t2i) = (br + dr, bi + di);
+                            let (t3r, t3i) = (ar - cr, ai - ci);
+                            // (b - d) * -i
+                            let (t4r, t4i) = (bi - di, -(br - dr));
+                            re[i0 + b] = t1r + t2r;
+                            im[i0 + b] = t1i + t2i;
+                            let (xr, xi) = (t1r - t2r, t1i - t2i);
+                            re[i1 + b] = xr * w2.re - xi * w2.im;
+                            im[i1 + b] = xr * w2.im + xi * w2.re;
+                            let (yr, yi) = (t3r + t4r, t3i + t4i);
+                            re[i2 + b] = yr * w1.re - yi * w1.im;
+                            im[i2 + b] = yr * w1.im + yi * w1.re;
+                            let (zr, zi) = (t3r - t4r, t3i - t4i);
+                            re[i3 + b] = zr * w3.re - zi * w3.im;
+                            im[i3 + b] = zr * w3.im + zi * w3.re;
+                        }
+                    }
+                    base += len;
+                }
+                len = q;
+            }
+            if len == 2 {
+                let mut base = lo;
+                while base < lo + blk {
+                    let i0 = base * cols;
+                    let i1 = (base + 1) * cols;
+                    for b in 0..cols {
+                        let (ar, ai) = (re[i0 + b], im[i0 + b]);
+                        let (br, bi) = (re[i1 + b], im[i1 + b]);
+                        re[i0 + b] = ar + br;
+                        im[i0 + b] = ai + bi;
+                        re[i1 + b] = ar - br;
+                        im[i1 + b] = ai - bi;
+                    }
+                    base += 2;
+                }
+            }
+        }
+    }
+
     /// Multi-column inverse DIT: bit-reversed input -> natural output,
     /// 1/nh scale folded in. Per-column arithmetic matches
-    /// [`Self::dit_inverse`].
+    /// [`Self::dit_inverse`]. Dispatches like the scalar entry point.
     pub fn dit_inverse_planar(&self, re: &mut [f64], im: &mut [f64], cols: usize) {
+        if self.blocked {
+            self.dit_inverse_planar_blocked(re, im, cols);
+        } else {
+            self.dit_inverse_planar_monolithic(re, im, cols);
+        }
+    }
+
+    /// Single-sweep planar DIT (see [`Self::dif_forward_monolithic`]).
+    pub fn dit_inverse_planar_monolithic(&self, re: &mut [f64], im: &mut [f64], cols: usize) {
         debug_assert_eq!(re.len(), self.nh * cols);
         debug_assert_eq!(im.len(), self.nh * cols);
         let mut len = 2usize;
@@ -409,6 +824,89 @@ impl FftPlan {
                 base += len;
             }
             len <<= 1;
+        }
+        let s = 1.0 / self.nh as f64;
+        for x in re.iter_mut() {
+            *x *= s;
+        }
+        for x in im.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// Cache-blocked planar DIT (schedule of [`Self::dit_inverse_blocked`],
+    /// planar butterfly bodies) — bitwise equal to
+    /// [`Self::dit_inverse_planar_monolithic`] per column.
+    pub fn dit_inverse_planar_blocked(&self, re: &mut [f64], im: &mut [f64], cols: usize) {
+        debug_assert_eq!(re.len(), self.nh * cols);
+        debug_assert_eq!(im.len(), self.nh * cols);
+        let blk = self.block_b;
+        for g in 0..self.nh / blk {
+            let lo = g * blk;
+            let mut len = 2usize;
+            while len <= blk {
+                let half = len / 2;
+                let step = self.nh / len;
+                let mut base = lo;
+                while base < lo + blk {
+                    for j in 0..half {
+                        let w = self.w[j * step];
+                        let iu = (base + j) * cols;
+                        let iv = (base + j + half) * cols;
+                        for b in 0..cols {
+                            let (ar, ai) = (re[iu + b], im[iu + b]);
+                            let (vr, vi) = (re[iv + b], im[iv + b]);
+                            // v * conj(w)
+                            let br = vr * w.re + vi * w.im;
+                            let bi = vi * w.re - vr * w.im;
+                            re[iu + b] = ar + br;
+                            im[iu + b] = ai + bi;
+                            re[iv + b] = ar - br;
+                            im[iv + b] = ai - bi;
+                        }
+                    }
+                    base += len;
+                }
+                len <<= 1;
+            }
+        }
+        if blk < self.nh {
+            let tile = self.pass1_tile(cols);
+            let mut r0 = 0;
+            while r0 < blk {
+                let r1 = (r0 + tile).min(blk);
+                let mut len = 2 * blk;
+                while len <= self.nh {
+                    let half = len / 2;
+                    let step = self.nh / len;
+                    let mut base = 0;
+                    while base < self.nh {
+                        let mut m = 0;
+                        while m < half {
+                            for j in m + r0..m + r1 {
+                                let w = self.w[j * step];
+                                let iu = (base + j) * cols;
+                                let iv = (base + j + half) * cols;
+                                for b in 0..cols {
+                                    let (ar, ai) = (re[iu + b], im[iu + b]);
+                                    let (vr, vi) = (re[iv + b], im[iv + b]);
+                                    // v * conj(w)
+                                    let br = vr * w.re + vi * w.im;
+                                    let bi = vi * w.re - vr * w.im;
+                                    re[iu + b] = ar + br;
+                                    im[iu + b] = ai + bi;
+                                    re[iv + b] = ar - br;
+                                    im[iv + b] = ai - bi;
+                                }
+                            }
+                            m += blk;
+                        }
+                        base += len;
+                    }
+                    len <<= 1;
+                }
+                r0 = r1;
+            }
         }
         let s = 1.0 / self.nh as f64;
         for x in re.iter_mut() {
@@ -478,6 +976,41 @@ impl FftPlan {
             }
         }
     }
+
+    /// Permute a bit-reversed Fourier vector to natural order using the
+    /// plan's table precomputed at [`Self::new`] — no per-call index
+    /// derivation and no allocation, unlike the free
+    /// [`bitrev_permute_copy`] (kept for odd-length test inputs).
+    pub fn bitrev_permute_into(&self, src: &[C64], out: &mut [C64]) {
+        debug_assert_eq!(src.len(), self.nh);
+        debug_assert_eq!(out.len(), self.nh);
+        for (i, &v) in src.iter().enumerate() {
+            out[self.bitrev[i] as usize] = v;
+        }
+    }
+
+    /// Planar (f64) counterpart of [`Self::bitrev_permute_into`], applied
+    /// to `re`/`im` planes independently.
+    pub fn bitrev_permute_f64_into(&self, src: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(src.len(), self.nh);
+        debug_assert_eq!(out.len(), self.nh);
+        for (i, &v) in src.iter().enumerate() {
+            out[self.bitrev[i] as usize] = v;
+        }
+    }
+}
+
+/// Process-wide plan registry: one shared [`FftPlan`] per polynomial
+/// size, behind a `OnceLock` (mirroring `tfhe::keycache`). Worker
+/// threads, per-tenant backend rebinds, and key export all get the same
+/// immutable twiddle tables instead of re-deriving them per context.
+pub fn plan_for(poly_n: usize) -> std::sync::Arc<FftPlan> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+    static REGISTRY: OnceLock<Mutex<HashMap<usize, Arc<FftPlan>>>> = OnceLock::new();
+    let reg = REGISTRY.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = reg.lock().unwrap_or_else(PoisonError::into_inner);
+    map.entry(poly_n).or_insert_with(|| Arc::new(FftPlan::new(poly_n))).clone()
 }
 
 /// Permute a bit-reversed Fourier vector to natural order (copy). Used
@@ -755,5 +1288,119 @@ mod tests {
         assert_eq!((w.re, w.im), (4.0, -3.0));
         let back = w.mul_neg_i().mul_neg_i().mul_neg_i();
         assert_eq!((back.re, back.im), (z.re, z.im));
+    }
+
+    /// First bin whose bits differ, if any.
+    fn first_bit_diff(a: &[C64], b: &[C64]) -> Option<usize> {
+        a.iter().zip(b).position(|(x, y)| {
+            x.re.to_bits() != y.re.to_bits() || x.im.to_bits() != y.im.to_bits()
+        })
+    }
+
+    #[test]
+    fn blocked_schedule_selection_threshold() {
+        // TEST1/TEST2 stay monolithic; WIDE8/WIDE10 auto-block.
+        assert!(!FftPlan::new(512).blocked());
+        assert!(!FftPlan::new(4096).blocked());
+        assert!(FftPlan::new(16384).blocked());
+        assert!(FftPlan::new(32768).blocked());
+        assert!(!blocked_for_poly(4096) && blocked_for_poly(16384));
+        // Pass-2 blocks stay within the L1-sized cap.
+        assert!(FftPlan::new(16384).block_len() <= 2048);
+        assert!(FftPlan::new(32768).block_len() <= 2048);
+    }
+
+    #[test]
+    fn blocked_scalar_transforms_bitwise_match_monolithic() {
+        // The blocked schedule is a pure reordering of independent
+        // butterflies, so equality is exact — below, at, and above the
+        // auto-blocking threshold (N = 1024 forces a two-pass split even
+        // though it never auto-blocks).
+        check("blocked_vs_monolithic", 3, |rng| {
+            for poly_n in [1024usize, 16384, 32768] {
+                let plan = FftPlan::new(poly_n);
+                let nh = poly_n / 2;
+                let orig: Vec<C64> = (0..nh)
+                    .map(|_| C64::new(rng.gaussian() * 100.0, rng.gaussian() * 100.0))
+                    .collect();
+                let mut mono = orig.clone();
+                plan.dif_forward_monolithic(&mut mono);
+                let mut blk = orig.clone();
+                plan.dif_forward_blocked(&mut blk);
+                if let Some(h) = first_bit_diff(&mono, &blk) {
+                    return Err(format!("dif N={poly_n} bin={h}"));
+                }
+                // The public entry point must agree with both no matter
+                // which schedule it dispatched to.
+                let mut disp = orig.clone();
+                plan.dif_forward(&mut disp);
+                if let Some(h) = first_bit_diff(&mono, &disp) {
+                    return Err(format!("dif dispatch N={poly_n} bin={h}"));
+                }
+                plan.dit_inverse_monolithic(&mut mono);
+                plan.dit_inverse_blocked(&mut blk);
+                if let Some(h) = first_bit_diff(&mono, &blk) {
+                    return Err(format!("dit N={poly_n} bin={h}"));
+                }
+                plan.dit_inverse(&mut disp);
+                if let Some(h) = first_bit_diff(&mono, &disp) {
+                    return Err(format!("dit dispatch N={poly_n} bin={h}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blocked_planar_transforms_bitwise_match_monolithic() {
+        check("blocked_vs_monolithic_planar", 3, |rng| {
+            for poly_n in [1024usize, 16384, 32768] {
+                let plan = FftPlan::new(poly_n);
+                let nh = poly_n / 2;
+                let cols = 2 + rng.below_usize(3);
+                let orig_re: Vec<f64> = (0..nh * cols).map(|_| rng.gaussian() * 100.0).collect();
+                let orig_im: Vec<f64> = (0..nh * cols).map(|_| rng.gaussian() * 100.0).collect();
+                let (mut mre, mut mim) = (orig_re.clone(), orig_im.clone());
+                plan.dif_forward_planar_monolithic(&mut mre, &mut mim, cols);
+                let (mut bre, mut bim) = (orig_re.clone(), orig_im.clone());
+                plan.dif_forward_planar_blocked(&mut bre, &mut bim, cols);
+                if mre.iter().zip(&bre).any(|(x, y)| x.to_bits() != y.to_bits())
+                    || mim.iter().zip(&bim).any(|(x, y)| x.to_bits() != y.to_bits())
+                {
+                    return Err(format!("planar dif N={poly_n} cols={cols}"));
+                }
+                plan.dit_inverse_planar_monolithic(&mut mre, &mut mim, cols);
+                plan.dit_inverse_planar_blocked(&mut bre, &mut bim, cols);
+                if mre.iter().zip(&bre).any(|(x, y)| x.to_bits() != y.to_bits())
+                    || mim.iter().zip(&bim).any(|(x, y)| x.to_bits() != y.to_bits())
+                {
+                    return Err(format!("planar dit N={poly_n} cols={cols}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn plan_bitrev_methods_match_free_functions() {
+        let plan = FftPlan::new(64);
+        let src: Vec<C64> = (0..32).map(|i| C64::new(i as f64, -(i as f64))).collect();
+        let mut out = vec![C64::default(); 32];
+        plan.bitrev_permute_into(&src, &mut out);
+        assert_eq!(out, bitrev_permute_copy(&src));
+        let re: Vec<f64> = src.iter().map(|z| z.re).collect();
+        let mut out_f = vec![0.0f64; 32];
+        plan.bitrev_permute_f64_into(&re, &mut out_f);
+        assert_eq!(out_f, bitrev_permute_f64(&re));
+    }
+
+    #[test]
+    fn plan_registry_shares_one_plan_per_size() {
+        let a = plan_for(1024);
+        let b = plan_for(1024);
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        let c = plan_for(2048);
+        assert_eq!(c.nh, 1024);
+        assert_eq!(a.nh, 512);
     }
 }

@@ -19,6 +19,7 @@ pub mod keycache;
 pub mod keygen;
 pub mod ksk;
 pub mod lwe;
+pub mod parallel;
 pub mod pbs;
 pub mod poly;
 pub mod torus;
@@ -31,7 +32,9 @@ pub use ggsw::{
 pub use glwe::GlweCiphertext;
 pub use keycache::{BoundedKeyCache, CacheStats};
 pub use keygen::{server_keys_bitwise_eq, KeygenOptions};
+pub use fft::plan_for;
 pub use ksk::Ksk;
 pub use lwe::LweCiphertext;
+pub use parallel::WorkerPool;
 pub use pbs::{PbsContext, ServerKeys};
 pub use torus::SecretKeys;

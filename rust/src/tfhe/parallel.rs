@@ -1,0 +1,206 @@
+//! Persistent worker pool for data-parallel blind rotation.
+//!
+//! `std::thread` + `mpsc` only (no external crates), following the
+//! bit-invariant split pattern of `tfhe::keygen`: the *partitioning* of
+//! work across threads is never allowed to change computed bits, so the
+//! pool is a pure scheduler. Workers live as long as the pool (one
+//! thread spawn per `PbsContext`, not per batch) and pull jobs from a
+//! shared channel.
+//!
+//! ## Join protocol (chaos-safe)
+//!
+//! [`WorkerPool::run`] wraps every job in `catch_unwind` and sends an
+//! ack on a per-dispatch channel *unconditionally* — success or panic —
+//! then the dispatcher blocks for exactly one ack per job and re-raises
+//! the first captured panic. A job that panics or stalls therefore can
+//! never deadlock the column join: delays (e.g. `serve --chaos` latency
+//! spikes, which fire in `FaultyBackend` *before* the batch is
+//! dispatched to the pool) only stretch the join, and panics surface on
+//! the calling thread where the coordinator's existing supervision
+//! handles them.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+
+/// A borrowed job: the pool guarantees it finishes before `run` returns,
+/// which is what makes the non-`'static` borrow sound.
+pub type Job<'scope> = Box<dyn FnOnce() + Send + 'scope>;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Fixed-size pool of persistent worker threads.
+pub struct WorkerPool {
+    tx: Option<Sender<Task>>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (at least 1) sharing one job queue.
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Task>();
+        let rx = Arc::new(Mutex::new(rx));
+        let handles = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("fft-worker-{i}"))
+                    .spawn(move || loop {
+                        // Hold the receiver lock only while dequeuing so
+                        // workers drain the queue concurrently.
+                        let task = {
+                            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
+                            guard.recv()
+                        };
+                        match task {
+                            Ok(task) => task(),
+                            Err(_) => break, // pool dropped
+                        }
+                    })
+                    .expect("spawn fft worker")
+            })
+            .collect();
+        Self { tx: Some(tx), handles, threads }
+    }
+
+    /// Worker count this pool was built with.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `jobs` to completion on the pool, blocking the caller until
+    /// every job has finished. Jobs may borrow from the caller's stack
+    /// (disjoint `&mut` chunks, shared keys): the blocking join is what
+    /// makes that sound. If any job panicked, the first captured panic is
+    /// re-raised here — after all jobs have completed, so no borrow ever
+    /// outlives its data.
+    pub fn run<'scope>(&self, jobs: Vec<Job<'scope>>) {
+        let n = jobs.len();
+        let (ack_tx, ack_rx) = channel::<std::thread::Result<()>>();
+        let tx = self.tx.as_ref().expect("pool channel alive until drop");
+        for job in jobs {
+            // SAFETY: the transmute only erases the `'scope` borrow. The
+            // job is queued, executed exactly once, and acked before this
+            // function returns (the ack is sent even if the job panics),
+            // and `run` does not return until all `n` acks arrive — so
+            // every borrow the job carries strictly outlives its use.
+            let job: Task = unsafe {
+                std::mem::transmute::<Job<'scope>, Task>(job)
+            };
+            let ack = ack_tx.clone();
+            tx.send(Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(job));
+                let _ = ack.send(result);
+            }))
+            .expect("worker pool alive");
+        }
+        drop(ack_tx);
+        let mut first_panic = None;
+        for _ in 0..n {
+            match ack_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(p)) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(p);
+                    }
+                }
+                // Acks are sent unconditionally; the senders can only all
+                // drop if every worker thread exited, which cannot happen
+                // while the pool is borrowed here.
+                Err(_) => panic!("worker pool died mid-dispatch"),
+            }
+        }
+        if let Some(p) = first_panic {
+            resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channel breaks every worker's recv loop.
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowed_jobs_on_disjoint_chunks() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        let mut data = vec![0u64; 64];
+        let mut rest: &mut [u64] = &mut data;
+        let mut jobs: Vec<Job> = Vec::new();
+        let mut c = 0u64;
+        while !rest.is_empty() {
+            let (chunk, r) = std::mem::take(&mut rest).split_at_mut(16);
+            rest = r;
+            let tag = c;
+            jobs.push(Box::new(move || {
+                for (i, x) in chunk.iter_mut().enumerate() {
+                    *x = tag * 1000 + i as u64;
+                }
+            }));
+            c += 1;
+        }
+        pool.run(jobs);
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, (i as u64 / 16) * 1000 + (i as u64 % 16));
+        }
+    }
+
+    #[test]
+    fn empty_dispatch_and_reuse() {
+        let pool = WorkerPool::new(2);
+        pool.run(Vec::new());
+        let hits = AtomicUsize::new(0);
+        for _ in 0..3 {
+            let jobs: Vec<Job> = (0..5)
+                .map(|_| {
+                    Box::new(|| {
+                        hits.fetch_add(1, Ordering::SeqCst);
+                    }) as Job
+                })
+                .collect();
+            pool.run(jobs);
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 15);
+    }
+
+    #[test]
+    fn panicked_job_propagates_without_deadlock_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        let jobs: Vec<Job> = (0..4)
+            .map(|i| {
+                let done = &done;
+                Box::new(move || {
+                    if i == 1 {
+                        panic!("injected");
+                    }
+                    done.fetch_add(1, Ordering::SeqCst);
+                }) as Job
+            })
+            .collect();
+        let err = catch_unwind(AssertUnwindSafe(|| pool.run(jobs)));
+        assert!(err.is_err(), "panic must re-raise on the dispatcher");
+        // All non-panicking jobs still ran to completion before the join
+        // released (no torn batches), and the pool remains usable.
+        assert_eq!(done.load(Ordering::SeqCst), 3);
+        let jobs: Vec<Job> = vec![Box::new(|| {
+            done.fetch_add(10, Ordering::SeqCst);
+        })];
+        pool.run(jobs);
+        assert_eq!(done.load(Ordering::SeqCst), 13);
+    }
+}

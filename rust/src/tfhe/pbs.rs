@@ -7,12 +7,15 @@
 //! [`PbsContext`] owns the FFT plan and all scratch so a PBS allocates
 //! nothing on the hot path.
 
+use std::sync::Arc;
+
 use super::bsk::FourierBsk;
-use super::fft::FftPlan;
+use super::fft::{plan_for, FftPlan};
 use super::ggsw::{cmux_rotate, cmux_rotate_batch, BatchExtProdScratch, ExtProdScratch};
 use super::glwe::GlweCiphertext;
 use super::ksk::Ksk;
 use super::lwe::LweCiphertext;
+use super::parallel::{Job, WorkerPool};
 use super::poly::rotate_into;
 use super::torus::SecretKeys;
 use crate::params::ParamSet;
@@ -27,7 +30,7 @@ pub struct ServerKeys {
 
 impl ServerKeys {
     pub fn generate(sk: &SecretKeys, rng: &mut Rng) -> Self {
-        let plan = FftPlan::new(sk.params.big_n);
+        let plan = plan_for(sk.params.big_n);
         Self {
             params: sk.params.clone(),
             bsk: FourierBsk::generate(sk, rng, &plan),
@@ -41,7 +44,7 @@ impl ServerKeys {
     /// `opts`' chunking or worker count. The wide-width `KeyCache` builds
     /// on this to memoize keys across tests.
     pub fn generate_seeded(sk: &SecretKeys, seed: u64, opts: &super::keygen::KeygenOptions) -> Self {
-        let plan = FftPlan::new(sk.params.big_n);
+        let plan = plan_for(sk.params.big_n);
         Self {
             params: sk.params.clone(),
             bsk: FourierBsk::generate_seeded(sk, seed, &plan, opts),
@@ -65,24 +68,68 @@ pub fn modswitch(x: u64, big_n: usize) -> usize {
 /// ciphertext).
 pub struct PbsContext {
     pub params: ParamSet,
-    pub plan: FftPlan,
+    /// Shared per-size plan from the process-wide registry
+    /// (`fft::plan_for`): contexts and worker rebinds stop re-deriving
+    /// identical twiddle tables.
+    pub plan: Arc<FftPlan>,
     scratch: ExtProdScratch,
     /// Batch scratch, lazily (re)sized to the last batch width.
     batch_scratch: Option<BatchExtProdScratch>,
     rot_buf: Vec<u64>,
     bsk_bytes_streamed: u64,
+    /// Worker threads for the column-parallel batched sweep (1 = fully
+    /// sequential, the exact pre-parallel behavior).
+    fft_threads: usize,
+    /// Persistent pool, present iff `fft_threads > 1`.
+    pool: Option<WorkerPool>,
+    /// Per-chunk batch scratch for the parallel sweep (grow-only, like
+    /// `batch_scratch`).
+    chunk_scratch: Vec<BatchExtProdScratch>,
 }
 
 impl PbsContext {
     pub fn new(params: &ParamSet) -> Self {
+        Self::with_threads(params, 1)
+    }
+
+    /// Context with a column-parallel blind-rotation sweep over
+    /// `fft_threads` persistent workers. Thread count is a pure
+    /// scheduling knob: outputs are bitwise-identical for every value.
+    pub fn with_threads(params: &ParamSet, fft_threads: usize) -> Self {
+        let fft_threads = fft_threads.max(1);
         Self {
             params: params.clone(),
-            plan: FftPlan::new(params.big_n),
+            plan: plan_for(params.big_n),
             scratch: ExtProdScratch::new(params),
             batch_scratch: None,
             rot_buf: vec![0; params.big_n],
             bsk_bytes_streamed: 0,
+            fft_threads,
+            pool: (fft_threads > 1).then(|| WorkerPool::new(fft_threads)),
+            chunk_scratch: Vec::new(),
         }
+    }
+
+    /// Configured worker count for the batched sweep.
+    pub fn fft_threads(&self) -> usize {
+        self.fft_threads
+    }
+
+    /// Reconfigure the worker count (tears down / spins up the pool).
+    pub fn set_fft_threads(&mut self, fft_threads: usize) {
+        let fft_threads = fft_threads.max(1);
+        if fft_threads == self.fft_threads {
+            return;
+        }
+        self.fft_threads = fft_threads;
+        self.pool = (fft_threads > 1).then(|| WorkerPool::new(fft_threads));
+        self.chunk_scratch.clear();
+    }
+
+    /// Whether this context's transforms take the cache-blocked schedule
+    /// (plan-time property of the parameter set's polynomial size).
+    pub fn blocked_fft(&self) -> bool {
+        self.plan.blocked()
     }
 
     /// Fourier-BSK bytes read by blind rotations since construction or the
@@ -151,6 +198,14 @@ impl PbsContext {
         if cols == 0 {
             return accs;
         }
+        // Column-parallel sweep: chunks of the batch go to the persistent
+        // pool. Bitwise-invariant vs the sequential sweep below (and
+        // across thread counts), so the knob is pure scheduling.
+        let nchunks = self.fft_threads.min(cols);
+        if nchunks > 1 {
+            self.blind_rotate_batch_parallel(cts, bsk, &p, &mut accs, nchunks);
+            return accs;
+        }
         // Grow-only: narrower batches reuse a wider scratch (the kernels
         // operate on a cols-sized prefix), so the dynamic batcher's
         // straggler batches don't put allocation back on the hot path.
@@ -174,6 +229,80 @@ impl PbsContext {
             cmux_rotate_batch(&self.plan, &p, g, &amounts, &mut accs, scratch);
         }
         accs
+    }
+
+    /// Column-parallel key sweep over the persistent [`WorkerPool`]: the
+    /// batch is split into `nchunks` contiguous column chunks, keys stay
+    /// shared read-only (`bsk` is borrowed by every job), and each chunk
+    /// owns disjoint accumulators plus its own FFT scratch.
+    ///
+    /// Bitwise-invariant across thread counts because
+    /// 1. every chunk — width 1 included — runs the same planar kernels
+    ///    the sequential batch sweep runs, and per-column planar
+    ///    arithmetic is independent of how many columns share a call;
+    /// 2. a chunk skipping a key that rotates all of *its* columns by 0
+    ///    is exact — a zero-amount CMUX contributes only signed zeros
+    ///    that never flip an accumulator bit;
+    /// 3. partition bounds only decide which no-ops are elided.
+    fn blind_rotate_batch_parallel(
+        &mut self,
+        cts: &[LweCiphertext],
+        bsk: &FourierBsk,
+        p: &ParamSet,
+        accs: &mut [GlweCiphertext],
+        nchunks: usize,
+    ) {
+        let cols = cts.len();
+        // BSK traffic is accounted once over the whole batch with the
+        // sequential sweep's skip rule (each live key row streams once
+        // per batch from shared cache), keeping the counter identical
+        // across thread counts.
+        for (i, g) in bsk.ggsw.iter().enumerate() {
+            if cts.iter().any(|ct| modswitch(ct.mask()[i], p.big_n) != 0) {
+                self.bsk_bytes_streamed += g.bytes() as u64;
+            }
+        }
+        // Grow-only per-chunk scratch, sized for the widest chunk.
+        let max_chunk = cols.div_ceil(nchunks);
+        while self.chunk_scratch.len() < nchunks {
+            self.chunk_scratch.push(BatchExtProdScratch::new(p, max_chunk));
+        }
+        for s in self.chunk_scratch.iter_mut().take(nchunks) {
+            if s.cols() < max_chunk {
+                *s = BatchExtProdScratch::new(p, max_chunk);
+            }
+        }
+        let plan = Arc::clone(&self.plan);
+        let pool = self.pool.as_ref().expect("fft_threads > 1 implies a pool");
+        let mut jobs: Vec<Job> = Vec::with_capacity(nchunks);
+        let mut rest_accs = accs;
+        let mut rest_scratch = &mut self.chunk_scratch[..nchunks];
+        for c in 0..nchunks {
+            let lo = cols * c / nchunks;
+            let hi = cols * (c + 1) / nchunks;
+            let (chunk_accs, ra) = std::mem::take(&mut rest_accs).split_at_mut(hi - lo);
+            rest_accs = ra;
+            let (chunk_scratch, rs) = std::mem::take(&mut rest_scratch).split_at_mut(1);
+            rest_scratch = rs;
+            let chunk_cts = &cts[lo..hi];
+            let plan = Arc::clone(&plan);
+            jobs.push(Box::new(move || {
+                let scratch = &mut chunk_scratch[0];
+                let mut amounts = vec![0usize; chunk_cts.len()];
+                for (i, g) in bsk.ggsw.iter().enumerate() {
+                    let mut any_nonzero = false;
+                    for (b, ct) in chunk_cts.iter().enumerate() {
+                        amounts[b] = modswitch(ct.mask()[i], p.big_n);
+                        any_nonzero |= amounts[b] != 0;
+                    }
+                    if !any_nonzero {
+                        continue;
+                    }
+                    cmux_rotate_batch(&plan, p, g, &amounts, chunk_accs, scratch);
+                }
+            }));
+        }
+        pool.run(jobs);
     }
 
     /// Primitive entry point A: long LWE -> short LWE key switch (LPU).
@@ -342,6 +471,41 @@ mod tests {
             for (m, out) in msgs.iter().zip(&outs) {
                 assert_eq!(decrypt_message(out, &sk), *m, "width={width} m={m}");
             }
+        }
+    }
+
+    #[test]
+    fn blind_rotate_batch_bitwise_invariant_across_thread_counts() {
+        let (sk, keys, mut ctx, mut rng) = setup();
+        let lut = make_lut_poly(&TEST1, |m| (3 * m + 1) % 16);
+        let msgs: Vec<u64> = (0..5).map(|i| i % 8).collect();
+        let cts: Vec<_> = msgs.iter().map(|&m| encrypt_message(m, &sk, &mut rng)).collect();
+        let shorts: Vec<_> = cts.iter().map(|ct| ctx.keyswitch(ct, &keys)).collect();
+        let base = ctx.blind_rotate_batch(&shorts, &keys.bsk, &lut);
+        let base_bytes = ctx.take_bsk_bytes_streamed();
+        for threads in [2usize, 4, 8] {
+            let mut ctx_t = PbsContext::with_threads(&TEST1, threads);
+            assert_eq!(ctx_t.fft_threads(), threads);
+            let got = ctx_t.blind_rotate_batch(&shorts, &keys.bsk, &lut);
+            assert_eq!(got, base, "threads={threads}: accumulator bits drifted");
+            assert_eq!(
+                ctx_t.take_bsk_bytes_streamed(),
+                base_bytes,
+                "threads={threads}: BSK accounting must not depend on chunking"
+            );
+        }
+        // Reconfiguring an existing context is equivalent to building one.
+        ctx.set_fft_threads(4);
+        let got = ctx.blind_rotate_batch(&shorts, &keys.bsk, &lut);
+        assert_eq!(got, base, "set_fft_threads(4) changed bits");
+        ctx.set_fft_threads(1);
+        let got = ctx.blind_rotate_batch(&shorts, &keys.bsk, &lut);
+        assert_eq!(got, base, "set_fft_threads(1) changed bits");
+        // Parallel contexts keep end-to-end semantics: full PBS decrypts.
+        let mut ctx4 = PbsContext::with_threads(&TEST1, 4);
+        let outs = ctx4.pbs_batch(&cts, &keys, &lut);
+        for (m, out) in msgs.iter().zip(&outs) {
+            assert_eq!(decrypt_message(out, &sk), (3 * m + 1) % 16, "m={m}");
         }
     }
 

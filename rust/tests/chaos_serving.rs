@@ -251,6 +251,113 @@ fn resolve_failure_redirects_to_another_shard() {
     cluster.shutdown();
 }
 
+#[test]
+fn chaos_composes_with_the_fft_worker_pool() {
+    // Fault injection fires on the coordinator worker thread that
+    // DISPATCHES the blind-rotation pool (`FaultyBackend` injects before
+    // delegating), so an injected delay or panic must never leave a
+    // column join waiting on the pool: every request still terminates,
+    // and surviving outputs stay bitwise-identical to fault-free
+    // single-threaded serving (thread-count invariance under chaos).
+    let mut rng = Rng::new(36);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    let n = 12usize;
+    let queries: Vec<[u64; 2]> = (0..n as u64).map(|i| [i % 6, (i * 5) % 6]).collect();
+    let encrypted: Vec<Vec<LweCiphertext>> = queries
+        .iter()
+        .map(|q| {
+            vec![encrypt_message(q[0], &sk, &mut rng), encrypt_message(q[1], &sk, &mut rng)]
+        })
+        .collect();
+
+    // Fault-free, sequential-FFT reference bits.
+    let reference: Vec<Vec<LweCiphertext>> = {
+        let mut coord = Coordinator::start(
+            prog.clone(),
+            keys.clone(),
+            CoordinatorOptions {
+                workers: 1,
+                batch_capacity: 1,
+                max_batch_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        let pend: Vec<_> =
+            encrypted.iter().map(|cts| coord.submit(cts.clone()).expect("submit")).collect();
+        let outs = pend.iter().map(|t| t.wait().expect("reference")).collect();
+        coord.shutdown();
+        outs
+    };
+
+    // Chaos + pool: delays and one panic against a 4-thread backend with
+    // real multi-request batches (capacity 4 keeps the pool's planar
+    // sweep engaged).
+    let faults = Arc::new(FaultPlan::from_seed(
+        9,
+        &FaultSpec {
+            op_horizon: 6,
+            panics: 1,
+            delays: 2,
+            delay: Duration::from_millis(15),
+            ..FaultSpec::none()
+        },
+    ));
+    let mut coord = Coordinator::start(
+        prog.clone(),
+        keys,
+        CoordinatorOptions {
+            batch_capacity: 4,
+            fft_threads: 4,
+            ..chaos_coordinator_options(&faults)
+        },
+    );
+    let pend: Vec<_> = encrypted
+        .iter()
+        .enumerate()
+        .map(|(i, cts)| {
+            (i, coord.submit_with_deadline(cts.clone(), Duration::from_secs(30)).expect("submit"))
+        })
+        .collect();
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for (i, t) in &pend {
+        match t.wait() {
+            Ok(outs) => {
+                assert_eq!(
+                    outs, reference[*i],
+                    "request {i}: 4-thread chaos serving changed output bits"
+                );
+                ok += 1;
+            }
+            Err(err) => {
+                println!("request {i} failed typed under chaos: {err}");
+                failed += 1;
+            }
+        }
+    }
+    drop(pend);
+    assert_eq!(ok + failed, n, "every request terminated (no pool join deadlock)");
+    assert!(ok >= 1, "the single scheduled panic cannot fail every batch");
+    assert_eq!(faults.injected().panics, 1);
+
+    // Disarmed, the same 4-thread coordinator serves the identical stream
+    // clean and bitwise fault-free.
+    faults.disarm();
+    let pend: Vec<_> = encrypted
+        .iter()
+        .enumerate()
+        .map(|(i, cts)| (i, coord.submit(cts.clone()).expect("post-recovery submit")))
+        .collect();
+    for (i, t) in &pend {
+        let outs = t.wait().unwrap_or_else(|e| panic!("post-recovery request {i}: {e}"));
+        assert_eq!(outs, reference[*i], "post-recovery output {i} must be bitwise fault-free");
+    }
+    drop(pend);
+    coord.shutdown();
+}
+
 /// The soak: for each seed, serve a request stream through a cluster under
 /// an armed fault plan, then disarm and serve it again. Asserts the full
 /// robustness contract per seed.

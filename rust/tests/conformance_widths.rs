@@ -18,7 +18,9 @@ use taurus::eval::conformance::{self, KEY_SEED, WIDTHS};
 use taurus::params;
 use taurus::tfhe::keycache;
 use taurus::tfhe::keygen::{server_keys_bitwise_eq, KeygenOptions};
-use taurus::tfhe::ServerKeys;
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::tfhe::{make_lut_poly, PbsContext, ServerKeys};
+use taurus::util::rng::Rng;
 
 /// Default cases per width when PROP_CASES is unset: one case keeps the
 /// plain `cargo test -q` tier-1 run affordable at the wide widths; CI's
@@ -81,6 +83,44 @@ fn keygen_determinism_chunked_equals_monolithic_at_every_width() {
             "{}: chunk-7/2-worker keys != monolithic keys",
             p.name
         );
+    }
+}
+
+#[test]
+fn blind_rotation_bitwise_invariant_across_thread_counts_at_widths() {
+    // The ISSUE-7 tentpole invariant at the paper widths: splitting a
+    // blind rotation's batch columns over a worker pool is a pure
+    // scheduling choice. Same keys, same batch -> the same GLWE bits and
+    // the same BSK-traffic accounting at every thread count (including
+    // counts above the column count, which clamp).
+    for width in [3usize, 8, 10] {
+        let p = params::select_for_width(width);
+        let keys = keycache::get(p, KEY_SEED);
+        let mut rng = Rng::new(0x5EED ^ width as u64);
+        let lut = make_lut_poly(p, |m| m);
+        let msgs: Vec<u64> = (0..4u64).map(|i| i % (1u64 << width)).collect();
+        let cts: Vec<_> = msgs.iter().map(|&m| encrypt_message(m, &keys.sk, &mut rng)).collect();
+
+        let mut base_ctx = PbsContext::new(p);
+        let shorts: Vec<_> = cts.iter().map(|ct| base_ctx.keyswitch(ct, &keys.server)).collect();
+        let base = base_ctx.blind_rotate_batch(&shorts, &keys.server.bsk, &lut);
+        let base_bytes = base_ctx.take_bsk_bytes_streamed();
+
+        for threads in [2usize, 4, 8] {
+            let mut ctx = PbsContext::with_threads(p, threads);
+            let got = ctx.blind_rotate_batch(&shorts, &keys.server.bsk, &lut);
+            assert!(
+                got == base,
+                "{}: {threads}-thread blind rotation changed output bits",
+                p.name
+            );
+            assert_eq!(
+                ctx.take_bsk_bytes_streamed(),
+                base_bytes,
+                "{}: {threads}-thread sweep changed BSK accounting",
+                p.name
+            );
+        }
     }
 }
 
