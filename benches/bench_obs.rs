@@ -1,0 +1,116 @@
+//! Observability overhead: the same PBS work with the obs hooks disabled
+//! (the default — every hook is one relaxed atomic load) versus enabled
+//! (clock reads + histogram records + flight-recorder spans), plus the
+//! `Log2Histogram::record` micro-cost. The disabled-mode delta is the
+//! number EXPERIMENTS.md §Observability quotes and CI tracks: it must
+//! stay in the noise (<2% on batch-8 PBS). Emits `BENCH_obs.json`.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, section};
+use taurus::compiler::{compile, Engine, NativePbsBackend};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::obs;
+use taurus::obs::hist::Log2Histogram;
+use taurus::params::TEST1;
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::tfhe::{make_lut_poly, LweCiphertext, PbsContext, SecretKeys, ServerKeys};
+use taurus::util::json::{arr, num, obj, s, JsonValue};
+use taurus::util::rng::Rng;
+
+const BATCH: usize = 8;
+
+fn main() {
+    let mut rng = Rng::new(11);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = std::sync::Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let lut = make_lut_poly(&TEST1, |m| m);
+    let cts: Vec<_> = (0..BATCH).map(|i| encrypt_message(i as u64 % 8, &sk, &mut rng)).collect();
+
+    // The serving shape: two LUTs over one value (shared key switch) —
+    // the same quickstart program `serve` runs, through the same
+    // schedule-driven engine, so the enabled path exercises every stage
+    // hook (KS/BR/SE timers, per-batch profiles, trace spans) and not
+    // just the FFT meter.
+    let mut b = ProgramBuilder::new("bench-obs", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.dot(vec![x, y], vec![2, 1], 1);
+    let r = b.relu(d, 3);
+    let sg = b.lut_fn(d, |m| u64::from(m > 3));
+    b.outputs(&[r, sg]);
+    let plan = compile(&b.finish(), &TEST1, 48usize);
+    let batch: Vec<Vec<LweCiphertext>> = (0..BATCH)
+        .map(|i| {
+            vec![
+                encrypt_message(i as u64 % 4, &sk, &mut rng),
+                encrypt_message((i as u64 * 3) % 4, &sk, &mut rng),
+            ]
+        })
+        .collect();
+
+    let mut rows: Vec<JsonValue> = Vec::new();
+    let mut ctx = PbsContext::new(&TEST1);
+    let mut eng = Engine::new(NativePbsBackend::shared(keys.clone()));
+
+    section("observability overhead: hooks disabled vs enabled");
+    assert!(!obs::enabled(), "bench must start with obs disabled");
+    let pbs_off = bench(&format!("pbs_batch TEST1 B={BATCH} obs OFF"), 0.8, || {
+        std::hint::black_box(ctx.pbs_batch(&cts, &keys, &lut));
+    });
+    let plan_off = bench(&format!("run_plan_batch B={BATCH} obs OFF"), 0.8, || {
+        std::hint::black_box(eng.run_plan_batch(&plan, &batch));
+    });
+    let _ = eng.take_exec_stats();
+
+    obs::enable();
+    let pbs_on = bench(&format!("pbs_batch TEST1 B={BATCH} obs ON"), 0.8, || {
+        std::hint::black_box(ctx.pbs_batch(&cts, &keys, &lut));
+    });
+    let plan_on = bench(&format!("run_plan_batch B={BATCH} obs ON"), 0.8, || {
+        std::hint::black_box(eng.run_plan_batch(&plan, &batch));
+    });
+    // Sanity: the enabled run actually recorded (one SE sample per PBS).
+    let stage = eng.take_stage_times();
+    assert!(stage.sample_extract.count() > 0, "enabled run must record stage samples");
+    obs::disable();
+
+    let pct = |on: f64, off: f64| (on - off) / off * 100.0;
+    let pbs_overhead = pct(pbs_on.mean_s, pbs_off.mean_s);
+    let plan_overhead = pct(plan_on.mean_s, plan_off.mean_s);
+    println!("      pbs_batch enabled-hook overhead : {pbs_overhead:+.2}%");
+    println!("      plan-engine enabled overhead    : {plan_overhead:+.2}%");
+
+    section("Log2Histogram::record micro-cost");
+    let mut h = Log2Histogram::new();
+    let rec = bench("hist record x10000", 0.3, || {
+        for i in 0..10_000u64 {
+            h.record(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        }
+        std::hint::black_box(&h);
+    });
+    let ns_per_record = rec.mean_s * 1e9 / 10_000.0;
+    println!("      {ns_per_record:.2} ns/record");
+
+    for (case, off, on, overhead) in [
+        ("pbs_batch8", &pbs_off, &pbs_on, pbs_overhead),
+        ("run_plan_batch8", &plan_off, &plan_on, plan_overhead),
+    ] {
+        rows.push(obj(vec![
+            ("case", s(case)),
+            ("batch", num(BATCH as f64)),
+            ("off_ns", num(off.mean_s * 1e9)),
+            ("on_ns", num(on.mean_s * 1e9)),
+            ("enabled_overhead_pct", num(overhead)),
+        ]));
+    }
+    rows.push(obj(vec![("case", s("hist_record")), ("ns_per_record", num(ns_per_record))]));
+
+    let report = obj(vec![("bench", s("obs")), ("results", arr(rows))]);
+    let path = "BENCH_obs.json";
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

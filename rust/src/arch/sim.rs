@@ -159,6 +159,46 @@ pub fn simulate_schedule(s: &Schedule, p: &ParamSet, cfg: &TaurusConfig) -> SimR
     }
 }
 
+/// Per-schedule-batch model predictions for cost-model drift attribution
+/// ([`crate::obs::drift`]): the same walk as [`simulate_schedule`], but
+/// reported per batch instead of rolled up. Counts are exactly the
+/// schedule's per-request op lists (what the executor runs once per
+/// request); `bsk_bytes` and `seconds` are the batch's own window cost,
+/// independent of cross-batch dependency stalls.
+pub fn batch_predictions(
+    s: &Schedule,
+    p: &ParamSet,
+    cfg: &TaurusConfig,
+) -> Vec<crate::obs::drift::BatchPrediction> {
+    let cyc = cfg.cycle_s();
+    let groups = cfg.sync_groups();
+    let clusters_per_group = (cfg.clusters / groups).max(1);
+    let br_ct_cycles = bru::blind_rotate_cycles(p, cfg);
+    let ks_cycles = lpu::keyswitch_cycles(p, cfg);
+    let se_cycles = lpu::sample_extract_cycles(p, cfg);
+    let lin_cycles = lpu::linear_op_cycles(p, cfg);
+    s.batches
+        .iter()
+        .map(|batch| {
+            let cts = batch.br_ops.len();
+            let lpu_work = (batch.lin_ops.len() as f64 * lin_cycles
+                + batch.ks_ops.len() as f64 * ks_cycles
+                + batch.se_ops.len() as f64 * se_cycles)
+                / clusters_per_group as f64;
+            let per_cluster = cts.div_ceil(clusters_per_group).max(1);
+            let compute = per_cluster as f64 * br_ct_cycles;
+            let traffic = memory::batch_traffic(p, cfg, cts);
+            let mem = traffic.total() as f64 / (cfg.hbm_bw_gbps * 1e9) / cyc;
+            crate::obs::drift::BatchPrediction {
+                ks: batch.ks_ops.len() as u64,
+                pbs: cts as u64,
+                bsk_bytes: traffic.bsk,
+                seconds: (lpu_work + compute.max(mem)) * cyc,
+            }
+        })
+        .collect()
+}
+
 /// Throughput metric for design-space sweeps (Fig. 13b): bootstraps/sec at
 /// steady state on a saturated independent workload.
 pub fn steady_state_pbs_per_s(p: &ParamSet, cfg: &TaurusConfig) -> f64 {
@@ -295,6 +335,22 @@ mod tests {
         let r = simulate(&c, &cfg);
         assert_eq!(r.ks_count, c.ks_dedup.after);
         assert_eq!(r.pbs_count, 6);
+    }
+
+    #[test]
+    fn batch_predictions_sum_to_the_rolled_up_sim() {
+        let cfg = TaurusConfig::default();
+        let c = compile(&wide(48, 6), &GPT2, cfg.batch_capacity());
+        let r = simulate(&c, &cfg);
+        let per_batch = batch_predictions(&c.schedule, &c.params, &cfg);
+        assert_eq!(per_batch.len(), r.batches);
+        let ks: u64 = per_batch.iter().map(|b| b.ks).sum();
+        let pbs: u64 = per_batch.iter().map(|b| b.pbs).sum();
+        let bsk: u64 = per_batch.iter().map(|b| b.bsk_bytes).sum();
+        assert_eq!(ks, r.ks_count as u64);
+        assert_eq!(pbs, r.pbs_count as u64);
+        assert_eq!(bsk, r.traffic.bsk, "per-batch BSK streams sum to the total");
+        assert!(per_batch.iter().all(|b| b.seconds > 0.0));
     }
 
     #[test]

@@ -54,6 +54,7 @@ use crate::coordinator::{
     Coordinator, CoordinatorOptions, MetricsSnapshot, RequestError, SubmitError, Ticket,
 };
 use crate::ir::Program;
+use crate::obs;
 use crate::tenant::{KeyStore, KeyStoreStats, SessionId, StaticKeys};
 use crate::tfhe::{LweCiphertext, ServerKeys};
 
@@ -537,6 +538,20 @@ impl Cluster {
         }
         // The permit is dropped (slot released) on any error path below.
         let permit = AdmissionPermit::acquire(&self.admitted, self.queue_depth)?;
+        // The request's trace id is minted HERE, at cluster admission:
+        // the whole journey — routing, redirects, execution, retries on
+        // other shards, the terminal — shares one async span. Shards are
+        // entered through `try_submit_traced` so they don't mint again.
+        let trace = obs::next_trace_id();
+        obs::trace::async_begin("request", trace);
+        obs::trace::instant("admitted", trace);
+        // Close the async span on a rejection: no ticket exists to do it.
+        let reject = |trace: u64| {
+            if trace != 0 {
+                obs::trace::instant("rejected", trace);
+                obs::trace::async_end("request", trace);
+            }
+        };
         let shards = read(&self.shared.shards);
         let router = read(&self.shared.router);
         // Outstanding counts are gathered lazily — only the
@@ -552,10 +567,11 @@ impl Cluster {
             if k > 0 && router.health(shard) == HealthState::Down {
                 continue;
             }
-            match shards[shard].try_submit(session, inputs, deadline) {
+            match shards[shard].try_submit_traced(session, inputs, deadline, trace) {
                 Ok(ticket) => {
                     if k > 0 {
                         self.shared.redirects.fetch_add(1, Ordering::SeqCst);
+                        obs::trace::instant("redirect", trace);
                     }
                     return Ok(ClusterResponse {
                         ticket,
@@ -566,7 +582,10 @@ impl Cluster {
                 // Shard backpressure is NOT redirected: spilling onto the
                 // next shard would defeat the per-shard bound (and change
                 // fault-free placement). The caller sheds load.
-                Err((SubmitError::QueueFull, _)) => return Err(ClusterError::ShardFull),
+                Err((SubmitError::QueueFull, _)) => {
+                    reject(trace);
+                    return Err(ClusterError::ShardFull);
+                }
                 Err((e, returned)) => {
                     inputs = returned;
                     last = match e {
@@ -577,6 +596,7 @@ impl Cluster {
                 }
             }
         }
+        reject(trace);
         Err(last)
     }
 
@@ -844,8 +864,9 @@ fn handle_failure(
             .unwrap_or(ev.shard.min(n - 1))
     };
     shared.retries.fetch_add(1, Ordering::SeqCst);
+    obs::trace::instant("retry", ev.trace);
     if let Err(respond) =
-        shards[target].resubmit(ev.session, ev.inputs, ev.respond, ev.retries + 1)
+        shards[target].resubmit(ev.session, ev.inputs, ev.respond, ev.retries + 1, ev.trace)
     {
         // Target could not take it (stopped, or its store failed to
         // resolve): terminal typed failure.
@@ -889,6 +910,7 @@ fn restart_shard(
         .unwrap_or_else(PoisonError::into_inner)
         .push(old.metrics.snapshot());
     shared.restarts.fetch_add(1, Ordering::SeqCst);
+    obs::trace::instant("shard_restart", 0);
     read(&shared.router).mark_healthy(shard);
 }
 

@@ -20,6 +20,9 @@ use std::sync::Arc;
 use super::lowering::{LinExpr, Operand, PrimGraph, PrimId, PrimKind};
 use super::CompiledPlan;
 use crate::ir::{Op, Program};
+use crate::obs;
+use crate::obs::drift::PlanBatchProfile;
+use crate::obs::hist::{Log2Histogram, StageHists};
 use crate::params::ParamSet;
 use crate::tfhe::encoding;
 use crate::tfhe::{GlweCiphertext, LweCiphertext, PbsContext, ServerKeys};
@@ -52,6 +55,13 @@ pub trait PbsBackend {
     /// track it.
     fn take_bsk_bytes_streamed(&mut self) -> u64 {
         0
+    }
+
+    /// Drain the backend's per-transform FFT timing histogram (populated
+    /// only while `obs::enabled`); empty for backends that don't meter
+    /// their transforms.
+    fn take_fft_hist(&mut self) -> Log2Histogram {
+        Log2Histogram::new()
     }
 
     /// One full PBS: KS -> BR -> SE.
@@ -184,6 +194,10 @@ impl PbsBackend for NativePbsBackend<'_> {
     fn take_bsk_bytes_streamed(&mut self) -> u64 {
         self.ctx.take_bsk_bytes_streamed()
     }
+
+    fn take_fft_hist(&mut self) -> Log2Histogram {
+        self.ctx.take_fft_hist()
+    }
 }
 
 /// The XLA artifacts execute one blind rotation per invocation, so this
@@ -241,6 +255,15 @@ pub struct Engine<B: PbsBackend> {
     pub backend: B,
     lut_cache: HashMap<u64, Arc<[u64]>>,
     stats: ExecStats,
+    /// Per-stage timing histograms, filled only while `obs::enabled`.
+    stage: StageHists,
+    /// Per-schedule-batch measured profiles (index = batch index in
+    /// `CompiledPlan.schedule.batches`), filled only while `obs::enabled`.
+    profiles: Vec<PlanBatchProfile>,
+    /// BSK bytes already drained from the backend into per-batch profiles;
+    /// re-added by [`Self::take_exec_stats`] so the rolled-up counter is
+    /// identical with and without profiling.
+    profiled_bsk: u64,
 }
 
 /// Resolve an operand to the ciphertext of request `q`.
@@ -326,7 +349,14 @@ fn exec_linear(
 
 impl<B: PbsBackend> Engine<B> {
     pub fn new(backend: B) -> Self {
-        Self { backend, lut_cache: HashMap::new(), stats: ExecStats::default() }
+        Self {
+            backend,
+            lut_cache: HashMap::new(),
+            stats: ExecStats::default(),
+            stage: StageHists::default(),
+            profiles: Vec::new(),
+            profiled_bsk: 0,
+        }
     }
 
     /// Number of distinct accumulators encoded so far.
@@ -339,8 +369,24 @@ impl<B: PbsBackend> Engine<B> {
     /// engine-level drain, so traffic is never split across readers).
     pub fn take_exec_stats(&mut self) -> ExecStats {
         let mut st = std::mem::take(&mut self.stats);
-        st.bsk_bytes_streamed += self.backend.take_bsk_bytes_streamed();
+        st.bsk_bytes_streamed +=
+            self.backend.take_bsk_bytes_streamed() + std::mem::take(&mut self.profiled_bsk);
         st
+    }
+
+    /// Drain the per-stage timing histograms accumulated since the last
+    /// call (empty unless `obs::enabled` during execution). Includes the
+    /// backend's FFT-transform meter.
+    pub fn take_stage_times(&mut self) -> StageHists {
+        let mut st = std::mem::take(&mut self.stage);
+        st.fft.merge(&self.backend.take_fft_hist());
+        st
+    }
+
+    /// Drain the per-schedule-batch measured profiles accumulated since
+    /// the last call (empty unless `obs::enabled` during execution).
+    pub fn take_batch_profiles(&mut self) -> Vec<PlanBatchProfile> {
+        std::mem::take(&mut self.profiles)
     }
 
     fn lut_for(&mut self, p: &ParamSet, table: &crate::ir::LutTable) -> Arc<[u64]> {
@@ -398,10 +444,19 @@ impl<B: PbsBackend> Engine<B> {
         // Per-primitive outputs, one ciphertext per request.
         let mut lwe: Vec<Option<Vec<LweCiphertext>>> = vec![None; g.ops.len()];
         let mut glwe: Vec<Option<Vec<GlweCiphertext>>> = vec![None; g.ops.len()];
-        for sb in &plan.schedule.batches {
+        // One gate check per call: the disabled path below is the original
+        // loop with untaken branches — no clocks, no histogram touches,
+        // no per-batch BSK drains.
+        let profiling = obs::enabled();
+        if profiling && self.profiles.len() < plan.schedule.batches.len() {
+            self.profiles.resize(plan.schedule.batches.len(), PlanBatchProfile::default());
+        }
+        for (bi, sb) in plan.schedule.batches.iter().enumerate() {
+            let mut prof = PlanBatchProfile::default();
             for &id in &sb.lin_ops {
                 exec_linear(&p, g, id, batch, &mut lwe);
             }
+            let ks_span = obs::trace::start();
             for &id in &sb.ks_ops {
                 if lwe[id].is_some() {
                     continue; // shared KS already computed
@@ -409,12 +464,21 @@ impl<B: PbsBackend> Engine<B> {
                 let PrimKind::KeySwitch { src } = &g.ops[id].kind else {
                     panic!("ks_ops lists non-KS prim {id}")
                 };
-                let outs: Vec<LweCiphertext> = (0..nb)
-                    .map(|q| self.backend.keyswitch(fetch(batch, &lwe, *src, q)))
-                    .collect();
+                let mut outs: Vec<LweCiphertext> = Vec::with_capacity(nb);
+                for q in 0..nb {
+                    let t0 = obs::timer();
+                    outs.push(self.backend.keyswitch(fetch(batch, &lwe, *src, q)));
+                    if t0.is_some() {
+                        let ns = obs::elapsed_ns(t0);
+                        self.stage.keyswitch.record(ns);
+                        prof.ks_ns += ns;
+                    }
+                }
                 self.stats.ks_ops += nb as u64;
+                prof.ks_calls += nb as u64;
                 lwe[id] = Some(outs);
             }
+            obs::trace::span("keyswitch", 0, ks_span);
             // Fuse rotations sharing an accumulator into one sweep each:
             // the BSK streams once per (table, batch) instead of once per
             // node — strictly better amortization than per-node batching.
@@ -428,6 +492,7 @@ impl<B: PbsBackend> Engine<B> {
                     None => groups.push((*table, vec![br])),
                 }
             }
+            let br_span = obs::trace::start();
             for (table, brs) in &groups {
                 let lut = self.lut_for(&p, &g.tables[*table]);
                 let mut shorts: Vec<LweCiphertext> = Vec::with_capacity(brs.len() * nb);
@@ -435,16 +500,26 @@ impl<B: PbsBackend> Engine<B> {
                     let ks = ks_dep(g, br);
                     shorts.extend(lwe[ks].as_ref().expect("KS before BR").iter().cloned());
                 }
+                let t0 = obs::timer();
                 let mut accs = self.backend.blind_rotate_batch(&shorts, &lut);
+                if t0.is_some() {
+                    let ns = obs::elapsed_ns(t0);
+                    self.stage.blind_rotate.record(ns);
+                    prof.br_ns += ns;
+                }
                 debug_assert_eq!(accs.len(), brs.len() * nb);
                 self.stats.pbs_ops += (brs.len() * nb) as u64;
                 self.stats.br_calls += 1;
+                prof.pbs += (brs.len() * nb) as u64;
+                prof.br_calls += 1;
                 // Hand each BR its accumulators without copying: split the
                 // result vector from the tail (brs order = accs order).
                 for &br in brs.iter().rev() {
                     glwe[br] = Some(accs.split_off(accs.len() - nb));
                 }
             }
+            obs::trace::span("blind_rotate", 0, br_span);
+            let se_span = obs::trace::start();
             for &id in &sb.se_ops {
                 let br = g.ops[id]
                     .deps
@@ -456,9 +531,28 @@ impl<B: PbsBackend> Engine<B> {
                 // accumulators are freed as soon as they are extracted
                 // (peak GLWE memory = one level, not the whole program).
                 let accs = glwe[br].take().expect("BR before SE");
-                let outs: Vec<LweCiphertext> =
-                    accs.iter().map(|acc| self.backend.sample_extract(acc)).collect();
+                let mut outs: Vec<LweCiphertext> = Vec::with_capacity(accs.len());
+                for acc in &accs {
+                    let t0 = obs::timer();
+                    outs.push(self.backend.sample_extract(acc));
+                    if t0.is_some() {
+                        let ns = obs::elapsed_ns(t0);
+                        self.stage.sample_extract.record(ns);
+                        prof.se_ns += ns;
+                    }
+                }
                 lwe[id] = Some(outs);
+            }
+            obs::trace::span("sample_extract", 0, se_span);
+            if profiling {
+                // Per-batch BSK attribution: drain the backend's counter
+                // here and re-add it in take_exec_stats via profiled_bsk,
+                // so the rolled-up total is unchanged by profiling.
+                prof.bsk_bytes = self.backend.take_bsk_bytes_streamed();
+                self.profiled_bsk += prof.bsk_bytes;
+                prof.executions = 1;
+                prof.requests = nb as u64;
+                self.profiles[bi].merge(&prof);
             }
         }
         for &id in &plan.schedule.loose_linear {

@@ -5,15 +5,24 @@ use std::collections::BTreeMap;
 use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
+use crate::obs::drift::{merge_profiles, PlanBatchProfile};
+use crate::obs::hist::StageHists;
 use crate::tenant::SessionId;
 use crate::util::stats;
+use crate::util::stats::Reservoir;
 
-#[derive(Debug, Default)]
+/// Retained samples per distribution. Below this the reservoirs hold the
+/// raw streams exactly (so merges and percentiles over short runs are
+/// unchanged from the unbounded vectors they replaced); above it memory
+/// stays constant no matter how many requests a soak serves.
+const SAMPLE_CAP: usize = 4096;
+
+#[derive(Debug)]
 struct Inner {
-    latencies_ms: Vec<f64>,
-    queue_ms: Vec<f64>,
+    latencies_ms: Reservoir,
+    queue_ms: Reservoir,
     batches: usize,
-    batch_sizes: Vec<f64>,
+    batch_sizes: Reservoir,
     requests: usize,
     pbs_executed: usize,
     ks_executed: u64,
@@ -27,6 +36,39 @@ struct Inner {
     /// Last time a worker made observable progress (finished or failed a
     /// batch). Drives the cluster supervisor's stall detector.
     last_progress: Option<Instant>,
+    /// Per-stage timing histograms (queue filled here, execution stages
+    /// pushed by workers via `record_stage_times`); empty unless
+    /// `obs::enabled`.
+    stage: StageHists,
+    /// Per-schedule-batch measured profiles pushed by workers via
+    /// `record_batch_profiles`; empty unless `obs::enabled`.
+    plan_batch_profiles: Vec<PlanBatchProfile>,
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        // Fixed, distinct seeds: the retained samples are a deterministic
+        // function of the record stream alone.
+        Self {
+            latencies_ms: Reservoir::new(SAMPLE_CAP, 0xA11),
+            queue_ms: Reservoir::new(SAMPLE_CAP, 0xB22),
+            batches: 0,
+            batch_sizes: Reservoir::new(SAMPLE_CAP, 0xC33),
+            requests: 0,
+            pbs_executed: 0,
+            ks_executed: 0,
+            bsk_bytes_streamed: 0,
+            keyed_batch_splits: 0,
+            session_requests: BTreeMap::new(),
+            exec_failures: 0,
+            failed_requests: 0,
+            worker_respawns: 0,
+            request_timeouts: 0,
+            last_progress: None,
+            stage: StageHists::default(),
+            plan_batch_profiles: Vec::new(),
+        }
+    }
 }
 
 /// Thread-safe metrics sink shared by batcher and workers.
@@ -110,14 +152,24 @@ pub struct MetricsSnapshot {
     /// Whether this shard's parameter set selects the cache-blocked FFT
     /// schedule (filled by `Coordinator::snapshot`; merge ORs shards).
     pub blocked_fft: bool,
-    /// Raw per-request latency samples (ms). Retained so shard snapshots
-    /// can be merged into *exact* aggregate percentiles (percentiles do
-    /// not compose from per-shard percentiles).
+    /// Per-request latency samples (ms). Retained so shard snapshots can
+    /// be merged into aggregate percentiles (percentiles do not compose
+    /// from per-shard percentiles). Held in a seed-deterministic bounded
+    /// reservoir: exact below [`SAMPLE_CAP`], a uniform subsample past it
+    /// — so a soak's snapshot memory is constant in request count.
     pub latency_samples_ms: Vec<f64>,
-    /// Raw per-request queueing-delay samples (ms).
+    /// Per-request queueing-delay samples (ms), same reservoir policy.
     pub queue_samples_ms: Vec<f64>,
-    /// Raw per-batch size samples.
+    /// Per-batch size samples, same reservoir policy.
     pub batch_size_samples: Vec<f64>,
+    /// Per-stage timing histograms (queue/keyswitch/blind-rotate/
+    /// sample-extract/FFT); empty unless observability was enabled.
+    /// Histograms merge exactly, so cluster roll-ups lose nothing.
+    pub stage: StageHists,
+    /// Per-schedule-batch measured execution profiles for cost-model
+    /// drift attribution (`obs::drift::attribute`); empty unless
+    /// observability was enabled.
+    pub plan_batch_profiles: Vec<PlanBatchProfile>,
 }
 
 impl MetricsSnapshot {
@@ -157,6 +209,8 @@ impl MetricsSnapshot {
             out.latency_samples_ms.extend_from_slice(&s.latency_samples_ms);
             out.queue_samples_ms.extend_from_slice(&s.queue_samples_ms);
             out.batch_size_samples.extend_from_slice(&s.batch_size_samples);
+            out.stage.merge(&s.stage);
+            merge_profiles(&mut out.plan_batch_profiles, &s.plan_batch_profiles);
             // Shards run concurrently: the cluster has been up as long as
             // its longest-lived shard.
             out.elapsed_s = out.elapsed_s.max(s.elapsed_s);
@@ -196,6 +250,11 @@ impl Metrics {
         *g.session_requests.entry(session.0).or_insert(0) += 1;
         g.queue_ms.push(queue_ms);
         g.latencies_ms.push(latency_ms);
+        if crate::obs::enabled() {
+            // One queue-stage event per served request, so the stage
+            // histogram's count reconciles against the request counter.
+            g.stage.queue.record((queue_ms.max(0.0) * 1e6) as u64);
+        }
     }
 
     pub fn record_batch(&self, size: usize, pbs: usize) {
@@ -219,6 +278,25 @@ impl Metrics {
         let mut g = self.lock();
         g.ks_executed += ks_ops;
         g.bsk_bytes_streamed += bsk_bytes;
+    }
+
+    /// Merge one drained engine stage-timing set (worker success path).
+    pub fn record_stage_times(&self, st: &StageHists) {
+        if st.is_empty() {
+            return;
+        }
+        let mut g = self.lock();
+        g.stage.merge(st);
+    }
+
+    /// Merge one drained engine per-schedule-batch profile vector
+    /// (worker success path).
+    pub fn record_batch_profiles(&self, profiles: &[PlanBatchProfile]) {
+        if profiles.is_empty() {
+            return;
+        }
+        let mut g = self.lock();
+        merge_profiles(&mut g.plan_batch_profiles, profiles);
     }
 
     /// Account one caught batch panic failing `failed` requests. Counts
@@ -261,10 +339,10 @@ impl Metrics {
             requests: g.requests,
             batches: g.batches,
             pbs_executed: g.pbs_executed,
-            mean_batch_size: stats::mean(&g.batch_sizes),
-            p50_latency_ms: stats::percentile(&g.latencies_ms, 50.0),
-            p99_latency_ms: stats::percentile(&g.latencies_ms, 99.0),
-            mean_queue_ms: stats::mean(&g.queue_ms),
+            mean_batch_size: stats::mean(g.batch_sizes.samples()),
+            p50_latency_ms: stats::percentile(g.latencies_ms.samples(), 50.0),
+            p99_latency_ms: stats::percentile(g.latencies_ms.samples(), 99.0),
+            mean_queue_ms: stats::mean(g.queue_ms.samples()),
             throughput_rps: if elapsed > 0.0 { g.requests as f64 / elapsed } else { 0.0 },
             elapsed_s: elapsed,
             ks_executed: g.ks_executed,
@@ -290,9 +368,11 @@ impl Metrics {
             key_evictions: 0,
             key_regenerations: 0,
             key_resident: 0,
-            latency_samples_ms: g.latencies_ms.clone(),
-            queue_samples_ms: g.queue_ms.clone(),
-            batch_size_samples: g.batch_sizes.clone(),
+            latency_samples_ms: g.latencies_ms.samples().to_vec(),
+            queue_samples_ms: g.queue_ms.samples().to_vec(),
+            batch_size_samples: g.batch_sizes.samples().to_vec(),
+            stage: g.stage.clone(),
+            plan_batch_profiles: g.plan_batch_profiles.clone(),
         }
     }
 }
@@ -481,6 +561,51 @@ mod tests {
         let merged = MetricsSnapshot::merge(&[a, b]);
         assert_eq!(merged.fft_threads, 4, "cluster view reports the widest shard pool");
         assert!(merged.blocked_fft, "any blocked shard marks the cluster blocked");
+    }
+
+    #[test]
+    fn sample_memory_is_bounded_under_a_million_requests() {
+        // The soak regression the reservoirs exist for: a million served
+        // requests must leave the snapshot's sample vectors at the cap,
+        // not a million entries, while every counter stays exact.
+        let m = Metrics::new();
+        for i in 0..1_000_000u64 {
+            m.record_request(SessionId(i % 7), (i % 13) as f64, (i % 97) as f64);
+        }
+        m.record_batch(8, 16);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 1_000_000, "counters stay exact");
+        assert_eq!(s.latency_samples_ms.len(), SAMPLE_CAP, "latency samples capped");
+        assert_eq!(s.queue_samples_ms.len(), SAMPLE_CAP, "queue samples capped");
+        assert!(s.latency_samples_ms.iter().all(|&v| (0.0..97.0).contains(&v)));
+        assert_eq!(s.session_requests.values().sum::<u64>(), 1_000_000);
+        // Determinism: an identical record stream retains identical samples.
+        let m2 = Metrics::new();
+        for i in 0..1_000_000u64 {
+            m2.record_request(SessionId(i % 7), (i % 13) as f64, (i % 97) as f64);
+        }
+        assert_eq!(m2.snapshot().latency_samples_ms, s.latency_samples_ms);
+    }
+
+    #[test]
+    fn merge_rolls_up_stage_hists_and_batch_profiles() {
+        let mut a = MetricsSnapshot::default();
+        a.stage.keyswitch.record(100);
+        a.plan_batch_profiles =
+            vec![PlanBatchProfile { requests: 2, ks_calls: 4, ..Default::default() }];
+        let mut b = MetricsSnapshot::default();
+        b.stage.keyswitch.record(200);
+        b.stage.fft.record(50);
+        b.plan_batch_profiles = vec![
+            PlanBatchProfile { requests: 1, ks_calls: 2, ..Default::default() },
+            PlanBatchProfile { pbs: 3, ..Default::default() },
+        ];
+        let merged = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(merged.stage.keyswitch.count(), 2);
+        assert_eq!(merged.stage.fft.count(), 1);
+        assert_eq!(merged.plan_batch_profiles.len(), 2);
+        assert_eq!(merged.plan_batch_profiles[0].ks_calls, 6);
+        assert_eq!(merged.plan_batch_profiles[1].pbs, 3);
     }
 
     #[test]

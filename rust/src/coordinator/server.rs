@@ -50,6 +50,7 @@ use std::time::{Duration, Instant};
 use super::batcher::{group_batch, DynamicBatcher};
 use super::metrics::{Metrics, MetricsSnapshot};
 use crate::compiler::{self, CompiledPlan, Engine, EngineOptions, NativePbsBackend, PbsBackend};
+use crate::obs;
 use crate::ir::Program;
 use crate::runtime::faults::{FaultPlan, FaultyBackend};
 use crate::tenant::{KeyHandle, KeyStore, SessionId, StaticKeys};
@@ -179,16 +180,23 @@ pub struct Ticket {
     rx: Receiver<Response>,
     deadline: Option<Instant>,
     metrics: Arc<Metrics>,
+    /// Request trace id (0 when tracing was disabled at admission).
+    trace: u64,
 }
 
 impl Ticket {
-    pub(crate) fn new(rx: Receiver<Response>, deadline: Option<Instant>, metrics: Arc<Metrics>) -> Self {
-        Self { rx, deadline, metrics }
+    pub(crate) fn new(
+        rx: Receiver<Response>,
+        deadline: Option<Instant>,
+        metrics: Arc<Metrics>,
+        trace: u64,
+    ) -> Self {
+        Self { rx, deadline, metrics, trace }
     }
 
     /// Wait for this request to terminate.
     pub fn wait(&self) -> Result<Vec<LweCiphertext>, RequestError> {
-        match self.deadline {
+        let out = match self.deadline {
             None => match self.rx.recv() {
                 Ok(r) => r,
                 Err(_) => Err(RequestError::ShardLost),
@@ -201,7 +209,24 @@ impl Ticket {
                 }
                 Err(RecvTimeoutError::Disconnected) => Err(RequestError::ShardLost),
             },
+        };
+        if self.trace != 0 {
+            // Terminal instant named by outcome, then close the async
+            // request span minted at admission. A re-waited ticket (the
+            // `recv` alias can be called again after a timeout) only
+            // re-records if tracing is still enabled; span-tree checks
+            // wait each ticket exactly once.
+            let name = match &out {
+                Ok(_) => "served",
+                Err(RequestError::RequestTimeout) => "timeout",
+                Err(RequestError::ShardLost) => "shard_lost",
+                Err(RequestError::ExecFailed { .. }) => "exec_failed",
+                Err(RequestError::ResolveFailed { .. }) => "resolve_failed",
+            };
+            obs::trace::instant(name, self.trace);
+            obs::trace::async_end("request", self.trace);
         }
+        out
     }
 
     /// Alias for [`Self::wait`], mirroring the channel API this evolved
@@ -223,6 +248,9 @@ pub(crate) struct FailedRequest {
     pub(crate) respond: Sender<Response>,
     pub(crate) retries: u32,
     pub(crate) reason: String,
+    /// Trace id carried across the retry so the request's whole journey
+    /// (fail, redirect, retry, terminal) shares one async span.
+    pub(crate) trace: u64,
 }
 
 /// Where a supervised coordinator's workers report failed requests,
@@ -263,6 +291,8 @@ struct Request {
     /// How many times the cluster supervisor has already re-dispatched
     /// this request after a failure (0 on first submission).
     retries: u32,
+    /// Trace id minted at admission (0 when tracing was disabled).
+    trace: u64,
 }
 
 /// One keyed execution sub-batch: every request shares `handle`'s keys.
@@ -565,12 +595,35 @@ impl Coordinator {
 
     /// Submission that hands the inputs back on failure, so the cluster
     /// can redirect the request to another shard without cloning
-    /// ciphertexts up front.
+    /// ciphertexts up front. Mints the request's trace id here — the
+    /// cluster path mints its own at cluster admission and goes through
+    /// [`Self::try_submit_traced`] instead, so a redirected request keeps
+    /// one id across shards.
     pub(crate) fn try_submit(
         &self,
         session: SessionId,
         inputs: Vec<LweCiphertext>,
         deadline: Option<Duration>,
+    ) -> Result<Ticket, (SubmitError, Vec<LweCiphertext>)> {
+        let trace = obs::next_trace_id();
+        obs::trace::async_begin("request", trace);
+        let out = self.try_submit_traced(session, inputs, deadline, trace);
+        if out.is_err() && trace != 0 {
+            // Never admitted: close the async span here (no ticket will),
+            // with a terminal instant naming the shed.
+            obs::trace::instant("rejected", trace);
+            obs::trace::async_end("request", trace);
+        }
+        out
+    }
+
+    /// [`Self::try_submit`] under a caller-minted trace id (0 = untraced).
+    pub(crate) fn try_submit_traced(
+        &self,
+        session: SessionId,
+        inputs: Vec<LweCiphertext>,
+        deadline: Option<Duration>,
+        trace: u64,
     ) -> Result<Ticket, (SubmitError, Vec<LweCiphertext>)> {
         let Some(intake) = self.intake.as_ref() else {
             return Err((SubmitError::Stopped, inputs));
@@ -586,13 +639,21 @@ impl Coordinator {
             }
         };
         let (tx, rx) = channel();
-        let req =
-            Request { session, handle, inputs, enqueued: Instant::now(), respond: tx, retries: 0 };
+        let req = Request {
+            session,
+            handle,
+            inputs,
+            enqueued: Instant::now(),
+            respond: tx,
+            retries: 0,
+            trace,
+        };
         match intake.send(req) {
             Ok(()) => Ok(Ticket::new(
                 rx,
                 deadline.map(|d| Instant::now() + d),
                 self.metrics.clone(),
+                trace,
             )),
             Err(e) => {
                 self.inflight.fetch_sub(1, Ordering::SeqCst);
@@ -613,6 +674,7 @@ impl Coordinator {
         inputs: Vec<LweCiphertext>,
         respond: Sender<Response>,
         retries: u32,
+        trace: u64,
     ) -> Result<(), Sender<Response>> {
         let Some(intake) = self.intake.as_ref() else {
             return Err(respond);
@@ -622,7 +684,8 @@ impl Coordinator {
             Err(_) => return Err(respond),
         };
         self.inflight.fetch_add(1, Ordering::SeqCst);
-        let req = Request { session, handle, inputs, enqueued: Instant::now(), respond, retries };
+        let req =
+            Request { session, handle, inputs, enqueued: Instant::now(), respond, retries, trace };
         match intake.send(req) {
             Ok(()) => Ok(()),
             Err(e) => {
@@ -718,16 +781,18 @@ fn worker_loop<B, MkE, Rb>(
         let pbs = plan.graph.pbs_count() * size;
         // Inputs are moved out of the requests, not cloned; they are
         // still owned here after a failure, so retries re-use them.
-        let (metas, inputs): (Vec<(SessionId, Instant, Sender<Response>, u32)>, Vec<_>) = requests
-            .into_iter()
-            .map(|r| ((r.session, r.enqueued, r.respond, r.retries), r.inputs))
-            .unzip();
+        let (metas, inputs): (Vec<(SessionId, Instant, Sender<Response>, u32, u64)>, Vec<_>) =
+            requests
+                .into_iter()
+                .map(|r| ((r.session, r.enqueued, r.respond, r.retries, r.trace), r.inputs))
+                .unzip();
         let queue_ms: Vec<f64> =
-            metas.iter().map(|(_, t, _, _)| t.elapsed().as_secs_f64() * 1e3).collect();
+            metas.iter().map(|(_, t, _, _, _)| t.elapsed().as_secs_f64() * 1e3).collect();
         let eng = engine.as_mut().expect("engine bound");
         // Default: walk the compiled schedule — shared key switches
         // computed once per batch, accumulator-sharing rotations fused
         // across nodes x requests into single BSK sweeps.
+        let exec_span = obs::trace::start();
         let result = catch_unwind(AssertUnwindSafe(|| {
             if legacy {
                 eng.run_batch(&plan.program, &inputs)
@@ -735,6 +800,7 @@ fn worker_loop<B, MkE, Rb>(
                 eng.run_plan_batch(plan, &inputs)
             }
         }));
+        obs::trace::span("exec_batch", 0, exec_span);
         match result {
             Ok(outs) => {
                 metrics.record_batch(size, pbs);
@@ -743,7 +809,15 @@ fn worker_loop<B, MkE, Rb>(
                 // execution actually ran.
                 let st = eng.take_exec_stats();
                 metrics.record_exec(st.ks_ops, st.bsk_bytes_streamed);
-                for (((session, enqueued, respond, _), out), q_ms) in
+                if obs::enabled() {
+                    // Stage timings and per-schedule-batch profiles drain
+                    // with the same success-only semantics as the
+                    // counters above (a failed batch drops its engine —
+                    // and with it any partial timings — below).
+                    metrics.record_stage_times(&eng.take_stage_times());
+                    metrics.record_batch_profiles(&eng.take_batch_profiles());
+                }
+                for (((session, enqueued, respond, _, _), out), q_ms) in
                     metas.into_iter().zip(outs).zip(queue_ms)
                 {
                     let latency_ms = enqueued.elapsed().as_secs_f64() * 1e3;
@@ -756,12 +830,18 @@ fn worker_loop<B, MkE, Rb>(
                 let reason = panic_reason(payload.as_ref());
                 // The engine's internal state (scratch, partial stats) is
                 // suspect after an unwound execution: drop and rebuild
-                // from the next sub-batch's handle.
+                // from the next sub-batch's handle. Discard this thread's
+                // FFT timing samples too, so the failed batch's partial
+                // work never leaks into a later successful drain.
                 engine = None;
                 bound = None;
+                let _ = obs::take_thread_fft();
                 metrics.record_exec_failure(size as u64);
                 metrics.record_worker_respawn();
-                for ((session, _, respond, retries), input) in metas.into_iter().zip(inputs) {
+                obs::trace::instant("worker_respawn", 0);
+                for ((session, _, respond, retries, trace), input) in metas.into_iter().zip(inputs)
+                {
+                    obs::trace::instant("exec_failed", trace);
                     inflight.fetch_sub(1, Ordering::SeqCst);
                     match sink {
                         Some(s) => {
@@ -773,6 +853,7 @@ fn worker_loop<B, MkE, Rb>(
                                 respond,
                                 retries,
                                 reason: reason.clone(),
+                                trace,
                             };
                             if let Err(e) = s.tx.send(failed) {
                                 // Supervisor gone: fail terminally.

@@ -187,6 +187,16 @@ pub fn run_width(width: usize, default_cases: u64) -> WidthReport {
     let p = params::select_for_width(width);
     assert_eq!(p.width, width, "conformance widths must map to exact-width sets");
     let keys = keycache::get(p, KEY_SEED);
+    // `OBS_TRACE=1` runs the whole suite with the observability hooks
+    // live and adds exact reconciliation asserts: stage histogram counts
+    // must equal the ExecStats/metrics counters, and the per-batch drift
+    // attribution must match `arch::sim` exactly on this fault-free path.
+    // Enabled AFTER keygen so the key material's forward transforms never
+    // pollute the FFT stage histogram.
+    let tracing = std::env::var("OBS_TRACE").map(|v| v == "1").unwrap_or(false);
+    if tracing {
+        crate::obs::enable();
+    }
     let cfg = TaurusConfig::default();
     let mut min_margin = f64::INFINITY;
     let mut max_err_sigmas = 0.0f64;
@@ -234,6 +244,37 @@ pub fn run_width(width: usize, default_cases: u64) -> WidthReport {
                 "measured PBS {} != {} requests x sim {}",
                 st.pbs_ops, REQUESTS, sim.pbs_count
             ));
+        }
+        if tracing {
+            // Stage histogram totals must reconcile with the counters:
+            // one keyswitch sample per KS op, one sample-extract sample
+            // per PBS (every blind rotation extracts exactly once).
+            let stage = eng.take_stage_times();
+            if stage.keyswitch.count() != st.ks_ops {
+                return Err(format!(
+                    "keyswitch histogram holds {} samples, ExecStats counted {}",
+                    stage.keyswitch.count(),
+                    st.ks_ops
+                ));
+            }
+            if stage.sample_extract.count() != st.pbs_ops {
+                return Err(format!(
+                    "sample-extract histogram holds {} samples, ExecStats counted {}",
+                    stage.sample_extract.count(),
+                    st.pbs_ops
+                ));
+            }
+            // Per-schedule-batch drift attribution: on a fault-free run
+            // the measured KS/PBS counts must match `arch::sim`'s
+            // per-batch predictions exactly, batch by batch.
+            let measured = eng.take_batch_profiles();
+            let predicted = crate::arch::sim::batch_predictions(&plan.schedule, p, &cfg);
+            let rows = crate::obs::drift::attribute(&measured, &predicted);
+            if !crate::obs::drift::counts_exact(&rows) {
+                return Err(format!(
+                    "cost-model drift: measured per-batch KS/PBS diverge from sim: {rows:?}"
+                ));
+            }
         }
 
         // --- Noise: every output's decrypted phase error must sit inside
@@ -300,6 +341,26 @@ pub fn run_width(width: usize, default_cases: u64) -> WidthReport {
                 "cluster counters (ks {}, pbs {}) != {} requests x sim (ks {}, pbs {})",
                 merged.ks_executed, merged.pbs_executed, REQUESTS, sim.ks_count, sim.pbs_count
             ));
+        }
+        if tracing {
+            // The cluster drains worker stage timings into its merged
+            // snapshot: the same histogram<->counter reconciliation must
+            // hold across shards, and queue sampling is one per request.
+            if merged.stage.keyswitch.count() != merged.ks_executed
+                || merged.stage.sample_extract.count() != merged.pbs_executed as u64
+                || merged.stage.queue.count() != merged.requests as u64
+            {
+                return Err(format!(
+                    "cluster stage histograms (ks {}, se {}, queue {}) do not reconcile \
+                     with counters (ks {}, pbs {}, requests {})",
+                    merged.stage.keyswitch.count(),
+                    merged.stage.sample_extract.count(),
+                    merged.stage.queue.count(),
+                    merged.ks_executed,
+                    merged.pbs_executed,
+                    merged.requests
+                ));
+            }
         }
         Ok(())
     });

@@ -30,6 +30,9 @@
 //!   admission queue, shard-local key stores with live reshard +
 //!   cache migration, and merged metrics.
 //! - [`eval`] — regenerates every table and figure of the paper.
+//! - [`obs`] — zero-dependency observability: flight-recorder tracing,
+//!   mergeable per-stage timing histograms, and cost-model drift
+//!   attribution, all behind one atomic enabled-flag.
 
 // Stylistic clippy lints the codebase deliberately trades away: the
 // FFT/MAC kernels use explicit index arithmetic (needless_range_loop,
@@ -49,6 +52,7 @@
 )]
 
 pub mod util;
+pub mod obs;
 pub mod params;
 pub mod tfhe;
 pub mod ir;

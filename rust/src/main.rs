@@ -8,7 +8,7 @@
 //!   serve [--backend native|xla] [--shards S] [--policy P]
 //!         [--queue-depth D] [--workers N] [--fft-threads F]
 //!         [--requests R] [--tenants T] [--key-cache-cap C]
-//!         [--chaos [SEED]]
+//!         [--chaos [SEED]] [--trace FILE] [--metrics-interval SECS]
 //!       start a sharded serving cluster (S coordinator shards behind a
 //!       router; P in round-robin|least-outstanding|consistent-hash;
 //!       D bounds the shared admission queue, 0 = unbounded) on the
@@ -23,7 +23,15 @@
 //!       --chaos injects a deterministic seed-driven fault plan (worker
 //!       panics, latency spikes, resolve failures) into the native
 //!       backend and key stores, drives every request under a deadline,
-//!       and reports what the supervision layer did about it
+//!       and reports what the supervision layer did about it.
+//!       --trace FILE turns the observability hooks on and writes the
+//!       flight-recorder ring buffers as Chrome trace-event JSON; either
+//!       of --trace/--metrics-interval also adds the per-stage latency
+//!       and cost-model-drift tables to the report, and a metrics
+//!       interval emits a metrics JSONL line at most every SECS seconds
+//!       while the driver runs (plus one final line).
+//!   validate-trace FILE             check a --trace export: JSON parses,
+//!       per-thread spans nest, async begin/end pair per request id
 //!   params                          print all parameter sets
 //!   selftest                        native + XLA PBS smoke test
 
@@ -102,12 +110,13 @@ fn main() -> Result<()> {
         "eval" => cmd_eval(&args),
         "run" => cmd_run(&args),
         "serve" => cmd_serve(&args),
+        "validate-trace" => cmd_validate_trace(&args),
         "params" => cmd_params(),
         "selftest" => cmd_selftest(&args),
         _ => {
             println!(
                 "taurus — multi-bit TFHE acceleration stack (paper reproduction)\n\
-                 usage: taurus <eval|run|serve|params|selftest> [flags]\n\
+                 usage: taurus <eval|run|serve|validate-trace|params|selftest> [flags]\n\
                  see rust/src/main.rs header for flags"
             );
             Ok(())
@@ -174,6 +183,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tenants = args.usize_flag("tenants", 1).max(1);
     let key_cache_cap = args.usize_flag("key-cache-cap", 4).max(1);
     let legacy_exec = args.flag("legacy-exec").is_some();
+    // `--trace FILE` and/or `--metrics-interval SECS` arm the
+    // observability subsystem (flight-recorder tracing, stage histograms,
+    // drift profiles). Without either, every hook stays a single relaxed
+    // atomic load on the hot path.
+    let trace_path: Option<String> =
+        args.flag("trace").filter(|v| *v != "true").map(str::to_string);
+    let metrics_interval = args.usize_flag("metrics-interval", 0);
+    let obs_on = trace_path.is_some() || metrics_interval > 0;
     // Multi-tenant serving defaults to consistent-hash: sessions pin to
     // the shard where their keys are resident.
     let policy_name =
@@ -275,6 +292,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => Cluster::start(prog.clone(), keys, opts),
         }
     };
+    // Arm observability only now — after key generation — so keygen's
+    // forward FFT transforms never pollute the fft_transform histogram.
+    if obs_on {
+        taurus::obs::enable();
+    }
     let plan = cluster.plan();
     println!(
         "compiled plan  : {} PBS, KS-dedup {} -> {} ({:.1}%), {} batches ({}), shared by {} shards",
@@ -322,7 +344,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Err(err) => Err(err.into()),
         }
     };
+    let mut last_emit = std::time::Instant::now();
     for i in 0..requests {
+        // Periodic metrics emission (JSONL, one self-contained object per
+        // line) from the driver thread — an in-band poller, so it needs
+        // no shared-cluster handle and stops with the run.
+        if metrics_interval > 0 && last_emit.elapsed().as_secs() >= metrics_interval as u64 {
+            println!("{}", metrics_jsonl(&cluster.snapshot()));
+            last_emit = std::time::Instant::now();
+        }
         let (mx, my) = ((i as u64) % 4, (i as u64 * 3) % 4);
         let exp = taurus::ir::interp::eval(&prog, &[mx, my]);
         let t = if tenants > 1 { i % tenants } else { 0 };
@@ -359,6 +389,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let snap = cluster.snapshot();
     let per_shard = cluster.shard_snapshots();
+    if metrics_interval > 0 {
+        // Final emission: short runs always produce at least one line.
+        println!("{}", metrics_jsonl(&snap));
+    }
     println!("correct        : {correct}/{requests}");
     if let Some(f) = &faults {
         let inj = f.injected();
@@ -402,6 +436,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
             s.requests, s.batches, s.mean_batch_size, s.ks_executed, s.pbs_executed, s.key_resident
         );
     }
+    if obs_on {
+        // Per-stage latency breakdown from the merged log2 histograms
+        // (success-only, so counts reconcile with the counters above:
+        // keyswitch == KS executed, sample_extract == PBS executed).
+        println!("per stage      : stage            count       p50        p99");
+        for (name, h) in snap.stage.named() {
+            if h.is_empty() {
+                continue;
+            }
+            println!(
+                "                 {name:<14} {:>8} {:>8.3}ms {:>9.3}ms",
+                h.count(),
+                h.percentile(50.0) / 1e6,
+                h.percentile(99.0) / 1e6,
+            );
+        }
+    }
     if tenants > 1 {
         println!(
             "key caches     : {} hits / {} misses / {} evictions / {} regenerations, {} resident, {} keyed batch splits",
@@ -436,8 +487,202 @@ fn cmd_serve(args: &Args) -> Result<()> {
             served * sim.pbs_count,
             if ks_ok && pbs_ok { "OK" } else { "MISMATCH" },
         );
+        if obs_on && !snap.plan_batch_profiles.is_empty() {
+            // Cost-model drift: measured per-schedule-batch stage work
+            // against `arch::sim`'s per-batch predictions for the very
+            // same artifact. KS/PBS counts must be exact on the
+            // successfully-served (fault-free) subset; the bsk ratio
+            // below 1.0 is the batching key-reuse the model prices
+            // per-request, and the time ratio is the CPU-vs-accelerator
+            // gap per batch.
+            let preds = taurus::arch::sim::batch_predictions(
+                &cluster.plan().schedule,
+                &cluster.plan().params,
+                &cfg,
+            );
+            let rows = taurus::obs::drift::attribute(&snap.plan_batch_profiles, &preds);
+            println!(
+                "drift          : batch  execs   reqs        KS meas=pred       PBS meas=pred  bsk-ratio  time-ratio"
+            );
+            for r in &rows {
+                println!(
+                    "                 {:<6} {:>5} {:>6} {:>9} {} {:<9} {:>9} {} {:<9} {:>9.3} {:>11.1}",
+                    r.batch,
+                    r.executions,
+                    r.requests,
+                    r.measured_ks,
+                    if r.ks_exact { "=" } else { "!" },
+                    r.predicted_ks,
+                    r.measured_pbs,
+                    if r.pbs_exact { "=" } else { "!" },
+                    r.predicted_pbs,
+                    r.bsk_ratio,
+                    r.time_ratio,
+                );
+            }
+            println!(
+                "drift counts   : {}",
+                if taurus::obs::drift::counts_exact(&rows) {
+                    "exact (measured KS/PBS == sim on the served subset)"
+                } else {
+                    "MISMATCH (measured KS/PBS diverge from sim)"
+                },
+            );
+        }
+    }
+    if let Some(path) = &trace_path {
+        // Export the flight recorder: every thread's ring, merged and
+        // timestamp-sorted, as Chrome trace-event JSON.
+        let events = taurus::obs::trace::drain();
+        let json = taurus::obs::trace::chrome_trace_json(&events);
+        std::fs::write(path, json.to_string())?;
+        println!(
+            "trace          : wrote {} events to {path} ({} overwritten in-ring)",
+            events.len(),
+            taurus::obs::trace::dropped(),
+        );
     }
     cluster.shutdown();
+    Ok(())
+}
+
+/// One self-contained metrics JSONL line for `serve --metrics-interval`:
+/// headline counters plus per-stage histogram count/p50/p99.
+fn metrics_jsonl(snap: &taurus::coordinator::MetricsSnapshot) -> String {
+    use taurus::util::json::{arr, num, obj, s};
+    let stages: Vec<_> = snap
+        .stage
+        .named()
+        .iter()
+        .filter(|(_, h)| !h.is_empty())
+        .map(|(name, h)| {
+            obj(vec![
+                ("stage", s(*name)),
+                ("count", num(h.count() as f64)),
+                ("p50_ms", num(h.percentile(50.0) / 1e6)),
+                ("p99_ms", num(h.percentile(99.0) / 1e6)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("requests", num(snap.requests as f64)),
+        ("batches", num(snap.batches as f64)),
+        ("ks_executed", num(snap.ks_executed as f64)),
+        ("pbs_executed", num(snap.pbs_executed as f64)),
+        ("bsk_bytes_streamed", num(snap.bsk_bytes_streamed as f64)),
+        ("p50_latency_ms", num(snap.p50_latency_ms)),
+        ("p99_latency_ms", num(snap.p99_latency_ms)),
+        ("throughput_rps", num(snap.throughput_rps)),
+        ("exec_failures", num(snap.exec_failures as f64)),
+        ("worker_respawns", num(snap.worker_respawns as f64)),
+        ("request_timeouts", num(snap.request_timeouts as f64)),
+        ("stages", arr(stages)),
+    ])
+    .to_string()
+}
+
+/// `validate-trace FILE`: structural checks over a `serve --trace` export.
+/// Verifies the file parses as Chrome trace-event JSON, every event
+/// carries the required fields, duration (`X`) spans nest properly within
+/// each thread (no partial overlap), and async `b`/`e` events pair up
+/// one-to-one per request id. CI runs this over the chaos-serve trace.
+fn cmd_validate_trace(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.first() else {
+        bail!("usage: taurus validate-trace FILE")
+    };
+    let text = std::fs::read_to_string(path)?;
+    let json = taurus::util::json::JsonValue::parse(&text)?;
+    let Some(events) = json.get("traceEvents").and_then(|e| e.as_array()) else {
+        bail!("{path}: missing traceEvents array")
+    };
+    // (tid -> X spans as (start_us, end_us)), and b/e counts per id.
+    let mut spans: std::collections::BTreeMap<u64, Vec<(f64, f64)>> = Default::default();
+    let mut begins: std::collections::BTreeMap<u64, i64> = Default::default();
+    let mut names = std::collections::BTreeSet::new();
+    for (i, e) in events.iter().enumerate() {
+        let name =
+            e.get("name").and_then(|v| v.as_str()).ok_or_else(|| {
+                taurus::anyhow!("{path}: event {i} has no name")
+            })?;
+        names.insert(name.to_string());
+        let ph = e
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| taurus::anyhow!("{path}: event {i} ({name}) has no ph"))?;
+        let ts = e
+            .get("ts")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| taurus::anyhow!("{path}: event {i} ({name}) has no ts"))?;
+        let tid = e
+            .get("tid")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| taurus::anyhow!("{path}: event {i} ({name}) has no tid"))?
+            as u64;
+        if e.get("pid").and_then(|v| v.as_f64()).is_none() {
+            bail!("{path}: event {i} ({name}) has no pid");
+        }
+        match ph {
+            "X" => {
+                let dur = e.get("dur").and_then(|v| v.as_f64()).ok_or_else(|| {
+                    taurus::anyhow!("{path}: X event {i} ({name}) has no dur")
+                })?;
+                spans.entry(tid).or_default().push((ts, ts + dur));
+            }
+            "i" => {}
+            "b" | "e" => {
+                let id = e.get("id").and_then(|v| v.as_f64()).ok_or_else(|| {
+                    taurus::anyhow!("{path}: async event {i} ({name}) has no id")
+                })? as u64;
+                *begins.entry(id).or_insert(0) += if ph == "b" { 1 } else { -1 };
+                if begins[&id] < 0 {
+                    bail!("{path}: async id {id} ends before it begins (event {i})");
+                }
+            }
+            other => bail!("{path}: event {i} ({name}) has unexpected ph {other:?}"),
+        }
+    }
+    // Per-thread span nesting: sorted by start (wider first on ties), a
+    // span must either start after every open span ends, or end inside
+    // the innermost open one. Partial overlap on one thread means the
+    // recorder emitted garbage.
+    let eps = 1e-6;
+    let mut checked = 0usize;
+    for (tid, list) in spans.iter_mut() {
+        list.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap()
+                .then(b.1.partial_cmp(&a.1).unwrap())
+        });
+        let mut stack: Vec<f64> = Vec::new();
+        for &(start, end) in list.iter() {
+            while stack.last().is_some_and(|&open_end| open_end <= start + eps) {
+                stack.pop();
+            }
+            if let Some(&open_end) = stack.last() {
+                if end > open_end + eps {
+                    bail!(
+                        "{path}: tid {tid}: span [{start:.3}, {end:.3}]us partially \
+                         overlaps an open span ending at {open_end:.3}us"
+                    );
+                }
+            }
+            stack.push(end);
+            checked += 1;
+        }
+    }
+    let unbalanced: Vec<u64> =
+        begins.iter().filter(|(_, &n)| n != 0).map(|(&id, _)| id).collect();
+    if !unbalanced.is_empty() {
+        bail!("{path}: {} async request id(s) never ended: {unbalanced:?}", unbalanced.len());
+    }
+    println!(
+        "{path}: OK — {} events, {} X spans nested across {} thread(s), {} async request id(s) balanced, names: {}",
+        events.len(),
+        checked,
+        spans.len(),
+        begins.len(),
+        names.into_iter().collect::<Vec<_>>().join(","),
+    );
     Ok(())
 }
 

@@ -1,0 +1,218 @@
+//! Cost-model drift attribution: per-schedule-batch measured execution
+//! profiles versus `arch::sim` predictions.
+//!
+//! The engine walks `CompiledPlan.schedule.batches` in exactly the order
+//! the cycle model costs them, so attribution aligns by batch index: the
+//! engine accumulates one [`PlanBatchProfile`] per schedule batch
+//! (success-only — failed worker batches record nothing, matching the
+//! metrics counters), `arch::sim::batch_predictions` produces one
+//! [`BatchPrediction`] per batch from the identical schedule walk, and
+//! [`attribute`] joins them. KS and PBS counts must match *exactly* on
+//! the fault-free subset (the schedule is the single source of truth for
+//! both sides); BSK bytes and stage time are ratios — that divergence is
+//! the drift signal (e.g. measured BSK falling below `predicted x
+//! requests` is the batching key-reuse the model prices per-request).
+
+/// Measured totals for one schedule batch, accumulated across every
+/// successful execution of the plan.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanBatchProfile {
+    /// Times this schedule batch executed (one per worker sub-batch).
+    pub executions: u64,
+    /// Total requests those executions carried (sum of sub-batch widths).
+    pub requests: u64,
+    /// `PbsBackend::keyswitch` calls.
+    pub ks_calls: u64,
+    /// Blind rotations performed (PBS count, i.e. `br_ops x width`).
+    pub pbs: u64,
+    /// Fused `blind_rotate_batch` sweeps.
+    pub br_calls: u64,
+    /// Fourier-BSK bytes streamed by this batch's sweeps.
+    pub bsk_bytes: u64,
+    /// Wall nanoseconds inside keyswitch calls.
+    pub ks_ns: u64,
+    /// Wall nanoseconds inside blind-rotation sweeps.
+    pub br_ns: u64,
+    /// Wall nanoseconds inside sample-extract calls.
+    pub se_ns: u64,
+}
+
+impl PlanBatchProfile {
+    pub fn merge(&mut self, other: &Self) {
+        self.executions += other.executions;
+        self.requests += other.requests;
+        self.ks_calls += other.ks_calls;
+        self.pbs += other.pbs;
+        self.br_calls += other.br_calls;
+        self.bsk_bytes += other.bsk_bytes;
+        self.ks_ns += other.ks_ns;
+        self.br_ns += other.br_ns;
+        self.se_ns += other.se_ns;
+    }
+
+    /// Total measured stage time.
+    pub fn total_ns(&self) -> u64 {
+        self.ks_ns + self.br_ns + self.se_ns
+    }
+}
+
+/// Merge per-batch profile vectors index-wise (shard/worker roll-up).
+pub fn merge_profiles(into: &mut Vec<PlanBatchProfile>, other: &[PlanBatchProfile]) {
+    if into.len() < other.len() {
+        into.resize(other.len(), PlanBatchProfile::default());
+    }
+    for (a, b) in into.iter_mut().zip(other.iter()) {
+        a.merge(b);
+    }
+}
+
+/// What the cycle model predicts for one schedule batch, **per request**
+/// (one program execution's ciphertexts through that batch).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BatchPrediction {
+    /// Keyswitches the schedule lists for this batch.
+    pub ks: u64,
+    /// Blind rotations (PBS) the schedule lists for this batch.
+    pub pbs: u64,
+    /// BSK bytes the memory model streams for this batch's window.
+    pub bsk_bytes: u64,
+    /// Modeled accelerator seconds for this batch's window.
+    pub seconds: f64,
+}
+
+/// One row of the drift report: measured vs model for one schedule batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DriftRow {
+    pub batch: usize,
+    pub executions: u64,
+    pub requests: u64,
+    pub measured_ks: u64,
+    /// `prediction.ks x requests`.
+    pub predicted_ks: u64,
+    pub ks_exact: bool,
+    pub measured_pbs: u64,
+    pub predicted_pbs: u64,
+    pub pbs_exact: bool,
+    pub measured_bsk_bytes: u64,
+    /// `prediction.bsk_bytes x requests` (the model prices the stream
+    /// per request; batching amortizes it — ratios below 1.0 are the
+    /// key-reuse win).
+    pub predicted_bsk_bytes: u64,
+    pub bsk_ratio: f64,
+    pub measured_ns: u64,
+    /// `prediction.seconds x requests`, in ns (accelerator model time —
+    /// the measured/model ratio is the CPU-vs-Taurus gap per batch).
+    pub predicted_ns: f64,
+    pub time_ratio: f64,
+}
+
+fn ratio(measured: f64, predicted: f64) -> f64 {
+    if predicted > 0.0 {
+        measured / predicted
+    } else {
+        0.0
+    }
+}
+
+/// Join measured profiles with model predictions by batch index. Both
+/// sides come from the same `CompiledPlan.schedule`, so the lengths agree
+/// whenever any traffic was profiled; batches that never executed (or a
+/// length mismatch from a mixed-plan merge) yield rows with zero
+/// measured traffic rather than a panic.
+pub fn attribute(measured: &[PlanBatchProfile], predicted: &[BatchPrediction]) -> Vec<DriftRow> {
+    let zero = PlanBatchProfile::default();
+    predicted
+        .iter()
+        .enumerate()
+        .map(|(i, pred)| {
+            let m = measured.get(i).unwrap_or(&zero);
+            let predicted_ks = pred.ks * m.requests;
+            let predicted_pbs = pred.pbs * m.requests;
+            let predicted_bsk_bytes = pred.bsk_bytes * m.requests;
+            let predicted_ns = pred.seconds * 1e9 * m.requests as f64;
+            DriftRow {
+                batch: i,
+                executions: m.executions,
+                requests: m.requests,
+                measured_ks: m.ks_calls,
+                predicted_ks,
+                ks_exact: m.ks_calls == predicted_ks,
+                measured_pbs: m.pbs,
+                predicted_pbs,
+                pbs_exact: m.pbs == predicted_pbs,
+                measured_bsk_bytes: m.bsk_bytes,
+                predicted_bsk_bytes,
+                bsk_ratio: ratio(m.bsk_bytes as f64, predicted_bsk_bytes as f64),
+                measured_ns: m.total_ns(),
+                predicted_ns,
+                time_ratio: ratio(m.total_ns() as f64, predicted_ns),
+            }
+        })
+        .collect()
+}
+
+/// True when every row's KS and PBS counts match the model exactly — the
+/// invariant the conformance suite asserts on fault-free traffic.
+pub fn counts_exact(rows: &[DriftRow]) -> bool {
+    rows.iter().all(|r| r.ks_exact && r.pbs_exact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attribute_joins_by_index_and_scales_by_requests() {
+        let measured = vec![
+            PlanBatchProfile {
+                executions: 2,
+                requests: 4,
+                ks_calls: 8,
+                pbs: 12,
+                br_calls: 2,
+                bsk_bytes: 1000,
+                ks_ns: 10,
+                br_ns: 20,
+                se_ns: 30,
+            },
+            PlanBatchProfile::default(),
+        ];
+        let predicted = vec![
+            BatchPrediction { ks: 2, pbs: 3, bsk_bytes: 1000, seconds: 1e-6 },
+            BatchPrediction { ks: 1, pbs: 1, bsk_bytes: 500, seconds: 1e-6 },
+        ];
+        let rows = attribute(&measured, &predicted);
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].ks_exact && rows[0].pbs_exact);
+        assert_eq!(rows[0].predicted_ks, 8);
+        assert_eq!(rows[0].predicted_bsk_bytes, 4000);
+        assert!((rows[0].bsk_ratio - 0.25).abs() < 1e-12, "amortized stream shows as < 1");
+        assert_eq!(rows[0].measured_ns, 60);
+        // Batch 1 never executed: zero measured, zero predicted totals.
+        assert_eq!(rows[1].requests, 0);
+        assert!(rows[1].ks_exact, "0 == 0 x requests");
+        assert!(counts_exact(&rows));
+    }
+
+    #[test]
+    fn count_mismatch_is_flagged_not_fatal() {
+        let measured = vec![PlanBatchProfile { requests: 2, ks_calls: 3, ..Default::default() }];
+        let predicted = vec![BatchPrediction { ks: 2, ..Default::default() }];
+        let rows = attribute(&measured, &predicted);
+        assert!(!rows[0].ks_exact);
+        assert!(!counts_exact(&rows));
+    }
+
+    #[test]
+    fn profiles_merge_index_wise_with_resize() {
+        let mut a = vec![PlanBatchProfile { requests: 1, ..Default::default() }];
+        let b = vec![
+            PlanBatchProfile { requests: 2, ..Default::default() },
+            PlanBatchProfile { ks_calls: 5, ..Default::default() },
+        ];
+        merge_profiles(&mut a, &b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a[0].requests, 3);
+        assert_eq!(a[1].ks_calls, 5);
+    }
+}

@@ -1,0 +1,242 @@
+//! Mergeable log2-bucket latency histograms.
+//!
+//! A [`Log2Histogram`] holds exact event *counts* in 64 power-of-two
+//! nanosecond buckets (bucket `i` covers `[2^i, 2^(i+1))` ns), so it is
+//! fixed-memory no matter how many events it records and — unlike the raw
+//! sample vectors the percentile metrics use — two histograms merge by
+//! bucket-wise addition into exactly the histogram a single recorder
+//! would have produced. That composability is what lets per-worker,
+//! per-shard, and per-cluster stage timings roll up without any sampling
+//! loss in the *counts* (the quantile values themselves are quantized to
+//! bucket resolution: a factor-of-two band, reported at the bucket's
+//! geometric midpoint).
+
+use std::time::Duration;
+
+pub const BUCKETS: usize = 64;
+
+/// Exact-count histogram over log2 nanosecond buckets.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Log2Histogram {
+    counts: [u64; BUCKETS],
+}
+
+// [u64; 64] has no std Default; spell it out.
+impl Default for Log2Histogram {
+    fn default() -> Self {
+        Self { counts: [0; BUCKETS] }
+    }
+}
+
+impl std::fmt::Debug for Log2Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Log2Histogram(n={}", self.count())?;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                write!(f, ", 2^{i}ns:{c}")?;
+            }
+        }
+        f.write_str(")")
+    }
+}
+
+impl Log2Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a nanosecond value (0 ns lands in bucket 0).
+    fn bucket(ns: u64) -> usize {
+        if ns == 0 {
+            0
+        } else {
+            ns.ilog2() as usize
+        }
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.counts[Self::bucket(ns)] += 1;
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        // Saturates at the top bucket for durations past u64 nanoseconds
+        // (~584 years) — irrelevant in practice, but never panics.
+        self.record(u64::try_from(d.as_nanos()).unwrap_or(u64::MAX));
+    }
+
+    /// Bucket-wise addition: exactly the histogram one recorder seeing
+    /// both event streams would have produced.
+    pub fn merge(&mut self, other: &Self) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
+    /// Quantile value in nanoseconds at bucket resolution (the covering
+    /// bucket's geometric midpoint, `1.5 * 2^i`); 0.0 when empty. `p` in
+    /// [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        // Rank of the p-th percentile event (1-based), clamped to range.
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return 1.5 * (1u64 << i) as f64;
+            }
+        }
+        unreachable!("rank is clamped to the total count")
+    }
+
+    /// The non-empty buckets as `(log2_ns, count)` pairs (for JSON
+    /// emission and reports).
+    pub fn nonzero_buckets(&self) -> Vec<(u32, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (i as u32, c))
+            .collect()
+    }
+}
+
+/// One histogram per serving-path stage. Engines fill the execution
+/// stages; the coordinator's metrics add queueing on top and merge
+/// worker-level sets into the shard set (and shard sets into the cluster
+/// set) bucket-wise.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageHists {
+    /// Admission-to-dispatch wait, one event per served request.
+    pub queue: Log2Histogram,
+    /// One event per `PbsBackend::keyswitch` call.
+    pub keyswitch: Log2Histogram,
+    /// One event per fused `blind_rotate_batch` sweep.
+    pub blind_rotate: Log2Histogram,
+    /// One event per `sample_extract` call.
+    pub sample_extract: Log2Histogram,
+    /// One event per Fourier-transform dispatch (forward or inverse,
+    /// harvested from the worker thread and the blind-rotation pool).
+    pub fft: Log2Histogram,
+}
+
+impl StageHists {
+    pub fn merge(&mut self, other: &Self) {
+        self.queue.merge(&other.queue);
+        self.keyswitch.merge(&other.keyswitch);
+        self.blind_rotate.merge(&other.blind_rotate);
+        self.sample_extract.merge(&other.sample_extract);
+        self.fft.merge(&other.fft);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+            && self.keyswitch.is_empty()
+            && self.blind_rotate.is_empty()
+            && self.sample_extract.is_empty()
+            && self.fft.is_empty()
+    }
+
+    /// `(name, histogram)` pairs in pipeline order (for tables/JSON).
+    pub fn named(&self) -> [(&'static str, &Log2Histogram); 5] {
+        [
+            ("queue", &self.queue),
+            ("keyswitch", &self.keyswitch),
+            ("blind_rotate", &self.blind_rotate),
+            ("sample_extract", &self.sample_extract),
+            ("fft_transform", &self.fft),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucketing_covers_the_edges() {
+        let mut h = Log2Histogram::new();
+        h.record(0); // bucket 0
+        h.record(1); // bucket 0
+        h.record(2); // bucket 1
+        h.record(3); // bucket 1
+        h.record(4); // bucket 2
+        h.record(u64::MAX); // bucket 63
+        assert_eq!(h.count(), 6);
+        let nz = h.nonzero_buckets();
+        assert_eq!(nz, vec![(0, 2), (1, 2), (2, 1), (63, 1)]);
+    }
+
+    #[test]
+    fn percentile_empty_single_and_duplicates() {
+        let h = Log2Histogram::new();
+        assert_eq!(h.percentile(50.0), 0.0);
+
+        let mut one = Log2Histogram::new();
+        one.record(1000); // bucket 9 -> midpoint 768
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(one.percentile(p), 1.5 * 512.0);
+        }
+
+        // Duplicate-heavy: 99 events in one bucket, 1 far above.
+        let mut dup = Log2Histogram::new();
+        for _ in 0..99 {
+            dup.record(100); // bucket 6
+        }
+        dup.record(1 << 20); // bucket 20
+        assert_eq!(dup.percentile(50.0), 1.5 * 64.0);
+        assert_eq!(dup.percentile(99.0), 1.5 * 64.0);
+        assert_eq!(dup.percentile(100.0), 1.5 * (1u64 << 20) as f64);
+    }
+
+    #[test]
+    fn merge_equals_concatenated_recording() {
+        let mut rng = Rng::new(17);
+        let samples: Vec<u64> = (0..500).map(|_| rng.below(1 << 30)).collect();
+        let mut whole = Log2Histogram::new();
+        let mut left = Log2Histogram::new();
+        let mut right = Log2Histogram::new();
+        for (i, &ns) in samples.iter().enumerate() {
+            whole.record(ns);
+            if i % 3 == 0 {
+                left.record(ns);
+            } else {
+                right.record(ns);
+            }
+        }
+        let mut merged = left.clone();
+        merged.merge(&right);
+        assert_eq!(merged, whole, "merge must equal one recorder seeing every event");
+        assert_eq!(merged.count(), 500);
+        for p in [1.0, 25.0, 50.0, 90.0, 99.0] {
+            assert_eq!(merged.percentile(p), whole.percentile(p));
+        }
+    }
+
+    #[test]
+    fn stage_set_merges_field_wise() {
+        let mut a = StageHists::default();
+        let mut b = StageHists::default();
+        a.queue.record(10);
+        b.queue.record(20);
+        b.keyswitch.record(30);
+        a.merge(&b);
+        assert_eq!(a.queue.count(), 2);
+        assert_eq!(a.keyswitch.count(), 1);
+        assert!(!a.is_empty());
+        assert_eq!(a.named()[0].0, "queue");
+    }
+}

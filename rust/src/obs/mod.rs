@@ -1,0 +1,134 @@
+//! Zero-dependency observability for the serving stack: flight-recorder
+//! tracing ([`trace`]), mergeable per-stage timing histograms ([`hist`]),
+//! and cost-model drift attribution ([`drift`]).
+//!
+//! Everything is gated on one process-wide atomic flag: when
+//! [`enabled`] is false (the default), every hook on the hot path is a
+//! single relaxed load and an untaken branch — no clocks are read, no
+//! ring buffers or histograms are touched, no trace ids are minted
+//! (requests carry id 0), and ciphertext outputs plus every
+//! `MetricsSnapshot` counter are bitwise-identical to a build without
+//! the hooks. `serve` (and any harness that wants the data) opts in with
+//! [`enable`].
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Instant;
+
+pub mod drift;
+pub mod hist;
+pub mod trace;
+
+use hist::Log2Histogram;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Turn observability on process-wide (tracing, stage timing, per-batch
+/// attribution). Pins the trace epoch first so every subsequent
+/// timestamp shares one origin.
+pub fn enable() {
+    trace::init_epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn observability off. Already-buffered trace events stay in their
+/// rings until [`trace::drain`]/[`trace::reset`].
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// The hot-path gate: one relaxed atomic load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Mint a per-request trace id. Returns 0 (the "untraced" id) while
+/// observability is disabled, so the disabled path allocates nothing.
+#[inline]
+pub fn next_trace_id() -> u64 {
+    if enabled() {
+        NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed)
+    } else {
+        0
+    }
+}
+
+/// Start a stage timer: `Some(now)` when enabled, `None` otherwise.
+/// The disabled path never reads the clock.
+#[inline]
+pub fn timer() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Nanoseconds elapsed since a [`timer`] start (0 when it was disabled).
+#[inline]
+pub fn elapsed_ns(started: Option<Instant>) -> u64 {
+    match started {
+        Some(t0) => u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX),
+        None => 0,
+    }
+}
+
+// --- FFT transform meter -------------------------------------------------
+//
+// Fourier transforms run on whatever thread dispatches them: the worker
+// thread on the sequential path, pool threads on the parallel blind
+// rotation path. Each thread accumulates transform times into its own
+// local histogram (no contention), and the owners harvest: `PbsContext`
+// drains the worker's local histogram at `take_fft_hist`, and each pool
+// job drains its thread's histogram into the context's shared collector
+// when it finishes.
+
+thread_local! {
+    static FFT_HIST: RefCell<Log2Histogram> = RefCell::new(Log2Histogram::new());
+}
+
+/// Record one Fourier-transform dispatch begun at `started` (no-op when
+/// `None`). Called by the FFT plan's dispatch entry points.
+#[inline]
+pub fn record_fft(started: Option<Instant>) {
+    let Some(t0) = started else { return };
+    let ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+    FFT_HIST.with(|h| h.borrow_mut().record(ns));
+}
+
+/// Drain the calling thread's FFT histogram.
+pub fn take_thread_fft() -> Log2Histogram {
+    FFT_HIST.with(|h| std::mem::take(&mut *h.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_paths_are_inert() {
+        // Not serialized against other tests that may enable obs, so only
+        // assert the disabled-value contracts that hold regardless of
+        // later state.
+        if !enabled() {
+            assert_eq!(next_trace_id(), 0, "disabled minting must return the untraced id");
+            assert!(timer().is_none());
+        }
+        assert_eq!(elapsed_ns(None), 0);
+        record_fft(None); // must not touch the thread-local
+    }
+
+    #[test]
+    fn thread_fft_meter_drains_per_thread() {
+        std::thread::spawn(|| {
+            FFT_HIST.with(|h| h.borrow_mut().record(100));
+            let h = take_thread_fft();
+            assert_eq!(h.count(), 1);
+            assert!(take_thread_fft().is_empty(), "drained");
+        })
+        .join()
+        .unwrap();
+    }
+}

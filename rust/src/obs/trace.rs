@@ -1,0 +1,324 @@
+//! Flight-recorder tracing: bounded per-thread ring buffers of trace
+//! events, exportable as Chrome trace-event JSON (`chrome://tracing`,
+//! Perfetto).
+//!
+//! Every recording thread owns one ring (registered globally on first
+//! use) and writes to it without contending with other recorders; at the
+//! ring's capacity the oldest events are overwritten — a crash or a
+//! long soak always leaves the *most recent* window of activity, which is
+//! the flight-recorder contract. [`drain`] collects every ring into one
+//! timestamp-sorted event list.
+//!
+//! Event vocabulary on the serving path:
+//! - async `b`/`e` pairs named `request`, keyed by the per-request trace
+//!   id minted at admission — the cross-thread request lifetime;
+//! - duration (`X`) spans on worker threads: `exec_batch` around each
+//!   keyed sub-batch, and `keyswitch`/`blind_rotate`/`sample_extract`
+//!   stage spans per schedule batch inside it;
+//! - instant (`i`) events for request terminals (`served`, `exec_failed`,
+//!   `timeout`, …) and fault/supervision activity (`fault_panic`,
+//!   `fault_delay`, `fault_resolve`, `worker_respawn`, `retry`,
+//!   `redirect`, `shard_restart`).
+//!
+//! Recording is gated by [`super::enabled`] at every entry point; the
+//! disabled path is a single relaxed atomic load.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, PoisonError};
+use std::time::Instant;
+
+use crate::util::json::{arr, num, obj, s, JsonValue};
+
+/// Default per-thread ring capacity (events). At ~48 bytes/event this is
+/// under 1 MiB per recording thread.
+pub const RING_CAPACITY: usize = 16384;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Duration event (`ph: "X"`); `dur_ns` is meaningful.
+    Span,
+    /// Thread-scoped instant (`ph: "i"`).
+    Instant,
+    /// Async begin (`ph: "b"`), keyed by the trace id.
+    AsyncBegin,
+    /// Async end (`ph: "e"`), keyed by the trace id.
+    AsyncEnd,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    pub kind: EventKind,
+    /// Request trace id (0 = not request-scoped, e.g. stage spans).
+    pub trace: u64,
+    /// Nanoseconds since the recorder epoch.
+    pub ts_ns: u64,
+    /// Span duration (0 for non-span events).
+    pub dur_ns: u64,
+    /// Recorder thread id (process-local, dense).
+    pub tid: u64,
+}
+
+/// One thread's bounded event buffer; overwrites oldest at capacity.
+struct Ring {
+    tid: u64,
+    events: Vec<TraceEvent>,
+    head: usize,
+    cap: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn new(tid: u64, cap: usize) -> Self {
+        Self { tid, events: Vec::new(), head: 0, cap, dropped: 0 }
+    }
+
+    fn push(&mut self, mut ev: TraceEvent) {
+        ev.tid = self.tid;
+        if self.events.len() < self.cap {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events in recording order; leaves the ring empty.
+    fn take(&mut self) -> Vec<TraceEvent> {
+        let head = std::mem::take(&mut self.head);
+        let mut evs = std::mem::take(&mut self.events);
+        evs.rotate_left(head);
+        evs
+    }
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static REGISTRY: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static LOCAL: RefCell<Option<Arc<Mutex<Ring>>>> = const { RefCell::new(None) };
+}
+
+/// Pin the recorder epoch (idempotent). Called by [`super::enable`] so
+/// every timestamp taken afterwards is relative to one instant.
+pub(super) fn init_epoch() {
+    let _ = EPOCH.get_or_init(Instant::now);
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    // `duration_since` saturates to zero for pre-epoch instants.
+    u64::try_from(Instant::now().duration_since(epoch()).as_nanos()).unwrap_or(u64::MAX)
+}
+
+fn with_ring(f: impl FnOnce(&mut Ring)) {
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let ring = slot.get_or_insert_with(|| {
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            let ring = Arc::new(Mutex::new(Ring::new(tid, RING_CAPACITY)));
+            REGISTRY.lock().unwrap_or_else(PoisonError::into_inner).push(ring.clone());
+            ring
+        });
+        f(&mut ring.lock().unwrap_or_else(PoisonError::into_inner));
+    });
+}
+
+/// Start a span timer: `Some(now)` when tracing is enabled, `None`
+/// otherwise. Pair with [`span`].
+#[inline]
+pub fn start() -> Option<Instant> {
+    if super::enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+/// Record a duration span begun at `started` (no-op when `None`, i.e.
+/// when tracing was disabled at [`start`] time).
+pub fn span(name: &'static str, trace: u64, started: Option<Instant>) {
+    let Some(t0) = started else { return };
+    let dur_ns = u64::try_from(t0.elapsed().as_nanos()).unwrap_or(u64::MAX);
+    let ts_ns = u64::try_from(t0.duration_since(epoch()).as_nanos()).unwrap_or(u64::MAX);
+    with_ring(|r| {
+        r.push(TraceEvent { name, kind: EventKind::Span, trace, ts_ns, dur_ns, tid: 0 })
+    });
+}
+
+/// Record a thread-scoped instant event.
+pub fn instant(name: &'static str, trace: u64) {
+    if !super::enabled() {
+        return;
+    }
+    let ts_ns = now_ns();
+    with_ring(|r| {
+        r.push(TraceEvent { name, kind: EventKind::Instant, trace, ts_ns, dur_ns: 0, tid: 0 })
+    });
+}
+
+/// Begin the async (cross-thread) span for `trace`.
+pub fn async_begin(name: &'static str, trace: u64) {
+    if !super::enabled() || trace == 0 {
+        return;
+    }
+    let ts_ns = now_ns();
+    with_ring(|r| {
+        r.push(TraceEvent { name, kind: EventKind::AsyncBegin, trace, ts_ns, dur_ns: 0, tid: 0 })
+    });
+}
+
+/// End the async span for `trace`.
+pub fn async_end(name: &'static str, trace: u64) {
+    if !super::enabled() || trace == 0 {
+        return;
+    }
+    let ts_ns = now_ns();
+    with_ring(|r| {
+        r.push(TraceEvent { name, kind: EventKind::AsyncEnd, trace, ts_ns, dur_ns: 0, tid: 0 })
+    });
+}
+
+/// Collect and clear every thread's ring; events come back sorted by
+/// timestamp. Rings of finished threads are included (the registry keeps
+/// them alive), so nothing recorded before a worker exited is lost.
+pub fn drain() -> Vec<TraceEvent> {
+    let rings = REGISTRY.lock().unwrap_or_else(PoisonError::into_inner);
+    let mut all = Vec::new();
+    for ring in rings.iter() {
+        all.extend(ring.lock().unwrap_or_else(PoisonError::into_inner).take());
+    }
+    all.sort_by_key(|e| e.ts_ns);
+    all
+}
+
+/// Discard all buffered events and reset overflow counters (ring
+/// registrations persist). Test isolation helper.
+pub fn reset() {
+    let rings = REGISTRY.lock().unwrap_or_else(PoisonError::into_inner);
+    for ring in rings.iter() {
+        let mut r = ring.lock().unwrap_or_else(PoisonError::into_inner);
+        r.take();
+        r.dropped = 0;
+    }
+}
+
+/// Total events overwritten (flight-recorder overflow) across all rings
+/// since the last [`reset`].
+pub fn dropped() -> u64 {
+    REGISTRY
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .iter()
+        .map(|r| r.lock().unwrap_or_else(PoisonError::into_inner).dropped)
+        .sum()
+}
+
+/// Serialize events as Chrome trace-event JSON (object format:
+/// `{"traceEvents": [...]}`), loadable in `chrome://tracing` / Perfetto.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> JsonValue {
+    let mut evs = Vec::with_capacity(events.len());
+    for e in events {
+        let mut fields = vec![
+            ("name", s(e.name)),
+            ("pid", num(1.0)),
+            ("tid", num(e.tid as f64)),
+            ("ts", num(e.ts_ns as f64 / 1000.0)),
+        ];
+        match e.kind {
+            EventKind::Span => {
+                fields.push(("ph", s("X")));
+                fields.push(("dur", num(e.dur_ns as f64 / 1000.0)));
+            }
+            EventKind::Instant => {
+                fields.push(("ph", s("i")));
+                fields.push(("s", s("t")));
+            }
+            EventKind::AsyncBegin => {
+                fields.push(("ph", s("b")));
+                fields.push(("cat", s("request")));
+                fields.push(("id", num(e.trace as f64)));
+            }
+            EventKind::AsyncEnd => {
+                fields.push(("ph", s("e")));
+                fields.push(("cat", s("request")));
+                fields.push(("id", num(e.trace as f64)));
+            }
+        }
+        if e.trace != 0 {
+            fields.push(("args", obj(vec![("trace", num(e.trace as f64))])));
+        }
+        evs.push(obj(fields));
+    }
+    obj(vec![("traceEvents", arr(evs)), ("displayTimeUnit", s("ms"))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, ts: u64) -> TraceEvent {
+        TraceEvent { name, kind: EventKind::Instant, trace: 0, ts_ns: ts, dur_ns: 0, tid: 0 }
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_at_capacity() {
+        let mut r = Ring::new(7, 4);
+        for i in 0..6u64 {
+            r.push(ev("e", i));
+        }
+        assert_eq!(r.dropped, 2);
+        let evs = r.take();
+        let ts: Vec<u64> = evs.iter().map(|e| e.ts_ns).collect();
+        assert_eq!(ts, vec![2, 3, 4, 5], "oldest two overwritten, order preserved");
+        assert!(evs.iter().all(|e| e.tid == 7), "ring stamps its thread id");
+        assert!(r.take().is_empty(), "take drains");
+    }
+
+    #[test]
+    fn chrome_json_shape() {
+        let events = [
+            TraceEvent {
+                name: "request",
+                kind: EventKind::AsyncBegin,
+                trace: 3,
+                ts_ns: 1500,
+                dur_ns: 0,
+                tid: 1,
+            },
+            TraceEvent {
+                name: "exec_batch",
+                kind: EventKind::Span,
+                trace: 0,
+                ts_ns: 2000,
+                dur_ns: 4000,
+                tid: 2,
+            },
+            TraceEvent {
+                name: "request",
+                kind: EventKind::AsyncEnd,
+                trace: 3,
+                ts_ns: 9000,
+                dur_ns: 0,
+                tid: 1,
+            },
+        ];
+        let json = chrome_trace_json(&events);
+        let text = json.to_string();
+        let parsed = JsonValue::parse(&text).expect("trace JSON must parse");
+        let evs = parsed.get("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("b"));
+        assert_eq!(evs[0].get("id").unwrap().as_f64(), Some(3.0));
+        assert_eq!(evs[1].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[1].get("dur").unwrap().as_f64(), Some(4.0));
+        assert_eq!(evs[1].get("ts").unwrap().as_f64(), Some(2.0));
+        assert_eq!(evs[2].get("ph").unwrap().as_str(), Some("e"));
+    }
+}

@@ -166,10 +166,12 @@ impl FaultPlan {
         }
         if self.delays.contains(&n) {
             self.injected_delays.fetch_add(1, Ordering::SeqCst);
+            crate::obs::trace::instant("fault_delay", 0);
             std::thread::sleep(self.delay);
         }
         if self.panics.contains(&n) {
             self.injected_panics.fetch_add(1, Ordering::SeqCst);
+            crate::obs::trace::instant("fault_panic", 0);
             panic!("injected backend fault at blind-rotate op {n} (seed {})", self.seed);
         }
     }
@@ -183,6 +185,7 @@ impl FaultPlan {
         }
         if self.resolve_failures.contains(&n) {
             self.injected_resolve_failures.fetch_add(1, Ordering::SeqCst);
+            crate::obs::trace::instant("fault_resolve", 0);
             return Some(format!("injected resolve failure at call {n} (seed {})", self.seed));
         }
         None
@@ -233,6 +236,10 @@ impl<B: PbsBackend> PbsBackend for FaultyBackend<B> {
 
     fn take_bsk_bytes_streamed(&mut self) -> u64 {
         self.inner.take_bsk_bytes_streamed()
+    }
+
+    fn take_fft_hist(&mut self) -> crate::obs::hist::Log2Histogram {
+        self.inner.take_fft_hist()
     }
 }
 

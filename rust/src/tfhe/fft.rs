@@ -251,11 +251,13 @@ impl FftPlan {
     /// threshold; both schedules run the identical butterfly network in
     /// the identical per-point order, so the choice is bitwise-invisible.
     pub fn dif_forward(&self, buf: &mut [C64]) {
+        let t0 = crate::obs::timer();
         if self.blocked {
             self.dif_forward_blocked(buf);
         } else {
             self.dif_forward_monolithic(buf);
         }
+        crate::obs::record_fft(t0);
     }
 
     /// The classic single-sweep DIF schedule: each fused stage walks the
@@ -417,11 +419,13 @@ impl FftPlan {
     /// Inverse DIT FFT: **bit-reversed** input -> natural output, with the
     /// 1/nh scale folded in. Dispatches like [`Self::dif_forward`].
     pub fn dit_inverse(&self, buf: &mut [C64]) {
+        let t0 = crate::obs::timer();
         if self.blocked {
             self.dit_inverse_blocked(buf);
         } else {
             self.dit_inverse_monolithic(buf);
         }
+        crate::obs::record_fft(t0);
     }
 
     /// Single-sweep inverse DIT (see [`Self::dif_forward_monolithic`] for
@@ -585,11 +589,13 @@ impl FftPlan {
     /// [bin][col]. Per-column arithmetic is op-for-op identical to
     /// [`Self::dif_forward`]. Dispatches like the scalar entry point.
     pub fn dif_forward_planar(&self, re: &mut [f64], im: &mut [f64], cols: usize) {
+        let t0 = crate::obs::timer();
         if self.blocked {
             self.dif_forward_planar_blocked(re, im, cols);
         } else {
             self.dif_forward_planar_monolithic(re, im, cols);
         }
+        crate::obs::record_fft(t0);
     }
 
     /// Single-sweep planar DIF (see [`Self::dif_forward_monolithic`]).
@@ -788,11 +794,13 @@ impl FftPlan {
     /// 1/nh scale folded in. Per-column arithmetic matches
     /// [`Self::dit_inverse`]. Dispatches like the scalar entry point.
     pub fn dit_inverse_planar(&self, re: &mut [f64], im: &mut [f64], cols: usize) {
+        let t0 = crate::obs::timer();
         if self.blocked {
             self.dit_inverse_planar_blocked(re, im, cols);
         } else {
             self.dit_inverse_planar_monolithic(re, im, cols);
         }
+        crate::obs::record_fft(t0);
     }
 
     /// Single-sweep planar DIT (see [`Self::dif_forward_monolithic`]).

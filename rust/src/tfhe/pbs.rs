@@ -7,7 +7,7 @@
 //! [`PbsContext`] owns the FFT plan and all scratch so a PBS allocates
 //! nothing on the hot path.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, PoisonError};
 
 use super::bsk::FourierBsk;
 use super::fft::{plan_for, FftPlan};
@@ -18,6 +18,7 @@ use super::lwe::LweCiphertext;
 use super::parallel::{Job, WorkerPool};
 use super::poly::rotate_into;
 use super::torus::SecretKeys;
+use crate::obs::hist::Log2Histogram;
 use crate::params::ParamSet;
 use crate::util::rng::Rng;
 
@@ -85,6 +86,10 @@ pub struct PbsContext {
     /// Per-chunk batch scratch for the parallel sweep (grow-only, like
     /// `batch_scratch`).
     chunk_scratch: Vec<BatchExtProdScratch>,
+    /// FFT transform times deposited by pool workers (each job drains its
+    /// thread-local meter here when observability is enabled); merged with
+    /// the owning thread's meter by [`Self::take_fft_hist`].
+    pool_fft: Arc<Mutex<Log2Histogram>>,
 }
 
 impl PbsContext {
@@ -107,6 +112,7 @@ impl PbsContext {
             fft_threads,
             pool: (fft_threads > 1).then(|| WorkerPool::new(fft_threads)),
             chunk_scratch: Vec::new(),
+            pool_fft: Arc::new(Mutex::new(Log2Histogram::new())),
         }
     }
 
@@ -141,6 +147,17 @@ impl PbsContext {
     /// Drain the BSK traffic counter (returns the accumulated bytes).
     pub fn take_bsk_bytes_streamed(&mut self) -> u64 {
         std::mem::take(&mut self.bsk_bytes_streamed)
+    }
+
+    /// Drain the per-transform FFT timing histogram: the calling thread's
+    /// local meter (sequential-path transforms) merged with everything
+    /// the blind-rotation pool workers deposited. Empty unless
+    /// `obs::enabled` during execution.
+    pub fn take_fft_hist(&mut self) -> Log2Histogram {
+        let mut h = crate::obs::take_thread_fft();
+        let mut pool = self.pool_fft.lock().unwrap_or_else(PoisonError::into_inner);
+        h.merge(&std::mem::take(&mut *pool));
+        h
     }
 
     /// Blind rotation (paper Fig. 3 (c)): returns the rotated accumulator.
@@ -286,6 +303,7 @@ impl PbsContext {
             rest_scratch = rs;
             let chunk_cts = &cts[lo..hi];
             let plan = Arc::clone(&plan);
+            let pool_fft = Arc::clone(&self.pool_fft);
             jobs.push(Box::new(move || {
                 let scratch = &mut chunk_scratch[0];
                 let mut amounts = vec![0usize; chunk_cts.len()];
@@ -299,6 +317,15 @@ impl PbsContext {
                         continue;
                     }
                     cmux_rotate_batch(&plan, p, g, &amounts, chunk_accs, scratch);
+                }
+                // Harvest this pool thread's FFT meter so transform times
+                // survive the job (pool threads are persistent but jobs
+                // are the drain boundary).
+                if crate::obs::enabled() {
+                    let h = crate::obs::take_thread_fft();
+                    if !h.is_empty() {
+                        pool_fft.lock().unwrap_or_else(PoisonError::into_inner).merge(&h);
+                    }
                 }
             }));
         }

@@ -1,6 +1,8 @@
 //! Tiny statistics helpers used by benches, the coordinator's metrics and
 //! the eval harness.
 
+use crate::util::rng::Rng;
+
 /// Arithmetic mean; 0.0 for empty input.
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -46,6 +48,60 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// A bounded, seed-deterministic uniform sample of an unbounded stream
+/// (Algorithm R). Below the capacity it holds *every* pushed value in
+/// arrival order — so consumers that merge/percentile over small runs see
+/// exactly the raw samples — and past it each of the `seen` values has
+/// equal probability `cap / seen` of being retained, in O(cap) memory.
+/// Determinism comes from the owned [`Rng`]: same seed + same stream,
+/// same retained sample.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    rng: Rng,
+    samples: Vec<f64>,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Self {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Self { cap, seen: 0, rng: Rng::new(seed), samples: Vec::new() }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+            return;
+        }
+        let j = self.rng.below(self.seen);
+        if (j as usize) < self.cap {
+            self.samples[j as usize] = v;
+        }
+    }
+
+    /// The retained sample (every value, in order, while below capacity).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// Values pushed over the reservoir's lifetime (not the retained
+    /// count — see [`Self::len`]).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Retained values (== `seen` until the cap binds, then == cap).
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -65,5 +121,61 @@ mod tests {
         assert_eq!(mean(&[]), 0.0);
         assert_eq!(percentile(&[], 50.0), 0.0);
         assert_eq!(geomean(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Empty slice: every percentile is 0.
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[], p), 0.0);
+        }
+        // Single sample: every percentile is that sample.
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&[42.0], p), 42.0);
+        }
+        // Duplicate-heavy input: interpolation stays on the plateau and
+        // only the extreme tail reaches the outlier.
+        let mut xs = vec![5.0; 99];
+        xs.push(1000.0);
+        assert_eq!(percentile(&xs, 0.0), 5.0);
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 98.0), 5.0);
+        assert_eq!(percentile(&xs, 100.0), 1000.0);
+        // Input order must not matter (sorted copy inside).
+        let fwd = [3.0, 1.0, 2.0];
+        let rev = [2.0, 1.0, 3.0];
+        assert_eq!(percentile(&fwd, 50.0), 2.0);
+        assert_eq!(percentile(&rev, 50.0), 2.0);
+    }
+
+    #[test]
+    fn reservoir_exact_below_cap_and_bounded_above() {
+        let mut r = Reservoir::new(8, 1);
+        for i in 0..8 {
+            r.push(i as f64);
+        }
+        let exact: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        assert_eq!(r.samples(), &exact[..], "below the cap the sample is the stream");
+        for i in 8..1000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 8, "capacity binds");
+        assert_eq!(r.seen(), 1000);
+        assert!(r.samples().iter().all(|&v| (0.0..1000.0).contains(&v)));
+    }
+
+    #[test]
+    fn reservoir_is_seed_deterministic() {
+        let mut a = Reservoir::new(16, 7);
+        let mut b = Reservoir::new(16, 7);
+        let mut c = Reservoir::new(16, 8);
+        for i in 0..5000 {
+            let v = (i * 37 % 101) as f64;
+            a.push(v);
+            b.push(v);
+            c.push(v);
+        }
+        assert_eq!(a.samples(), b.samples(), "same seed, same retained sample");
+        assert_ne!(a.samples(), c.samples(), "different seed draws differently");
     }
 }

@@ -1,0 +1,318 @@
+//! Observability integration: trace propagation through the serving
+//! stack.
+//!
+//! Three contracts, each over real cluster serving:
+//! - **Disabled invisibility**: with the hooks off (the default), serving
+//!   records nothing — no trace events, empty stage histograms, no batch
+//!   profiles — and the output ciphertexts are bitwise-identical to an
+//!   enabled run of the same encrypted stream (the hooks never perturb
+//!   the computation).
+//! - **Span-tree completeness under chaos**: every trace id minted at
+//!   admission closes with exactly one async end and a terminal instant,
+//!   even when the request's batch panics, its resolve fails, or it is
+//!   rejected at admission — no orphaned spans, no double-closes.
+//! - **Histogram ↔ counter reconciliation**: on fault-free serving the
+//!   merged stage histogram counts equal the measured serving counters,
+//!   and per-batch drift attribution against `arch::sim` is exact.
+//!
+//! The obs gate and the flight-recorder registry are process-global, so
+//! every test in this file serializes on one lock and restores the
+//! disabled state (panic-safe) before releasing it.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Duration;
+
+use taurus::arch::TaurusConfig;
+use taurus::cluster::{
+    Cluster, ClusterOptions, PlacementPolicy, StoreFactory, SupervisorOptions,
+};
+use taurus::coordinator::{BackendKind, CoordinatorOptions};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::{interp, Program};
+use taurus::obs;
+use taurus::obs::trace::EventKind;
+use taurus::params::TEST1;
+use taurus::runtime::faults::{FaultPlan, FaultSpec, FaultyStore};
+use taurus::tenant::{KeyStore, StaticKeys};
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{LweCiphertext, SecretKeys, ServerKeys};
+use taurus::util::rng::Rng;
+
+/// Request terminals recorded by `Ticket::wait` / the admission reject
+/// path — every complete span tree ends in at least one of these.
+const TERMINALS: &[&str] =
+    &["served", "timeout", "shard_lost", "exec_failed", "resolve_failed", "rejected"];
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Enables tracing for one test body and restores the disabled, empty
+/// state on drop — panic-safe so a failing assert cannot leak an enabled
+/// gate into the next test.
+struct ObsOn;
+
+impl ObsOn {
+    fn new() -> Self {
+        obs::trace::reset();
+        obs::enable();
+        ObsOn
+    }
+}
+
+impl Drop for ObsOn {
+    fn drop(&mut self) {
+        obs::disable();
+        obs::trace::reset();
+    }
+}
+
+/// Fanout program: one shared KS, two PBS per request.
+fn fan_program() -> Program {
+    let mut b = ProgramBuilder::new("obs-fan", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.add(x, y);
+    let r0 = b.lut_fn(d, |m| (m + 2) % 8);
+    let r1 = b.lut_fn(d, |m| m ^ 3);
+    b.outputs(&[r0, r1]);
+    b.finish()
+}
+
+fn coord_options() -> CoordinatorOptions {
+    CoordinatorOptions {
+        workers: 1,
+        batch_capacity: 2,
+        max_batch_wait: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+fn cluster_options() -> ClusterOptions {
+    ClusterOptions {
+        shards: 2,
+        policy: PlacementPolicy::RoundRobin,
+        queue_depth: None,
+        coordinator: coord_options(),
+    }
+}
+
+fn encrypt_stream(
+    queries: &[[u64; 2]],
+    sk: &SecretKeys,
+    rng: &mut Rng,
+) -> Vec<Vec<LweCiphertext>> {
+    queries
+        .iter()
+        .map(|q| vec![encrypt_message(q[0], sk, rng), encrypt_message(q[1], sk, rng)])
+        .collect()
+}
+
+fn serve_all(
+    cluster: &mut Cluster,
+    encrypted: &[Vec<LweCiphertext>],
+) -> Vec<Vec<LweCiphertext>> {
+    let pend: Vec<_> = encrypted
+        .iter()
+        .enumerate()
+        .map(|(i, cts)| cluster.submit(i as u64, cts.clone()).expect("submit"))
+        .collect();
+    let outs = pend.iter().map(|r| r.wait().expect("served")).collect();
+    drop(pend);
+    outs
+}
+
+#[test]
+fn disabled_tracing_is_invisible() {
+    let _guard = obs_lock();
+    assert!(!obs::enabled(), "obs must be disabled by default");
+    obs::trace::reset();
+
+    let mut rng = Rng::new(51);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    let queries: Vec<[u64; 2]> = (0..8u64).map(|i| [i % 6, (i * 3) % 6]).collect();
+    let encrypted = encrypt_stream(&queries, &sk, &mut rng);
+
+    // Disabled pass: correct answers, zero observability residue.
+    assert_eq!(obs::next_trace_id(), 0, "disabled mint must return the sentinel id");
+    let mut cluster = Cluster::start(prog.clone(), keys.clone(), cluster_options());
+    let disabled_outs = serve_all(&mut cluster, &encrypted);
+    let snap = cluster.snapshot();
+    cluster.shutdown();
+    for (q, outs) in queries.iter().zip(&disabled_outs) {
+        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+        assert_eq!(got, interp::eval(&prog, q), "query {q:?}");
+    }
+    assert_eq!(snap.requests, queries.len());
+    for (name, h) in snap.stage.named() {
+        assert!(h.is_empty(), "disabled serving must not record stage `{name}`");
+    }
+    assert!(snap.plan_batch_profiles.is_empty(), "disabled serving must not profile batches");
+    assert!(obs::trace::drain().is_empty(), "disabled serving must not record trace events");
+
+    // Enabled pass over the SAME ciphertexts: the hooks observe, they do
+    // not perturb — output bits identical to the disabled pass.
+    let _on = ObsOn::new();
+    let mut cluster = Cluster::start(prog, keys, cluster_options());
+    let enabled_outs = serve_all(&mut cluster, &encrypted);
+    cluster.shutdown();
+    assert_eq!(
+        enabled_outs, disabled_outs,
+        "tracing must be bitwise-invisible to served ciphertexts"
+    );
+}
+
+#[test]
+fn chaos_span_trees_are_complete() {
+    let _guard = obs_lock();
+    let _on = ObsOn::new();
+
+    let mut rng = Rng::new(52);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    let n = 12usize;
+    let queries: Vec<[u64; 2]> = (0..n as u64).map(|i| [i % 6, (i * 5) % 6]).collect();
+    let encrypted = encrypt_stream(&queries, &sk, &mut rng);
+
+    // Panics, a latency spike, and resolve failures — the full terminal
+    // vocabulary is reachable (served / exec_failed / resolve_failed /
+    // rejected), and retries re-use the admission-minted id.
+    let faults = Arc::new(FaultPlan::from_seed(
+        1,
+        &FaultSpec {
+            op_horizon: 8,
+            panics: 2,
+            delays: 1,
+            delay: Duration::from_millis(10),
+            resolve_horizon: 8,
+            resolve_failures: 2,
+        },
+    ));
+    let factory: StoreFactory = {
+        let (keys, faults) = (keys.clone(), faults.clone());
+        Arc::new(move |_shard| {
+            let inner = Arc::new(StaticKeys::new(keys.clone())) as Arc<dyn KeyStore>;
+            Arc::new(FaultyStore::new(inner, faults.clone())) as Arc<dyn KeyStore>
+        })
+    };
+    let mut cluster = Cluster::start_with_store_factory_supervised(
+        prog,
+        factory,
+        ClusterOptions {
+            coordinator: CoordinatorOptions {
+                backend: BackendKind::NativeChaos { faults: faults.clone() },
+                ..coord_options()
+            },
+            ..cluster_options()
+        },
+        SupervisorOptions { max_retries: 2, restart_after_failures: 2, ..Default::default() },
+    );
+
+    let mut admitted = 0usize;
+    let mut rejected = 0usize;
+    let mut pend = Vec::new();
+    for (i, cts) in encrypted.iter().enumerate() {
+        match cluster.submit_with_deadline(i as u64, cts.clone(), Duration::from_secs(30)) {
+            Ok(r) => {
+                admitted += 1;
+                pend.push(r);
+            }
+            Err(_) => rejected += 1,
+        }
+    }
+    // Every admitted request TERMINATES; each ticket is waited exactly
+    // once (the wait records the terminal instant + async end).
+    for r in &pend {
+        let _ = r.wait();
+    }
+    drop(pend);
+    cluster.shutdown();
+
+    let events = obs::trace::drain();
+    assert_eq!(obs::trace::dropped(), 0, "this stream fits the flight-recorder rings");
+    let ids: std::collections::BTreeSet<u64> =
+        events.iter().filter(|e| e.trace != 0).map(|e| e.trace).collect();
+    assert!(
+        ids.len() >= admitted && ids.len() <= admitted + rejected,
+        "one trace id per submission: got {} ids for {admitted} admitted + {rejected} rejected",
+        ids.len()
+    );
+    for id in &ids {
+        let begins: Vec<_> = events
+            .iter()
+            .filter(|e| e.trace == *id && e.kind == EventKind::AsyncBegin)
+            .collect();
+        let ends: Vec<_> = events
+            .iter()
+            .filter(|e| e.trace == *id && e.kind == EventKind::AsyncEnd)
+            .collect();
+        assert_eq!(begins.len(), 1, "trace {id}: exactly one async begin");
+        assert_eq!(ends.len(), 1, "trace {id}: exactly one async end (no double-close)");
+        assert!(
+            begins[0].ts_ns <= ends[0].ts_ns,
+            "trace {id}: begin must precede end"
+        );
+        let terminal = events
+            .iter()
+            .any(|e| e.trace == *id && e.kind == EventKind::Instant && TERMINALS.contains(&e.name));
+        assert!(terminal, "trace {id}: span tree must close with a terminal instant");
+    }
+    // No orphans: every request-scoped event belongs to a begun trace.
+    for e in events.iter().filter(|e| e.trace != 0) {
+        assert!(ids.contains(&e.trace), "orphan event {} for unknown trace {}", e.name, e.trace);
+    }
+    println!(
+        "chaos span trees: {} traces ({admitted} admitted, {rejected} rejected), {} events, injected {:?}",
+        ids.len(),
+        events.len(),
+        faults.injected()
+    );
+}
+
+#[test]
+fn fault_free_histograms_reconcile_with_counters() {
+    let _guard = obs_lock();
+    let _on = ObsOn::new();
+
+    let mut rng = Rng::new(53);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    let queries: Vec<[u64; 2]> = (0..10u64).map(|i| [i % 6, (i * 7) % 6]).collect();
+    let encrypted = encrypt_stream(&queries, &sk, &mut rng);
+
+    let mut cluster = Cluster::start(prog, keys, cluster_options());
+    let _ = serve_all(&mut cluster, &encrypted);
+    let snap = cluster.snapshot();
+    let plan = cluster.plan();
+
+    // Merged stage histogram counts equal the measured serving counters:
+    // one queue sample per request, one KS sample per executed key
+    // switch, one sample-extract sample per PBS.
+    assert_eq!(snap.stage.queue.count(), snap.requests as u64, "queue samples == requests");
+    assert_eq!(snap.stage.keyswitch.count(), snap.ks_executed, "KS samples == ks_executed");
+    assert_eq!(
+        snap.stage.sample_extract.count(),
+        snap.pbs_executed as u64,
+        "SE samples == pbs_executed"
+    );
+    assert!(snap.stage.blind_rotate.count() > 0, "blind-rotate stage recorded");
+    assert!(snap.stage.fft.count() > 0, "FFT transform meter recorded");
+
+    // Per-batch drift attribution is EXACT on the fault-free path.
+    assert!(!snap.plan_batch_profiles.is_empty(), "enabled serving must profile batches");
+    let predicted =
+        taurus::arch::sim::batch_predictions(&plan.schedule, &plan.params, &TaurusConfig::default());
+    let rows = taurus::obs::drift::attribute(&snap.plan_batch_profiles, &predicted);
+    assert!(
+        taurus::obs::drift::counts_exact(&rows),
+        "fault-free drift attribution must match arch::sim exactly: {rows:?}"
+    );
+    let measured_ks: u64 = rows.iter().map(|r| r.measured_ks).sum();
+    assert_eq!(measured_ks, snap.ks_executed, "profile KS totals reconcile with metrics");
+    cluster.shutdown();
+}
