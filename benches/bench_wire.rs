@@ -1,0 +1,155 @@
+//! Wire-layer costs: frame codec throughput, key-upload bandwidth, and
+//! the latency the TCP front end adds over in-process submission —
+//! emitting `BENCH_wire.json` so CI tracks the serving boundary across
+//! PRs alongside `BENCH_cluster.json`.
+//!
+//! Three measurements, all loopback (no network variance — this isolates
+//! the protocol's own cost):
+//!
+//! - **frames/s** — encode+decode of a SUBMIT-sized frame (two TEST1
+//!   ciphertexts), the per-request serialization tax.
+//! - **key-upload MB/s** — streaming the TEST1 server keys (~9.5 MB, see
+//!   EXPERIMENTS.md §Widths) at two chunk sizes; chunking trades frame
+//!   count against transient buffer size, not bandwidth.
+//! - **added latency** — wire submit (socket + codec + waiter thread)
+//!   minus in-process `Cluster::submit` on the very same cluster.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+
+use harness::{bench, section};
+use taurus::cluster::{Cluster, ClusterOptions, PlacementPolicy, StoreFactory};
+use taurus::coordinator::CoordinatorOptions;
+use taurus::ir::builder::ProgramBuilder;
+use taurus::params::TEST1;
+use taurus::tenant::{KeyStore, SeededTenantStore, SessionId};
+use taurus::tfhe::keycache;
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::util::json::{arr, num, obj, s, JsonValue};
+use taurus::util::rng::Rng;
+use taurus::wire::codec::{put_u64, write_ciphertexts};
+use taurus::wire::proto::{read_frame, write_frame, TAG_SUBMIT};
+use taurus::wire::{Client, WireServer, WireServerOptions};
+
+fn main() {
+    // The serving quickstart program: d = 2x + y + 1 fanning out to two
+    // LUTs (KS-dedup live), same artifact `taurus serve` compiles.
+    let mut b = ProgramBuilder::new("wire-bench", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.dot(vec![x, y], vec![2, 1], 1);
+    let r = b.relu(d, 3);
+    let sg = b.lut_fn(d, |m| u64::from(m > 3));
+    b.outputs(&[r, sg]);
+    let prog = b.finish();
+
+    let master_seed = 0xB44C_0001u64;
+    let factory: StoreFactory = Arc::new(move |_shard| {
+        Arc::new(SeededTenantStore::new(&TEST1, master_seed, 4)) as Arc<dyn KeyStore>
+    });
+    let cluster = Arc::new(Cluster::start_with_store_factory(
+        prog,
+        factory,
+        ClusterOptions {
+            shards: 1,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: None,
+            coordinator: CoordinatorOptions { workers: 1, ..Default::default() },
+        },
+    ));
+    let mut server =
+        WireServer::start(cluster.clone(), "127.0.0.1:0", WireServerOptions::default())
+            .expect("bind loopback listener");
+
+    // The client's own keys (distinct from the stores' master seed), as
+    // in the remote_client example.
+    let keys = keycache::get(&TEST1, 0xBE9C_11E7);
+    let mut client = Client::connect(server.local_addr()).expect("connect");
+    let session = SessionId(7);
+    let mut rng = Rng::new(1);
+    let inputs =
+        vec![encrypt_message(1, &keys.sk, &mut rng), encrypt_message(2, &keys.sk, &mut rng)];
+
+    section("frame codec (SUBMIT-sized frames, in memory, TEST1)");
+    let mut body = Vec::new();
+    put_u64(&mut body, 1); // id
+    put_u64(&mut body, session.0);
+    put_u64(&mut body, 0); // no deadline
+    write_ciphertexts(&mut body, &inputs);
+    let frame_bytes = 4 + 1 + body.len();
+    let r_frame = bench("frame encode+decode roundtrip", 1.0, || {
+        let mut buf = Vec::with_capacity(5 + body.len());
+        write_frame(&mut buf, TAG_SUBMIT, &body).expect("write");
+        let f = read_frame(&mut buf.as_slice()).expect("read").expect("one frame");
+        assert_eq!(f.tag, TAG_SUBMIT);
+    });
+    let frames_per_s = 1.0 / r_frame.mean_s;
+    println!("frame size {frame_bytes} B -> {frames_per_s:.0} frames/s");
+
+    section("key upload over loopback (TEST1, ~9.5 MB per set)");
+    let upload_mb = (TEST1.bsk_bytes() + TEST1.ksk_bytes()) as f64 / (1024.0 * 1024.0);
+    let mut upload_rows: Vec<JsonValue> = Vec::new();
+    for chunk_bytes in [256usize << 10, 2 << 20] {
+        let r = bench(&format!("key upload chunk={}KiB", chunk_bytes >> 10), 1.5, || {
+            client.upload_keys_chunked(session, &keys.server, chunk_bytes).expect("upload");
+        });
+        let mb_per_s = upload_mb / r.mean_s;
+        println!("  -> {upload_mb:.1} MB at {mb_per_s:.0} MB/s");
+        upload_rows.push(obj(vec![
+            ("chunk_bytes", num(chunk_bytes as f64)),
+            ("upload_mb", num(upload_mb)),
+            ("mean_s", num(r.mean_s)),
+            ("mb_per_s", num(mb_per_s)),
+        ]));
+    }
+
+    section("submit latency: wire vs in-process (same cluster, same keys)");
+    let r_local = bench("in-process submit+recv", 2.0, || {
+        let outs = cluster
+            .submit(session, inputs.clone())
+            .expect("submit")
+            .recv()
+            .expect("response");
+        assert_eq!(outs.len(), 2);
+    });
+    let r_wire = bench("wire submit (socket + codec + waiter)", 2.0, || {
+        let outs = client.submit(session, &inputs).expect("remote submit");
+        assert_eq!(outs.len(), 2);
+    });
+    let added_ms = (r_wire.mean_s - r_local.mean_s) * 1e3;
+    println!(
+        "added latency: {added_ms:.3} ms over {:.3} ms in-process ({:+.1}%)",
+        r_local.mean_s * 1e3,
+        100.0 * (r_wire.mean_s / r_local.mean_s - 1.0),
+    );
+
+    let report = obj(vec![
+        ("bench", s("wire")),
+        ("param", s(TEST1.name)),
+        ("frame_bytes", num(frame_bytes as f64)),
+        ("frames_per_s", num(frames_per_s)),
+        ("key_upload", arr(upload_rows)),
+        (
+            "submit",
+            obj(vec![
+                ("in_process_mean_ms", num(r_local.mean_s * 1e3)),
+                ("wire_mean_ms", num(r_wire.mean_s * 1e3)),
+                ("wire_min_ms", num(r_wire.min_s * 1e3)),
+                ("added_latency_ms", num(added_ms)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_wire.json";
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+
+    drop(client);
+    server.shutdown();
+    if let Ok(mut c) = Arc::try_unwrap(cluster) {
+        c.shutdown();
+    }
+}

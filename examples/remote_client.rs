@@ -1,0 +1,179 @@
+//! Remote serving end-to-end: a client that keeps its own keys.
+//!
+//! The deployment shape the wire layer exists for — and the regression
+//! driver for the key-pinning bugfix:
+//!
+//! 1. The client generates its OWN key pair. The server's seeded tenant
+//!    stores cannot derive it: resolving this session from the master
+//!    seed would mint *different* keys and every decryption would be
+//!    garbage. Uploading + pinning is the only correct path.
+//! 2. The client connects over framed TCP, learns the server's parameter
+//!    set from the HELLO handshake, and streams its server keys up in
+//!    chunks (`wire::codec` — the full key set is never resident twice).
+//! 3. It submits encrypted requests under the uploaded session. The
+//!    cluster routes round-robin, so every shard serves this session —
+//!    which only works because `Cluster::register_session` broadcast the
+//!    upload to every shard store.
+//! 4. Every decrypted answer must match the plaintext interpreter, the
+//!    remote ciphertexts must be bitwise identical to an in-process
+//!    `Cluster::submit` of the same inputs, and the shard stores must
+//!    report ZERO key regenerations — the uploaded keys stayed pinned.
+//!
+//!     cargo run --release --example remote_client
+//!     # flags: -- --width 8 --requests 4 --shards 2
+//!     #        --addr HOST:PORT   (connect to a running
+//!     #                            `taurus serve --listen` instead of
+//!     #                            spawning a loopback server; the
+//!     #                            quickstart program + TEST1 apply)
+//!
+//! Results are recorded in EXPERIMENTS.md §Wire.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use taurus::cluster::{Cluster, ClusterOptions, PlacementPolicy, StoreFactory};
+use taurus::coordinator::CoordinatorOptions;
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::interp;
+use taurus::ir::Program;
+use taurus::params::{self, ParamSet};
+use taurus::tenant::{KeyStore, SeededTenantStore, SessionId};
+use taurus::tfhe::keycache;
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::util::rng::Rng;
+use taurus::wire::{Client, WireServer, WireServerOptions};
+
+fn flag(name: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != name).nth(1)
+}
+
+/// The session the client uploads under — any u64 the client picks; it
+/// is NOT one of the seeded tenant ids the server can derive.
+const SESSION: u64 = 0xC11E;
+
+/// Client-side key seed. Deliberately unrelated to the server stores'
+/// master seed: the server cannot re-derive this material.
+const CLIENT_SEED: u64 = 0x0DD_C0DE;
+
+/// The quickstart program (`taurus serve` compiles the same one): fanout
+/// d = 2x + y + 1 into relu(d) and sign(d), so KS-dedup is live.
+fn demo_program(p: &ParamSet) -> Program {
+    let mut b = ProgramBuilder::new("remote-demo", p.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.dot(vec![x, y], vec![2, 1], 1);
+    let r = b.relu(d, 3);
+    let s = b.lut_fn(d, |m| u64::from(m > 3));
+    b.outputs(&[r, s]);
+    b.finish()
+}
+
+fn main() {
+    let width: usize = flag("--width").and_then(|v| v.parse().ok()).unwrap_or(3);
+    let requests: usize = flag("--requests").and_then(|v| v.parse().ok()).unwrap_or(8).max(1);
+    let shards: usize = flag("--shards").and_then(|v| v.parse().ok()).unwrap_or(2).max(1);
+    let addr = flag("--addr");
+
+    println!("== taurus remote client (wire protocol) ==");
+
+    // Loopback mode spawns the server half in-process: a round-robin
+    // sharded cluster whose stores derive seeded tenants — but NOT this
+    // client's keys — behind a TCP front end on an ephemeral port.
+    let loopback = addr.is_none();
+    let (server_ctx, connect_to) = if loopback {
+        let p = params::select_for_width(width);
+        let factory: StoreFactory = Arc::new(move |_shard| {
+            Arc::new(SeededTenantStore::new(p, 0x5EED_FACE, 4)) as Arc<dyn KeyStore>
+        });
+        let cluster = Arc::new(Cluster::start_with_store_factory(
+            demo_program(p),
+            factory,
+            ClusterOptions {
+                shards,
+                // Round-robin on purpose: every shard must serve the
+                // uploaded session, proving the cross-shard broadcast.
+                policy: PlacementPolicy::RoundRobin,
+                queue_depth: None,
+                coordinator: CoordinatorOptions { workers: 1, ..Default::default() },
+            },
+        ));
+        let server = WireServer::start(cluster.clone(), "127.0.0.1:0", WireServerOptions::default())
+            .expect("bind loopback listener");
+        let addr = server.local_addr().to_string();
+        println!("loopback server: {addr} ({} x {shards} shards, round-robin)", p.name);
+        (Some((server, cluster)), addr)
+    } else {
+        (None, addr.expect("--addr checked above"))
+    };
+
+    // Connect; the handshake tells us what parameter set to encrypt for.
+    let mut client = Client::connect(&connect_to).expect("connect");
+    let p = client.params();
+    let prog = demo_program(p);
+    println!("connected      : {connect_to} serves {} (width {})", p.name, p.width);
+
+    // The client's own keys. `keycache` generates them chunked and
+    // multi-worker (WIDE widths are minutes monolithic, seconds cached).
+    let t0 = Instant::now();
+    let keys = keycache::get(p, CLIENT_SEED);
+    println!("client keygen  : {} in {:.2}s (client-held, server cannot derive)", p.name, t0.elapsed().as_secs_f64());
+
+    // Stream the server-key half up. After the commit ACK the keys are
+    // pinned on every shard store under our session.
+    let t0 = Instant::now();
+    client.upload_keys(SessionId(SESSION), &keys.server).expect("key upload");
+    let mb = (p.bsk_bytes() + p.ksk_bytes()) as f64 / (1024.0 * 1024.0);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("key upload     : {mb:.1} MB in {dt:.2}s ({:.1} MB/s), pinned cluster-wide", mb / dt.max(1e-9));
+
+    // Drive encrypted requests through the socket; in loopback mode the
+    // same inputs also go through `Cluster::submit` in-process and the
+    // two answers must agree BITWISE — the wire layer is a transport,
+    // not a transform.
+    let mut rng = Rng::new(0x5151);
+    let mut correct = 0usize;
+    for i in 0..requests {
+        let (mx, my) = ((i as u64) % 4, (i as u64 * 3) % 4);
+        let expected = interp::eval(&prog, &[mx, my]);
+        let inputs =
+            vec![encrypt_message(mx, &keys.sk, &mut rng), encrypt_message(my, &keys.sk, &mut rng)];
+        let remote = client.submit(SessionId(SESSION), &inputs).expect("remote submit");
+        if let Some((_, cluster)) = &server_ctx {
+            let local = cluster
+                .submit(SessionId(SESSION), inputs.clone())
+                .expect("in-process submit")
+                .recv()
+                .expect("in-process response");
+            assert!(remote == local, "request {i}: remote ciphertexts differ from in-process");
+        }
+        let got: Vec<u64> = remote.iter().map(|c| decrypt_message(c, &keys.sk)).collect();
+        assert_eq!(got, expected, "request {i}: decrypted output diverges from the interpreter");
+        correct += 1;
+    }
+    println!("requests       : {correct}/{requests} correct (decrypt == interpreter)");
+
+    if let Some((mut server, cluster)) = server_ctx {
+        // The fix under test: uploaded keys were never silently
+        // regenerated from the master seed, on any shard.
+        let snap = cluster.snapshot();
+        assert_eq!(snap.key_regenerations, 0, "uploaded session keys must never regenerate");
+        assert!(snap.key_pinned >= shards, "every shard store pins the uploaded keys");
+        let per_shard = cluster.shard_snapshots();
+        let served: Vec<usize> = per_shard.iter().map(|s| s.requests).collect();
+        println!(
+            "shards         : {} requests per shard {:?}, {} pinned entries, 0 regenerations",
+            snap.requests, served, snap.key_pinned
+        );
+        if requests >= 2 * shards {
+            assert!(
+                served.iter().all(|&r| r > 0),
+                "round-robin must exercise every shard's copy of the uploaded keys"
+            );
+        }
+        server.shutdown();
+        if let Ok(mut c) = Arc::try_unwrap(cluster) {
+            c.shutdown();
+        }
+    }
+    println!("remote client OK (bitwise identical to in-process, keys pinned)");
+}

@@ -41,3 +41,6 @@ pub use serve::{
     Cluster, ClusterError, ClusterOptions, ClusterResponse, ReshardError, ReshardReport,
     StoreFactory, SupervisorOptions,
 };
+// Client-uploaded keys are rejected typed (never a panic) by
+// `Cluster::register_session`; the error type lives with the stores.
+pub use crate::tenant::RegisterError;

@@ -40,6 +40,7 @@
 //! — evicted from the old owner's store and registered (same `Arc`, no
 //! regeneration) into the new owner's.
 
+use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -55,7 +56,7 @@ use crate::coordinator::{
 };
 use crate::ir::Program;
 use crate::obs;
-use crate::tenant::{KeyStore, KeyStoreStats, SessionId, StaticKeys};
+use crate::tenant::{KeyStore, KeyStoreStats, RegisterError, SessionId, StaticKeys};
 use crate::tfhe::{LweCiphertext, ServerKeys};
 
 /// Builds the shard-local [`KeyStore`] for a shard index — how the
@@ -276,6 +277,15 @@ struct Shared {
     retries: AtomicU64,
     redirects: AtomicU64,
     restarts: AtomicU64,
+    /// Client-uploaded key material, by session. The source of truth for
+    /// re-broadcast: [`Cluster::register_session`] pins uploads into
+    /// EVERY shard store (non-affinity routers may send the next request
+    /// anywhere), and [`Cluster::reshard`] replays this map so
+    /// factory-minted new shards — which start with empty stores — hold
+    /// the uploads too. Uploaded keys are not derivable server-side;
+    /// without the replay a reshard would reintroduce the
+    /// silent-wrong-keys bug on grown clusters.
+    uploaded: Mutex<HashMap<SessionId, Arc<ServerKeys>>>,
 }
 
 fn read<T>(l: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
@@ -441,6 +451,7 @@ impl Cluster {
             retries: AtomicU64::new(0),
             redirects: AtomicU64::new(0),
             restarts: AtomicU64::new(0),
+            uploaded: Mutex::new(HashMap::new()),
         });
         let stop = Arc::new(AtomicBool::new(false));
         let supervisor = {
@@ -499,6 +510,54 @@ impl Cluster {
     /// Currently admitted (undropped) responses across the cluster.
     pub fn outstanding(&self) -> usize {
         self.admitted.load(Ordering::SeqCst)
+    }
+
+    /// Whether every shard store can hold client-uploaded key material.
+    /// The wire protocol's key-upload handler checks this at admission so
+    /// an upload against a single-key ([`StaticKeys`]) cluster is
+    /// rejected typed instead of reaching `StaticKeys::register`'s panic.
+    pub fn supports_register(&self) -> bool {
+        read(&self.shared.stores).iter().all(|s| s.supports_register())
+    }
+
+    /// Install client-uploaded keys for `session` on **every** shard
+    /// store, pinned against eviction, and remember them for replay on
+    /// [`Self::reshard`].
+    ///
+    /// Broadcast is the correctness fix for non-affinity placement: under
+    /// round-robin or least-outstanding the next request for the session
+    /// can land on any shard, and a shard without the uploaded keys would
+    /// silently re-derive *different* bits from its master seed — every
+    /// result garbage to the client. All-or-nothing: every store is
+    /// validated (capability + parameter set) before any is touched.
+    /// Returns the number of shard stores now holding the keys.
+    pub fn register_session(
+        &self,
+        session: impl Into<SessionId>,
+        keys: Arc<ServerKeys>,
+    ) -> Result<usize, RegisterError> {
+        let session = session.into();
+        let stores = read(&self.shared.stores);
+        for store in stores.iter() {
+            if !store.supports_register() {
+                return Err(RegisterError::Unsupported);
+            }
+            if store.params().name != keys.params.name {
+                return Err(RegisterError::ParamMismatch {
+                    expected: store.params().name,
+                    got: keys.params.name,
+                });
+            }
+        }
+        for store in stores.iter() {
+            store.register_uploaded(session, keys.clone())?;
+        }
+        self.shared
+            .uploaded
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(session, keys);
+        Ok(stores.len())
     }
 
     /// Admit, route, and submit one encrypted query for `session` (plain
@@ -727,6 +786,26 @@ impl Cluster {
                 migrated += 1;
             }
         }
+        // Replay client uploads: uploaded keys must be resident (and
+        // pinned) on EVERY store in the new topology — the migration
+        // loop above only preserves one copy, and factory-minted new
+        // shards start empty. Same `Arc` everywhere, so no material is
+        // copied and batch grouping by pointer identity still holds
+        // per-shard. Infallible by construction: `register_session`
+        // validated capability and params cluster-wide before recording,
+        // and the factory mints stores of the same configuration.
+        {
+            let uploaded =
+                self.shared.uploaded.lock().unwrap_or_else(PoisonError::into_inner);
+            for (&session, keys) in uploaded.iter() {
+                for store in &stores {
+                    store
+                        .register_uploaded(session, keys.clone())
+                        .expect("uploaded keys were validated cluster-wide at registration");
+                }
+            }
+        }
+
         // Account stats of stores that are going away (shrink).
         for dropped in stores_guard.iter().skip(new_shards) {
             let st = dropped.stats();

@@ -126,6 +126,10 @@ pub struct MetricsSnapshot {
     /// Key sets resident in the store at snapshot time (a gauge: merge
     /// sums it across shard-local stores into cluster-wide residency).
     pub key_resident: usize,
+    /// Resident key sets that are *pinned* (client-uploaded material the
+    /// server cannot re-derive; capacity eviction skips them). Gauge,
+    /// summed across shards like `key_resident`.
+    pub key_pinned: usize,
     /// Batch executions that panicked inside the backend and were caught
     /// at the worker's `catch_unwind` boundary.
     pub exec_failures: u64,
@@ -206,6 +210,7 @@ impl MetricsSnapshot {
             out.key_evictions += s.key_evictions;
             out.key_regenerations += s.key_regenerations;
             out.key_resident += s.key_resident;
+            out.key_pinned += s.key_pinned;
             out.latency_samples_ms.extend_from_slice(&s.latency_samples_ms);
             out.queue_samples_ms.extend_from_slice(&s.queue_samples_ms);
             out.batch_size_samples.extend_from_slice(&s.batch_size_samples);
@@ -368,6 +373,7 @@ impl Metrics {
             key_evictions: 0,
             key_regenerations: 0,
             key_resident: 0,
+            key_pinned: 0,
             latency_samples_ms: g.latencies_ms.samples().to_vec(),
             queue_samples_ms: g.queue_ms.samples().to_vec(),
             batch_size_samples: g.batch_sizes.samples().to_vec(),

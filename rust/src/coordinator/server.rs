@@ -546,6 +546,7 @@ impl Coordinator {
         s.key_evictions = ks.evictions;
         s.key_regenerations = ks.regenerations;
         s.key_resident = ks.resident;
+        s.key_pinned = ks.pinned;
         s.fft_threads = self.fft_threads;
         s.blocked_fft = crate::tfhe::fft::blocked_for_poly(self.plan.params.big_n);
         s

@@ -29,6 +29,11 @@
 //!   engine shards behind a placement router with a bounded shared
 //!   admission queue, shard-local key stores with live reshard +
 //!   cache migration, and merged metrics.
+//! - [`wire`] — the network front door: versioned binary serialization
+//!   for ciphertexts and server keys (chunked streaming key upload), a
+//!   framed length-prefixed TCP protocol over `std::net`, and the
+//!   blocking `wire::Client` remote clients use to upload keys and
+//!   submit encrypted work.
 //! - [`eval`] — regenerates every table and figure of the paper.
 //! - [`obs`] — zero-dependency observability: flight-recorder tracing,
 //!   mergeable per-stage timing histograms, and cost-model drift
@@ -64,4 +69,5 @@ pub mod runtime;
 pub mod tenant;
 pub mod coordinator;
 pub mod cluster;
+pub mod wire;
 pub mod eval;

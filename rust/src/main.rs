@@ -9,6 +9,7 @@
 //!         [--queue-depth D] [--workers N] [--fft-threads F]
 //!         [--requests R] [--tenants T] [--key-cache-cap C]
 //!         [--chaos [SEED]] [--trace FILE] [--metrics-interval SECS]
+//!         [--listen ADDR [--listen-secs S]]
 //!       start a sharded serving cluster (S coordinator shards behind a
 //!       router; P in round-robin|least-outstanding|consistent-hash;
 //!       D bounds the shared admission queue, 0 = unbounded) on the
@@ -24,6 +25,10 @@
 //!       panics, latency spikes, resolve failures) into the native
 //!       backend and key stores, drives every request under a deadline,
 //!       and reports what the supervision layer did about it.
+//!       --listen ADDR binds the framed-TCP wire front end on ADDR and
+//!       serves remote clients (see examples/remote_client.rs) instead of
+//!       driving requests in-process; --listen-secs bounds the serving
+//!       window so scripted runs terminate (0 = run until killed).
 //!       --trace FILE turns the observability hooks on and writes the
 //!       flight-recorder ring buffers as Chrome trace-event JSON; either
 //!       of --trace/--metrics-interval also adds the per-stage latency
@@ -308,6 +313,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if legacy_exec { "legacy node-walk executor" } else { "schedule-driven executor" },
         shards,
     );
+    // `--listen ADDR` swaps the in-process driver for the wire front end:
+    // bind a framed-TCP listener over this cluster and serve remote
+    // clients instead of driving requests ourselves. `--listen-secs S`
+    // bounds the serving window so scripted runs terminate.
+    if let Some(listen) = args.flag("listen") {
+        if listen == "true" {
+            bail!("--listen needs a bind address (e.g. --listen 127.0.0.1:7171)")
+        }
+        let listen_secs = args.usize_flag("listen-secs", 0);
+        let cluster = Arc::new(cluster);
+        let mut server = taurus::wire::WireServer::start(
+            cluster.clone(),
+            listen,
+            taurus::wire::WireServerOptions::default(),
+        )?;
+        println!(
+            "wire listener  : {} (protocol v{}, {} per-session key uploads)",
+            server.local_addr(),
+            taurus::wire::proto::PROTO_VERSION,
+            if cluster.supports_register() { "accepts" } else { "rejects" },
+        );
+        if listen_secs == 0 {
+            println!("serving until killed (pass --listen-secs S for a bounded window)");
+            loop {
+                std::thread::park();
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_secs(listen_secs as u64));
+        server.shutdown();
+        if let Ok(mut c) = Arc::try_unwrap(cluster) {
+            c.shutdown();
+        }
+        return Ok(());
+    }
     println!(
         "serving {requests} encrypted requests: {shards} shards x {workers} workers x {fft_threads} fft thread(s), {} routing, admission depth {}, {tenants} session(s)",
         policy.name(),

@@ -282,6 +282,18 @@ impl KeyStore for FaultyStore {
         self.inner.register(session, keys)
     }
 
+    fn supports_register(&self) -> bool {
+        self.inner.supports_register()
+    }
+
+    fn register_uploaded(
+        &self,
+        session: SessionId,
+        keys: Arc<ServerKeys>,
+    ) -> Result<KeyHandle, crate::tenant::RegisterError> {
+        self.inner.register_uploaded(session, keys)
+    }
+
     fn evict(&self, session: SessionId) -> Option<Arc<ServerKeys>> {
         self.inner.evict(session)
     }

@@ -45,6 +45,36 @@ use crate::tfhe::{SecretKeys, ServerKeys};
 
 pub use crate::tfhe::keycache::CacheStats as KeyStoreStats;
 
+/// Typed failure of [`KeyStore::register_uploaded`] — the client-upload
+/// path must never panic an acceptor thread or silently accept keys a
+/// store cannot serve, so rejection is a value the wire layer maps to a
+/// protocol status code.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegisterError {
+    /// The store serves one fixed key set ([`StaticKeys`]) and cannot
+    /// hold per-session uploaded material.
+    Unsupported,
+    /// The uploaded keys were generated under a different parameter set
+    /// than the store serves.
+    ParamMismatch { expected: &'static str, got: &'static str },
+}
+
+impl fmt::Display for RegisterError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RegisterError::Unsupported => write!(
+                f,
+                "store serves one global key set and does not accept per-session uploads"
+            ),
+            RegisterError::ParamMismatch { expected, got } => {
+                write!(f, "uploaded keys use parameter set {got}, store serves {expected}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegisterError {}
+
 /// A client session. Placement (consistent-hash affinity) and key
 /// resolution both key off this id, so a session's requests land on the
 /// shard where its server keys are resident.
@@ -128,6 +158,29 @@ pub trait KeyStore: Send + Sync {
     /// Install externally supplied keys for a session (client-uploaded
     /// material, or an entry migrated from another shard's store).
     fn register(&self, session: SessionId, keys: Arc<ServerKeys>) -> KeyHandle;
+
+    /// Whether this store can hold per-session client-uploaded key
+    /// material. Admission paths (the wire protocol's key-upload
+    /// handler) must check this *before* calling
+    /// [`Self::register_uploaded`]; stores that answer `false` reject
+    /// uploads typed instead of panicking.
+    fn supports_register(&self) -> bool {
+        false
+    }
+
+    /// Install **client-uploaded** keys for a session. Unlike
+    /// [`Self::register`] (the trusted migration path) this validates
+    /// and *pins* the material: the store may never regenerate it —
+    /// uploaded keys are not derivable server-side — so eviction under
+    /// capacity pressure skips the entry and a resolve that lost it
+    /// fails typed rather than minting different bits.
+    fn register_uploaded(
+        &self,
+        _session: SessionId,
+        _keys: Arc<ServerKeys>,
+    ) -> Result<KeyHandle, RegisterError> {
+        Err(RegisterError::Unsupported)
+    }
 
     /// Remove a session's entry (returning it, e.g. to hand to another
     /// shard's store during reshard migration). `None` when not resident.
@@ -267,6 +320,18 @@ impl KeyStore for SeededTenantStore {
         KeyHandle { session, keys: self.cache.get(&self.params, seed) }
     }
 
+    /// Admission-path resolve: a session whose client-uploaded keys are
+    /// no longer resident fails typed
+    /// ([`keycache::KeyCacheError::RegisteredEvicted`]) instead of
+    /// silently re-deriving *different* keys from the master seed.
+    fn try_resolve(&self, session: SessionId) -> Result<KeyHandle, String> {
+        let seed = self.seed_of(session);
+        self.cache
+            .try_get(&self.params, seed)
+            .map(|keys| KeyHandle { session, keys })
+            .map_err(|e| e.to_string())
+    }
+
     fn register(&self, session: SessionId, keys: Arc<ServerKeys>) -> KeyHandle {
         assert_eq!(
             keys.params.name, self.params.name,
@@ -275,6 +340,26 @@ impl KeyStore for SeededTenantStore {
         let seed = self.seed_of(session);
         self.cache.insert(&self.params, seed, keys.clone());
         KeyHandle { session, keys }
+    }
+
+    fn supports_register(&self) -> bool {
+        true
+    }
+
+    fn register_uploaded(
+        &self,
+        session: SessionId,
+        keys: Arc<ServerKeys>,
+    ) -> Result<KeyHandle, RegisterError> {
+        if keys.params.name != self.params.name {
+            return Err(RegisterError::ParamMismatch {
+                expected: self.params.name,
+                got: keys.params.name,
+            });
+        }
+        let seed = self.seed_of(session);
+        self.cache.insert_pinned(&self.params, seed, keys.clone());
+        Ok(KeyHandle { session, keys })
     }
 
     fn evict(&self, session: SessionId) -> Option<Arc<ServerKeys>> {
@@ -389,6 +474,68 @@ mod tests {
         let st = b.stats();
         assert_eq!((st.hits, st.misses, st.regenerations), (1, 0, 0));
         assert_eq!(b.resident(), vec![SessionId(7)]);
+    }
+
+    #[test]
+    fn static_keys_reject_uploads_typed_instead_of_panicking() {
+        let mut rng = Rng::new(62);
+        let sk = SecretKeys::generate(&TEST1, &mut rng);
+        let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+        let store = StaticKeys::new(keys.clone());
+        assert!(!store.supports_register(), "single-key stores cannot hold uploads");
+        assert_eq!(
+            store.register_uploaded(SessionId(1), keys).unwrap_err(),
+            RegisterError::Unsupported
+        );
+    }
+
+    #[test]
+    fn uploaded_keys_are_pinned_and_never_silently_regenerated() {
+        // The original bug: register() + LRU flood + resolve() handed
+        // back keys re-derived from the master seed — different bits than
+        // the client uploaded. register_uploaded pins the entry instead.
+        let store = SeededTenantStore::new(&TEST1, 0xD00D, 2);
+        assert!(store.supports_register());
+        // "Client" keys: any material the master seed cannot re-derive.
+        let uploaded = keycache::get(&TEST1, 0x5150).server.clone();
+        let h = store.register_uploaded(SessionId(9), uploaded.clone()).expect("accepted");
+        assert!(Arc::ptr_eq(&h.keys, &uploaded));
+
+        // Flood past capacity with seeded tenants.
+        for s in 0..4u64 {
+            let _ = store.resolve(SessionId(s));
+        }
+        let resolved = store.try_resolve(SessionId(9)).expect("still resident");
+        assert!(
+            Arc::ptr_eq(&resolved.keys, &uploaded),
+            "resolve must return the uploaded Arc, not a re-derivation"
+        );
+        let st = store.stats();
+        assert_eq!(st.regenerations, 0, "no registered session ever regenerates");
+        assert_eq!(st.pinned, 1);
+
+        // After an explicit evict (migration gap) the resolve fails typed.
+        let moved = store.evict(SessionId(9)).expect("movable");
+        assert!(Arc::ptr_eq(&moved, &uploaded));
+        let err = store.try_resolve(SessionId(9)).unwrap_err();
+        assert!(err.contains("client-registered"), "typed refusal, got: {err}");
+        assert_eq!(store.stats().regenerations, 0);
+
+        // Migration re-import via the trusted path re-pins.
+        store.register(SessionId(9), moved);
+        let back = store.try_resolve(SessionId(9)).expect("re-imported");
+        assert!(Arc::ptr_eq(&back.keys, &uploaded));
+        assert_eq!(store.stats().pinned, 1);
+    }
+
+    #[test]
+    fn register_uploaded_rejects_mismatched_params() {
+        let store = SeededTenantStore::new(&TEST1, 0xD00D, 2);
+        let wrong = keycache::get(&crate::params::TEST2, 0x77).server.clone();
+        assert_eq!(
+            store.register_uploaded(SessionId(3), wrong).unwrap_err(),
+            RegisterError::ParamMismatch { expected: TEST1.name, got: crate::params::TEST2.name }
+        );
     }
 
     #[test]

@@ -25,6 +25,7 @@
 //!   keys.
 
 use std::collections::{HashMap, HashSet};
+use std::fmt;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::keygen::{fork_seed, KeygenOptions};
@@ -110,11 +111,43 @@ pub struct CacheStats {
     pub regenerations: u64,
     /// Entries currently resident.
     pub resident: usize,
+    /// Resident entries that are *pinned* (client-uploaded via
+    /// [`BoundedKeyCache::insert_pinned`]): capacity eviction skips them
+    /// because the server cannot re-derive uploaded material.
+    pub pinned: usize,
 }
+
+/// Typed failure of a fallible cache lookup ([`BoundedKeyCache::try_get`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KeyCacheError {
+    /// The seed was registered with externally supplied (client-uploaded)
+    /// keys that are no longer resident — an explicit [`BoundedKeyCache::remove`]
+    /// (reshard migration) took them. Regenerating from the seed would
+    /// mint *different* bits than the client uploaded, so every result
+    /// would decrypt to garbage; the lookup fails typed instead.
+    RegisteredEvicted { seed: u64 },
+}
+
+impl fmt::Display for KeyCacheError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            KeyCacheError::RegisteredEvicted { seed } => write!(
+                f,
+                "seed {seed:#x} holds client-registered keys that are not resident; \
+                 regeneration would mint different key bits (re-register the uploaded keys)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for KeyCacheError {}
 
 struct BoundedEntry {
     keys: Arc<ServerKeys>,
     last_used: u64,
+    /// Pinned entries hold client-uploaded material the server cannot
+    /// re-derive; [`BoundedInner::enforce_capacity`] never evicts them.
+    pinned: bool,
 }
 
 #[derive(Default)]
@@ -132,6 +165,14 @@ struct BoundedInner {
     /// bookkeeping that makes the capacity-pressure signal exact, ~6
     /// orders of magnitude below the key material it meters.
     seen: HashSet<u64>,
+    /// Seeds whose entries were installed via [`BoundedKeyCache::insert_pinned`]
+    /// — client-uploaded key material the server cannot re-derive. The
+    /// marker outlives the entry itself: after an explicit `remove`
+    /// (reshard migration) a lookup for the seed fails typed
+    /// ([`KeyCacheError::RegisteredEvicted`]) instead of silently
+    /// regenerating different bits, and a later `insert` (migration
+    /// re-import) re-pins the entry.
+    registered: HashSet<u64>,
     hits: u64,
     misses: u64,
     evictions: u64,
@@ -154,15 +195,24 @@ impl BoundedInner {
         }
     }
 
-    /// Drop least-recently-used entries until `capacity` holds.
+    /// Drop least-recently-used **unpinned** entries until `capacity`
+    /// holds. Pinned (client-uploaded) entries are never candidates — the
+    /// server cannot regenerate them, so evicting one would turn every
+    /// later request for that tenant into silent garbage. When pinned
+    /// entries alone exceed capacity the cache runs over budget rather
+    /// than drop unrecoverable material (the residency bound applies to
+    /// derivable entries; uploaded keys are client-owned residency).
     fn enforce_capacity(&mut self, capacity: usize) {
         while self.entries.len() > capacity {
             let lru = self
                 .entries
                 .iter()
+                .filter(|(_, e)| !e.pinned)
                 .min_by_key(|(_, e)| e.last_used)
-                .map(|(&k, _)| k)
-                .expect("non-empty over capacity");
+                .map(|(&k, _)| k);
+            let Some(lru) = lru else {
+                break; // everything resident is pinned: nothing evictable
+            };
             self.entries.remove(&lru);
             self.evictions += 1;
         }
@@ -193,7 +243,21 @@ impl BoundedKeyCache {
     /// generate in parallel; racing misses for the same seed may generate
     /// twice, but determinism makes both results bitwise-identical and
     /// the first insert wins.
+    ///
+    /// Panics on [`KeyCacheError::RegisteredEvicted`] — a seed that holds
+    /// client-registered keys can never be served by regeneration. The
+    /// serving path goes through [`Self::try_get`] and sheds the request
+    /// typed instead.
     pub fn get(&self, p: &ParamSet, seed: u64) -> Arc<ServerKeys> {
+        self.try_get(p, seed).unwrap_or_else(|e| panic!("BoundedKeyCache::get: {e}"))
+    }
+
+    /// Fallible [`Self::get`]: a miss for a seed whose keys were
+    /// registered (client-uploaded) and explicitly removed fails with
+    /// [`KeyCacheError::RegisteredEvicted`] instead of minting different
+    /// bits. The failed lookup counts as neither miss nor regeneration —
+    /// no keys were generated.
+    pub fn try_get(&self, p: &ParamSet, seed: u64) -> Result<Arc<ServerKeys>, KeyCacheError> {
         {
             let mut g = self.inner.lock().expect("bounded key cache poisoned");
             g.bind_param(p.name);
@@ -202,7 +266,10 @@ impl BoundedKeyCache {
                 e.last_used = tick;
                 let keys = e.keys.clone();
                 g.hits += 1;
-                return keys;
+                return Ok(keys);
+            }
+            if g.registered.contains(&seed) {
+                return Err(KeyCacheError::RegisteredEvicted { seed });
             }
             g.misses += 1;
             if g.seen.contains(&seed) {
@@ -221,29 +288,53 @@ impl BoundedKeyCache {
                 e.keys.clone()
             }
             None => {
-                g.entries
-                    .insert(seed, BoundedEntry { keys: generated.clone(), last_used: tick });
+                g.entries.insert(
+                    seed,
+                    BoundedEntry { keys: generated.clone(), last_used: tick, pinned: false },
+                );
                 generated
             }
         };
         g.enforce_capacity(self.capacity);
-        keys
+        Ok(keys)
     }
 
-    /// Install externally supplied keys (migration import / client
-    /// upload). Counts as neither hit nor miss; may displace the LRU
-    /// entry if the cache is full.
+    /// Install externally supplied keys (migration import). Counts as
+    /// neither hit nor miss; may displace the LRU entry if the cache is
+    /// full. A seed previously installed via [`Self::insert_pinned`]
+    /// re-pins here — pinnedness survives a remove/insert migration
+    /// round-trip, so uploaded keys stay unevictable on their new shard.
     pub fn insert(&self, p: &ParamSet, seed: u64, keys: Arc<ServerKeys>) {
         let mut g = self.inner.lock().expect("bounded key cache poisoned");
         g.bind_param(p.name);
         let tick = g.touch();
         g.seen.insert(seed);
-        g.entries.insert(seed, BoundedEntry { keys, last_used: tick });
+        let pinned = g.registered.contains(&seed);
+        g.entries.insert(seed, BoundedEntry { keys, last_used: tick, pinned });
+        g.enforce_capacity(self.capacity);
+    }
+
+    /// Install client-uploaded keys and **pin** them: capacity pressure
+    /// never evicts the entry ([`BoundedInner::enforce_capacity`] skips
+    /// pinned entries), and once the pin marker exists a lookup after an
+    /// explicit [`Self::remove`] fails typed instead of regenerating —
+    /// the server has no way to re-derive uploaded material.
+    pub fn insert_pinned(&self, p: &ParamSet, seed: u64, keys: Arc<ServerKeys>) {
+        let mut g = self.inner.lock().expect("bounded key cache poisoned");
+        g.bind_param(p.name);
+        let tick = g.touch();
+        g.seen.insert(seed);
+        g.registered.insert(seed);
+        g.entries.insert(seed, BoundedEntry { keys, last_used: tick, pinned: true });
         g.enforce_capacity(self.capacity);
     }
 
     /// Remove an entry deliberately (reshard migration hands it to
     /// another shard's cache). Not counted as a capacity eviction.
+    /// Pinned entries ARE returned — migration must be able to move
+    /// uploaded keys — but the pin *marker* stays, so a lookup on this
+    /// cache between the remove and any re-insert fails typed rather
+    /// than regenerating wrong bits.
     pub fn remove(&self, seed: u64) -> Option<Arc<ServerKeys>> {
         let mut g = self.inner.lock().expect("bounded key cache poisoned");
         g.entries.remove(&seed).map(|e| e.keys)
@@ -263,6 +354,7 @@ impl BoundedKeyCache {
             evictions: g.evictions,
             regenerations: g.regenerations,
             resident: g.entries.len(),
+            pinned: g.entries.values().filter(|e| e.pinned).count(),
         }
     }
 }
@@ -306,7 +398,10 @@ mod tests {
         let c = BoundedKeyCache::new(2);
         let k1 = c.get(&TEST1, 1);
         let _k2 = c.get(&TEST1, 2);
-        assert_eq!(c.stats(), CacheStats { hits: 0, misses: 2, evictions: 0, regenerations: 0, resident: 2 });
+        assert_eq!(
+            c.stats(),
+            CacheStats { hits: 0, misses: 2, evictions: 0, regenerations: 0, resident: 2, pinned: 0 }
+        );
 
         // Touch 1 so 2 becomes the LRU, then insert 3: 2 is displaced.
         let k1_again = c.get(&TEST1, 1);
@@ -352,5 +447,47 @@ mod tests {
         let mut res = c.resident();
         res.sort_unstable();
         assert_eq!(res, vec![32, 33], "seed 31 was the LRU at the third insert");
+    }
+
+    #[test]
+    fn pinned_entries_survive_lru_floods_and_never_regenerate() {
+        // Regression for the silent-regeneration bug: client-uploaded
+        // keys must survive arbitrary capacity pressure with the same
+        // Arc, and `regenerations` must stay 0 for the pinned seed.
+        let c = BoundedKeyCache::new(2);
+        let uploaded = get(&TEST1, 100).server.clone();
+        c.insert_pinned(&TEST1, 100, uploaded.clone());
+
+        // Flood the LRU well past capacity with seeded tenants.
+        for seed in 1..=4 {
+            let _ = c.get(&TEST1, seed);
+        }
+        let st = c.stats();
+        assert_eq!(st.pinned, 1, "the uploaded entry is still resident");
+        assert_eq!(st.regenerations, 0, "no seed was generated twice");
+        let resolved = c.get(&TEST1, 100);
+        assert!(Arc::ptr_eq(&resolved, &uploaded), "pinned entry keeps its Arc");
+
+        // Evictions only ever hit the unpinned seeded entries.
+        assert!(c.resident().contains(&100));
+        assert!(c.stats().evictions >= 1, "unpinned entries were displaced");
+
+        // An explicit remove (reshard migration) keeps the pin marker:
+        // a lookup in the gap fails typed instead of minting wrong bits.
+        let moved = c.remove(100).expect("pinned entries are movable");
+        assert!(Arc::ptr_eq(&moved, &uploaded));
+        assert_eq!(
+            c.try_get(&TEST1, 100),
+            Err(KeyCacheError::RegisteredEvicted { seed: 100 }),
+            "registered seed never regenerates"
+        );
+        let st = c.stats();
+        assert_eq!(st.regenerations, 0, "the failed lookup minted nothing");
+
+        // Re-import on the destination path (plain insert) re-pins.
+        c.insert(&TEST1, 100, moved.clone());
+        let back = c.get(&TEST1, 100);
+        assert!(Arc::ptr_eq(&back, &moved));
+        assert_eq!(c.stats().pinned, 1, "migration re-import re-pins");
     }
 }

@@ -1,0 +1,264 @@
+//! The blocking remote client: connect, upload keys, submit, decrypt at
+//! home.
+//!
+//! A [`Client`] is single-threaded and blocking — the shape of
+//! `examples/remote_client.rs` — but the protocol underneath is
+//! pipelined: [`Client::send_submit`] returns a request id immediately
+//! and [`Client::wait`] collects RESULTs in whatever order the server
+//! finishes them, stashing out-of-order arrivals until their id is asked
+//! for. Every server rejection surfaces as
+//! [`WireError::Rejected`] carrying the wire [`Status`] and reason —
+//! including [`Status::RegisterUnsupported`] from a key upload against a
+//! single-key cluster, after which the same connection keeps submitting.
+
+use std::collections::HashMap;
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::params::{self, ParamSet};
+use crate::tenant::SessionId;
+use crate::tfhe::{LweCiphertext, ServerKeys};
+
+use super::codec::{
+    put_str, put_u64, read_ciphertexts, write_ciphertexts, write_key_header, KeyChunker, Reader,
+    DEFAULT_CHUNK_BYTES,
+};
+use super::proto::{
+    read_frame, write_frame, Status, PROTO_VERSION, TAG_ACK, TAG_HELLO, TAG_HELLO_OK,
+    TAG_KEY_BEGIN, TAG_KEY_CHUNK, TAG_KEY_COMMIT, TAG_RESULT, TAG_SUBMIT,
+};
+use super::WireError;
+
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    params: &'static ParamSet,
+    next_id: u64,
+    /// RESULTs that arrived while waiting for a different id.
+    pending: HashMap<u64, Result<Vec<LweCiphertext>, (Status, String)>>,
+}
+
+impl Client {
+    /// Connect and handshake. The HELLO_OK reply names the server's
+    /// parameter set, resolved locally via [`params::by_name`] — the
+    /// client then encrypts with exactly the shapes the server serves.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client, WireError> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone()?);
+        let mut client = Client {
+            writer: stream,
+            reader,
+            params: &params::TEST1, // placeholder until HELLO_OK lands
+            next_id: 1,
+            pending: HashMap::new(),
+        };
+        write_frame(&mut client.writer, TAG_HELLO, &[PROTO_VERSION])?;
+        let frame = client.read_one()?;
+        if frame.tag == TAG_ACK {
+            // The server refused the handshake (version mismatch).
+            let (_, status, reason) = decode_ack(&frame.body)?;
+            return Err(WireError::Rejected { status, reason });
+        }
+        if frame.tag != TAG_HELLO_OK {
+            return Err(WireError::Malformed(format!(
+                "expected HELLO_OK, got tag {}",
+                frame.tag
+            )));
+        }
+        let mut r = Reader::new(&frame.body);
+        let version = r.u8()?;
+        if version != PROTO_VERSION {
+            return Err(WireError::UnsupportedVersion { got: version });
+        }
+        let name = r.short_str()?;
+        r.expect_eof()?;
+        client.params = params::by_name(&name).ok_or_else(|| {
+            WireError::Malformed(format!("server serves unknown parameter set {name:?}"))
+        })?;
+        Ok(client)
+    }
+
+    /// The parameter set the server announced at handshake.
+    pub fn params(&self) -> &'static ParamSet {
+        self.params
+    }
+
+    /// Upload `keys` for `session`, streaming [`DEFAULT_CHUNK_BYTES`]
+    /// chunks. Blocks until the server acknowledges the commit — after
+    /// `Ok(())` the keys are pinned on every shard store and the session
+    /// is safe to submit under from anywhere.
+    pub fn upload_keys(
+        &mut self,
+        session: impl Into<SessionId>,
+        keys: &ServerKeys,
+    ) -> Result<(), WireError> {
+        self.upload_keys_chunked(session, keys, DEFAULT_CHUNK_BYTES)
+    }
+
+    /// [`Self::upload_keys`] with an explicit chunk-size target (the
+    /// bench sweeps this).
+    pub fn upload_keys_chunked(
+        &mut self,
+        session: impl Into<SessionId>,
+        keys: &ServerKeys,
+        chunk_bytes: usize,
+    ) -> Result<(), WireError> {
+        let session = session.into();
+        let id = self.mint_id();
+        let mut body = Vec::new();
+        put_u64(&mut body, id);
+        put_u64(&mut body, session.0);
+        write_key_header(&mut body, &keys.params);
+        write_frame(&mut self.writer, TAG_KEY_BEGIN, &body)?;
+        // BEGIN is acked before any material moves: capability and
+        // parameter rejections cost one header frame, not a full upload.
+        self.wait_ack(id)?;
+        for chunk in KeyChunker::new(keys, chunk_bytes) {
+            let mut body = Vec::with_capacity(8 + chunk.len());
+            put_u64(&mut body, id);
+            body.extend_from_slice(&chunk);
+            write_frame(&mut self.writer, TAG_KEY_CHUNK, &body)?;
+        }
+        let mut body = Vec::new();
+        put_u64(&mut body, id);
+        write_frame(&mut self.writer, TAG_KEY_COMMIT, &body)?;
+        self.wait_ack(id)
+    }
+
+    /// Submit and block for the result — the one-liner path.
+    pub fn submit(
+        &mut self,
+        session: impl Into<SessionId>,
+        inputs: &[LweCiphertext],
+    ) -> Result<Vec<LweCiphertext>, WireError> {
+        let id = self.send_submit(session, inputs, None)?;
+        self.wait(id)
+    }
+
+    /// Fire one SUBMIT without waiting; returns the request id for a
+    /// later [`Self::wait`]. `deadline` maps to the cluster's per-request
+    /// deadline ([`Status::DeadlineExpired`] on expiry).
+    pub fn send_submit(
+        &mut self,
+        session: impl Into<SessionId>,
+        inputs: &[LweCiphertext],
+        deadline: Option<Duration>,
+    ) -> Result<u64, WireError> {
+        let session = session.into();
+        let id = self.mint_id();
+        let mut body = Vec::new();
+        put_u64(&mut body, id);
+        put_u64(&mut body, session.0);
+        put_u64(&mut body, deadline.map(|d| d.as_millis() as u64).unwrap_or(0));
+        write_ciphertexts(&mut body, inputs);
+        write_frame(&mut self.writer, TAG_SUBMIT, &body)?;
+        Ok(id)
+    }
+
+    /// Block until request `id`'s RESULT arrives (RESULTs for other
+    /// pipelined ids are stashed for their own `wait` calls).
+    pub fn wait(&mut self, id: u64) -> Result<Vec<LweCiphertext>, WireError> {
+        loop {
+            if let Some(done) = self.pending.remove(&id) {
+                return done
+                    .map_err(|(status, reason)| WireError::Rejected { status, reason });
+            }
+            let frame = self.read_one()?;
+            match frame.tag {
+                TAG_RESULT => {
+                    let (got, outcome) = decode_result(&frame.body)?;
+                    self.pending.insert(got, outcome);
+                }
+                TAG_ACK => {
+                    // An ACK while waiting for results is a server-side
+                    // protocol complaint (e.g. BadRequest before close).
+                    let (_, status, reason) = decode_ack(&frame.body)?;
+                    return Err(WireError::Rejected { status, reason });
+                }
+                other => {
+                    return Err(WireError::Malformed(format!(
+                        "expected RESULT, got tag {other}"
+                    )));
+                }
+            }
+        }
+    }
+
+    fn mint_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    fn read_one(&mut self) -> Result<super::proto::Frame, WireError> {
+        read_frame(&mut self.reader)?.ok_or(WireError::Disconnected)
+    }
+
+    /// Wait for the ACK of upload step `id`; RESULTs of in-flight
+    /// submits arriving meanwhile are stashed, not lost.
+    fn wait_ack(&mut self, id: u64) -> Result<(), WireError> {
+        loop {
+            let frame = self.read_one()?;
+            match frame.tag {
+                TAG_ACK => {
+                    let (got, status, reason) = decode_ack(&frame.body)?;
+                    if got != id && got != 0 {
+                        return Err(WireError::Malformed(format!(
+                            "ack for id {got} while waiting on {id}"
+                        )));
+                    }
+                    if status != Status::Ok {
+                        return Err(WireError::Rejected { status, reason });
+                    }
+                    return Ok(());
+                }
+                TAG_RESULT => {
+                    let (got, outcome) = decode_result(&frame.body)?;
+                    self.pending.insert(got, outcome);
+                }
+                other => {
+                    return Err(WireError::Malformed(format!(
+                        "expected ACK, got tag {other}"
+                    )));
+                }
+            }
+        }
+    }
+}
+
+fn decode_status(r: &mut Reader) -> Result<Status, WireError> {
+    let raw = r.u8()?;
+    Status::from_u8(raw)
+        .ok_or_else(|| WireError::Malformed(format!("unknown status code {raw}")))
+}
+
+/// ACK body: `id u64, status u8, reason str`.
+fn decode_ack(body: &[u8]) -> Result<(u64, Status, String), WireError> {
+    let mut r = Reader::new(body);
+    let id = r.u64()?;
+    let status = decode_status(&mut r)?;
+    let reason = r.string()?;
+    r.expect_eof()?;
+    Ok((id, status, reason))
+}
+
+/// RESULT body: `id u64, status u8`, then ciphertexts (Ok) or a reason
+/// string (error).
+fn decode_result(
+    body: &[u8],
+) -> Result<(u64, Result<Vec<LweCiphertext>, (Status, String)>), WireError> {
+    let mut r = Reader::new(body);
+    let id = r.u64()?;
+    let status = decode_status(&mut r)?;
+    if status == Status::Ok {
+        let cts = read_ciphertexts(&mut r)?;
+        r.expect_eof()?;
+        Ok((id, Ok(cts)))
+    } else {
+        let reason = r.string()?;
+        r.expect_eof()?;
+        Ok((id, Err((status, reason))))
+    }
+}

@@ -1,0 +1,589 @@
+//! Versioned binary serialization for ciphertexts and server keys.
+//!
+//! Everything is little-endian, length-prefixed, and decoded through
+//! [`Reader`] — a bounds-checked cursor whose every failure is a typed
+//! [`WireError`], never a panic. `f64` planes travel as IEEE-754 bit
+//! patterns (`to_bits`/`from_bits`), so encode→decode is **bitwise**
+//! identity — the same oracle `tfhe::server_keys_bitwise_eq` uses.
+//!
+//! Key material is big (tens to hundreds of MB at the wide widths — see
+//! EXPERIMENTS.md §Widths), so it never travels as one blob. A transfer
+//! is a [key header](write_key_header) naming the parameter set, followed
+//! by self-delimiting **chunks**:
+//!
+//! | kind | payload |
+//! |------|---------|
+//! | `0`  | BSK GGSW run: `start u32, count u32`, then `count` × (re plane, im plane) |
+//! | `1`  | KSK row run: `start u32, count u32`, then `count × ks_level × (n+1)` words |
+//!
+//! Plane and row shapes are *derived from the named parameter set*, never
+//! read from the wire, so a hostile chunk cannot cause an oversized
+//! allocation: [`KeyAssembly`] pre-allocates the exact final layout once
+//! and chunks only fill it. This is the row-granular layout
+//! `ServerKeys::generate_seeded` produces, reused across the socket: the
+//! sender walks its resident keys run by run, the receiver assembles
+//! incrementally, and a WIDE10 key set is never resident twice on either
+//! side.
+
+use crate::params::{self, ParamSet};
+use crate::tfhe::{FourierBsk, FourierGgsw, Ksk, LweCiphertext, ServerKeys};
+
+use super::WireError;
+
+/// Version byte of everything this module writes. Bump on any layout
+/// change; decoders reject other versions typed
+/// ([`WireError::UnsupportedVersion`]).
+pub const CODEC_VERSION: u8 = 1;
+
+/// Leading magic of a key-transfer header.
+pub const KEY_MAGIC: [u8; 4] = *b"TAUK";
+
+/// Hard bound on one ciphertext's word count (mask + body). The largest
+/// shipped parameter set (WIDE10, k·N = 4096) sits orders of magnitude
+/// below this; a hostile length prefix above it is rejected *before* any
+/// allocation.
+pub const MAX_CT_WORDS: usize = 1 << 20;
+
+/// Default chunk payload target: large enough that a WIDE10 BSK moves in
+/// ~100 frames, small enough that neither side buffers more than ~2 MiB
+/// of transient chunk data (and every chunk fits [`super::MAX_FRAME`]).
+pub const DEFAULT_CHUNK_BYTES: usize = 2 << 20;
+
+// ---------------------------------------------------------------------------
+// Primitives.
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked little-endian cursor over a received buffer. All reads
+/// fail typed on truncation; nothing here allocates from wire-controlled
+/// lengths.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Malformed(format!(
+                "truncated: wanted {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Fill a pre-allocated `u64` slice (KSK rows).
+    pub fn fill_u64(&mut self, dst: &mut [u64]) -> Result<(), WireError> {
+        let raw = self.take(dst.len() * 8)?;
+        for (d, s) in dst.iter_mut().zip(raw.chunks_exact(8)) {
+            *d = u64::from_le_bytes(s.try_into().expect("8 bytes"));
+        }
+        Ok(())
+    }
+
+    /// Fill a pre-allocated `f64` slice (Fourier planes), bitwise.
+    pub fn fill_f64(&mut self, dst: &mut [f64]) -> Result<(), WireError> {
+        let raw = self.take(dst.len() * 8)?;
+        for (d, s) in dst.iter_mut().zip(raw.chunks_exact(8)) {
+            *d = f64::from_bits(u64::from_le_bytes(s.try_into().expect("8 bytes")));
+        }
+        Ok(())
+    }
+
+    /// A length-prefixed short string (parameter-set names).
+    pub fn short_str(&mut self) -> Result<String, WireError> {
+        let len = self.u8()? as usize;
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| WireError::Malformed("non-utf8 name".into()))
+    }
+
+    /// A u32-length-prefixed string (status reasons). The length is
+    /// bounded by the frame the buffer came from; truncation fails typed.
+    pub fn string(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| WireError::Malformed("non-utf8 string".into()))
+    }
+
+    /// Everything not yet consumed (a KEY_CHUNK frame's chunk payload).
+    pub fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    /// Assert the buffer is fully consumed — trailing bytes are malformed
+    /// input, not padding.
+    pub fn expect_eof(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Malformed(format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+pub fn put_short_str(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u8::MAX as usize, "short strings only");
+    out.push(s.len() as u8);
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// Ciphertexts.
+// ---------------------------------------------------------------------------
+
+/// `word_count u32, words…` — the full LWE vector (mask + body).
+pub fn write_ciphertext(out: &mut Vec<u8>, ct: &LweCiphertext) {
+    put_u32(out, ct.data.len() as u32);
+    for &w in &ct.data {
+        put_u64(out, w);
+    }
+}
+
+pub fn read_ciphertext(r: &mut Reader) -> Result<LweCiphertext, WireError> {
+    let words = r.u32()? as usize;
+    if words > MAX_CT_WORDS {
+        return Err(WireError::TooLarge { len: words, max: MAX_CT_WORDS });
+    }
+    if words < 2 {
+        return Err(WireError::Malformed(format!(
+            "ciphertext of {words} words (needs at least one mask word and the body)"
+        )));
+    }
+    let mut data = vec![0u64; words];
+    r.fill_u64(&mut data)?;
+    Ok(LweCiphertext { data })
+}
+
+/// `count u32`, then `count` ciphertexts.
+pub fn write_ciphertexts(out: &mut Vec<u8>, cts: &[LweCiphertext]) {
+    put_u32(out, cts.len() as u32);
+    for ct in cts {
+        write_ciphertext(out, ct);
+    }
+}
+
+pub fn read_ciphertexts(r: &mut Reader) -> Result<Vec<LweCiphertext>, WireError> {
+    let count = r.u32()? as usize;
+    // No allocation from `count` alone: grown element by element, each
+    // element bounded, and truncation fails on the first short read.
+    let mut out = Vec::new();
+    for _ in 0..count {
+        out.push(read_ciphertext(r)?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Key transfer: header + chunks.
+// ---------------------------------------------------------------------------
+
+/// Shape of one key transfer, derived from a parameter set. Both sides
+/// compute it from the set named in the header; the redundant copy *on*
+/// the wire is validated against the derivation, so a header claiming
+/// `test1` with WIDE8 shapes is malformed, not trusted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct KeyShape {
+    /// BSK GGSW count (= n).
+    ggsws: usize,
+    /// f64s per GGSW plane: rows × (k+1) × N/2.
+    plane_len: usize,
+    /// KSK row count (= k·N).
+    ksk_rows: usize,
+    /// Words per KSK row: ks_level × (n+1).
+    ksk_row_len: usize,
+}
+
+impl KeyShape {
+    fn of(p: &ParamSet) -> Self {
+        Self {
+            ggsws: p.n,
+            plane_len: p.ggsw_rows() * (p.k + 1) * p.half_n(),
+            ksk_rows: p.long_dim(),
+            ksk_row_len: p.ks_level * (p.n + 1),
+        }
+    }
+}
+
+/// `MAGIC, version u8, param name, ggsws u32, plane_len u32, ksk_rows
+/// u32, ksk_row_len u32`.
+pub fn write_key_header(out: &mut Vec<u8>, p: &ParamSet) {
+    out.extend_from_slice(&KEY_MAGIC);
+    out.push(CODEC_VERSION);
+    put_short_str(out, p.name);
+    let shape = KeyShape::of(p);
+    put_u32(out, shape.ggsws as u32);
+    put_u32(out, shape.plane_len as u32);
+    put_u32(out, shape.ksk_rows as u32);
+    put_u32(out, shape.ksk_row_len as u32);
+}
+
+/// Decode and validate a key header, resolving the named parameter set.
+pub fn read_key_header(r: &mut Reader) -> Result<&'static ParamSet, WireError> {
+    let magic = [r.u8()?, r.u8()?, r.u8()?, r.u8()?];
+    if magic != KEY_MAGIC {
+        return Err(WireError::Malformed(format!("bad key magic {magic:02x?}")));
+    }
+    let version = r.u8()?;
+    if version != CODEC_VERSION {
+        return Err(WireError::UnsupportedVersion { got: version });
+    }
+    let name = r.short_str()?;
+    let p = params::by_name(&name)
+        .ok_or_else(|| WireError::Malformed(format!("unknown parameter set {name:?}")))?;
+    let wire_shape = KeyShape {
+        ggsws: r.u32()? as usize,
+        plane_len: r.u32()? as usize,
+        ksk_rows: r.u32()? as usize,
+        ksk_row_len: r.u32()? as usize,
+    };
+    let derived = KeyShape::of(p);
+    if wire_shape != derived {
+        return Err(WireError::Malformed(format!(
+            "key shape {wire_shape:?} does not match parameter set {name} ({derived:?})"
+        )));
+    }
+    Ok(p)
+}
+
+const CHUNK_BSK: u8 = 0;
+const CHUNK_KSK: u8 = 1;
+
+/// Streams a resident key set as a bounded sequence of chunk payloads —
+/// the client side of a key upload. Each yielded buffer is one
+/// self-delimiting chunk no larger than ~`chunk_bytes` (one GGSW or one
+/// KSK row minimum, however large), so peak transient memory on the
+/// sending side is one chunk, not the key set again.
+pub struct KeyChunker<'a> {
+    keys: &'a ServerKeys,
+    shape: KeyShape,
+    chunk_bytes: usize,
+    next_ggsw: usize,
+    next_ksk_row: usize,
+}
+
+impl<'a> KeyChunker<'a> {
+    pub fn new(keys: &'a ServerKeys, chunk_bytes: usize) -> Self {
+        Self {
+            keys,
+            shape: KeyShape::of(&keys.params),
+            chunk_bytes: chunk_bytes.max(1),
+            next_ggsw: 0,
+            next_ksk_row: 0,
+        }
+    }
+
+    /// Total chunks this chunker will yield (for progress reporting).
+    pub fn total_chunks(&self) -> usize {
+        let per_ggsw = self.shape.plane_len * 16; // re + im planes
+        let ggsws_per = (self.chunk_bytes / per_ggsw).max(1);
+        let bsk_chunks = self.shape.ggsws.div_ceil(ggsws_per);
+        let per_row = self.shape.ksk_row_len * 8;
+        let rows_per = (self.chunk_bytes / per_row).max(1);
+        let ksk_chunks = self.shape.ksk_rows.div_ceil(rows_per);
+        bsk_chunks + ksk_chunks
+    }
+}
+
+impl Iterator for KeyChunker<'_> {
+    type Item = Vec<u8>;
+
+    fn next(&mut self) -> Option<Vec<u8>> {
+        if self.next_ggsw < self.shape.ggsws {
+            let per_ggsw = self.shape.plane_len * 16;
+            let count =
+                (self.chunk_bytes / per_ggsw).max(1).min(self.shape.ggsws - self.next_ggsw);
+            let mut out = Vec::with_capacity(10 + count * per_ggsw);
+            out.push(CHUNK_BSK);
+            put_u32(&mut out, self.next_ggsw as u32);
+            put_u32(&mut out, count as u32);
+            for g in &self.keys.bsk.ggsw[self.next_ggsw..self.next_ggsw + count] {
+                for &v in &g.re {
+                    put_f64(&mut out, v);
+                }
+                for &v in &g.im {
+                    put_f64(&mut out, v);
+                }
+            }
+            self.next_ggsw += count;
+            return Some(out);
+        }
+        if self.next_ksk_row < self.shape.ksk_rows {
+            let per_row = self.shape.ksk_row_len * 8;
+            let count =
+                (self.chunk_bytes / per_row).max(1).min(self.shape.ksk_rows - self.next_ksk_row);
+            let mut out = Vec::with_capacity(10 + count * per_row);
+            out.push(CHUNK_KSK);
+            put_u32(&mut out, self.next_ksk_row as u32);
+            put_u32(&mut out, count as u32);
+            let start = self.next_ksk_row * self.shape.ksk_row_len;
+            let end = start + count * self.shape.ksk_row_len;
+            for &w in &self.keys.ksk.data[start..end] {
+                put_u64(&mut out, w);
+            }
+            self.next_ksk_row += count;
+            return Some(out);
+        }
+        None
+    }
+}
+
+/// Incremental server-side key reassembly. Allocates the final layout
+/// ONCE (zeroed) from the trusted parameter set, then chunks fill rows in
+/// place — the received key set is never resident twice, and no
+/// allocation is sized by wire input. [`Self::finish`] refuses partial
+/// transfers.
+pub struct KeyAssembly {
+    params: &'static ParamSet,
+    shape: KeyShape,
+    ggsw: Vec<FourierGgsw>,
+    ggsw_filled: Vec<bool>,
+    ksk_data: Vec<u64>,
+    ksk_row_filled: Vec<bool>,
+}
+
+impl KeyAssembly {
+    pub fn new(params: &'static ParamSet) -> Self {
+        let shape = KeyShape::of(params);
+        let ggsw = (0..shape.ggsws)
+            .map(|_| FourierGgsw {
+                re: vec![0.0; shape.plane_len],
+                im: vec![0.0; shape.plane_len],
+                rows: params.ggsw_rows(),
+                k1: params.k + 1,
+                nh: params.half_n(),
+            })
+            .collect();
+        Self {
+            params,
+            shape,
+            ggsw,
+            ggsw_filled: vec![false; shape.ggsws],
+            ksk_data: vec![0u64; shape.ksk_rows * shape.ksk_row_len],
+            ksk_row_filled: vec![false; shape.ksk_rows],
+        }
+    }
+
+    pub fn params(&self) -> &'static ParamSet {
+        self.params
+    }
+
+    /// Consume one self-delimiting chunk from `r` (several may share one
+    /// buffer; [`Self::add_chunk`] handles the one-chunk-per-frame case).
+    pub fn add_chunk_from(&mut self, r: &mut Reader) -> Result<(), WireError> {
+        let kind = r.u8()?;
+        let start = r.u32()? as usize;
+        let count = r.u32()? as usize;
+        match kind {
+            CHUNK_BSK => {
+                if count == 0 || start + count > self.shape.ggsws {
+                    return Err(WireError::Malformed(format!(
+                        "bsk chunk [{start}, {start}+{count}) outside {} ggsws",
+                        self.shape.ggsws
+                    )));
+                }
+                for i in start..start + count {
+                    r.fill_f64(&mut self.ggsw[i].re)?;
+                    r.fill_f64(&mut self.ggsw[i].im)?;
+                    self.ggsw_filled[i] = true;
+                }
+            }
+            CHUNK_KSK => {
+                if count == 0 || start + count > self.shape.ksk_rows {
+                    return Err(WireError::Malformed(format!(
+                        "ksk chunk [{start}, {start}+{count}) outside {} rows",
+                        self.shape.ksk_rows
+                    )));
+                }
+                let lo = start * self.shape.ksk_row_len;
+                let hi = lo + count * self.shape.ksk_row_len;
+                r.fill_u64(&mut self.ksk_data[lo..hi])?;
+                for f in &mut self.ksk_row_filled[start..start + count] {
+                    *f = true;
+                }
+            }
+            other => {
+                return Err(WireError::Malformed(format!("unknown chunk kind {other}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume exactly one chunk occupying the whole buffer (one KEY_CHUNK
+    /// frame body).
+    pub fn add_chunk(&mut self, chunk: &[u8]) -> Result<(), WireError> {
+        let mut r = Reader::new(chunk);
+        self.add_chunk_from(&mut r)?;
+        r.expect_eof()
+    }
+
+    /// Chunks still missing, as `(bsk_ggsws, ksk_rows)`.
+    pub fn missing(&self) -> (usize, usize) {
+        (
+            self.ggsw_filled.iter().filter(|f| !**f).count(),
+            self.ksk_row_filled.iter().filter(|f| !**f).count(),
+        )
+    }
+
+    /// Finalize into a [`ServerKeys`]; a transfer with any unfilled GGSW
+    /// or KSK row is malformed.
+    pub fn finish(self) -> Result<ServerKeys, WireError> {
+        let (bsk_missing, ksk_missing) = self.missing();
+        if bsk_missing + ksk_missing != 0 {
+            return Err(WireError::Malformed(format!(
+                "incomplete key transfer: {bsk_missing} ggsws and {ksk_missing} ksk rows missing"
+            )));
+        }
+        Ok(ServerKeys {
+            params: self.params.clone(),
+            bsk: FourierBsk { ggsw: self.ggsw },
+            ksk: Ksk {
+                data: self.ksk_data,
+                long_dim: self.shape.ksk_rows,
+                level: self.params.ks_level,
+                short_len: self.params.n + 1,
+            },
+        })
+    }
+}
+
+/// Whole-blob convenience encode (header + every chunk, concatenated) —
+/// what the property tests round-trip; the serving path streams the same
+/// bytes as separate frames instead.
+pub fn encode_server_keys(keys: &ServerKeys, chunk_bytes: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    write_key_header(&mut out, &keys.params);
+    for chunk in KeyChunker::new(keys, chunk_bytes) {
+        out.extend_from_slice(&chunk);
+    }
+    out
+}
+
+/// Whole-blob decode: header, then chunks until the buffer is exhausted.
+pub fn decode_server_keys(bytes: &[u8]) -> Result<ServerKeys, WireError> {
+    let mut r = Reader::new(bytes);
+    let p = read_key_header(&mut r)?;
+    let mut asm = KeyAssembly::new(p);
+    while r.remaining() > 0 {
+        asm.add_chunk_from(&mut r)?;
+    }
+    asm.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::TEST1;
+    use crate::tfhe::server_keys_bitwise_eq;
+
+    #[test]
+    fn ciphertext_roundtrip_is_bitwise() {
+        let ct = LweCiphertext { data: vec![u64::MAX, 0, 7, 0x0123_4567_89AB_CDEF] };
+        let mut buf = Vec::new();
+        write_ciphertext(&mut buf, &ct);
+        let mut r = Reader::new(&buf);
+        let back = read_ciphertext(&mut r).expect("decodes");
+        r.expect_eof().expect("fully consumed");
+        assert_eq!(back.data, ct.data);
+    }
+
+    #[test]
+    fn ciphertext_rejects_oversized_and_truncated() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, (MAX_CT_WORDS + 1) as u32);
+        match read_ciphertext(&mut Reader::new(&buf)) {
+            Err(WireError::TooLarge { len, max }) => {
+                assert_eq!((len, max), (MAX_CT_WORDS + 1, MAX_CT_WORDS));
+            }
+            other => panic!("wanted TooLarge, got {other:?}"),
+        }
+        let ct = LweCiphertext { data: vec![1, 2, 3] };
+        let mut buf = Vec::new();
+        write_ciphertext(&mut buf, &ct);
+        buf.truncate(buf.len() - 1);
+        assert!(matches!(
+            read_ciphertext(&mut Reader::new(&buf)),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn server_keys_roundtrip_chunked_small_param() {
+        let keys = crate::tfhe::keycache::get(&TEST1, 0xC0DEC).server.clone();
+        // A chunk size small enough to force many chunks of both kinds.
+        let blob = encode_server_keys(&keys, 64 << 10);
+        let back = decode_server_keys(&blob).expect("decodes");
+        assert!(server_keys_bitwise_eq(&keys, &back));
+    }
+
+    #[test]
+    fn incomplete_transfer_fails_typed() {
+        let keys = crate::tfhe::keycache::get(&TEST1, 0xC0DEC).server.clone();
+        let mut asm = KeyAssembly::new(&TEST1);
+        let mut chunks = KeyChunker::new(&keys, 64 << 10);
+        let first = chunks.next().expect("at least one chunk");
+        asm.add_chunk(&first).expect("valid chunk");
+        assert!(matches!(asm.finish(), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn header_shape_mismatch_is_malformed() {
+        let mut buf = Vec::new();
+        write_key_header(&mut buf, &TEST1);
+        // Corrupt the ggsw count (first u32 after the name).
+        let name_end = KEY_MAGIC.len() + 1 + 1 + TEST1.name.len();
+        buf[name_end] ^= 0xFF;
+        assert!(matches!(
+            read_key_header(&mut Reader::new(&buf)),
+            Err(WireError::Malformed(_))
+        ));
+    }
+}

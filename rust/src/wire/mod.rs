@@ -1,0 +1,102 @@
+//! The network front door: serialization + framing + TCP serving.
+//!
+//! The paper's deployment story (§1) is a cloud accelerator clients
+//! offload encrypted work to — HEAX and MATCHA both sit behind exactly
+//! this kind of host interface. Everything below this module is
+//! in-process; this module is the boundary where ciphertexts and key
+//! material become bytes:
+//!
+//! - [`codec`] — versioned binary serialization for
+//!   [`LweCiphertext`](crate::tfhe::LweCiphertext)s and
+//!   [`ServerKeys`](crate::tfhe::ServerKeys). Key material is
+//!   **chunked**: the client streams
+//!   a WIDE10 key set (~185 MB of `f64`/`u64` planes) as a header plus a
+//!   sequence of self-delimiting chunks (one BSK GGSW, or a block of KSK
+//!   rows — the same row-granular layout `generate_seeded` produces), and
+//!   the server assembles incrementally, so the full key set is never
+//!   resident twice on either side of the socket.
+//! - [`proto`] — the framed request/response protocol: every message is
+//!   `[len: u32 LE][tag: u8][body]` with a hard frame-size bound checked
+//!   *before* allocation (a hostile length prefix cannot OOM the server),
+//!   and a typed [`Status`] code mapping every
+//!   [`ClusterError`](crate::cluster::ClusterError) /
+//!   [`RequestError`](crate::coordinator::RequestError) /
+//!   [`RegisterError`](crate::tenant::RegisterError) onto the wire.
+//! - [`server`] — [`WireServer`]: a `std::net::TcpListener` accept loop
+//!   (zero new dependencies) with one thread per connection, bounded
+//!   per-connection admission in front of
+//!   [`Cluster::submit`](crate::cluster::Cluster::submit), pipelined
+//!   id-tagged requests, and key-upload handling that rejects uploads
+//!   typed when the cluster cannot hold them
+//!   ([`Status::RegisterUnsupported`]) — `StaticKeys::register`'s panic
+//!   is unreachable from the network.
+//! - [`client`] — [`Client`]: the blocking remote client. Connects,
+//!   learns the server's parameter set from the HELLO handshake, uploads
+//!   keys chunk-by-chunk, and submits encrypted programs; every server
+//!   rejection surfaces as a typed [`WireError::Rejected`].
+//!
+//! Uploaded keys are the one thing the server cannot regenerate, which is
+//! why the upload path lands in
+//! [`Cluster::register_session`](crate::cluster::Cluster::register_session):
+//! pinned against LRU eviction on every shard store, broadcast so
+//! non-affinity routers stay correct, and replayed across reshards.
+
+pub mod client;
+pub mod codec;
+pub mod proto;
+pub mod server;
+
+pub use client::Client;
+pub use codec::{KeyAssembly, KeyChunker, CODEC_VERSION};
+pub use proto::{Status, MAX_FRAME};
+pub use server::{WireServer, WireServerOptions};
+
+use std::fmt;
+
+/// Every way the wire layer fails, typed. Decode errors are values —
+/// malformed or hostile input must never panic a server thread.
+#[derive(Debug)]
+pub enum WireError {
+    /// Socket-level I/O failure.
+    Io(std::io::Error),
+    /// A frame or payload did not decode: truncated input, a bad
+    /// magic/version, an out-of-bounds index, or trailing garbage.
+    Malformed(String),
+    /// A length prefix exceeded the hard bound ([`MAX_FRAME`] for frames,
+    /// the per-payload bounds in [`codec`]) — rejected *before* any
+    /// allocation.
+    TooLarge { len: usize, max: usize },
+    /// The codec version byte is not ours ([`CODEC_VERSION`]).
+    UnsupportedVersion { got: u8 },
+    /// The server answered with a non-OK [`Status`].
+    Rejected { status: Status, reason: String },
+    /// The peer closed the connection mid-exchange.
+    Disconnected,
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire i/o: {e}"),
+            WireError::Malformed(what) => write!(f, "malformed wire payload: {what}"),
+            WireError::TooLarge { len, max } => {
+                write!(f, "length prefix {len} exceeds bound {max}")
+            }
+            WireError::UnsupportedVersion { got } => {
+                write!(f, "unsupported codec version {got} (this build speaks {CODEC_VERSION})")
+            }
+            WireError::Rejected { status, reason } => {
+                write!(f, "server rejected ({status:?}): {reason}")
+            }
+            WireError::Disconnected => f.write_str("peer disconnected"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}

@@ -1,0 +1,267 @@
+//! The framed request/response protocol.
+//!
+//! Every message on the socket is one **frame**: `[len: u32 LE][tag:
+//! u8][body: len-1 bytes]` — `len` counts the tag plus the body, so an
+//! empty-body message has `len == 1`. Frames are bounded by [`MAX_FRAME`]
+//! and the bound is enforced *before* the body is allocated: a hostile
+//! length prefix yields a typed [`WireError::TooLarge`], never an OOM.
+//!
+//! ## Message flow
+//!
+//! ```text
+//! client                               server
+//!   HELLO {version}          ──▶
+//!                            ◀──  HELLO_OK {version, param name}
+//!   SUBMIT {id, session,     ──▶
+//!           deadline_ms, cts}
+//!                            ◀──  RESULT {id, status, reason | cts}
+//!   KEY_BEGIN {id, session,  ──▶
+//!              key header}
+//!                            ◀──  ACK {id, status, reason}
+//!   KEY_CHUNK {id, chunk}    ──▶      (chunks are not individually
+//!   KEY_CHUNK {id, chunk}    ──▶       acked — §streaming below)
+//!   KEY_COMMIT {id}          ──▶
+//!                            ◀──  ACK {id, status, reason}
+//! ```
+//!
+//! Requests are **pipelined**: every SUBMIT carries a client-chosen `id`
+//! and its RESULT echoes it, so a client may keep many requests in
+//! flight and RESULTs may arrive out of submission order (the server
+//! bounds in-flight requests per connection; excess SUBMITs are rejected
+//! with [`Status::ClusterFull`]).
+//!
+//! **Streaming uploads.** KEY_CHUNK frames deliberately get no per-chunk
+//! acknowledgment — a WIDE10 upload is ~100 chunks and a per-chunk round
+//! trip would turn one upload into 100 latency-bound exchanges. Instead
+//! KEY_BEGIN is acked (capability + parameter validation happens *before*
+//! any material moves), chunk errors latch server-side, and KEY_COMMIT's
+//! ACK reports the first latched error if any chunk was bad.
+
+use std::io::{Read, Write};
+
+use crate::cluster::ClusterError;
+use crate::coordinator::RequestError;
+use crate::tenant::RegisterError;
+
+use super::WireError;
+
+/// Hard bound on one frame's `len` field. Large enough for a maximal
+/// key chunk or a WIDE-width ciphertext batch, small enough that a
+/// hostile prefix cannot balloon a connection thread.
+pub const MAX_FRAME: usize = 8 << 20;
+
+/// Protocol version spoken in HELLO (independent of
+/// [`super::CODEC_VERSION`], which covers payload layout).
+pub const PROTO_VERSION: u8 = 1;
+
+// Frame tags. u8 on the wire; unknown tags are a typed protocol error.
+pub const TAG_HELLO: u8 = 1;
+pub const TAG_HELLO_OK: u8 = 2;
+pub const TAG_SUBMIT: u8 = 3;
+pub const TAG_RESULT: u8 = 4;
+pub const TAG_KEY_BEGIN: u8 = 5;
+pub const TAG_KEY_CHUNK: u8 = 6;
+pub const TAG_KEY_COMMIT: u8 = 7;
+pub const TAG_ACK: u8 = 8;
+
+/// Wire status codes — the typed error surface of the protocol. Every
+/// in-process rejection ([`ClusterError`], [`RequestError`],
+/// [`RegisterError`]) maps onto one of these; EXPERIMENTS.md §Wire
+/// tabulates the mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Status {
+    Ok = 0,
+    /// Cluster-wide admission queue at depth ([`ClusterError::ClusterFull`]).
+    ClusterFull = 1,
+    /// Routed shard's own queue bound fired ([`ClusterError::ShardFull`]).
+    ShardFull = 2,
+    /// Cluster shut down ([`ClusterError::Stopped`]).
+    Stopped = 3,
+    /// Session key resolution failed — includes the pinned-keys case
+    /// where registered material is gone and regeneration is refused.
+    ResolveFailed = 4,
+    /// Batch execution failed after retries ([`RequestError::ExecFailed`]).
+    ExecFailed = 5,
+    /// The request's deadline expired ([`RequestError::RequestTimeout`]).
+    DeadlineExpired = 6,
+    /// The serving shard died before answering ([`RequestError::ShardLost`]).
+    ShardLost = 7,
+    /// The frame or payload did not parse (malformed input, unknown tag,
+    /// protocol-state violation). The server answers where it can and
+    /// closes the connection.
+    BadRequest = 8,
+    /// HELLO or codec version mismatch.
+    UnsupportedVersion = 9,
+    /// Key upload against a cluster whose stores cannot hold per-session
+    /// material ([`RegisterError::Unsupported`]) — the typed rejection
+    /// that keeps `StaticKeys::register`'s panic off the network path.
+    RegisterUnsupported = 10,
+    /// Uploaded keys' parameter set does not match the server's
+    /// ([`RegisterError::ParamMismatch`]).
+    ParamMismatch = 11,
+}
+
+impl Status {
+    pub fn from_u8(v: u8) -> Option<Status> {
+        Some(match v {
+            0 => Status::Ok,
+            1 => Status::ClusterFull,
+            2 => Status::ShardFull,
+            3 => Status::Stopped,
+            4 => Status::ResolveFailed,
+            5 => Status::ExecFailed,
+            6 => Status::DeadlineExpired,
+            7 => Status::ShardLost,
+            8 => Status::BadRequest,
+            9 => Status::UnsupportedVersion,
+            10 => Status::RegisterUnsupported,
+            11 => Status::ParamMismatch,
+            _ => return None,
+        })
+    }
+
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_cluster_error(e: ClusterError) -> Status {
+        match e {
+            ClusterError::ClusterFull => Status::ClusterFull,
+            ClusterError::ShardFull => Status::ShardFull,
+            ClusterError::Stopped => Status::Stopped,
+            ClusterError::ResolveFailed => Status::ResolveFailed,
+        }
+    }
+
+    pub fn from_request_error(e: &RequestError) -> Status {
+        match e {
+            RequestError::ExecFailed { .. } => Status::ExecFailed,
+            RequestError::RequestTimeout => Status::DeadlineExpired,
+            RequestError::ShardLost => Status::ShardLost,
+            RequestError::ResolveFailed { .. } => Status::ResolveFailed,
+        }
+    }
+
+    pub fn from_register_error(e: &RegisterError) -> Status {
+        match e {
+            RegisterError::Unsupported => Status::RegisterUnsupported,
+            RegisterError::ParamMismatch { .. } => Status::ParamMismatch,
+        }
+    }
+}
+
+/// One decoded frame: its tag and body bytes.
+#[derive(Debug)]
+pub struct Frame {
+    pub tag: u8,
+    pub body: Vec<u8>,
+}
+
+/// Write one frame. The frame is assembled into one buffer and written
+/// with a single `write_all`, so concurrent writers serialized by a lock
+/// never interleave partial frames.
+pub fn write_frame(w: &mut impl Write, tag: u8, body: &[u8]) -> Result<(), WireError> {
+    let len = 1 + body.len();
+    assert!(len <= MAX_FRAME, "outgoing frame of {len} bytes exceeds MAX_FRAME");
+    let mut buf = Vec::with_capacity(4 + len);
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.push(tag);
+    buf.extend_from_slice(body);
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. Returns `Ok(None)` on clean EOF (the peer closed
+/// between frames — a normal hangup), [`WireError::Disconnected`] on EOF
+/// *inside* a frame, and [`WireError::TooLarge`] — before any allocation
+/// — when the length prefix exceeds [`MAX_FRAME`].
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Frame>, WireError> {
+    let mut len_buf = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len_buf[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None); // clean EOF between frames
+                }
+                return Err(WireError::Disconnected);
+            }
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::TooLarge { len, max: MAX_FRAME });
+    }
+    if len == 0 {
+        return Err(WireError::Malformed("zero-length frame (missing tag)".into()));
+    }
+    let eof = |e: std::io::Error| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            WireError::Disconnected
+        } else {
+            WireError::Io(e)
+        }
+    };
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag).map_err(eof)?;
+    let mut body = vec![0u8; len - 1];
+    r.read_exact(&mut body).map_err(eof)?;
+    Ok(Some(Frame { tag: tag[0], body }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, TAG_SUBMIT, &[1, 2, 3]).unwrap();
+        let f = read_frame(&mut buf.as_slice()).unwrap().expect("one frame");
+        assert_eq!(f.tag, TAG_SUBMIT);
+        assert_eq!(f.body, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn clean_eof_is_none_and_mid_frame_eof_is_disconnected() {
+        assert!(read_frame(&mut [].as_slice()).unwrap().is_none());
+        let mut buf = Vec::new();
+        write_frame(&mut buf, TAG_ACK, &[9; 100]).unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(matches!(read_frame(&mut buf.as_slice()), Err(WireError::Disconnected)));
+        // EOF inside the 4-byte length prefix is also a disconnect.
+        assert!(matches!(read_frame(&mut [0u8, 1].as_slice()), Err(WireError::Disconnected)));
+    }
+
+    #[test]
+    fn oversized_prefix_rejected_before_allocation() {
+        let bytes = (u32::MAX).to_le_bytes();
+        match read_frame(&mut bytes.as_slice()) {
+            Err(WireError::TooLarge { len, max }) => {
+                assert_eq!(len, u32::MAX as usize);
+                assert_eq!(max, MAX_FRAME);
+            }
+            other => panic!("wanted TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_length_frame_is_malformed() {
+        let bytes = 0u32.to_le_bytes();
+        assert!(matches!(read_frame(&mut bytes.as_slice()), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn status_codes_roundtrip() {
+        for v in 0..=11u8 {
+            let s = Status::from_u8(v).expect("defined");
+            assert_eq!(s.as_u8(), v);
+        }
+        assert!(Status::from_u8(12).is_none());
+    }
+}

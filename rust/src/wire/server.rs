@@ -1,0 +1,454 @@
+//! The TCP serving front end: an accept loop over `std::net` with one
+//! thread per connection, bounded per-connection admission in front of
+//! [`Cluster::submit`], and streaming key-upload assembly.
+//!
+//! Threading model (zero new dependencies — `std::net` + `std::thread`):
+//!
+//! - One **accept thread** (non-blocking listener polled every 10 ms so
+//!   shutdown is prompt) spawns one **connection thread** per client.
+//! - The connection thread owns the read half; the write half sits behind
+//!   a mutex shared with per-request **waiter threads**, each of which
+//!   blocks on one [`ClusterResponse`](crate::cluster::ClusterResponse)
+//!   and writes the RESULT frame when the cluster answers. Frames are
+//!   written atomically (one buffered `write_all` under the lock), so
+//!   pipelined RESULTs interleave by frame, never by byte.
+//! - Admission is bounded twice: the cluster's own `queue_depth` permit
+//!   (surfaced as [`Status::ClusterFull`]) and a per-connection in-flight
+//!   cap ([`WireServerOptions::max_inflight_per_conn`]) that stops one
+//!   connection from monopolizing cluster admission or spawning unbounded
+//!   waiter threads.
+//!
+//! Every rejection is a **typed frame**, never a panic and never a
+//! silent drop: malformed input answers `BadRequest` (then closes, since
+//! framing can no longer be trusted), key uploads against a single-key
+//! cluster answer `RegisterUnsupported` (the connection stays usable for
+//! submits), and cluster/request errors map through
+//! [`Status::from_cluster_error`] / [`Status::from_request_error`].
+
+use std::io::BufReader;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::cluster::Cluster;
+use crate::tenant::SessionId;
+use crate::tfhe::LweCiphertext;
+
+use super::codec::{
+    put_str, put_u64, read_ciphertexts, read_key_header, write_ciphertexts, KeyAssembly, Reader,
+};
+use super::proto::{
+    read_frame, write_frame, Status, PROTO_VERSION, TAG_ACK, TAG_HELLO, TAG_HELLO_OK,
+    TAG_KEY_BEGIN, TAG_KEY_CHUNK, TAG_KEY_COMMIT, TAG_RESULT, TAG_SUBMIT,
+};
+use super::WireError;
+
+#[derive(Debug, Clone)]
+pub struct WireServerOptions {
+    /// In-flight SUBMITs one connection may hold before further SUBMITs
+    /// are rejected with [`Status::ClusterFull`]. Also bounds waiter
+    /// threads per connection.
+    pub max_inflight_per_conn: usize,
+}
+
+impl Default for WireServerOptions {
+    fn default() -> Self {
+        Self { max_inflight_per_conn: 32 }
+    }
+}
+
+/// A running TCP front end over one [`Cluster`]. Dropping without
+/// [`Self::shutdown`] leaks the accept thread for the process lifetime;
+/// servers embedded in tests and `serve --listen` shut down explicitly.
+pub struct WireServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl WireServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// accepting. The cluster is shared — in-process submitters keep
+    /// working alongside remote ones, which is exactly what the loopback
+    /// bitwise-equivalence tests exploit.
+    pub fn start(
+        cluster: Arc<Cluster>,
+        addr: impl ToSocketAddrs,
+        opts: WireServerOptions,
+    ) -> std::io::Result<WireServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let bound = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept_thread = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::spawn(move || {
+                let mut handles: Vec<JoinHandle<()>> = Vec::new();
+                while !stop.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            if let Ok(clone) = stream.try_clone() {
+                                conns
+                                    .lock()
+                                    .unwrap_or_else(PoisonError::into_inner)
+                                    .push(clone);
+                            }
+                            let cluster = cluster.clone();
+                            let opts = opts.clone();
+                            let stop = stop.clone();
+                            handles.push(std::thread::spawn(move || {
+                                serve_connection(cluster, stream, opts, stop)
+                            }));
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        Err(_) => break,
+                    }
+                }
+                for h in handles {
+                    let _ = h.join();
+                }
+            })
+        };
+        Ok(WireServer { addr: bound, stop, conns, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, sever every live connection (unblocking their
+    /// reader threads), and join the accept thread (which joins the
+    /// connection threads). In-flight requests already inside the cluster
+    /// still complete there; only their response frames are lost.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for conn in self.conns.lock().unwrap_or_else(PoisonError::into_inner).drain(..) {
+            let _ = conn.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Frame-writer shared by the connection thread and its waiters.
+type SharedWriter = Arc<Mutex<TcpStream>>;
+
+fn send(writer: &SharedWriter, tag: u8, body: &[u8]) -> Result<(), WireError> {
+    let mut w = writer.lock().unwrap_or_else(PoisonError::into_inner);
+    write_frame(&mut *w, tag, body)
+}
+
+fn send_ack(writer: &SharedWriter, id: u64, status: Status, reason: &str) -> Result<(), WireError> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    body.push(status.as_u8());
+    put_str(&mut body, reason);
+    send(writer, TAG_ACK, &body)
+}
+
+fn send_result_err(
+    writer: &SharedWriter,
+    id: u64,
+    status: Status,
+    reason: &str,
+) -> Result<(), WireError> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    body.push(status.as_u8());
+    put_str(&mut body, reason);
+    send(writer, TAG_RESULT, &body)
+}
+
+fn send_result_ok(
+    writer: &SharedWriter,
+    id: u64,
+    cts: &[LweCiphertext],
+) -> Result<(), WireError> {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    body.push(Status::Ok.as_u8());
+    write_ciphertexts(&mut body, cts);
+    send(writer, TAG_RESULT, &body)
+}
+
+/// One in-progress key upload on a connection. Chunk failures latch here
+/// instead of being acked per chunk; COMMIT reports the first failure.
+struct Upload {
+    id: u64,
+    session: SessionId,
+    asm: KeyAssembly,
+    failed: Option<(Status, String)>,
+}
+
+fn serve_connection(
+    cluster: Arc<Cluster>,
+    stream: TcpStream,
+    opts: WireServerOptions,
+    stop: Arc<AtomicBool>,
+) {
+    // Small frames (HELLO, ACK, narrow-width RESULTs) are latency-bound:
+    // don't let Nagle hold them hostage.
+    let _ = stream.set_nodelay(true);
+    let writer: SharedWriter = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let mut upload: Option<Upload> = None;
+    let mut waiters: Vec<JoinHandle<()>> = Vec::new();
+
+    while !stop.load(Ordering::SeqCst) {
+        let frame = match read_frame(&mut reader) {
+            Ok(Some(f)) => f,
+            Ok(None) => break, // clean hangup
+            Err(e @ (WireError::TooLarge { .. } | WireError::Malformed(_))) => {
+                // Framing can no longer be trusted: answer typed, close.
+                let _ = send_ack(&writer, 0, Status::BadRequest, &e.to_string());
+                break;
+            }
+            Err(_) => break, // disconnect / io error
+        };
+        let close = handle_frame(&cluster, &writer, &opts, &inflight, &mut upload, frame, &mut waiters);
+        if close.is_err() {
+            break;
+        }
+    }
+    // Reap waiter threads: each terminates once the cluster answers its
+    // request (tickets never hang), even if the RESULT write then fails
+    // against the closed socket.
+    for w in waiters {
+        let _ = w.join();
+    }
+}
+
+/// Dispatch one frame. `Err(())` closes the connection (protocol-state
+/// violations and undecodable bodies — the stream can't be resynced);
+/// application-level rejections answer typed and keep the connection.
+fn handle_frame(
+    cluster: &Arc<Cluster>,
+    writer: &SharedWriter,
+    opts: &WireServerOptions,
+    inflight: &Arc<AtomicUsize>,
+    upload: &mut Option<Upload>,
+    frame: super::proto::Frame,
+    waiters: &mut Vec<JoinHandle<()>>,
+) -> Result<(), ()> {
+    let mut r = Reader::new(&frame.body);
+    match frame.tag {
+        TAG_HELLO => {
+            let version = match r.u8().and_then(|v| r.expect_eof().map(|_| v)) {
+                Ok(v) => v,
+                Err(e) => return reject_close(writer, 0, &e),
+            };
+            if version != PROTO_VERSION {
+                let _ = send_ack(
+                    writer,
+                    0,
+                    Status::UnsupportedVersion,
+                    &format!("server speaks protocol {PROTO_VERSION}, client sent {version}"),
+                );
+                return Err(());
+            }
+            let mut body = vec![PROTO_VERSION];
+            super::codec::put_short_str(&mut body, cluster.plan().params.name);
+            send(writer, TAG_HELLO_OK, &body).map_err(|_| ())
+        }
+        TAG_SUBMIT => {
+            let (id, session, deadline_ms, cts) = match parse_submit(&mut r) {
+                Ok(p) => p,
+                Err(e) => return reject_close(writer, 0, &e),
+            };
+            if inflight.load(Ordering::SeqCst) >= opts.max_inflight_per_conn {
+                let _ = send_result_err(
+                    writer,
+                    id,
+                    Status::ClusterFull,
+                    &format!(
+                        "connection in-flight bound ({}) reached",
+                        opts.max_inflight_per_conn
+                    ),
+                );
+                return Ok(());
+            }
+            let submitted = if deadline_ms > 0 {
+                cluster.submit_with_deadline(session, cts, Duration::from_millis(deadline_ms))
+            } else {
+                cluster.submit(session, cts)
+            };
+            match submitted {
+                Err(e) => {
+                    let _ = send_result_err(
+                        writer,
+                        id,
+                        Status::from_cluster_error(e),
+                        &e.to_string(),
+                    );
+                    Ok(())
+                }
+                Ok(resp) => {
+                    inflight.fetch_add(1, Ordering::SeqCst);
+                    let writer = writer.clone();
+                    let inflight = inflight.clone();
+                    waiters.push(std::thread::spawn(move || {
+                        let outcome = resp.wait();
+                        let _ = match &outcome {
+                            Ok(cts) => send_result_ok(&writer, id, cts),
+                            Err(e) => send_result_err(
+                                &writer,
+                                id,
+                                Status::from_request_error(e),
+                                &e.to_string(),
+                            ),
+                        };
+                        inflight.fetch_sub(1, Ordering::SeqCst);
+                    }));
+                    Ok(())
+                }
+            }
+        }
+        TAG_KEY_BEGIN => {
+            let (id, session, p) = match parse_key_begin(&mut r) {
+                Ok(p) => p,
+                Err(e) => return reject_close(writer, 0, &e),
+            };
+            if upload.is_some() {
+                let _ = send_ack(writer, id, Status::BadRequest, "upload already in progress");
+                return Err(());
+            }
+            // Capability and parameter checks happen HERE, before any
+            // key material moves: a StaticKeys cluster rejects typed
+            // (`StaticKeys::register`'s panic is unreachable from the
+            // network), and the connection stays usable for submits.
+            if !cluster.supports_register() {
+                let _ = send_ack(
+                    writer,
+                    id,
+                    Status::RegisterUnsupported,
+                    "cluster serves a single key set and does not accept per-session uploads",
+                );
+                return Ok(());
+            }
+            let served = cluster.plan().params.name;
+            if p.name != served {
+                let _ = send_ack(
+                    writer,
+                    id,
+                    Status::ParamMismatch,
+                    &format!("uploaded keys use parameter set {}, server serves {served}", p.name),
+                );
+                return Ok(());
+            }
+            *upload = Some(Upload {
+                id,
+                session: SessionId(session),
+                asm: KeyAssembly::new(p),
+                failed: None,
+            });
+            send_ack(writer, id, Status::Ok, "").map_err(|_| ())
+        }
+        TAG_KEY_CHUNK => {
+            let id = match r.u64() {
+                Ok(id) => id,
+                Err(e) => return reject_close(writer, 0, &e),
+            };
+            let Some(up) = upload.as_mut() else {
+                let _ = send_ack(writer, id, Status::BadRequest, "chunk outside an upload");
+                return Err(());
+            };
+            if up.id != id {
+                let _ = send_ack(writer, id, Status::BadRequest, "chunk for a different upload");
+                return Err(());
+            }
+            // Chunks are not individually acked (§proto); the first
+            // failure latches and COMMIT reports it.
+            if up.failed.is_none() {
+                if let Err(e) = up.asm.add_chunk(r.rest()) {
+                    up.failed = Some((Status::BadRequest, e.to_string()));
+                }
+            }
+            Ok(())
+        }
+        TAG_KEY_COMMIT => {
+            let id = match r.u64().and_then(|id| r.expect_eof().map(|_| id)) {
+                Ok(id) => id,
+                Err(e) => return reject_close(writer, 0, &e),
+            };
+            let Some(up) = upload.take() else {
+                let _ = send_ack(writer, id, Status::BadRequest, "commit outside an upload");
+                return Err(());
+            };
+            if up.id != id {
+                let _ = send_ack(writer, id, Status::BadRequest, "commit for a different upload");
+                return Err(());
+            }
+            if let Some((status, reason)) = up.failed {
+                let _ = send_ack(writer, id, status, &reason);
+                return Ok(());
+            }
+            let keys = match up.asm.finish() {
+                Ok(k) => Arc::new(k),
+                Err(e) => {
+                    let _ = send_ack(writer, id, Status::BadRequest, &e.to_string());
+                    return Ok(());
+                }
+            };
+            match cluster.register_session(up.session, keys) {
+                Ok(shards) => send_ack(
+                    writer,
+                    id,
+                    Status::Ok,
+                    &format!("registered on {shards} shard stores"),
+                )
+                .map_err(|_| ()),
+                Err(e) => {
+                    let _ =
+                        send_ack(writer, id, Status::from_register_error(&e), &e.to_string());
+                    Ok(())
+                }
+            }
+        }
+        other => {
+            let _ = send_ack(writer, 0, Status::BadRequest, &format!("unknown frame tag {other}"));
+            Err(())
+        }
+    }
+}
+
+/// Answer a body-decode failure typed and signal the caller to close.
+fn reject_close(writer: &SharedWriter, id: u64, e: &WireError) -> Result<(), ()> {
+    let _ = send_ack(writer, id, Status::BadRequest, &e.to_string());
+    Err(())
+}
+
+/// SUBMIT body: `id u64, session u64, deadline_ms u64 (0 = none), cts`.
+fn parse_submit(
+    r: &mut Reader,
+) -> Result<(u64, u64, u64, Vec<LweCiphertext>), WireError> {
+    let id = r.u64()?;
+    let session = r.u64()?;
+    let deadline_ms = r.u64()?;
+    let cts = read_ciphertexts(r)?;
+    r.expect_eof()?;
+    Ok((id, session, deadline_ms, cts))
+}
+
+/// KEY_BEGIN body: `id u64, session u64, key header`.
+fn parse_key_begin(
+    r: &mut Reader,
+) -> Result<(u64, u64, &'static crate::params::ParamSet), WireError> {
+    let id = r.u64()?;
+    let session = r.u64()?;
+    let p = read_key_header(r)?;
+    r.expect_eof()?;
+    Ok((id, session, p))
+}
