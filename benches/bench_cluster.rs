@@ -71,6 +71,7 @@ fn main() {
                         max_batch_wait: Duration::from_micros(500),
                         ..Default::default()
                     },
+                    qos: None,
                 },
             );
             let sim = simulate(cluster.plan(), &cfg);

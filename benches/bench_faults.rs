@@ -111,6 +111,7 @@ fn main() {
                 policy: PlacementPolicy::RoundRobin,
                 queue_depth: None,
                 coordinator,
+                qos: None,
             },
             SupervisorOptions { max_retries: 2, restart_after_failures: 2, ..Default::default() },
         );

@@ -1,0 +1,188 @@
+//! QoS sweep: seed-deterministic Zipf traffic pushed through a 2-shard
+//! seeded-tenant cluster with weighted-fair admission ON vs OFF, at
+//! uniform vs heavy-skew popularity, emitting `BENCH_qos.json` (Jain's
+//! fairness index over per-tenant service and latency, cold-tenant p99,
+//! throttle/rejection counts) so CI tracks multi-tenant isolation across
+//! PRs alongside `BENCH_tenants.json`.
+//!
+//! The row to read: zipf_s=1.2 with QoS off lets the hot tenant's burst
+//! queue ahead of everyone (latency Jain's index sags); the same trace
+//! with token buckets + DRR keeps cold tenants' p99 flat and pushes the
+//! excess into typed `Throttled` rejections instead of queue delay.
+//! EXPERIMENTS.md §Traffic records the interpretation.
+
+#[path = "harness.rs"]
+mod harness;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use harness::section;
+use taurus::cluster::{Cluster, ClusterError, ClusterOptions, PlacementPolicy, StoreFactory};
+use taurus::coordinator::CoordinatorOptions;
+use taurus::ir::builder::ProgramBuilder;
+use taurus::params::TEST1;
+use taurus::tenant::{client_secret, KeyStore, SeededTenantStore, SessionId};
+use taurus::tfhe::pbs::encrypt_message;
+use taurus::tfhe::SecretKeys;
+use taurus::traffic::{LoadPlan, LoadSpec, QosOptions, TokenBucketSpec};
+use taurus::util::json::{arr, num, obj, s, JsonValue};
+use taurus::util::rng::Rng;
+use taurus::util::stats::jains_index;
+
+fn main() {
+    // Serving shape with a KS-dedup opportunity: d = x + y fans out to two
+    // LUTs (one shared key switch, 2 PBS per request).
+    let mut b = ProgramBuilder::new("qos-bench", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.add(x, y);
+    let r0 = b.lut_fn(d, |m| (m + 1) % 16);
+    let r1 = b.lut_fn(d, |m| m ^ 1);
+    b.outputs(&[r0, r1]);
+    let prog = b.finish();
+
+    let master_seed = 0xBE7C_0905u64;
+    let tenants = 8usize;
+    let events = 64usize;
+    let shards = 2usize;
+    // Per-tenant admission contract for the QoS-on legs: generous enough
+    // that uniform traffic sails through, tight enough that the zipf-1.2
+    // hot tenant's burst hits the bucket.
+    let rate_per_s = 100.0f64;
+    let burst = 4.0f64;
+
+    let sks: Vec<SecretKeys> = (0..tenants as u64)
+        .map(|t| client_secret(&TEST1, master_seed, SessionId(t)))
+        .collect();
+
+    section(&format!(
+        "qos sweep ({events} zipf arrivals, {tenants} tenants, {shards} shards, paced to the load plan, TEST1)"
+    ));
+
+    let mut rows: Vec<JsonValue> = Vec::new();
+    for zipf_s in [0.0f64, 1.2] {
+        // Same trace for the on/off pair: the comparison isolates the
+        // admission policy, not the draw.
+        let plan = LoadPlan::from_seed(
+            0x51E5_0905,
+            &LoadSpec { tenants, zipf_s, events, ..Default::default() },
+        );
+        for qos_on in [false, true] {
+            let qos = qos_on.then(|| QosOptions {
+                bucket: Some(TokenBucketSpec::new(rate_per_s, burst)),
+                tenant_queue_depth: 16,
+                ..QosOptions::default()
+            });
+            let factory: StoreFactory = Arc::new(move |_shard| {
+                Arc::new(SeededTenantStore::new(&TEST1, master_seed, tenants))
+                    as Arc<dyn KeyStore>
+            });
+            let mut cluster = Cluster::start_with_store_factory(
+                prog.clone(),
+                factory,
+                ClusterOptions {
+                    shards,
+                    policy: PlacementPolicy::ConsistentHash,
+                    queue_depth: None,
+                    coordinator: CoordinatorOptions {
+                        workers: 1,
+                        batch_capacity: 8,
+                        max_batch_wait: Duration::from_micros(500),
+                        ..Default::default()
+                    },
+                    qos,
+                },
+            );
+            let mut rng = Rng::new(31);
+            let t0 = std::time::Instant::now();
+            let mut pending = Vec::new();
+            let mut throttled = 0usize;
+            let mut queue_full = 0usize;
+            for (i, ev) in plan.events().iter().enumerate() {
+                // Pace to the plan: buckets refill in wall time, so the
+                // trace must reach the cluster at its scheduled offsets.
+                let elapsed = t0.elapsed();
+                if ev.at > elapsed {
+                    std::thread::sleep(ev.at - elapsed);
+                }
+                let t = ev.session.0 as usize;
+                let inputs = vec![
+                    encrypt_message((i % 6) as u64, &sks[t], &mut rng),
+                    encrypt_message((i % 4) as u64, &sks[t], &mut rng),
+                ];
+                match cluster.submit(ev.session, inputs) {
+                    Ok(r) => pending.push(r),
+                    Err(ClusterError::Throttled) => throttled += 1,
+                    Err(ClusterError::TenantQueueFull) => queue_full += 1,
+                    Err(e) => panic!("submit failed: {e}"),
+                }
+            }
+            for resp in &pending {
+                let _ = resp.recv().expect("response");
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let served = pending.len();
+            drop(pending);
+
+            let snap = cluster.snapshot();
+            // Fairness over what each tenant got: served-request share and
+            // mean latency. Latency Jain's index is the starvation signal
+            // — a hot tenant monopolizing the queue drags everyone else's
+            // mean up unevenly.
+            let served_per_tenant: Vec<f64> =
+                snap.session_requests.values().map(|&n| n as f64).collect();
+            let mean_latency_per_tenant: Vec<f64> = snap
+                .session_latency_ms
+                .values()
+                .filter(|v| !v.is_empty())
+                .map(|v| v.iter().sum::<f64>() / v.len() as f64)
+                .collect();
+            let served_jain = jains_index(&served_per_tenant);
+            let latency_jain = jains_index(&mean_latency_per_tenant);
+            // The coldest tenant still served: its p99 is the isolation
+            // headline (does someone else's burst cost ME tail latency?).
+            let cold_p99 = snap
+                .session_requests
+                .iter()
+                .min_by_key(|(_, &n)| n)
+                .and_then(|(&sess, _)| snap.tenant_p99_ms(sess))
+                .unwrap_or(0.0);
+            println!(
+                "s={zipf_s:<3} qos={:<3}  served {served:>2}/{events}  throttled {throttled:>2}  queue-full {queue_full:>2}  jain(served) {served_jain:>5.3}  jain(latency) {latency_jain:>5.3}  cold-p99 {cold_p99:>7.2} ms",
+                if qos_on { "on" } else { "off" },
+            );
+            rows.push(obj(vec![
+                ("zipf_s", num(zipf_s)),
+                ("qos", JsonValue::Bool(qos_on)),
+                ("offered", num(events as f64)),
+                ("served", num(served as f64)),
+                ("throttled", num(throttled as f64)),
+                ("queue_full", num(queue_full as f64)),
+                ("qos_throttled_counter", num(snap.qos_throttled as f64)),
+                ("qos_queue_rejections_counter", num(snap.qos_queue_rejections as f64)),
+                ("jain_served", num(served_jain)),
+                ("jain_mean_latency", num(latency_jain)),
+                ("cold_tenant_p99_ms", num(cold_p99)),
+                ("p99_latency_ms", num(snap.p99_latency_ms)),
+                ("req_per_s", num(served as f64 / wall)),
+            ]));
+            cluster.shutdown();
+        }
+    }
+
+    let report = obj(vec![
+        ("bench", s("qos")),
+        ("tenants", num(tenants as f64)),
+        ("events", num(events as f64)),
+        ("shards", num(shards as f64)),
+        ("bucket_rate_per_s", num(rate_per_s)),
+        ("bucket_burst", num(burst)),
+        ("results", arr(rows)),
+    ]);
+    let path = "BENCH_qos.json";
+    match std::fs::write(path, report.to_string() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -21,11 +21,74 @@ use taurus::cluster::{Cluster, ClusterOptions, PlacementPolicy, StoreFactory};
 use taurus::coordinator::CoordinatorOptions;
 use taurus::ir::builder::ProgramBuilder;
 use taurus::params::TEST1;
-use taurus::tenant::{client_secret, KeyStore, SeededTenantStore, SessionId};
+use taurus::tenant::{client_secret, tenant_seed, KeyStore, SeededTenantStore, SessionId};
 use taurus::tfhe::pbs::encrypt_message;
 use taurus::tfhe::SecretKeys;
+use taurus::traffic::ZipfSampler;
 use taurus::util::json::{arr, num, obj, s, JsonValue};
 use taurus::util::rng::Rng;
+
+/// Counter-exact simulator of `BoundedKeyCache`'s LRU for access traces
+/// too large to pay real keygen on: a hit touches recency; a miss inserts
+/// and evicts the least-recently-used entry past capacity; a miss for a
+/// seed generated before is a regeneration; explicit removes don't happen
+/// here. Cross-checked counter-for-counter against the real store in
+/// `main` before the million-session rows are trusted.
+struct LruSim {
+    cap: usize,
+    by_seed: std::collections::HashMap<u64, u64>,
+    by_tick: std::collections::BTreeMap<u64, u64>,
+    seen: std::collections::HashSet<u64>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    regenerations: u64,
+}
+
+impl LruSim {
+    fn new(cap: usize) -> Self {
+        assert!(cap >= 1);
+        Self {
+            cap,
+            by_seed: std::collections::HashMap::new(),
+            by_tick: std::collections::BTreeMap::new(),
+            seen: std::collections::HashSet::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            regenerations: 0,
+        }
+    }
+
+    fn touch(&mut self, seed: u64) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(old) = self.by_seed.insert(seed, tick) {
+            self.by_tick.remove(&old);
+            self.by_tick.insert(tick, seed);
+            self.hits += 1;
+            return;
+        }
+        self.by_tick.insert(tick, seed);
+        self.misses += 1;
+        if !self.seen.insert(seed) {
+            self.regenerations += 1;
+        }
+        while self.by_seed.len() > self.cap {
+            let (&t, &victim) = self.by_tick.iter().next().expect("over capacity implies entries");
+            self.by_tick.remove(&t);
+            self.by_seed.remove(&victim);
+            self.evictions += 1;
+        }
+    }
+
+    fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total > 0 { self.hits as f64 / total as f64 } else { 0.0 }
+    }
+}
 
 fn main() {
     // Serving shape with a KS-dedup opportunity: d = x + y fans out to two
@@ -71,6 +134,7 @@ fn main() {
                         max_batch_wait: Duration::from_micros(500),
                         ..Default::default()
                     },
+                    qos: None,
                 },
             );
             let mut rng = Rng::new(17);
@@ -124,11 +188,107 @@ fn main() {
         }
     }
 
+    // ---- simulator cross-check: replay one trace through the real store
+    // AND the LRU simulator; every counter must agree before the
+    // million-session rows below are trusted. Small on purpose — each
+    // real miss pays a full TEST1 keygen.
+    section("LRU simulator cross-check (real SeededTenantStore, 16 sessions, cap 4)");
+    let check = {
+        let store = SeededTenantStore::new(&TEST1, master_seed, 4);
+        let mut sim = LruSim::new(4);
+        let sampler = ZipfSampler::new(16, 1.0);
+        let mut rng = Rng::new(0xC05C);
+        let draws = 120usize;
+        for _ in 0..draws {
+            let sess = SessionId(sampler.sample(&mut rng));
+            let _ = store.resolve(sess);
+            sim.touch(tenant_seed(master_seed, sess));
+        }
+        let st = store.stats();
+        let ok = st.hits == sim.hits
+            && st.misses == sim.misses
+            && st.evictions == sim.evictions
+            && st.regenerations == sim.regenerations;
+        println!(
+            "store hits/misses/evictions/regens {}/{}/{}/{}  sim {}/{}/{}/{}  -> {}",
+            st.hits,
+            st.misses,
+            st.evictions,
+            st.regenerations,
+            sim.hits,
+            sim.misses,
+            sim.evictions,
+            sim.regenerations,
+            if ok { "EXACT" } else { "MISMATCH" },
+        );
+        assert!(ok, "LRU simulator diverged from BoundedKeyCache counters");
+        obj(vec![
+            ("draws", num(draws as f64)),
+            ("hits", num(st.hits as f64)),
+            ("misses", num(st.misses as f64)),
+            ("evictions", num(st.evictions as f64)),
+            ("regenerations", num(st.regenerations as f64)),
+            ("exact", JsonValue::Bool(ok)),
+        ])
+    };
+
+    // ---- 1M-session residency sweep: mint sessions, don't resolve keys.
+    // A million real resolutions would spend the whole budget on keygen;
+    // the capacity-vs-hit-rate curve only needs the access trace, so the
+    // Zipf trace replays through the verified simulator at each capacity.
+    let sessions = 1_000_000usize;
+    let draws = 200_000usize;
+    let capacities = [1_000usize, 10_000, 100_000];
+    section(&format!(
+        "million-session residency sweep ({draws} draws over {sessions} sessions, simulated LRU)"
+    ));
+    let mut session_rows: Vec<JsonValue> = Vec::new();
+    for zipf_s in [0.8f64, 1.1] {
+        // One trace per skew, shared by every capacity so the rows form a
+        // curve over capacity alone.
+        let sampler = ZipfSampler::new(sessions, zipf_s);
+        let mut rng = Rng::new(0x51E5_5107);
+        let trace: Vec<u64> = (0..draws)
+            .map(|_| tenant_seed(master_seed, SessionId(sampler.sample(&mut rng))))
+            .collect();
+        let unique = trace.iter().collect::<std::collections::HashSet<_>>().len();
+        for cap in capacities {
+            let t0 = std::time::Instant::now();
+            let mut sim = LruSim::new(cap);
+            for &seed in &trace {
+                sim.touch(seed);
+            }
+            println!(
+                "s={zipf_s} cap={cap:>6}  hit-rate {:>5.3}   misses {:>6}   evictions {:>6}   regens {:>6}   ({} unique sessions, {:.0} ms)",
+                sim.hit_rate(),
+                sim.misses,
+                sim.evictions,
+                sim.regenerations,
+                unique,
+                t0.elapsed().as_secs_f64() * 1e3,
+            );
+            session_rows.push(obj(vec![
+                ("zipf_s", num(zipf_s)),
+                ("sessions", num(sessions as f64)),
+                ("draws", num(draws as f64)),
+                ("cache_capacity", num(cap as f64)),
+                ("unique_sessions", num(unique as f64)),
+                ("key_hit_rate", num(sim.hit_rate())),
+                ("hits", num(sim.hits as f64)),
+                ("misses", num(sim.misses as f64)),
+                ("evictions", num(sim.evictions as f64)),
+                ("regenerations", num(sim.regenerations as f64)),
+            ]));
+        }
+    }
+
     let report = obj(vec![
         ("bench", s("tenants")),
         ("shards", num(shards as f64)),
         ("policy", s("consistent-hash")),
         ("results", arr(rows)),
+        ("lru_sim_crosscheck", check),
+        ("session_sweep", arr(session_rows)),
     ]);
     let path = "BENCH_tenants.json";
     match std::fs::write(path, report.to_string() + "\n") {

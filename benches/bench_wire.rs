@@ -57,6 +57,7 @@ fn main() {
             policy: PlacementPolicy::RoundRobin,
             queue_depth: None,
             coordinator: CoordinatorOptions { workers: 1, ..Default::default() },
+            qos: None,
         },
     ));
     let mut server =

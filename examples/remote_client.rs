@@ -95,6 +95,7 @@ fn main() {
                 policy: PlacementPolicy::RoundRobin,
                 queue_depth: None,
                 coordinator: CoordinatorOptions { workers: 1, ..Default::default() },
+                qos: None,
             },
         ));
         let server = WireServer::start(cluster.clone(), "127.0.0.1:0", WireServerOptions::default())

@@ -133,6 +133,7 @@ fn main() {
             policy,
             queue_depth: if queue_depth > 0 { Some(queue_depth) } else { None },
             coordinator: CoordinatorOptions { workers, batch_capacity: 8, ..Default::default() },
+            qos: None,
         },
     );
     println!(

@@ -22,6 +22,24 @@
 //! unboundedly — callers shed load or retry after draining, exactly the
 //! backpressure a front door needs at millions-of-users scale.
 //!
+//! **QoS admission** ([`ClusterOptions::qos`]). The direct permit path is
+//! first-come-first-served: one tenant submitting faster than the shards
+//! drain occupies every permit, and everyone else queues behind its
+//! backlog. With QoS enabled, `submit` instead (1) charges the tenant's
+//! token bucket — an empty bucket fails typed with
+//! [`ClusterError::Throttled`]; (2) enqueues the request on the tenant's
+//! own bounded FIFO lane inside a weighted deficit-round-robin queue
+//! ([`crate::traffic::qos::DrrQueue`]) — a full lane fails typed with
+//! [`ClusterError::TenantQueueFull`], stalling only that tenant; and
+//! (3) a dispatcher thread drains lanes in weighted-fair order, claiming
+//! a shared admission permit per dispatch, so the permit bound still
+//! holds but its *order* is fair rather than FIFO. The returned
+//! [`ClusterResponse`] resolves to a shard ticket once dispatched; a
+//! handle dropped while still queued (client disconnect) marks its job
+//! cancelled so the dispatcher discards it — the lane slot and permit
+//! can never leak. With `qos: None` none of this machinery is even
+//! constructed: admission is bit-for-bit the original direct path.
+//!
 //! **Supervision.** A supervisor thread watches the shards: every failed
 //! batch reports each of its requests on a failure channel, the router
 //! tracks per-shard health (consecutive failures + queue age), a shard
@@ -44,9 +62,9 @@ use std::collections::HashMap;
 use std::fmt;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex, PoisonError, RwLock};
+use std::sync::{Arc, Condvar, Mutex, PoisonError, RwLock};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::router::{HealthState, PlacementPolicy, Router, DEFAULT_DOWN_AFTER};
 use crate::compiler::{self, CompiledPlan};
@@ -58,6 +76,7 @@ use crate::ir::Program;
 use crate::obs;
 use crate::tenant::{KeyStore, KeyStoreStats, RegisterError, SessionId, StaticKeys};
 use crate::tfhe::{LweCiphertext, ServerKeys};
+use crate::traffic::qos::{DrrQueue, QosOptions, TokenBucket};
 
 /// Builds the shard-local [`KeyStore`] for a shard index — how the
 /// cluster creates stores at startup and for shards added by
@@ -80,6 +99,12 @@ pub struct ClusterOptions {
     /// Per-shard coordinator configuration (workers, batcher, backend,
     /// optional per-shard `max_queue_depth`).
     pub coordinator: CoordinatorOptions,
+    /// QoS admission front: per-tenant token-bucket rate limits and a
+    /// weighted deficit-round-robin fair queue replacing direct
+    /// first-come-first-served permit admission. `None` keeps the
+    /// original direct path bit-for-bit (no dispatcher thread, no queue
+    /// state is even constructed).
+    pub qos: Option<QosOptions>,
 }
 
 impl Default for ClusterOptions {
@@ -89,6 +114,7 @@ impl Default for ClusterOptions {
             policy: PlacementPolicy::RoundRobin,
             queue_depth: None,
             coordinator: CoordinatorOptions::default(),
+            qos: None,
         }
     }
 }
@@ -136,6 +162,14 @@ pub enum ClusterError {
     Stopped,
     /// No candidate shard could resolve the session's keys.
     ResolveFailed,
+    /// QoS: the tenant's token bucket is empty — its rate limit is
+    /// exceeded; retry after the bucket refills. Only this tenant is
+    /// affected.
+    Throttled,
+    /// QoS: the tenant's lane in the fair admission queue is at its
+    /// depth bound — this tenant must shed load; other tenants' lanes
+    /// are unaffected.
+    TenantQueueFull,
 }
 
 impl fmt::Display for ClusterError {
@@ -145,6 +179,8 @@ impl fmt::Display for ClusterError {
             ClusterError::ShardFull => f.write_str("routed shard queue full"),
             ClusterError::Stopped => f.write_str("cluster stopped"),
             ClusterError::ResolveFailed => f.write_str("session key resolution failed"),
+            ClusterError::Throttled => f.write_str("tenant rate limit exceeded"),
+            ClusterError::TenantQueueFull => f.write_str("tenant admission queue full"),
         }
     }
 }
@@ -201,25 +237,116 @@ impl Drop for AdmissionPermit {
     }
 }
 
+/// What the QoS dispatcher hands back once it routed a queued request
+/// into a shard: the shard ticket plus the admission permit it claimed.
+#[derive(Debug)]
+struct Dispatched {
+    ticket: Ticket,
+    shard: usize,
+    permit: AdmissionPermit,
+}
+
+/// Progress of one submitted request through its lifecycle.
+#[derive(Debug)]
+enum ResponseState {
+    /// Dispatched to a shard; the ticket delivers the terminal.
+    Ready(Ticket),
+    /// Waiting in the fair admission queue for the dispatcher.
+    Queued { rx: Receiver<Result<Dispatched, ClusterError>>, deadline: Option<Instant> },
+    /// Terminated before a shard ever saw it (queue-time deadline
+    /// expiry, shutdown drain, or a dispatch-time routing failure).
+    Failed(RequestError),
+}
+
 /// A pending response plus its admission slot. The slot frees when this
 /// handle is dropped, so a client that holds N handles occupies N of the
 /// cluster's `queue_depth` — backpressure is deterministic, independent of
 /// worker timing. A deadline expiry ([`RequestError::RequestTimeout`])
 /// releases the slot immediately, so a slow shard cannot leak queue
 /// capacity through abandoned waits.
+///
+/// On the QoS path the handle starts [`ResponseState::Queued`]: the
+/// permit arrives with the dispatch result, and dropping the handle
+/// before dispatch cancels the queued job — the dispatcher discards it
+/// at the lane head instead of routing work nobody will collect.
 #[derive(Debug)]
 pub struct ClusterResponse {
-    ticket: Ticket,
+    state: Mutex<ResponseState>,
     /// Which shard served this request (useful for affinity checks).
+    /// Meaningful on the direct (QoS-off) path; on the fair-queue path
+    /// the shard is only known after dispatch — use
+    /// [`Self::served_by`], which covers both.
     pub shard: usize,
+    /// Shard resolved at dispatch time on the QoS path (`usize::MAX`
+    /// until known).
+    dispatched_shard: AtomicUsize,
     permit: Mutex<Option<AdmissionPermit>>,
+    /// QoS path only: abandonment flag shared with the queued job.
+    cancel: Option<Arc<AtomicBool>>,
+}
+
+/// Map a dispatch-time cluster error into the typed request terminal the
+/// already-issued response handle delivers.
+fn dispatch_error(e: ClusterError) -> RequestError {
+    match e {
+        ClusterError::Stopped => RequestError::ShardLost,
+        ClusterError::ResolveFailed => RequestError::ResolveFailed {
+            reason: "no candidate shard could resolve the session's keys".into(),
+        },
+        other => RequestError::ExecFailed { reason: format!("dispatch failed: {other}") },
+    }
 }
 
 impl ClusterResponse {
     /// Wait for this request to terminate: output ciphertexts or a typed
     /// [`RequestError`] — never a hang.
     pub fn wait(&self) -> Result<Vec<LweCiphertext>, RequestError> {
-        let r = self.ticket.wait();
+        let mut st = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        let resolved = match &mut *st {
+            ResponseState::Queued { rx, deadline } => {
+                let outcome = match deadline {
+                    None => rx.recv().map_err(|_| false),
+                    Some(d) => {
+                        match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                            Ok(o) => Ok(o),
+                            // `true`: queue-time deadline expiry.
+                            Err(RecvTimeoutError::Timeout) => Err(true),
+                            // `false`: dispatcher gone without answering.
+                            Err(RecvTimeoutError::Disconnected) => Err(false),
+                        }
+                    }
+                };
+                Some(match outcome {
+                    Ok(Ok(d)) => {
+                        self.dispatched_shard.store(d.shard, Ordering::SeqCst);
+                        *self.permit.lock().unwrap_or_else(PoisonError::into_inner) =
+                            Some(d.permit);
+                        ResponseState::Ready(d.ticket)
+                    }
+                    Ok(Err(e)) => ResponseState::Failed(dispatch_error(e)),
+                    Err(true) => {
+                        // Tell the dispatcher to discard the job at the
+                        // lane head; the lane slot frees without a
+                        // dispatch ever claiming a permit.
+                        if let Some(c) = &self.cancel {
+                            c.store(true, Ordering::SeqCst);
+                        }
+                        ResponseState::Failed(RequestError::RequestTimeout)
+                    }
+                    Err(false) => ResponseState::Failed(RequestError::ShardLost),
+                })
+            }
+            _ => None,
+        };
+        if let Some(next) = resolved {
+            *st = next;
+        }
+        let r = match &*st {
+            ResponseState::Ready(t) => t.wait(),
+            ResponseState::Failed(e) => Err(e.clone()),
+            ResponseState::Queued { .. } => unreachable!("queued state resolved above"),
+        };
+        drop(st);
         if matches!(r, Err(RequestError::RequestTimeout)) {
             // The request may still be executing server-side, but its
             // admission slot frees NOW: deadlines bound queue occupancy.
@@ -231,6 +358,34 @@ impl ClusterResponse {
     /// Alias for [`Self::wait`].
     pub fn recv(&self) -> Result<Vec<LweCiphertext>, RequestError> {
         self.wait()
+    }
+
+    /// The shard that served (or is serving) this request, on either
+    /// admission path. `None` while a QoS-queued request has not been
+    /// dispatched yet.
+    pub fn served_by(&self) -> Option<usize> {
+        if self.cancel.is_none() {
+            return Some(self.shard);
+        }
+        match self.dispatched_shard.load(Ordering::SeqCst) {
+            usize::MAX => None,
+            s => Some(s),
+        }
+    }
+}
+
+impl Drop for ClusterResponse {
+    fn drop(&mut self) {
+        // QoS path, client-disconnect semantics: a handle dropped while
+        // its job is still queued marks the job cancelled; the
+        // dispatcher discards it at the lane head, freeing the tenant's
+        // queue slot without claiming a permit. (A job dispatched
+        // despite the race sends into this dropped handle's channel;
+        // the failed send drops the Dispatched — and its permit — on
+        // the spot.)
+        if let Some(c) = &self.cancel {
+            c.store(true, Ordering::SeqCst);
+        }
     }
 }
 
@@ -296,6 +451,38 @@ fn write<T>(l: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
     l.write().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// One request waiting in the fair admission queue.
+struct QueuedJob {
+    session: SessionId,
+    inputs: Vec<LweCiphertext>,
+    /// Absolute deadline — queueing time counts against the request's
+    /// budget; the dispatcher hands the *remaining* time to the shard.
+    deadline: Option<Instant>,
+    /// Set by the response handle (drop or queue-time timeout): the
+    /// dispatcher discards the job instead of routing it.
+    cancel: Arc<AtomicBool>,
+    respond: Sender<Result<Dispatched, ClusterError>>,
+}
+
+/// QoS admission state shared between submitters and the dispatcher
+/// thread.
+struct QosShared {
+    opts: QosOptions,
+    /// Weighted-fair queue of pending jobs; `cv` is signaled on push and
+    /// on shutdown.
+    queue: Mutex<DrrQueue<QueuedJob>>,
+    cv: Condvar,
+    /// Set (under the queue lock) by [`Cluster::shutdown`]; the
+    /// dispatcher drains remaining jobs typed and exits.
+    stopped: AtomicBool,
+    /// Per-tenant token buckets, lazily created on first submit.
+    buckets: Mutex<HashMap<u64, TokenBucket>>,
+    /// Requests rejected with [`ClusterError::Throttled`].
+    throttled: AtomicU64,
+    /// Requests rejected with [`ClusterError::TenantQueueFull`].
+    rejections: AtomicU64,
+}
+
 /// N replicated serving engines behind one admission-controlled router,
 /// each shard resolving session keys through its own shard-local store,
 /// watched by a supervisor thread that retries failed requests and
@@ -318,6 +505,9 @@ pub struct Cluster {
     failure_tx: Sender<FailedRequest>,
     supervisor: Option<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
+    /// QoS admission state (`None` = direct path, no dispatcher).
+    qos: Option<Arc<QosShared>>,
+    dispatcher: Option<JoinHandle<()>>,
 }
 
 impl Cluster {
@@ -465,13 +655,37 @@ impl Cluster {
                 supervisor_loop(shared, failure_rx, plan, coord_opts, failure_tx, sup, stop)
             })
         };
+        let admitted = Arc::new(AtomicUsize::new(0));
+        let qos = opts.qos.map(|qopts| {
+            qopts.validate();
+            let mut queue = DrrQueue::new(qopts.quantum, qopts.tenant_queue_depth);
+            for (&tenant, &w) in &qopts.weights {
+                queue.set_weight(tenant, w);
+            }
+            Arc::new(QosShared {
+                opts: qopts,
+                queue: Mutex::new(queue),
+                cv: Condvar::new(),
+                stopped: AtomicBool::new(false),
+                buckets: Mutex::new(HashMap::new()),
+                throttled: AtomicU64::new(0),
+                rejections: AtomicU64::new(0),
+            })
+        });
+        let dispatcher = qos.as_ref().map(|q| {
+            let shared = shared.clone();
+            let q = q.clone();
+            let admitted = admitted.clone();
+            let depth = opts.queue_depth;
+            std::thread::spawn(move || dispatcher_loop(shared, q, admitted, depth))
+        });
         Self {
             shared,
             factory,
             policy: opts.policy,
             coordinator_opts: opts.coordinator,
             supervision,
-            admitted: Arc::new(AtomicUsize::new(0)),
+            admitted,
             queue_depth: opts.queue_depth,
             plan,
             accepting: true,
@@ -480,6 +694,8 @@ impl Cluster {
             failure_tx,
             supervisor: Some(supervisor),
             stop,
+            qos,
+            dispatcher,
         }
     }
 
@@ -510,6 +726,28 @@ impl Cluster {
     /// Currently admitted (undropped) responses across the cluster.
     pub fn outstanding(&self) -> usize {
         self.admitted.load(Ordering::SeqCst)
+    }
+
+    /// Requests currently inside shard pipelines (submitted, not yet
+    /// completed). This is the autoscaler's backlog signal: unlike
+    /// [`Self::outstanding`] it excludes responses already delivered but
+    /// not yet dropped by slow readers.
+    pub fn inflight(&self) -> usize {
+        read(&self.shared.shards).iter().map(|c| c.inflight.load(Ordering::SeqCst)).sum()
+    }
+
+    /// Requests waiting in the fair admission queue (0 when QoS is off).
+    pub fn fair_queue_len(&self) -> usize {
+        self.qos.as_ref().map_or(0, |q| {
+            q.queue.lock().unwrap_or_else(PoisonError::into_inner).len()
+        })
+    }
+
+    /// A shareable handle to the compiled plan (the autoscaler wrapper
+    /// holds the cluster behind a lock, so it cannot hand out
+    /// [`Self::plan`]'s borrow across the guard).
+    pub fn plan_handle(&self) -> Arc<CompiledPlan> {
+        self.plan.clone()
     }
 
     /// Whether every shard store can hold client-uploaded key material.
@@ -589,74 +827,70 @@ impl Cluster {
     fn submit_inner(
         &self,
         session: SessionId,
-        mut inputs: Vec<LweCiphertext>,
+        inputs: Vec<LweCiphertext>,
         deadline: Option<Duration>,
     ) -> Result<ClusterResponse, ClusterError> {
         if !self.accepting {
             return Err(ClusterError::Stopped);
         }
+        if let Some(qos) = &self.qos {
+            return self.submit_fair(qos, session, inputs, deadline);
+        }
         // The permit is dropped (slot released) on any error path below.
         let permit = AdmissionPermit::acquire(&self.admitted, self.queue_depth)?;
-        // The request's trace id is minted HERE, at cluster admission:
-        // the whole journey — routing, redirects, execution, retries on
-        // other shards, the terminal — shares one async span. Shards are
-        // entered through `try_submit_traced` so they don't mint again.
-        let trace = obs::next_trace_id();
-        obs::trace::async_begin("request", trace);
-        obs::trace::instant("admitted", trace);
-        // Close the async span on a rejection: no ticket exists to do it.
-        let reject = |trace: u64| {
-            if trace != 0 {
-                obs::trace::instant("rejected", trace);
-                obs::trace::async_end("request", trace);
-            }
-        };
-        let shards = read(&self.shared.shards);
-        let router = read(&self.shared.router);
-        // Outstanding counts are gathered lazily — only the
-        // least-outstanding policy reads them. Placement already skips
-        // `Down` shards.
-        let first = router.place(session.0, || {
-            shards.iter().map(|c| c.inflight.load(Ordering::SeqCst)).collect()
-        });
-        let n = shards.len();
-        let mut last = ClusterError::Stopped;
-        for k in 0..n {
-            let shard = (first + k) % n;
-            if k > 0 && router.health(shard) == HealthState::Down {
-                continue;
-            }
-            match shards[shard].try_submit_traced(session, inputs, deadline, trace) {
-                Ok(ticket) => {
-                    if k > 0 {
-                        self.shared.redirects.fetch_add(1, Ordering::SeqCst);
-                        obs::trace::instant("redirect", trace);
-                    }
-                    return Ok(ClusterResponse {
-                        ticket,
-                        shard,
-                        permit: Mutex::new(Some(permit)),
-                    });
-                }
-                // Shard backpressure is NOT redirected: spilling onto the
-                // next shard would defeat the per-shard bound (and change
-                // fault-free placement). The caller sheds load.
-                Err((SubmitError::QueueFull, _)) => {
-                    reject(trace);
-                    return Err(ClusterError::ShardFull);
-                }
-                Err((e, returned)) => {
-                    inputs = returned;
-                    last = match e {
-                        SubmitError::Stopped => ClusterError::Stopped,
-                        SubmitError::ResolveFailed => ClusterError::ResolveFailed,
-                        SubmitError::QueueFull => unreachable!("handled above"),
-                    };
-                }
+        let (ticket, shard) = route_submit(&self.shared, session, inputs, deadline)?;
+        Ok(ClusterResponse {
+            state: Mutex::new(ResponseState::Ready(ticket)),
+            shard,
+            dispatched_shard: AtomicUsize::new(shard),
+            permit: Mutex::new(Some(permit)),
+            cancel: None,
+        })
+    }
+
+    /// QoS admission: charge the tenant's token bucket, then queue the
+    /// request on its fair-queue lane for the dispatcher. Both rejections
+    /// are typed and tenant-scoped — a hot tenant exhausts its *own*
+    /// bucket and lane, never the shared permit pool.
+    fn submit_fair(
+        &self,
+        qos: &QosShared,
+        session: SessionId,
+        inputs: Vec<LweCiphertext>,
+        deadline: Option<Duration>,
+    ) -> Result<ClusterResponse, ClusterError> {
+        if let Some(spec) = &qos.opts.bucket {
+            let now = Instant::now();
+            let mut buckets = qos.buckets.lock().unwrap_or_else(PoisonError::into_inner);
+            let bucket =
+                buckets.entry(session.0).or_insert_with(|| TokenBucket::new(spec.clone(), now));
+            if !bucket.try_take(now) {
+                qos.throttled.fetch_add(1, Ordering::SeqCst);
+                return Err(ClusterError::Throttled);
             }
         }
-        reject(trace);
-        Err(last)
+        let deadline = deadline.map(|d| Instant::now() + d);
+        let (respond, rx) = channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let job = QueuedJob { session, inputs, deadline, cancel: cancel.clone(), respond };
+        {
+            let mut q = qos.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            if qos.stopped.load(Ordering::SeqCst) {
+                return Err(ClusterError::Stopped);
+            }
+            if q.push(session.0, job).is_err() {
+                qos.rejections.fetch_add(1, Ordering::SeqCst);
+                return Err(ClusterError::TenantQueueFull);
+            }
+            qos.cv.notify_one();
+        }
+        Ok(ClusterResponse {
+            state: Mutex::new(ResponseState::Queued { rx, deadline }),
+            shard: usize::MAX,
+            dispatched_shard: AtomicUsize::new(usize::MAX),
+            permit: Mutex::new(None),
+            cancel: Some(cancel),
+        })
     }
 
     /// Per-shard metrics (request-path counters + the shard store's key
@@ -685,6 +919,10 @@ impl Cluster {
         merged.request_retries += self.shared.retries.load(Ordering::SeqCst);
         merged.request_redirects += self.shared.redirects.load(Ordering::SeqCst);
         merged.shard_restarts += self.shared.restarts.load(Ordering::SeqCst);
+        if let Some(qos) = &self.qos {
+            merged.qos_throttled += qos.throttled.load(Ordering::SeqCst);
+            merged.qos_queue_rejections += qos.rejections.load(Ordering::SeqCst);
+        }
         merged
     }
 
@@ -855,6 +1093,19 @@ impl Cluster {
     /// [`ClusterError::Stopped`].
     pub fn shutdown(&mut self) {
         self.accepting = false;
+        // Stop the QoS dispatcher first: it drains any still-queued jobs
+        // typed ([`ClusterError::Stopped`]) and stops feeding the shards,
+        // so the shard drain below sees a quiescent submit path.
+        if let Some(qos) = &self.qos {
+            {
+                let _q = qos.queue.lock().unwrap_or_else(PoisonError::into_inner);
+                qos.stopped.store(true, Ordering::SeqCst);
+                qos.cv.notify_all();
+            }
+            if let Some(h) = self.dispatcher.take() {
+                let _ = h.join();
+            }
+        }
         {
             let mut shards = write(&self.shared.shards);
             for shard in shards.iter_mut() {
@@ -864,6 +1115,157 @@ impl Cluster {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.supervisor.take() {
             let _ = h.join();
+        }
+    }
+}
+
+/// Route one admitted request onto a shard: mint the request's trace id,
+/// place by policy, and walk the ring past `Down` shards. Shared by the
+/// direct submit path and the QoS dispatcher — both paths produce the
+/// identical routing behaviour, so QoS-off serving is bitwise-unchanged.
+fn route_submit(
+    shared: &Shared,
+    session: SessionId,
+    mut inputs: Vec<LweCiphertext>,
+    deadline: Option<Duration>,
+) -> Result<(Ticket, usize), ClusterError> {
+    // The request's trace id is minted HERE, at cluster admission:
+    // the whole journey — routing, redirects, execution, retries on
+    // other shards, the terminal — shares one async span. Shards are
+    // entered through `try_submit_traced` so they don't mint again.
+    // (On the QoS path this runs at *dispatch*, after the fair queue:
+    // pre-dispatch rejections emit no span, keeping begin/end balanced.)
+    let trace = obs::next_trace_id();
+    obs::trace::async_begin("request", trace);
+    obs::trace::instant("admitted", trace);
+    // Close the async span on a rejection: no ticket exists to do it.
+    let reject = |trace: u64| {
+        if trace != 0 {
+            obs::trace::instant("rejected", trace);
+            obs::trace::async_end("request", trace);
+        }
+    };
+    let shards = read(&shared.shards);
+    let router = read(&shared.router);
+    // Outstanding counts are gathered lazily — only the
+    // least-outstanding policy reads them. Placement already skips
+    // `Down` shards.
+    let first = router.place(session.0, || {
+        shards.iter().map(|c| c.inflight.load(Ordering::SeqCst)).collect()
+    });
+    let n = shards.len();
+    let mut last = ClusterError::Stopped;
+    for k in 0..n {
+        let shard = (first + k) % n;
+        if k > 0 && router.health(shard) == HealthState::Down {
+            continue;
+        }
+        match shards[shard].try_submit_traced(session, inputs, deadline, trace) {
+            Ok(ticket) => {
+                if k > 0 {
+                    shared.redirects.fetch_add(1, Ordering::SeqCst);
+                    obs::trace::instant("redirect", trace);
+                }
+                return Ok((ticket, shard));
+            }
+            // Shard backpressure is NOT redirected: spilling onto the
+            // next shard would defeat the per-shard bound (and change
+            // fault-free placement). The caller sheds load.
+            Err((SubmitError::QueueFull, _)) => {
+                reject(trace);
+                return Err(ClusterError::ShardFull);
+            }
+            Err((e, returned)) => {
+                inputs = returned;
+                last = match e {
+                    SubmitError::Stopped => ClusterError::Stopped,
+                    SubmitError::ResolveFailed => ClusterError::ResolveFailed,
+                    SubmitError::QueueFull => unreachable!("handled above"),
+                };
+            }
+        }
+    }
+    reject(trace);
+    Err(last)
+}
+
+/// The QoS dispatcher: pops jobs in deficit-round-robin order, waits for
+/// a shared admission slot, and routes each onto a shard. One thread, so
+/// fairness decisions are serialized; the shard pipelines behind it stay
+/// fully parallel. Jobs whose response handle was dropped or whose
+/// deadline passed while queued are discarded without costing a permit.
+fn dispatcher_loop(
+    shared: Arc<Shared>,
+    qos: Arc<QosShared>,
+    admitted: Arc<AtomicUsize>,
+    queue_depth: Option<usize>,
+) {
+    loop {
+        // Take the next job in fair order (or drain and exit on stop).
+        let job = {
+            let mut q = qos.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            loop {
+                if qos.stopped.load(Ordering::SeqCst) {
+                    for (_, j) in q.drain() {
+                        let _ = j.respond.send(Err(ClusterError::Stopped));
+                    }
+                    return;
+                }
+                match q.pop() {
+                    Some((_tenant, job)) => break job,
+                    None => {
+                        q = qos
+                            .cv
+                            .wait_timeout(q, qos.opts.poll)
+                            .unwrap_or_else(PoisonError::into_inner)
+                            .0;
+                    }
+                }
+            }
+        };
+        if job.cancel.load(Ordering::SeqCst) {
+            continue;
+        }
+        if job.deadline.is_some_and(|d| d <= Instant::now()) {
+            // The waiter timed itself out (and reported RequestTimeout);
+            // routing the stale job would only burn shard capacity.
+            continue;
+        }
+        // Wait for a shared admission slot. The bound still holds — the
+        // fair queue sits *in front of* the permit pool, it does not
+        // bypass it.
+        let permit = loop {
+            match AdmissionPermit::acquire(&admitted, queue_depth) {
+                Ok(p) => break Some(p),
+                Err(_) => {
+                    if qos.stopped.load(Ordering::SeqCst)
+                        || job.cancel.load(Ordering::SeqCst)
+                    {
+                        break None;
+                    }
+                    std::thread::sleep(qos.opts.poll);
+                }
+            }
+        };
+        let Some(permit) = permit else {
+            if qos.stopped.load(Ordering::SeqCst) {
+                let _ = job.respond.send(Err(ClusterError::Stopped));
+            }
+            continue;
+        };
+        // Queue time counts against the deadline: the shard sees only
+        // what remains.
+        let deadline = job.deadline.map(|d| d.saturating_duration_since(Instant::now()));
+        match route_submit(&shared, job.session, job.inputs, deadline) {
+            Ok((ticket, shard)) => {
+                // If the receiver is gone the Dispatched (and its permit)
+                // drops right here — the slot is never leaked.
+                let _ = job.respond.send(Ok(Dispatched { ticket, shard, permit }));
+            }
+            Err(e) => {
+                drop(permit);
+                let _ = job.respond.send(Err(e));
+            }
         }
     }
 }

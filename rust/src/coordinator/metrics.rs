@@ -17,6 +17,18 @@ use crate::util::stats::Reservoir;
 /// stays constant no matter how many requests a soak serves.
 const SAMPLE_CAP: usize = 4096;
 
+/// Retained latency samples *per tenant*. Smaller than the global cap —
+/// the per-tenant reservoirs exist for tail attribution (fairness tests,
+/// the autoscaler's worst-tenant p99), not for high-resolution
+/// distributions, and a million-tenant soak holds one reservoir per
+/// *observed* tenant.
+const SESSION_SAMPLE_CAP: usize = 512;
+
+/// Seed domain for per-tenant latency reservoirs: mixed with the session
+/// id so every tenant's retained subsample is a deterministic function of
+/// its own record stream (and nothing else).
+const SESSION_RESERVOIR_SEED: u64 = 0xD3_5EED;
+
 #[derive(Debug)]
 struct Inner {
     latencies_ms: Reservoir,
@@ -29,6 +41,9 @@ struct Inner {
     bsk_bytes_streamed: u64,
     keyed_batch_splits: u64,
     session_requests: BTreeMap<u64, u64>,
+    /// Per-tenant latency reservoirs, keyed by session id. Created lazily
+    /// on a tenant's first served request.
+    session_latencies: BTreeMap<u64, Reservoir>,
     exec_failures: u64,
     failed_requests: u64,
     worker_respawns: u64,
@@ -60,6 +75,7 @@ impl Default for Inner {
             bsk_bytes_streamed: 0,
             keyed_batch_splits: 0,
             session_requests: BTreeMap::new(),
+            session_latencies: BTreeMap::new(),
             exec_failures: 0,
             failed_requests: 0,
             worker_respawns: 0,
@@ -117,6 +133,25 @@ pub struct MetricsSnapshot {
     /// Requests served per session id — the per-tenant view. Values sum
     /// to `requests`.
     pub session_requests: BTreeMap<u64, u64>,
+    /// Per-tenant latency samples (ms), keyed by session id — the tail
+    /// attribution the fairness tests and the autoscaler need (a cluster
+    /// p99 cannot say *which* tenant is slow). Same reservoir policy as
+    /// the global samples, at [`SESSION_SAMPLE_CAP`]; merge concatenates
+    /// per key so merged per-tenant percentiles are computed over the
+    /// union of shard samples.
+    pub session_latency_ms: BTreeMap<u64, Vec<f64>>,
+    /// QoS: submits rejected because the tenant's token bucket was empty
+    /// (cluster-level, from `ClusterError::Throttled` rejections; zero
+    /// in per-shard snapshots and whenever QoS is off).
+    pub qos_throttled: u64,
+    /// QoS: submits rejected because the tenant's fair-queue lane was at
+    /// its depth bound (cluster-level; zero when QoS is off).
+    pub qos_queue_rejections: u64,
+    /// Autoscaler scale-up reshards performed (wrapper-level; zero
+    /// without `--autoscale`).
+    pub autoscale_ups: u64,
+    /// Autoscaler scale-down reshards performed (wrapper-level).
+    pub autoscale_downs: u64,
     /// Tenant key-store counters (filled from `KeyStore::stats` by
     /// `Coordinator::snapshot`; zero on a bare `Metrics::snapshot`).
     pub key_hits: u64,
@@ -196,6 +231,16 @@ impl MetricsSnapshot {
             for (&session, &n) in &s.session_requests {
                 *out.session_requests.entry(session).or_insert(0) += n;
             }
+            for (&session, samples) in &s.session_latency_ms {
+                out.session_latency_ms
+                    .entry(session)
+                    .or_default()
+                    .extend_from_slice(samples);
+            }
+            out.qos_throttled += s.qos_throttled;
+            out.qos_queue_rejections += s.qos_queue_rejections;
+            out.autoscale_ups += s.autoscale_ups;
+            out.autoscale_downs += s.autoscale_downs;
             out.exec_failures += s.exec_failures;
             out.failed_requests += s.failed_requests;
             out.worker_respawns += s.worker_respawns;
@@ -233,6 +278,27 @@ impl MetricsSnapshot {
         };
         out
     }
+
+    /// p99 latency of one tenant, over its retained samples. `None` when
+    /// the tenant has no recorded latencies.
+    pub fn tenant_p99_ms(&self, session: u64) -> Option<f64> {
+        let samples = self.session_latency_ms.get(&session)?;
+        if samples.is_empty() {
+            return None;
+        }
+        Some(stats::percentile(samples, 99.0))
+    }
+
+    /// The tenant with the worst p99 latency — the autoscaler's
+    /// per-tenant pressure signal (one tenant's tail collapsing is
+    /// invisible in the cluster p99 when its traffic share is small).
+    pub fn worst_tenant_p99_ms(&self) -> Option<(u64, f64)> {
+        self.session_latency_ms
+            .iter()
+            .filter(|(_, v)| !v.is_empty())
+            .map(|(&session, v)| (session, stats::percentile(v, 99.0)))
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+    }
 }
 
 impl Metrics {
@@ -255,6 +321,12 @@ impl Metrics {
         *g.session_requests.entry(session.0).or_insert(0) += 1;
         g.queue_ms.push(queue_ms);
         g.latencies_ms.push(latency_ms);
+        g.session_latencies
+            .entry(session.0)
+            .or_insert_with(|| {
+                Reservoir::new(SESSION_SAMPLE_CAP, SESSION_RESERVOIR_SEED ^ session.0)
+            })
+            .push(latency_ms);
         if crate::obs::enabled() {
             // One queue-stage event per served request, so the stage
             // histogram's count reconciles against the request counter.
@@ -359,6 +431,15 @@ impl Metrics {
             },
             keyed_batch_splits: g.keyed_batch_splits,
             session_requests: g.session_requests.clone(),
+            session_latency_ms: g
+                .session_latencies
+                .iter()
+                .map(|(&session, r)| (session, r.samples().to_vec()))
+                .collect(),
+            qos_throttled: 0,
+            qos_queue_rejections: 0,
+            autoscale_ups: 0,
+            autoscale_downs: 0,
             exec_failures: g.exec_failures,
             failed_requests: g.failed_requests,
             worker_respawns: g.worker_respawns,
@@ -498,6 +579,81 @@ mod tests {
             (6, 5, 1, 1)
         );
         assert_eq!(merged.key_resident, 5);
+    }
+
+    #[test]
+    fn per_tenant_latencies_merge_exactly_and_yield_tenant_p99() {
+        // Two shards serving overlapping tenants: the merged per-tenant
+        // sample sets must be the concatenation per key, and tenant p99
+        // must be computed over that union — not per shard, not global.
+        let mk = |records: &[(u64, f64)]| {
+            let m = Metrics::new();
+            for &(session, lat) in records {
+                m.record_request(SessionId(session), 0.0, lat);
+            }
+            m.snapshot()
+        };
+        let a = mk(&[(1, 10.0), (1, 20.0), (2, 5.0)]);
+        let b = mk(&[(1, 100.0), (3, 7.0)]);
+        assert_eq!(a.session_latency_ms.get(&1).unwrap(), &vec![10.0, 20.0]);
+        let merged = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(merged.session_latency_ms.get(&1).unwrap(), &vec![10.0, 20.0, 100.0]);
+        assert_eq!(merged.session_latency_ms.get(&2).unwrap(), &vec![5.0]);
+        assert_eq!(merged.session_latency_ms.get(&3).unwrap(), &vec![7.0]);
+        let p99 = merged.tenant_p99_ms(1).unwrap();
+        assert!(
+            (p99 - stats::percentile(&[10.0, 20.0, 100.0], 99.0)).abs() < 1e-12,
+            "tenant p99 over the merged union"
+        );
+        assert_eq!(merged.tenant_p99_ms(9), None);
+        // Tenant 1's tail dominates; the worst-tenant probe finds it.
+        let (worst, worst_p99) = merged.worst_tenant_p99_ms().unwrap();
+        assert_eq!(worst, 1);
+        assert!((worst_p99 - p99).abs() < 1e-12);
+        // The global p99 is computed over ALL 5 samples — sanity that the
+        // per-tenant view is genuinely finer.
+        assert!(merged.p99_latency_ms > merged.tenant_p99_ms(3).unwrap());
+    }
+
+    #[test]
+    fn per_tenant_reservoirs_stay_bounded_and_deterministic() {
+        let m = Metrics::new();
+        for i in 0..10_000u64 {
+            m.record_request(SessionId(i % 3), 0.0, (i % 101) as f64);
+        }
+        let s = m.snapshot();
+        for t in 0..3u64 {
+            assert_eq!(s.session_latency_ms.get(&t).unwrap().len(), SESSION_SAMPLE_CAP);
+        }
+        let m2 = Metrics::new();
+        for i in 0..10_000u64 {
+            m2.record_request(SessionId(i % 3), 0.0, (i % 101) as f64);
+        }
+        assert_eq!(
+            m2.snapshot().session_latency_ms,
+            s.session_latency_ms,
+            "identical record streams retain identical per-tenant subsamples"
+        );
+    }
+
+    #[test]
+    fn merge_sums_qos_and_autoscale_counters() {
+        let a = MetricsSnapshot {
+            qos_throttled: 4,
+            qos_queue_rejections: 2,
+            autoscale_ups: 1,
+            ..Default::default()
+        };
+        let b = MetricsSnapshot {
+            qos_throttled: 1,
+            autoscale_downs: 1,
+            ..Default::default()
+        };
+        let merged = MetricsSnapshot::merge(&[a, b]);
+        assert_eq!(merged.qos_throttled, 5);
+        assert_eq!(merged.qos_queue_rejections, 2);
+        assert_eq!(merged.autoscale_ups, 1);
+        assert_eq!(merged.autoscale_downs, 1);
     }
 
     #[test]

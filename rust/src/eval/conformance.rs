@@ -312,6 +312,7 @@ pub fn run_width(width: usize, default_cases: u64) -> WidthReport {
                 policy: PlacementPolicy::RoundRobin,
                 queue_depth: None,
                 coordinator: shard_options(),
+                qos: None,
             },
         );
         let pend: Vec<_> = batch

@@ -29,6 +29,10 @@
 //!   engine shards behind a placement router with a bounded shared
 //!   admission queue, shard-local key stores with live reshard +
 //!   cache migration, and merged metrics.
+//! - [`traffic`] — traffic realism above the cluster: seed-deterministic
+//!   Zipf/bursty load generation, per-tenant token-bucket + weighted-fair
+//!   (deficit round-robin) QoS admission, and a metrics-driven autoscaler
+//!   that reshards the cluster against watermarks.
 //! - [`wire`] — the network front door: versioned binary serialization
 //!   for ciphertexts and server keys (chunked streaming key upload), a
 //!   framed length-prefixed TCP protocol over `std::net`, and the
@@ -69,5 +73,6 @@ pub mod runtime;
 pub mod tenant;
 pub mod coordinator;
 pub mod cluster;
+pub mod traffic;
 pub mod wire;
 pub mod eval;

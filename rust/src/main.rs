@@ -8,6 +8,9 @@
 //!   serve [--backend native|xla] [--shards S] [--policy P]
 //!         [--queue-depth D] [--workers N] [--fft-threads F]
 //!         [--requests R] [--tenants T] [--key-cache-cap C]
+//!         [--loadgen [ZIPF_S] [--loadgen-seed SEED]]
+//!         [--tenant-rate R [--tenant-burst B]] [--tenant-queue-depth D]
+//!         [--autoscale [--autoscale-max M]]
 //!         [--chaos [SEED]] [--trace FILE] [--metrics-interval SECS]
 //!         [--listen ADDR [--listen-secs S]]
 //!       start a sharded serving cluster (S coordinator shards behind a
@@ -21,6 +24,20 @@
 //!       F >= 2 splits each native blind rotation's batch columns over F
 //!       pool threads per worker engine (bitwise-identical outputs, pure
 //!       latency knob; ignored by the XLA backend).
+//!       --loadgen replaces the uniform request stream with a
+//!       seed-deterministic Zipf-popular bursty schedule over the T
+//!       sessions (ZIPF_S is the popularity exponent, default 1.0; same
+//!       --loadgen-seed, same trace), pacing submissions to the
+//!       schedule's arrival times.
+//!       --tenant-rate R arms per-tenant token buckets (R tokens/s,
+//!       burst B) and the weighted-fair admission queue; over-rate
+//!       tenants are rejected typed (throttled) instead of occupying the
+//!       shared queue. --tenant-queue-depth D alone arms fair queueing
+//!       without rate limits (D requests per tenant lane).
+//!       --autoscale wraps the cluster in the metrics-driven autoscaler:
+//!       a control loop reshards between 1 and M shards (default
+//!       max(shards, 4)) as backlog crosses its watermarks. Incompatible
+//!       with --listen.
 //!       --chaos injects a deterministic seed-driven fault plan (worker
 //!       panics, latency spikes, resolve failures) into the native
 //!       backend and key stores, drives every request under a deadline,
@@ -50,10 +67,15 @@ use taurus::bail;
 use taurus::util::err::Result;
 
 use taurus::arch::TaurusConfig;
-use taurus::cluster::{Cluster, ClusterOptions, ClusterResponse, PlacementPolicy, StoreFactory};
+use taurus::cluster::{
+    Cluster, ClusterError, ClusterOptions, ClusterResponse, PlacementPolicy, StoreFactory,
+};
 use taurus::coordinator::{BackendKind, CoordinatorOptions};
 use taurus::runtime::faults::{FaultPlan, FaultSpec, FaultyStore};
 use taurus::tenant::{self, KeyStore, SeededTenantStore, SessionId, StaticKeys};
+use taurus::traffic::{
+    AutoscaleOptions, AutoscaledCluster, LoadPlan, LoadSpec, QosOptions, TokenBucketSpec,
+};
 use taurus::ir::builder::ProgramBuilder;
 use taurus::params;
 use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
@@ -188,6 +210,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let tenants = args.usize_flag("tenants", 1).max(1);
     let key_cache_cap = args.usize_flag("key-cache-cap", 4).max(1);
     let legacy_exec = args.flag("legacy-exec").is_some();
+    // `--loadgen [ZIPF_S]`: replace the uniform driver stream with a
+    // seed-deterministic Zipf/bursty schedule over the tenant sessions.
+    let loadgen_s: Option<f64> = args
+        .flag("loadgen")
+        .map(|v| if v == "true" { 1.0 } else { v.parse().unwrap_or(1.0) });
+    let loadgen_seed = args.usize_flag("loadgen-seed", 0x10AD) as u64;
+    // `--tenant-rate R` arms per-tenant token buckets AND the fair queue;
+    // `--tenant-queue-depth D` alone arms fair queueing without buckets.
+    let tenant_rate: Option<f64> = args.flag("tenant-rate").and_then(|v| v.parse().ok());
+    let tenant_burst: f64 = args
+        .flag("tenant-burst")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8.0);
+    let qos_on = tenant_rate.is_some() || args.flag("tenant-queue-depth").is_some();
+    let qos = qos_on.then(|| QosOptions {
+        bucket: tenant_rate.map(|r| TokenBucketSpec::new(r, tenant_burst)),
+        tenant_queue_depth: args.usize_flag("tenant-queue-depth", 64).max(1),
+        ..QosOptions::default()
+    });
+    let autoscale = args.flag("autoscale").is_some();
+    let autoscale_max = args.usize_flag("autoscale-max", shards.max(4)).max(shards);
+    if autoscale && args.flag("listen").is_some() {
+        bail!(
+            "--autoscale cannot combine with --listen: the wire server pins one cluster \
+             topology per connection acceptor (drive load in-process instead)"
+        )
+    }
     // `--trace FILE` and/or `--metrics-interval SECS` arm the
     // observability subsystem (flight-recorder tracing, stage histograms,
     // drift profiles). Without either, every hook stays a single relaxed
@@ -255,6 +304,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             fft_threads,
             ..Default::default()
         },
+        qos,
     };
     let mut rng = Rng::new(2077);
     // Per-session client secrets: with seeded tenants each session keys
@@ -297,6 +347,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => Cluster::start(prog.clone(), keys, opts),
         }
     };
+    // `--autoscale` wraps the cluster in the control loop; the driver
+    // and report below run against the enum so both paths share them.
+    let mut cluster = if autoscale {
+        ServeCluster::Auto(AutoscaledCluster::start(
+            cluster,
+            AutoscaleOptions { min_shards: 1, max_shards: autoscale_max, ..Default::default() },
+        ))
+    } else {
+        ServeCluster::Plain(cluster)
+    };
     // Arm observability only now — after key generation — so keygen's
     // forward FFT transforms never pollute the fft_transform histogram.
     if obs_on {
@@ -322,6 +382,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             bail!("--listen needs a bind address (e.g. --listen 127.0.0.1:7171)")
         }
         let listen_secs = args.usize_flag("listen-secs", 0);
+        let ServeCluster::Plain(cluster) = cluster else {
+            unreachable!("--autoscale with --listen is rejected at flag parsing")
+        };
         let cluster = Arc::new(cluster);
         let mut server = taurus::wire::WireServer::start(
             cluster.clone(),
@@ -352,6 +415,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy.name(),
         if queue_depth > 0 { queue_depth.to_string() } else { "unbounded".into() },
     );
+    // The driver's request schedule: (arrival offset, session, tenant
+    // index). Default: uniform round-robin, no pacing. With --loadgen:
+    // the seed-deterministic Zipf/bursty plan, paced to its arrivals.
+    let schedule: Vec<(std::time::Duration, u64, usize)> = match loadgen_s {
+        Some(s) => {
+            let spec = LoadSpec {
+                tenants: tenants.max(1),
+                zipf_s: s,
+                events: requests,
+                ..Default::default()
+            };
+            let lp = LoadPlan::from_seed(loadgen_seed, &spec);
+            println!(
+                "loadgen        : zipf s={s} over {tenants} session(s), seed {loadgen_seed:#x}: {} kept arrival(s) spanning {:.1} ms",
+                lp.events().len(),
+                lp.events().last().map_or(0.0, |e| e.at.as_secs_f64() * 1e3),
+            );
+            lp.events()
+                .iter()
+                .map(|e| {
+                    let t = if tenants > 1 { e.session.0 as usize } else { 0 };
+                    (e.at, e.session.0, t)
+                })
+                .collect()
+        }
+        None => (0..requests)
+            .map(|i| {
+                let t = if tenants > 1 { i % tenants } else { 0 };
+                let session = if tenants > 1 { t as u64 } else { (i as u64) % 4 };
+                (std::time::Duration::ZERO, session, t)
+            })
+            .collect(),
+    };
     // (response, expected, tenant index) — each response decrypts under
     // its own session's secret key.
     let mut pending: std::collections::VecDeque<(ClusterResponse, Vec<u64>, usize)> =
@@ -384,7 +480,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
     let mut last_emit = std::time::Instant::now();
-    for i in 0..requests {
+    let mut rejected = 0usize;
+    let drive_start = std::time::Instant::now();
+    for (i, &(at, session, t)) in schedule.iter().enumerate() {
         // Periodic metrics emission (JSONL, one self-contained object per
         // line) from the driver thread — an in-band poller, so it needs
         // no shared-cluster handle and stops with the run.
@@ -392,10 +490,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("{}", metrics_jsonl(&cluster.snapshot()));
             last_emit = std::time::Instant::now();
         }
+        // Loadgen pacing: offer each arrival at its scheduled offset so
+        // bursts and quiet periods reach the cluster as bursts and quiet
+        // periods, not one saturating stream.
+        if loadgen_s.is_some() {
+            let elapsed = drive_start.elapsed();
+            if at > elapsed {
+                std::thread::sleep(at - elapsed);
+            }
+        }
         let (mx, my) = ((i as u64) % 4, (i as u64 * 3) % 4);
         let exp = taurus::ir::interp::eval(&prog, &[mx, my]);
-        let t = if tenants > 1 { i % tenants } else { 0 };
-        let session = if tenants > 1 { t as u64 } else { (i as u64) % 4 };
         // Single-submitter driver: admission slots are held by the pending
         // handles, so drain the oldest response whenever the queue is at
         // depth instead of bouncing off ClusterFull and re-cloning inputs.
@@ -414,6 +519,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         };
         let resp = match submitted {
             Ok(r) => r,
+            // QoS rejections are the rate limiter doing its job, not a
+            // driver failure: count them and keep offering load.
+            Err(e @ (ClusterError::Throttled | ClusterError::TenantQueueFull)) => {
+                rejected += 1;
+                if rejected <= 5 {
+                    println!("request {i} (session {session}): {e}");
+                }
+                continue;
+            }
             Err(e) if chaos => {
                 println!("request {i}: rejected at admission ({e})");
                 failed += 1;
@@ -432,7 +546,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         // Final emission: short runs always produce at least one line.
         println!("{}", metrics_jsonl(&snap));
     }
-    println!("correct        : {correct}/{requests}");
+    let offered = schedule.len();
+    if rejected > 0 {
+        println!("correct        : {correct}/{} admitted ({offered} offered, {rejected} rejected by QoS)", offered - rejected);
+    } else {
+        println!("correct        : {correct}/{offered}");
+    }
     if let Some(f) = &faults {
         let inj = f.injected();
         println!(
@@ -502,15 +621,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
             snap.key_resident,
             snap.keyed_batch_splits,
         );
-        let per_tenant: Vec<String> =
-            snap.session_requests.iter().map(|(s, n)| format!("s{s}:{n}")).collect();
-        println!("per tenant     : {}", per_tenant.join("  "));
+        println!("per tenant     : session  requests   p99-ms");
+        for (s, n) in &snap.session_requests {
+            match snap.tenant_p99_ms(*s) {
+                Some(p99) => println!("                 {s:<8} {n:>8} {p99:>8.2}"),
+                None => println!("                 {s:<8} {n:>8}        -"),
+            }
+        }
+    }
+    if qos_on {
+        println!(
+            "qos            : {} throttled (token bucket), {} tenant-queue rejections",
+            snap.qos_throttled, snap.qos_queue_rejections,
+        );
+    }
+    if autoscale {
+        println!(
+            "autoscale      : {} scale-up(s), {} scale-down(s), final {} shard(s)",
+            snap.autoscale_ups,
+            snap.autoscale_downs,
+            cluster.shard_count(),
+        );
     }
     // The identical artifact costed by the arch model: aggregate measured
     // counters must equal per-request sim costs x requests, independent
     // of how many shards served them.
     let cfg = config_from(args);
-    let sim = taurus::arch::simulate(cluster.plan(), &cfg);
+    let sim = taurus::arch::simulate(&cluster.plan(), &cfg);
     if !legacy_exec {
         // Under chaos the invariant holds over SERVED requests (failed
         // attempts record nothing); fault-free, served == submitted.
@@ -583,6 +720,83 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     cluster.shutdown();
     Ok(())
+}
+
+/// The serve driver's cluster handle: either the plain [`Cluster`] or the
+/// autoscaling wrapper. One delegating surface so the submit loop and the
+/// report below are written once, not per mode.
+enum ServeCluster {
+    Plain(Cluster),
+    Auto(AutoscaledCluster),
+}
+
+impl ServeCluster {
+    fn submit(
+        &self,
+        session: u64,
+        inputs: Vec<taurus::tfhe::LweCiphertext>,
+    ) -> std::result::Result<ClusterResponse, ClusterError> {
+        match self {
+            ServeCluster::Plain(c) => c.submit(session, inputs),
+            ServeCluster::Auto(a) => a.submit(session, inputs),
+        }
+    }
+
+    fn submit_with_deadline(
+        &self,
+        session: u64,
+        inputs: Vec<taurus::tfhe::LweCiphertext>,
+        deadline: std::time::Duration,
+    ) -> std::result::Result<ClusterResponse, ClusterError> {
+        match self {
+            ServeCluster::Plain(c) => c.submit_with_deadline(session, inputs, deadline),
+            ServeCluster::Auto(a) => a.submit_with_deadline(session, inputs, deadline),
+        }
+    }
+
+    fn outstanding(&self) -> usize {
+        match self {
+            ServeCluster::Plain(c) => c.outstanding(),
+            ServeCluster::Auto(a) => a.outstanding(),
+        }
+    }
+
+    fn snapshot(&self) -> taurus::coordinator::MetricsSnapshot {
+        match self {
+            ServeCluster::Plain(c) => c.snapshot(),
+            ServeCluster::Auto(a) => a.snapshot(),
+        }
+    }
+
+    fn shard_snapshots(&self) -> Vec<taurus::coordinator::MetricsSnapshot> {
+        match self {
+            ServeCluster::Plain(c) => c.shard_snapshots(),
+            ServeCluster::Auto(a) => a.shard_snapshots(),
+        }
+    }
+
+    fn shard_count(&self) -> usize {
+        match self {
+            ServeCluster::Plain(c) => c.shard_count(),
+            ServeCluster::Auto(a) => a.shard_count(),
+        }
+    }
+
+    /// The shared compiled plan. An owned `Arc` because the autoscaler's
+    /// cluster lives behind a lock, so a borrow cannot escape it.
+    fn plan(&self) -> Arc<compiler::CompiledPlan> {
+        match self {
+            ServeCluster::Plain(c) => c.plan_handle(),
+            ServeCluster::Auto(a) => a.plan(),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        match self {
+            ServeCluster::Plain(c) => c.shutdown(),
+            ServeCluster::Auto(a) => a.shutdown(),
+        }
+    }
 }
 
 /// One self-contained metrics JSONL line for `serve --metrics-interval`:

@@ -1,0 +1,502 @@
+//! Metrics-driven autoscaling: a control loop that reshards the cluster.
+//!
+//! The cluster already knows how to change size safely —
+//! [`Cluster::reshard`] drains in-flight work, rebuilds the ring, and
+//! migrates key-cache entries — but something has to *decide* when.
+//! [`AutoscaledCluster`] wraps a [`Cluster`] behind a lock and runs a
+//! control thread (the same shape as the PR 6 supervisor) that polls the
+//! merged [`MetricsSnapshot`] and compares three pressure signals against
+//! configurable watermarks:
+//!
+//! - **backlog per shard** — in-pipeline requests plus the fair-queue
+//!   depth, divided by shard count: the primary signal, rises the moment
+//!   offered load outruns drain rate;
+//! - **worst-tenant p99** ([`MetricsSnapshot::worst_tenant_p99_ms`]) —
+//!   catches a single tenant's tail collapsing while aggregate load looks
+//!   fine;
+//! - **key-cache hit rate** — a cold cache means every request pays key
+//!   regeneration; more shards add store capacity.
+//!
+//! Decisions are deliberately sluggish: a signal must stay beyond its
+//! watermark for `hysteresis` consecutive polls before the controller
+//! acts, and after any reshard it holds for `cooldown_polls` — a reshard
+//! drains the cluster, so the first post-reshard snapshots always look
+//! idle, and an eager controller would oscillate up/down forever on that
+//! artifact. The high/low watermark gap works the same way from the
+//! steady-state side: load between the watermarks is a hold, never a
+//! flap. The decision logic lives in the pure [`AutoscaleController`] so
+//! tests drive it with synthetic observations poll by poll — no clocks,
+//! no threads.
+//!
+//! Scale events emit obs instants (`autoscale_up` / `autoscale_down`) on
+//! the flight-recorder timeline and count into the merged snapshot
+//! (`autoscale_ups` / `autoscale_downs`), so a trace of a bursty run
+//! shows *when* capacity moved alongside *what* the requests were doing.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, PoisonError, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::cluster::{Cluster, ClusterError, ClusterResponse, ReshardError};
+use crate::compiler::CompiledPlan;
+use crate::coordinator::MetricsSnapshot;
+use crate::obs;
+use crate::tenant::SessionId;
+use crate::tfhe::LweCiphertext;
+
+/// Watermarks and damping for the autoscale control loop.
+#[derive(Debug, Clone)]
+pub struct AutoscaleOptions {
+    /// Shard-count floor; scale-down never goes below it.
+    pub min_shards: usize,
+    /// Shard-count ceiling; scale-up never exceeds it.
+    pub max_shards: usize,
+    /// Backlog-per-shard above which the cluster is "hot".
+    pub high_watermark: f64,
+    /// Backlog-per-shard below which the cluster is "cold". Must sit
+    /// strictly below `high_watermark`; the gap is the no-flap band.
+    pub low_watermark: f64,
+    /// Worst-tenant p99 (ms) that also marks the cluster hot; `0.0`
+    /// disables the latency trigger.
+    pub p99_high_ms: f64,
+    /// Key-cache hit rate below which the cluster is hot (stores are
+    /// thrashing); `0.0` disables the cache trigger.
+    pub hit_rate_low: f64,
+    /// Consecutive hot (or cold) polls required before acting.
+    pub hysteresis: u32,
+    /// Polls to hold after any reshard before acting again.
+    pub cooldown_polls: u32,
+    /// Control-loop poll interval.
+    pub poll: Duration,
+}
+
+impl Default for AutoscaleOptions {
+    fn default() -> Self {
+        Self {
+            min_shards: 1,
+            max_shards: 4,
+            high_watermark: 4.0,
+            low_watermark: 1.0,
+            p99_high_ms: 0.0,
+            hit_rate_low: 0.0,
+            hysteresis: 2,
+            cooldown_polls: 3,
+            poll: Duration::from_millis(20),
+        }
+    }
+}
+
+impl AutoscaleOptions {
+    fn validate(&self) {
+        assert!(self.min_shards >= 1, "autoscaler needs at least one shard");
+        assert!(self.max_shards >= self.min_shards, "max_shards must be >= min_shards");
+        assert!(
+            self.high_watermark > self.low_watermark,
+            "watermarks must leave a no-flap band (high > low)"
+        );
+        assert!(self.hysteresis >= 1, "hysteresis of 0 would act on a single noisy poll");
+        assert!(self.poll > Duration::ZERO, "poll interval must be positive");
+    }
+}
+
+/// One poll's worth of pressure signals, gathered from the live cluster
+/// (or synthesized by tests).
+#[derive(Debug, Clone, Copy)]
+pub struct AutoscaleObservation {
+    pub shards: usize,
+    /// Requests in shard pipelines plus the fair admission queue.
+    pub backlog: usize,
+    /// `MetricsSnapshot::worst_tenant_p99_ms` (0.0 when no samples yet).
+    pub worst_tenant_p99_ms: f64,
+    /// Key-cache hits / (hits + misses); 1.0 before any key traffic.
+    pub key_hit_rate: f64,
+}
+
+/// What the controller wants done after one observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AutoscaleDecision {
+    /// Reshard up to this many shards.
+    Up(usize),
+    /// Reshard down to this many shards.
+    Down(usize),
+    Hold,
+}
+
+/// The pure decision core: feed it one [`AutoscaleObservation`] per poll,
+/// get back a decision. Deterministic — all damping is poll-counted, so
+/// a test stepping it N times sees exactly what the control thread sees
+/// over N poll intervals.
+#[derive(Debug)]
+pub struct AutoscaleController {
+    opts: AutoscaleOptions,
+    hot_streak: u32,
+    cold_streak: u32,
+    /// Polls since the last reshard; starts past the cooldown so a
+    /// fresh controller may act as soon as hysteresis allows.
+    since_action: u32,
+}
+
+impl AutoscaleController {
+    pub fn new(opts: AutoscaleOptions) -> Self {
+        opts.validate();
+        let since_action = opts.cooldown_polls.saturating_add(1);
+        Self { opts, hot_streak: 0, cold_streak: 0, since_action }
+    }
+
+    pub fn options(&self) -> &AutoscaleOptions {
+        &self.opts
+    }
+
+    /// Consume one poll's observation. Streaks accumulate even during
+    /// cooldown (pressure that persists through the hold acts on the
+    /// first eligible poll), but no decision leaves the cooldown window.
+    pub fn decide(&mut self, obs: AutoscaleObservation) -> AutoscaleDecision {
+        self.since_action = self.since_action.saturating_add(1);
+        let shards = obs.shards.max(1);
+        let load = obs.backlog as f64 / shards as f64;
+        let hot = load > self.opts.high_watermark
+            || (self.opts.p99_high_ms > 0.0 && obs.worst_tenant_p99_ms > self.opts.p99_high_ms)
+            || (self.opts.hit_rate_low > 0.0 && obs.key_hit_rate < self.opts.hit_rate_low);
+        let cold = !hot && load < self.opts.low_watermark;
+        if hot {
+            self.hot_streak += 1;
+            self.cold_streak = 0;
+        } else if cold {
+            self.cold_streak += 1;
+            self.hot_streak = 0;
+        } else {
+            // Inside the no-flap band: both streaks reset, nothing
+            // accumulates toward either direction.
+            self.hot_streak = 0;
+            self.cold_streak = 0;
+        }
+        if self.since_action <= self.opts.cooldown_polls {
+            return AutoscaleDecision::Hold;
+        }
+        if self.hot_streak >= self.opts.hysteresis && shards < self.opts.max_shards {
+            self.hot_streak = 0;
+            self.cold_streak = 0;
+            self.since_action = 0;
+            return AutoscaleDecision::Up(shards + 1);
+        }
+        if self.cold_streak >= self.opts.hysteresis && shards > self.opts.min_shards {
+            self.hot_streak = 0;
+            self.cold_streak = 0;
+            self.since_action = 0;
+            return AutoscaleDecision::Down(shards - 1);
+        }
+        AutoscaleDecision::Hold
+    }
+}
+
+fn read_cluster(l: &RwLock<Cluster>) -> std::sync::RwLockReadGuard<'_, Cluster> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn write_cluster(l: &RwLock<Cluster>) -> std::sync::RwLockWriteGuard<'_, Cluster> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A [`Cluster`] with the autoscale control loop attached. Submissions
+/// take the read lock (concurrent, cheap); a reshard takes the write
+/// lock, so scaling naturally waits for in-flight `submit` calls and
+/// blocks new ones for exactly the reshard's duration — the same
+/// admission pause `reshard(&mut self)` always implied.
+pub struct AutoscaledCluster {
+    inner: Arc<RwLock<Cluster>>,
+    plan: Arc<CompiledPlan>,
+    stop: Arc<AtomicBool>,
+    ups: Arc<AtomicU64>,
+    downs: Arc<AtomicU64>,
+    control: Option<JoinHandle<()>>,
+}
+
+impl AutoscaledCluster {
+    /// Wrap `cluster` and start the control thread.
+    pub fn start(cluster: Cluster, opts: AutoscaleOptions) -> Self {
+        let controller = AutoscaleController::new(opts.clone());
+        let plan = cluster.plan_handle();
+        let inner = Arc::new(RwLock::new(cluster));
+        let stop = Arc::new(AtomicBool::new(false));
+        let ups = Arc::new(AtomicU64::new(0));
+        let downs = Arc::new(AtomicU64::new(0));
+        let control = {
+            let inner = inner.clone();
+            let stop = stop.clone();
+            let ups = ups.clone();
+            let downs = downs.clone();
+            std::thread::spawn(move || control_loop(inner, controller, stop, ups, downs))
+        };
+        Self { inner, plan, stop, ups, downs, control: Some(control) }
+    }
+
+    pub fn submit(
+        &self,
+        session: impl Into<SessionId>,
+        inputs: Vec<LweCiphertext>,
+    ) -> Result<ClusterResponse, ClusterError> {
+        read_cluster(&self.inner).submit(session, inputs)
+    }
+
+    pub fn submit_with_deadline(
+        &self,
+        session: impl Into<SessionId>,
+        inputs: Vec<LweCiphertext>,
+        deadline: Duration,
+    ) -> Result<ClusterResponse, ClusterError> {
+        read_cluster(&self.inner).submit_with_deadline(session, inputs, deadline)
+    }
+
+    /// Merged cluster metrics, with this wrapper's scale-event counters
+    /// filled in.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = read_cluster(&self.inner).snapshot();
+        snap.autoscale_ups += self.ups.load(Ordering::SeqCst);
+        snap.autoscale_downs += self.downs.load(Ordering::SeqCst);
+        snap
+    }
+
+    pub fn shard_snapshots(&self) -> Vec<MetricsSnapshot> {
+        read_cluster(&self.inner).shard_snapshots()
+    }
+
+    pub fn shard_count(&self) -> usize {
+        read_cluster(&self.inner).shard_count()
+    }
+
+    pub fn outstanding(&self) -> usize {
+        read_cluster(&self.inner).outstanding()
+    }
+
+    /// The shared compiled plan (all topologies execute the same
+    /// artifact, so this never changes across reshards).
+    pub fn plan(&self) -> Arc<CompiledPlan> {
+        self.plan.clone()
+    }
+
+    /// `(scale_ups, scale_downs)` performed so far.
+    pub fn scale_events(&self) -> (u64, u64) {
+        (self.ups.load(Ordering::SeqCst), self.downs.load(Ordering::SeqCst))
+    }
+
+    /// Run `f` against the wrapped cluster (read-locked) — escape hatch
+    /// for callers needing cluster APIs not mirrored here.
+    pub fn with_cluster<R>(&self, f: impl FnOnce(&Cluster) -> R) -> R {
+        f(&read_cluster(&self.inner))
+    }
+
+    /// Stop the control loop, then shut the cluster down (drains every
+    /// in-flight request typed, same as [`Cluster::shutdown`]).
+    pub fn shutdown(&mut self) {
+        self.stop_control();
+        write_cluster(&self.inner).shutdown();
+    }
+
+    fn stop_control(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.control.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for AutoscaledCluster {
+    /// The control thread holds an `Arc` to the cluster; without this
+    /// join an undropped wrapper would leak the loop (and the cluster)
+    /// forever.
+    fn drop(&mut self) {
+        self.stop_control();
+    }
+}
+
+fn control_loop(
+    inner: Arc<RwLock<Cluster>>,
+    mut controller: AutoscaleController,
+    stop: Arc<AtomicBool>,
+    ups: Arc<AtomicU64>,
+    downs: Arc<AtomicU64>,
+) {
+    let poll = controller.options().poll;
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(poll);
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let obs = {
+            let c = read_cluster(&inner);
+            let snap = c.snapshot();
+            let key_total = snap.key_hits + snap.key_misses;
+            AutoscaleObservation {
+                shards: c.shard_count(),
+                backlog: c.inflight() + c.fair_queue_len(),
+                worst_tenant_p99_ms: snap.worst_tenant_p99_ms().map_or(0.0, |(_, p)| p),
+                key_hit_rate: if key_total == 0 {
+                    1.0
+                } else {
+                    snap.key_hits as f64 / key_total as f64
+                },
+            }
+        };
+        let target = match controller.decide(obs) {
+            AutoscaleDecision::Hold => continue,
+            AutoscaleDecision::Up(n) => n,
+            AutoscaleDecision::Down(n) => n,
+        };
+        let grew = target > obs.shards;
+        let result: Result<_, ReshardError> = write_cluster(&inner).reshard(target);
+        if result.is_ok() {
+            if grew {
+                ups.fetch_add(1, Ordering::SeqCst);
+                obs::trace::instant("autoscale_up", 0);
+            } else {
+                downs.fetch_add(1, Ordering::SeqCst);
+                obs::trace::instant("autoscale_down", 0);
+            }
+        }
+        // A failed reshard (fixed stores) is a Hold: the controller's
+        // cooldown already reset, so it won't hammer the same request
+        // every poll.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(shards: usize, backlog: usize) -> AutoscaleObservation {
+        AutoscaleObservation { shards, backlog, worst_tenant_p99_ms: 0.0, key_hit_rate: 1.0 }
+    }
+
+    fn controller(opts: AutoscaleOptions) -> AutoscaleController {
+        AutoscaleController::new(opts)
+    }
+
+    #[test]
+    fn scales_up_only_after_hysteresis_consecutive_hot_polls() {
+        let mut c = controller(AutoscaleOptions { hysteresis: 3, ..Default::default() });
+        // backlog 40 over 1 shard: far above the high watermark.
+        assert_eq!(c.decide(obs(1, 40)), AutoscaleDecision::Hold);
+        assert_eq!(c.decide(obs(1, 40)), AutoscaleDecision::Hold);
+        assert_eq!(c.decide(obs(1, 40)), AutoscaleDecision::Up(2));
+    }
+
+    #[test]
+    fn one_cool_poll_resets_the_hot_streak() {
+        let mut c = controller(AutoscaleOptions { hysteresis: 2, ..Default::default() });
+        assert_eq!(c.decide(obs(1, 40)), AutoscaleDecision::Hold);
+        // Load dips into the band: streak resets, no action.
+        assert_eq!(c.decide(obs(1, 2)), AutoscaleDecision::Hold);
+        assert_eq!(c.decide(obs(1, 40)), AutoscaleDecision::Hold);
+        assert_eq!(c.decide(obs(1, 40)), AutoscaleDecision::Up(2));
+    }
+
+    #[test]
+    fn cooldown_blocks_back_to_back_reshards() {
+        let mut c = controller(AutoscaleOptions {
+            hysteresis: 1,
+            cooldown_polls: 3,
+            ..Default::default()
+        });
+        assert_eq!(c.decide(obs(1, 40)), AutoscaleDecision::Up(2));
+        // Still hot, but inside the cooldown: held for 3 polls.
+        for _ in 0..3 {
+            assert_eq!(c.decide(obs(2, 40)), AutoscaleDecision::Hold);
+        }
+        // First post-cooldown poll acts (streak accumulated through it).
+        assert_eq!(c.decide(obs(2, 40)), AutoscaleDecision::Up(3));
+    }
+
+    #[test]
+    fn scales_down_when_cold_and_respects_min() {
+        let mut c = controller(AutoscaleOptions {
+            hysteresis: 2,
+            cooldown_polls: 0,
+            min_shards: 1,
+            ..Default::default()
+        });
+        assert_eq!(c.decide(obs(3, 0)), AutoscaleDecision::Hold);
+        assert_eq!(c.decide(obs(3, 0)), AutoscaleDecision::Down(2));
+        assert_eq!(c.decide(obs(2, 0)), AutoscaleDecision::Hold);
+        assert_eq!(c.decide(obs(2, 0)), AutoscaleDecision::Down(1));
+        // At the floor: cold forever, never below min_shards.
+        for _ in 0..10 {
+            assert_eq!(c.decide(obs(1, 0)), AutoscaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn respects_max_shards_ceiling() {
+        let mut c = controller(AutoscaleOptions {
+            hysteresis: 1,
+            cooldown_polls: 0,
+            max_shards: 2,
+            ..Default::default()
+        });
+        assert_eq!(c.decide(obs(1, 40)), AutoscaleDecision::Up(2));
+        for _ in 0..10 {
+            assert_eq!(c.decide(obs(2, 40)), AutoscaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn band_between_watermarks_is_a_hold_no_oscillation() {
+        let mut c = controller(AutoscaleOptions {
+            hysteresis: 1,
+            cooldown_polls: 0,
+            high_watermark: 4.0,
+            low_watermark: 1.0,
+            ..Default::default()
+        });
+        // Load of 2/shard sits inside (1, 4): both streaks stay zero.
+        for _ in 0..20 {
+            assert_eq!(c.decide(obs(2, 4)), AutoscaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn worst_tenant_p99_triggers_scale_up_alone() {
+        let mut c = controller(AutoscaleOptions {
+            hysteresis: 1,
+            p99_high_ms: 50.0,
+            ..Default::default()
+        });
+        // Backlog is calm; only the tenant tail is on fire.
+        let o = AutoscaleObservation {
+            shards: 1,
+            backlog: 2,
+            worst_tenant_p99_ms: 80.0,
+            key_hit_rate: 1.0,
+        };
+        assert_eq!(c.decide(o), AutoscaleDecision::Up(2));
+    }
+
+    #[test]
+    fn cold_key_cache_triggers_scale_up_alone() {
+        let mut c = controller(AutoscaleOptions {
+            hysteresis: 1,
+            hit_rate_low: 0.5,
+            ..Default::default()
+        });
+        let o = AutoscaleObservation {
+            shards: 1,
+            backlog: 2,
+            worst_tenant_p99_ms: 0.0,
+            key_hit_rate: 0.2,
+        };
+        assert_eq!(c.decide(o), AutoscaleDecision::Up(2));
+        // Disabled trigger (0.0) ignores the same signal.
+        let mut c2 = controller(AutoscaleOptions { hysteresis: 1, ..Default::default() });
+        assert_eq!(c2.decide(o), AutoscaleDecision::Hold);
+    }
+
+    #[test]
+    #[should_panic(expected = "no-flap band")]
+    fn inverted_watermarks_are_rejected() {
+        let _ = AutoscaleController::new(AutoscaleOptions {
+            high_watermark: 1.0,
+            low_watermark: 2.0,
+            ..Default::default()
+        });
+    }
+}

@@ -1,0 +1,323 @@
+//! Seed-deterministic traffic generation: Zipf tenant popularity and
+//! bursty arrival schedules.
+//!
+//! Real multi-tenant serving traffic is not uniform — a handful of hot
+//! tenants dominate request volume (classically Zipf-distributed) and
+//! arrivals cluster into bursts rather than a smooth stream. The QoS
+//! and autoscaling layers exist precisely for that shape, so the tests
+//! and benches need a generator that reproduces it *deterministically*:
+//! like [`crate::runtime::faults`], an entire load trace is a pure
+//! function of one seed, replayable in CI and shrinkable in bug
+//! reports.
+//!
+//! Determinism is stronger than "same seed, same trace": every arrival's
+//! random draws come from an RNG forked per *event index*
+//! ([`crate::tfhe::keygen::fork_seed`], the same construction keygen
+//! uses for chunk-invariant key material). Event `i`'s tenant, gap, and
+//! thinning coin depend on `(seed, spec, i)` alone — never on how many
+//! events were minted before it or on which thread minted it — so a
+//! schedule minted in parallel chunks is bitwise-identical to the
+//! sequential one (proven by `loadgen_determinism` in the QoS suite).
+//!
+//! The arrival process is an on/off burst model with Poisson thinning:
+//! within an on-period of `burst_len` arrivals, inter-arrival gaps are
+//! exponential with mean `mean_gap` (a Poisson process); between bursts
+//! the schedule inserts an `off_gap` quiet period; and each arrival is
+//! kept with probability `keep` (thinning a Poisson process yields a
+//! Poisson process, so `keep` scales offered load without reshaping
+//! it).
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::tenant::SessionId;
+use crate::tfhe::keygen::fork_seed;
+use crate::util::rng::Rng;
+
+/// Domain tag separating loadgen RNG streams from every other
+/// `fork_seed` consumer (keygen, tenant seeds, fault plans).
+const DOMAIN_ARRIVAL: u64 = 0x7F1C_70AD;
+
+/// Inverse-CDF sampler for the Zipf distribution over tenant ranks
+/// `0..tenants`: rank `r` has weight `(r + 1)^-s`. Exponent `s = 0`
+/// degenerates to uniform; `s` around 1 is the classic web-traffic
+/// skew; larger `s` concentrates harder on the head.
+#[derive(Debug, Clone)]
+pub struct ZipfSampler {
+    /// Cumulative normalized weights; `cdf[r]` = P(rank <= r).
+    cdf: Vec<f64>,
+    s: f64,
+}
+
+impl ZipfSampler {
+    pub fn new(tenants: usize, s: f64) -> Self {
+        assert!(tenants >= 1, "a population of 0 tenants cannot be sampled");
+        assert!(s >= 0.0, "Zipf exponent must be non-negative");
+        let mut cdf = Vec::with_capacity(tenants);
+        let mut total = 0.0;
+        for r in 0..tenants {
+            total += ((r + 1) as f64).powf(-s);
+            cdf.push(total);
+        }
+        for c in &mut cdf {
+            *c /= total;
+        }
+        // Pin the tail so a uniform draw of exactly 1.0 - eps always
+        // lands inside the support.
+        *cdf.last_mut().expect("tenants >= 1") = 1.0;
+        Self { cdf, s }
+    }
+
+    /// Number of ranks in the population.
+    pub fn tenants(&self) -> usize {
+        self.cdf.len()
+    }
+
+    pub fn exponent(&self) -> f64 {
+        self.s
+    }
+
+    /// Analytic probability of rank `r` (for empirical-vs-analytic
+    /// tolerance tests).
+    pub fn pmf(&self, rank: usize) -> f64 {
+        assert!(rank < self.cdf.len());
+        if rank == 0 {
+            self.cdf[0]
+        } else {
+            self.cdf[rank] - self.cdf[rank - 1]
+        }
+    }
+
+    /// Draw one rank (one `uniform()` consumed — the fixed draw count is
+    /// what keeps per-index forked streams aligned).
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.uniform();
+        let r = self.cdf.partition_point(|&c| c < u);
+        r.min(self.cdf.len() - 1) as u64
+    }
+}
+
+/// Shape of a generated load trace. The schedule is a pure function of
+/// `(seed, spec)`.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Tenant population size; sessions are ranks `0..tenants`.
+    pub tenants: usize,
+    /// Zipf popularity exponent (0 = uniform).
+    pub zipf_s: f64,
+    /// Arrivals drawn before thinning.
+    pub events: usize,
+    /// Mean exponential inter-arrival gap within an on-burst.
+    pub mean_gap: Duration,
+    /// Arrivals per on-period; 0 disables off-gaps (one endless burst).
+    pub burst_len: usize,
+    /// Quiet gap inserted between consecutive bursts.
+    pub off_gap: Duration,
+    /// Poisson thinning: probability each drawn arrival is kept.
+    pub keep: f64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        Self {
+            tenants: 8,
+            zipf_s: 1.0,
+            events: 64,
+            mean_gap: Duration::from_millis(1),
+            burst_len: 16,
+            off_gap: Duration::from_millis(10),
+            keep: 1.0,
+        }
+    }
+}
+
+impl LoadSpec {
+    fn validate(&self) {
+        assert!(self.tenants >= 1, "loadgen needs at least one tenant");
+        assert!(self.keep > 0.0 && self.keep <= 1.0, "thinning probability must be in (0, 1]");
+    }
+}
+
+/// One scheduled arrival: a request for `session` offered at offset
+/// `at` from the trace start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoadEvent {
+    pub at: Duration,
+    pub session: SessionId,
+}
+
+/// The random draws of one event index, before schedule assembly.
+/// Exposed so determinism tests can mint draws for disjoint index
+/// ranges on different threads and compare against the sequential
+/// schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalDraw {
+    pub session: SessionId,
+    /// Exponential gap since the previous arrival (before off-gap
+    /// insertion).
+    pub gap: Duration,
+    /// Thinning outcome: `false` means the arrival is dropped (its gap
+    /// still advances the clock — thinning removes points from the
+    /// process, it does not compress time).
+    pub kept: bool,
+}
+
+/// A fully materialized load trace.
+#[derive(Debug, Clone)]
+pub struct LoadPlan {
+    seed: u64,
+    spec: LoadSpec,
+    events: Vec<LoadEvent>,
+}
+
+impl LoadPlan {
+    /// The per-index draw function: event `i`'s randomness comes from
+    /// `fork_seed(seed, DOMAIN_ARRIVAL, i)` alone, in a fixed draw
+    /// order (tenant, gap, thinning coin).
+    pub fn draw(sampler: &ZipfSampler, seed: u64, spec: &LoadSpec, index: u64) -> ArrivalDraw {
+        let mut rng = Rng::new(fork_seed(seed, DOMAIN_ARRIVAL, index));
+        let session = SessionId(sampler.sample(&mut rng));
+        // Inverse-CDF exponential; 1 - u is in (0, 1] so the log is
+        // finite.
+        let u = rng.uniform();
+        let gap = spec.mean_gap.as_secs_f64() * -(1.0 - u).ln();
+        let kept = rng.uniform() < spec.keep;
+        ArrivalDraw { session, gap: Duration::from_secs_f64(gap), kept }
+    }
+
+    /// Materialize the whole schedule for `(seed, spec)`.
+    pub fn from_seed(seed: u64, spec: &LoadSpec) -> Self {
+        spec.validate();
+        let sampler = ZipfSampler::new(spec.tenants, spec.zipf_s);
+        let mut at = Duration::ZERO;
+        let mut events = Vec::new();
+        for i in 0..spec.events as u64 {
+            if spec.burst_len > 0 && i > 0 && i % spec.burst_len as u64 == 0 {
+                at += spec.off_gap;
+            }
+            let d = Self::draw(&sampler, seed, spec, i);
+            at += d.gap;
+            if d.kept {
+                events.push(LoadEvent { at, session: d.session });
+            }
+        }
+        Self { seed, spec: spec.clone(), events }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn spec(&self) -> &LoadSpec {
+        &self.spec
+    }
+
+    /// Kept arrivals in time order.
+    pub fn events(&self) -> &[LoadEvent] {
+        &self.events
+    }
+
+    /// Requests per session across the trace.
+    pub fn tenant_histogram(&self) -> BTreeMap<u64, u64> {
+        let mut h = BTreeMap::new();
+        for e in &self.events {
+            *h.entry(e.session.0).or_insert(0u64) += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_cdf_is_monotone_and_normalized() {
+        let z = ZipfSampler::new(100, 1.2);
+        assert_eq!(z.tenants(), 100);
+        let mut prev = 0.0;
+        let mut total = 0.0;
+        for r in 0..100 {
+            let p = z.pmf(r);
+            assert!(p > 0.0);
+            assert!(p <= prev || r == 0, "pmf must be non-increasing in rank");
+            prev = p;
+            total += p;
+        }
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zipf_zero_exponent_is_uniform() {
+        let z = ZipfSampler::new(10, 0.0);
+        for r in 0..10 {
+            assert!((z.pmf(r) - 0.1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn zipf_empirical_matches_analytic_within_tolerance() {
+        let z = ZipfSampler::new(64, 1.2);
+        let mut rng = Rng::new(0x51AB);
+        let n = 100_000u64;
+        let mut counts = vec![0u64; 64];
+        for _ in 0..n {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        // Head ranks have plenty of mass; 10% relative tolerance is
+        // generous at n = 100k and pins gross CDF bugs.
+        for r in 0..8 {
+            let emp = counts[r] as f64 / n as f64;
+            let ana = z.pmf(r);
+            assert!(
+                (emp - ana).abs() / ana < 0.10,
+                "rank {r}: empirical {emp:.5} vs analytic {ana:.5}"
+            );
+        }
+        // And the whole-population mass balances.
+        assert_eq!(counts.iter().sum::<u64>(), n);
+    }
+
+    #[test]
+    fn load_plan_is_a_pure_function_of_the_seed() {
+        let spec = LoadSpec { events: 200, keep: 0.8, ..LoadSpec::default() };
+        let a = LoadPlan::from_seed(7, &spec);
+        let b = LoadPlan::from_seed(7, &spec);
+        assert_eq!(a.events(), b.events(), "same seed must replay the identical trace");
+        let c = LoadPlan::from_seed(8, &spec);
+        assert_ne!(a.events(), c.events(), "distinct seeds must diverge");
+        // Thinning dropped some arrivals but kept the clock honest.
+        assert!(a.events().len() < 200);
+        assert!(a.events().len() > 100);
+    }
+
+    #[test]
+    fn arrivals_are_time_ordered_with_off_gaps_between_bursts() {
+        let spec = LoadSpec {
+            events: 48,
+            burst_len: 16,
+            off_gap: Duration::from_millis(50),
+            mean_gap: Duration::from_micros(100),
+            ..LoadSpec::default()
+        };
+        let plan = LoadPlan::from_seed(3, &spec);
+        let ev = plan.events();
+        assert!(ev.windows(2).all(|w| w[0].at <= w[1].at), "schedule must be time-ordered");
+        // The off-gap dominates the tiny in-burst gaps, so the trace
+        // spans at least the two inserted quiet periods.
+        assert!(ev.last().unwrap().at >= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn per_index_draws_are_independent_of_mint_order() {
+        let spec = LoadSpec::default();
+        let sampler = ZipfSampler::new(spec.tenants, spec.zipf_s);
+        // Drawing index 5 cold equals drawing it after 0..5.
+        let cold = LoadPlan::draw(&sampler, 42, &spec, 5);
+        for i in 0..5 {
+            let _ = LoadPlan::draw(&sampler, 42, &spec, i);
+        }
+        let warm = LoadPlan::draw(&sampler, 42, &spec, 5);
+        assert_eq!(cold, warm);
+    }
+}

@@ -1,0 +1,32 @@
+//! Traffic realism for multi-tenant serving: load generation, QoS
+//! admission, and autoscaling.
+//!
+//! The cluster layer proves *mechanism* — shards, routing, admission
+//! bounds, reshard, supervision. This module supplies the *policy* side
+//! the ROADMAP's million-user north-star needs, in three layers that
+//! compose but do not require each other:
+//!
+//! - [`loadgen`] — seed-deterministic Zipf-popular, bursty arrival
+//!   schedules ([`LoadPlan`]): the adversarial tenant distributions the
+//!   QoS and autoscaling layers are tested against, replayable from one
+//!   seed like `runtime::faults` plans.
+//! - [`qos`] — per-tenant token buckets ([`TokenBucket`]) and a
+//!   weighted deficit-round-robin admission queue ([`DrrQueue`]), wired
+//!   into `Cluster::submit` via `ClusterOptions::qos`: a hot tenant is
+//!   throttled and queued on its own lane instead of starving everyone
+//!   behind the shared permit pool.
+//! - [`autoscale`] — a metrics-driven control loop
+//!   ([`AutoscaledCluster`]) that watches backlog, worst-tenant p99 and
+//!   key-cache hit rate against watermarks (with hysteresis and
+//!   cooldown) and reshards the cluster live.
+
+pub mod autoscale;
+pub mod loadgen;
+pub mod qos;
+
+pub use autoscale::{
+    AutoscaleController, AutoscaleDecision, AutoscaleObservation, AutoscaleOptions,
+    AutoscaledCluster,
+};
+pub use loadgen::{ArrivalDraw, LoadEvent, LoadPlan, LoadSpec, ZipfSampler};
+pub use qos::{DrrQueue, QosOptions, TokenBucket, TokenBucketSpec};

@@ -48,6 +48,21 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
+/// Jain's fairness index: `(Σx)² / (n·Σx²)`, over per-tenant allocations
+/// (throughputs, admitted counts, inverse latencies — any "bigger is
+/// better" share). Ranges from `1/n` (one tenant gets everything) to
+/// `1.0` (perfectly equal); scale-invariant, so absolute load level
+/// doesn't matter. Empty or all-zero input reports 1.0 — nobody is being
+/// treated unfairly when nothing is allocated.
+pub fn jains_index(xs: &[f64]) -> f64 {
+    let sum: f64 = xs.iter().sum();
+    let sum_sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sum_sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sum_sq)
+}
+
 /// A bounded, seed-deterministic uniform sample of an unbounded stream
 /// (Algorithm R). Below the capacity it holds *every* pushed value in
 /// arrival order — so consumers that merge/percentile over small runs see
@@ -146,6 +161,21 @@ mod tests {
         let rev = [2.0, 1.0, 3.0];
         assert_eq!(percentile(&fwd, 50.0), 2.0);
         assert_eq!(percentile(&rev, 50.0), 2.0);
+    }
+
+    #[test]
+    fn jains_index_spans_equal_to_one_hot() {
+        assert_eq!(jains_index(&[]), 1.0);
+        assert_eq!(jains_index(&[0.0, 0.0]), 1.0);
+        assert!((jains_index(&[5.0, 5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        // One tenant hogging everything: J = 1/n.
+        assert!((jains_index(&[12.0, 0.0, 0.0, 0.0]) - 0.25).abs() < 1e-12);
+        // Scale invariance.
+        let a = jains_index(&[1.0, 2.0, 3.0]);
+        let b = jains_index(&[10.0, 20.0, 30.0]);
+        assert!((a - b).abs() < 1e-12);
+        // Mild skew sits strictly between the extremes.
+        assert!(a > 1.0 / 3.0 && a < 1.0);
     }
 
     #[test]

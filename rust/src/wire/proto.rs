@@ -100,6 +100,14 @@ pub enum Status {
     /// Uploaded keys' parameter set does not match the server's
     /// ([`RegisterError::ParamMismatch`]).
     ParamMismatch = 11,
+    /// QoS: the session's token bucket is empty — its rate limit is
+    /// exceeded; retry after the bucket refills
+    /// ([`ClusterError::Throttled`]).
+    Throttled = 12,
+    /// QoS: the session's fair-queue lane is at its depth bound — this
+    /// tenant must shed load; other tenants are unaffected
+    /// ([`ClusterError::TenantQueueFull`]).
+    TenantQueueFull = 13,
 }
 
 impl Status {
@@ -117,6 +125,8 @@ impl Status {
             9 => Status::UnsupportedVersion,
             10 => Status::RegisterUnsupported,
             11 => Status::ParamMismatch,
+            12 => Status::Throttled,
+            13 => Status::TenantQueueFull,
             _ => return None,
         })
     }
@@ -131,6 +141,8 @@ impl Status {
             ClusterError::ShardFull => Status::ShardFull,
             ClusterError::Stopped => Status::Stopped,
             ClusterError::ResolveFailed => Status::ResolveFailed,
+            ClusterError::Throttled => Status::Throttled,
+            ClusterError::TenantQueueFull => Status::TenantQueueFull,
         }
     }
 
@@ -258,10 +270,10 @@ mod tests {
 
     #[test]
     fn status_codes_roundtrip() {
-        for v in 0..=11u8 {
+        for v in 0..=13u8 {
             let s = Status::from_u8(v).expect("defined");
             assert_eq!(s.as_u8(), v);
         }
-        assert!(Status::from_u8(12).is_none());
+        assert!(Status::from_u8(14).is_none());
     }
 }

@@ -138,6 +138,7 @@ fn deadline_releases_admission_capacity() {
             policy: PlacementPolicy::RoundRobin,
             queue_depth: Some(1),
             coordinator: chaos_coordinator_options(&faults),
+            qos: None,
         },
         SupervisorOptions::default(),
     );
@@ -182,6 +183,7 @@ fn failed_batch_retries_on_healthy_shard_and_original_restarts() {
             policy: PlacementPolicy::RoundRobin,
             queue_depth: None,
             coordinator: chaos_coordinator_options(&faults),
+            qos: None,
         },
         SupervisorOptions { max_retries: 2, restart_after_failures: 1, ..Default::default() },
     );
@@ -234,6 +236,7 @@ fn resolve_failure_redirects_to_another_shard() {
             policy: PlacementPolicy::RoundRobin,
             queue_depth: None,
             coordinator: chaos_coordinator_options(&faults),
+            qos: None,
         },
         SupervisorOptions::default(),
     );
@@ -416,6 +419,7 @@ fn chaos_soak_every_request_terminates_and_recovers_bitwise() {
                 policy: PlacementPolicy::RoundRobin,
                 queue_depth: None,
                 coordinator: chaos_coordinator_options(&faults),
+                qos: None,
             },
             SupervisorOptions { max_retries: 2, restart_after_failures: 2, ..Default::default() },
         );

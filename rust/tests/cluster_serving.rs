@@ -88,6 +88,7 @@ fn four_shard_cluster_matches_single_coordinator_bitwise() {
             policy: PlacementPolicy::RoundRobin,
             queue_depth: None,
             coordinator: test_coordinator_options(),
+            qos: None,
         },
     );
     let pend: Vec<_> = encrypted
@@ -127,6 +128,7 @@ fn consistent_hash_routes_a_client_to_one_shard() {
             policy: PlacementPolicy::ConsistentHash,
             queue_depth: None,
             coordinator: test_coordinator_options(),
+            qos: None,
         },
     );
     let n = 10usize;
@@ -163,6 +165,7 @@ fn cluster_full_backpressure_fires_at_depth() {
             policy: PlacementPolicy::RoundRobin,
             queue_depth: Some(depth),
             coordinator: test_coordinator_options(),
+            qos: None,
         },
     );
     let enc = |rng: &mut Rng| vec![encrypt_message(1, &sk, rng)];
@@ -207,6 +210,7 @@ fn shutdown_drains_already_admitted_requests() {
             policy: PlacementPolicy::LeastOutstanding,
             queue_depth: None,
             coordinator: test_coordinator_options(),
+            qos: None,
         },
     );
     let pend: Vec<_> = (0..4u64)
@@ -241,6 +245,7 @@ fn reshard_growth_past_fixed_keys_is_a_typed_error_not_a_panic() {
             policy: PlacementPolicy::RoundRobin,
             queue_depth: None,
             coordinator: test_coordinator_options(),
+            qos: None,
         },
     );
     // Growing past the 2 provided key sets cannot mint material: typed
@@ -290,6 +295,7 @@ fn snapshot_sums_shards_and_cross_checks_sim() {
             policy: PlacementPolicy::RoundRobin,
             queue_depth: None,
             coordinator: test_coordinator_options(),
+            qos: None,
         },
     );
     let pend: Vec<_> = (0..n)

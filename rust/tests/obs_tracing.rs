@@ -95,6 +95,7 @@ fn cluster_options() -> ClusterOptions {
         policy: PlacementPolicy::RoundRobin,
         queue_depth: None,
         coordinator: coord_options(),
+        qos: None,
     }
 }
 

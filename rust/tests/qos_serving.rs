@@ -1,0 +1,754 @@
+//! QoS + traffic suite: weighted-fair admission, token-bucket throttling,
+//! metrics-driven autoscaling, and loadgen determinism.
+//!
+//! The contract under test, per the traffic subsystem's design:
+//!
+//! - **No starvation**: one tenant offering 100x load cannot push other
+//!   tenants' requests behind its backlog — DRR interleaves cold tenants
+//!   at the quantum, so they complete while the hot queue is still long.
+//! - **Throttle exactness**: a tenant's admitted requests never exceed
+//!   bucket capacity + rate x elapsed; every excess submit fails typed
+//!   (`Throttled`), and the counter matches the client's observation.
+//! - **Autoscaler**: a burst reshards the cluster up and idleness brings
+//!   it back down, with zero lost or double-executed requests (the drain
+//!   semantics of `reshard` carry through the control loop).
+//! - **QoS off**: serving output stays bitwise-identical to the plain
+//!   coordinator path and every new counter reads 0.
+//! - **Loadgen**: schedules are a pure function of the seed, identical
+//!   across minting thread counts; Zipf empirical frequencies match the
+//!   analytic pmf within tolerance.
+//! - **Composition**: faults + throttling + autoscaling together still
+//!   terminate every request typed (seeds from `CHAOS_SEEDS`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use taurus::cluster::{
+    Cluster, ClusterError, ClusterOptions, PlacementPolicy, StoreFactory, SupervisorOptions,
+};
+use taurus::coordinator::{BackendKind, Coordinator, CoordinatorOptions};
+use taurus::ir::builder::ProgramBuilder;
+use taurus::ir::{interp, Program};
+use taurus::params::TEST1;
+use taurus::runtime::faults::{FaultPlan, FaultSpec, FaultyStore};
+use taurus::tenant::{KeyStore, StaticKeys};
+use taurus::tfhe::pbs::{decrypt_message, encrypt_message};
+use taurus::tfhe::{LweCiphertext, SecretKeys, ServerKeys};
+use taurus::traffic::{
+    ArrivalDraw, AutoscaleOptions, AutoscaledCluster, LoadEvent, LoadPlan, LoadSpec, QosOptions,
+    TokenBucketSpec, ZipfSampler,
+};
+use taurus::util::rng::Rng;
+
+/// Cheapest serving shape (1 PBS per request) so backlog-building tests
+/// can push 100+ requests without dominating the suite's budget.
+fn lut_program() -> Program {
+    let mut b = ProgramBuilder::new("qos-lut", TEST1.width);
+    let x = b.input();
+    let o = b.lut_fn(x, |m| (m + 1) % 8);
+    b.output(o);
+    b.finish()
+}
+
+/// Fanout program (1 shared KS, 2 PBS) for the bitwise-identity test —
+/// the same shape the chaos suite compares against.
+fn fan_program() -> Program {
+    let mut b = ProgramBuilder::new("qos-fan", TEST1.width);
+    let x = b.input();
+    let y = b.input();
+    let d = b.add(x, y);
+    let r0 = b.lut_fn(d, |m| (m + 1) % 8);
+    let r1 = b.lut_fn(d, |m| m ^ 1);
+    b.outputs(&[r0, r1]);
+    b.finish()
+}
+
+fn static_factory(keys: Arc<ServerKeys>) -> StoreFactory {
+    Arc::new(move |_shard| Arc::new(StaticKeys::new(keys.clone())) as Arc<dyn KeyStore>)
+}
+
+fn chaos_seeds() -> Vec<u64> {
+    std::env::var("CHAOS_SEEDS")
+        .unwrap_or_else(|_| "0 1".into())
+        .split_whitespace()
+        .map(|s| s.parse().expect("CHAOS_SEEDS must be whitespace-separated u64s"))
+        .collect()
+}
+
+#[test]
+fn hot_tenant_cannot_starve_cold_tenants() {
+    let mut rng = Rng::new(41);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = lut_program();
+    let hot = 100usize;
+    let cold_tenants = 2usize;
+    let mut cluster = Cluster::start_with_store_factory(
+        prog,
+        static_factory(keys),
+        ClusterOptions {
+            shards: 1,
+            policy: PlacementPolicy::RoundRobin,
+            // Two admission permits: service is the bottleneck, so the
+            // fair queue holds the backlog where DRR ordering matters.
+            queue_depth: Some(2),
+            coordinator: CoordinatorOptions {
+                workers: 1,
+                batch_capacity: 1,
+                max_batch_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            qos: Some(QosOptions {
+                tenant_queue_depth: hot + 8,
+                ..QosOptions::default()
+            }),
+        },
+    );
+
+    // Pre-encrypt everything so the submission burst is tight: the hot
+    // tenant's 100 requests are all queued before the cold tenants ask.
+    let hot_inputs: Vec<Vec<LweCiphertext>> =
+        (0..hot).map(|i| vec![encrypt_message((i % 6) as u64, &sk, &mut rng)]).collect();
+    let cold_inputs: Vec<Vec<LweCiphertext>> =
+        (0..cold_tenants).map(|t| vec![encrypt_message(t as u64, &sk, &mut rng)]).collect();
+
+    // QoS submits enqueue and return immediately, so the hot backlog is
+    // fully formed before the cold tenants ask.
+    let mut submissions = Vec::new();
+    for cts in hot_inputs {
+        let r = cluster.submit(0u64, cts).expect("hot tenant admits (no bucket armed)");
+        submissions.push((0u64, r));
+    }
+    for (t, cts) in cold_inputs.into_iter().enumerate() {
+        let sess = (t + 1) as u64;
+        let r = cluster.submit(sess, cts).expect("cold tenant admits");
+        submissions.push((sess, r));
+    }
+
+    // One waiter thread per response, each dropping its handle as soon as
+    // it completes: permits are held by live handles, so prompt drops are
+    // what lets the two admission slots cycle through the backlog. The
+    // shared counter records cluster-wide completion order.
+    let order = Arc::new(AtomicUsize::new(0));
+    let waiters: Vec<_> = submissions
+        .into_iter()
+        .map(|(sess, resp)| {
+            let order = order.clone();
+            std::thread::spawn(move || {
+                let _ = resp.recv().expect("served");
+                (sess, order.fetch_add(1, Ordering::SeqCst))
+            })
+        })
+        .collect();
+    let completions: Vec<(u64, usize)> =
+        waiters.into_iter().map(|h| h.join().expect("waiter thread")).collect();
+
+    // Cold tenants offered 1 request each against a 100-deep hot backlog
+    // (100x load). DRR serves each lane one quantum per round, so both
+    // cold requests complete within a few service slots — not after the
+    // hot queue drains (FIFO would complete them at positions 101..102).
+    for (sess, k) in &completions {
+        if *sess != 0 {
+            assert!(
+                *k <= 25,
+                "cold tenant {sess} completed at position {k} of {} — starved behind the \
+                 hot backlog",
+                hot + cold_tenants,
+            );
+        }
+    }
+    assert_eq!(completions.len(), hot + cold_tenants);
+    let snap = cluster.snapshot();
+    assert_eq!(snap.requests, hot + cold_tenants, "every admitted request served exactly once");
+    assert_eq!(snap.qos_throttled, 0, "no bucket armed, so nothing throttles");
+    assert_eq!(snap.qos_queue_rejections, 0);
+    // Satellite: per-tenant latency reservoirs surface for every session
+    // that served — the fairness report reads p99 from here.
+    for t in 0..=cold_tenants as u64 {
+        assert!(
+            snap.tenant_p99_ms(t).is_some(),
+            "session {t} must have latency samples in the per-tenant reservoir"
+        );
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn token_bucket_throttling_is_exact() {
+    let mut rng = Rng::new(42);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let rate = 50.0f64;
+    let burst = 5.0f64;
+    let mut cluster = Cluster::start_with_store_factory(
+        lut_program(),
+        static_factory(keys),
+        ClusterOptions {
+            shards: 1,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: None,
+            coordinator: CoordinatorOptions {
+                workers: 1,
+                batch_capacity: 8,
+                max_batch_wait: Duration::from_micros(500),
+                ..Default::default()
+            },
+            qos: Some(QosOptions {
+                bucket: Some(TokenBucketSpec::new(rate, burst)),
+                tenant_queue_depth: 64,
+                ..QosOptions::default()
+            }),
+        },
+    );
+
+    let n = 40usize;
+    let inputs: Vec<Vec<LweCiphertext>> =
+        (0..n).map(|i| vec![encrypt_message((i % 6) as u64, &sk, &mut rng)]).collect();
+    let t0 = Instant::now();
+    let mut admitted = Vec::new();
+    let mut throttled = 0usize;
+    for cts in inputs {
+        match cluster.submit(7u64, cts) {
+            Ok(r) => admitted.push(r),
+            Err(ClusterError::Throttled) => throttled += 1,
+            Err(e) => panic!("only Throttled is expected here: {e}"),
+        }
+    }
+    // The exactness bound: tokens available over the window are the
+    // initial burst plus rate x elapsed (measured AFTER the last submit,
+    // so it upper-bounds every refill the bucket saw; +1 absorbs the
+    // token in flight at the boundary).
+    let elapsed = t0.elapsed().as_secs_f64();
+    let bound = burst + rate * elapsed + 1.0;
+    assert!(
+        (admitted.len() as f64) <= bound,
+        "admitted {} exceeds the token-bucket bound {bound:.2} (elapsed {elapsed:.4}s)",
+        admitted.len(),
+    );
+    assert!(
+        admitted.len() >= burst as usize,
+        "the bucket starts full: at least the burst is admitted ({} < {burst})",
+        admitted.len(),
+    );
+    assert_eq!(admitted.len() + throttled, n, "every submit terminated typed");
+
+    for r in &admitted {
+        let _ = r.recv().expect("admitted requests serve normally");
+    }
+    let served = admitted.len();
+    drop(admitted);
+    let snap = cluster.snapshot();
+    assert_eq!(snap.qos_throttled, throttled as u64, "counter matches client-observed throttles");
+    assert_eq!(snap.qos_queue_rejections, 0);
+    assert_eq!(snap.requests, served);
+    cluster.shutdown();
+}
+
+#[test]
+fn autoscaler_reshards_up_and_down_without_losing_requests() {
+    let mut rng = Rng::new(43);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = lut_program();
+    let cluster = Cluster::start_with_store_factory(
+        prog.clone(),
+        static_factory(keys),
+        ClusterOptions {
+            shards: 1,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: None,
+            coordinator: CoordinatorOptions {
+                workers: 1,
+                batch_capacity: 1,
+                max_batch_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            qos: None,
+        },
+    );
+    let mut auto_cluster = AutoscaledCluster::start(
+        cluster,
+        AutoscaleOptions {
+            min_shards: 1,
+            max_shards: 3,
+            high_watermark: 4.0,
+            low_watermark: 1.0,
+            hysteresis: 1,
+            cooldown_polls: 1,
+            poll: Duration::from_millis(2),
+            ..Default::default()
+        },
+    );
+
+    // The burst: 64 single-PBS requests land at once on one slow shard,
+    // so the controller sees backlog-per-shard far above the high
+    // watermark within a poll or two.
+    let n = 64usize;
+    let queries: Vec<u64> = (0..n as u64).map(|i| i % 6).collect();
+    let encrypted: Vec<Vec<LweCiphertext>> =
+        queries.iter().map(|&q| vec![encrypt_message(q, &sk, &mut rng)]).collect();
+    let pend: Vec<_> = encrypted
+        .into_iter()
+        .enumerate()
+        .map(|(i, cts)| (i, auto_cluster.submit(i as u64 % 8, cts).expect("submit")))
+        .collect();
+    // Zero lost, zero double-executed: every response arrives exactly
+    // once and decrypts to the interpreter's answer, across however many
+    // reshards fired mid-burst (reshard drains admitted work first).
+    for (i, r) in &pend {
+        let outs = r.recv().expect("served across reshards");
+        let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+        assert_eq!(got, interp::eval(&prog, &[queries[*i]]), "request {i}");
+    }
+    drop(pend);
+
+    // Convergence: scaled up under the burst, back down to min when
+    // idle. Poll with a generous deadline — the control loop's cadence
+    // is milliseconds, the bound is seconds.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let (ups, downs) = auto_cluster.scale_events();
+        if ups >= 1 && downs >= 1 && auto_cluster.shard_count() == 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "autoscaler must scale up under the burst and settle back to min when idle \
+             (ups {ups}, downs {downs}, shards {})",
+            auto_cluster.shard_count(),
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let snap = auto_cluster.snapshot();
+    assert_eq!(
+        snap.requests, n,
+        "zero lost or double-executed requests across the reshard cycle"
+    );
+    assert!(snap.autoscale_ups >= 1 && snap.autoscale_downs >= 1);
+
+    // No oscillation at rest: an idle cluster pinned at min_shards emits
+    // no further scale events (low watermark + min bound = Hold).
+    let settled = auto_cluster.scale_events();
+    std::thread::sleep(Duration::from_millis(60));
+    assert_eq!(
+        auto_cluster.scale_events(),
+        settled,
+        "idle cluster must not flap between shard counts"
+    );
+    assert_eq!(auto_cluster.shard_count(), 1);
+    auto_cluster.shutdown();
+}
+
+#[test]
+fn qos_off_serving_is_bitwise_identical_with_zero_new_counters() {
+    let mut rng = Rng::new(44);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    let n = 12usize;
+    let encrypted: Vec<Vec<LweCiphertext>> = (0..n as u64)
+        .map(|i| {
+            vec![
+                encrypt_message(i % 6, &sk, &mut rng),
+                encrypt_message((i * 3) % 6, &sk, &mut rng),
+            ]
+        })
+        .collect();
+
+    // Pre-PR path: a bare coordinator, no cluster, no QoS anywhere.
+    let reference: Vec<Vec<LweCiphertext>> = {
+        let mut coord = Coordinator::start(
+            prog.clone(),
+            keys.clone(),
+            CoordinatorOptions {
+                workers: 1,
+                batch_capacity: 1,
+                max_batch_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+        );
+        let pend: Vec<_> =
+            encrypted.iter().map(|cts| coord.submit(cts.clone()).expect("submit")).collect();
+        let outs = pend.iter().map(|t| t.wait().expect("reference")).collect();
+        coord.shutdown();
+        outs
+    };
+
+    // QoS-off cluster serving of the identical ciphertexts.
+    let mut cluster = Cluster::start_with_store_factory(
+        prog,
+        static_factory(keys),
+        ClusterOptions {
+            shards: 2,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: None,
+            coordinator: CoordinatorOptions {
+                workers: 1,
+                batch_capacity: 1,
+                max_batch_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            qos: None,
+        },
+    );
+    let pend: Vec<_> = encrypted
+        .iter()
+        .enumerate()
+        .map(|(i, cts)| (i, cluster.submit(i as u64, cts.clone()).expect("submit")))
+        .collect();
+    for (i, r) in &pend {
+        let outs = r.recv().expect("served");
+        assert_eq!(
+            outs, reference[*i],
+            "request {i}: QoS-off cluster output must be bitwise-identical to the plain \
+             coordinator path"
+        );
+    }
+    drop(pend);
+    let snap = cluster.snapshot();
+    assert_eq!(snap.qos_throttled, 0, "QoS off: throttle counter must read 0");
+    assert_eq!(snap.qos_queue_rejections, 0, "QoS off: rejection counter must read 0");
+    assert_eq!(snap.autoscale_ups, 0, "no autoscaler: scale-up counter must read 0");
+    assert_eq!(snap.autoscale_downs, 0, "no autoscaler: scale-down counter must read 0");
+    assert_eq!(snap.requests, n);
+    cluster.shutdown();
+}
+
+/// Regression (wire-server client-disconnect path): a caller that DROPS a
+/// `ClusterResponse` without ever waiting must still release its
+/// admission permit — and, on the QoS path, its per-tenant queue slot.
+#[test]
+fn dropping_a_response_without_waiting_frees_permit_and_queue_slot() {
+    let mut rng = Rng::new(45);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = lut_program();
+    let enc = |rng: &mut Rng| vec![encrypt_message(3, &sk, rng)];
+
+    // --- Direct path: one admission permit, held by the response handle.
+    let mut cluster = Cluster::start_with_store_factory(
+        prog.clone(),
+        static_factory(keys.clone()),
+        ClusterOptions {
+            shards: 1,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: Some(1),
+            coordinator: CoordinatorOptions { workers: 1, ..Default::default() },
+            qos: None,
+        },
+    );
+    let held = cluster.submit(0u64, enc(&mut rng)).expect("admit");
+    assert_eq!(cluster.outstanding(), 1);
+    assert!(
+        matches!(cluster.submit(1u64, enc(&mut rng)), Err(ClusterError::ClusterFull)),
+        "the single permit is held"
+    );
+    drop(held); // never waited
+    assert_eq!(cluster.outstanding(), 0, "dropping an unawaited response frees its permit");
+    let next = cluster.submit(1u64, enc(&mut rng)).expect("slot is free again");
+    let _ = next.recv().expect("serves normally");
+    drop(next);
+    cluster.shutdown();
+
+    // --- QoS path: one permit AND a 1-deep per-tenant queue. Pipeline:
+    // a plug request holds the permit, one job sits in the dispatcher's
+    // hand waiting for it, one fills the tenant FIFO, and the next
+    // rejects typed. Dropping the unawaited handles must free both the
+    // permit chain and the queue slot.
+    let mut cluster = Cluster::start_with_store_factory(
+        prog,
+        static_factory(keys),
+        ClusterOptions {
+            shards: 1,
+            policy: PlacementPolicy::RoundRobin,
+            queue_depth: Some(1),
+            coordinator: CoordinatorOptions {
+                workers: 1,
+                batch_capacity: 1,
+                max_batch_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            qos: Some(QosOptions { tenant_queue_depth: 1, ..QosOptions::default() }),
+        },
+    );
+    let plug = cluster.submit(9u64, enc(&mut rng)).expect("plug queues");
+    // Wait until the dispatcher picked the plug up and claimed the single
+    // permit (its job left the fair queue). The live `plug` handle keeps
+    // that permit held even after its service completes, so from here the
+    // dispatcher is deterministically starved of permits.
+    let spin_deadline = Instant::now() + Duration::from_secs(10);
+    while cluster.fair_queue_len() > 0 || cluster.outstanding() < 1 {
+        assert!(Instant::now() < spin_deadline, "plug must dispatch");
+        std::thread::yield_now();
+    }
+    let in_hand = cluster.submit(5u64, enc(&mut rng)).expect("queues behind the plug");
+    // The dispatcher pops this job immediately and blocks waiting for the
+    // permit — it leaves the FIFO even though it cannot dispatch.
+    let spin_deadline = Instant::now() + Duration::from_secs(10);
+    while cluster.fair_queue_len() > 0 {
+        assert!(Instant::now() < spin_deadline, "dispatcher must take the job in hand");
+        std::thread::yield_now();
+    }
+    let queued = cluster.submit(5u64, enc(&mut rng)).expect("fills the tenant FIFO");
+    // Depth-1 tenant FIFO with one job in the dispatcher's hand and the
+    // permit pinned by the plug: deterministically full.
+    match cluster.submit(5u64, enc(&mut rng)) {
+        Err(ClusterError::TenantQueueFull) => {}
+        Ok(_) => panic!("a full 1-deep tenant FIFO must reject"),
+        Err(e) => panic!("unexpected admission error: {e}"),
+    }
+
+    // Client disconnect: drop every unawaited handle, then release the
+    // plug. Cancelled jobs are skipped by the dispatcher, freeing the
+    // queue slots; dropped handles free their permits.
+    drop(in_hand);
+    drop(queued);
+    let _ = plug.recv().expect("plug serves");
+    drop(plug);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        // A fresh submit for the same tenant must eventually be admitted
+        // AND served — proof the queue slot and permit both came back.
+        match cluster.submit(5u64, enc(&mut rng)) {
+            Ok(r) => {
+                let _ = r.recv().expect("fresh request serves after the disconnects");
+                drop(r);
+                break;
+            }
+            Err(ClusterError::TenantQueueFull) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "cancelled jobs must vacate the tenant queue"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+    }
+    // Everything drains: no leaked permits from the dropped handles.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while cluster.outstanding() > 0 || cluster.fair_queue_len() > 0 {
+        assert!(Instant::now() < deadline, "dropped responses must release every permit");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn loadgen_schedule_is_identical_across_thread_counts() {
+    let spec = LoadSpec {
+        tenants: 16,
+        zipf_s: 1.1,
+        events: 256,
+        keep: 0.9,
+        ..LoadSpec::default()
+    };
+    let seed = 0xD15C_0C0Du64;
+    let sequential = LoadPlan::from_seed(seed, &spec);
+    assert!(!sequential.events().is_empty());
+
+    for threads in [2usize, 5, 8] {
+        // Mint per-index draws in disjoint chunks on real threads —
+        // index-addressable forking means chunk boundaries and thread
+        // interleavings cannot change a single draw.
+        let chunk = spec.events.div_ceil(threads);
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let spec = spec.clone();
+                std::thread::spawn(move || {
+                    let sampler = ZipfSampler::new(spec.tenants, spec.zipf_s);
+                    let lo = t * chunk;
+                    let hi = ((t + 1) * chunk).min(spec.events);
+                    (lo..hi)
+                        .map(|i| LoadPlan::draw(&sampler, seed, &spec, i as u64))
+                        .collect::<Vec<ArrivalDraw>>()
+                })
+            })
+            .collect();
+        let draws: Vec<ArrivalDraw> =
+            handles.into_iter().flat_map(|h| h.join().expect("mint thread")).collect();
+        assert_eq!(draws.len(), spec.events);
+
+        // Reassemble exactly as `from_seed` does and compare bitwise.
+        let mut at = Duration::ZERO;
+        let mut events = Vec::new();
+        for (i, d) in draws.iter().enumerate() {
+            if spec.burst_len > 0 && i > 0 && i % spec.burst_len == 0 {
+                at += spec.off_gap;
+            }
+            at += d.gap;
+            if d.kept {
+                events.push(LoadEvent { at, session: d.session });
+            }
+        }
+        assert_eq!(
+            events.as_slice(),
+            sequential.events(),
+            "{threads}-thread mint must produce the identical schedule"
+        );
+    }
+}
+
+#[test]
+fn zipf_empirical_frequencies_match_analytic_pmf() {
+    let tenants = 32usize;
+    let z = ZipfSampler::new(tenants, 1.0);
+    let mut rng = Rng::new(0x21BF);
+    let n = 200_000u64;
+    let mut counts = vec![0u64; tenants];
+    for _ in 0..n {
+        counts[z.sample(&mut rng) as usize] += 1;
+    }
+    assert_eq!(counts.iter().sum::<u64>(), n);
+    // Head ranks carry enough mass for a tight relative check; the tail
+    // gets an absolute tolerance (few-hundred-count bins are noisy).
+    for r in 0..tenants {
+        let emp = counts[r] as f64 / n as f64;
+        let ana = z.pmf(r);
+        if r < 8 {
+            assert!(
+                (emp - ana).abs() / ana < 0.10,
+                "rank {r}: empirical {emp:.5} vs analytic {ana:.5}"
+            );
+        } else {
+            assert!(
+                (emp - ana).abs() < 0.005,
+                "rank {r}: empirical {emp:.5} vs analytic {ana:.5}"
+            );
+        }
+    }
+}
+
+/// Chaos composition: deterministic faults + token buckets + fair
+/// queueing + the autoscaler, all armed at once. The only contract that
+/// survives composition is the strongest one: every request TERMINATES —
+/// served (decrypting to the interpreter's answer), throttled, rejected,
+/// or failed typed — and the throttle counter stays exact.
+#[test]
+fn chaos_composition_faults_throttling_autoscale_all_terminate() {
+    let mut rng = Rng::new(46);
+    let sk = SecretKeys::generate(&TEST1, &mut rng);
+    let keys = Arc::new(ServerKeys::generate(&sk, &mut rng));
+    let prog = fan_program();
+    let n = 24usize;
+    let queries: Vec<[u64; 2]> = (0..n as u64).map(|i| [i % 6, (i * 3) % 6]).collect();
+
+    for seed in chaos_seeds() {
+        let faults = Arc::new(FaultPlan::from_seed(
+            seed,
+            &FaultSpec {
+                op_horizon: 8,
+                panics: 2,
+                delays: 1,
+                delay: Duration::from_millis(10),
+                resolve_horizon: 8,
+                resolve_failures: 2,
+            },
+        ));
+        let factory: StoreFactory = {
+            let keys = keys.clone();
+            let faults = faults.clone();
+            Arc::new(move |_shard| {
+                let inner = Arc::new(StaticKeys::new(keys.clone())) as Arc<dyn KeyStore>;
+                Arc::new(FaultyStore::new(inner, faults.clone())) as Arc<dyn KeyStore>
+            })
+        };
+        let cluster = Cluster::start_with_store_factory_supervised(
+            prog.clone(),
+            factory,
+            ClusterOptions {
+                shards: 1,
+                policy: PlacementPolicy::RoundRobin,
+                queue_depth: Some(4),
+                coordinator: CoordinatorOptions {
+                    workers: 1,
+                    batch_capacity: 1,
+                    max_batch_wait: Duration::from_millis(1),
+                    backend: BackendKind::NativeChaos { faults: faults.clone() },
+                    ..Default::default()
+                },
+                qos: Some(QosOptions {
+                    bucket: Some(TokenBucketSpec::new(200.0, 8.0)),
+                    tenant_queue_depth: 8,
+                    ..QosOptions::default()
+                }),
+            },
+            SupervisorOptions { max_retries: 2, restart_after_failures: 2, ..Default::default() },
+        );
+        let mut auto_cluster = AutoscaledCluster::start(
+            cluster,
+            AutoscaleOptions {
+                min_shards: 1,
+                max_shards: 2,
+                high_watermark: 3.0,
+                low_watermark: 0.5,
+                hysteresis: 2,
+                cooldown_polls: 2,
+                poll: Duration::from_millis(5),
+                ..Default::default()
+            },
+        );
+
+        let mut pend = Vec::new();
+        let mut throttled = 0usize;
+        let mut rejected = 0usize;
+        for (i, q) in queries.iter().enumerate() {
+            let cts = vec![
+                encrypt_message(q[0], &sk, &mut rng),
+                encrypt_message(q[1], &sk, &mut rng),
+            ];
+            // Hot tenant 0 takes 3 of every 4 requests; the bucket and
+            // FIFO bite it first.
+            let session = if i % 4 == 3 { 1u64 } else { 0u64 };
+            match auto_cluster.submit_with_deadline(session, cts, Duration::from_secs(30)) {
+                Ok(r) => pend.push((i, r)),
+                Err(ClusterError::Throttled) => throttled += 1,
+                Err(ClusterError::TenantQueueFull) => rejected += 1,
+                Err(e) => {
+                    println!("seed {seed}: request {i} rejected at admission: {e}");
+                    rejected += 1;
+                }
+            }
+        }
+        // Consume handles as they resolve: the admission permit rides the
+        // live handle, so dropping each response promptly is what keeps
+        // the 4-deep permit pool cycling through the queued backlog.
+        let mut ok = 0usize;
+        let mut failed = 0usize;
+        for (i, r) in pend {
+            match r.wait() {
+                Ok(outs) => {
+                    let got: Vec<u64> = outs.iter().map(|c| decrypt_message(c, &sk)).collect();
+                    assert_eq!(
+                        got,
+                        interp::eval(&prog, &queries[i]),
+                        "seed {seed}: request {i} served wrong bits under composition"
+                    );
+                    ok += 1;
+                }
+                Err(err) => {
+                    println!("seed {seed}: request {i} failed typed: {err}");
+                    failed += 1;
+                }
+            }
+        }
+        assert_eq!(
+            ok + failed + throttled + rejected,
+            n,
+            "seed {seed}: every request terminated (served/failed/throttled/rejected)"
+        );
+        let snap = auto_cluster.snapshot();
+        assert_eq!(
+            snap.qos_throttled, throttled as u64,
+            "seed {seed}: throttle counter stays exact under chaos"
+        );
+        assert_eq!(snap.requests, ok, "seed {seed}: served == client-observed successes");
+        auto_cluster.shutdown();
+        println!(
+            "seed {seed}: {ok} served / {failed} typed-failed / {throttled} throttled / \
+             {rejected} rejected; injected {:?}",
+            faults.injected()
+        );
+    }
+}

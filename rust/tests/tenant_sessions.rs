@@ -63,6 +63,7 @@ fn eight_sessions_on_four_shards_decrypt_under_their_own_keys() {
             policy: PlacementPolicy::ConsistentHash,
             queue_depth: None,
             coordinator: shard_options(),
+            qos: None,
         },
     );
     let sim = simulate(cluster.plan(), &TaurusConfig::default());
@@ -182,6 +183,7 @@ fn static_keys_compat_is_bitwise_identical_on_randomized_program() {
             max_batch_wait: Duration::from_millis(1),
             ..Default::default()
         },
+        qos: None,
     };
     // Compat constructor: Arc<ServerKeys> wrapped in StaticKeys inside.
     let compat = run_cluster(&|| Cluster::start(prog.clone(), keys.server.clone(), opts()));
@@ -212,6 +214,7 @@ fn reshard_migrates_ring_delta_drains_inflight_and_preserves_outputs() {
         policy: PlacementPolicy::ConsistentHash,
         queue_depth: None,
         coordinator: shard_options(),
+        qos: None,
     };
     let mut cluster = Cluster::start_with_store_factory(
         prog.clone(),

@@ -179,6 +179,7 @@ fn start_tenant_cluster(shards: usize, cache_cap: usize) -> (WireServer, Arc<Clu
             policy: PlacementPolicy::RoundRobin,
             queue_depth: None,
             coordinator: CoordinatorOptions { workers: 1, ..Default::default() },
+            qos: None,
         },
     ));
     let server = WireServer::start(cluster.clone(), "127.0.0.1:0", WireServerOptions::default())
@@ -266,6 +267,7 @@ fn static_cluster_rejects_uploads_typed_and_keeps_serving() {
             policy: PlacementPolicy::RoundRobin,
             queue_depth: None,
             coordinator: CoordinatorOptions { workers: 1, ..Default::default() },
+            qos: None,
         },
     ));
     let server = WireServer::start(cluster.clone(), "127.0.0.1:0", WireServerOptions::default())
